@@ -1,0 +1,78 @@
+//! Decentralized data (the Figure 2a scenario): 10 workers, each holding
+//! examples of exactly ONE class — maximal outer variance ς².
+//!
+//! ```bash
+//! cargo run --release --offline --example heterogeneous_data
+//! ```
+//!
+//! D-PSGD's analysis assumes bounded ς²; under a by-label split its local
+//! models chase local optima and the averaged model stalls. D² removes the
+//! outer-variance term, and Moniqua-D² (Algorithm 2) matches it with 8-bit
+//! quantized communication and zero extra memory.
+
+use std::sync::Arc;
+
+use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::coordinator::{metrics, TrainConfig, Trainer};
+use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
+use moniqua::objectives::Logistic;
+use moniqua::quant::QuantConfig;
+use moniqua::topology::Topology;
+
+fn main() {
+    let workers = 10;
+    let data = Arc::new(SynthClassification::generate(SynthSpec {
+        classes: 10,
+        train_per_class: 150,
+        test_per_class: 30,
+        ..SynthSpec::default()
+    }));
+
+    // One exclusive label per worker: the most hostile split.
+    let shards = Partition::ByLabel.split(&data.train, workers, 1);
+    let skew = Partition::label_skew(&data.train, &shards, data.classes);
+    println!("by-label split: label skew = {skew:.3} (IID would be ~0)\n");
+
+    let make_objective =
+        || Box::new(Logistic::new(Arc::clone(&data), workers, Partition::ByLabel, 32, 5));
+
+    let base = TrainConfig {
+        workers,
+        steps: 600,
+        lr: 0.05,
+        eval_every: 60,
+        seed: 5,
+        network: None,
+        ..TrainConfig::default()
+    };
+
+    let mut reports = Vec::new();
+    for algorithm in [
+        Algorithm::DPsgd,
+        Algorithm::D2,
+        Algorithm::MoniquaD2 {
+            theta: ThetaPolicy::Constant(2.0),
+            quant: QuantConfig::stochastic(8),
+        },
+    ] {
+        let name = algorithm.name();
+        let cfg = TrainConfig { algorithm, ..base.clone() };
+        let mut trainer = Trainer::new(cfg, Topology::Ring(workers), make_objective());
+        let report = trainer.run();
+        println!(
+            "{name:<12} final loss {:.4}  acc {:.1}%",
+            report.final_loss(),
+            report.final_accuracy().unwrap_or(0.0) * 100.0
+        );
+        reports.push(report);
+    }
+
+    println!("\n{}", metrics::comparison_table(&reports.iter().collect::<Vec<_>>()));
+    // Figure 2a shape: D² family beats D-PSGD; Moniqua-D² tracks D².
+    let (dp, d2, md2) = (&reports[0], &reports[1], &reports[2]);
+    println!(
+        "D-PSGD vs D² loss gap: {:.4} (positive = D² wins, the paper's claim)",
+        dp.final_loss() - d2.final_loss()
+    );
+    assert!(md2.final_loss() < d2.final_loss() + 0.1, "Moniqua-D² must track D²");
+}

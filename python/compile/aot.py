@@ -1,0 +1,122 @@
+"""AOT pipeline: lower L2/L1 JAX computations to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator loads
+these files at startup via ``HloModuleProto::from_text_file`` and never
+touches Python again.
+
+Interchange format is HLO TEXT, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly.
+
+Artifacts emitted (per model config C in {tiny, small, base}):
+    artifacts/model_<C>.hlo.txt    loss_and_grad : (f32[P], i32[B,S]) -> (f32[], f32[P])
+    artifacts/model_<C>.init.bin   raw little-endian f32[P] initial params
+    artifacts/model_<C>.meta       key=value metadata (P, vocab, seq, batch, ...)
+plus standalone L1 kernel executables (demonstrating the kernel AOT path):
+    artifacts/quantize_<N>.hlo.txt  (f32[N], f32[N]) -> i32[N]
+    artifacts/recover_<N>.hlo.txt   (i32[N], f32[N]) -> f32[N]
+with N, b_theta, levels recorded in artifacts/kernels.meta.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import moniqua as moniqua_kernels
+
+# Standalone kernel artifact parameters (the Rust tests/examples use these).
+KERNEL_N = 4096
+KERNEL_B_THETA = 2.0
+KERNEL_LEVELS = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> stablehlo -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def emit_model(name: str, outdir: str) -> None:
+    cfg = model_lib.CONFIGS[name]
+    p = model_lib.param_count(cfg)
+    print(f"model '{name}': {p} params, batch={cfg.batch} seq={cfg.seq_len}")
+
+    fn = functools.partial(model_lib.loss_and_grad, cfg=cfg)
+    flat_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    lowered = jax.jit(fn).lower(flat_spec, tok_spec)
+    _write(os.path.join(outdir, f"model_{name}.hlo.txt"), to_hlo_text(lowered))
+
+    init = model_lib.init_params(cfg, seed=0)
+    init_path = os.path.join(outdir, f"model_{name}.init.bin")
+    with open(init_path, "wb") as f:
+        f.write(bytes(memoryview(jax.device_get(init).astype("<f4"))))
+    print(f"  wrote {init_path} ({4 * p} bytes)")
+
+    meta = {
+        "params": p,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+    }
+    _write(
+        os.path.join(outdir, f"model_{name}.meta"),
+        "".join(f"{k}={v}\n" for k, v in meta.items()),
+    )
+
+
+def emit_kernels(outdir: str) -> None:
+    n, b, lv = KERNEL_N, KERNEL_B_THETA, KERNEL_LEVELS
+    f32 = jax.ShapeDtypeStruct((n,), jnp.float32)
+    i32 = jax.ShapeDtypeStruct((n,), jnp.int32)
+
+    qfn = lambda x, u: (moniqua_kernels.moniqua_quantize(x, u, b, lv, block=n),)
+    rfn = lambda c, y: (moniqua_kernels.moniqua_recover(c, y, b, lv, block=n),)
+    _write(os.path.join(outdir, f"quantize_{n}.hlo.txt"),
+           to_hlo_text(jax.jit(qfn).lower(f32, f32)))
+    _write(os.path.join(outdir, f"recover_{n}.hlo.txt"),
+           to_hlo_text(jax.jit(rfn).lower(i32, f32)))
+    _write(os.path.join(outdir, "kernels.meta"),
+           f"n={n}\nb_theta={b}\nlevels={lv}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small",
+                    help="comma-separated config names (default skips 'base' "
+                         "to keep CI fast; pass tiny,small,base for all)")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    for name in [m for m in args.models.split(",") if m]:
+        emit_model(name, args.outdir)
+    emit_kernels(args.outdir)
+    # Stamp: `make artifacts` is a no-op while sources are unchanged.
+    with open(os.path.join(args.outdir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the Moniqua reproduction.
+
+- ``moniqua``: modulo-quantize / recover / fused-local-biased-term kernels
+  (the paper's communication hot-spot, Alg. 1 lines 3-5).
+- ``matmul``: MXU-tiled matmul used by the L2 transformer MLP.
+- ``ref``: pure-jnp oracles every kernel is tested against.
+"""
+
+from . import matmul, moniqua, ref  # noqa: F401

@@ -1,0 +1,81 @@
+"""L1 Pallas tiled matmul used by the transformer MLP (L2 model).
+
+TPU-shaped schedule: 2-D grid over (M/bm, N/bn) output tiles; each program
+reads an (bm, K) row-panel of x and a (K, bn) column-panel of w into VMEM and
+issues one MXU contraction.  For the model sizes this repo trains on CPU the
+panels are single tiles; the BlockSpec structure is what matters for the TPU
+port (see DESIGN.md §Hardware-Adaptation — this replaces the threadblock/
+shared-memory tiling a CUDA implementation would use).
+
+interpret=True so the kernel lowers to plain HLO executable by the Rust CPU
+PJRT client. Correctness vs ref.matmul in python/tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles (the systolic array is 128x128).
+TILE_M = 128
+TILE_N = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(n: int, t: int) -> int:
+    return -(-n // t) * t
+
+
+def _matmul_impl(x, w, *, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """Tiled f32 matmul [M,K]@[K,N] -> [M,N] as a Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(tile_m, m)
+    bn = min(tile_n, n)
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    if np_ != n:
+        w = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return out[:m, :n]
+
+
+# pallas_call has no built-in VJP; define the standard matmul adjoints so the
+# L2 model can take gradients *through* the kernel (the backward matmuls also
+# run as Pallas kernels, so fwd+bwd lower into one HLO module).
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable tiled Pallas matmul [M,K]@[K,N] -> [M,N]."""
+    return _matmul_impl(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = _matmul_impl(g, w.T)          # [M,N]@[N,K]
+    dw = _matmul_impl(x.T, g)          # [K,M]@[M,N]
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,157 @@
+"""L1 Pallas kernels for Moniqua's communication hot-spot.
+
+The paper's per-iteration compute hot-spot on the device side is the
+quantize/recover pipeline applied to the full parameter vector:
+
+    send side:     c = Q_delta( centered_mod(x / B_theta, 1) )
+    receive side:  xhat = centered_mod(g_c * B_theta - y, B_theta) + y
+
+Both are elementwise streaming ops over d parameters; on TPU the natural
+schedule is a 1-D grid of VMEM-sized blocks (BlockSpec below).  On GPU the
+paper-era implementation would be a fused elementwise CUDA kernel; the TPU
+rethink is identical math but tiled for the (8,128)-lane VPU with blocks
+sized to fit VMEM (see DESIGN.md §Hardware-Adaptation).
+
+All kernels are lowered with ``interpret=True``: on this CPU testbed the
+Mosaic TPU path cannot execute, and interpret-mode lowers the kernel body
+into plain HLO that any PJRT backend (including the Rust CPU client) runs.
+
+Correctness: each kernel is tested against the pure-jnp oracle of the same
+name in ``ref.py`` (see python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size for the 1-D elementwise kernels.  On TPU this would be chosen so
+# that (block f32 in + block f32 noise + block i32 out) fits comfortably in
+# ~16 MiB VMEM with double-buffering: 3 * 4 B * 65536 = 768 KiB per stage.
+BLOCK = 65536
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_len(n: int, block: int) -> int:
+    return _ceil_div(n, block) * block
+
+
+# ---------------------------------------------------------------------------
+# quantize kernel
+# ---------------------------------------------------------------------------
+
+def _quantize_kernel(x_ref, u_ref, o_ref, *, inv_b: float, levels: int):
+    """codes = clip(floor((centered_mod(x*inv_b, 1) + 0.5) * L - 0.5 + u), 0, L-1)."""
+    x = x_ref[...]
+    u = u_ref[...]
+    z = x * inv_b
+    w = z - jnp.floor(z + 0.5)                      # centered_mod(z, 1)
+    t = (w + 0.5) * levels - 0.5
+    c = jnp.floor(t + u).astype(jnp.int32)
+    o_ref[...] = jnp.clip(c, 0, levels - 1)
+
+
+def moniqua_quantize(x, u, b_theta: float, levels: int, *, block: int = BLOCK):
+    """Pallas Moniqua quantizer: int32 codes in [0, levels).
+
+    x, u are rank-1 f32 arrays of the same length (u ~ U[0,1) noise; pass the
+    *shared-randomness* stream here to enable the paper's §6 trick).
+    """
+    n = x.shape[0]
+    npad = _pad_len(n, block)
+    if npad != n:
+        x = jnp.pad(x, (0, npad - n))
+        u = jnp.pad(u, (0, npad - n))
+    kern = functools.partial(_quantize_kernel, inv_b=1.0 / b_theta, levels=levels)
+    out = pl.pallas_call(
+        kern,
+        grid=(npad // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.int32),
+        interpret=True,
+    )(x, u)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# recover kernel
+# ---------------------------------------------------------------------------
+
+def _recover_kernel(c_ref, y_ref, o_ref, *, b_theta: float, levels: int):
+    """xhat = centered_mod(g_c * B - y, B) + y."""
+    c = c_ref[...].astype(jnp.float32)
+    y = y_ref[...]
+    q = ((c + 0.5) / levels - 0.5) * b_theta
+    z = q - y
+    o_ref[...] = z - b_theta * jnp.floor(z / b_theta + 0.5) + y
+
+
+def moniqua_recover(codes, y, b_theta: float, levels: int, *, block: int = BLOCK):
+    """Pallas Moniqua recovery: reconstruct neighbor params from codes + local y."""
+    n = codes.shape[0]
+    npad = _pad_len(n, block)
+    if npad != n:
+        codes = jnp.pad(codes, (0, npad - n))
+        y = jnp.pad(y, (0, npad - n))
+    kern = functools.partial(_recover_kernel, b_theta=b_theta, levels=levels)
+    out = pl.pallas_call(
+        kern,
+        grid=(npad // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(codes, y)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# fused local-biased-term kernel (Alg. 1 line 4)
+# ---------------------------------------------------------------------------
+
+def _local_biased_kernel(x_ref, u_ref, o_ref, *, b_theta: float, levels: int):
+    """xhat_i = g_{c(x)} * B - centered_mod(x, B) + x, fused in one pass."""
+    x = x_ref[...]
+    u = u_ref[...]
+    z = x / b_theta
+    w = z - jnp.floor(z + 0.5)
+    t = (w + 0.5) * levels - 0.5
+    c = jnp.clip(jnp.floor(t + u), 0, levels - 1)
+    q = ((c + 0.5) / levels - 0.5) * b_theta
+    xm = x - b_theta * jnp.floor(x / b_theta + 0.5)
+    o_ref[...] = q - xm + x
+
+
+def moniqua_local_biased(x, u, b_theta: float, levels: int, *, block: int = BLOCK):
+    """Fused sender-side biased term (quantize + dequantize + mod-cancel)."""
+    n = x.shape[0]
+    npad = _pad_len(n, block)
+    if npad != n:
+        x = jnp.pad(x, (0, npad - n))
+        u = jnp.pad(u, (0, npad - n))
+    kern = functools.partial(_local_biased_kernel, b_theta=b_theta, levels=levels)
+    out = pl.pallas_call(
+        kern,
+        grid=(npad // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(x, u)
+    return out[:n]

@@ -1,0 +1,95 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package is
+checked against the function of the same name here (pytest + hypothesis sweep
+over shapes / values), and the Rust-native quantizer implements bit-identical
+semantics (checked in rust/src/quant tests against constants generated from
+these definitions).
+
+Quantization scheme (shared by L1 kernels and the Rust hot path)
+----------------------------------------------------------------
+A *linear quantizer on the unit interval* with ``levels = L`` representable
+points covers [-1/2, 1/2) with grid points
+
+    g_c = -1/2 + (c + 1/2) / L          for integer code c in [0, L).
+
+* nearest rounding     ->  |Q(w) - w| <= delta = 1/(2L)
+* stochastic rounding  ->  |Q(w) - w| <= delta = 1/L, unbiased
+  (code = floor((w + 1/2) * L - 1/2 + u) with u ~ U[0,1), clamped)
+
+Moniqua (paper Alg. 1, Lemmas 1-2) wraps values through a *centered* modulo
+
+    centered_mod(z, a) in [-a/2, a/2)
+
+before quantizing:  send  c = encode((x / B) mod 1),  recover from local y:
+    xhat = centered_mod(g_c * B - y, B) + y.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def centered_mod(z, a):
+    """Centered modulo: the unique value in [-a/2, a/2) congruent to z mod a.
+
+    This is Eq. (1) of the paper:  {z mod a} = {z + n a | n in Z} ∩ [-a/2, a/2).
+    """
+    return z - a * jnp.floor(z / a + 0.5)
+
+
+def quantize_codes_stochastic(w, u, levels: int):
+    """Stochastic-rounding codes for w in [-1/2, 1/2); u ~ U[0,1) same shape.
+
+    Returns int32 codes in [0, levels).
+    """
+    t = (w + 0.5) * levels - 0.5
+    c = jnp.floor(t + u).astype(jnp.int32)
+    return jnp.clip(c, 0, levels - 1)
+
+
+def quantize_codes_nearest(w, levels: int):
+    """Nearest-rounding codes for w in [-1/2, 1/2)."""
+    t = (w + 0.5) * levels - 0.5
+    c = jnp.floor(t + 0.5).astype(jnp.int32)
+    return jnp.clip(c, 0, levels - 1)
+
+
+def dequantize_codes(c, levels: int):
+    """Grid point for integer code c: g_c = -1/2 + (c + 1/2)/levels."""
+    return (c.astype(jnp.float32) + 0.5) / levels - 0.5
+
+
+def moniqua_quantize(x, u, b_theta: float, levels: int):
+    """Moniqua send path: codes of centered_mod(x / B, 1), stochastic rounding."""
+    w = centered_mod(x / b_theta, 1.0)
+    return quantize_codes_stochastic(w, u, levels)
+
+
+def moniqua_recover(codes, y, b_theta: float, levels: int):
+    """Moniqua receive path (Alg. 1 line 5):
+
+        xhat = centered_mod(g_c * B - y, B) + y
+    """
+    q = dequantize_codes(codes, levels) * b_theta
+    return centered_mod(q - y, b_theta) + y
+
+
+def moniqua_local_biased(x, u, b_theta: float, levels: int):
+    """Alg. 1 line 4: the sender's own biased term
+
+        xhat_i = g_{c_i} * B - centered_mod(x_i, B) + x_i
+    """
+    q = dequantize_codes(moniqua_quantize(x, u, b_theta, levels), levels) * b_theta
+    return q - centered_mod(x, b_theta) + x
+
+
+def matmul(x, w):
+    """Reference for the tiled Pallas matmul."""
+    return jnp.matmul(x, w)
+
+
+def gelu(x):
+    """tanh-approximation GELU (matches the kernel and the Rust MLP)."""
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))

@@ -1,0 +1,193 @@
+"""L2: JAX transformer language model (fwd + loss + grad), calling L1 kernels.
+
+The model is a standard pre-LN causal transformer LM. Its MLP matmuls go
+through the Pallas ``kernels.matmul`` kernel so that the L1 kernel lowers into
+the same HLO module as the rest of the computation. Parameters travel as one
+flat f32 vector — exactly the representation the Rust coordinator quantizes,
+gossips, and averages (decentralized SGD operates on whole parameter
+vectors), so the AOT executable signature is:
+
+    loss_and_grad : (params f32[P], tokens i32[B, S]) -> (loss f32[], grad f32[P])
+
+``tokens`` holds token ids; position t predicts position t+1 (next-token
+cross-entropy over the first S-1 positions).
+
+Config is a small frozen dataclass; ``aot.py`` lowers one executable per
+named config ("tiny", "small", "base") and dumps initialization vectors the
+Rust side loads directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pallas_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyperparameters."""
+
+    vocab: int = 64
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    d_ff: int = 256
+    seq_len: int = 32
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Named configs the AOT pipeline emits. "tiny" keeps e2e CI fast on one CPU
+#: core; "base" shows the driver scales (same code path, more params).
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=1, d_ff=128,
+                        seq_len=16, batch=4),
+    "small": ModelConfig(vocab=64, d_model=64, n_heads=2, n_layers=2, d_ff=256,
+                         seq_len=32, batch=8),
+    "base": ModelConfig(vocab=256, d_model=128, n_heads=4, n_layers=4, d_ff=512,
+                        seq_len=64, batch=8),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat-vector layout."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq_len, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        spec += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "b1", (cfg.d_ff,)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+            (p + "b2", (cfg.d_model,)),
+        ]
+    spec += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    # Output head is tied to tok_emb (transposed) — no extra params.
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+def unflatten(flat, cfg: ModelConfig):
+    """Split the flat f32[P] vector into the parameter dict."""
+    params = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Flat initialization vector (scaled-normal weights, zero biases/LN-b)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base.endswith("_b") or base in ("b1", "b2"):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif base.endswith("_g"):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5)
+            chunks.append(w.ravel())
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    c = jnp.sqrt(jnp.asarray(2.0 / jnp.pi, dtype=x.dtype))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _attention(x, wqkv, wo, cfg: ModelConfig):
+    b, s, d = x.shape
+    qkv = jnp.einsum("bsd,de->bse", x, wqkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return jnp.einsum("bsd,de->bse", out, wo)
+
+
+def _mlp(x, w1, b1, w2, b2):
+    """Feed-forward block; the two matmuls run through the Pallas kernel."""
+    b, s, d = x.shape
+    h = pallas_matmul.matmul(x.reshape(b * s, d), w1) + b1
+    h = _gelu(h)
+    o = pallas_matmul.matmul(h, w2) + b2
+    return o.reshape(b, s, d)
+
+
+def forward(flat, tokens, cfg: ModelConfig):
+    """Logits f32[B, S, vocab] from flat params + int tokens."""
+    p = unflatten(flat, cfg)
+    b, s = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :s]
+    for layer in range(cfg.n_layers):
+        q = f"l{layer}."
+        h = _layer_norm(x, p[q + "ln1_g"], p[q + "ln1_b"])
+        x = x + _attention(h, p[q + "wqkv"], p[q + "wo"], cfg)
+        h = _layer_norm(x, p[q + "ln2_g"], p[q + "ln2_b"])
+        x = x + _mlp(h, p[q + "w1"], p[q + "b1"], p[q + "w2"], p[q + "b2"])
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return jnp.einsum("bsd,vd->bsv", x, p["tok_emb"])
+
+
+def loss_fn(flat, tokens, cfg: ModelConfig):
+    """Mean next-token cross-entropy over the first S-1 positions."""
+    logits = forward(flat, tokens, cfg)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def loss_and_grad(flat, tokens, cfg: ModelConfig):
+    """The executable the Rust runtime calls every step."""
+    loss, grad = jax.value_and_grad(loss_fn)(flat, tokens, cfg)
+    return loss, grad

@@ -1,0 +1,64 @@
+"""AOT pipeline tests: artifacts are emitted, parse as HLO text, and carry
+consistent metadata. Uses the 'tiny' config to keep lowering fast."""
+
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("artifacts"))
+    aot.emit_model("tiny", d)
+    aot.emit_kernels(d)
+    return d
+
+
+def test_model_hlo_text_emitted(outdir):
+    path = os.path.join(outdir, "model_tiny.hlo.txt")
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    # loss+grad returns a 2-tuple: scalar loss and flat grad
+    assert "f32[]" in text
+    p = M.param_count(M.CONFIGS["tiny"])
+    assert f"f32[{p}]" in text
+
+
+def test_init_bin_size(outdir):
+    p = M.param_count(M.CONFIGS["tiny"])
+    size = os.path.getsize(os.path.join(outdir, "model_tiny.init.bin"))
+    assert size == 4 * p
+
+
+def test_meta_consistent(outdir):
+    meta = dict(
+        line.strip().split("=")
+        for line in open(os.path.join(outdir, "model_tiny.meta"))
+        if line.strip()
+    )
+    cfg = M.CONFIGS["tiny"]
+    assert int(meta["params"]) == M.param_count(cfg)
+    assert int(meta["vocab"]) == cfg.vocab
+    assert int(meta["batch"]) == cfg.batch
+    assert int(meta["seq_len"]) == cfg.seq_len
+
+
+def test_kernel_artifacts(outdir):
+    n = aot.KERNEL_N
+    q = open(os.path.join(outdir, f"quantize_{n}.hlo.txt")).read()
+    r = open(os.path.join(outdir, f"recover_{n}.hlo.txt")).read()
+    assert q.startswith("HloModule") and r.startswith("HloModule")
+    assert f"s32[{n}]" in q  # int32 codes out
+    assert f"f32[{n}]" in r  # f32 reconstruction out
+
+
+def test_no_tpu_custom_calls(outdir):
+    """interpret=True must keep the HLO runnable on CPU PJRT: no Mosaic
+    custom-calls may appear in the lowered modules."""
+    for f in os.listdir(outdir):
+        if f.endswith(".hlo.txt"):
+            text = open(os.path.join(outdir, f)).read()
+            assert "tpu_custom_call" not in text, f
+            assert "mosaic" not in text.lower(), f

@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracle (ref.py) — the core L1 correctness signal.
+
+Hypothesis sweeps shapes / value ranges / quantizer resolution; every kernel
+must agree with its oracle bit-exactly (both paths lower to the same float32
+math) or within float tolerance for the fused ones.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pk_matmul
+from compile.kernels import moniqua as pk
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+@given(
+    n=st.integers(1, 500),
+    bits=st.integers(1, 8),
+    b_theta=st.floats(0.25, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_quantize_matches_ref(n, bits, b_theta, seed):
+    r = rng(seed)
+    x = r.normal(0, 3.0, n).astype(np.float32)
+    u = r.random(n).astype(np.float32)
+    levels = 2**bits
+    got = pk.moniqua_quantize(jnp.asarray(x), jnp.asarray(u), b_theta, levels, block=128)
+    want = ref.moniqua_quantize(jnp.asarray(x), jnp.asarray(u), b_theta, levels)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).min() >= 0 and np.asarray(got).max() < levels
+
+
+@given(
+    n=st.integers(1, 500),
+    bits=st.integers(1, 8),
+    b_theta=st.floats(0.25, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_recover_matches_ref(n, bits, b_theta, seed):
+    r = rng(seed)
+    levels = 2**bits
+    codes = r.integers(0, levels, n).astype(np.int32)
+    y = r.normal(0, 3.0, n).astype(np.float32)
+    got = pk.moniqua_recover(jnp.asarray(codes), jnp.asarray(y), b_theta, levels, block=128)
+    want = ref.moniqua_recover(jnp.asarray(codes), jnp.asarray(y), b_theta, levels)
+    # f32 op-order differences between the kernel and the oracle scale with
+    # B_theta (values up to ~8 here): allow f32-eps-scale slack.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=4e-6 * max(1.0, b_theta))
+
+
+@given(
+    n=st.integers(1, 300),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_local_biased_matches_ref(n, bits, seed):
+    r = rng(seed)
+    b_theta = 2.0
+    levels = 2**bits
+    x = r.normal(0, 2.0, n).astype(np.float32)
+    u = r.random(n).astype(np.float32)
+    got = pk.moniqua_local_biased(jnp.asarray(x), jnp.asarray(u), b_theta, levels, block=64)
+    want = ref.moniqua_local_biased(jnp.asarray(x), jnp.asarray(u), b_theta, levels)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-5)
+
+
+def test_roundtrip_error_bound_lemma2():
+    """End-to-end Lemma 2: |xhat - x| <= delta * B_theta when |x - y| < theta.
+
+    With stochastic rounding delta = 1/levels; B_theta = 2 theta / (1 - 2 delta).
+    """
+    r = rng(7)
+    n = 4096
+    theta = 1.0
+    for bits in (2, 4, 8):
+        levels = 2**bits
+        delta = 1.0 / levels
+        b_theta = 2.0 * theta / (1.0 - 2.0 * delta)
+        y = r.normal(0, 5.0, n).astype(np.float32)
+        x = (y + r.uniform(-theta, theta, n) * 0.999).astype(np.float32)
+        u = r.random(n).astype(np.float32)
+        codes = pk.moniqua_quantize(jnp.asarray(x), jnp.asarray(u), b_theta, levels)
+        xhat = pk.moniqua_recover(codes, jnp.asarray(y), b_theta, levels)
+        err = np.abs(np.asarray(xhat) - x)
+        assert err.max() <= delta * b_theta + 1e-4, (bits, err.max(), delta * b_theta)
+
+
+def test_quantize_unbiased():
+    """Stochastic rounding is unbiased: E[g_c] == w (averaged over u)."""
+    x = np.full(20000, 0.37, np.float32)
+    r = rng(3)
+    u = r.random(x.size).astype(np.float32)
+    b_theta, levels = 2.0, 16
+    codes = pk.moniqua_quantize(jnp.asarray(x), jnp.asarray(u), b_theta, levels)
+    vals = np.asarray(ref.dequantize_codes(codes, levels)) * b_theta
+    w = float(np.asarray(ref.centered_mod(jnp.asarray(x[:1]) / b_theta, 1.0))[0]) * b_theta
+    assert abs(vals.mean() - w) < 3e-3
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_matmul_matches_ref(m, k, n, seed):
+    r = rng(seed)
+    x = r.normal(0, 1, (m, k)).astype(np.float32)
+    w = r.normal(0, 1, (k, n)).astype(np.float32)
+    got = pk_matmul._matmul_impl(jnp.asarray(x), jnp.asarray(w), tile_m=16, tile_n=16)
+    want = ref.matmul(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+    got2 = pk_matmul.matmul(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_vjp_matches_ref():
+    """Gradients through the Pallas matmul equal gradients through jnp.matmul."""
+    import jax
+
+    r = rng(0)
+    x = jnp.asarray(r.normal(0, 1, (5, 7)).astype(np.float32))
+    w = jnp.asarray(r.normal(0, 1, (7, 3)).astype(np.float32))
+    f_pk = lambda x, w: jnp.sum(jnp.sin(pk_matmul.matmul(x, w)))
+    f_ref = lambda x, w: jnp.sum(jnp.sin(ref.matmul(x, w)))
+    gx, gw = jax.grad(f_pk, argnums=(0, 1))(x, w)
+    hx, hw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(hx), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(hw), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [32, 128, 65536])
+def test_quantize_block_size_invariance(block):
+    """Grid/BlockSpec choice must not change results (padding is masked out)."""
+    r = rng(11)
+    x = r.normal(0, 2, 1000).astype(np.float32)
+    u = r.random(1000).astype(np.float32)
+    a = pk.moniqua_quantize(jnp.asarray(x), jnp.asarray(u), 2.0, 256, block=block)
+    b = ref.moniqua_quantize(jnp.asarray(x), jnp.asarray(u), 2.0, 256)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,80 @@
+"""L2 transformer model tests: shapes, gradient correctness, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["tiny"]
+
+
+def _params():
+    return M.init_params(CFG, seed=1)
+
+
+def _tokens(seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(
+        r.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)), jnp.int32
+    )
+
+
+def test_param_count_matches_spec():
+    flat = _params()
+    assert flat.shape == (M.param_count(CFG),)
+    # unflatten consumes exactly the whole vector
+    parts = M.unflatten(flat, CFG)
+    total = sum(int(np.prod(v.shape)) for v in parts.values())
+    assert total == M.param_count(CFG)
+
+
+def test_forward_shape_and_finite():
+    logits = M.forward(_params(), _tokens(), CFG)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_loss_near_uniform():
+    """Random init should predict ~uniform: loss ≈ log(vocab)."""
+    loss = M.loss_fn(_params(), _tokens(), CFG)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+def test_grad_matches_finite_difference():
+    flat = _params()
+    toks = _tokens(3)
+    _, grad = M.loss_and_grad(flat, toks, CFG)
+    r = np.random.default_rng(0)
+    idx = r.integers(0, flat.shape[0], 5)
+    eps = 1e-3
+    for i in idx:
+        e = jnp.zeros_like(flat).at[i].set(eps)
+        num = (M.loss_fn(flat + e, toks, CFG) - M.loss_fn(flat - e, toks, CFG)) / (2 * eps)
+        assert abs(float(num) - float(grad[i])) < 5e-2 * max(1.0, abs(float(num))) + 1e-3
+
+
+def test_sgd_reduces_loss():
+    flat = _params()
+    toks = _tokens(5)
+    lg = jax.jit(lambda p: M.loss_and_grad(p, toks, CFG))
+    l0, g = lg(flat)
+    for _ in range(20):
+        flat = flat - 0.5 * g
+        _, g = lg(flat)
+    l1, _ = lg(flat)
+    assert float(l1) < float(l0) - 0.1
+
+
+def test_deterministic():
+    a = M.loss_fn(_params(), _tokens(), CFG)
+    b = M.loss_fn(_params(), _tokens(), CFG)
+    assert float(a) == float(b)
+
+
+@pytest.mark.parametrize("name", ["tiny", "small"])
+def test_all_configs_valid(name):
+    cfg = M.CONFIGS[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert M.param_count(cfg) > 0

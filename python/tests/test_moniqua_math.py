@@ -1,0 +1,111 @@
+"""Property tests of the paper's Lemma 1 / Lemma 2 (numpy-level, no Pallas).
+
+These pin down the *mathematical* contract that both the L1 kernels and the
+Rust-native quantizer implement.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=100, deadline=None)
+
+
+def cmod(z, a):
+    return np.asarray(ref.centered_mod(z, a))
+
+
+@given(
+    z=st.floats(-1e4, 1e4, allow_nan=False),
+    a=st.floats(1e-2, 1e3),
+)
+@settings(**SETTINGS)
+def test_centered_mod_range_and_congruence(z, a):
+    m = float(cmod(np.float64(z), np.float64(a)))
+    assert -a / 2 - 1e-9 <= m < a / 2 + 1e-9
+    # congruent: (z - m) / a is an integer
+    k = (z - m) / a
+    assert abs(k - round(k)) < 1e-6 * max(1.0, abs(k))
+
+
+@given(
+    y=st.floats(-100, 100),
+    d=st.floats(-0.999, 0.999),
+    theta=st.floats(0.01, 10.0),
+)
+@settings(**SETTINGS)
+def test_lemma1_exact_recovery(y, d, theta):
+    """Lemma 1: if |x-y| < theta then
+    x = centered_mod(centered_mod(x,2θ) - centered_mod(y,2θ), 2θ) + y."""
+    x = y + d * theta
+    a = 2.0 * theta
+    lhs = float(cmod(cmod(np.float64(x), a) - cmod(np.float64(y), a), a)) + y
+    # jnp runs in float32 here; allow f32-eps-scale slack.
+    assert abs(lhs - x) < 3e-5 * max(1.0, abs(x), abs(y), a)
+
+
+@given(
+    y=st.floats(-50, 50),
+    d=st.floats(-0.99, 0.99),
+    theta=st.floats(0.05, 5.0),
+    bits=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_lemma2_quantized_recovery_bound(y, d, theta, bits, seed):
+    """Lemma 2: with B = 2θ/(1-2δ), |xhat - x| <= δ B."""
+    levels = 2**bits
+    delta = 1.0 / levels              # stochastic rounding error bound
+    if delta >= 0.5:
+        levels = max(levels, 4)       # 1-bit stochastic has delta=1/2: bump
+        delta = 1.0 / levels
+    b = 2.0 * theta / (1.0 - 2.0 * delta)
+    x = np.float64(y + d * theta)
+    u = np.random.default_rng(seed).random(1)
+    codes = np.asarray(ref.moniqua_quantize(
+        np.asarray([x], np.float32), u.astype(np.float32), b, levels))
+    xhat = np.asarray(ref.moniqua_recover(
+        codes, np.asarray([y], np.float32), b, levels))[0]
+    assert abs(xhat - x) <= delta * b + 1e-4
+
+
+def test_shared_randomness_reduces_pair_error():
+    """Paper §6 + supp C: with shared u, the *difference* of quantization
+    errors on two nearby vectors has variance like quantizing the difference —
+    strictly better than independent noise when x ≈ y."""
+    r = np.random.default_rng(0)
+    n = 20000
+    levels, b = 64, 4.0
+    y = r.normal(0, 1, n).astype(np.float32)
+    x = (y + r.normal(0, 0.01, n)).astype(np.float32)  # near-consensus
+
+    def pair_err(u_x, u_y):
+        qx = np.asarray(ref.dequantize_codes(
+            ref.moniqua_quantize(x, u_x, b, levels), levels)) * b
+        qy = np.asarray(ref.dequantize_codes(
+            ref.moniqua_quantize(y, u_y, b, levels), levels)) * b
+        wx = np.asarray(ref.centered_mod(x / b, 1.0)) * b
+        wy = np.asarray(ref.centered_mod(y / b, 1.0)) * b
+        e = (qx - wx) - (qy - wy)
+        return float(np.mean(e**2))
+
+    u = r.random(n).astype(np.float32)
+    u2 = r.random(n).astype(np.float32)
+    shared = pair_err(u, u)
+    indep = pair_err(u, u2)
+    assert shared < 0.5 * indep, (shared, indep)
+
+
+def test_nearest_vs_stochastic_delta():
+    """nearest: |err| <= 1/(2L); stochastic: |err| <= 1/L."""
+    r = np.random.default_rng(5)
+    w = (r.random(5000) - 0.5).astype(np.float32) * 0.999
+    for L in (4, 16, 256):
+        cn = np.asarray(ref.quantize_codes_nearest(w, L))
+        en = np.abs(np.asarray(ref.dequantize_codes(cn, L)) - w)
+        assert en.max() <= 0.5 / L + 1e-6
+        u = r.random(5000).astype(np.float32)
+        cs = np.asarray(ref.quantize_codes_stochastic(w, u, L))
+        es = np.abs(np.asarray(ref.dequantize_codes(cs, L)) - w)
+        assert es.max() <= 1.0 / L + 1e-6

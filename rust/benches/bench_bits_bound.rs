@@ -1,0 +1,101 @@
+//! §4 "Bound on the Bits" — the dimension-free O(log log n) bit budget.
+//!
+//! For rings and expanders of growing size this bench prints:
+//!   * the measured spectral quantity ρ,
+//!   * the theoretical bound B ≤ ⌈log₂(4·log₂(16n)/(1−ρ) + 3)⌉,
+//!   * the *empirically sufficient* bits: the smallest budget at which
+//!     Moniqua (with the Theorem-2 θ/δ settings) still reaches the
+//!     full-precision loss on a decentralized quadratic,
+//!   * the same check at two very different dimensions d (the bound is
+//!     dimension-free — the empirical budget must not grow with d).
+//!
+//! Run: `cargo bench --offline --bench bench_bits_bound`
+
+use moniqua::algorithms::{Algorithm, StepCtx, SyncAlgorithm, ThetaPolicy};
+use moniqua::bench_support::section;
+use moniqua::quant::theta::{bits_bound, theta_theorem2};
+use moniqua::quant::QuantConfig;
+use moniqua::topology::{CommMatrix, Topology};
+
+/// Final mean loss of a short decentralized quadratic run.
+fn run_quadratic(w: &CommMatrix, mut alg: Box<dyn SyncAlgorithm>, d: usize, steps: u64) -> f64 {
+    let n = w.n();
+    let rho = w.rho();
+    let c = 0.3f32;
+    let mut xs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; d]).collect();
+    let ctx = StepCtx { seed: 7, rho, g_inf: 1.0 };
+    for k in 0..steps {
+        let grads: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| x.iter().map(|&v| v - c).collect())
+            .collect();
+        alg.step(&mut xs, &grads, 0.1, k, &ctx);
+    }
+    xs.iter()
+        .map(|x| x.iter().map(|&v| ((v - c) as f64).powi(2)).sum::<f64>())
+        .sum::<f64>()
+        / n as f64
+}
+
+fn empirical_bits(w: &CommMatrix, d: usize, steps: u64, target: f64) -> u32 {
+    let rho = w.rho();
+    let n = w.n();
+    for bits in 2..=12u32 {
+        let theta = theta_theorem2(0.1, 1.0, n, rho) as f32;
+        let alg = Algorithm::Moniqua {
+            theta: ThetaPolicy::Constant(theta),
+            quant: QuantConfig::stochastic(bits),
+        };
+        let loss = run_quadratic(w, alg.make_sync(w, d), d, steps);
+        if loss <= target {
+            return bits;
+        }
+    }
+    13
+}
+
+fn main() {
+    let fast = std::env::var("MONIQUA_FAST").is_ok();
+    let steps = if fast { 100 } else { 400 };
+    let sizes: &[usize] = if fast { &[4, 8, 16] } else { &[4, 8, 16, 32, 64, 128] };
+
+    section("ring topology: bits bound vs n (dimension-free, O(log log n))");
+    println!(
+        "{:>6} {:>8} {:>12} {:>16} {:>16}",
+        "n", "rho", "bound(bits)", "empirical(d=16)", "empirical(d=256)"
+    );
+    for &n in sizes {
+        let w = Topology::Ring(n).comm_matrix();
+        let rho = w.rho();
+        // full-precision reference loss → target = 2x that (same ballpark)
+        let ref_loss = run_quadratic(&w, Algorithm::DPsgd.make_sync(&w, 16), 16, steps);
+        let target = (ref_loss * 4.0).max(1e-4);
+        let e16 = empirical_bits(&w, 16, steps, target);
+        let e256 = empirical_bits(&w, 256, steps, target * 16.0); // scale w/ d
+        println!(
+            "{:>6} {:>8.4} {:>12} {:>16} {:>16}",
+            n,
+            rho,
+            bits_bound(n, rho),
+            e16,
+            e256
+        );
+    }
+
+    section("expander (random 4-regular): better gap → smaller bound");
+    println!("{:>6} {:>8} {:>12} {:>16}", "n", "rho", "bound(bits)", "empirical(d=16)");
+    for &n in sizes.iter().filter(|&&n| n >= 8) {
+        let w = Topology::RandomRegular { n, degree: 4, seed: 5 }.comm_matrix();
+        let rho = w.rho();
+        let ref_loss = run_quadratic(&w, Algorithm::DPsgd.make_sync(&w, 16), 16, steps);
+        let target = (ref_loss * 4.0).max(1e-4);
+        println!(
+            "{:>6} {:>8.4} {:>12} {:>16}",
+            n,
+            rho,
+            bits_bound(n, rho),
+            empirical_bits(&w, 16, steps, target)
+        );
+    }
+    println!("\n(paper: bound grows O(log log n) and is independent of d; expanders need fewer bits than rings)");
+}

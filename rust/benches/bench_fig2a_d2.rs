@@ -1,0 +1,122 @@
+//! FIGURE 2(a) — Moniqua on D² with decentralized data.
+//!
+//! 10 workers each hold exactly ONE class of the 10-class task (maximal
+//! outer variance ς², the paper's VGG16/CIFAR10 by-label setup). D-PSGD's
+//! local models chase their local optima; D² removes the ς² term; Moniqua-D²
+//! (Algorithm 2) matches D² with 8-bit quantized communication.
+//!
+//! Two workloads: the classification task (accuracy readout) and a
+//! heterogeneous quadratic where the bias floor of D-PSGD is provable and
+//! the separation is stark.
+//!
+//! Run: `cargo bench --offline --bench bench_fig2a_d2`
+
+use std::sync::Arc;
+
+use moniqua::algorithms::{Algorithm, SyncAlgorithm, StepCtx, ThetaPolicy};
+use moniqua::bench_support::section;
+use moniqua::coordinator::{metrics, TrainConfig, Trainer};
+use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
+use moniqua::objectives::{Logistic, Objective};
+use moniqua::quant::QuantConfig;
+use moniqua::topology::Topology;
+
+fn main() {
+    let fast = std::env::var("MONIQUA_FAST").is_ok();
+    let workers = 10;
+    let steps = if fast { 100 } else { 800 };
+    let q8 = QuantConfig::stochastic(8);
+
+    section("classification, one exclusive class per worker");
+    let data = Arc::new(SynthClassification::generate(SynthSpec {
+        classes: 10,
+        train_per_class: 150,
+        test_per_class: 30,
+        ..SynthSpec::default()
+    }));
+    let shards = Partition::ByLabel.split(&data.train, workers, 1);
+    println!(
+        "label skew: by_label = {:.3}, iid = {:.3}",
+        Partition::label_skew(&data.train, &shards, data.classes),
+        Partition::label_skew(
+            &data.train,
+            &Partition::Iid.split(&data.train, workers, 1),
+            data.classes
+        )
+    );
+    let make_objective = || -> Box<dyn Objective> {
+        Box::new(Logistic::new(Arc::clone(&data), workers, Partition::ByLabel, 32, 5))
+    };
+    let mut reports = Vec::new();
+    for algorithm in [
+        Algorithm::DPsgd,
+        Algorithm::D2,
+        Algorithm::MoniquaD2 { theta: ThetaPolicy::Constant(2.0), quant: q8 },
+    ] {
+        let cfg = TrainConfig {
+            workers,
+            steps,
+            lr: 0.05,
+            algorithm,
+            eval_every: (steps / 10).max(1),
+            seed: 5,
+            network: None,
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg, Topology::Ring(workers), make_objective());
+        let r = trainer.run();
+        println!(
+            "{:<12} loss curve: {}",
+            r.algorithm,
+            r.trace
+                .iter()
+                .map(|t| format!("{:.3}", t.eval_loss))
+                .collect::<Vec<_>>()
+                .join(" → ")
+        );
+        reports.push(r);
+    }
+    println!("\n{}", metrics::comparison_table(&reports.iter().collect::<Vec<_>>()));
+
+    section("heterogeneous quadratic (provable D-PSGD bias floor)");
+    // worker i minimizes ½‖x−c_i‖² with spread-out c_i; global optimum at 0.
+    let n = 10usize;
+    let d = 32usize;
+    let w = Topology::Ring(n).comm_matrix();
+    let rho = w.rho();
+    let cs: Vec<f32> = (0..n).map(|i| (i as f32) - 4.5).collect();
+    let run = |mut alg: Box<dyn SyncAlgorithm>| -> Vec<f64> {
+        let mut xs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; d]).collect();
+        let ctx = StepCtx { seed: 5, rho, g_inf: 10.0 };
+        let mut curve = Vec::new();
+        for k in 0..(steps as u64) {
+            let grads: Vec<Vec<f32>> = (0..n)
+                .map(|i| xs[i].iter().map(|&v| v - cs[i]).collect())
+                .collect();
+            alg.step(&mut xs, &grads, 0.08, k, &ctx);
+            if k % (steps as u64 / 10).max(1) == 0 {
+                // worst local distance from the global optimum (0)
+                let worst = xs
+                    .iter()
+                    .map(|x| moniqua::linalg::norm2_sq(x) / d as f64)
+                    .fold(0.0f64, f64::max);
+                curve.push(worst);
+            }
+        }
+        curve
+    };
+    for algorithm in [
+        Algorithm::DPsgd,
+        Algorithm::D2,
+        Algorithm::MoniquaD2 { theta: ThetaPolicy::Constant(8.0), quant: q8 },
+    ] {
+        let name = algorithm.name();
+        let curve = run(algorithm.make_sync(&w, d));
+        println!(
+            "{:<12} worst local ‖x−x*‖²/d: {}",
+            name,
+            curve.iter().map(|v| format!("{v:.2e}")).collect::<Vec<_>>().join(" ")
+        );
+    }
+    println!("\n(D-PSGD stalls at its ς²-bias floor; D² and Moniqua-D² go to ~0 — Figure 2a's shape.)");
+}

@@ -1,0 +1,269 @@
+//! AD-PSGD (Lian et al. 2017) and **Moniqua-AD-PSGD (Algorithm 3)** —
+//! asynchronous decentralized SGD.
+//!
+//! An *iteration* is one event: a random worker `a` wakes, gossip-averages
+//! with one random neighbor `b` (the time-varying `W_k` is the identity
+//! plus a 2×2 ½-averaging block), and applies a gradient computed on a
+//! *stale* snapshot of its own model (delay τ_k ≤ T):
+//!
+//! ```text
+//!     X_{k+1} = X_k W_k + (X̂_k − X_k)(W_k − I) − α G̃_{k−τ_k}
+//! ```
+//!
+//! The Moniqua variant exchanges modulo-quantized models on the gossip edge
+//! with θ = 16·t_mix·α·G∞ and δ = 1/(64·t_mix + 2) (Theorem 5).
+
+use super::common::{self, CommStats};
+use crate::quant::{MoniquaCodec, QuantConfig};
+use crate::topology::{GossipSampler, PairGossip, Topology};
+
+/// Precision of the gossip exchange.
+#[derive(Clone, Debug)]
+pub enum AsyncVariant {
+    FullPrecision,
+    Moniqua { theta: f32, quant: QuantConfig },
+}
+
+/// Event-driven AD-PSGD engine. Gradients are supplied by the caller (the
+/// coordinator owns the objective); this struct owns the gossip dynamics,
+/// staleness bookkeeping, and quantized exchange.
+pub struct AdPsgd {
+    pub variant: AsyncVariant,
+    sampler: GossipSampler,
+    d: usize,
+    /// Per-worker stale snapshot the in-flight gradient was computed on.
+    snapshots: Vec<Option<(Vec<f32>, u64)>>,
+    /// Observed staleness (events between snapshot and application).
+    pub max_observed_delay: u64,
+    codes: Vec<u32>,
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+    noise: Vec<f32>,
+    seed: u64,
+}
+
+impl AdPsgd {
+    pub fn new(topo: &Topology, d: usize, variant: AsyncVariant, seed: u64) -> Self {
+        AdPsgd {
+            variant,
+            sampler: GossipSampler::new(topo, seed),
+            d,
+            snapshots: vec![None; topo.n()],
+            max_observed_delay: 0,
+            codes: vec![0; d],
+            buf_a: vec![0.0; d],
+            buf_b: vec![0.0; d],
+            noise: Vec::new(),
+            seed,
+        }
+    }
+
+    /// Estimate t_mix of this topology's gossip chain (Theorem 5 inputs).
+    pub fn estimate_t_mix(topo: &Topology, seed: u64, max_t: usize) -> usize {
+        GossipSampler::new(topo, seed).estimate_t_mix(max_t)
+    }
+
+    /// One asynchronous event. `grad_of(worker, params, out)` computes the
+    /// stochastic gradient of `worker` at `params`. Returns the gossip pair
+    /// and the traffic of this event.
+    pub fn step_event(
+        &mut self,
+        xs: &mut [Vec<f32>],
+        grad_of: &mut dyn FnMut(usize, &[f32], &mut [f32]),
+        lr: f32,
+        event: u64,
+    ) -> (PairGossip, CommStats) {
+        let pair = self.sampler.next_pair();
+        self.step_pair(pair, xs, grad_of, lr, event)
+    }
+
+    /// As [`Self::step_event`] but with the waking worker chosen by the
+    /// caller (the wall-clock trainer wakes the earliest-clock worker).
+    pub fn step_for_worker(
+        &mut self,
+        a: usize,
+        xs: &mut [Vec<f32>],
+        grad_of: &mut dyn FnMut(usize, &[f32], &mut [f32]),
+        lr: f32,
+        event: u64,
+    ) -> (PairGossip, CommStats) {
+        let pair = self.sampler.pair_for(a);
+        self.step_pair(pair, xs, grad_of, lr, event)
+    }
+
+    fn step_pair(
+        &mut self,
+        pair: PairGossip,
+        xs: &mut [Vec<f32>],
+        grad_of: &mut dyn FnMut(usize, &[f32], &mut [f32]),
+        lr: f32,
+        event: u64,
+    ) -> (PairGossip, CommStats) {
+        let (a, b) = (pair.a, pair.b);
+
+        // --- gossip averaging over the (a, b) edge -----------------------
+        let stats = match &self.variant {
+            AsyncVariant::FullPrecision => {
+                for k in 0..self.d {
+                    let m = 0.5 * (xs[a][k] + xs[b][k]);
+                    self.buf_a[k] = m;
+                }
+                xs[a].copy_from_slice(&self.buf_a);
+                xs[b].copy_from_slice(&self.buf_a);
+                CommStats {
+                    bytes_per_msg: self.d * 4,
+                    messages: 2,
+                    allreduce_bytes: None,
+                    extra_local_passes: 0,
+                }
+            }
+            AsyncVariant::Moniqua { theta, quant } => {
+                let codec = MoniquaCodec::from_theta(*theta, quant);
+                common::rounding_noise(quant, self.seed, event, 0, self.d, &mut self.noise);
+                // a -> b
+                codec.encode_into(&xs[a], &self.noise, &mut self.codes);
+                let bytes = common::wire_bytes(quant, &self.codes);
+                codec.recover_into(&self.codes, &xs[b], &mut self.buf_a); // x̂_a at b
+                // b -> a
+                codec.encode_into(&xs[b], &self.noise, &mut self.codes);
+                codec.recover_into(&self.codes, &xs[a], &mut self.buf_b); // x̂_b at a
+                // local biased terms cancel the self-quantization noise
+                let mut self_a = vec![0.0f32; self.d];
+                let mut self_b = vec![0.0f32; self.d];
+                codec.local_biased_into(&xs[a], &self.noise, &mut self_a);
+                codec.local_biased_into(&xs[b], &self.noise, &mut self_b);
+                for k in 0..self.d {
+                    let da = 0.5 * (self.buf_b[k] - self_a[k]);
+                    let db = 0.5 * (self.buf_a[k] - self_b[k]);
+                    xs[a][k] += da;
+                    xs[b][k] += db;
+                }
+                CommStats {
+                    bytes_per_msg: bytes,
+                    messages: 2,
+                    allreduce_bytes: None,
+                    extra_local_passes: 0,
+                }
+            }
+        };
+
+        // --- stale gradient update on the waking worker a ----------------
+        match self.snapshots[a].take() {
+            Some((snap, when)) => {
+                self.max_observed_delay = self.max_observed_delay.max(event - when);
+                let mut g = vec![0.0f32; self.d];
+                grad_of(a, &snap, &mut g);
+                for k in 0..self.d {
+                    xs[a][k] -= lr * g[k];
+                }
+            }
+            None => {
+                // First activation: no in-flight gradient yet.
+            }
+        }
+        // Start computing the next gradient on the current model.
+        self.snapshots[a] = Some((xs[a].clone(), event));
+
+        (pair, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::theta::{delta_adpsgd, theta_adpsgd};
+
+    fn quad_grad(c: f32) -> impl FnMut(usize, &[f32], &mut [f32]) {
+        move |_w, p, g| {
+            for (gi, &pi) in g.iter_mut().zip(p) {
+                *gi = pi - c;
+            }
+        }
+    }
+
+    fn run(variant: AsyncVariant, events: u64, lr: f32) -> Vec<Vec<f32>> {
+        let topo = Topology::Ring(6);
+        let d = 8;
+        let mut alg = AdPsgd::new(&topo, d, variant, 17);
+        let mut xs: Vec<Vec<f32>> = (0..6).map(|_| vec![1.0; d]).collect();
+        let mut grad = quad_grad(0.3);
+        for e in 0..events {
+            alg.step_event(&mut xs, &mut grad, lr, e);
+        }
+        xs
+    }
+
+    #[test]
+    fn full_precision_converges() {
+        let xs = run(AsyncVariant::FullPrecision, 3000, 0.1);
+        for x in &xs {
+            for &v in x {
+                assert!((v - 0.3).abs() < 0.05, "v {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn moniqua_variant_converges_with_theorem5_settings() {
+        let topo = Topology::Ring(6);
+        let t_mix = AdPsgd::estimate_t_mix(&topo, 1, 100_000) as f64;
+        let lr = 0.1;
+        // Theorem 5: θ = 16 t_mix α G∞ (G∞ ≈ 1 here), δ = 1/(64 t_mix + 2).
+        let delta = delta_adpsgd(t_mix);
+        let bits = ((1.0 / delta).log2().ceil() as u32).clamp(2, 16);
+        let theta = theta_adpsgd(lr as f64, 1.0, t_mix) as f32;
+        let quant = QuantConfig::stochastic(bits);
+        let xs = run(AsyncVariant::Moniqua { theta, quant }, 3000, lr);
+        for x in &xs {
+            for &v in x {
+                assert!((v - 0.3).abs() < 0.1, "v {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_is_observed_and_bounded() {
+        let topo = Topology::Ring(4);
+        let mut alg = AdPsgd::new(&topo, 4, AsyncVariant::FullPrecision, 3);
+        let mut xs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; 4]).collect();
+        let mut grad = quad_grad(0.0);
+        for e in 0..2000 {
+            alg.step_event(&mut xs, &mut grad, 0.01, e);
+        }
+        assert!(alg.max_observed_delay > 0);
+        assert!(alg.max_observed_delay < 200, "delay {}", alg.max_observed_delay);
+    }
+
+    #[test]
+    fn moniqua_traffic_is_quantized() {
+        let topo = Topology::Ring(4);
+        let quant = QuantConfig::stochastic(8);
+        let mut alg = AdPsgd::new(
+            &topo,
+            1000,
+            AsyncVariant::Moniqua { theta: 2.0, quant },
+            5,
+        );
+        let mut xs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; 1000]).collect();
+        let mut grad = quad_grad(0.0);
+        let (_, stats) = alg.step_event(&mut xs, &mut grad, 0.1, 0);
+        assert_eq!(stats.bytes_per_msg, 1000);
+        assert_eq!(stats.messages, 2);
+    }
+
+    #[test]
+    fn gossip_preserves_mean_full_precision() {
+        let topo = Topology::Ring(4);
+        let mut alg = AdPsgd::new(&topo, 2, AsyncVariant::FullPrecision, 7);
+        let mut xs: Vec<Vec<f32>> =
+            (0..4).map(|i| vec![i as f32; 2]).collect();
+        let mut grad = |_w: usize, _p: &[f32], g: &mut [f32]| g.fill(0.0);
+        for e in 0..500 {
+            alg.step_event(&mut xs, &mut grad, 0.0, e);
+        }
+        let mean: f32 = xs.iter().map(|x| x[0]).sum::<f32>() / 4.0;
+        assert!((mean - 1.5).abs() < 1e-4, "mean {mean}");
+        // consensus
+        assert!(crate::linalg::linf_dist(&xs[0], &xs[3]) < 1e-3);
+    }
+}

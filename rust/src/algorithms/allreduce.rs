@@ -1,0 +1,68 @@
+//! Centralized baseline: exact AllReduce averaging of gradients every step
+//! (what TensorFlow/MPI-style synchronous data parallelism does). All
+//! workers hold identical parameters; the network model prices a full-
+//! precision ring-allreduce per step — the latency/bandwidth hog of
+//! Figure 1(c)/(d).
+
+use super::{CommStats, StepCtx, SyncAlgorithm};
+
+pub struct AllReduce {
+    d: usize,
+    mean_grad: Vec<f32>,
+}
+
+impl AllReduce {
+    pub fn new(d: usize) -> Self {
+        AllReduce { d, mean_grad: vec![0.0; d] }
+    }
+}
+
+impl SyncAlgorithm for AllReduce {
+    fn name(&self) -> &'static str {
+        "allreduce"
+    }
+
+    fn step(
+        &mut self,
+        xs: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+    ) -> CommStats {
+        let n = xs.len();
+        self.mean_grad.fill(0.0);
+        for g in grads {
+            crate::linalg::axpy(&mut self.mean_grad, 1.0 / n as f32, g);
+        }
+        for x in xs.iter_mut() {
+            crate::linalg::axpy(x, -lr, &self.mean_grad);
+        }
+        CommStats {
+            bytes_per_msg: 0,
+            messages: 0,
+            allreduce_bytes: Some(self.d * 4),
+            extra_local_passes: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_stay_identical_and_descend() {
+        let mut alg = AllReduce::new(4);
+        let mut xs: Vec<Vec<f32>> = (0..3).map(|_| vec![1.0; 4]).collect();
+        let grads: Vec<Vec<f32>> = (0..3)
+            .map(|i| vec![i as f32; 4]) // mean gradient = 1.0
+            .collect();
+        let ctx = StepCtx { seed: 0, rho: 0.0, g_inf: 1.0 };
+        let stats = alg.step(&mut xs, &grads, 0.5, 0, &ctx);
+        for x in &xs {
+            assert_eq!(x, &vec![0.5; 4]);
+        }
+        assert_eq!(stats.allreduce_bytes, Some(16));
+    }
+}

@@ -1,0 +1,105 @@
+//! D-PSGD (Lian et al. 2017) with full-precision communication — the
+//! baseline every quantized variant is measured against:
+//!
+//! ```text
+//!     x_{k+1,i} = Σ_j W_ji x_{k,j} − α_k g̃_{k,i}
+//! ```
+
+use super::{CommStats, StepCtx, SyncAlgorithm};
+use crate::topology::CommMatrix;
+
+pub struct DPsgd {
+    w: CommMatrix,
+    d: usize,
+    scratch: Vec<Vec<f32>>,
+}
+
+impl DPsgd {
+    pub fn new(w: CommMatrix, d: usize) -> Self {
+        let n = w.n();
+        DPsgd { w, d, scratch: vec![vec![0.0; d]; n] }
+    }
+}
+
+impl SyncAlgorithm for DPsgd {
+    fn name(&self) -> &'static str {
+        "dpsgd"
+    }
+
+    fn step(
+        &mut self,
+        xs: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+    ) -> CommStats {
+        let n = xs.len();
+        // x_{k+1,i} = Σ_j W_ji x_j − α g_i  (exact neighbor models on the wire)
+        for i in 0..n {
+            let out = &mut self.scratch[i];
+            out.fill(0.0);
+            let wii = self.w.weight(i, i) as f32;
+            crate::linalg::axpy(out, wii, &xs[i]);
+            for &j in &self.w.neighbors[i] {
+                crate::linalg::axpy(out, self.w.weight(j, i) as f32, &xs[j]);
+            }
+            crate::linalg::axpy(out, -lr, &grads[i]);
+        }
+        for i in 0..n {
+            xs[i].copy_from_slice(&self.scratch[i]);
+        }
+        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: self.d * 4, // full f32 model
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            extra_local_passes: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn preserves_average_modulo_gradient() {
+        // W doubly stochastic: the mean of xs after averaging equals the
+        // mean before, minus lr * mean gradient.
+        let w = Topology::Ring(5).comm_matrix();
+        let d = 8;
+        let mut alg = DPsgd::new(w, d);
+        let mut xs: Vec<Vec<f32>> =
+            (0..5).map(|i| vec![i as f32; d]).collect();
+        let grads: Vec<Vec<f32>> = (0..5).map(|_| vec![0.5; d]).collect();
+        let mean_before: f32 = xs.iter().map(|x| x[0]).sum::<f32>() / 5.0;
+        let ctx = StepCtx { seed: 0, rho: 0.8, g_inf: 1.0 };
+        let stats = alg.step(&mut xs, &grads, 0.1, 0, &ctx);
+        let mean_after: f32 = xs.iter().map(|x| x[0]).sum::<f32>() / 5.0;
+        assert!((mean_after - (mean_before - 0.05)).abs() < 1e-5);
+        assert_eq!(stats.bytes_per_msg, d * 4);
+        assert_eq!(stats.messages, 10);
+    }
+
+    #[test]
+    fn reaches_consensus_without_gradients() {
+        let w = Topology::Ring(6).comm_matrix();
+        let d = 4;
+        let mut alg = DPsgd::new(w, d);
+        let mut xs: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32; d]).collect();
+        let grads: Vec<Vec<f32>> = (0..6).map(|_| vec![0.0; d]).collect();
+        let ctx = StepCtx { seed: 0, rho: 0.8, g_inf: 0.0 };
+        for k in 0..200 {
+            alg.step(&mut xs, &grads, 0.0, k, &ctx);
+        }
+        let spread = xs
+            .iter()
+            .map(|x| x[0])
+            .fold((f32::MAX, f32::MIN), |(lo, hi), v| (lo.min(v), hi.max(v)));
+        assert!(spread.1 - spread.0 < 1e-4, "spread {spread:?}");
+        // consensus value = initial mean = 2.5
+        assert!((xs[0][0] - 2.5).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,188 @@
+//! ECD-PSGD (Tang et al. 2018, Alg. 2): extrapolation-compressed
+//! difference. Like DCD the workers keep per-neighbor estimates (Θ(md)
+//! memory), but the estimate is updated through a time-weighted
+//! extrapolation that tolerates larger (still unbiased) quantization noise:
+//!
+//! ```text
+//!     x_{k+1,i} = Σ_j W_ji x̂_{k,j} − α g̃_i
+//!     z_{k+1,i} = (1 − (k+2)/2)·x_{k,i} + ((k+2)/2)·x_{k+1,i}
+//!     send  Q(z_{k+1,i})
+//!     x̂_{k+1,i} = (1 − 2/(k+2))·x̂_{k,i} + (2/(k+2))·Q(z_{k+1,i})
+//! ```
+//!
+//! The growing extrapolation weight makes z's magnitude grow with k, so a
+//! *clipped* fixed-range quantizer (any real bit budget) eventually
+//! saturates — ECD degrades/diverges at low bits (Table 2: diverges at
+//! 1 bit, ≈36% accuracy at 2 bits).
+
+use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
+use crate::quant::QuantConfig;
+use crate::topology::CommMatrix;
+
+pub struct Ecd {
+    w: CommMatrix,
+    d: usize,
+    cfg: QuantConfig,
+    quant: RangeQuantizer,
+    /// true → per-message rescaling (+4-byte header); false → fixed grid.
+    dynamic: bool,
+    xhat: Vec<Vec<f32>>,
+    x_new: Vec<Vec<f32>>,
+    z: Vec<f32>,
+    qz: Vec<Vec<f32>>,
+    codes: Vec<u32>,
+    noise: Vec<f32>,
+    initialized: bool,
+}
+
+impl Ecd {
+    /// `range == 0` → dynamic per-message scaling; `range > 0` → fixed grid.
+    pub fn new(w: CommMatrix, d: usize, cfg: QuantConfig, range: f32) -> Self {
+        let n = w.n();
+        let dynamic = range == 0.0;
+        Ecd {
+            w,
+            d,
+            cfg,
+            quant: RangeQuantizer::new(&cfg, if dynamic { 1.0 } else { range }),
+            dynamic,
+            xhat: vec![vec![0.0; d]; n],
+            x_new: vec![vec![0.0; d]; n],
+            z: vec![0.0; d],
+            qz: vec![vec![0.0; d]; n],
+            codes: vec![0; d],
+            noise: Vec::new(),
+            initialized: false,
+        }
+    }
+}
+
+impl SyncAlgorithm for Ecd {
+    fn name(&self) -> &'static str {
+        "ecd"
+    }
+
+    fn step(
+        &mut self,
+        xs: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+    ) -> CommStats {
+        let n = xs.len();
+        if !self.initialized {
+            for i in 0..n {
+                self.xhat[i].copy_from_slice(&xs[i]);
+            }
+            self.initialized = true;
+        }
+        let k = round as f32;
+        let ext = (k + 2.0) / 2.0; // extrapolation weight
+        let eta = 2.0 / (k + 2.0); // estimate update weight
+        let mut bytes = 0usize;
+        for i in 0..n {
+            // averaging with estimates + gradient
+            let xn = &mut self.x_new[i];
+            xn.fill(0.0);
+            crate::linalg::axpy(xn, self.w.weight(i, i) as f32, &self.xhat[i]);
+            for &j in &self.w.neighbors[i] {
+                crate::linalg::axpy(xn, self.w.weight(j, i) as f32, &self.xhat[j]);
+            }
+            crate::linalg::axpy(xn, -lr, &grads[i]);
+        }
+        for i in 0..n {
+            // extrapolate and quantize
+            common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
+            for kk in 0..self.d {
+                self.z[kk] = (1.0 - ext) * xs[i][kk] + ext * self.x_new[i][kk];
+            }
+            // The extrapolated z grows like (k+2)/2·‖x‖ by construction, so
+            // the fixed grid saturates after ~2·range/‖x‖ rounds — exactly
+            // how ECD dies at fixed budgets (Table 2). Dynamic mode models
+            // the charitable per-message-rescaled implementation instead.
+            if self.dynamic {
+                self.quant
+                    .quantize_dynamic_into(&self.z, &self.noise, &mut self.codes, &mut self.qz[i]);
+            } else {
+                self.quant
+                    .quantize_into(&self.z, &self.noise, &mut self.codes, &mut self.qz[i]);
+            }
+            if i == 0 {
+                bytes = common::wire_bytes(&self.cfg, &self.codes)
+                    + if self.dynamic { 4 } else { 0 };
+            }
+        }
+        for i in 0..n {
+            for kk in 0..self.d {
+                self.xhat[i][kk] = (1.0 - eta) * self.xhat[i][kk] + eta * self.qz[i][kk];
+            }
+            xs[i].copy_from_slice(&self.x_new[i]);
+        }
+        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: bytes,
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            // extrapolation + estimate update: two extra full-vector passes
+            extra_local_passes: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    fn ctx(rho: f64) -> StepCtx {
+        StepCtx { seed: 13, rho, g_inf: 1.0 }
+    }
+
+    fn quad_run(alg: &mut dyn SyncAlgorithm, steps: u64, lr: f32, rho: f64) -> f64 {
+        let n = 4;
+        let d = 8;
+        let c = 0.3f32;
+        let mut xs: Vec<Vec<f32>> = (0..n).map(|_| vec![1.0; d]).collect();
+        for k in 0..steps {
+            let grads: Vec<Vec<f32>> = xs
+                .iter()
+                .map(|x| x.iter().map(|&v| v - c).collect())
+                .collect();
+            alg.step(&mut xs, &grads, lr, k, &ctx(rho));
+        }
+        xs.iter()
+            .map(|x| x.iter().map(|&v| ((v - c) as f64).powi(2)).sum::<f64>())
+            .sum::<f64>()
+            / n as f64
+    }
+
+    #[test]
+    fn converges_at_8_bits() {
+        let w = Topology::Ring(4).comm_matrix();
+        let rho = w.rho();
+        // range must cover the growing extrapolation for the horizon used
+        let mut alg = Ecd::new(w, 8, QuantConfig::stochastic(8), 0.0);
+        let loss = quad_run(&mut alg, 300, 0.1, rho);
+        assert!(loss < 5e-2, "loss {loss}");
+    }
+
+    #[test]
+    fn fails_at_low_bits() {
+        let w = Topology::Ring(4).comm_matrix();
+        let rho = w.rho();
+        let mut alg = Ecd::new(w, 8, QuantConfig::stochastic(2), 16.0);
+        let loss = quad_run(&mut alg, 300, 0.1, rho);
+        assert!(loss > 0.05 || loss.is_nan(), "2-bit ECD should fail: {loss}");
+    }
+
+    #[test]
+    fn two_extra_local_passes() {
+        let w = Topology::Ring(4).comm_matrix();
+        let mut alg = Ecd::new(w, 16, QuantConfig::stochastic(8), 8.0);
+        let mut xs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0; 16]).collect();
+        let grads = xs.clone();
+        let s = alg.step(&mut xs, &grads, 0.1, 0, &ctx(0.8));
+        assert_eq!(s.extra_local_passes, 2);
+    }
+}

@@ -1,0 +1,250 @@
+//! Decentralized training algorithms: Moniqua (the paper's contribution)
+//! and every baseline its evaluation compares against.
+//!
+//! | variant | paper | quantized? | extra memory |
+//! |---|---|---|---|
+//! | [`Algorithm::AllReduce`]   | centralized SGD        | no  | 0 |
+//! | [`Algorithm::DPsgd`]       | Lian et al. 2017       | no  | 0 |
+//! | [`Algorithm::NaiveQuant`]  | §3 counterexample      | yes | 0 (diverges) |
+//! | [`Algorithm::Moniqua`]     | **Algorithm 1**        | yes | 0 |
+//! | [`Algorithm::D2`]          | Tang et al. 2018 (D²)  | no  | 0 |
+//! | [`Algorithm::MoniquaD2`]   | **Algorithm 2**        | yes | 0 |
+//! | [`Algorithm::Dcd`]         | Tang et al. 2018       | yes | Θ(md) |
+//! | [`Algorithm::Ecd`]         | Tang et al. 2018       | yes | Θ(md) |
+//! | [`Algorithm::Choco`]       | Koloskova et al. 2019  | yes | Θ(md) |
+//! | [`Algorithm::DeepSqueeze`] | Tang et al. 2019       | yes | Θ(nd) |
+//!
+//! AD-PSGD / Moniqua-AD-PSGD (**Algorithm 3**) are event-driven and live in
+//! [`adpsgd`], driven by [`crate::coordinator::AsyncTrainer`].
+//!
+//! All synchronous variants implement [`SyncAlgorithm`]: the trainer
+//! computes the per-worker stochastic gradients, then hands the full state
+//! to `step`, which performs communication + update and reports the wire
+//! traffic it generated (the network simulator prices it afterwards).
+
+pub mod adpsgd;
+pub mod allreduce;
+pub mod choco;
+pub mod common;
+pub mod d2;
+pub mod dcd;
+pub mod deepsqueeze;
+pub mod dpsgd;
+pub mod ecd;
+pub mod moniqua;
+pub mod naive;
+
+pub use adpsgd::{AdPsgd, AsyncVariant};
+pub use common::{CommStats, RangeQuantizer, StepCtx};
+
+use crate::quant::QuantConfig;
+use crate::topology::CommMatrix;
+
+/// θ policy for Moniqua variants (paper §6 "Choosing θ empirically").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ThetaPolicy {
+    /// Fixed hyperparameter (the paper's experiments use θ = 2.0).
+    Constant(f32),
+    /// Theorem-2 formula with a G∞ estimate tracked over `warmup` steps and
+    /// a multiplicative safety factor.
+    Theorem2 { warmup: u64, safety: f64 },
+}
+
+impl ThetaPolicy {
+    /// θ for the current round. `g_inf` is the tracked gradient ∞-norm.
+    pub fn theta(&self, alpha: f64, g_inf: f64, n: usize, rho: f64) -> f64 {
+        match *self {
+            ThetaPolicy::Constant(t) => t as f64,
+            ThetaPolicy::Theorem2 { safety, .. } => {
+                crate::quant::theta::theta_theorem2(alpha, g_inf.max(1e-8) * safety, n, rho)
+            }
+        }
+    }
+
+    pub fn warmup(&self) -> u64 {
+        match *self {
+            ThetaPolicy::Constant(_) => 0,
+            ThetaPolicy::Theorem2 { warmup, .. } => warmup,
+        }
+    }
+}
+
+/// Top-level algorithm selector (config / CLI level).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Algorithm {
+    AllReduce,
+    DPsgd,
+    NaiveQuant { quant: QuantConfig, range: f32 },
+    Moniqua { theta: ThetaPolicy, quant: QuantConfig },
+    /// Moniqua with the Theorem-3 slack matrix `W̄ = γW + (1−γ)I` (1-bit mode).
+    MoniquaSlack { theta: ThetaPolicy, quant: QuantConfig, gamma: f64 },
+    D2,
+    MoniquaD2 { theta: ThetaPolicy, quant: QuantConfig },
+    Dcd { quant: QuantConfig, range: f32 },
+    Ecd { quant: QuantConfig, range: f32 },
+    Choco { quant: QuantConfig, range: f32, gamma: f64 },
+    DeepSqueeze { quant: QuantConfig, range: f32, gamma: f64 },
+}
+
+impl Algorithm {
+    /// Short name used in reports/CSV.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::AllReduce => "allreduce",
+            Algorithm::DPsgd => "dpsgd",
+            Algorithm::NaiveQuant { .. } => "naive",
+            Algorithm::Moniqua { .. } => "moniqua",
+            Algorithm::MoniquaSlack { .. } => "moniqua-slack",
+            Algorithm::D2 => "d2",
+            Algorithm::MoniquaD2 { .. } => "moniqua-d2",
+            Algorithm::Dcd { .. } => "dcd",
+            Algorithm::Ecd { .. } => "ecd",
+            Algorithm::Choco { .. } => "choco",
+            Algorithm::DeepSqueeze { .. } => "deepsqueeze",
+        }
+    }
+
+    /// Extra memory (floats, whole cluster) versus D-PSGD — Table 1/2's
+    /// "extra memory" column.
+    pub fn extra_memory_floats(&self, n: usize, m: usize, d: usize) -> usize {
+        let key = match self {
+            Algorithm::Dcd { .. } => "dcd",
+            Algorithm::Ecd { .. } => "ecd",
+            Algorithm::Choco { .. } => "choco",
+            Algorithm::DeepSqueeze { .. } => "deepsqueeze",
+            _ => "moniqua",
+        };
+        crate::quant::extra_memory_floats(key, n, m, d)
+    }
+
+    /// Instantiate the synchronous engine. Panics for AD-PSGD variants
+    /// (use [`crate::coordinator::AsyncTrainer`]).
+    pub fn make_sync(&self, w: &CommMatrix, d: usize) -> Box<dyn SyncAlgorithm> {
+        match self.clone() {
+            Algorithm::AllReduce => Box::new(allreduce::AllReduce::new(d)),
+            Algorithm::DPsgd => Box::new(dpsgd::DPsgd::new(w.clone(), d)),
+            Algorithm::NaiveQuant { quant, range } => {
+                Box::new(naive::NaiveQuant::new(w.clone(), d, quant, range))
+            }
+            Algorithm::Moniqua { theta, quant } => {
+                Box::new(moniqua::MoniquaSync::new(w.clone(), d, theta, quant))
+            }
+            Algorithm::MoniquaSlack { theta, quant, gamma } => Box::new(
+                moniqua::MoniquaSync::named(w.slack(gamma), d, theta, quant, "moniqua-slack"),
+            ),
+            Algorithm::D2 => Box::new(d2::D2::new(w.clone(), d, None)),
+            Algorithm::MoniquaD2 { theta, quant } => {
+                Box::new(d2::D2::new(w.clone(), d, Some((theta, quant))))
+            }
+            Algorithm::Dcd { quant, range } => {
+                Box::new(dcd::Dcd::new(w.clone(), d, quant, range))
+            }
+            Algorithm::Ecd { quant, range } => {
+                Box::new(ecd::Ecd::new(w.clone(), d, quant, range))
+            }
+            Algorithm::Choco { quant, range, gamma } => {
+                Box::new(choco::Choco::new(w.clone(), d, quant, range, gamma))
+            }
+            Algorithm::DeepSqueeze { quant, range, gamma } => Box::new(
+                deepsqueeze::DeepSqueeze::new(w.clone(), d, quant, range, gamma),
+            ),
+        }
+    }
+}
+
+/// One synchronous communication+update engine.
+pub trait SyncAlgorithm: Send {
+    fn name(&self) -> &'static str;
+
+    /// Perform one synchronous round *after* gradients were computed:
+    /// averaging/communication plus the `x ← x − α g` step, mutating `xs`
+    /// in place. Returns the traffic generated this round.
+    fn step(
+        &mut self,
+        xs: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+    ) -> CommStats;
+
+    /// The θ bound the algorithm used this round (Moniqua variants), for
+    /// diagnostics/verification traces.
+    fn last_theta(&self) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Algorithm::DPsgd.name(), "dpsgd");
+        assert_eq!(
+            Algorithm::Moniqua {
+                theta: ThetaPolicy::Constant(2.0),
+                quant: QuantConfig::stochastic(8)
+            }
+            .name(),
+            "moniqua"
+        );
+    }
+
+    #[test]
+    fn theta_policy_constant_and_formula() {
+        let c = ThetaPolicy::Constant(2.0);
+        assert_eq!(c.theta(0.1, 5.0, 8, 0.8), 2.0);
+        let f = ThetaPolicy::Theorem2 { warmup: 10, safety: 2.0 };
+        let got = f.theta(0.1, 5.0, 8, 0.8);
+        let want = crate::quant::theta::theta_theorem2(0.1, 10.0, 8, 0.8);
+        assert!((got - want).abs() < 1e-12);
+        assert_eq!(f.warmup(), 10);
+    }
+
+    #[test]
+    fn extra_memory_ranking_matches_table1() {
+        let (n, d) = (8, 1000);
+        let m = Topology::Ring(n).edge_count();
+        let mk = |a: Algorithm| a.extra_memory_floats(n, m, d);
+        let q = QuantConfig::stochastic(8);
+        assert_eq!(
+            mk(Algorithm::Moniqua {
+                theta: ThetaPolicy::Constant(1.0),
+                quant: q
+            }),
+            0
+        );
+        let dcd = mk(Algorithm::Dcd { quant: q, range: 1.0 });
+        let ds = mk(Algorithm::DeepSqueeze { quant: q, range: 1.0, gamma: 0.5 });
+        let choco = mk(Algorithm::Choco { quant: q, range: 1.0, gamma: 0.5 });
+        assert!(dcd > 0 && ds > 0);
+        assert!(ds < choco, "DeepSqueeze {ds} < ChocoSGD {choco} (Table 2)");
+    }
+
+    #[test]
+    fn all_sync_variants_instantiate() {
+        let w = Topology::Ring(4).comm_matrix();
+        let q = QuantConfig::stochastic(4);
+        let t = ThetaPolicy::Constant(2.0);
+        let algos = vec![
+            Algorithm::AllReduce,
+            Algorithm::DPsgd,
+            Algorithm::NaiveQuant { quant: q, range: 4.0 },
+            Algorithm::Moniqua { theta: t, quant: q },
+            Algorithm::MoniquaSlack { theta: t, quant: q, gamma: 0.1 },
+            Algorithm::D2,
+            Algorithm::MoniquaD2 { theta: t, quant: q },
+            Algorithm::Dcd { quant: q, range: 4.0 },
+            Algorithm::Ecd { quant: q, range: 4.0 },
+            Algorithm::Choco { quant: q, range: 4.0, gamma: 0.3 },
+            Algorithm::DeepSqueeze { quant: q, range: 4.0, gamma: 0.3 },
+        ];
+        for a in algos {
+            let engine = a.make_sync(&w, 10);
+            assert_eq!(engine.name(), a.name());
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Naive quantized D-PSGD — the §3 counterexample (Theorem 1):
+//!
+//! ```text
+//!     x_{k+1,i} = W_ii x_{k,i} + Σ_{j≠i} W_ji Q_δ(x_{k,j}) − α_k g̃_{k,i}
+//! ```
+//!
+//! With an *unbiased* linear quantizer whose representable points are `δ·Z`,
+//! the iterates provably cannot enter the region
+//! `E‖∇f‖² < φ²δ²/(8(1+φ²))` on the Theorem-1 quadratic. This engine exists
+//! to regenerate that result (bench_theorem1_naive).
+
+use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
+use crate::quant::QuantConfig;
+use crate::topology::CommMatrix;
+
+pub struct NaiveQuant {
+    w: CommMatrix,
+    d: usize,
+    cfg: QuantConfig,
+    quant: RangeQuantizer,
+    scratch: Vec<Vec<f32>>,
+    qvals: Vec<Vec<f32>>,
+    noise: Vec<f32>,
+    codes: Vec<u32>,
+}
+
+impl NaiveQuant {
+    pub fn new(w: CommMatrix, d: usize, cfg: QuantConfig, range: f32) -> Self {
+        let n = w.n();
+        NaiveQuant {
+            w,
+            d,
+            cfg,
+            quant: RangeQuantizer::new(&cfg, range),
+            scratch: vec![vec![0.0; d]; n],
+            qvals: vec![vec![0.0; d]; n],
+            noise: Vec::new(),
+            codes: vec![0; d],
+        }
+    }
+
+    /// Effective absolute quantization step δ·range of the underlying grid.
+    pub fn absolute_delta(&self) -> f32 {
+        self.quant.max_error()
+    }
+}
+
+impl SyncAlgorithm for NaiveQuant {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn step(
+        &mut self,
+        xs: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+    ) -> CommStats {
+        let n = xs.len();
+        // Every worker quantizes its own model directly (no modulo, no
+        // replica): exactly Eq. (4).
+        let mut bytes = 0usize;
+        for i in 0..n {
+            common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
+            self.quant
+                .quantize_into(&xs[i], &self.noise, &mut self.codes, &mut self.qvals[i]);
+            bytes = common::wire_bytes(&self.cfg, &self.codes);
+        }
+        for i in 0..n {
+            let out = &mut self.scratch[i];
+            out.fill(0.0);
+            crate::linalg::axpy(out, self.w.weight(i, i) as f32, &xs[i]);
+            for &j in &self.w.neighbors[i] {
+                crate::linalg::axpy(out, self.w.weight(j, i) as f32, &self.qvals[j]);
+            }
+            crate::linalg::axpy(out, -lr, &grads[i]);
+        }
+        for i in 0..n {
+            xs[i].copy_from_slice(&self.scratch[i]);
+        }
+        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: bytes,
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            extra_local_passes: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::quadratic::theorem1_floor;
+    use crate::topology::Topology;
+
+    /// Theorem 1 reproduced at unit scale: on f(x)=½‖x−δ1/2‖², naive
+    /// quantization stalls above the floor while plain D-PSGD converges.
+    #[test]
+    fn stalls_on_theorem1_quadratic() {
+        let topo = Topology::Ring(4);
+        let w = topo.comm_matrix();
+        let phi = w.min_nonzero();
+        let d = 16usize;
+        // Use an unbiased (stochastic) quantizer with absolute step 1.0:
+        // bits=2, range=2.0 -> step = range/levels = 0.5... choose so that
+        // absolute delta = range * (1/levels) = 1.0.
+        let cfg = QuantConfig::stochastic(2).with_shared_randomness(false);
+        let range = 4.0f32; // step = 4/4 = 1.0
+        let delta_abs = 1.0f64;
+        let mut alg = NaiveQuant::new(w.clone(), d, cfg, range);
+        assert!((alg.absolute_delta() as f64 - delta_abs).abs() < 1e-6);
+
+        // Theorem 1 places the optimum exactly *between* two representable
+        // points. Our grid sits at half-integers {±0.5, ±1.5}, so the
+        // adversarial optimum is 0.0 (distance δ/2 from both neighbors) —
+        // the same construction as the paper's δ·Z grid with optimum δ/2.
+        let opt = 0.0f32;
+        let mut xs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; d]).collect();
+        let ctx = StepCtx { seed: 3, rho: w.rho(), g_inf: 1.0 };
+        let mut floor_hits = 0usize;
+        for k in 0..400 {
+            // gradient of the quadratic: x - opt
+            let grads: Vec<Vec<f32>> = xs
+                .iter()
+                .map(|x| x.iter().map(|&v| v - opt).collect())
+                .collect();
+            alg.step(&mut xs, &grads, 0.05, k, &ctx);
+            if k >= 200 {
+                // E||grad f(x_i)||^2 per coordinate ~ mean over coords
+                let gsq: f64 = xs[0]
+                    .iter()
+                    .map(|&v| ((v - opt) as f64).powi(2))
+                    .sum::<f64>()
+                    / d as f64;
+                if gsq * d as f64 >= theorem1_floor(phi, delta_abs) {
+                    floor_hits += 1;
+                }
+            }
+        }
+        // The iterates must stay at/above the floor essentially always.
+        assert!(floor_hits > 190, "hits {floor_hits}");
+    }
+
+    #[test]
+    fn traffic_is_quantized_size() {
+        let w = Topology::Ring(4).comm_matrix();
+        let cfg = QuantConfig::stochastic(8);
+        let mut alg = NaiveQuant::new(w, 1000, cfg, 2.0);
+        let mut xs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.1; 1000]).collect();
+        let grads = xs.clone();
+        let ctx = StepCtx { seed: 0, rho: 0.8, g_inf: 1.0 };
+        let stats = alg.step(&mut xs, &grads, 0.1, 0, &ctx);
+        assert_eq!(stats.bytes_per_msg, 1000); // 8 bits/param
+        assert_eq!(stats.messages, 8);
+    }
+}

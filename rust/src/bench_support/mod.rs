@@ -1,0 +1,120 @@
+//! Micro/macro benchmark harness (criterion is unavailable offline).
+//!
+//! [`bench`] runs a closure repeatedly with warmup, reports median /
+//! mean ± stddev / min wall time; [`throughput`] converts to bytes/s.
+//! The paper benches use it both for hot-path microbenchmarks
+//! (bench_quant_throughput) and to time full training sweeps.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    /// Bytes/s given per-iteration payload.
+    pub fn throughput(&self, bytes_per_iter: usize) -> f64 {
+        bytes_per_iter as f64 / self.median_s
+    }
+
+    pub fn pretty(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} µs median  ({:>10.3} ± {:>8.3} µs, min {:>10.3}, n={})",
+            self.name,
+            self.median_s * 1e6,
+            self.mean_s * 1e6,
+            self.stddev_s * 1e6,
+            self.min_s * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>() / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        median_s: samples[iters / 2],
+        stddev_s: var.sqrt(),
+        min_s: samples[0],
+    }
+}
+
+/// Convenience wrapper printing the result immediately.
+pub fn bench_print<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    let r = bench(name, warmup, iters, f);
+    println!("{}", r.pretty());
+    r
+}
+
+/// GB/s pretty printer.
+pub fn print_throughput(r: &BenchResult, bytes_per_iter: usize) {
+    println!(
+        "{:<40} {:>8.3} GB/s ({} bytes / iter)",
+        r.name,
+        r.throughput(bytes_per_iter) / 1e9,
+        bytes_per_iter
+    );
+}
+
+/// Prevent the optimizer from deleting a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Section header used by the figure/table benches.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-ish", 2, 20, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.min_s <= r.median_s);
+        assert!(r.median_s > 0.0);
+        assert!(r.mean_s > 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            median_s: 0.5,
+            stddev_s: 0.0,
+            min_s: 0.5,
+        };
+        assert_eq!(r.throughput(1_000_000), 2_000_000.0);
+    }
+}

@@ -1,0 +1,305 @@
+//! Experiment configuration: `key=value` files + CLI override parsing.
+//!
+//! clap is unavailable offline, so this is a small self-contained layer:
+//! a config is an ordered `key=value` map loadable from a file (one pair
+//! per line, `#` comments) and overridable by `--key value` / `key=value`
+//! CLI arguments. Typed getters centralize parse errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{Algorithm, ThetaPolicy};
+use crate::data::partition::Partition;
+use crate::network::NetworkConfig;
+use crate::quant::{Compression, QuantConfig, Rounding};
+use crate::topology::Topology;
+
+/// Ordered string map with typed access.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key=value` lines (`#` comments, blank lines ignored).
+    pub fn from_str_cfg(text: &str) -> Result<Self> {
+        let mut cfg = Config::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key=value", lineno + 1))?;
+            cfg.set(k.trim(), v.trim());
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        Self::from_str_cfg(&text)
+    }
+
+    /// Apply CLI args: `--key value`, `--flag` (→ "true"), or `key=value`.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    self.set(k, v);
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    self.set(key, &args[i + 1]);
+                    i += 1;
+                } else {
+                    self.set(key, "true");
+                }
+            } else if let Some((k, v)) = a.split_once('=') {
+                self.set(k, v);
+            } else {
+                anyhow::bail!("unrecognized argument '{a}'");
+            }
+            i += 1;
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} not u64")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}={v} not f64")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => anyhow::bail!("{key}={v} not a bool"),
+        }
+    }
+
+    // ---- domain-typed getters -------------------------------------------
+
+    /// `topology=ring|chain|complete|star|torus:RxC|regular:D` over `workers`.
+    pub fn topology(&self) -> Result<Topology> {
+        let n = self.usize_or("workers", 8)?;
+        let spec = self.str_or("topology", "ring");
+        Ok(match spec {
+            "ring" => Topology::Ring(n),
+            "chain" => Topology::Chain(n),
+            "complete" => Topology::Complete(n),
+            "star" => Topology::Star(n),
+            s if s.starts_with("torus:") => {
+                let (r, c) = s[6..]
+                    .split_once('x')
+                    .context("torus:RxC")?;
+                let t = Topology::Torus(r.parse()?, c.parse()?);
+                anyhow::ensure!(t.n() == n, "torus dims != workers");
+                t
+            }
+            s if s.starts_with("regular:") => Topology::RandomRegular {
+                n,
+                degree: s[8..].parse()?,
+                seed: self.u64_or("seed", 42)?,
+            },
+            other => anyhow::bail!("unknown topology '{other}'"),
+        })
+    }
+
+    /// Quantizer from `bits`, `rounding`, `shared_randomness`, `compression`.
+    pub fn quant(&self) -> Result<QuantConfig> {
+        let bits = self.u64_or("bits", 8)? as u32;
+        let rounding = match self.str_or("rounding", "stochastic") {
+            "stochastic" => Rounding::Stochastic,
+            "nearest" => Rounding::Nearest,
+            other => anyhow::bail!("unknown rounding '{other}'"),
+        };
+        let compression = match self.str_or("compression", "none") {
+            "none" => Compression::None,
+            "deflate" => Compression::Deflate,
+            "bzip2" => Compression::Bzip2,
+            "rle" => Compression::Rle,
+            other => anyhow::bail!("unknown compression '{other}'"),
+        };
+        let mut q = QuantConfig::stochastic(bits);
+        q.rounding = rounding;
+        q.shared_randomness = self.bool_or("shared_randomness", true)?;
+        q.compression = compression;
+        q.verify_hash = self.bool_or("verify_hash", false)?;
+        Ok(q)
+    }
+
+    /// θ policy from `theta` (number) or `theta=auto` (Theorem-2 formula).
+    pub fn theta_policy(&self) -> Result<ThetaPolicy> {
+        match self.str_or("theta", "2.0") {
+            "auto" => Ok(ThetaPolicy::Theorem2 {
+                warmup: self.u64_or("theta_warmup", 20)?,
+                safety: self.f64_or("theta_safety", 2.0)?,
+            }),
+            v => Ok(ThetaPolicy::Constant(
+                v.parse::<f32>().context("theta must be a number or 'auto'")?,
+            )),
+        }
+    }
+
+    /// Algorithm from `algorithm=` plus quantizer/θ keys.
+    pub fn algorithm(&self) -> Result<Algorithm> {
+        let quant = self.quant()?;
+        let range = self.f64_or("range", 4.0)? as f32;
+        let gamma = self.f64_or("gamma", 0.2)?;
+        Ok(match self.str_or("algorithm", "moniqua") {
+            "allreduce" => Algorithm::AllReduce,
+            "dpsgd" => Algorithm::DPsgd,
+            "naive" => Algorithm::NaiveQuant { quant, range },
+            "moniqua" => Algorithm::Moniqua { theta: self.theta_policy()?, quant },
+            "moniqua-slack" => Algorithm::MoniquaSlack {
+                theta: self.theta_policy()?,
+                quant,
+                gamma,
+            },
+            "d2" => Algorithm::D2,
+            "moniqua-d2" => Algorithm::MoniquaD2 { theta: self.theta_policy()?, quant },
+            "dcd" => Algorithm::Dcd { quant, range },
+            "ecd" => Algorithm::Ecd { quant, range },
+            "choco" => Algorithm::Choco { quant, range, gamma },
+            "deepsqueeze" => Algorithm::DeepSqueeze { quant, range, gamma },
+            other => anyhow::bail!("unknown algorithm '{other}'"),
+        })
+    }
+
+    /// Network from `bandwidth_mbps` + `latency_ms` or a `network=fig1a..d`
+    /// preset; `network=none` disables pricing.
+    pub fn network(&self) -> Result<Option<NetworkConfig>> {
+        match self.get("network") {
+            Some("none") => Ok(None),
+            Some("fig1a") => Ok(Some(NetworkConfig::fig1a())),
+            Some("fig1b") => Ok(Some(NetworkConfig::fig1b())),
+            Some("fig1c") => Ok(Some(NetworkConfig::fig1c())),
+            Some("fig1d") => Ok(Some(NetworkConfig::fig1d())),
+            Some("fig2b") => Ok(Some(NetworkConfig::fig2b())),
+            Some(other) => anyhow::bail!("unknown network preset '{other}'"),
+            None => {
+                let bw = self.f64_or("bandwidth_mbps", 1000.0)?;
+                let lat = self.f64_or("latency_ms", 0.05)?;
+                Ok(Some(NetworkConfig::new(bw * 1e6, lat * 1e-3)))
+            }
+        }
+    }
+
+    pub fn partition(&self) -> Result<Partition> {
+        match self.str_or("partition", "iid") {
+            "iid" => Ok(Partition::Iid),
+            "by_label" | "bylabel" => Ok(Partition::ByLabel),
+            other => anyhow::bail!("unknown partition '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_file_and_overrides() {
+        let mut cfg = Config::from_str_cfg(
+            "# experiment\nworkers = 8\nalgorithm=moniqua\nbits=4\n\ntheta=1.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.usize_or("workers", 0).unwrap(), 8);
+        cfg.apply_args(&["--bits".into(), "2".into(), "lr=0.05".into()])
+            .unwrap();
+        assert_eq!(cfg.u64_or("bits", 0).unwrap(), 2);
+        assert_eq!(cfg.f64_or("lr", 0.0).unwrap(), 0.05);
+    }
+
+    #[test]
+    fn flag_without_value_is_true() {
+        let mut cfg = Config::new();
+        cfg.apply_args(&["--verify_hash".into()]).unwrap();
+        assert!(cfg.bool_or("verify_hash", false).unwrap());
+    }
+
+    #[test]
+    fn typed_getters_reject_garbage() {
+        let cfg = Config::from_str_cfg("workers=eight").unwrap();
+        assert!(cfg.usize_or("workers", 1).is_err());
+        let cfg = Config::from_str_cfg("algorithm=nope").unwrap();
+        assert!(cfg.algorithm().is_err());
+    }
+
+    #[test]
+    fn builds_all_algorithms() {
+        for name in [
+            "allreduce", "dpsgd", "naive", "moniqua", "moniqua-slack", "d2",
+            "moniqua-d2", "dcd", "ecd", "choco", "deepsqueeze",
+        ] {
+            let cfg = Config::from_str_cfg(&format!("algorithm={name}")).unwrap();
+            let a = cfg.algorithm().unwrap();
+            assert_eq!(a.name(), name, "{name}");
+        }
+    }
+
+    #[test]
+    fn topology_specs() {
+        let cfg = Config::from_str_cfg("workers=12\ntopology=torus:3x4").unwrap();
+        assert_eq!(cfg.topology().unwrap().n(), 12);
+        let cfg = Config::from_str_cfg("workers=8\ntopology=regular:4").unwrap();
+        assert!(matches!(cfg.topology().unwrap(), Topology::RandomRegular { .. }));
+        let cfg = Config::from_str_cfg("topology=blob").unwrap();
+        assert!(cfg.topology().is_err());
+    }
+
+    #[test]
+    fn network_presets_and_custom() {
+        let cfg = Config::from_str_cfg("network=fig1d").unwrap();
+        assert_eq!(cfg.network().unwrap().unwrap(), NetworkConfig::fig1d());
+        let cfg = Config::from_str_cfg("bandwidth_mbps=50\nlatency_ms=2").unwrap();
+        let net = cfg.network().unwrap().unwrap();
+        assert_eq!(net.bandwidth_bps, 50e6);
+        assert_eq!(net.latency_s, 2e-3);
+        let cfg = Config::from_str_cfg("network=none").unwrap();
+        assert!(cfg.network().unwrap().is_none());
+    }
+
+    #[test]
+    fn theta_auto() {
+        let cfg = Config::from_str_cfg("theta=auto").unwrap();
+        assert!(matches!(
+            cfg.theta_policy().unwrap(),
+            ThetaPolicy::Theorem2 { .. }
+        ));
+    }
+}

@@ -1,0 +1,179 @@
+//! Experiment traces and report serialization (CSV / pretty tables).
+
+use std::io::Write;
+
+/// One logged evaluation point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRow {
+    pub step: u64,
+    /// Simulated wall-clock seconds (local compute + modeled network).
+    pub sim_time_s: f64,
+    pub train_loss: f64,
+    pub eval_loss: f64,
+    pub eval_acc: Option<f64>,
+    /// Max ℓ∞ distance of any local model from the mean — the quantity θ
+    /// must dominate.
+    pub consensus_linf: f64,
+    pub bytes_total: u64,
+    pub theta: Option<f64>,
+}
+
+/// Full result of one training run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub algorithm: String,
+    pub workers: usize,
+    pub dim: usize,
+    pub trace: Vec<TraceRow>,
+    pub total_bytes: u64,
+    pub total_messages: u64,
+    pub extra_memory_floats: usize,
+    pub final_params: Vec<f32>,
+}
+
+impl Report {
+    pub fn new(algorithm: &str, workers: usize, dim: usize) -> Self {
+        Report {
+            algorithm: algorithm.to_string(),
+            workers,
+            dim,
+            trace: Vec::new(),
+            total_bytes: 0,
+            total_messages: 0,
+            extra_memory_floats: 0,
+            final_params: Vec::new(),
+        }
+    }
+
+    pub fn first_loss(&self) -> f64 {
+        self.trace.first().map(|r| r.eval_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.trace.last().map(|r| r.eval_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.trace.last().and_then(|r| r.eval_acc)
+    }
+
+    pub fn final_sim_time(&self) -> f64 {
+        self.trace.last().map(|r| r.sim_time_s).unwrap_or(0.0)
+    }
+
+    /// Earliest simulated time at which eval loss drops below `target`
+    /// (None if never) — the Figure-1 "time to loss" readout.
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.trace
+            .iter()
+            .find(|r| r.eval_loss <= target)
+            .map(|r| r.sim_time_s)
+    }
+
+    /// CSV serialization (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "algorithm,step,sim_time_s,train_loss,eval_loss,eval_acc,consensus_linf,bytes_total,theta\n",
+        );
+        for r in &self.trace {
+            s.push_str(&format!(
+                "{},{},{:.6e},{:.6e},{:.6e},{},{:.6e},{},{}\n",
+                self.algorithm,
+                r.step,
+                r.sim_time_s,
+                r.train_loss,
+                r.eval_loss,
+                r.eval_acc.map_or(String::new(), |a| format!("{a:.4}")),
+                r.consensus_linf,
+                r.bytes_total,
+                r.theta.map_or(String::new(), |t| format!("{t:.4e}")),
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+/// Pretty-print a set of reports as an aligned comparison table (the form
+/// the benches print for each paper table/figure).
+pub fn comparison_table(reports: &[&Report]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<16} {:>12} {:>10} {:>12} {:>14} {:>12}\n",
+        "algorithm", "final_loss", "acc", "sim_time_s", "MB_on_wire", "extra_mem_MB"
+    ));
+    for r in reports {
+        s.push_str(&format!(
+            "{:<16} {:>12.4} {:>10} {:>12.3} {:>14.2} {:>12.3}\n",
+            r.algorithm,
+            r.final_loss(),
+            r.final_accuracy()
+                .map_or("-".to_string(), |a| format!("{:.1}%", 100.0 * a)),
+            r.final_sim_time(),
+            r.total_bytes as f64 / 1e6,
+            r.extra_memory_floats as f64 * 4.0 / 1e6,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(losses: &[f64]) -> Report {
+        let mut r = Report::new("test", 4, 10);
+        for (i, &l) in losses.iter().enumerate() {
+            r.trace.push(TraceRow {
+                step: i as u64,
+                sim_time_s: i as f64 * 0.5,
+                train_loss: l,
+                eval_loss: l,
+                eval_acc: Some(0.9),
+                consensus_linf: 0.01,
+                bytes_total: 100 * i as u64,
+                theta: Some(2.0),
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn loss_accessors() {
+        let r = report_with(&[2.0, 1.0, 0.5]);
+        assert_eq!(r.first_loss(), 2.0);
+        assert_eq!(r.final_loss(), 0.5);
+        assert_eq!(r.final_accuracy(), Some(0.9));
+        assert_eq!(r.time_to_loss(1.0), Some(0.5));
+        assert_eq!(r.time_to_loss(0.1), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = report_with(&[1.0, 0.5]);
+        let csv = r.to_csv();
+        assert!(csv.starts_with("algorithm,step"));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("test,1,"));
+    }
+
+    #[test]
+    fn table_formats_all_reports() {
+        let a = report_with(&[1.0]);
+        let b = report_with(&[0.7]);
+        let t = comparison_table(&[&a, &b]);
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("final_loss"));
+    }
+
+    #[test]
+    fn empty_report_is_nan_not_panic() {
+        let r = Report::new("x", 1, 1);
+        assert!(r.final_loss().is_nan());
+        assert_eq!(r.final_sim_time(), 0.0);
+    }
+}

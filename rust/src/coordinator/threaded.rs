@@ -1,0 +1,186 @@
+//! Real-concurrency gossip runtime: each worker is a `std::thread`
+//! exchanging Moniqua-coded messages over `mpsc` channels.
+//!
+//! The event-driven [`super::AsyncTrainer`] models wall-clock; this runtime
+//! proves the protocol is actually *asynchronous-safe* — no global barrier,
+//! workers make progress at their own pace, messages carry only the packed
+//! codes (plus a tiny header), and recovery uses whatever local model the
+//! receiver has at arrival time (the staleness AD-PSGD's analysis admits).
+//!
+//! tokio is unavailable offline; std threads + channels express the same
+//! structure.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+use crate::objectives::Objective;
+use crate::quant::{packing, MoniquaCodec, QuantConfig};
+use crate::rng::Pcg64;
+use crate::topology::Topology;
+
+/// A gossip message: packed Moniqua codes of the sender's model.
+struct GossipMsg {
+    #[allow(dead_code)] // diagnostic field (printed when debugging protocol issues)
+    from: usize,
+    round: u64,
+    payload: Vec<u8>,
+}
+
+/// Result per worker thread.
+#[derive(Clone, Debug)]
+pub struct WorkerResult {
+    pub worker: usize,
+    pub steps: u64,
+    pub final_params: Vec<f32>,
+    pub bytes_sent: u64,
+    pub msgs_received: u64,
+}
+
+/// Configuration for the threaded run.
+#[derive(Clone)]
+pub struct ThreadedConfig {
+    pub topo: Topology,
+    pub steps: u64,
+    pub lr: f32,
+    pub theta: f32,
+    pub quant: QuantConfig,
+    pub seed: u64,
+}
+
+/// Run decentralized asynchronous Moniqua training with one OS thread per
+/// worker. Returns per-worker results (params should be near consensus).
+pub fn run_threaded(cfg: ThreadedConfig, objective: &dyn Objective) -> Vec<WorkerResult> {
+    let n = cfg.topo.n();
+    let d = objective.dim();
+    let adj = cfg.topo.adjacency();
+    let init = objective.init();
+
+    // channel mesh: txs[i] sends to worker i's inbox
+    let mut txs: Vec<Sender<GossipMsg>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Option<Receiver<GossipMsg>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+    let start = Arc::new(Barrier::new(n));
+
+    let mut handles = Vec::with_capacity(n);
+    for w in 0..n {
+        let rx = rxs[w].take().unwrap();
+        let peers: Vec<(usize, Sender<GossipMsg>)> = adj[w]
+            .iter()
+            .map(|&j| (j, txs[j].clone()))
+            .collect();
+        let mut objective = objective.box_clone();
+        let init = init.clone();
+        let cfg = cfg.clone();
+        let start = Arc::clone(&start);
+        handles.push(thread::spawn(move || {
+            let codec = MoniquaCodec::from_theta(cfg.theta, &cfg.quant);
+            let mut x = init;
+            let mut grad = vec![0.0f32; d];
+            let mut codes = vec![0u32; d];
+            let mut noise = vec![0.0f32; d];
+            let mut recover = vec![0.0f32; d];
+            let mut xhat_self = vec![0.0f32; d];
+            let mut rng = Pcg64::new(cfg.seed, w as u64 ^ 0x7EAD);
+            let mut bytes_sent = 0u64;
+            let mut msgs_received = 0u64;
+            start.wait();
+            for step in 0..cfg.steps {
+                // local gradient step
+                objective.loss_grad(w, step, &x, &mut grad);
+                for k in 0..d {
+                    x[k] -= cfg.lr * grad[k];
+                }
+                // encode and push to one random neighbor (async gossip).
+                // NOTE: shared randomness needs a common round index; async
+                // workers don't share one, so each message carries its own
+                // noise seed = (sender, step) and receivers only *decode*
+                // (decoding needs no noise).
+                let mut nrng = Pcg64::new(cfg.seed ^ step, w as u64);
+                nrng.fill_uniform_f32(&mut noise);
+                codec.encode_into(&x, &noise, &mut codes);
+                let payload = packing::pack(&codes, cfg.quant.bits);
+                bytes_sent += payload.len() as u64;
+                let (_, tx) = &peers[rng.below(peers.len() as u64) as usize];
+                // peer may have exited already: ignore send failures.
+                let _ = tx.send(GossipMsg { from: w, round: step, payload });
+
+                // drain inbox; average with whatever arrived (AD-PSGD's
+                // single-edge 1/2 averaging per message)
+                while let Ok(msg) = rx.try_recv() {
+                    msgs_received += 1;
+                    packing::unpack_into(&msg.payload, cfg.quant.bits, &mut codes);
+                    codec.recover_into(&codes, &x, &mut recover);
+                    // self-biased term w.r.t. our own model
+                    let mut srng = Pcg64::new(cfg.seed ^ msg.round, w as u64);
+                    srng.fill_uniform_f32(&mut noise);
+                    codec.local_biased_into(&x, &noise, &mut xhat_self);
+                    for k in 0..d {
+                        x[k] += 0.5 * (recover[k] - xhat_self[k]);
+                    }
+                }
+            }
+            WorkerResult {
+                worker: w,
+                steps: cfg.steps,
+                final_params: x,
+                bytes_sent,
+                msgs_received,
+            }
+        }));
+    }
+    drop(txs);
+    let mut results: Vec<WorkerResult> =
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+    results.sort_by_key(|r| r.worker);
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objectives::Quadratic;
+
+    #[test]
+    fn threads_converge_to_consensus_optimum() {
+        let cfg = ThreadedConfig {
+            topo: Topology::Ring(4),
+            steps: 400,
+            lr: 0.1,
+            theta: 2.0,
+            quant: QuantConfig::stochastic(8),
+            seed: 9,
+        };
+        let obj = Quadratic::new(16, 1.0, 0.0, 4, 1); // optimum at 0.5
+        let results = run_threaded(cfg, &obj);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert!(r.bytes_sent > 0);
+            for &v in &r.final_params {
+                assert!((v - 0.5).abs() < 0.1, "worker {} v {v}", r.worker);
+            }
+        }
+        // At least some gossip actually happened.
+        let total_msgs: u64 = results.iter().map(|r| r.msgs_received).sum();
+        assert!(total_msgs > 100, "msgs {total_msgs}");
+    }
+
+    #[test]
+    fn no_deadlock_on_star_topology() {
+        let cfg = ThreadedConfig {
+            topo: Topology::Star(5),
+            steps: 50,
+            lr: 0.05,
+            theta: 2.0,
+            quant: QuantConfig::stochastic(4),
+            seed: 2,
+        };
+        let obj = Quadratic::new(8, 1.0, 0.0, 5, 1);
+        let results = run_threaded(cfg, &obj);
+        assert_eq!(results.len(), 5);
+    }
+}

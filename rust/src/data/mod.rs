@@ -1,0 +1,171 @@
+//! Synthetic datasets and decentralized partitioning.
+//!
+//! Substitutes for CIFAR10 (DESIGN.md §Hardware-Adaptation): a Gaussian
+//! mixture classification task with the same *mechanism* the paper's
+//! experiments exercise — in particular the D² experiment's "one exclusive
+//! label per worker" split that maximizes the outer variance ς².
+
+pub mod corpus;
+pub mod partition;
+
+use crate::rng::Pcg64;
+
+/// One labeled example (dense features).
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub x: Vec<f32>,
+    pub label: usize,
+}
+
+/// A classification dataset: k Gaussian blobs in R^dim.
+#[derive(Clone, Debug)]
+pub struct SynthClassification {
+    pub dim: usize,
+    pub classes: usize,
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+/// Generation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthSpec {
+    pub dim: usize,
+    pub classes: usize,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    /// Distance of class means from the origin (separability).
+    pub mean_scale: f32,
+    /// Within-class standard deviation.
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            dim: 32,
+            classes: 10,
+            train_per_class: 200,
+            test_per_class: 40,
+            mean_scale: 2.0,
+            noise: 1.0,
+            seed: 1234,
+        }
+    }
+}
+
+impl SynthClassification {
+    pub fn generate(spec: SynthSpec) -> Self {
+        let mut rng = Pcg64::new(spec.seed, 0xDA7A);
+        // Class means: random unit-ish directions scaled by mean_scale.
+        let means: Vec<Vec<f32>> = (0..spec.classes)
+            .map(|_| {
+                let v: Vec<f32> =
+                    (0..spec.dim).map(|_| rng.next_gaussian() as f32).collect();
+                let norm = crate::linalg::norm2(&v) as f32;
+                v.iter().map(|&x| x / norm * spec.mean_scale).collect()
+            })
+            .collect();
+        let gen_split = |per_class: usize, rng: &mut Pcg64| {
+            let mut out = Vec::with_capacity(per_class * spec.classes);
+            for (label, mean) in means.iter().enumerate() {
+                for _ in 0..per_class {
+                    let x: Vec<f32> = mean
+                        .iter()
+                        .map(|&m| m + rng.next_gaussian() as f32 * spec.noise)
+                        .collect();
+                    out.push(Example { x, label });
+                }
+            }
+            rng.shuffle(&mut out);
+            out
+        };
+        let train = gen_split(spec.train_per_class, &mut rng);
+        let test = gen_split(spec.test_per_class, &mut rng);
+        SynthClassification { dim: spec.dim, classes: spec.classes, train, test }
+    }
+
+    /// Default dataset used in examples/benches.
+    pub fn default_dataset() -> Self {
+        Self::generate(SynthSpec::default())
+    }
+}
+
+impl Default for SynthClassification {
+    fn default() -> Self {
+        Self::default_dataset()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_sizes() {
+        let ds = SynthClassification::generate(SynthSpec {
+            classes: 3,
+            train_per_class: 10,
+            test_per_class: 4,
+            ..SynthSpec::default()
+        });
+        assert_eq!(ds.train.len(), 30);
+        assert_eq!(ds.test.len(), 12);
+        assert!(ds.train.iter().all(|e| e.x.len() == ds.dim && e.label < 3));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = SynthClassification::generate(SynthSpec::default());
+        let b = SynthClassification::generate(SynthSpec::default());
+        assert_eq!(a.train[0].x, b.train[0].x);
+        assert_eq!(a.train[7].label, b.train[7].label);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // A nearest-class-mean classifier should beat chance comfortably.
+        let ds = SynthClassification::generate(SynthSpec {
+            mean_scale: 3.0,
+            noise: 0.8,
+            ..SynthSpec::default()
+        });
+        // Estimate class means from train.
+        let mut means = vec![vec![0.0f64; ds.dim]; ds.classes];
+        let mut counts = vec![0usize; ds.classes];
+        for e in &ds.train {
+            for (m, &x) in means[e.label].iter_mut().zip(&e.x) {
+                *m += x as f64;
+            }
+            counts[e.label] += 1;
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f64;
+            }
+        }
+        let mut correct = 0;
+        for e in &ds.test {
+            let pred = (0..ds.classes)
+                .min_by(|&a, &b| {
+                    let da: f64 = means[a]
+                        .iter()
+                        .zip(&e.x)
+                        .map(|(m, &x)| (m - x as f64).powi(2))
+                        .sum();
+                    let db: f64 = means[b]
+                        .iter()
+                        .zip(&e.x)
+                        .map(|(m, &x)| (m - x as f64).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == e.label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.test.len() as f64;
+        assert!(acc > 0.5, "nearest-mean accuracy {acc}");
+    }
+}

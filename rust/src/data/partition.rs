@@ -1,0 +1,170 @@
+//! Dataset partitioning across workers.
+//!
+//! `Iid` shuffles examples uniformly — D-PSGD's assumption (A3) with small
+//! outer variance ς². `ByLabel` gives each worker exclusive classes — the D²
+//! experiment's setup (Figure 2a) that *maximizes* ς² and breaks D-PSGD.
+
+use super::Example;
+use crate::rng::Pcg64;
+
+/// How to split a dataset across n workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Uniform random split (identical distributions).
+    Iid,
+    /// Worker i receives only classes ≡ i (mod n): maximal outer variance.
+    ByLabel,
+}
+
+impl Partition {
+    /// Produce per-worker index lists into `examples`.
+    pub fn split(
+        &self,
+        examples: &[Example],
+        n_workers: usize,
+        seed: u64,
+    ) -> Vec<Vec<usize>> {
+        assert!(n_workers > 0);
+        let mut shards = vec![Vec::new(); n_workers];
+        match self {
+            Partition::Iid => {
+                let mut idx: Vec<usize> = (0..examples.len()).collect();
+                Pcg64::new(seed, 0x5011).shuffle(&mut idx);
+                for (k, i) in idx.into_iter().enumerate() {
+                    shards[k % n_workers].push(i);
+                }
+            }
+            Partition::ByLabel => {
+                for (i, e) in examples.iter().enumerate() {
+                    shards[e.label % n_workers].push(i);
+                }
+            }
+        }
+        shards
+    }
+
+    /// Outer-variance proxy: mean squared distance between per-worker label
+    /// histograms and the global histogram. 0 for perfectly IID shards.
+    pub fn label_skew(examples: &[Example], shards: &[Vec<usize>], classes: usize) -> f64 {
+        let n = shards.len();
+        let mut global = vec![0.0f64; classes];
+        for e in examples {
+            global[e.label] += 1.0;
+        }
+        let total: f64 = global.iter().sum();
+        for g in global.iter_mut() {
+            *g /= total;
+        }
+        let mut skew = 0.0;
+        for shard in shards {
+            if shard.is_empty() {
+                continue;
+            }
+            let mut hist = vec![0.0f64; classes];
+            for &i in shard {
+                hist[examples[i].label] += 1.0;
+            }
+            let t: f64 = hist.iter().sum();
+            for h in hist.iter_mut() {
+                *h /= t;
+            }
+            skew += hist
+                .iter()
+                .zip(&global)
+                .map(|(h, g)| (h - g).powi(2))
+                .sum::<f64>();
+        }
+        skew / n as f64
+    }
+}
+
+/// Per-worker mini-batch sampler over a shard (with-replacement sampling,
+/// matching the stochastic-gradient model of the analysis).
+#[derive(Clone, Debug)]
+pub struct ShardSampler {
+    shard: Vec<usize>,
+    rng: Pcg64,
+}
+
+impl ShardSampler {
+    pub fn new(shard: Vec<usize>, seed: u64, worker: usize) -> Self {
+        assert!(!shard.is_empty(), "worker {worker} got an empty shard");
+        ShardSampler { shard, rng: Pcg64::new(seed, 0xBA7C ^ worker as u64) }
+    }
+
+    pub fn sample_batch(&mut self, batch: usize) -> Vec<usize> {
+        (0..batch)
+            .map(|_| self.shard[self.rng.below(self.shard.len() as u64) as usize])
+            .collect()
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.shard.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{SynthClassification, SynthSpec};
+
+    fn dataset() -> SynthClassification {
+        SynthClassification::generate(SynthSpec {
+            classes: 10,
+            train_per_class: 50,
+            test_per_class: 5,
+            ..SynthSpec::default()
+        })
+    }
+
+    #[test]
+    fn iid_split_covers_everything_evenly() {
+        let ds = dataset();
+        let shards = Partition::Iid.split(&ds.train, 8, 1);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, ds.train.len());
+        let min = shards.iter().map(|s| s.len()).min().unwrap();
+        let max = shards.iter().map(|s| s.len()).max().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn by_label_is_exclusive() {
+        let ds = dataset();
+        let shards = Partition::ByLabel.split(&ds.train, 10, 1);
+        for (w, shard) in shards.iter().enumerate() {
+            assert!(!shard.is_empty());
+            for &i in shard {
+                assert_eq!(ds.train[i].label % 10, w);
+            }
+        }
+    }
+
+    #[test]
+    fn by_label_has_higher_skew_than_iid() {
+        let ds = dataset();
+        let iid = Partition::Iid.split(&ds.train, 10, 1);
+        let byl = Partition::ByLabel.split(&ds.train, 10, 1);
+        let s_iid = Partition::label_skew(&ds.train, &iid, ds.classes);
+        let s_byl = Partition::label_skew(&ds.train, &byl, ds.classes);
+        assert!(s_byl > 10.0 * s_iid, "skew iid={s_iid} bylabel={s_byl}");
+    }
+
+    #[test]
+    fn sampler_samples_only_from_shard() {
+        let ds = dataset();
+        let shards = Partition::ByLabel.split(&ds.train, 10, 1);
+        let mut s = ShardSampler::new(shards[3].clone(), 42, 3);
+        for i in s.sample_batch(64) {
+            assert_eq!(ds.train[i].label % 10, 3);
+        }
+    }
+
+    #[test]
+    fn sampler_deterministic_per_seed() {
+        let shard: Vec<usize> = (0..100).collect();
+        let mut a = ShardSampler::new(shard.clone(), 7, 0);
+        let mut b = ShardSampler::new(shard, 7, 0);
+        assert_eq!(a.sample_batch(32), b.sample_batch(32));
+    }
+}

@@ -1,0 +1,71 @@
+//! # Moniqua — Modulo Quantized Communication in Decentralized SGD
+//!
+//! Full-system reproduction of Lu & De Sa, *Moniqua: Modulo Quantized
+//! Communication in Decentralized SGD* (ICML 2020), as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the decentralized-training coordinator: graph
+//!   topologies and doubly-stochastic communication matrices, the full
+//!   quantizer stack (linear quantizers, bit-packing, the Moniqua modulo
+//!   wrap/unwrap of Lemmas 1–2, entropy coding, θ policies), the paper's
+//!   algorithm plus every baseline it compares against (D-PSGD, DCD/ECD,
+//!   ChocoSGD, DeepSqueeze, D², AD-PSGD, AllReduce), a parametric network
+//!   simulator, and synchronous / asynchronous training runtimes.
+//! * **L2/L1 (python/, build-time only)** — a JAX transformer LM whose MLP
+//!   runs through Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **Runtime bridge** — [`runtime`] loads those artifacts through the
+//!   `xla` crate's PJRT CPU client; Python never runs on the training path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use moniqua::prelude::*;
+//! use moniqua::objectives::Logistic;
+//!
+//! let topo = Topology::ring(8);
+//! let quant = QuantConfig::stochastic(8).with_shared_randomness(true);
+//! let cfg = TrainConfig {
+//!     workers: 8,
+//!     steps: 500,
+//!     lr: 0.1,
+//!     algorithm: Algorithm::Moniqua { theta: ThetaPolicy::Constant(2.0), quant },
+//!     ..TrainConfig::default()
+//! };
+//! let data = Arc::new(SynthClassification::default());
+//! let objective = Box::new(Logistic::new(data, 8, Partition::Iid, 32, 7));
+//! let mut runner = Trainer::new(cfg, topo, objective);
+//! let report = runner.run();
+//! println!("final loss {:.4}", report.final_loss());
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the harnesses that regenerate every figure and table in the paper.
+
+pub mod algorithms;
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod network;
+pub mod objectives;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod topology;
+
+/// Convenience re-exports covering the common public API surface.
+pub mod prelude {
+    pub use crate::algorithms::{Algorithm, ThetaPolicy};
+    pub use crate::coordinator::{
+        AsyncTrainer, Report, TraceRow, TrainConfig, Trainer,
+    };
+    pub use crate::data::{partition::Partition, SynthClassification};
+    pub use crate::network::{NetworkConfig, NetworkModel};
+    pub use crate::objectives::{Objective, ObjectiveKind};
+    pub use crate::quant::{QuantConfig, Rounding};
+    pub use crate::rng::Pcg64;
+    pub use crate::topology::Topology;
+}

@@ -1,0 +1,219 @@
+//! Minimal dense linear algebra used across the crate.
+//!
+//! Everything operates on `&[f32]` / `&mut [f32]` slices so the hot paths
+//! (quantize → average → step) stay allocation-free. A tiny `MatF64` type
+//! backs the communication-matrix math in [`crate::topology`], where f64
+//! precision matters for spectral-gap estimates.
+
+/// `y += a * x` (fused on the training hot path).
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// `y = x` (memcpy wrapper for symmetry).
+#[inline]
+pub fn copy(y: &mut [f32], x: &[f32]) {
+    y.copy_from_slice(x);
+}
+
+/// `y *= a`.
+#[inline]
+pub fn scale(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+/// Dot product in f64 accumulation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+/// Squared L2 norm (f64 accumulation).
+#[inline]
+pub fn norm2_sq(a: &[f32]) -> f64 {
+    a.iter().map(|x| (*x as f64) * (*x as f64)).sum()
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm2(a: &[f32]) -> f64 {
+    norm2_sq(a).sqrt()
+}
+
+/// L∞ norm.
+#[inline]
+pub fn norm_inf(a: &[f32]) -> f32 {
+    a.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// L∞ distance between two vectors — the consensus metric of the paper
+/// (`θ` must upper-bound this for Moniqua's recovery to be exact).
+#[inline]
+pub fn linf_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// Mean of several equal-length vectors into `out`.
+pub fn mean_into(out: &mut [f32], vs: &[&[f32]]) {
+    assert!(!vs.is_empty());
+    out.fill(0.0);
+    for v in vs {
+        axpy(out, 1.0, v);
+    }
+    scale(out, 1.0 / vs.len() as f32);
+}
+
+/// Small dense f64 matrix (row-major) for communication-matrix math.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF64 {
+    pub n: usize,
+    pub m: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(n: usize, m: usize) -> Self {
+        MatF64 { n, m, data: vec![0.0; n * m] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut a = Self::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 1.0;
+        }
+        a
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.m + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    /// `self * v` for a column vector.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        let mut out = vec![0.0; self.n];
+        for i in 0..self.n {
+            let row = self.row(i);
+            out[i] = row.iter().zip(v).map(|(a, b)| a * b).sum();
+        }
+        out
+    }
+
+    /// `self * other`.
+    pub fn matmul(&self, other: &MatF64) -> MatF64 {
+        assert_eq!(self.m, other.n);
+        let mut out = MatF64::zeros(self.n, other.m);
+        for i in 0..self.n {
+            for k in 0..self.m {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.m {
+                    out[(i, j)] += a * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> MatF64 {
+        let mut t = MatF64::zeros(self.m, self.n);
+        for i in 0..self.n {
+            for j in 0..self.m {
+                t[(j, i)] = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.n != self.m {
+            return false;
+        }
+        for i in 0..self.n {
+            for j in (i + 1)..self.m {
+                if (self.at(i, j) - self.at(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatF64 {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.m + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatF64 {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.m + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        assert!((norm2_sq(&y) - 50.0).abs() < 1e-9);
+        assert_eq!(norm_inf(&[-7.0, 2.0]), 7.0);
+        assert_eq!(linf_dist(&[1.0, 5.0], &[2.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn mean_into_averages() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&mut out, &[&a, &b]);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn matvec_matmul_roundtrip() {
+        let mut a = MatF64::zeros(2, 2);
+        a[(0, 0)] = 1.0;
+        a[(0, 1)] = 2.0;
+        a[(1, 0)] = 3.0;
+        a[(1, 1)] = 4.0;
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        let i = MatF64::eye(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(a.transpose().at(0, 1), 3.0);
+        assert!(!a.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn dot_f64_accumulation() {
+        let a = vec![1e-4f32; 10_000];
+        let b = vec![1e-4f32; 10_000];
+        let d = dot(&a, &b);
+        assert!((d - 1e-4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,247 @@
+//! `moniqua` CLI — the launcher.
+//!
+//! ```text
+//! moniqua train    [key=value | --key value]...   synchronous experiment
+//! moniqua async    [...]                          event-driven AD-PSGD
+//! moniqua compare  [...]                          run several algorithms, print table
+//! moniqua info     [...]                          topology/θ/bit-bound diagnostics
+//! ```
+//!
+//! Common keys: `workers`, `steps`, `lr`, `algorithm` (dpsgd, moniqua,
+//! choco, ...), `bits`, `theta` (number or `auto`), `topology`
+//! (ring/torus:RxC/...), `network` (fig1a..fig1d/fig2b/none),
+//! `objective` (quadratic|logistic|mlp|transformer), `partition`
+//! (iid|by_label), `config` (path to a key=value file), `csv` (output path).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use moniqua::algorithms::AsyncVariant;
+use moniqua::config::Config;
+use moniqua::coordinator::{metrics, AsyncTrainer, TrainConfig, Trainer};
+use moniqua::data::corpus::Corpus;
+use moniqua::data::{SynthClassification, SynthSpec};
+use moniqua::objectives::{Logistic, Mlp, Objective, Quadratic};
+use moniqua::quant::theta::{bits_bound, delta_theorem2, theta_theorem2};
+use moniqua::runtime::{PjrtObjective, Runtime};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: moniqua <train|async|compare|info> [key=value | --key value]...\n\
+         see rust/src/main.rs docs for keys; e.g.\n\
+         moniqua train algorithm=moniqua workers=8 steps=300 bits=8 theta=2.0\n\
+         moniqua compare algorithms=dpsgd,moniqua,choco network=fig1c"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else { usage() };
+    let mut cfg = Config::new();
+    // optional config file first, then CLI overrides
+    let rest: Vec<String> = rest.to_vec();
+    if let Some(pos) = rest.iter().position(|a| a.starts_with("config=")) {
+        cfg = Config::from_file(&rest[pos]["config=".len()..])?;
+    }
+    cfg.apply_args(
+        &rest
+            .iter()
+            .filter(|a| !a.starts_with("config="))
+            .cloned()
+            .collect::<Vec<_>>(),
+    )?;
+
+    match cmd.as_str() {
+        "train" => cmd_train(&cfg),
+        "async" => cmd_async(&cfg),
+        "compare" => cmd_compare(&cfg),
+        "info" => cmd_info(&cfg),
+        _ => usage(),
+    }
+}
+
+fn build_objective(cfg: &Config, workers: usize) -> Result<Box<dyn Objective>> {
+    let seed = cfg.u64_or("seed", 42)?;
+    let partition = cfg.partition()?;
+    Ok(match cfg.str_or("objective", "logistic") {
+        "quadratic" => Box::new(Quadratic::new(
+            cfg.usize_or("dim", 64)?,
+            cfg.f64_or("delta", 1.0)? as f32,
+            cfg.f64_or("sigma", 0.0)? as f32,
+            workers,
+            seed,
+        )),
+        "logistic" => {
+            let data = Arc::new(SynthClassification::generate(SynthSpec {
+                seed,
+                ..SynthSpec::default()
+            }));
+            Box::new(Logistic::new(data, workers, partition, cfg.usize_or("batch", 32)?, seed))
+        }
+        "mlp" => {
+            let data = Arc::new(SynthClassification::generate(SynthSpec {
+                seed,
+                ..SynthSpec::default()
+            }));
+            Box::new(Mlp::new(
+                data,
+                workers,
+                partition,
+                cfg.usize_or("hidden", 32)?,
+                cfg.usize_or("batch", 32)?,
+                seed,
+            ))
+        }
+        "transformer" => {
+            let rt = Runtime::new(cfg.str_or("artifacts", "artifacts"))
+                .context("create PJRT runtime")?;
+            let model = rt.load_model(cfg.str_or("model", "tiny"))?;
+            let corpus = Corpus::synthetic(cfg.usize_or("corpus_tokens", 100_000)?, seed);
+            Box::new(PjrtObjective::new(model, &corpus, workers, seed))
+        }
+        other => anyhow::bail!("unknown objective '{other}'"),
+    })
+}
+
+fn train_config(cfg: &Config) -> Result<TrainConfig> {
+    Ok(TrainConfig {
+        workers: cfg.usize_or("workers", 8)?,
+        steps: cfg.u64_or("steps", 300)?,
+        lr: cfg.f64_or("lr", 0.1)? as f32,
+        decay_factor: cfg.f64_or("decay_factor", 1.0)? as f32,
+        decay_at: cfg
+            .str_or("decay_at", "")
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().context("decay_at"))
+            .collect::<Result<_>>()?,
+        algorithm: cfg.algorithm()?,
+        network: cfg.network()?,
+        grad_time_s: match cfg.get("grad_time_ms") {
+            Some(v) => Some(v.parse::<f64>()? * 1e-3),
+            None => None,
+        },
+        eval_every: cfg.u64_or("eval_every", 20)?,
+        seed: cfg.u64_or("seed", 42)?,
+    })
+}
+
+fn cmd_train(cfg: &Config) -> Result<()> {
+    let tc = train_config(cfg)?;
+    let topo = cfg.topology()?;
+    let objective = build_objective(cfg, tc.workers)?;
+    println!(
+        "training: algorithm={} workers={} steps={} lr={} topology={topo:?}",
+        tc.algorithm.name(),
+        tc.workers,
+        tc.steps,
+        tc.lr
+    );
+    let mut trainer = Trainer::new(tc, topo, objective);
+    println!("rho = {:.4}", trainer.rho());
+    let report = trainer.run();
+    for row in &report.trace {
+        println!(
+            "step {:>6}  t={:>9.3}s  loss={:<8.4} acc={:<6} consensus={:.3e}  MB={:.2}",
+            row.step,
+            row.sim_time_s,
+            row.eval_loss,
+            row.eval_acc.map_or("-".into(), |a| format!("{:.1}%", a * 100.0)),
+            row.consensus_linf,
+            row.bytes_total as f64 / 1e6
+        );
+    }
+    if let Some(path) = cfg.get("csv") {
+        report.write_csv(path)?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_async(cfg: &Config) -> Result<()> {
+    let workers = cfg.usize_or("workers", 6)?;
+    let topo = cfg.topology()?;
+    let objective = build_objective(cfg, workers)?;
+    let quant = cfg.quant()?;
+    let variant = match cfg.str_or("algorithm", "moniqua") {
+        "adpsgd" | "dpsgd" | "full" => AsyncVariant::FullPrecision,
+        "moniqua" | "moniqua-adpsgd" => AsyncVariant::Moniqua {
+            theta: cfg.f64_or("theta", 2.0)? as f32,
+            quant,
+        },
+        other => anyhow::bail!("async supports adpsgd|moniqua, got '{other}'"),
+    };
+    let mut trainer = AsyncTrainer {
+        topo,
+        objective,
+        variant,
+        network: cfg
+            .network()?
+            .unwrap_or(moniqua::network::NetworkConfig::fig2b()),
+        grad_time_s: cfg.f64_or("grad_time_ms", 5.0)? * 1e-3,
+        straggler: cfg.f64_or("straggler", 0.3)?,
+        lr: cfg.f64_or("lr", 0.1)? as f32,
+        events: cfg.u64_or("events", 2000)?,
+        eval_every: cfg.u64_or("eval_every", 200)?,
+        seed: cfg.u64_or("seed", 42)?,
+    };
+    let report = trainer.run();
+    for row in &report.trace {
+        println!(
+            "event {:>7}  t={:>9.3}s  loss={:<8.4} consensus={:.3e}",
+            row.step, row.sim_time_s, row.eval_loss, row.consensus_linf
+        );
+    }
+    if let Some(path) = cfg.get("csv") {
+        report.write_csv(path)?;
+    }
+    Ok(())
+}
+
+fn cmd_compare(cfg: &Config) -> Result<()> {
+    let names: Vec<String> = cfg
+        .str_or("algorithms", "dpsgd,moniqua,choco,deepsqueeze")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let mut reports = Vec::new();
+    for name in &names {
+        let mut sub = cfg.clone();
+        sub.set("algorithm", name);
+        let tc = train_config(&sub)?;
+        let topo = sub.topology()?;
+        let objective = build_objective(&sub, tc.workers)?;
+        eprintln!("running {name}...");
+        let report = Trainer::new(tc, topo, objective).run();
+        reports.push(report);
+    }
+    println!(
+        "{}",
+        metrics::comparison_table(&reports.iter().collect::<Vec<_>>())
+    );
+    Ok(())
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    let topo = cfg.topology()?;
+    let w = topo.comm_matrix();
+    let rho = w.rho();
+    let n = topo.n();
+    println!("topology: {topo:?}");
+    println!("  workers n = {n}, edges m = {}", topo.edge_count());
+    println!("  rho = {rho:.6}, spectral gap = {:.6}", 1.0 - rho);
+    println!("  t_mix bound = {:.1}", w.t_mix_bound());
+    println!("  phi (min nonzero W entry) = {:.6}", w.min_nonzero());
+    let alpha = cfg.f64_or("lr", 0.1)?;
+    let g_inf = cfg.f64_or("g_inf", 1.0)?;
+    println!("Theorem 2 settings (alpha={alpha}, G_inf={g_inf}):");
+    println!("  theta = {:.6}", theta_theorem2(alpha, g_inf, n, rho));
+    println!("  delta = {:.6}", delta_theorem2(n, rho));
+    println!(
+        "  bits bound = {} bits/param (dimension-free)",
+        bits_bound(n, rho)
+    );
+    Ok(())
+}

@@ -1,0 +1,205 @@
+//! Parametric network model — the substitute for the paper's tc-shaped
+//! GCP links (DESIGN.md §Hardware-Adaptation).
+//!
+//! Figure 1 sweeps bandwidth/latency regimes; what matters for wall-clock
+//! convergence is the per-iteration communication time each algorithm pays.
+//! This module prices messages exactly the way the paper's testbed did:
+//!
+//! * a per-message latency `lat` (propagation + handshake),
+//! * a serialization time `bytes * 8 / bandwidth`,
+//! * gossip exchanges happen in parallel across disjoint links, so a
+//!   synchronous round costs the *max* over workers of their per-round
+//!   send time (all workers talk concurrently, each link at full rate),
+//! * AllReduce is priced as the standard ring-allreduce:
+//!   `2 (n−1) messages of size d/n` plus latency per hop.
+//!
+//! Local computation is priced separately by the coordinator (gradient time
+//! + algorithm-specific *extra local pass* cost, which is how the paper
+//! explains DCD/ECD/Choco/DeepSqueeze lagging Moniqua on fast networks).
+
+/// Link parameters. Defaults correspond to Figure 1(a)'s "fast" network.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkConfig {
+    /// Link bandwidth in bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way message latency in seconds.
+    pub latency_s: f64,
+}
+
+impl NetworkConfig {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0 && latency_s >= 0.0);
+        NetworkConfig { bandwidth_bps, latency_s }
+    }
+
+    /// Figure 1(a): 10 Gbps, 0.05 ms.
+    pub fn fig1a() -> Self {
+        Self::new(10e9, 0.05e-3)
+    }
+
+    /// Figure 1(b): 1 Gbps, 0.05 ms.
+    pub fn fig1b() -> Self {
+        Self::new(1e9, 0.05e-3)
+    }
+
+    /// Figure 1(c): 1 Gbps, 5 ms.
+    pub fn fig1c() -> Self {
+        Self::new(1e9, 5e-3)
+    }
+
+    /// Figure 1(d): 100 Mbps, 20 ms ("extremely poor network").
+    pub fn fig1d() -> Self {
+        Self::new(100e6, 20e-3)
+    }
+
+    /// Figure 2(b)'s AD-PSGD network: 20 Mbps, 0.15 ms.
+    pub fn fig2b() -> Self {
+        Self::new(20e6, 0.15e-3)
+    }
+
+    /// Time to push one message of `bytes` over one link.
+    #[inline]
+    pub fn message_time(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+
+    /// Synchronous gossip round: every worker exchanges `bytes_per_neighbor`
+    /// with each of its neighbors concurrently; links are full-duplex and
+    /// disjoint sends are parallel, so the round costs the slowest worker's
+    /// serialization plus one latency.
+    pub fn gossip_round_time(&self, degree_max: usize, bytes_per_neighbor: usize) -> f64 {
+        if degree_max == 0 {
+            return 0.0;
+        }
+        self.latency_s + degree_max as f64 * (bytes_per_neighbor as f64 * 8.0) / self.bandwidth_bps
+    }
+
+    /// Ring-allreduce on `n` workers over a payload of `total_bytes`:
+    /// `2(n−1)` phases, each moving `total_bytes/n` and paying latency.
+    pub fn allreduce_time(&self, n: usize, total_bytes: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let phases = 2 * (n - 1);
+        let chunk = total_bytes as f64 / n as f64;
+        phases as f64 * (self.latency_s + chunk * 8.0 / self.bandwidth_bps)
+    }
+}
+
+/// A network model bound to a worker count, tracking cumulative traffic.
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    pub cfg: NetworkConfig,
+    /// Total payload bytes ever charged (all links).
+    pub total_bytes: u64,
+    /// Total messages charged.
+    pub total_messages: u64,
+}
+
+impl NetworkModel {
+    pub fn new(cfg: NetworkConfig) -> Self {
+        NetworkModel { cfg, total_bytes: 0, total_messages: 0 }
+    }
+
+    /// Charge a synchronous gossip round over a topology with max degree
+    /// `deg_max` where each worker sends `bytes` to each neighbor; returns
+    /// elapsed simulated time for the round.
+    pub fn charge_gossip_round(
+        &mut self,
+        n_workers: usize,
+        deg_sum: usize,
+        deg_max: usize,
+        bytes_per_msg: usize,
+    ) -> f64 {
+        let msgs = deg_sum as u64; // directed messages = sum of degrees
+        self.total_messages += msgs;
+        self.total_bytes += msgs * bytes_per_msg as u64;
+        let _ = n_workers;
+        self.cfg.gossip_round_time(deg_max, bytes_per_msg)
+    }
+
+    /// Charge one point-to-point message (AD-PSGD event).
+    pub fn charge_message(&mut self, bytes: usize) -> f64 {
+        self.total_messages += 1;
+        self.total_bytes += bytes as u64;
+        self.cfg.message_time(bytes)
+    }
+
+    /// Charge a full allreduce.
+    pub fn charge_allreduce(&mut self, n: usize, total_bytes: usize) -> f64 {
+        if n > 1 {
+            // Each of n workers sends 2(n−1) chunks of total/n bytes:
+            // aggregate bytes on the wire = 2 (n−1) · total_bytes.
+            self.total_messages += (2 * (n - 1) * n) as u64;
+            self.total_bytes += 2 * (n as u64 - 1) * total_bytes as u64;
+        }
+        self.cfg.allreduce_time(n, total_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_time_components() {
+        let net = NetworkConfig::new(8e6, 1e-3); // 1 MB/s
+        // 1000 bytes = 8000 bits -> 1 ms serialization + 1 ms latency.
+        assert!((net.message_time(1000) - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig1_configs_ordered_by_quality() {
+        let a = NetworkConfig::fig1a().message_time(125_000);
+        let b = NetworkConfig::fig1b().message_time(125_000);
+        let c = NetworkConfig::fig1c().message_time(125_000);
+        let d = NetworkConfig::fig1d().message_time(125_000);
+        assert!(a < b && b < c && c < d, "{a} {b} {c} {d}");
+    }
+
+    #[test]
+    fn gossip_parallelism() {
+        let net = NetworkConfig::new(1e9, 0.0);
+        // Degree 2 costs twice the serialization of degree 1, regardless of n.
+        let t1 = net.gossip_round_time(1, 1_000_000);
+        let t2 = net.gossip_round_time(2, 1_000_000);
+        assert!((t2 - 2.0 * t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_scales_with_n_latency() {
+        let net = NetworkConfig::new(1e9, 10e-3); // latency-dominated
+        let t4 = net.allreduce_time(4, 1000);
+        let t8 = net.allreduce_time(8, 1000);
+        // 2(n-1) latency hops: 6 vs 14 (small bandwidth term allowed).
+        assert!((t8 / t4 - 14.0 / 6.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn allreduce_bandwidth_term_nearly_constant_in_n() {
+        let net = NetworkConfig::new(1e6, 0.0);
+        let t4 = net.allreduce_time(4, 1_000_000);
+        let t16 = net.allreduce_time(16, 1_000_000);
+        // 2(n-1)/n -> 2; ratio t16/t4 = (30/16)/(6/4) = 1.25
+        assert!((t16 / t4 - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_accumulates_traffic() {
+        let mut m = NetworkModel::new(NetworkConfig::fig1b());
+        m.charge_message(100);
+        m.charge_gossip_round(8, 16, 2, 50);
+        assert_eq!(m.total_messages, 17);
+        assert_eq!(m.total_bytes, 100 + 16 * 50);
+    }
+
+    #[test]
+    fn quantization_shrinks_round_time_proportionally() {
+        // 8-bit vs 32-bit payload on a bandwidth-dominated link: 4x faster.
+        let net = NetworkConfig::new(1e8, 0.0);
+        let d = 100_000;
+        let full = net.gossip_round_time(2, d * 4);
+        let q8 = net.gossip_round_time(2, d);
+        assert!((full / q8 - 4.0).abs() < 1e-9);
+    }
+}

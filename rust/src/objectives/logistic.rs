@@ -1,0 +1,246 @@
+//! Multiclass logistic regression (softmax) on a [`SynthClassification`]
+//! dataset — the fast convex-ish workload behind the Figure-1/Table-2
+//! sweeps. Convex, so convergence differences between algorithms are purely
+//! communication effects.
+
+use std::sync::Arc;
+
+use super::{Eval, Objective};
+use crate::data::partition::{Partition, ShardSampler};
+use crate::data::SynthClassification;
+
+/// Softmax regression: params laid out as [W (classes × dim), b (classes)].
+#[derive(Clone)]
+pub struct Logistic {
+    data: Arc<SynthClassification>,
+    samplers: Vec<ShardSampler>,
+    pub batch: usize,
+    pub l2: f32,
+    n_workers: usize,
+}
+
+impl Logistic {
+    pub fn new(
+        data: Arc<SynthClassification>,
+        n_workers: usize,
+        partition: Partition,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let shards = partition.split(&data.train, n_workers, seed);
+        let samplers = shards
+            .into_iter()
+            .enumerate()
+            .map(|(w, shard)| ShardSampler::new(shard, seed, w))
+            .collect();
+        Logistic { data, samplers, batch, l2: 1e-4, n_workers }
+    }
+
+    #[inline]
+    fn classes(&self) -> usize {
+        self.data.classes
+    }
+
+    #[inline]
+    fn feat(&self) -> usize {
+        self.data.dim
+    }
+
+    /// logits[c] = W[c]·x + b[c]; returns (loss, softmax probs) for one
+    /// example, accumulating gradient into `grad`.
+    fn example_pass(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        label: usize,
+        grad: Option<&mut [f32]>,
+    ) -> (f64, usize) {
+        let c = self.classes();
+        let d = self.feat();
+        let mut logits = vec![0.0f64; c];
+        for k in 0..c {
+            let w = &params[k * d..(k + 1) * d];
+            let b = params[c * d + k];
+            logits[k] = w
+                .iter()
+                .zip(x)
+                .map(|(wi, xi)| (*wi as f64) * (*xi as f64))
+                .sum::<f64>()
+                + b as f64;
+        }
+        let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|&l| (l - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let loss = -(exps[label] / z).ln();
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if let Some(grad) = grad {
+            for k in 0..c {
+                let p = exps[k] / z;
+                let err = (p - if k == label { 1.0 } else { 0.0 }) as f32;
+                let gw = &mut grad[k * d..(k + 1) * d];
+                for (g, &xi) in gw.iter_mut().zip(x) {
+                    *g += err * xi;
+                }
+                grad[c * d + k] += err;
+            }
+        }
+        (loss, argmax)
+    }
+}
+
+impl Objective for Logistic {
+    fn dim(&self) -> usize {
+        self.classes() * self.feat() + self.classes()
+    }
+
+    fn init(&self) -> Vec<f32> {
+        vec![0.0; self.dim()]
+    }
+
+    fn loss_grad(&mut self, worker: usize, _step: u64, params: &[f32], grad: &mut [f32]) -> f64 {
+        let idx = self.samplers[worker].sample_batch(self.batch);
+        grad.fill(0.0);
+        let mut loss = 0.0;
+        for &i in &idx {
+            let ex = &self.data.train[i];
+            let (l, _) = self.example_pass(params, &ex.x, ex.label, Some(grad));
+            loss += l;
+        }
+        let inv = 1.0 / idx.len() as f32;
+        for (g, &p) in grad.iter_mut().zip(params) {
+            *g = *g * inv + self.l2 * p;
+        }
+        loss / idx.len() as f64
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Eval {
+        let mut loss = 0.0;
+        let mut correct = 0usize;
+        for ex in &self.data.test {
+            let (l, pred) = self.example_pass(params, &ex.x, ex.label, None);
+            loss += l;
+            if pred == ex.label {
+                correct += 1;
+            }
+        }
+        let n = self.data.test.len() as f64;
+        Eval { loss: loss / n, accuracy: Some(correct as f64 / n) }
+    }
+
+    fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn box_clone(&self) -> Box<dyn Objective> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+
+    fn small() -> Logistic {
+        let data = Arc::new(SynthClassification::generate(SynthSpec {
+            dim: 8,
+            classes: 4,
+            train_per_class: 50,
+            test_per_class: 20,
+            ..SynthSpec::default()
+        }));
+        Logistic::new(data, 2, Partition::Iid, 16, 7)
+    }
+
+    #[test]
+    fn dim_layout() {
+        let o = small();
+        assert_eq!(o.dim(), 4 * 8 + 4);
+        assert_eq!(o.init().len(), o.dim());
+    }
+
+    #[test]
+    fn initial_loss_is_log_classes() {
+        let mut o = small();
+        let e = o.eval(&o.init());
+        assert!((e.loss - (4.0f64).ln()).abs() < 1e-9);
+        let acc = e.accuracy.unwrap();
+        assert!(acc < 0.6); // chance-ish at init
+    }
+
+    #[test]
+    fn sgd_learns() {
+        let mut o = small();
+        let mut x = o.init();
+        let mut g = vec![0.0; o.dim()];
+        for step in 0..300 {
+            o.loss_grad(0, step, &x, &mut g);
+            for (xi, gi) in x.iter_mut().zip(&g) {
+                *xi -= 0.3 * gi;
+            }
+        }
+        let e = o.eval(&x);
+        assert!(e.loss < 1.0, "loss {}", e.loss);
+        assert!(e.accuracy.unwrap() > 0.7, "acc {:?}", e.accuracy);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let o = small();
+        // Use eval-style deterministic loss: reuse loss_grad on a fixed
+        // batch by seeding the same step; instead check on full test pass.
+        let mut x = o.init();
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i % 13) as f32 - 6.0) * 0.05;
+        }
+        // deterministic "batch" = entire train set via manual accumulation
+        let mut grad = vec![0.0f32; o.dim()];
+        let mut loss = 0.0f64;
+        for ex in o.data.train.iter() {
+            let (l, _) = o.example_pass(&x, &ex.x, ex.label, Some(&mut grad));
+            loss += l;
+        }
+        let n = o.data.train.len() as f32;
+        for g in grad.iter_mut() {
+            *g /= n;
+        }
+        let _ = loss;
+        let f = |params: &[f32], o: &Logistic| -> f64 {
+            let mut s = 0.0;
+            for ex in o.data.train.iter() {
+                let (l, _) = o.example_pass(params, &ex.x, ex.label, None);
+                s += l;
+            }
+            s / o.data.train.len() as f64
+        };
+        let eps = 1e-3;
+        for &i in &[0usize, 5, 17, o.dim() - 1] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (f(&xp, &o) - f(&xm, &o)) / (2.0 * eps as f64);
+            assert!(
+                (num - grad[i] as f64).abs() < 1e-3,
+                "i={i} num={num} ana={}",
+                grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn workers_sample_their_own_shards() {
+        let mut o = small();
+        let x = o.init();
+        let mut g0 = vec![0.0; o.dim()];
+        let mut g1 = vec![0.0; o.dim()];
+        o.loss_grad(0, 0, &x, &mut g0);
+        o.loss_grad(1, 0, &x, &mut g1);
+        assert_ne!(g0, g1);
+    }
+}

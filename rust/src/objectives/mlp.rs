@@ -1,0 +1,270 @@
+//! One-hidden-layer MLP with manual backprop — the non-convex pure-Rust
+//! stand-in for the paper's ResNet workloads (DESIGN.md §Hardware-
+//! Adaptation). tanh hidden layer + softmax output; params flat as
+//! [W1 (h×d), b1 (h), W2 (c×h), b2 (c)].
+
+use std::sync::Arc;
+
+use super::{Eval, Objective};
+use crate::data::partition::{Partition, ShardSampler};
+use crate::data::SynthClassification;
+
+#[derive(Clone)]
+pub struct Mlp {
+    data: Arc<SynthClassification>,
+    samplers: Vec<ShardSampler>,
+    pub hidden: usize,
+    pub batch: usize,
+    pub l2: f32,
+    n_workers: usize,
+    init_seed: u64,
+}
+
+impl Mlp {
+    pub fn new(
+        data: Arc<SynthClassification>,
+        n_workers: usize,
+        partition: Partition,
+        hidden: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let shards = partition.split(&data.train, n_workers, seed);
+        let samplers = shards
+            .into_iter()
+            .enumerate()
+            .map(|(w, s)| ShardSampler::new(s, seed ^ 0x317, w))
+            .collect();
+        Mlp { data, samplers, hidden, batch, l2: 1e-4, n_workers, init_seed: seed }
+    }
+
+    #[inline]
+    fn d(&self) -> usize {
+        self.data.dim
+    }
+
+    #[inline]
+    fn c(&self) -> usize {
+        self.data.classes
+    }
+
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        let w1 = 0;
+        let b1 = w1 + h * d;
+        let w2 = b1 + h;
+        let b2 = w2 + c * h;
+        (w1, b1, w2, b2)
+    }
+
+    /// Forward + optional backward for one example. Returns (loss, argmax).
+    fn example_pass(
+        &self,
+        p: &[f32],
+        x: &[f32],
+        label: usize,
+        grad: Option<&mut [f32]>,
+    ) -> (f64, usize) {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        let (w1, b1, w2, b2) = self.offsets();
+        // hidden pre-activation + tanh
+        let mut a = vec![0.0f32; h];
+        for j in 0..h {
+            let row = &p[w1 + j * d..w1 + (j + 1) * d];
+            let mut s = p[b1 + j];
+            for (wi, xi) in row.iter().zip(x) {
+                s += wi * xi;
+            }
+            a[j] = s.tanh();
+        }
+        // output logits
+        let mut logits = vec![0.0f64; c];
+        for k in 0..c {
+            let row = &p[w2 + k * h..w2 + (k + 1) * h];
+            let mut s = p[b2 + k] as f64;
+            for (wi, ai) in row.iter().zip(&a) {
+                s += (*wi as f64) * (*ai as f64);
+            }
+            logits[k] = s;
+        }
+        let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = logits.iter().map(|&l| (l - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let loss = -(exps[label] / z).ln();
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|u, v| u.1.partial_cmp(v.1).unwrap())
+            .unwrap()
+            .0;
+        if let Some(g) = grad {
+            // dL/dlogit_k = p_k - 1{k=label}
+            let mut dh = vec![0.0f32; h];
+            for k in 0..c {
+                let err = (exps[k] / z - if k == label { 1.0 } else { 0.0 }) as f32;
+                let row = &p[w2 + k * h..w2 + (k + 1) * h];
+                let grow = &mut g[w2 + k * h..w2 + (k + 1) * h];
+                for j in 0..h {
+                    grow[j] += err * a[j];
+                    dh[j] += err * row[j];
+                }
+                g[b2 + k] += err;
+            }
+            for j in 0..h {
+                let da = dh[j] * (1.0 - a[j] * a[j]); // tanh'
+                let grow = &mut g[w1 + j * d..w1 + (j + 1) * d];
+                for (gi, &xi) in grow.iter_mut().zip(x) {
+                    *gi += da * xi;
+                }
+                g[b1 + j] += da;
+            }
+        }
+        (loss, argmax)
+    }
+}
+
+impl Objective for Mlp {
+    fn dim(&self) -> usize {
+        let (d, h, c) = (self.d(), self.hidden, self.c());
+        h * d + h + c * h + c
+    }
+
+    fn init(&self) -> Vec<f32> {
+        // Same init on every worker (assumption A4): seeded Xavier-ish.
+        let mut rng = crate::rng::Pcg64::new(self.init_seed, 0x1417);
+        let (d, h, _c) = (self.d(), self.hidden, self.c());
+        let (w1, b1, w2, b2) = self.offsets();
+        let mut p = vec![0.0f32; self.dim()];
+        let s1 = (1.0 / d as f32).sqrt();
+        for v in p[w1..b1].iter_mut() {
+            *v = rng.next_gaussian() as f32 * s1;
+        }
+        let s2 = (1.0 / h as f32).sqrt();
+        for v in p[w2..b2].iter_mut() {
+            *v = rng.next_gaussian() as f32 * s2;
+        }
+        p
+    }
+
+    fn loss_grad(&mut self, worker: usize, _step: u64, params: &[f32], grad: &mut [f32]) -> f64 {
+        let idx = self.samplers[worker].sample_batch(self.batch);
+        grad.fill(0.0);
+        let mut loss = 0.0;
+        for &i in &idx {
+            let ex = &self.data.train[i];
+            let (l, _) = self.example_pass(params, &ex.x, ex.label, Some(grad));
+            loss += l;
+        }
+        let inv = 1.0 / idx.len() as f32;
+        for (g, &p) in grad.iter_mut().zip(params) {
+            *g = *g * inv + self.l2 * p;
+        }
+        loss / idx.len() as f64
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Eval {
+        let mut loss = 0.0;
+        let mut correct = 0usize;
+        for ex in &self.data.test {
+            let (l, pred) = self.example_pass(params, &ex.x, ex.label, None);
+            loss += l;
+            if pred == ex.label {
+                correct += 1;
+            }
+        }
+        let n = self.data.test.len() as f64;
+        Eval { loss: loss / n, accuracy: Some(correct as f64 / n) }
+    }
+
+    fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn box_clone(&self) -> Box<dyn Objective> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+
+    fn small() -> Mlp {
+        let data = Arc::new(SynthClassification::generate(SynthSpec {
+            dim: 8,
+            classes: 4,
+            train_per_class: 60,
+            test_per_class: 20,
+            mean_scale: 2.5,
+            ..SynthSpec::default()
+        }));
+        Mlp::new(data, 2, Partition::Iid, 16, 16, 3)
+    }
+
+    #[test]
+    fn dim_and_init() {
+        let o = small();
+        assert_eq!(o.dim(), 16 * 8 + 16 + 4 * 16 + 4);
+        let p = o.init();
+        assert_eq!(p.len(), o.dim());
+        // biases zero
+        let (_, b1, _, _) = o.offsets();
+        assert_eq!(p[b1], 0.0);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let o = small();
+        let mut p = o.init();
+        for (i, v) in p.iter_mut().enumerate() {
+            *v += ((i % 7) as f32 - 3.0) * 0.01;
+        }
+        let ex = &o.data.train[0];
+        let mut g = vec![0.0f32; o.dim()];
+        o.example_pass(&p, &ex.x, ex.label, Some(&mut g));
+        let f = |p: &[f32]| o.example_pass(p, &ex.x, ex.label, None).0;
+        let eps = 1e-3;
+        for &i in &[0usize, 33, 100, o.dim() - 1] {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let mut pm = p.clone();
+            pm[i] -= eps;
+            let num = (f(&pp) - f(&pm)) / (2.0 * eps as f64);
+            assert!(
+                (num - g[i] as f64).abs() < 2e-3 * num.abs().max(1.0),
+                "i={i} num={num} ana={}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_learns_nonconvex() {
+        let mut o = small();
+        let mut x = o.init();
+        let mut g = vec![0.0; o.dim()];
+        let l0 = o.eval(&x).loss;
+        for step in 0..400 {
+            o.loss_grad(0, step, &x, &mut g);
+            for (xi, gi) in x.iter_mut().zip(&g) {
+                *xi -= 0.2 * gi;
+            }
+        }
+        let e = o.eval(&x);
+        assert!(e.loss < l0 * 0.7, "loss {} -> {}", l0, e.loss);
+        assert!(e.accuracy.unwrap() > 0.6, "acc {:?}", e.accuracy);
+    }
+
+    #[test]
+    fn box_clone_preserves_behavior() {
+        let mut o = small();
+        let mut o2 = o.box_clone();
+        let x = o.init();
+        let mut g1 = vec![0.0; o.dim()];
+        let mut g2 = vec![0.0; o.dim()];
+        o.loss_grad(0, 0, &x, &mut g1);
+        o2.loss_grad(0, 0, &x, &mut g2);
+        assert_eq!(g1, g2);
+    }
+}

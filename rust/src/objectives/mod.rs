@@ -1,0 +1,76 @@
+//! Training objectives (local loss functions f_i of Eq. 3).
+//!
+//! Every decentralized algorithm in this crate optimizes a [`Objective`]:
+//! a per-worker stochastic `loss_grad` plus a global evaluation. Pure-Rust
+//! objectives ([`Quadratic`], [`Logistic`], [`Mlp`]) power the sweeps and
+//! benches (thousands of steps per second); the PJRT-backed transformer
+//! ([`crate::runtime::PjrtObjective`]) powers the end-to-end driver where
+//! the gradient is computed by the AOT-compiled JAX/Pallas executable.
+
+pub mod logistic;
+pub mod mlp;
+pub mod quadratic;
+
+pub use logistic::Logistic;
+pub use mlp::Mlp;
+pub use quadratic::Quadratic;
+
+/// Evaluation summary on the (global) held-out set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Eval {
+    pub loss: f64,
+    pub accuracy: Option<f64>,
+}
+
+/// A per-worker stochastic objective. Implementations hold the dataset
+/// shards internally; `worker` selects the shard, `step` the mini-batch
+/// (deterministic given the experiment seed).
+pub trait Objective: Send {
+    /// Parameter dimension d.
+    fn dim(&self) -> usize;
+
+    /// Initial parameter vector (identical across workers, assumption A4).
+    fn init(&self) -> Vec<f32>;
+
+    /// Stochastic loss/gradient of worker `worker` at `step`. Writes the
+    /// gradient into `grad` (len = dim) and returns the mini-batch loss.
+    fn loss_grad(&mut self, worker: usize, step: u64, params: &[f32], grad: &mut [f32]) -> f64;
+
+    /// Deterministic evaluation of the *global* objective (test set).
+    fn eval(&mut self, params: &[f32]) -> Eval;
+
+    /// Number of workers the shards were built for.
+    fn workers(&self) -> usize;
+
+    /// Clone into a box (used by the threaded async runtime to give each
+    /// worker thread its own sampler state).
+    fn box_clone(&self) -> Box<dyn Objective>;
+}
+
+impl Clone for Box<dyn Objective> {
+    fn clone(&self) -> Self {
+        self.box_clone()
+    }
+}
+
+/// Identifier used by the CLI / config layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    Quadratic,
+    Logistic,
+    Mlp,
+    Transformer,
+}
+
+impl std::str::FromStr for ObjectiveKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "quadratic" => Ok(Self::Quadratic),
+            "logistic" => Ok(Self::Logistic),
+            "mlp" => Ok(Self::Mlp),
+            "transformer" => Ok(Self::Transformer),
+            other => Err(format!("unknown objective '{other}'")),
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! The quadratic objective of Theorem 1:
+//!
+//! ```text
+//!     f(x) = ½ ‖x − (δ/2)·1‖²
+//! ```
+//!
+//! Its optimum `x* = (δ/2)·1` sits exactly *between* the representable
+//! points of a linear quantizer with step δ — the adversarial construction
+//! that makes naive quantization stall at `E‖∇f‖² ≥ φ²δ²/(8(1+φ²))` while
+//! Moniqua sails through. Optional gradient noise σ models assumption (A3).
+
+use super::{Eval, Objective};
+use crate::rng::worker_rng;
+
+#[derive(Clone, Debug)]
+pub struct Quadratic {
+    pub dim: usize,
+    /// Quantizer step δ of the Theorem 1 construction (optimum at δ/2).
+    pub delta: f32,
+    /// Gradient noise standard deviation σ.
+    pub sigma: f32,
+    pub workers: usize,
+    pub seed: u64,
+    /// Initial point (same for all workers).
+    pub x0: f32,
+}
+
+impl Quadratic {
+    pub fn new(dim: usize, delta: f32, sigma: f32, workers: usize, seed: u64) -> Self {
+        Quadratic { dim, delta, sigma, workers, seed, x0: 1.0 }
+    }
+
+    #[inline]
+    fn opt(&self) -> f32 {
+        self.delta / 2.0
+    }
+}
+
+impl Objective for Quadratic {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init(&self) -> Vec<f32> {
+        vec![self.x0; self.dim]
+    }
+
+    fn loss_grad(&mut self, worker: usize, step: u64, params: &[f32], grad: &mut [f32]) -> f64 {
+        let opt = self.opt();
+        let mut loss = 0.0f64;
+        if self.sigma > 0.0 {
+            let mut rng = worker_rng(self.seed ^ step, worker, 0x60);
+            for (g, &p) in grad.iter_mut().zip(params) {
+                let d = p - opt;
+                loss += 0.5 * (d as f64) * (d as f64);
+                *g = d + rng.next_gaussian() as f32 * self.sigma;
+            }
+        } else {
+            for (g, &p) in grad.iter_mut().zip(params) {
+                let d = p - opt;
+                loss += 0.5 * (d as f64) * (d as f64);
+                *g = d;
+            }
+        }
+        loss
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Eval {
+        let opt = self.opt();
+        let loss: f64 = params
+            .iter()
+            .map(|&p| 0.5 * ((p - opt) as f64).powi(2))
+            .sum();
+        Eval { loss, accuracy: None }
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn box_clone(&self) -> Box<dyn Objective> {
+        Box::new(self.clone())
+    }
+}
+
+/// Exact squared gradient norm at `params` (for the Theorem 1 bench).
+pub fn grad_norm_sq(q: &Quadratic, params: &[f32]) -> f64 {
+    let opt = q.delta / 2.0;
+    params.iter().map(|&p| ((p - opt) as f64).powi(2)).sum()
+}
+
+/// Theorem 1's stall floor `φ²δ²/(8(1+φ²))`.
+pub fn theorem1_floor(phi: f64, delta: f64) -> f64 {
+    phi * phi * delta * delta / (8.0 * (1.0 + phi * phi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_points_at_optimum() {
+        let mut q = Quadratic::new(4, 1.0, 0.0, 2, 1);
+        let params = q.init();
+        let mut grad = vec![0.0; 4];
+        let loss = q.loss_grad(0, 0, &params, &mut grad);
+        // x0 = 1, opt = 0.5: grad = 0.5 each, loss = 4 * 0.125.
+        assert!((loss - 0.5).abs() < 1e-9);
+        assert!(grad.iter().all(|&g| (g - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn gd_converges_without_quantization() {
+        let mut q = Quadratic::new(8, 1.0, 0.0, 1, 1);
+        let mut x = q.init();
+        let mut g = vec![0.0; 8];
+        for step in 0..100 {
+            q.loss_grad(0, step, &x, &mut g);
+            for (xi, gi) in x.iter_mut().zip(&g) {
+                *xi -= 0.5 * gi;
+            }
+        }
+        assert!(q.eval(&x).loss < 1e-12);
+    }
+
+    #[test]
+    fn noise_has_requested_scale() {
+        let mut q = Quadratic::new(10_000, 1.0, 0.3, 1, 7);
+        let x = q.init();
+        let mut g = vec![0.0; 10_000];
+        q.loss_grad(0, 0, &x, &mut g);
+        // grad = 0.5 + noise; sample variance ≈ 0.09.
+        let mean: f64 = g.iter().map(|&v| v as f64).sum::<f64>() / g.len() as f64;
+        let var: f64 =
+            g.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / g.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        assert!((var - 0.09).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn floor_formula() {
+        // φ = 1/3, δ = 1: floor = (1/9)/(8·(10/9)) = 1/80.
+        let f = theorem1_floor(1.0 / 3.0, 1.0);
+        assert!((f - 1.0 / 80.0).abs() < 1e-12);
+    }
+}

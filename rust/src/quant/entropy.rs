@@ -1,0 +1,180 @@
+//! Lossless recompression of packed code streams (paper §6, "use a standard
+//! entropy compressor like bzip to further compress the communicated
+//! tensors").
+//!
+//! Near consensus, the modulo-wrapped values concentrate around 0, so the
+//! high-order bits of each code are heavily redundant; a generic entropy
+//! coder removes them. We expose bzip2 (the paper's choice), DEFLATE
+//! (cheaper), and an in-crate order-0 RLE for dependency-free use; `None`
+//! disables recompression.
+
+use std::io::{Read, Write};
+
+/// Compression codec applied to the packed byte stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    None,
+    /// DEFLATE (flate2), level 6.
+    Deflate,
+    /// bzip2, level 6 — the paper's suggestion.
+    Bzip2,
+    /// In-crate byte-level run-length coding (escape 0xFF).
+    Rle,
+}
+
+impl Compression {
+    pub fn compress(&self, data: &[u8]) -> Vec<u8> {
+        match self {
+            Compression::None => data.to_vec(),
+            Compression::Deflate => {
+                let mut enc = flate2::write::DeflateEncoder::new(
+                    Vec::new(),
+                    flate2::Compression::new(6),
+                );
+                enc.write_all(data).expect("deflate write");
+                enc.finish().expect("deflate finish")
+            }
+            Compression::Bzip2 => {
+                let mut enc = bzip2::write::BzEncoder::new(
+                    Vec::new(),
+                    bzip2::Compression::new(6),
+                );
+                enc.write_all(data).expect("bzip2 write");
+                enc.finish().expect("bzip2 finish")
+            }
+            Compression::Rle => rle_encode(data),
+        }
+    }
+
+    pub fn decompress(&self, data: &[u8]) -> Vec<u8> {
+        match self {
+            Compression::None => data.to_vec(),
+            Compression::Deflate => {
+                let mut dec = flate2::read::DeflateDecoder::new(data);
+                let mut out = Vec::new();
+                dec.read_to_end(&mut out).expect("deflate read");
+                out
+            }
+            Compression::Bzip2 => {
+                let mut dec = bzip2::read::BzDecoder::new(data);
+                let mut out = Vec::new();
+                dec.read_to_end(&mut out).expect("bzip2 read");
+                out
+            }
+            Compression::Rle => rle_decode(data),
+        }
+    }
+
+    /// Wire size for a payload under this codec (compression may *expand*
+    /// incompressible data; the network layer charges the real size).
+    pub fn wire_len(&self, data: &[u8]) -> usize {
+        match self {
+            Compression::None => data.len(),
+            _ => self.compress(data).len(),
+        }
+    }
+}
+
+const RLE_ESCAPE: u8 = 0xFF;
+
+/// Byte RLE: runs of length >= 4 (or any run of the escape byte) are coded
+/// as `ESC, byte, len`; other bytes are literal; a literal escape byte is
+/// `ESC, ESC, 1`.
+fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 8);
+    let mut i = 0;
+    while i < data.len() {
+        let b = data[i];
+        let mut run = 1usize;
+        while i + run < data.len() && data[i + run] == b && run < 254 {
+            run += 1;
+        }
+        if run >= 4 || b == RLE_ESCAPE {
+            out.push(RLE_ESCAPE);
+            out.push(b);
+            out.push(run as u8);
+        } else {
+            for _ in 0..run {
+                out.push(b);
+            }
+        }
+        i += run;
+    }
+    out
+}
+
+fn rle_decode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut i = 0;
+    while i < data.len() {
+        if data[i] == RLE_ESCAPE {
+            assert!(i + 2 < data.len(), "truncated RLE stream");
+            let b = data[i + 1];
+            let run = data[i + 2] as usize;
+            out.extend(std::iter::repeat(b).take(run));
+            i += 3;
+        } else {
+            out.push(data[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    const ALL: [Compression; 4] = [
+        Compression::None,
+        Compression::Deflate,
+        Compression::Bzip2,
+        Compression::Rle,
+    ];
+
+    #[test]
+    fn roundtrip_random_data() {
+        forall(40, |rng| {
+            let n = rng.below(2000) as usize;
+            let data: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            for c in ALL {
+                assert_eq!(c.decompress(&c.compress(&data)), data, "{c:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn roundtrip_runs_and_escapes() {
+        let mut data = vec![7u8; 1000];
+        data.extend([0xFF, 0xFF, 0xFF, 1, 2, 3, 0xFF]);
+        for c in ALL {
+            assert_eq!(c.decompress(&c.compress(&data)), data, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn compressors_shrink_redundant_streams() {
+        // Near-consensus modulo streams: most codes equal -> long runs.
+        let data = vec![128u8; 64 * 1024];
+        for c in [Compression::Deflate, Compression::Bzip2, Compression::Rle] {
+            let z = c.compress(&data);
+            assert!(z.len() < data.len() / 8, "{c:?}: {} bytes", z.len());
+        }
+    }
+
+    #[test]
+    fn wire_len_matches_compressed_len() {
+        let data = vec![5u8; 4096];
+        for c in ALL {
+            assert_eq!(c.wire_len(&data), c.compress(&data).len());
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        for c in ALL {
+            assert_eq!(c.decompress(&c.compress(&[])), Vec::<u8>::new());
+        }
+    }
+}

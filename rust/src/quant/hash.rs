@@ -1,0 +1,150 @@
+//! θ-verification digests (paper §6, third method for choosing θ).
+//!
+//! The sender attaches a 64-bit FNV-1a hash of its **un-modded** quantized
+//! vector (absolute grid codes, before the modulo wrap — "a hash function
+//! that takes the un-modded vector"). The receiver reconstructs the remote
+//! model `x̂` and computes the absolute codes of `x̂` (which sits exactly on
+//! the absolute grid): if the a-priori bound θ held, the wrap count `k` was
+//! recovered correctly and the digests match; if θ was violated, `x̂`
+//! aliased by a multiple of `B_θ` and the digests mismatch with probability
+//! ≈ 1 − 2⁻⁶⁴. The 8-byte overhead is negligible next to the payload.
+
+use super::MoniquaCodec;
+
+/// FNV-1a over i64 absolute codes (little-endian bytes).
+pub fn fnv1a_abs_codes(codes: &[i64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &c in codes {
+        for b in c.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+/// FNV-1a over raw bytes (for packed payloads / message integrity).
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Sender side: absolute (un-modded) codes of `x`:
+/// `c_abs = c_wrapped + L * floor(x/B + 1/2)` — the wrapped code plus the
+/// wrap count, so it identifies the exact absolute grid point quantization
+/// chose.
+pub fn sender_abs_codes(codec: &MoniquaCodec, x: &[f32], noise: &[f32]) -> Vec<i64> {
+    let mut wrapped = vec![0u32; x.len()];
+    codec.encode_into(x, noise, &mut wrapped);
+    let l = codec.quant.levels as i64;
+    let b = codec.b_theta;
+    wrapped
+        .iter()
+        .zip(x)
+        .map(|(&c, &xi)| c as i64 + l * ((xi / b + 0.5).floor() as i64))
+        .collect()
+}
+
+/// Receiver side: absolute codes of a reconstruction `x̂` (which lies
+/// exactly on the absolute grid, so nearest rounding recovers the code).
+pub fn receiver_abs_codes(codec: &MoniquaCodec, xhat: &[f32]) -> Vec<i64> {
+    let l = codec.quant.levels as f64;
+    let b = codec.b_theta as f64;
+    xhat.iter()
+        .map(|&v| ((v as f64 / b + 0.5) * l - 0.5).round() as i64)
+        .collect()
+}
+
+/// Full §6 verification: does the receiver's reconstruction hash to the
+/// sender's digest? `false` flags a violated θ bound.
+pub fn verify_reconstruction(
+    codec: &MoniquaCodec,
+    xhat: &[f32],
+    sender_digest: u64,
+) -> bool {
+    fnv1a_abs_codes(&receiver_abs_codes(codec, xhat)) == sender_digest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{MoniquaCodec, QuantConfig};
+    use crate::testing::{forall, gaussian_vec, uniform};
+
+    #[test]
+    fn digest_is_stable_and_sensitive() {
+        let codes = vec![1i64, 2, -3, 4];
+        assert_eq!(fnv1a_abs_codes(&codes), fnv1a_abs_codes(&codes));
+        let mut other = codes.clone();
+        other[2] ^= 1;
+        assert_ne!(fnv1a_abs_codes(&codes), fnv1a_abs_codes(&other));
+    }
+
+    #[test]
+    fn verification_passes_when_theta_holds() {
+        forall(50, |rng| {
+            let theta = uniform(rng, 0.2, 2.0);
+            let cfg = QuantConfig::stochastic(6);
+            let codec = MoniquaCodec::from_theta(theta, &cfg);
+            let n = 64;
+            let y = gaussian_vec(rng, n, 3.0);
+            let x: Vec<f32> = y
+                .iter()
+                .map(|&yi| yi + uniform(rng, -0.9, 0.9) * theta)
+                .collect();
+            let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let digest = fnv1a_abs_codes(&sender_abs_codes(&codec, &x, &noise));
+            let mut codes = vec![0u32; n];
+            codec.encode_into(&x, &noise, &mut codes);
+            let mut xhat = vec![0.0f32; n];
+            codec.recover_into(&codes, &y, &mut xhat);
+            assert!(verify_reconstruction(&codec, &xhat, digest));
+        });
+    }
+
+    #[test]
+    fn verification_detects_violated_theta() {
+        // |x - y| far beyond θ: recovery aliases by multiples of B_θ and the
+        // absolute-code digest mismatches.
+        let cfg = QuantConfig::nearest(8);
+        let codec = MoniquaCodec::from_theta(0.25, &cfg);
+        let n = 64;
+        let y = vec![0.0f32; n];
+        let x: Vec<f32> = (0..n).map(|i| 3.0 + 0.37 * i as f32).collect();
+        let noise = vec![0.0f32; n];
+        let digest = fnv1a_abs_codes(&sender_abs_codes(&codec, &x, &noise));
+        let mut codes = vec![0u32; n];
+        codec.encode_into(&x, &noise, &mut codes);
+        let mut xhat = vec![0.0f32; n];
+        codec.recover_into(&codes, &y, &mut xhat);
+        assert!(!verify_reconstruction(&codec, &xhat, digest));
+    }
+
+    #[test]
+    fn abs_codes_consistent_between_sides() {
+        // With θ held, receiver_abs_codes(recover(...)) == sender_abs_codes.
+        let cfg = QuantConfig::stochastic(8);
+        let codec = MoniquaCodec::from_theta(1.0, &cfg);
+        let mut rng = crate::rng::Pcg64::seeded(5);
+        let n = 128;
+        let y = gaussian_vec(&mut rng, n, 4.0);
+        let x: Vec<f32> = y.iter().map(|&v| v + 0.8 * (rng.next_f32() - 0.5)).collect();
+        let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let s = sender_abs_codes(&codec, &x, &noise);
+        let mut codes = vec![0u32; n];
+        codec.encode_into(&x, &noise, &mut codes);
+        let mut xhat = vec![0.0f32; n];
+        codec.recover_into(&codes, &y, &mut xhat);
+        let r = receiver_abs_codes(&codec, &xhat);
+        assert_eq!(s, r);
+    }
+
+    #[test]
+    fn bytes_digest_differs_from_codes_digest_domain() {
+        assert_ne!(fnv1a_abs_codes(&[1]), fnv1a_bytes(&[1]));
+    }
+}

@@ -1,0 +1,175 @@
+//! Linear quantizer on the unit interval `[-1/2, 1/2)`.
+//!
+//! Semantics are **identical** to `python/compile/kernels/ref.py` (and hence
+//! the Pallas kernels): `L = 2^bits` grid points
+//!
+//! ```text
+//!     g_c = -1/2 + (c + 1/2)/L          c ∈ [0, L)
+//! ```
+//!
+//! * nearest:     `c = clip(floor((w + 1/2)·L), 0, L-1)`, `δ = 1/(2L)`
+//! * stochastic:  `c = clip(floor((w + 1/2)·L − 1/2 + u), 0, L-1)`, `δ = 1/L`
+//!
+//! The Python tests export golden vectors these implementations are checked
+//! against (see `rust/tests/cross_language.rs`).
+
+use super::Rounding;
+
+/// A concrete (levels, rounding) pair with encode/decode over slices.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearQuantizer {
+    pub levels: u32,
+    pub rounding: Rounding,
+}
+
+impl LinearQuantizer {
+    pub fn new(levels: u32, rounding: Rounding) -> Self {
+        assert!(levels >= 2, "need at least 2 levels");
+        LinearQuantizer { levels, rounding }
+    }
+
+    /// Worst-case error on [-1/2, 1/2).
+    pub fn delta(&self) -> f64 {
+        match self.rounding {
+            Rounding::Nearest => 0.5 / self.levels as f64,
+            Rounding::Stochastic => 1.0 / self.levels as f64,
+        }
+    }
+
+    /// Encode `w[i] ∈ [-1/2, 1/2)` into codes. For stochastic rounding,
+    /// `noise[i] ∈ [0,1)` supplies the randomness (pass the shared stream
+    /// for the paper's §6 trick); ignored for nearest.
+    pub fn encode_into(&self, w: &[f32], noise: &[f32], codes: &mut [u32]) {
+        debug_assert_eq!(w.len(), codes.len());
+        let l = self.levels as f32;
+        let max_code = self.levels - 1;
+        match self.rounding {
+            Rounding::Nearest => {
+                for (c, &wi) in codes.iter_mut().zip(w) {
+                    let t = (wi + 0.5) * l;
+                    *c = (t.floor() as i64).clamp(0, max_code as i64) as u32;
+                }
+            }
+            Rounding::Stochastic => {
+                debug_assert_eq!(noise.len(), w.len());
+                for ((c, &wi), &u) in codes.iter_mut().zip(w).zip(noise) {
+                    let t = (wi + 0.5) * l - 0.5 + u;
+                    *c = (t.floor() as i64).clamp(0, max_code as i64) as u32;
+                }
+            }
+        }
+    }
+
+    /// Decode codes back to grid values in [-1/2, 1/2).
+    pub fn decode_into(&self, codes: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), out.len());
+        let inv = 1.0 / self.levels as f32;
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = (c as f32 + 0.5) * inv - 0.5;
+        }
+    }
+}
+
+/// Convenience: allocate-and-encode.
+pub fn quantize_codes(w: &[f32], noise: &[f32], levels: u32, rounding: Rounding) -> Vec<u32> {
+    let q = LinearQuantizer::new(levels, rounding);
+    let mut codes = vec![0u32; w.len()];
+    q.encode_into(w, noise, &mut codes);
+    codes
+}
+
+/// Convenience: allocate-and-decode.
+pub fn dequantize_codes(codes: &[u32], levels: u32) -> Vec<f32> {
+    let q = LinearQuantizer::new(levels, Rounding::Nearest);
+    let mut out = vec![0.0f32; codes.len()];
+    q.decode_into(codes, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testing::forall;
+
+    #[test]
+    fn nearest_error_bound() {
+        forall(100, |rng| {
+            let levels = 1u32 << (1 + rng.below(8) as u32);
+            let q = LinearQuantizer::new(levels, Rounding::Nearest);
+            let n = 1 + rng.below(200) as usize;
+            let w: Vec<f32> = (0..n).map(|_| rng.next_f32() * 0.999 - 0.4995).collect();
+            let codes = quantize_codes(&w, &[], levels, Rounding::Nearest);
+            let back = dequantize_codes(&codes, levels);
+            for (a, b) in w.iter().zip(&back) {
+                assert!(((a - b).abs() as f64) <= q.delta() + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn stochastic_error_bound() {
+        forall(100, |rng| {
+            let levels = 1u32 << (1 + rng.below(8) as u32);
+            let q = LinearQuantizer::new(levels, Rounding::Stochastic);
+            let n = 1 + rng.below(200) as usize;
+            let w: Vec<f32> = (0..n).map(|_| rng.next_f32() * 0.999 - 0.4995).collect();
+            let u: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let codes = quantize_codes(&w, &u, levels, Rounding::Stochastic);
+            let back = dequantize_codes(&codes, levels);
+            for (a, b) in w.iter().zip(&back) {
+                assert!(((a - b).abs() as f64) <= q.delta() + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        let levels = 16u32;
+        let w = vec![0.123f32; 100_000];
+        let mut rng = Pcg64::seeded(9);
+        let u: Vec<f32> = (0..w.len()).map(|_| rng.next_f32()).collect();
+        let codes = quantize_codes(&w, &u, levels, Rounding::Stochastic);
+        let back = dequantize_codes(&codes, levels);
+        let mean: f64 = back.iter().map(|&x| x as f64).sum::<f64>() / back.len() as f64;
+        assert!((mean - 0.123).abs() < 1e-3, "mean {mean}");
+    }
+
+    #[test]
+    fn codes_in_range_even_at_boundary() {
+        // Inputs slightly outside [-1/2, 1/2) must clamp, not overflow.
+        let w = vec![-0.5f32, 0.4999, 0.5, 0.7, -0.7];
+        let u = vec![0.999f32; 5];
+        for levels in [2u32, 4, 256] {
+            for r in [Rounding::Nearest, Rounding::Stochastic] {
+                let codes = quantize_codes(&w, &u, levels, r);
+                assert!(codes.iter().all(|&c| c < levels), "{codes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_bit_two_levels() {
+        // L=2: grid points are -0.25 and +0.25.
+        let back = dequantize_codes(&[0, 1], 2);
+        assert_eq!(back, vec![-0.25, 0.25]);
+    }
+
+    #[test]
+    fn matches_ref_py_golden_vectors() {
+        // Golden values generated by python ref.quantize_codes_stochastic /
+        // _nearest with the exact inputs below (levels=8):
+        //   w = [-0.49, -0.2, 0.0, 0.13, 0.49], u = [0.1, 0.9, 0.5, 0.3, 0.7]
+        let w = [-0.49f32, -0.2, 0.0, 0.13, 0.49];
+        let u = [0.1f32, 0.9, 0.5, 0.3, 0.7];
+        let stoch = quantize_codes(&w, &u, 8, Rounding::Stochastic);
+        assert_eq!(stoch, vec![0, 2, 4, 4, 7]);
+        let near = quantize_codes(&w, &[], 8, Rounding::Nearest);
+        assert_eq!(near, vec![0, 2, 4, 5, 7]);
+        let back = dequantize_codes(&near, 8);
+        let expect = [-0.4375f32, -0.1875, 0.0625, 0.1875, 0.4375];
+        for (a, b) in back.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! The quantized-communication stack.
+//!
+//! This is the paper's object of study and the L3 hot path. Layout:
+//!
+//! * [`linear`] — linear quantizer on the unit interval `[-1/2, 1/2)`
+//!   (nearest + stochastic rounding), semantics **identical** to the Pallas
+//!   kernels / `python/compile/kernels/ref.py` (cross-checked in tests).
+//! * [`moniqua`] — the centered modulo of Lemma 1 and the wrap → quantize →
+//!   recover pipeline of Lemma 2 / Algorithm 1, plus θ→B_θ plumbing.
+//! * [`packing`] — bit-packing integer codes at 1..=16 bits/parameter.
+//! * [`entropy`] — optional lossless recompression of packed code streams
+//!   (bzip2 / deflate / in-crate RLE), the paper's §6 "bzip" trick.
+//! * [`hash`] — FNV-1a digest of the code stream for the paper's §6
+//!   θ-verification method (detects a violated consensus bound).
+//! * [`theta`] — θ policies: constant, Theorem-2 formula, tracked-G∞.
+//!
+//! [`QuantConfig`] bundles rounding mode + bit budget; every algorithm in
+//! [`crate::algorithms`] that quantizes takes one.
+
+pub mod entropy;
+pub mod hash;
+pub mod linear;
+pub mod moniqua;
+pub mod packing;
+pub mod theta;
+
+pub use entropy::Compression;
+pub use linear::{dequantize_codes, quantize_codes, LinearQuantizer};
+pub use moniqua::{centered_mod, MoniquaCodec};
+pub use theta::ThetaTracker;
+
+/// Rounding mode of the linear quantizer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// Deterministic nearest-point rounding: biased, `δ = 1/(2L)`.
+    Nearest,
+    /// Unbiased stochastic rounding: `δ = 1/L`. When
+    /// `QuantConfig::shared_randomness` is set, all workers draw the same
+    /// noise per round (paper §6 — provably smaller pairwise error).
+    Stochastic,
+}
+
+/// Quantizer configuration shared by all algorithms.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantConfig {
+    /// Bits per parameter (1..=16). Levels = 2^bits.
+    pub bits: u32,
+    pub rounding: Rounding,
+    /// Paper §6 shared-randomness trick for stochastic rounding.
+    pub shared_randomness: bool,
+    /// Optional lossless recompression of the packed stream (§6 "bzip").
+    pub compression: Compression,
+    /// Attach an FNV digest of the code stream (§6 θ-verification).
+    pub verify_hash: bool,
+}
+
+impl QuantConfig {
+    pub fn stochastic(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "bits must be 1..=16");
+        QuantConfig {
+            bits,
+            rounding: Rounding::Stochastic,
+            shared_randomness: true,
+            compression: Compression::None,
+            verify_hash: false,
+        }
+    }
+
+    pub fn nearest(bits: u32) -> Self {
+        QuantConfig { rounding: Rounding::Nearest, ..Self::stochastic(bits) }
+    }
+
+    pub fn with_shared_randomness(mut self, on: bool) -> Self {
+        self.shared_randomness = on;
+        self
+    }
+
+    pub fn with_compression(mut self, c: Compression) -> Self {
+        self.compression = c;
+        self
+    }
+
+    pub fn with_verify_hash(mut self, on: bool) -> Self {
+        self.verify_hash = on;
+        self
+    }
+
+    /// Number of representable points L.
+    pub fn levels(&self) -> u32 {
+        1u32 << self.bits
+    }
+
+    /// Worst-case quantization error δ on `[-1/2, 1/2)` (assumption (2)).
+    pub fn delta(&self) -> f64 {
+        match self.rounding {
+            Rounding::Nearest => 0.5 / self.levels() as f64,
+            Rounding::Stochastic => 1.0 / self.levels() as f64,
+        }
+    }
+
+    /// Raw payload bytes for `d` parameters (before entropy coding).
+    pub fn payload_bytes(&self, d: usize) -> usize {
+        packing::packed_len(d, self.bits)
+    }
+}
+
+/// Additional-memory accounting, reproducing Table 1's comparison. Values
+/// are f32 counts *per worker*; multiply by 4 for bytes.
+///
+/// | algorithm   | extra state                               | total (graph) |
+/// |-------------|-------------------------------------------|---------------|
+/// | DCD-PSGD    | replica of each neighbor's model          | Θ(m·d)        |
+/// | ECD-PSGD    | extrapolated estimate per neighbor        | Θ(m·d)        |
+/// | ChocoSGD    | x̂ per neighbor + own x̂                  | Θ(m·d)        |
+/// | DeepSqueeze | error accumulator per worker              | Θ(n·d)        |
+/// | Moniqua     | —                                         | 0             |
+pub fn extra_memory_floats(algorithm: &str, n: usize, m: usize, d: usize) -> usize {
+    match algorithm {
+        "dcd" | "ecd" => 2 * m * d,          // replica per edge endpoint
+        "choco" => 2 * m * d + n * d,        // neighbor estimates + own estimate
+        "deepsqueeze" => n * d,              // one error accumulator per worker
+        "moniqua" | "dpsgd" | "allreduce" | "d2" | "adpsgd" | "moniqua-d2"
+        | "moniqua-adpsgd" => 0,
+        other => panic!("unknown algorithm {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_delta_and_levels() {
+        let q = QuantConfig::stochastic(8);
+        assert_eq!(q.levels(), 256);
+        assert!((q.delta() - 1.0 / 256.0).abs() < 1e-12);
+        let qn = QuantConfig::nearest(8);
+        assert!((qn.delta() - 0.5 / 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_bit_is_supported() {
+        let q = QuantConfig::stochastic(1);
+        assert_eq!(q.levels(), 2);
+        assert_eq!(q.payload_bytes(8), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bits_rejected() {
+        QuantConfig::stochastic(0);
+    }
+
+    #[test]
+    fn memory_table_matches_table1() {
+        // n=8 ring: m=8 edges, d arbitrary.
+        let (n, m, d) = (8, 8, 1000);
+        assert_eq!(extra_memory_floats("moniqua", n, m, d), 0);
+        assert_eq!(extra_memory_floats("dpsgd", n, m, d), 0);
+        assert_eq!(extra_memory_floats("dcd", n, m, d), 2 * m * d);
+        assert_eq!(extra_memory_floats("ecd", n, m, d), 2 * m * d);
+        assert!(extra_memory_floats("choco", n, m, d) >= 2 * m * d);
+        assert_eq!(extra_memory_floats("deepsqueeze", n, m, d), n * d);
+        // Ordering of Table 2's "extra memory" column:
+        assert!(extra_memory_floats("deepsqueeze", n, m, d)
+            < extra_memory_floats("choco", n, m, d));
+    }
+
+    #[test]
+    fn payload_scales_with_bits() {
+        let d = 1000;
+        assert_eq!(QuantConfig::stochastic(8).payload_bytes(d), 1000);
+        assert_eq!(QuantConfig::stochastic(4).payload_bytes(d), 500);
+        assert_eq!(QuantConfig::stochastic(1).payload_bytes(d), 125);
+    }
+}

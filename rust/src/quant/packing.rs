@@ -1,0 +1,148 @@
+//! Bit-packing of quantizer codes.
+//!
+//! Messages on the wire carry `bits` bits per parameter, so a d-parameter
+//! tensor costs `ceil(d*bits/8)` bytes — this is what the network simulator
+//! charges and what the entropy coder recompresses. The packer writes codes
+//! little-endian into a u64 accumulator; the hot loop is branch-light and is
+//! one of the targets of the §Perf pass.
+
+/// Packed byte length for `d` codes at `bits` bits each.
+#[inline]
+pub fn packed_len(d: usize, bits: u32) -> usize {
+    (d * bits as usize + 7) / 8
+}
+
+/// Pack `codes` (each `< 2^bits`) into bytes.
+pub fn pack(codes: &[u32], bits: u32) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
+    pack_into(codes, bits, &mut out);
+    out
+}
+
+/// Pack into a preallocated buffer (must be exactly `packed_len` long).
+pub fn pack_into(codes: &[u32], bits: u32, out: &mut [u8]) {
+    assert!((1..=16).contains(&bits));
+    assert_eq!(out.len(), packed_len(codes.len(), bits));
+    debug_assert!(codes.iter().all(|&c| (c as u64) < (1u64 << bits)));
+    // §Perf: byte-aligned budgets skip the bit accumulator entirely
+    // (the 8-bit case is the paper's main experimental configuration).
+    if bits == 8 {
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = c as u8;
+        }
+        return;
+    }
+    if bits == 16 {
+        for (o, &c) in out.chunks_exact_mut(2).zip(codes) {
+            o.copy_from_slice(&(c as u16).to_le_bytes());
+        }
+        return;
+    }
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut o = 0usize;
+    for &c in codes {
+        acc |= (c as u64) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out[o] = acc as u8;
+            o += 1;
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out[o] = acc as u8;
+    }
+}
+
+/// Unpack `d` codes of `bits` bits from `bytes`.
+pub fn unpack(bytes: &[u8], bits: u32, d: usize) -> Vec<u32> {
+    let mut out = vec![0u32; d];
+    unpack_into(bytes, bits, &mut out);
+    out
+}
+
+/// Unpack into a preallocated buffer.
+pub fn unpack_into(bytes: &[u8], bits: u32, out: &mut [u32]) {
+    assert!((1..=16).contains(&bits));
+    assert!(bytes.len() >= packed_len(out.len(), bits));
+    if bits == 8 {
+        for (o, &b) in out.iter_mut().zip(bytes) {
+            *o = b as u32;
+        }
+        return;
+    }
+    if bits == 16 {
+        for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+            *o = u16::from_le_bytes([b[0], b[1]]) as u32;
+        }
+        return;
+    }
+    let mask: u64 = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut i = 0usize;
+    for o in out.iter_mut() {
+        while nbits < bits {
+            acc |= (bytes[i] as u64) << nbits;
+            i += 1;
+            nbits += 8;
+        }
+        *o = (acc & mask) as u32;
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn roundtrip_all_bit_widths() {
+        forall(200, |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            let d = rng.below(400) as usize;
+            let codes: Vec<u32> = (0..d)
+                .map(|_| (rng.next_u32() as u64 & ((1u64 << bits) - 1)) as u32)
+                .collect();
+            let bytes = pack(&codes, bits);
+            assert_eq!(bytes.len(), packed_len(d, bits));
+            let back = unpack(&bytes, bits, d);
+            assert_eq!(codes, back);
+        });
+    }
+
+    #[test]
+    fn packed_len_exact() {
+        assert_eq!(packed_len(8, 1), 1);
+        assert_eq!(packed_len(9, 1), 2);
+        assert_eq!(packed_len(3, 8), 3);
+        assert_eq!(packed_len(5, 3), 2); // 15 bits -> 2 bytes
+        assert_eq!(packed_len(0, 7), 0);
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let bytes = pack(&[], 5);
+        assert!(bytes.is_empty());
+        assert_eq!(unpack(&bytes, 5, 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn one_bit_bit_layout() {
+        // codes 1,0,1,1,0,0,0,1 -> little-endian bit order -> 0b1000_1101
+        let bytes = pack(&[1, 0, 1, 1, 0, 0, 0, 1], 1);
+        assert_eq!(bytes, vec![0b1000_1101]);
+    }
+
+    #[test]
+    fn cross_width_no_interference() {
+        // Adjacent 3-bit codes must not leak into each other.
+        let codes = vec![0b101u32, 0b010, 0b111, 0b001];
+        let back = unpack(&pack(&codes, 3), 3, 4);
+        assert_eq!(back, codes);
+    }
+}

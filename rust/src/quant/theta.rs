@@ -1,0 +1,184 @@
+//! θ policies — the a-priori consensus bound Moniqua needs (paper §6,
+//! "Choosing θ empirically", plus the Theorem 2/3 formulas).
+//!
+//! Three methods, matching the paper:
+//! 1. **Formula** — compute θ from its Theorem-2 expression using a G∞
+//!    estimate tracked over warmup steps ([`ThetaTracker`]).
+//! 2. **Constant** — treat θ as a hyperparameter (what the paper's
+//!    experiments use: θ = 2.0).
+//! 3. **Verified** — any policy + the §6 hash check
+//!    ([`crate::quant::hash`]), wired up in the coordinator as failure
+//!    detection.
+
+/// Theorem 2's θ for constant step size (C_α = η = 1):
+/// `θ = 2 α G∞ log(16 n) / (1 − ρ)`.
+pub fn theta_theorem2(alpha: f64, g_inf: f64, n: usize, rho: f64) -> f64 {
+    2.0 * alpha * g_inf * (16.0 * n as f64).ln() / (1.0 - rho).max(1e-9)
+}
+
+/// Theorem 2's recommended quantizer error for constant step size:
+/// `δ = (1 − ρ) / (8 log(16n) + 2 (1 − ρ))`.
+pub fn delta_theorem2(n: usize, rho: f64) -> f64 {
+    let gap = (1.0 - rho).max(1e-9);
+    gap / (8.0 * (16.0 * n as f64).ln() + 2.0 * gap)
+}
+
+/// §4 "Bound on the Bits": with nearest rounding,
+/// `B ≤ ⌈log2(4·log2(16n)/(1−ρ) + 3)⌉` bits per parameter suffice —
+/// independent of d and growing O(log log n).
+pub fn bits_bound(n: usize, rho: f64) -> u32 {
+    let gap = (1.0 - rho).max(1e-9);
+    let inner = 4.0 * (16.0 * n as f64).log2() / gap + 3.0;
+    inner.log2().ceil() as u32
+}
+
+/// Theorem 3's θ under a slack matrix `W̄ = γW + (1−γ)I`:
+/// `θ = 2 α G∞ log(16 n) / (γ (1 − ρ))`.
+pub fn theta_theorem3(alpha: f64, g_inf: f64, n: usize, rho: f64, gamma: f64) -> f64 {
+    theta_theorem2(alpha, g_inf, n, rho) / gamma.max(1e-9)
+}
+
+/// Theorem 4's settings for Moniqua-on-D² (constants D1, D2 depend only on
+/// the eigenvalues of W; see supplementary Lemma 12).
+pub fn theta_d2(alpha: f64, g_inf: f64, n: usize, d1: f64) -> f64 {
+    (6.0 * d1 * n as f64 + 8.0) * alpha * g_inf
+}
+
+pub fn delta_d2(n: usize, d2: f64) -> f64 {
+    1.0 / (12.0 * n as f64 * d2 + 2.0)
+}
+
+/// Theorem 5's settings for Moniqua-on-AD-PSGD.
+pub fn theta_adpsgd(alpha: f64, g_inf: f64, t_mix: f64) -> f64 {
+    16.0 * t_mix * alpha * g_inf
+}
+
+pub fn delta_adpsgd(t_mix: f64) -> f64 {
+    1.0 / (64.0 * t_mix + 2.0)
+}
+
+/// Supplementary Lemma 12's D1/D2 constants from W's extreme eigenvalues.
+pub fn d2_constants(lambda2: f64, lambda_n: f64) -> (f64, f64) {
+    let vn = lambda_n - (lambda_n * lambda_n - lambda_n).sqrt();
+    let d1 = f64::max(
+        vn.abs() + 2.0 * lambda_n.abs() / (1.0 - vn.abs()).max(1e-9),
+        (lambda2 / (1.0 - lambda2).max(1e-9)).max(0.0).sqrt()
+            + 2.0 * lambda2 / (1.0 - lambda2).max(1e-9),
+    );
+    let d2 = f64::max(
+        2.0 / (1.0 - vn.abs()).max(1e-9),
+        2.0 / (1.0 - lambda2).max(1e-9).sqrt(),
+    );
+    (d1, d2)
+}
+
+/// Tracks ‖g̃‖∞ during warmup to instantiate the Theorem-2 θ ("first
+/// method": run a few epochs, record the gradient infinity norm, then use
+/// the formula for the rest of training").
+#[derive(Clone, Debug, Default)]
+pub struct ThetaTracker {
+    g_inf_max: f64,
+    samples: usize,
+}
+
+impl ThetaTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, grad: &[f32]) {
+        let g = crate::linalg::norm_inf(grad) as f64;
+        self.g_inf_max = self.g_inf_max.max(g);
+        self.samples += 1;
+    }
+
+    pub fn g_inf(&self) -> f64 {
+        self.g_inf_max
+    }
+
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// θ via Theorem 2 with the tracked G∞ (plus a safety factor: the bound
+    /// tracks the *max* over the whole run, warmup only lower-bounds it).
+    pub fn theta(&self, alpha: f64, n: usize, rho: f64, safety: f64) -> f64 {
+        theta_theorem2(alpha, self.g_inf_max * safety, n, rho)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_bound_grows_loglog() {
+        // Paper: O(log log n) growth, dimension-free.
+        let rho = 0.8;
+        let b4 = bits_bound(4, rho);
+        let b64 = bits_bound(64, rho);
+        let b4096 = bits_bound(4096, rho);
+        assert!(b4 <= b64 && b64 <= b4096);
+        assert!(b4096 - b4 <= 2, "loglog growth: {b4} -> {b4096}");
+        assert!(b4 >= 4 && b4096 <= 10, "{b4}..{b4096}");
+    }
+
+    #[test]
+    fn bits_bound_worsens_with_rho() {
+        assert!(bits_bound(8, 0.99) >= bits_bound(8, 0.5));
+    }
+
+    #[test]
+    fn theta_scales_linearly_with_alpha_and_ginf() {
+        let t1 = theta_theorem2(0.1, 1.0, 8, 0.8);
+        let t2 = theta_theorem2(0.2, 1.0, 8, 0.8);
+        let t3 = theta_theorem2(0.1, 2.0, 8, 0.8);
+        assert!((t2 - 2.0 * t1).abs() < 1e-12);
+        assert!((t3 - 2.0 * t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_theorem2_below_half() {
+        for n in [2usize, 8, 128] {
+            for rho in [0.1, 0.8, 0.99] {
+                let d = delta_theorem2(n, rho);
+                assert!(d > 0.0 && d < 0.5, "n={n} rho={rho} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn theorem3_theta_inflates_with_small_gamma() {
+        let base = theta_theorem2(0.1, 1.0, 8, 0.8);
+        let slack = theta_theorem3(0.1, 1.0, 8, 0.8, 0.005);
+        assert!((slack - base / 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn d2_constants_positive() {
+        let (d1, d2) = d2_constants(0.8, -0.2);
+        assert!(d1 > 0.0 && d2 > 0.0);
+        let theta = theta_d2(0.1, 1.0, 8, d1);
+        let delta = delta_d2(8, d2);
+        assert!(theta > 0.0 && delta > 0.0 && delta < 0.5);
+    }
+
+    #[test]
+    fn adpsgd_settings() {
+        let theta = theta_adpsgd(0.1, 1.0, 20.0);
+        assert!((theta - 32.0).abs() < 1e-12);
+        let delta = delta_adpsgd(20.0);
+        assert!((delta - 1.0 / 1282.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn tracker_records_max() {
+        let mut t = ThetaTracker::new();
+        t.observe(&[0.5, -1.5]);
+        t.observe(&[0.2, 0.3]);
+        assert_eq!(t.g_inf(), 1.5);
+        assert_eq!(t.samples(), 2);
+        let theta = t.theta(0.1, 8, 0.8, 2.0);
+        assert!((theta - theta_theorem2(0.1, 3.0, 8, 0.8)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,206 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The crate needs (a) fast, reproducible streams for synthetic data and
+//! stochastic rounding, and (b) the paper's §6 *shared randomness* trick:
+//! all workers must draw the **same** uniform noise `u` for stochastic
+//! rounding in the same round, which provably reduces the pairwise
+//! quantization error (supplementary §C). We implement PCG64 (O'Neill,
+//! PCG-XSL-RR 128/64) so streams are splittable by `(seed, stream)` pairs:
+//! the shared stream is keyed by the round number only, per-worker streams
+//! by `(worker, round)`.
+
+/// PCG-XSL-RR 128/64 generator. Small, fast, statistically solid, and fully
+/// deterministic across platforms — no external crates required.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different stream ids
+    /// yield statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 1) | 1) ^ 0x5851_f42d_4c95_7f2d;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        // A few warmup rounds to diffuse low-entropy seeds.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Single-argument convenience constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 mantissa bits of a u32.
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) via Lemire's rejection-free-ish reduction.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (cached second value is discarded to
+    /// keep the generator state a pure function of draw count).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fill `buf` with uniform f32 in [0,1).
+    pub fn fill_uniform_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.next_f32();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Derives the *shared randomness* stream for a communication round: every
+/// worker constructs the identical generator, so their stochastic-rounding
+/// noise vectors match elementwise (paper §6, supplementary §C).
+pub fn shared_round_rng(experiment_seed: u64, round: u64) -> Pcg64 {
+    Pcg64::new(experiment_seed ^ 0x9e37_79b9_7f4a_7c15, round)
+}
+
+/// Per-worker private stream (gradient sampling, data order, ...).
+pub fn worker_rng(experiment_seed: u64, worker: usize, purpose: u64) -> Pcg64 {
+    Pcg64::new(
+        experiment_seed.wrapping_add(0x517c_c1b7_2722_0a95),
+        ((worker as u64) << 8) | purpose,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Pcg64::seeded(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seeded(2);
+        let n = 100_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.next_gaussian();
+            s1 += g;
+            s2 += g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::seeded(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shared_round_rng_identical_for_all_workers() {
+        // The whole point: two "workers" derive the same stream per round.
+        let mut w0 = shared_round_rng(99, 5);
+        let mut w1 = shared_round_rng(99, 5);
+        for _ in 0..32 {
+            assert_eq!(w0.next_u32(), w1.next_u32());
+        }
+        // ...but different rounds differ.
+        let mut r6 = shared_round_rng(99, 6);
+        assert_ne!(shared_round_rng(99, 5).next_u64(), r6.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(4);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

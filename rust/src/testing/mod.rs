@@ -1,0 +1,70 @@
+//! In-crate property-testing helper.
+//!
+//! `proptest` is not available in this offline environment, so this module
+//! provides the minimal equivalent used throughout the test suite: run a
+//! closure over many seeded [`Pcg64`] generators and report the failing seed
+//! so cases are reproducible.
+
+use crate::rng::Pcg64;
+
+/// Run `body` for `cases` independent seeded RNGs. On panic, the failing
+/// case index/seed is printed before the panic propagates, so any failure
+/// can be replayed with `forall_seed`.
+pub fn forall<F: FnMut(&mut Pcg64)>(cases: u64, mut body: F) {
+    for case in 0..cases {
+        let seed = 0x51ed_c0de ^ (case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut rng = Pcg64::new(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single case by its index (for debugging failures).
+pub fn forall_seed<F: FnMut(&mut Pcg64)>(case: u64, mut body: F) {
+    let seed = 0x51ed_c0de ^ (case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let mut rng = Pcg64::new(seed, case);
+    body(&mut rng);
+}
+
+/// Uniform float in [lo, hi).
+pub fn uniform(rng: &mut Pcg64, lo: f32, hi: f32) -> f32 {
+    lo + rng.next_f32() * (hi - lo)
+}
+
+/// Random vector of gaussians with the given std.
+pub fn gaussian_vec(rng: &mut Pcg64, n: usize, std: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.next_gaussian() as f32 * std).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn forall_cases_use_distinct_streams() {
+        let mut first: Vec<u64> = Vec::new();
+        forall(10, |rng| first.push(rng.next_u64()));
+        let uniq: std::collections::HashSet<_> = first.iter().collect();
+        assert_eq!(uniq.len(), first.len());
+    }
+
+    #[test]
+    fn gaussian_vec_has_right_scale() {
+        let mut rng = Pcg64::seeded(0);
+        let v = gaussian_vec(&mut rng, 50_000, 2.0);
+        let var = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!((var - 4.0).abs() < 0.2, "var {var}");
+    }
+}

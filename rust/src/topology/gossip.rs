@@ -1,0 +1,144 @@
+//! Time-varying gossip matrices for AD-PSGD (paper §5, supplementary §E.2).
+//!
+//! In AD-PSGD an "iteration" is one gradient update on one worker plus a
+//! pairwise averaging with one random neighbor; the induced `W_k` is the
+//! identity except for a 2×2 averaging block. Each individual `W_k` has
+//! ρ = 1, so convergence is governed by the *mixing time* `t_mix` of the
+//! time-inhomogeneous chain — which this module estimates empirically, and
+//! which Theorem 5's θ and δ settings consume.
+
+use crate::linalg::MatF64;
+use crate::rng::Pcg64;
+use crate::topology::Topology;
+
+/// One pairwise gossip event: workers `a` and `b` average (coefficient ½).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PairGossip {
+    pub a: usize,
+    pub b: usize,
+}
+
+impl PairGossip {
+    /// The induced n×n doubly-stochastic matrix (identity + 2×2 block).
+    pub fn matrix(&self, n: usize) -> MatF64 {
+        let mut w = MatF64::eye(n);
+        w[(self.a, self.a)] = 0.5;
+        w[(self.b, self.b)] = 0.5;
+        w[(self.a, self.b)] = 0.5;
+        w[(self.b, self.a)] = 0.5;
+        w
+    }
+}
+
+/// Samples the AD-PSGD event sequence: at each event a uniformly random
+/// worker wakes and gossips with a uniformly random neighbor.
+#[derive(Clone, Debug)]
+pub struct GossipSampler {
+    adj: Vec<Vec<usize>>,
+    rng: Pcg64,
+}
+
+impl GossipSampler {
+    pub fn new(topo: &Topology, seed: u64) -> Self {
+        GossipSampler {
+            adj: topo.adjacency(),
+            rng: Pcg64::new(seed, 0xAD_5D),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Next (worker, neighbor) gossip pair.
+    pub fn next_pair(&mut self) -> PairGossip {
+        let a = self.rng.below(self.adj.len() as u64) as usize;
+        self.pair_for(a)
+    }
+
+    /// Gossip pair where the waking worker is fixed (used by the wall-clock
+    /// async trainer, which wakes the worker whose clock is earliest).
+    pub fn pair_for(&mut self, a: usize) -> PairGossip {
+        let nbrs = &self.adj[a];
+        let b = nbrs[self.rng.below(nbrs.len() as u64) as usize];
+        PairGossip { a, b }
+    }
+
+    /// Empirical mixing time: smallest t such that for every basis
+    /// distribution e_i, ‖(∏_{k<t} W_k) e_i − 1/n‖₁ ≤ ½ along a sampled
+    /// event sequence (the condition Theorem 5 assumes). Returns `max_t`
+    /// if not mixed by then.
+    pub fn estimate_t_mix(&mut self, max_t: usize) -> usize {
+        let n = self.n();
+        // Columns: current image of each basis vector under the product.
+        let mut cols: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let mut v = vec![0.0; n];
+                v[i] = 1.0;
+                v
+            })
+            .collect();
+        for t in 1..=max_t {
+            let pair = self.next_pair();
+            for col in cols.iter_mut() {
+                let m = 0.5 * (col[pair.a] + col[pair.b]);
+                col[pair.a] = m;
+                col[pair.b] = m;
+            }
+            let worst = cols
+                .iter()
+                .map(|col| {
+                    col.iter().map(|&x| (x - 1.0 / n as f64).abs()).sum::<f64>()
+                })
+                .fold(0.0f64, f64::max);
+            if worst <= 0.5 {
+                return t;
+            }
+        }
+        max_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_matrix_doubly_stochastic() {
+        let w = PairGossip { a: 1, b: 3 }.matrix(5);
+        for i in 0..5 {
+            assert!((w.row(i).iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+        assert!(w.is_symmetric(1e-12));
+        assert_eq!(w.at(0, 0), 1.0);
+        assert_eq!(w.at(1, 3), 0.5);
+    }
+
+    #[test]
+    fn sampler_respects_adjacency() {
+        let topo = Topology::Ring(6);
+        let adj = topo.adjacency();
+        let mut s = GossipSampler::new(&topo, 3);
+        for _ in 0..200 {
+            let p = s.next_pair();
+            assert!(adj[p.a].contains(&p.b), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn t_mix_finite_and_scales_with_n() {
+        let mut s6 = GossipSampler::new(&Topology::Ring(6), 1);
+        let mut s12 = GossipSampler::new(&Topology::Ring(12), 1);
+        let t6 = s6.estimate_t_mix(100_000);
+        let t12 = s12.estimate_t_mix(100_000);
+        assert!(t6 > 0 && t6 < 100_000);
+        assert!(t12 > t6, "t12 {t12} t6 {t6}");
+    }
+
+    #[test]
+    fn complete_graph_mixes_faster_than_ring() {
+        let tc = GossipSampler::new(&Topology::Complete(8), 2).estimate_t_mix(100_000);
+        let tr = GossipSampler::new(&Topology::Ring(8), 2).estimate_t_mix(100_000);
+        assert!(tc <= tr, "complete {tc} ring {tr}");
+    }
+}

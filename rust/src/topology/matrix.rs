@@ -1,0 +1,267 @@
+//! Doubly-stochastic communication matrices and their spectral analysis.
+
+use crate::linalg::MatF64;
+
+/// A symmetric doubly-stochastic communication matrix over n workers
+/// (paper assumption A2), with cached neighbor structure.
+#[derive(Clone, Debug)]
+pub struct CommMatrix {
+    pub w: MatF64,
+    /// Neighbor lists (j such that `W[j][i] > 0`, j ≠ i).
+    pub neighbors: Vec<Vec<usize>>,
+}
+
+impl CommMatrix {
+    /// Metropolis–Hastings weights for an undirected graph:
+    /// `W_ij = 1 / (1 + max(deg_i, deg_j))` on edges, diagonal absorbs the
+    /// rest. Always symmetric + doubly stochastic; standard in the
+    /// decentralized-optimization literature.
+    pub fn metropolis(adj: &[Vec<usize>]) -> Self {
+        let n = adj.len();
+        let deg: Vec<usize> = adj.iter().map(|a| a.len()).collect();
+        let mut w = MatF64::zeros(n, n);
+        for i in 0..n {
+            for &j in &adj[i] {
+                w[(i, j)] = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+            }
+        }
+        for i in 0..n {
+            let off: f64 = (0..n).filter(|&j| j != i).map(|j| w.at(i, j)).sum();
+            w[(i, i)] = 1.0 - off;
+        }
+        Self::from_matrix(w)
+    }
+
+    /// Uniform averaging over the closed neighborhood (only valid when the
+    /// graph is regular — checked). `W_ij = 1/(deg+1)` for j in N(i) ∪ {i}.
+    pub fn uniform_regular(adj: &[Vec<usize>]) -> Self {
+        let n = adj.len();
+        let d = adj[0].len();
+        assert!(
+            adj.iter().all(|a| a.len() == d),
+            "uniform weights need a regular graph"
+        );
+        let mut w = MatF64::zeros(n, n);
+        let p = 1.0 / (d as f64 + 1.0);
+        for i in 0..n {
+            w[(i, i)] = p;
+            for &j in &adj[i] {
+                w[(i, j)] = p;
+            }
+        }
+        Self::from_matrix(w)
+    }
+
+    /// Wrap an explicit matrix; validates stochasticity and symmetry.
+    pub fn from_matrix(w: MatF64) -> Self {
+        let n = w.n;
+        assert_eq!(w.n, w.m);
+        assert!(w.is_symmetric(1e-9), "W must be symmetric");
+        for i in 0..n {
+            let row: f64 = w.row(i).iter().sum();
+            assert!((row - 1.0).abs() < 1e-9, "row {i} sums to {row}");
+            assert!(w.row(i).iter().all(|&v| v > -1e-12), "negative entry in row {i}");
+        }
+        let neighbors = (0..n)
+            .map(|i| {
+                (0..n)
+                    .filter(|&j| j != i && w.at(i, j) > 1e-15)
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        CommMatrix { w, neighbors }
+    }
+
+    pub fn n(&self) -> usize {
+        self.w.n
+    }
+
+    #[inline]
+    pub fn weight(&self, i: usize, j: usize) -> f64 {
+        self.w.at(i, j)
+    }
+
+    /// Smallest non-zero entry φ (Theorem 1's constant).
+    pub fn min_nonzero(&self) -> f64 {
+        let mut phi = f64::INFINITY;
+        for i in 0..self.n() {
+            for j in 0..self.n() {
+                let v = self.w.at(i, j);
+                if v > 1e-15 {
+                    phi = phi.min(v);
+                }
+            }
+        }
+        phi
+    }
+
+    /// Slack matrix `W̄ = γ W + (1−γ) I` (Theorem 3 — enables 1-bit budgets
+    /// by shrinking the per-step averaging and hence the consensus error the
+    /// quantizer must survive).
+    pub fn slack(&self, gamma: f64) -> CommMatrix {
+        assert!((0.0..=1.0).contains(&gamma));
+        let n = self.n();
+        let mut w = MatF64::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let id = if i == j { 1.0 } else { 0.0 };
+                w[(i, j)] = gamma * self.w.at(i, j) + (1.0 - gamma) * id;
+            }
+        }
+        Self::from_matrix(w)
+    }
+
+    /// `ρ = max(|λ₂|, |λₙ|)`: the second-largest absolute eigenvalue,
+    /// estimated by power iteration on the deflated operator
+    /// `x ↦ W x − mean(x)·1` (removes the λ₁ = 1 eigenvector `1`).
+    pub fn rho(&self) -> f64 {
+        let n = self.n();
+        if n == 1 {
+            return 0.0;
+        }
+        // Deterministic, non-degenerate start orthogonal to 1.
+        let mut v: Vec<f64> = (0..n)
+            .map(|i| ((i * 2654435761usize) % 1000) as f64 / 1000.0 - 0.45)
+            .collect();
+        deflate(&mut v);
+        let mut lambda = 0.0;
+        for _ in 0..2000 {
+            let mut next = self.w.matvec(&v);
+            deflate(&mut next);
+            let norm = next.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                return 0.0;
+            }
+            for x in next.iter_mut() {
+                *x /= norm;
+            }
+            let wv = self.w.matvec(&next);
+            let new_lambda: f64 = next.iter().zip(&wv).map(|(a, b)| a * b).sum();
+            if (new_lambda.abs() - lambda).abs() < 1e-12 {
+                lambda = new_lambda.abs();
+                break;
+            }
+            lambda = new_lambda.abs();
+            v = next;
+        }
+        lambda.min(1.0)
+    }
+
+    /// Spectral gap `1 − ρ`.
+    pub fn spectral_gap(&self) -> f64 {
+        1.0 - self.rho()
+    }
+
+    /// Markov-chain mixing-time upper bound `t_mix ≤ log(4n) / (1−ρ)`
+    /// (supplementary §E.1).
+    pub fn t_mix_bound(&self) -> f64 {
+        let gap = self.spectral_gap().max(1e-12);
+        ((4.0 * self.n() as f64).ln() / gap).max(1.0)
+    }
+}
+
+fn deflate(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    fn ring_w(n: usize) -> CommMatrix {
+        Topology::Ring(n).comm_matrix()
+    }
+
+    #[test]
+    fn metropolis_is_doubly_stochastic_symmetric() {
+        for topo in [
+            Topology::Ring(8),
+            Topology::Star(6),
+            Topology::Torus(3, 3),
+            Topology::Complete(5),
+        ] {
+            let cm = topo.comm_matrix();
+            let n = cm.n();
+            for i in 0..n {
+                let row: f64 = cm.w.row(i).iter().sum();
+                assert!((row - 1.0).abs() < 1e-12);
+                for j in 0..n {
+                    assert!((cm.w.at(i, j) - cm.w.at(j, i)).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring8_rho_matches_closed_form() {
+        // Ring with Metropolis weights = 1/3 on edges, 1/3 diagonal:
+        // eigenvalues are (1 + 2cos(2πk/8))/3; ρ = (1+2cos(π/4))/3 ≈ 0.8047.
+        let rho = ring_w(8).rho();
+        let expect = (1.0 + 2.0 * (std::f64::consts::PI / 4.0).cos()) / 3.0;
+        assert!((rho - expect).abs() < 1e-6, "rho {rho} vs {expect}");
+    }
+
+    #[test]
+    fn complete_graph_rho_zero() {
+        // Complete-graph Metropolis is exact averaging: W = 11^T/n, ρ = 0.
+        let rho = Topology::Complete(6).comm_matrix().rho();
+        assert!(rho < 1e-8, "rho {rho}");
+    }
+
+    #[test]
+    fn rho_less_than_one_iff_connected() {
+        for topo in [
+            Topology::Ring(12),
+            Topology::Chain(9),
+            Topology::Star(10),
+            Topology::RandomRegular { n: 16, degree: 4, seed: 7 },
+        ] {
+            let rho = topo.comm_matrix().rho();
+            assert!(rho < 1.0 - 1e-6, "{topo:?} rho {rho}");
+        }
+    }
+
+    #[test]
+    fn expander_beats_ring_gap() {
+        let ring = Topology::Ring(16).comm_matrix().spectral_gap();
+        let exp = Topology::RandomRegular { n: 16, degree: 4, seed: 5 }
+            .comm_matrix()
+            .spectral_gap();
+        assert!(exp > ring, "expander gap {exp} vs ring {ring}");
+    }
+
+    #[test]
+    fn slack_matrix_shrinks_gap() {
+        let w = ring_w(8);
+        let s = w.slack(0.25);
+        // W̄ eigenvalues: γλ + (1-γ) → ρ̄ = γρ + 1 - γ ≥ ρ.
+        let expect = 0.25 * w.rho() + 0.75;
+        assert!((s.rho() - expect).abs() < 1e-6);
+        // Still doubly stochastic.
+        for i in 0..8 {
+            assert!((s.w.row(i).iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn min_nonzero_ring() {
+        let phi = ring_w(8).min_nonzero();
+        assert!((phi - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn neighbors_match_adjacency() {
+        let cm = ring_w(5);
+        assert_eq!(cm.neighbors[0], vec![1, 4]);
+    }
+
+    #[test]
+    fn t_mix_bound_reasonable() {
+        let t = ring_w(8).t_mix_bound();
+        assert!(t > 1.0 && t < 100.0, "t_mix {t}");
+    }
+}

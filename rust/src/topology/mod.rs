@@ -1,0 +1,243 @@
+//! Worker graph topologies and doubly-stochastic communication matrices.
+//!
+//! Decentralized SGD is parameterized by a symmetric doubly-stochastic
+//! matrix `W` whose support is the worker graph (paper assumption A2). This
+//! module builds the graphs the paper's experiments use (ring, and the
+//! generalizations a practitioner would want: torus, complete, star, chain,
+//! random-regular expanders), derives Metropolis–Hastings weights (always
+//! symmetric + doubly stochastic for undirected graphs), estimates the
+//! spectral quantity `ρ = max(|λ₂|, |λₙ|)` by power iteration, and produces
+//! the *slack* matrix `W̄ = γW + (1−γ)I` that Theorem 3 uses to admit 1-bit
+//! quantization. For AD-PSGD it also generates the time-varying pairwise
+//! gossip matrices `W_k` and estimates their mixing time `t_mix`.
+
+pub mod gossip;
+pub mod matrix;
+
+pub use gossip::{GossipSampler, PairGossip};
+pub use matrix::CommMatrix;
+
+use crate::rng::Pcg64;
+
+/// Static worker graph shapes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// Cycle over n workers — the paper's main experimental topology.
+    Ring(usize),
+    /// 2-D torus r × c (each worker has 4 neighbors).
+    Torus(usize, usize),
+    /// Fully connected graph (gossip degenerate to near-AllReduce).
+    Complete(usize),
+    /// Hub-and-spoke; worker 0 is the hub. Worst-case spectral gap.
+    Star(usize),
+    /// Path graph (ring with one edge removed).
+    Chain(usize),
+    /// Random d-regular graph (expander with high probability).
+    RandomRegular { n: usize, degree: usize, seed: u64 },
+}
+
+impl Topology {
+    pub fn ring(n: usize) -> Self {
+        Topology::Ring(n)
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        match *self {
+            Topology::Ring(n)
+            | Topology::Complete(n)
+            | Topology::Star(n)
+            | Topology::Chain(n) => n,
+            Topology::Torus(r, c) => r * c,
+            Topology::RandomRegular { n, .. } => n,
+        }
+    }
+
+    /// Undirected adjacency lists (no self loops).
+    pub fn adjacency(&self) -> Vec<Vec<usize>> {
+        let n = self.n();
+        let mut adj = vec![Vec::new(); n];
+        let add = |adj: &mut Vec<Vec<usize>>, a: usize, b: usize| {
+            if a != b && !adj[a].contains(&b) {
+                adj[a].push(b);
+                adj[b].push(a);
+            }
+        };
+        match *self {
+            Topology::Ring(n) => {
+                if n == 2 {
+                    add(&mut adj, 0, 1);
+                } else {
+                    for i in 0..n {
+                        add(&mut adj, i, (i + 1) % n);
+                    }
+                }
+            }
+            Topology::Chain(n) => {
+                for i in 0..n.saturating_sub(1) {
+                    add(&mut adj, i, i + 1);
+                }
+            }
+            Topology::Complete(n) => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        add(&mut adj, i, j);
+                    }
+                }
+            }
+            Topology::Star(n) => {
+                for i in 1..n {
+                    add(&mut adj, 0, i);
+                }
+            }
+            Topology::Torus(r, c) => {
+                let idx = |i: usize, j: usize| i * c + j;
+                for i in 0..r {
+                    for j in 0..c {
+                        add(&mut adj, idx(i, j), idx((i + 1) % r, j));
+                        add(&mut adj, idx(i, j), idx(i, (j + 1) % c));
+                    }
+                }
+            }
+            Topology::RandomRegular { n, degree, seed } => {
+                // Pairing-model construction with retries; falls back to a
+                // ring + random chords if pairing fails (still connected).
+                let mut rng = Pcg64::new(seed, 0xC0FFEE);
+                let ok = try_random_regular(&mut adj, n, degree, &mut rng);
+                if !ok {
+                    for i in 0..n {
+                        add(&mut adj, i, (i + 1) % n);
+                    }
+                    for i in 0..n {
+                        let j = rng.below(n as u64) as usize;
+                        add(&mut adj, i, j);
+                    }
+                }
+            }
+        }
+        for lst in adj.iter_mut() {
+            lst.sort_unstable();
+        }
+        adj
+    }
+
+    /// Number of undirected edges m (the Θ(md) memory term in Table 1).
+    pub fn edge_count(&self) -> usize {
+        self.adjacency().iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// Metropolis–Hastings communication matrix for this graph.
+    pub fn comm_matrix(&self) -> CommMatrix {
+        CommMatrix::metropolis(&self.adjacency())
+    }
+
+    /// True if the graph is connected (required for consensus).
+    pub fn is_connected(&self) -> bool {
+        let adj = self.adjacency();
+        let n = adj.len();
+        if n == 0 {
+            return false;
+        }
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(v) = stack.pop() {
+            for &w in &adj[v] {
+                if !seen[w] {
+                    seen[w] = true;
+                    stack.push(w);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+fn try_random_regular(
+    adj: &mut [Vec<usize>],
+    n: usize,
+    degree: usize,
+    rng: &mut Pcg64,
+) -> bool {
+    if n * degree % 2 != 0 || degree >= n {
+        return false;
+    }
+    'attempt: for _ in 0..50 {
+        for a in adj.iter_mut() {
+            a.clear();
+        }
+        let mut stubs: Vec<usize> = (0..n).flat_map(|i| std::iter::repeat(i).take(degree)).collect();
+        rng.shuffle(&mut stubs);
+        for pair in stubs.chunks(2) {
+            let (a, b) = (pair[0], pair[1]);
+            if a == b || adj[a].contains(&b) {
+                continue 'attempt;
+            }
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_adjacency() {
+        let adj = Topology::Ring(5).adjacency();
+        assert_eq!(adj[0], vec![1, 4]);
+        assert_eq!(adj[2], vec![1, 3]);
+        assert_eq!(Topology::Ring(5).edge_count(), 5);
+    }
+
+    #[test]
+    fn ring_of_two_has_single_edge() {
+        let adj = Topology::Ring(2).adjacency();
+        assert_eq!(adj[0], vec![1]);
+        assert_eq!(Topology::Ring(2).edge_count(), 1);
+    }
+
+    #[test]
+    fn torus_degree_four() {
+        let t = Topology::Torus(3, 4);
+        assert_eq!(t.n(), 12);
+        for a in t.adjacency() {
+            assert_eq!(a.len(), 4);
+        }
+    }
+
+    #[test]
+    fn complete_and_star_counts() {
+        assert_eq!(Topology::Complete(6).edge_count(), 15);
+        assert_eq!(Topology::Star(6).edge_count(), 5);
+        assert_eq!(Topology::Chain(6).edge_count(), 5);
+    }
+
+    #[test]
+    fn all_topologies_connected() {
+        let topos = vec![
+            Topology::Ring(8),
+            Topology::Torus(3, 3),
+            Topology::Complete(5),
+            Topology::Star(7),
+            Topology::Chain(4),
+            Topology::RandomRegular { n: 16, degree: 4, seed: 1 },
+        ];
+        for t in topos {
+            assert!(t.is_connected(), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn random_regular_has_requested_degree() {
+        let t = Topology::RandomRegular { n: 20, degree: 4, seed: 3 };
+        let adj = t.adjacency();
+        // pairing model succeeded (or fallback; both connected) — check most
+        // nodes have the right degree when pairing succeeds.
+        let deg4 = adj.iter().filter(|a| a.len() == 4).count();
+        assert!(deg4 >= 15, "degrees {:?}", adj.iter().map(|a| a.len()).collect::<Vec<_>>());
+    }
+}

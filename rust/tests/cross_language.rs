@@ -1,0 +1,183 @@
+//! Cross-layer consistency: the L1 Pallas kernels (AOT-compiled to HLO,
+//! executed through PJRT) must agree with the L3 Rust-native codec.
+//!
+//! This is the contract that lets the Rust hot path do quantization locally
+//! while the device-side kernel does it inside the compiled model: both
+//! implement the semantics of python/compile/kernels/ref.py.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use moniqua::quant::{MoniquaCodec, QuantConfig};
+use moniqua::rng::Pcg64;
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct KernelMeta {
+    n: usize,
+    b_theta: f32,
+    levels: u32,
+}
+
+fn kernel_meta() -> Option<KernelMeta> {
+    let text = std::fs::read_to_string(artifacts().join("kernels.meta")).ok()?;
+    let mut n = 0usize;
+    let mut b = 0f32;
+    let mut l = 0u32;
+    for line in text.lines() {
+        let (k, v) = line.split_once('=')?;
+        match k {
+            "n" => n = v.parse().ok()?,
+            "b_theta" => b = v.parse().ok()?,
+            "levels" => l = v.parse().ok()?,
+            _ => {}
+        }
+    }
+    Some(KernelMeta { n, b_theta: b, levels: l })
+}
+
+fn codec_for(meta: &KernelMeta) -> MoniquaCodec {
+    // Reconstruct a codec with the same B_theta the kernel was lowered with:
+    // B = 2θ/(1−2δ) → θ = B(1−2δ)/2.
+    let bits = (meta.levels as f32).log2() as u32;
+    let cfg = QuantConfig::stochastic(bits);
+    let delta = cfg.delta();
+    let theta = meta.b_theta * (1.0 - 2.0 * delta as f32) / 2.0;
+    let codec = MoniquaCodec::from_theta(theta, &cfg);
+    assert!((codec.b_theta - meta.b_theta).abs() < 1e-5);
+    codec
+}
+
+#[test]
+fn pallas_quantize_kernel_matches_rust_codec() {
+    let Some(meta) = kernel_meta() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = moniqua::runtime::Runtime::new(artifacts()).unwrap();
+    let exe = rt
+        .compile_hlo(artifacts().join(format!("quantize_{}.hlo.txt", meta.n)))
+        .unwrap();
+
+    let mut rng = Pcg64::seeded(42);
+    let x: Vec<f32> = (0..meta.n).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+    let u: Vec<f32> = (0..meta.n).map(|_| rng.next_f32()).collect();
+
+    // PJRT path (Pallas kernel lowered via interpret=True)
+    let lx = xla::Literal::vec1(&x);
+    let lu = xla::Literal::vec1(&u);
+    let result = exe.execute::<xla::Literal>(&[lx, lu]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let kernel_codes: Vec<i32> = result.to_tuple1().unwrap().to_vec::<i32>().unwrap();
+
+    // Rust-native path
+    let codec = codec_for(&meta);
+    let mut rust_codes = vec![0u32; meta.n];
+    codec.encode_into(&x, &u, &mut rust_codes);
+
+    let mut mismatches = 0usize;
+    for i in 0..meta.n {
+        if kernel_codes[i] as u32 != rust_codes[i] {
+            mismatches += 1;
+        }
+    }
+    // Bit-exact agreement expected: both are f32 pipelines computing
+    // floor((centered_mod(x/B,1)+0.5)*L - 0.5 + u) with the same constants.
+    // Allow a microscopic tolerance for fused-multiply-add differences at
+    // exact grid boundaries.
+    assert!(
+        mismatches <= meta.n / 1000,
+        "{mismatches}/{} codes disagree between Pallas kernel and Rust codec",
+        meta.n
+    );
+}
+
+#[test]
+fn pallas_recover_kernel_matches_rust_codec() {
+    let Some(meta) = kernel_meta() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = moniqua::runtime::Runtime::new(artifacts()).unwrap();
+    let exe = rt
+        .compile_hlo(artifacts().join(format!("recover_{}.hlo.txt", meta.n)))
+        .unwrap();
+
+    let mut rng = Pcg64::seeded(7);
+    let codes: Vec<i32> = (0..meta.n)
+        .map(|_| (rng.below(meta.levels as u64)) as i32)
+        .collect();
+    let y: Vec<f32> = (0..meta.n).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+
+    let lc = xla::Literal::vec1(&codes);
+    let ly = xla::Literal::vec1(&y);
+    let result = exe.execute::<xla::Literal>(&[lc, ly]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let kernel_out: Vec<f32> = result.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+
+    let codec = codec_for(&meta);
+    let codes_u: Vec<u32> = codes.iter().map(|&c| c as u32).collect();
+    let mut rust_out = vec![0.0f32; meta.n];
+    codec.recover_into(&codes_u, &y, &mut rust_out);
+
+    for i in 0..meta.n {
+        assert!(
+            (kernel_out[i] - rust_out[i]).abs() <= 1e-5 * rust_out[i].abs().max(1.0),
+            "i={i}: kernel {} vs rust {}",
+            kernel_out[i],
+            rust_out[i]
+        );
+    }
+}
+
+#[test]
+fn roundtrip_through_both_layers_respects_lemma2() {
+    // Quantize with the PJRT kernel, recover with the Rust codec: the
+    // mixed-path error must still satisfy Lemma 2's δ·B bound.
+    let Some(meta) = kernel_meta() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = moniqua::runtime::Runtime::new(artifacts()).unwrap();
+    let exe = rt
+        .compile_hlo(artifacts().join(format!("quantize_{}.hlo.txt", meta.n)))
+        .unwrap();
+    let codec = codec_for(&meta);
+    let theta = codec.b_theta * (1.0 - 2.0 * codec.quant.delta() as f32) / 2.0;
+
+    let mut rng = Pcg64::seeded(3);
+    let y: Vec<f32> = (0..meta.n).map(|_| rng.next_gaussian() as f32 * 5.0).collect();
+    let x: Vec<f32> = y
+        .iter()
+        .map(|&v| v + (rng.next_f32() - 0.5) * 1.99 * theta)
+        .collect();
+    let u: Vec<f32> = (0..meta.n).map(|_| rng.next_f32()).collect();
+
+    let result = exe
+        .execute::<xla::Literal>(&[xla::Literal::vec1(&x), xla::Literal::vec1(&u)])
+        .unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let codes: Vec<u32> = result
+        .to_tuple1()
+        .unwrap()
+        .to_vec::<i32>()
+        .unwrap()
+        .into_iter()
+        .map(|c| c as u32)
+        .collect();
+
+    let mut xhat = vec![0.0f32; meta.n];
+    codec.recover_into(&codes, &y, &mut xhat);
+    let bound = codec.max_error() + 1e-4;
+    for i in 0..meta.n {
+        assert!(
+            (xhat[i] - x[i]).abs() <= bound,
+            "i={i}: err {} > bound {bound}",
+            (xhat[i] - x[i]).abs()
+        );
+    }
+}
