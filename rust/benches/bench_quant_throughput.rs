@@ -3,14 +3,20 @@
 //! This is the per-round per-neighbor work Moniqua adds on top of D-PSGD,
 //! and the §Perf target: the pipeline must run at memory-bandwidth-ish
 //! rates so the *network* stays the bottleneck (the whole point of
-//! quantized communication). Results before/after the perf pass are
-//! recorded in EXPERIMENTS.md §Perf.
+//! quantized communication). The headline rows are the **fused** wire path
+//! the round engine actually runs (`encode_packed_into` /
+//! `recover_packed_into` — no `Vec<u32>` intermediate, zero allocations
+//! per call); the unfused two-step rows are kept as the comparison
+//! baseline. Results before/after the perf pass are recorded in
+//! EXPERIMENTS.md §Perf.
 //!
 //! Run: `cargo bench --offline --bench bench_quant_throughput`
 
-use moniqua::bench_support::{bench, black_box, print_throughput, section};
+use moniqua::algorithms::{Algorithm, StepCtx, SyncAlgorithm, ThetaPolicy};
+use moniqua::bench_support::{bench, black_box, print_speedup, print_throughput, section};
 use moniqua::quant::{packing, Compression, MoniquaCodec, QuantConfig};
 use moniqua::rng::Pcg64;
+use moniqua::topology::Topology;
 
 fn main() {
     let d = 1_000_000usize;
@@ -22,70 +28,131 @@ fn main() {
     let mut codes = vec![0u32; d];
     let mut out = vec![0.0f32; d];
 
-    section(&format!("Moniqua codec over d = {d} params (f32 input = {} MB)", bytes_f32 / 1_000_000));
-    for bits in [1u32, 2, 4, 8] {
+    section(&format!(
+        "fused wire path (encode_packed / recover_packed) over d = {d} params ({} MB f32)",
+        bytes_f32 / 1_000_000
+    ));
+    for bits in [1u32, 2, 4, 8, 16] {
         let cfg = QuantConfig::nearest(bits);
         let codec = MoniquaCodec::from_theta(2.0, &cfg);
-        let r = bench(&format!("encode nearest {bits}-bit"), 2, 9, || {
-            codec.encode_into(black_box(&x), &noise, &mut codes);
+        let mut wire = vec![0u8; packing::packed_len(d, bits)];
+        let r = bench(&format!("encode_packed nearest {bits}-bit"), 2, 9, || {
+            codec.encode_packed_into(black_box(&x), &noise, &mut wire);
+        });
+        print_throughput(&r, bytes_f32);
+        let r = bench(&format!("recover_packed {bits}-bit"), 2, 9, || {
+            codec.recover_packed_into(black_box(&wire), &y, &mut out);
         });
         print_throughput(&r, bytes_f32);
     }
-    let cfg = QuantConfig::stochastic(8);
-    let codec = MoniquaCodec::from_theta(2.0, &cfg);
-    let r = bench("encode stochastic 8-bit", 2, 9, || {
-        codec.encode_into(black_box(&x), &noise, &mut codes);
+    let cfg8 = QuantConfig::stochastic(8);
+    let codec8 = MoniquaCodec::from_theta(2.0, &cfg8);
+    let mut wire8 = vec![0u8; packing::packed_len(d, 8)];
+    let r = bench("encode_packed stochastic 8-bit", 2, 9, || {
+        codec8.encode_packed_into(black_box(&x), &noise, &mut wire8);
     });
     print_throughput(&r, bytes_f32);
 
-    let r = bench("recover 8-bit", 2, 9, || {
-        codec.recover_into(black_box(&codes), &y, &mut out);
-    });
-    print_throughput(&r, bytes_f32);
+    section("unfused baseline (encode -> pack, unpack -> recover)");
+    for bits in [1u32, 4, 8] {
+        let cfg = QuantConfig::nearest(bits);
+        let codec = MoniquaCodec::from_theta(2.0, &cfg);
+        let mut packed = vec![0u8; packing::packed_len(d, bits)];
+        let r = bench(&format!("encode+pack {bits}-bit (unfused)"), 2, 9, || {
+            codec.encode_into(black_box(&x), &noise, &mut codes);
+            packing::pack_into(&codes, bits, &mut packed);
+        });
+        print_throughput(&r, bytes_f32);
+        let r = bench(&format!("unpack+recover {bits}-bit (unfused)"), 2, 9, || {
+            packing::unpack_into(black_box(&packed), bits, &mut codes);
+            codec.recover_into(&codes, &y, &mut out);
+        });
+        print_throughput(&r, bytes_f32);
+    }
 
     let r = bench("local_biased (fused line 4)", 2, 9, || {
-        codec.local_biased_into(black_box(&x), &noise, &mut out);
+        codec8.local_biased_into(black_box(&x), &noise, &mut out);
     });
     print_throughput(&r, bytes_f32);
 
-    section("bit packing");
-    for bits in [1u32, 4, 8] {
-        let mut packed = vec![0u8; packing::packed_len(d, bits)];
-        let r = bench(&format!("pack {bits}-bit"), 2, 9, || {
-            packing::pack_into(black_box(&codes[..d]), bits, &mut packed);
-        });
-        print_throughput(&r, bytes_f32);
-        let r = bench(&format!("unpack {bits}-bit"), 2, 9, || {
-            packing::unpack_into(black_box(&packed), bits, &mut codes);
-        });
-        print_throughput(&r, bytes_f32);
-    }
-
     section("entropy coders on a near-consensus 8-bit stream (d = 1M)");
-    let codec8 = MoniquaCodec::from_theta(2.0, &QuantConfig::stochastic(8));
-    codec8.encode_into(&x, &noise, &mut codes);
-    let packed = packing::pack(&codes, 8);
-    for comp in [Compression::Rle, Compression::Deflate, Compression::Bzip2] {
+    codec8.encode_packed_into(&x, &noise, &mut wire8);
+    for comp in Compression::enabled() {
+        if comp == Compression::None {
+            continue;
+        }
         let r = bench(&format!("{comp:?} compress"), 1, 5, || {
-            black_box(comp.compress(black_box(&packed)));
+            black_box(comp.compress(black_box(&wire8)));
         });
-        print_throughput(&r, packed.len());
+        print_throughput(&r, wire8.len());
         println!(
             "    ratio: {} -> {} bytes",
-            packed.len(),
-            comp.wire_len(&packed)
+            wire8.len(),
+            comp.wire_len(&wire8)
         );
     }
 
-    section("full per-neighbor pipeline (encode + pack + unpack + recover), 8-bit");
+    section("full per-neighbor round trip, 8-bit");
+    // What the parallel round engine runs per (sender, receiver) pair:
+    // fused encode straight to wire bytes, fused recovery straight from
+    // them. No Vec<u32>, no per-round allocation.
+    let fused = bench("fused pipeline 8-bit", 2, 9, || {
+        codec8.encode_packed_into(black_box(&x), &noise, &mut wire8);
+        codec8.recover_packed_into(&wire8, &y, &mut out);
+    });
+    print_throughput(&fused, bytes_f32);
+    // The pre-fusion pipeline for comparison (extra Vec<u32> pass each way).
     let mut packed = vec![0u8; packing::packed_len(d, 8)];
-    let r = bench("pipeline 8-bit", 2, 9, || {
+    let unfused = bench("unfused pipeline 8-bit", 2, 9, || {
         codec8.encode_into(black_box(&x), &noise, &mut codes);
         packing::pack_into(&codes, 8, &mut packed);
         packing::unpack_into(&packed, 8, &mut codes);
         codec8.recover_into(&codes, &y, &mut out);
     });
-    print_throughput(&r, bytes_f32);
+    print_throughput(&unfused, bytes_f32);
+    print_speedup("fusion speedup (wire path)", &unfused, &fused);
+
+    section("parallel round engine: full Moniqua rounds, ring(8), d = 250k");
+    // One full synchronous round (encode + recover/accumulate + apply) per
+    // iteration; the engine determinism contract makes every width produce
+    // identical models, so this isolates pure scaling.
+    let n_workers = 8usize;
+    let dm = 250_000usize;
+    let w = Topology::Ring(n_workers).comm_matrix();
+    let rho = w.rho();
+    let algo = Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    };
+    let cores = std::thread::available_parallelism().map_or(1, |p| p.get());
+    let mut widths = vec![1usize, 2, 4];
+    if !widths.contains(&cores) {
+        widths.push(cores);
+    }
+    let mut seq: Option<moniqua::bench_support::BenchResult> = None;
+    for threads in widths {
+        if threads > cores.max(4) {
+            continue;
+        }
+        let mut engine = algo.make_sync(&w, dm);
+        engine.set_threads(threads);
+        let mut xs: Vec<Vec<f32>> = (0..n_workers)
+            .map(|i| (0..dm).map(|k| 0.5 + 0.001 * ((i + k) % 17) as f32).collect())
+            .collect();
+        let grads: Vec<Vec<f32>> = (0..n_workers).map(|_| vec![0.01; dm]).collect();
+        let ctx = StepCtx { seed: 7, rho, g_inf: 1.0 };
+        let mut round = 0u64;
+        let r = bench(&format!("round engine, {threads} thread(s)"), 1, 7, || {
+            engine.step(black_box(&mut xs), &grads, 0.01, round, &ctx);
+            round += 1;
+        });
+        print_throughput(&r, n_workers * dm * 4);
+        if threads == 1 {
+            seq = Some(r);
+        } else if let Some(seq) = &seq {
+            print_speedup(&format!("engine speedup at {threads} threads"), seq, &r);
+        }
+    }
     println!(
         "\nFor reference: a 1 GB/s pipeline quantizes a 1M-param model in ~4 ms —\n\
          below the 8.8 ms one fp32 model costs on a 1 Gbps link (Fig 1b regime)."

@@ -38,6 +38,9 @@ pub struct AdPsgd {
     codes: Vec<u32>,
     buf_a: Vec<f32>,
     buf_b: Vec<f32>,
+    self_a: Vec<f32>,
+    self_b: Vec<f32>,
+    grad_buf: Vec<f32>,
     noise: Vec<f32>,
     seed: u64,
 }
@@ -53,6 +56,9 @@ impl AdPsgd {
             codes: vec![0; d],
             buf_a: vec![0.0; d],
             buf_b: vec![0.0; d],
+            self_a: vec![0.0; d],
+            self_b: vec![0.0; d],
+            grad_buf: vec![0.0; d],
             noise: Vec::new(),
             seed,
         }
@@ -128,13 +134,12 @@ impl AdPsgd {
                 codec.encode_into(&xs[b], &self.noise, &mut self.codes);
                 codec.recover_into(&self.codes, &xs[a], &mut self.buf_b); // x̂_b at a
                 // local biased terms cancel the self-quantization noise
-                let mut self_a = vec![0.0f32; self.d];
-                let mut self_b = vec![0.0f32; self.d];
-                codec.local_biased_into(&xs[a], &self.noise, &mut self_a);
-                codec.local_biased_into(&xs[b], &self.noise, &mut self_b);
+                // (persistent scratch: no per-event allocation on this path)
+                codec.local_biased_into(&xs[a], &self.noise, &mut self.self_a);
+                codec.local_biased_into(&xs[b], &self.noise, &mut self.self_b);
                 for k in 0..self.d {
-                    let da = 0.5 * (self.buf_b[k] - self_a[k]);
-                    let db = 0.5 * (self.buf_a[k] - self_b[k]);
+                    let da = 0.5 * (self.buf_b[k] - self.self_a[k]);
+                    let db = 0.5 * (self.buf_a[k] - self.self_b[k]);
                     xs[a][k] += da;
                     xs[b][k] += db;
                 }
@@ -151,10 +156,10 @@ impl AdPsgd {
         match self.snapshots[a].take() {
             Some((snap, when)) => {
                 self.max_observed_delay = self.max_observed_delay.max(event - when);
-                let mut g = vec![0.0f32; self.d];
-                grad_of(a, &snap, &mut g);
+                self.grad_buf.fill(0.0);
+                grad_of(a, &snap, &mut self.grad_buf);
                 for k in 0..self.d {
-                    xs[a][k] -= lr * g[k];
+                    xs[a][k] -= lr * self.grad_buf[k];
                 }
             }
             None => {

@@ -4,22 +4,28 @@
 //! precision ring-allreduce per step — the latency/bandwidth hog of
 //! Figure 1(c)/(d).
 
+use super::engine::RoundPool;
 use super::{CommStats, StepCtx, SyncAlgorithm};
 
 pub struct AllReduce {
     d: usize,
+    pool: RoundPool,
     mean_grad: Vec<f32>,
 }
 
 impl AllReduce {
     pub fn new(d: usize) -> Self {
-        AllReduce { d, mean_grad: vec![0.0; d] }
+        AllReduce { d, pool: RoundPool::for_dim(d), mean_grad: vec![0.0; d] }
     }
 }
 
 impl SyncAlgorithm for AllReduce {
     fn name(&self) -> &'static str {
         "allreduce"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
     }
 
     fn step(
@@ -31,12 +37,17 @@ impl SyncAlgorithm for AllReduce {
         _ctx: &StepCtx,
     ) -> CommStats {
         let n = xs.len();
+        // The reduction stays sequential: its summation order is part of the
+        // determinism contract (worker order, every pool width).
         self.mean_grad.fill(0.0);
         for g in grads {
             crate::linalg::axpy(&mut self.mean_grad, 1.0 / n as f32, g);
         }
-        for x in xs.iter_mut() {
-            crate::linalg::axpy(x, -lr, &self.mean_grad);
+        {
+            let mean_grad = &self.mean_grad;
+            self.pool.for_each_mut(xs, |_i, x| {
+                crate::linalg::axpy(x, -lr, mean_grad);
+            });
         }
         CommStats {
             bytes_per_msg: 0,

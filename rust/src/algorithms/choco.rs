@@ -10,9 +10,21 @@
 //!     x_{k+1,i} = x_{k+½,i} + γ Σ_j W_ji (x̂_j − x̂_i)
 //! ```
 
+use super::engine::RoundPool;
 use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
 use crate::quant::QuantConfig;
 use crate::topology::CommMatrix;
+
+/// Per-worker round scratch (each field was previously either a shared
+/// single buffer or a parallel `Vec<Vec<..>>`; bundling makes the compress
+/// phase a single disjoint-write parallel loop).
+struct Ws {
+    half: Vec<f32>,
+    diff: Vec<f32>,
+    noise: Vec<f32>,
+    codes: Vec<u32>,
+    qdiff: Vec<f32>,
+}
 
 pub struct Choco {
     w: CommMatrix,
@@ -20,12 +32,9 @@ pub struct Choco {
     cfg: QuantConfig,
     quant: RangeQuantizer,
     pub gamma: f64,
+    pool: RoundPool,
     xhat: Vec<Vec<f32>>,
-    half: Vec<Vec<f32>>,
-    codes: Vec<u32>,
-    qdiff: Vec<Vec<f32>>,
-    diff: Vec<f32>,
-    noise: Vec<f32>,
+    ws: Vec<Ws>,
 }
 
 impl Choco {
@@ -37,13 +46,18 @@ impl Choco {
             cfg,
             quant: RangeQuantizer::new(&cfg, range),
             gamma,
+            pool: RoundPool::for_dim(d),
             // ChocoSGD initializes estimates at 0 (not at x_0).
             xhat: vec![vec![0.0; d]; n],
-            half: vec![vec![0.0; d]; n],
-            codes: vec![0; d],
-            qdiff: vec![vec![0.0; d]; n],
-            diff: vec![0.0; d],
-            noise: Vec::new(),
+            ws: (0..n)
+                .map(|_| Ws {
+                    half: vec![0.0; d],
+                    diff: vec![0.0; d],
+                    noise: Vec::new(),
+                    codes: vec![0; d],
+                    qdiff: vec![0.0; d],
+                })
+                .collect(),
         }
     }
 }
@@ -51,6 +65,10 @@ impl Choco {
 impl SyncAlgorithm for Choco {
     fn name(&self) -> &'static str {
         "choco"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
     }
 
     fn step(
@@ -61,41 +79,50 @@ impl SyncAlgorithm for Choco {
         round: u64,
         ctx: &StepCtx,
     ) -> CommStats {
-        let n = xs.len();
-        let mut bytes = 0usize;
-        for i in 0..n {
-            // local SGD half-step
-            for k in 0..self.d {
-                self.half[i][k] = xs[i][k] - lr * grads[i][k];
-            }
-            // compress difference to own estimate
-            common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
-            for k in 0..self.d {
-                self.diff[k] = self.half[i][k] - self.xhat[i][k];
-            }
-            self.quant
-                .quantize_into(&self.diff, &self.noise, &mut self.codes, &mut self.qdiff[i]);
-            if i == 0 {
-                bytes = common::wire_bytes(&self.cfg, &self.codes);
-            }
+        let cfg = self.cfg;
+        let d = self.d;
+        let quant = self.quant;
+        let seed = ctx.seed;
+        // half-step + compress difference to own estimate
+        {
+            let xs_r: &[Vec<f32>] = xs;
+            let xhat = &self.xhat;
+            self.pool.for_each_mut(&mut self.ws, |i, ws| {
+                for k in 0..d {
+                    ws.half[k] = xs_r[i][k] - lr * grads[i][k];
+                }
+                common::rounding_noise(&cfg, seed, round, i, d, &mut ws.noise);
+                for k in 0..d {
+                    ws.diff[k] = ws.half[k] - xhat[i][k];
+                }
+                quant.quantize_into(&ws.diff, &ws.noise, &mut ws.codes, &mut ws.qdiff);
+            });
         }
+        let bytes = common::wire_bytes(&cfg, &self.ws[0].codes);
         // estimate updates (applied by all holders)
-        for i in 0..n {
-            for k in 0..self.d {
-                self.xhat[i][k] += self.qdiff[i][k];
-            }
+        {
+            let ws = &self.ws;
+            self.pool.for_each_mut(&mut self.xhat, |i, xh| {
+                for k in 0..d {
+                    xh[k] += ws[i].qdiff[k];
+                }
+            });
         }
         // consensus step with γ
-        let gamma = self.gamma as f32;
-        for i in 0..n {
-            let x = &mut xs[i];
-            x.copy_from_slice(&self.half[i]);
-            for &j in &self.w.neighbors[i] {
-                let wji = self.w.weight(j, i) as f32;
-                for k in 0..self.d {
-                    x[k] += gamma * wji * (self.xhat[j][k] - self.xhat[i][k]);
+        {
+            let gamma = self.gamma as f32;
+            let w = &self.w;
+            let ws = &self.ws;
+            let xhat = &self.xhat;
+            self.pool.for_each_mut(xs, |i, x| {
+                x.copy_from_slice(&ws[i].half);
+                for &j in &w.neighbors[i] {
+                    let wji = w.weight(j, i) as f32;
+                    for k in 0..d {
+                        x[k] += gamma * wji * (xhat[j][k] - xhat[i][k]);
+                    }
                 }
-            }
+            });
         }
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {

@@ -54,10 +54,53 @@ pub fn rounding_noise(
     rng.fill_uniform_f32(buf);
 }
 
+/// Encode-phase noise for worker `i` inside a parallel phase: in
+/// shared-randomness mode, returns the round-shared buffer the caller drew
+/// once before the phase (see [`rounding_noise`] with worker 0 — the
+/// stream ignores the worker index there); in private mode, fills this
+/// worker's scratch from its own `(seed, round, worker)` stream. Keeping
+/// this in one place means the Moniqua and D² engines can never diverge on
+/// the noise-stream convention.
+pub fn phase_noise<'a>(
+    cfg: &QuantConfig,
+    seed: u64,
+    round: u64,
+    worker: usize,
+    d: usize,
+    shared: &'a [f32],
+    buf: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    if cfg.shared_randomness {
+        shared
+    } else {
+        rounding_noise(cfg, seed, round, worker, d, buf);
+        buf
+    }
+}
+
 /// Wire size of a packed+compressed+digested message carrying `d` codes.
+///
+/// Without recompression the payload length is a pure function of `(d,
+/// bits)`, so it is computed arithmetically via
+/// [`QuantConfig::payload_bytes`] — the compressor (and the re-pack that
+/// used to feed it) only runs when `compression != None`.
 pub fn wire_bytes(cfg: &QuantConfig, codes: &[u32]) -> usize {
-    let packed = packing::pack(codes, cfg.bits);
-    let payload = cfg.compression.wire_len(&packed);
+    let payload = match cfg.compression {
+        crate::quant::Compression::None => cfg.payload_bytes(codes.len()),
+        comp => comp.wire_len(&packing::pack(codes, cfg.bits)),
+    };
+    payload + if cfg.verify_hash { 8 } else { 0 }
+}
+
+/// As [`wire_bytes`] but for a message that already exists in packed wire
+/// form (the fused `encode_packed_into` path): never re-packs, and only
+/// invokes the compressor when one is configured.
+pub fn wire_bytes_packed(cfg: &QuantConfig, d: usize, packed: &[u8]) -> usize {
+    debug_assert_eq!(packed.len(), cfg.payload_bytes(d));
+    let payload = match cfg.compression {
+        crate::quant::Compression::None => cfg.payload_bytes(d),
+        comp => comp.wire_len(packed),
+    };
     payload + if cfg.verify_hash { 8 } else { 0 }
 }
 
@@ -160,11 +203,39 @@ mod tests {
         assert_eq!(plain, 1000);
         let hashed = wire_bytes(&QuantConfig::stochastic(8).with_verify_hash(true), &codes);
         assert_eq!(hashed, 1008);
+        // RLE is always compiled in; a constant stream collapses to runs.
         let zipped = wire_bytes(
-            &QuantConfig::stochastic(8).with_compression(Compression::Bzip2),
+            &QuantConfig::stochastic(8).with_compression(Compression::Rle),
             &codes,
         );
         assert!(zipped < plain, "constant stream compresses: {zipped}");
+    }
+
+    #[test]
+    fn wire_bytes_is_arithmetic_without_compression() {
+        // No compressor configured → length must equal the closed form for
+        // every bit width (the packed buffer is never rebuilt).
+        for bits in [1u32, 3, 8, 13] {
+            let cfg = QuantConfig::nearest(bits);
+            let codes = vec![0u32; 777];
+            assert_eq!(wire_bytes(&cfg, &codes), cfg.payload_bytes(777));
+        }
+    }
+
+    #[test]
+    fn wire_bytes_packed_matches_codes_path() {
+        let codes: Vec<u32> = (0..500u32).map(|i| i % 16).collect();
+        for comp in Compression::enabled() {
+            let cfg = QuantConfig::nearest(4)
+                .with_compression(comp)
+                .with_verify_hash(true);
+            let packed = packing::pack(&codes, 4);
+            assert_eq!(
+                wire_bytes_packed(&cfg, codes.len(), &packed),
+                wire_bytes(&cfg, &codes),
+                "{comp:?}"
+            );
+        }
     }
 
     #[test]

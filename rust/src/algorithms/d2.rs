@@ -11,41 +11,62 @@
 //! `X_{−1} = G̃_{−1} = 0` by convention; the k = 0 step degenerates to plain
 //! SGD. D² requires λ_n(W) > −1/3 (checked at construction).
 
+use super::engine::RoundPool;
 use super::{common, CommStats, StepCtx, SyncAlgorithm, ThetaPolicy};
-use crate::quant::{MoniquaCodec, QuantConfig};
+use crate::quant::{packing, MoniquaCodec, QuantConfig};
 use crate::topology::CommMatrix;
+
+/// Per-worker state + scratch. `x_prev`/`g_prev` are the variance-reduction
+/// history; `half` is read by neighbors in the averaging phase; `wire` /
+/// `xhat_self` / `noise` serve the Moniqua-quantized mode's fused wire path.
+struct Ws {
+    x_prev: Vec<f32>,
+    g_prev: Vec<f32>,
+    half: Vec<f32>,
+    wire: Vec<u8>,
+    xhat_self: Vec<f32>,
+    noise: Vec<f32>,
+}
 
 pub struct D2 {
     w: CommMatrix,
     d: usize,
     /// Some(..) => Moniqua-quantized averaging (Algorithm 2).
     moniqua: Option<(ThetaPolicy, QuantConfig)>,
-    x_prev: Vec<Vec<f32>>,
-    g_prev: Vec<Vec<f32>>,
+    pool: RoundPool,
     started: bool,
-    half: Vec<Vec<f32>>,
-    codes: Vec<Vec<u32>>,
-    xhat_self: Vec<Vec<f32>>,
-    recover_buf: Vec<f32>,
-    noise: Vec<f32>,
+    ws: Vec<Ws>,
+    /// Receiver-side recovery buffers (Moniqua mode).
+    recover: Vec<Vec<f32>>,
+    /// Round-shared noise (shared-randomness mode): one fill per round.
+    shared_noise: Vec<f32>,
     last_theta: f64,
 }
 
 impl D2 {
     pub fn new(w: CommMatrix, d: usize, moniqua: Option<(ThetaPolicy, QuantConfig)>) -> Self {
         let n = w.n();
+        let wire_len = moniqua
+            .as_ref()
+            .map_or(0, |(_, cfg)| packing::packed_len(d, cfg.bits));
         D2 {
             w,
             d,
             moniqua,
-            x_prev: vec![vec![0.0; d]; n],
-            g_prev: vec![vec![0.0; d]; n],
+            pool: RoundPool::for_dim(d),
             started: false,
-            half: vec![vec![0.0; d]; n],
-            codes: vec![vec![0; d]; n],
-            xhat_self: vec![vec![0.0; d]; n],
-            recover_buf: vec![0.0; d],
-            noise: Vec::new(),
+            ws: (0..n)
+                .map(|_| Ws {
+                    x_prev: vec![0.0; d],
+                    g_prev: vec![0.0; d],
+                    half: vec![0.0; d],
+                    wire: vec![0u8; wire_len],
+                    xhat_self: vec![0.0; d],
+                    noise: Vec::new(),
+                })
+                .collect(),
+            recover: vec![vec![0.0; d]; n],
+            shared_noise: Vec::new(),
             last_theta: 0.0,
         }
     }
@@ -64,6 +85,10 @@ impl SyncAlgorithm for D2 {
         self.moniqua.as_ref().map(|_| self.last_theta)
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],
@@ -73,37 +98,40 @@ impl SyncAlgorithm for D2 {
         ctx: &StepCtx,
     ) -> CommStats {
         let n = xs.len();
-        // Half step with variance reduction.
-        for i in 0..n {
-            let h = &mut self.half[i];
-            if self.started {
-                for k in 0..self.d {
-                    h[k] = 2.0 * xs[i][k] - self.x_prev[i][k]
-                        - lr * (grads[i][k] - self.g_prev[i][k]);
+        let d = self.d;
+        // Half step with variance reduction (+ history update).
+        {
+            let started = self.started;
+            let xs_r: &[Vec<f32>] = xs;
+            self.pool.for_each_mut(&mut self.ws, |i, ws| {
+                if started {
+                    for k in 0..d {
+                        ws.half[k] = 2.0 * xs_r[i][k] - ws.x_prev[k]
+                            - lr * (grads[i][k] - ws.g_prev[k]);
+                    }
+                } else {
+                    for k in 0..d {
+                        ws.half[k] = xs_r[i][k] - lr * grads[i][k];
+                    }
                 }
-            } else {
-                for k in 0..self.d {
-                    h[k] = xs[i][k] - lr * grads[i][k];
-                }
-            }
-        }
-        for i in 0..n {
-            self.x_prev[i].copy_from_slice(&xs[i]);
-            self.g_prev[i].copy_from_slice(&grads[i]);
+                ws.x_prev.copy_from_slice(&xs_r[i]);
+                ws.g_prev.copy_from_slice(&grads[i]);
+            });
         }
         self.started = true;
 
-        let stats = match &self.moniqua {
+        match self.moniqua.clone() {
             None => {
                 // X_{k+1} = X_{k+1/2} W (exact averaging on the wire).
-                for i in 0..n {
-                    let x = &mut xs[i];
+                let w = &self.w;
+                let ws = &self.ws;
+                self.pool.for_each_mut(xs, |i, x| {
                     x.fill(0.0);
-                    crate::linalg::axpy(x, self.w.weight(i, i) as f32, &self.half[i]);
-                    for &j in &self.w.neighbors[i] {
-                        crate::linalg::axpy(x, self.w.weight(j, i) as f32, &self.half[j]);
+                    crate::linalg::axpy(x, w.weight(i, i) as f32, &ws[i].half);
+                    for &j in &w.neighbors[i] {
+                        crate::linalg::axpy(x, w.weight(j, i) as f32, &ws[j].half);
                     }
-                }
+                });
                 let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
                 CommStats {
                     bytes_per_msg: self.d * 4,
@@ -115,26 +143,39 @@ impl SyncAlgorithm for D2 {
             Some((theta_policy, cfg)) => {
                 let theta = theta_policy.theta(lr as f64, ctx.g_inf, n, ctx.rho);
                 self.last_theta = theta;
-                let codec = MoniquaCodec::from_theta(theta as f32, cfg);
-                common::rounding_noise(cfg, ctx.seed, round, 0, self.d, &mut self.noise);
-                let mut bytes = 0usize;
-                for i in 0..n {
-                    codec.encode_into(&self.half[i], &self.noise, &mut self.codes[i]);
-                    codec.local_biased_into(&self.half[i], &self.noise, &mut self.xhat_self[i]);
-                    if i == 0 {
-                        bytes = common::wire_bytes(cfg, &self.codes[i]);
-                    }
+                let codec = MoniquaCodec::from_theta(theta as f32, &cfg);
+                let seed = ctx.seed;
+                // encode phase: fused wrap→quantize→pack + local biased
+                // term; shared-randomness noise is drawn once per round.
+                let use_shared = cfg.shared_randomness;
+                if use_shared {
+                    common::rounding_noise(&cfg, seed, round, 0, d, &mut self.shared_noise);
                 }
-                for i in 0..n {
-                    let x = &mut xs[i];
-                    x.copy_from_slice(&self.half[i]);
-                    for &j in &self.w.neighbors[i] {
-                        let wji = self.w.weight(j, i) as f32;
-                        codec.recover_into(&self.codes[j], &self.half[i], &mut self.recover_buf);
-                        for k in 0..self.d {
-                            x[k] += wji * (self.recover_buf[k] - self.xhat_self[i][k]);
+                {
+                    let shared_noise = &self.shared_noise;
+                    self.pool.for_each_mut(&mut self.ws, |i, ws| {
+                        let noise = common::phase_noise(
+                            &cfg, seed, round, i, d, shared_noise, &mut ws.noise,
+                        );
+                        codec.encode_packed_into(&ws.half, noise, &mut ws.wire);
+                        codec.local_biased_into(&ws.half, noise, &mut ws.xhat_self);
+                    });
+                }
+                let bytes = common::wire_bytes_packed(&cfg, d, &self.ws[0].wire);
+                // recover + apply phase
+                {
+                    let w = &self.w;
+                    let ws = &self.ws;
+                    self.pool.for_each_mut2(xs, &mut self.recover, |i, x, rec| {
+                        x.copy_from_slice(&ws[i].half);
+                        for &j in &w.neighbors[i] {
+                            let wji = w.weight(j, i) as f32;
+                            codec.recover_packed_into(&ws[j].wire, &ws[i].half, rec);
+                            for k in 0..d {
+                                x[k] += wji * (rec[k] - ws[i].xhat_self[k]);
+                            }
                         }
-                    }
+                    });
                 }
                 let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
                 CommStats {
@@ -144,8 +185,7 @@ impl SyncAlgorithm for D2 {
                     extra_local_passes: 0,
                 }
             }
-        };
-        stats
+        }
     }
 }
 

@@ -15,9 +15,18 @@
 //! consensus dynamics amplify it — which fails at aggressive budgets
 //! (1–2 bits) exactly as Table 2 reports ("diverge").
 
+use super::engine::RoundPool;
 use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
 use crate::quant::QuantConfig;
 use crate::topology::CommMatrix;
+
+/// Per-worker quantization scratch for the compress phase.
+struct Ws {
+    diff: Vec<f32>,
+    noise: Vec<f32>,
+    codes: Vec<u32>,
+    qdiff: Vec<f32>,
+}
 
 pub struct Dcd {
     w: CommMatrix,
@@ -27,15 +36,13 @@ pub struct Dcd {
     /// true → per-message (QSGD-style) rescaling with a 4-byte header;
     /// false → the paper's fixed-grid quantizer (range clipping).
     dynamic: bool,
+    pool: RoundPool,
     /// Replicas x̂_i — one logical copy per (edge, endpoint) in a real
     /// deployment (Θ(md) memory, see `extra_memory_floats`), stored once
     /// here since the simulator shares address space.
     xhat: Vec<Vec<f32>>,
     z: Vec<Vec<f32>>,
-    codes: Vec<u32>,
-    qdiff: Vec<Vec<f32>>,
-    diff: Vec<f32>,
-    noise: Vec<f32>,
+    ws: Vec<Ws>,
     initialized: bool,
 }
 
@@ -51,12 +58,17 @@ impl Dcd {
             cfg,
             quant: RangeQuantizer::new(&cfg, if dynamic { 1.0 } else { range }),
             dynamic,
+            pool: RoundPool::for_dim(d),
             xhat: vec![vec![0.0; d]; n],
             z: vec![vec![0.0; d]; n],
-            codes: vec![0; d],
-            qdiff: vec![vec![0.0; d]; n],
-            diff: vec![0.0; d],
-            noise: Vec::new(),
+            ws: (0..n)
+                .map(|_| Ws {
+                    diff: vec![0.0; d],
+                    noise: Vec::new(),
+                    codes: vec![0; d],
+                    qdiff: vec![0.0; d],
+                })
+                .collect(),
             initialized: false,
         }
     }
@@ -65,6 +77,10 @@ impl Dcd {
 impl SyncAlgorithm for Dcd {
     fn name(&self) -> &'static str {
         "dcd"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
     }
 
     fn step(
@@ -76,6 +92,11 @@ impl SyncAlgorithm for Dcd {
         ctx: &StepCtx,
     ) -> CommStats {
         let n = xs.len();
+        let cfg = self.cfg;
+        let d = self.d;
+        let quant = self.quant;
+        let dynamic = self.dynamic;
+        let seed = ctx.seed;
         if !self.initialized {
             // Replicas start at the (identical) initialization — exact.
             for i in 0..n {
@@ -84,40 +105,50 @@ impl SyncAlgorithm for Dcd {
             self.initialized = true;
         }
         // z_i = Σ_j W_ji x̂_j − α g_i
-        for i in 0..n {
-            let z = &mut self.z[i];
-            z.fill(0.0);
-            crate::linalg::axpy(z, self.w.weight(i, i) as f32, &self.xhat[i]);
-            for &j in &self.w.neighbors[i] {
-                crate::linalg::axpy(z, self.w.weight(j, i) as f32, &self.xhat[j]);
-            }
-            crate::linalg::axpy(z, -lr, &grads[i]);
+        {
+            let w = &self.w;
+            let xhat = &self.xhat;
+            self.pool.for_each_mut(&mut self.z, |i, z| {
+                z.fill(0.0);
+                crate::linalg::axpy(z, w.weight(i, i) as f32, &xhat[i]);
+                for &j in &w.neighbors[i] {
+                    crate::linalg::axpy(z, w.weight(j, i) as f32, &xhat[j]);
+                }
+                crate::linalg::axpy(z, -lr, &grads[i]);
+            });
         }
-        // quantize differences, update replicas
-        let mut bytes = 0usize;
-        for i in 0..n {
-            common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
-            for k in 0..self.d {
-                self.diff[k] = self.z[i][k] - self.xhat[i][k];
-            }
-            if self.dynamic {
-                self.quant.quantize_dynamic_into(
-                    &self.diff, &self.noise, &mut self.codes, &mut self.qdiff[i],
-                );
-            } else {
-                self.quant
-                    .quantize_into(&self.diff, &self.noise, &mut self.codes, &mut self.qdiff[i]);
-            }
-            if i == 0 {
-                bytes = common::wire_bytes(&self.cfg, &self.codes)
-                    + if self.dynamic { 4 } else { 0 };
-            }
+        // quantize differences
+        {
+            let z = &self.z;
+            let xhat = &self.xhat;
+            self.pool.for_each_mut(&mut self.ws, |i, ws| {
+                common::rounding_noise(&cfg, seed, round, i, d, &mut ws.noise);
+                for k in 0..d {
+                    ws.diff[k] = z[i][k] - xhat[i][k];
+                }
+                if dynamic {
+                    quant.quantize_dynamic_into(
+                        &ws.diff, &ws.noise, &mut ws.codes, &mut ws.qdiff,
+                    );
+                } else {
+                    quant.quantize_into(&ws.diff, &ws.noise, &mut ws.codes, &mut ws.qdiff);
+                }
+            });
         }
-        for i in 0..n {
-            for k in 0..self.d {
-                self.xhat[i][k] += self.qdiff[i][k];
-            }
-            xs[i].copy_from_slice(&self.z[i]);
+        let bytes = common::wire_bytes(&cfg, &self.ws[0].codes)
+            + if dynamic { 4 } else { 0 };
+        // update replicas + adopt z
+        {
+            let ws = &self.ws;
+            self.pool.for_each_mut(&mut self.xhat, |i, xh| {
+                for k in 0..d {
+                    xh[k] += ws[i].qdiff[k];
+                }
+            });
+        }
+        {
+            let z = &self.z;
+            self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&z[i]));
         }
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {

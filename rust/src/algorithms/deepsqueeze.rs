@@ -14,9 +14,21 @@
 //! compensation noise is large — Table 2 shows it converging with slightly
 //! lower accuracy than Moniqua/Choco.
 
+use super::engine::RoundPool;
 use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
 use crate::quant::QuantConfig;
 use crate::topology::CommMatrix;
+
+/// Per-worker state + scratch: `err` is the algorithm's persistent error
+/// accumulator (the Θ(nd) memory of Table 1); the rest is round scratch.
+struct Ws {
+    err: Vec<f32>,
+    v: Vec<f32>,
+    c: Vec<f32>,
+    u: Vec<f32>,
+    codes: Vec<u32>,
+    noise: Vec<f32>,
+}
 
 pub struct DeepSqueeze {
     w: CommMatrix,
@@ -24,12 +36,8 @@ pub struct DeepSqueeze {
     cfg: QuantConfig,
     quant: RangeQuantizer,
     pub gamma: f64,
-    err: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
-    c: Vec<Vec<f32>>,
-    u: Vec<f32>,
-    codes: Vec<u32>,
-    noise: Vec<f32>,
+    pool: RoundPool,
+    ws: Vec<Ws>,
 }
 
 impl DeepSqueeze {
@@ -41,19 +49,33 @@ impl DeepSqueeze {
             cfg,
             quant: RangeQuantizer::new(&cfg, range),
             gamma,
-            err: vec![vec![0.0; d]; n],
-            v: vec![vec![0.0; d]; n],
-            c: vec![vec![0.0; d]; n],
-            u: vec![0.0; d],
-            codes: vec![0; d],
-            noise: Vec::new(),
+            pool: RoundPool::for_dim(d),
+            ws: (0..n)
+                .map(|_| Ws {
+                    err: vec![0.0; d],
+                    v: vec![0.0; d],
+                    c: vec![0.0; d],
+                    u: vec![0.0; d],
+                    codes: vec![0; d],
+                    noise: Vec::new(),
+                })
+                .collect(),
         }
+    }
+
+    /// Worker `i`'s error accumulator (diagnostics/tests).
+    pub fn error_accumulator(&self, i: usize) -> &[f32] {
+        &self.ws[i].err
     }
 }
 
 impl SyncAlgorithm for DeepSqueeze {
     fn name(&self) -> &'static str {
         "deepsqueeze"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
     }
 
     fn step(
@@ -64,33 +86,38 @@ impl SyncAlgorithm for DeepSqueeze {
         round: u64,
         ctx: &StepCtx,
     ) -> CommStats {
-        let n = xs.len();
-        let mut bytes = 0usize;
-        for i in 0..n {
-            for k in 0..self.d {
-                self.v[i][k] = xs[i][k] - lr * grads[i][k];
-                self.u[k] = self.v[i][k] + self.err[i][k];
-            }
-            common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
-            self.quant
-                .quantize_into(&self.u, &self.noise, &mut self.codes, &mut self.c[i]);
-            for k in 0..self.d {
-                self.err[i][k] = self.u[k] - self.c[i][k];
-            }
-            if i == 0 {
-                bytes = common::wire_bytes(&self.cfg, &self.codes);
-            }
-        }
-        let gamma = self.gamma as f32;
-        for i in 0..n {
-            let x = &mut xs[i];
-            x.copy_from_slice(&self.v[i]);
-            for &j in &self.w.neighbors[i] {
-                let wji = self.w.weight(j, i) as f32;
-                for k in 0..self.d {
-                    x[k] += gamma * wji * (self.c[j][k] - self.c[i][k]);
+        let cfg = self.cfg;
+        let d = self.d;
+        let quant = self.quant;
+        let seed = ctx.seed;
+        {
+            let xs_r: &[Vec<f32>] = xs;
+            self.pool.for_each_mut(&mut self.ws, |i, ws| {
+                for k in 0..d {
+                    ws.v[k] = xs_r[i][k] - lr * grads[i][k];
+                    ws.u[k] = ws.v[k] + ws.err[k];
                 }
-            }
+                common::rounding_noise(&cfg, seed, round, i, d, &mut ws.noise);
+                quant.quantize_into(&ws.u, &ws.noise, &mut ws.codes, &mut ws.c);
+                for k in 0..d {
+                    ws.err[k] = ws.u[k] - ws.c[k];
+                }
+            });
+        }
+        let bytes = common::wire_bytes(&cfg, &self.ws[0].codes);
+        {
+            let gamma = self.gamma as f32;
+            let w = &self.w;
+            let ws = &self.ws;
+            self.pool.for_each_mut(xs, |i, x| {
+                x.copy_from_slice(&ws[i].v);
+                for &j in &w.neighbors[i] {
+                    let wji = w.weight(j, i) as f32;
+                    for k in 0..d {
+                        x[k] += gamma * wji * (ws[j].c[k] - ws[i].c[k]);
+                    }
+                }
+            });
         }
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {
@@ -160,10 +187,8 @@ mod tests {
                 .collect();
             alg.step(&mut xs, &grads, 0.1, k, &ctx(rho));
         }
-        let worst = alg
-            .err
-            .iter()
-            .map(|e| crate::linalg::norm_inf(e))
+        let worst = (0..4)
+            .map(|i| crate::linalg::norm_inf(alg.error_accumulator(i)))
             .fold(0.0f32, f32::max);
         // error feedback bounded by quantizer resolution scale
         assert!(worst <= 2.0 * alg.quant.max_error() + 1e-4, "err {worst}");

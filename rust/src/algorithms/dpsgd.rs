@@ -5,25 +5,31 @@
 //!     x_{k+1,i} = Σ_j W_ji x_{k,j} − α_k g̃_{k,i}
 //! ```
 
+use super::engine::RoundPool;
 use super::{CommStats, StepCtx, SyncAlgorithm};
 use crate::topology::CommMatrix;
 
 pub struct DPsgd {
     w: CommMatrix,
     d: usize,
+    pool: RoundPool,
     scratch: Vec<Vec<f32>>,
 }
 
 impl DPsgd {
     pub fn new(w: CommMatrix, d: usize) -> Self {
         let n = w.n();
-        DPsgd { w, d, scratch: vec![vec![0.0; d]; n] }
+        DPsgd { w, d, pool: RoundPool::for_dim(d), scratch: vec![vec![0.0; d]; n] }
     }
 }
 
 impl SyncAlgorithm for DPsgd {
     fn name(&self) -> &'static str {
         "dpsgd"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
     }
 
     fn step(
@@ -34,20 +40,22 @@ impl SyncAlgorithm for DPsgd {
         _round: u64,
         _ctx: &StepCtx,
     ) -> CommStats {
-        let n = xs.len();
         // x_{k+1,i} = Σ_j W_ji x_j − α g_i  (exact neighbor models on the wire)
-        for i in 0..n {
-            let out = &mut self.scratch[i];
-            out.fill(0.0);
-            let wii = self.w.weight(i, i) as f32;
-            crate::linalg::axpy(out, wii, &xs[i]);
-            for &j in &self.w.neighbors[i] {
-                crate::linalg::axpy(out, self.w.weight(j, i) as f32, &xs[j]);
-            }
-            crate::linalg::axpy(out, -lr, &grads[i]);
+        {
+            let w = &self.w;
+            let xs_r: &[Vec<f32>] = xs;
+            self.pool.for_each_mut(&mut self.scratch, |i, out| {
+                out.fill(0.0);
+                crate::linalg::axpy(out, w.weight(i, i) as f32, &xs_r[i]);
+                for &j in &w.neighbors[i] {
+                    crate::linalg::axpy(out, w.weight(j, i) as f32, &xs_r[j]);
+                }
+                crate::linalg::axpy(out, -lr, &grads[i]);
+            });
         }
-        for i in 0..n {
-            xs[i].copy_from_slice(&self.scratch[i]);
+        {
+            let scratch = &self.scratch;
+            self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&scratch[i]));
         }
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {

@@ -15,9 +15,18 @@
 //! saturates — ECD degrades/diverges at low bits (Table 2: diverges at
 //! 1 bit, ≈36% accuracy at 2 bits).
 
+use super::engine::RoundPool;
 use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
 use crate::quant::QuantConfig;
 use crate::topology::CommMatrix;
+
+/// Per-worker extrapolate+quantize scratch.
+struct Ws {
+    z: Vec<f32>,
+    noise: Vec<f32>,
+    codes: Vec<u32>,
+    qz: Vec<f32>,
+}
 
 pub struct Ecd {
     w: CommMatrix,
@@ -26,12 +35,10 @@ pub struct Ecd {
     quant: RangeQuantizer,
     /// true → per-message rescaling (+4-byte header); false → fixed grid.
     dynamic: bool,
+    pool: RoundPool,
     xhat: Vec<Vec<f32>>,
     x_new: Vec<Vec<f32>>,
-    z: Vec<f32>,
-    qz: Vec<Vec<f32>>,
-    codes: Vec<u32>,
-    noise: Vec<f32>,
+    ws: Vec<Ws>,
     initialized: bool,
 }
 
@@ -46,12 +53,17 @@ impl Ecd {
             cfg,
             quant: RangeQuantizer::new(&cfg, if dynamic { 1.0 } else { range }),
             dynamic,
+            pool: RoundPool::for_dim(d),
             xhat: vec![vec![0.0; d]; n],
             x_new: vec![vec![0.0; d]; n],
-            z: vec![0.0; d],
-            qz: vec![vec![0.0; d]; n],
-            codes: vec![0; d],
-            noise: Vec::new(),
+            ws: (0..n)
+                .map(|_| Ws {
+                    z: vec![0.0; d],
+                    noise: Vec::new(),
+                    codes: vec![0; d],
+                    qz: vec![0.0; d],
+                })
+                .collect(),
             initialized: false,
         }
     }
@@ -60,6 +72,10 @@ impl Ecd {
 impl SyncAlgorithm for Ecd {
     fn name(&self) -> &'static str {
         "ecd"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
     }
 
     fn step(
@@ -71,6 +87,11 @@ impl SyncAlgorithm for Ecd {
         ctx: &StepCtx,
     ) -> CommStats {
         let n = xs.len();
+        let cfg = self.cfg;
+        let d = self.d;
+        let quant = self.quant;
+        let dynamic = self.dynamic;
+        let seed = ctx.seed;
         if !self.initialized {
             for i in 0..n {
                 self.xhat[i].copy_from_slice(&xs[i]);
@@ -80,44 +101,53 @@ impl SyncAlgorithm for Ecd {
         let k = round as f32;
         let ext = (k + 2.0) / 2.0; // extrapolation weight
         let eta = 2.0 / (k + 2.0); // estimate update weight
-        let mut bytes = 0usize;
-        for i in 0..n {
-            // averaging with estimates + gradient
-            let xn = &mut self.x_new[i];
-            xn.fill(0.0);
-            crate::linalg::axpy(xn, self.w.weight(i, i) as f32, &self.xhat[i]);
-            for &j in &self.w.neighbors[i] {
-                crate::linalg::axpy(xn, self.w.weight(j, i) as f32, &self.xhat[j]);
-            }
-            crate::linalg::axpy(xn, -lr, &grads[i]);
+        // averaging with estimates + gradient
+        {
+            let w = &self.w;
+            let xhat = &self.xhat;
+            self.pool.for_each_mut(&mut self.x_new, |i, xn| {
+                xn.fill(0.0);
+                crate::linalg::axpy(xn, w.weight(i, i) as f32, &xhat[i]);
+                for &j in &w.neighbors[i] {
+                    crate::linalg::axpy(xn, w.weight(j, i) as f32, &xhat[j]);
+                }
+                crate::linalg::axpy(xn, -lr, &grads[i]);
+            });
         }
-        for i in 0..n {
-            // extrapolate and quantize
-            common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
-            for kk in 0..self.d {
-                self.z[kk] = (1.0 - ext) * xs[i][kk] + ext * self.x_new[i][kk];
-            }
-            // The extrapolated z grows like (k+2)/2·‖x‖ by construction, so
-            // the fixed grid saturates after ~2·range/‖x‖ rounds — exactly
-            // how ECD dies at fixed budgets (Table 2). Dynamic mode models
-            // the charitable per-message-rescaled implementation instead.
-            if self.dynamic {
-                self.quant
-                    .quantize_dynamic_into(&self.z, &self.noise, &mut self.codes, &mut self.qz[i]);
-            } else {
-                self.quant
-                    .quantize_into(&self.z, &self.noise, &mut self.codes, &mut self.qz[i]);
-            }
-            if i == 0 {
-                bytes = common::wire_bytes(&self.cfg, &self.codes)
-                    + if self.dynamic { 4 } else { 0 };
-            }
+        // extrapolate and quantize.
+        // The extrapolated z grows like (k+2)/2·‖x‖ by construction, so the
+        // fixed grid saturates after ~2·range/‖x‖ rounds — exactly how ECD
+        // dies at fixed budgets (Table 2). Dynamic mode models the
+        // charitable per-message-rescaled implementation instead.
+        {
+            let xs_r: &[Vec<f32>] = xs;
+            let x_new = &self.x_new;
+            self.pool.for_each_mut(&mut self.ws, |i, ws| {
+                common::rounding_noise(&cfg, seed, round, i, d, &mut ws.noise);
+                for kk in 0..d {
+                    ws.z[kk] = (1.0 - ext) * xs_r[i][kk] + ext * x_new[i][kk];
+                }
+                if dynamic {
+                    quant.quantize_dynamic_into(&ws.z, &ws.noise, &mut ws.codes, &mut ws.qz);
+                } else {
+                    quant.quantize_into(&ws.z, &ws.noise, &mut ws.codes, &mut ws.qz);
+                }
+            });
         }
-        for i in 0..n {
-            for kk in 0..self.d {
-                self.xhat[i][kk] = (1.0 - eta) * self.xhat[i][kk] + eta * self.qz[i][kk];
-            }
-            xs[i].copy_from_slice(&self.x_new[i]);
+        let bytes = common::wire_bytes(&cfg, &self.ws[0].codes)
+            + if dynamic { 4 } else { 0 };
+        // estimate update + adopt x_new
+        {
+            let ws = &self.ws;
+            self.pool.for_each_mut(&mut self.xhat, |i, xh| {
+                for kk in 0..d {
+                    xh[kk] = (1.0 - eta) * xh[kk] + eta * ws[i].qz[kk];
+                }
+            });
+        }
+        {
+            let x_new = &self.x_new;
+            self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&x_new[i]));
         }
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {

@@ -1,0 +1,249 @@
+//! The parallel round engine: a persistent worker pool that fans the three
+//! per-round phases of every [`super::SyncAlgorithm`] out across cores.
+//!
+//! A synchronous decentralized round is embarrassingly parallel across the
+//! `n` simulated workers in each of its phases (see `rust/DESIGN.md`
+//! §Engine):
+//!
+//! 1. **encode** — every worker wraps/quantizes/packs its own model
+//!    (Algorithm 1 lines 3–4): reads `xs`, writes worker-local send scratch;
+//! 2. **recover + accumulate** — every receiver reconstructs each
+//!    neighbor's model and accumulates weighted differences (lines 5–6):
+//!    reads the send scratch of phase 1, writes receiver-local scratch;
+//! 3. **apply** — every worker applies its accumulated update and the
+//!    gradient step (line 7): writes only `xs[i]`.
+//!
+//! Each phase writes to disjoint per-worker state, so the pool simply
+//! partitions the worker index range into contiguous chunks — one per OS
+//! thread — with no locks and no atomics on the hot path.
+//!
+//! ## Determinism contract
+//!
+//! Results are **bitwise identical** for every pool size, including 1:
+//!
+//! * all randomness is drawn from per-`(seed, round, worker)` PCG64 streams
+//!   ([`crate::rng`]) — no thread observes another thread's RNG;
+//! * every write target is owned by exactly one worker index;
+//! * each receiver accumulates its neighbors *sequentially in neighbor
+//!   order*, so floating-point summation order never depends on the
+//!   schedule.
+//!
+//! The `tests/engine_equivalence.rs` suite pins this contract for every
+//! algorithm in the crate.
+//!
+//! ## Threading model
+//!
+//! The [`RoundPool`] object is persistent (constructed once per algorithm
+//! engine); the OS threads themselves are spawned per phase through
+//! [`std::thread::scope`], which is the only std-safe way to lend the
+//! borrowed round state (`xs`, `grads`, scratch) to worker threads without
+//! `unsafe` lifetime erasure. Scoped spawn costs O(10 µs) per thread —
+//! negligible against the O(n·d) floating-point work of a phase at the
+//! model sizes the benches run (see `bench_quant_throughput`). Pools of
+//! size 1, and phases with a single item, run inline with zero spawns.
+
+/// Below this per-worker dimension a phase's floating-point work is in the
+/// same ballpark as scoped-spawn overhead (~10 µs/thread), so engines built
+/// by [`RoundPool::for_dim`] stay sequential — matching the pre-engine
+/// behavior for the tiny models unit tests and sweeps use. Explicit widths
+/// (`set_threads`, `TrainConfig::threads`, `MONIQUA_THREADS`) always win.
+const MIN_PARALLEL_DIM: usize = 1 << 16;
+
+/// A persistent, fixed-width worker pool for data-parallel round phases.
+#[derive(Clone, Debug)]
+pub struct RoundPool {
+    threads: usize,
+}
+
+impl RoundPool {
+    /// Pool with an explicit width (clamped to ≥ 1). Width 1 is the
+    /// sequential reference engine.
+    pub fn new(threads: usize) -> Self {
+        RoundPool { threads: threads.max(1) }
+    }
+
+    /// Pool sized to the available cores, overridable with the
+    /// `MONIQUA_THREADS` environment variable (0 or unset → all cores).
+    pub fn auto() -> Self {
+        let env = std::env::var("MONIQUA_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t > 0);
+        let threads = env.unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(1, |p| p.get())
+        });
+        Self::new(threads)
+    }
+
+    /// Default pool for an engine over `d`-dimensional models: sequential
+    /// below [`MIN_PARALLEL_DIM`] (spawns would cost more than they buy),
+    /// [`Self::auto`] at bench/production scales. A `MONIQUA_THREADS`
+    /// override applies regardless of `d`.
+    pub fn for_dim(d: usize) -> Self {
+        let forced = std::env::var("MONIQUA_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t > 0);
+        match forced {
+            Some(t) => Self::new(t),
+            None if d < MIN_PARALLEL_DIM => Self::new(1),
+            None => Self::auto(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i, &mut items[i])` for every item, partitioned across the
+    /// pool. Mutable access is disjoint by construction (`chunks_mut`).
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        let t = self.threads.min(n);
+        if t <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(t);
+        let f = &f;
+        std::thread::scope(|s| {
+            for (ci, ca) in items.chunks_mut(chunk).enumerate() {
+                let base = ci * chunk;
+                s.spawn(move || {
+                    for (k, item) in ca.iter_mut().enumerate() {
+                        f(base + k, item);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Run `f(i, &mut a[i], &mut b[i])` over two equal-length slices —
+    /// for phases that mutate two per-worker arrays at once (e.g. `xs[i]`
+    /// plus a receiver-local recovery buffer).
+    pub fn for_each_mut2<A, B, F>(&self, a: &mut [A], b: &mut [B], f: F)
+    where
+        A: Send,
+        B: Send,
+        F: Fn(usize, &mut A, &mut B) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "for_each_mut2 slices must zip exactly");
+        let n = a.len();
+        let t = self.threads.min(n);
+        if t <= 1 {
+            for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+                f(i, x, y);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(t);
+        let f = &f;
+        std::thread::scope(|s| {
+            for (ci, (ca, cb)) in a.chunks_mut(chunk).zip(b.chunks_mut(chunk)).enumerate() {
+                let base = ci * chunk;
+                s.spawn(move || {
+                    for (k, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                        f(base + k, x, y);
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Default for RoundPool {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn for_each_mut_visits_every_index_once() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let pool = RoundPool::new(threads);
+            let mut hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+            pool.for_each_mut(&mut hits, |i, h| {
+                assert_eq!(h.load(Ordering::Relaxed), 0, "i={i}");
+                h.fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn for_dim_is_sequential_for_tiny_models() {
+        if std::env::var("MONIQUA_THREADS").is_ok() {
+            return; // explicit override wins by design
+        }
+        assert_eq!(RoundPool::for_dim(64).threads(), 1);
+        assert!(RoundPool::for_dim(1 << 20).threads() >= 1);
+    }
+
+    #[test]
+    fn for_each_mut_results_independent_of_width() {
+        let compute = |threads: usize| -> Vec<u64> {
+            let pool = RoundPool::new(threads);
+            let mut items: Vec<u64> = vec![0; 101];
+            pool.for_each_mut(&mut items, |i, v| {
+                // index-dependent work: any schedule dependence would show
+                *v = crate::rng::Pcg64::new(7, i as u64).next_u64();
+            });
+            items
+        };
+        let seq = compute(1);
+        for threads in [2usize, 4, 16] {
+            assert_eq!(compute(threads), seq, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_mut2_zips_disjointly() {
+        let pool = RoundPool::new(4);
+        let mut a = vec![0usize; 50];
+        let mut b = vec![0usize; 50];
+        pool.for_each_mut2(&mut a, &mut b, |i, x, y| {
+            *x = i;
+            *y = 2 * i;
+        });
+        for i in 0..50 {
+            assert_eq!(a[i], i);
+            assert_eq!(b[i], 2 * i);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn for_each_mut2_rejects_length_mismatch() {
+        let pool = RoundPool::new(2);
+        let mut a = vec![0u8; 3];
+        let mut b = vec![0u8; 4];
+        pool.for_each_mut2(&mut a, &mut b, |_, _, _| {});
+    }
+
+    #[test]
+    fn empty_and_single_item_run_inline() {
+        let pool = RoundPool::new(8);
+        let mut items: Vec<u32> = vec![];
+        pool.for_each_mut(&mut items, |_, _| unreachable!());
+        let mut one = vec![5u32];
+        pool.for_each_mut(&mut one, |i, v| *v += i as u32 + 1);
+        assert_eq!(one[0], 6);
+    }
+
+    #[test]
+    fn auto_pool_has_at_least_one_thread() {
+        assert!(RoundPool::auto().threads() >= 1);
+        assert_eq!(RoundPool::new(0).threads(), 1);
+    }
+}

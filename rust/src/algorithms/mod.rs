@@ -31,11 +31,13 @@ pub mod dcd;
 pub mod deepsqueeze;
 pub mod dpsgd;
 pub mod ecd;
+pub mod engine;
 pub mod moniqua;
 pub mod naive;
 
 pub use adpsgd::{AdPsgd, AsyncVariant};
 pub use common::{CommStats, RangeQuantizer, StepCtx};
+pub use engine::RoundPool;
 
 use crate::quant::QuantConfig;
 use crate::topology::CommMatrix;
@@ -172,6 +174,14 @@ pub trait SyncAlgorithm: Send {
     /// diagnostics/verification traces.
     fn last_theta(&self) -> Option<f64> {
         None
+    }
+
+    /// Resize this engine's [`RoundPool`] (1 = sequential reference run).
+    /// The determinism contract (`rust/DESIGN.md` §Engine) guarantees
+    /// bitwise-identical results for every width; the equivalence tests
+    /// pin it. Default: no-op for engines with no parallel phases.
+    fn set_threads(&mut self, threads: usize) {
+        let _ = threads;
     }
 }
 

@@ -12,10 +12,42 @@
 //!
 //! The only state is the model itself: **zero additional memory**, the
 //! paper's headline systems property.
+//!
+//! ## Engine notes (see `rust/DESIGN.md` §Engine)
+//!
+//! The three phases fan out across the [`RoundPool`]: encode/local-biased
+//! writes only sender-local scratch, recover/accumulate writes only
+//! receiver-local scratch, apply writes only `xs[i]` — so every pool width
+//! produces bitwise-identical results. The wire path is fused: line 3 goes
+//! straight to packed bytes (`encode_packed_into`) and line 5 reads them
+//! back (`recover_packed_into`); no `Vec<u32>` code vector exists per
+//! round. When §6 verification is on, each sender's digest is computed
+//! **once** in the encode phase (with that sender's own noise stream) and
+//! reused at every receiving edge.
 
+use super::engine::RoundPool;
 use super::{common, CommStats, StepCtx, SyncAlgorithm, ThetaPolicy};
-use crate::quant::{MoniquaCodec, QuantConfig};
+use crate::quant::{hash, packing, MoniquaCodec, QuantConfig};
 use crate::topology::CommMatrix;
+
+/// Sender-side per-worker scratch: written in the encode phase, read-only
+/// in the recover phase.
+struct SendScratch {
+    noise: Vec<f32>,
+    /// Packed wire bytes of this worker's round message (the fused line-3
+    /// output — exactly what a real deployment puts on the network).
+    wire: Vec<u8>,
+    xhat_self: Vec<f32>,
+    /// §6 digest of this sender's un-modded codes (valid iff verify_hash).
+    digest: u64,
+}
+
+/// Receiver-side per-worker scratch: written in the recover phase.
+struct RecvScratch {
+    acc: Vec<f32>,
+    recover: Vec<f32>,
+    failures: u64,
+}
 
 pub struct MoniquaSync {
     w: CommMatrix,
@@ -24,13 +56,12 @@ pub struct MoniquaSync {
     cfg: QuantConfig,
     name: &'static str,
     last_theta: f64,
-    /// Scratch: per-worker code vectors + reconstruction buffers. These are
-    /// engine-local workspaces (reused every round), not algorithm state.
-    codes: Vec<Vec<u32>>,
-    xhat_self: Vec<Vec<f32>>,
-    delta_acc: Vec<Vec<f32>>,
-    recover_buf: Vec<f32>,
-    noise: Vec<f32>,
+    pool: RoundPool,
+    send: Vec<SendScratch>,
+    recv: Vec<RecvScratch>,
+    /// Round-shared noise vector (shared-randomness mode): drawn once per
+    /// round, read by every worker — avoids n redundant identical fills.
+    shared_noise: Vec<f32>,
     /// Count of θ-verification failures observed (when cfg.verify_hash).
     pub verify_failures: u64,
 }
@@ -50,6 +81,7 @@ impl MoniquaSync {
         name: &'static str,
     ) -> Self {
         let n = w.n();
+        let wire_len = packing::packed_len(d, cfg.bits);
         MoniquaSync {
             w,
             d,
@@ -57,11 +89,23 @@ impl MoniquaSync {
             cfg,
             name,
             last_theta: 0.0,
-            codes: vec![vec![0; d]; n],
-            xhat_self: vec![vec![0.0; d]; n],
-            delta_acc: vec![vec![0.0; d]; n],
-            recover_buf: vec![0.0; d],
-            noise: Vec::new(),
+            pool: RoundPool::for_dim(d),
+            send: (0..n)
+                .map(|_| SendScratch {
+                    noise: Vec::new(),
+                    wire: vec![0u8; wire_len],
+                    xhat_self: vec![0.0; d],
+                    digest: 0,
+                })
+                .collect(),
+            recv: (0..n)
+                .map(|_| RecvScratch {
+                    acc: vec![0.0; d],
+                    recover: vec![0.0; d],
+                    failures: 0,
+                })
+                .collect(),
+            shared_noise: Vec::new(),
             verify_failures: 0,
         }
     }
@@ -82,6 +126,10 @@ impl SyncAlgorithm for MoniquaSync {
         Some(self.last_theta)
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],
@@ -91,65 +139,77 @@ impl SyncAlgorithm for MoniquaSync {
         ctx: &StepCtx,
     ) -> CommStats {
         let n = xs.len();
+        debug_assert_eq!(n, self.send.len());
         let codec = self.codec(lr, ctx);
         self.last_theta = codec.b_theta as f64 * (1.0 - 2.0 * codec.quant.delta()) / 2.0;
+        let cfg = self.cfg;
+        let d = self.d;
+        let seed = ctx.seed;
 
-        // Shared-randomness: one noise vector per round, identical on all
-        // workers (drawn once here; in a real deployment each worker
-        // regenerates it from the shared seed).
-        common::rounding_noise(&self.cfg, ctx.seed, round, 0, self.d, &mut self.noise);
-
-        let mut bytes_per_msg = 0usize;
-        for i in 0..n {
-            if !self.cfg.shared_randomness {
-                common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
-            }
-            // line 3: encode
-            codec.encode_into(&xs[i], &self.noise, &mut self.codes[i]);
-            // line 4: local biased term
-            codec.local_biased_into(&xs[i], &self.noise, &mut self.xhat_self[i]);
-            if i == 0 {
-                bytes_per_msg = common::wire_bytes(&self.cfg, &self.codes[i]);
-            }
+        // --- phase 1: encode (line 3, fused to packed bytes) + local
+        // biased term (line 4) + the once-per-sender §6 digest. With shared
+        // randomness the per-round noise is drawn once here and read by
+        // every worker (the streams coincide by construction — drawing it
+        // per worker would be n identical fills); private-noise mode draws
+        // each worker's own (seed, round, worker) stream inside the phase.
+        let use_shared = cfg.shared_randomness;
+        if use_shared {
+            common::rounding_noise(&cfg, seed, round, 0, d, &mut self.shared_noise);
         }
+        {
+            let xs_r: &[Vec<f32>] = xs;
+            let shared_noise = &self.shared_noise;
+            self.pool.for_each_mut(&mut self.send, |i, ws| {
+                let noise =
+                    common::phase_noise(&cfg, seed, round, i, d, shared_noise, &mut ws.noise);
+                codec.encode_packed_into(&xs_r[i], noise, &mut ws.wire);
+                codec.local_biased_into(&xs_r[i], noise, &mut ws.xhat_self);
+                if cfg.verify_hash {
+                    ws.digest = hash::sender_digest(&codec, &xs_r[i], noise);
+                }
+            });
+        }
+        let bytes_per_msg = common::wire_bytes_packed(&cfg, d, &self.send[0].wire);
 
-        // lines 5-6: recover neighbors, accumulate weighted differences.
-        let mut verify_failures = 0u64;
-        for i in 0..n {
-            let acc = &mut self.delta_acc[i];
-            acc.fill(0.0);
-            for &j in &self.w.neighbors[i] {
-                let wji = self.w.weight(j, i) as f32;
-                codec.recover_into(&self.codes[j], &xs[i], &mut self.recover_buf);
-                if self.cfg.verify_hash {
-                    // §6 verification: sender j's digest vs our reconstruction.
-                    let noise = &self.noise;
-                    let digest = crate::quant::hash::fnv1a_abs_codes(
-                        &crate::quant::hash::sender_abs_codes(&codec, &xs[j], noise),
-                    );
-                    if !crate::quant::hash::verify_reconstruction(
-                        &codec,
-                        &self.recover_buf,
-                        digest,
-                    ) {
-                        verify_failures += 1;
+        // --- phase 2 (lines 5-6): each receiver recovers its neighbors
+        // straight from their wire bytes and accumulates the weighted
+        // differences, in neighbor order (deterministic summation).
+        {
+            let send = &self.send;
+            let w = &self.w;
+            let xs_r: &[Vec<f32>] = xs;
+            self.pool.for_each_mut(&mut self.recv, |i, rs| {
+                rs.failures = 0;
+                rs.acc.fill(0.0);
+                for &j in &w.neighbors[i] {
+                    let wji = w.weight(j, i) as f32;
+                    codec.recover_packed_into(&send[j].wire, &xs_r[i], &mut rs.recover);
+                    if cfg.verify_hash
+                        && !hash::verify_reconstruction(&codec, &rs.recover, send[j].digest)
+                    {
+                        rs.failures += 1;
+                    }
+                    let xh = &send[i].xhat_self;
+                    for k in 0..d {
+                        rs.acc[k] += wji * (rs.recover[k] - xh[k]);
                     }
                 }
-                for k in 0..self.d {
-                    acc[k] += wji * (self.recover_buf[k] - self.xhat_self[i][k]);
-                }
-            }
+            });
         }
-        self.verify_failures += verify_failures;
+        if cfg.verify_hash {
+            self.verify_failures += self.recv.iter().map(|r| r.failures).sum::<u64>();
+        }
 
-        // apply averaging + line 7 gradient step
-        for i in 0..n {
-            let x = &mut xs[i];
-            let acc = &self.delta_acc[i];
-            let g = &grads[i];
-            for k in 0..self.d {
-                x[k] += acc[k] - lr * g[k];
-            }
+        // --- phase 3: apply averaging + line 7 gradient step.
+        {
+            let recv = &self.recv;
+            self.pool.for_each_mut(xs, |i, x| {
+                let acc = &recv[i].acc;
+                let g = &grads[i];
+                for k in 0..d {
+                    x[k] += acc[k] - lr * g[k];
+                }
+            });
         }
 
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();

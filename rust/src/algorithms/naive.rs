@@ -9,19 +9,27 @@
 //! `E‖∇f‖² < φ²δ²/(8(1+φ²))` on the Theorem-1 quadratic. This engine exists
 //! to regenerate that result (bench_theorem1_naive).
 
+use super::engine::RoundPool;
 use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
 use crate::quant::QuantConfig;
 use crate::topology::CommMatrix;
+
+/// Per-worker encode scratch (noise + codes were previously shared single
+/// buffers; per-worker copies make the encode phase data-parallel).
+struct Enc {
+    noise: Vec<f32>,
+    codes: Vec<u32>,
+    qval: Vec<f32>,
+}
 
 pub struct NaiveQuant {
     w: CommMatrix,
     d: usize,
     cfg: QuantConfig,
     quant: RangeQuantizer,
+    pool: RoundPool,
+    enc: Vec<Enc>,
     scratch: Vec<Vec<f32>>,
-    qvals: Vec<Vec<f32>>,
-    noise: Vec<f32>,
-    codes: Vec<u32>,
 }
 
 impl NaiveQuant {
@@ -32,10 +40,15 @@ impl NaiveQuant {
             d,
             cfg,
             quant: RangeQuantizer::new(&cfg, range),
+            pool: RoundPool::for_dim(d),
+            enc: (0..n)
+                .map(|_| Enc {
+                    noise: Vec::new(),
+                    codes: vec![0; d],
+                    qval: vec![0.0; d],
+                })
+                .collect(),
             scratch: vec![vec![0.0; d]; n],
-            qvals: vec![vec![0.0; d]; n],
-            noise: Vec::new(),
-            codes: vec![0; d],
         }
     }
 
@@ -50,6 +63,10 @@ impl SyncAlgorithm for NaiveQuant {
         "naive"
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        self.pool = RoundPool::new(threads);
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],
@@ -58,27 +75,36 @@ impl SyncAlgorithm for NaiveQuant {
         round: u64,
         ctx: &StepCtx,
     ) -> CommStats {
-        let n = xs.len();
+        let cfg = self.cfg;
+        let d = self.d;
+        let quant = self.quant;
+        let seed = ctx.seed;
         // Every worker quantizes its own model directly (no modulo, no
         // replica): exactly Eq. (4).
-        let mut bytes = 0usize;
-        for i in 0..n {
-            common::rounding_noise(&self.cfg, ctx.seed, round, i, self.d, &mut self.noise);
-            self.quant
-                .quantize_into(&xs[i], &self.noise, &mut self.codes, &mut self.qvals[i]);
-            bytes = common::wire_bytes(&self.cfg, &self.codes);
+        {
+            let xs_r: &[Vec<f32>] = xs;
+            self.pool.for_each_mut(&mut self.enc, |i, e| {
+                common::rounding_noise(&cfg, seed, round, i, d, &mut e.noise);
+                quant.quantize_into(&xs_r[i], &e.noise, &mut e.codes, &mut e.qval);
+            });
         }
-        for i in 0..n {
-            let out = &mut self.scratch[i];
-            out.fill(0.0);
-            crate::linalg::axpy(out, self.w.weight(i, i) as f32, &xs[i]);
-            for &j in &self.w.neighbors[i] {
-                crate::linalg::axpy(out, self.w.weight(j, i) as f32, &self.qvals[j]);
-            }
-            crate::linalg::axpy(out, -lr, &grads[i]);
+        let bytes = common::wire_bytes(&cfg, &self.enc[0].codes);
+        {
+            let w = &self.w;
+            let enc = &self.enc;
+            let xs_r: &[Vec<f32>] = xs;
+            self.pool.for_each_mut(&mut self.scratch, |i, out| {
+                out.fill(0.0);
+                crate::linalg::axpy(out, w.weight(i, i) as f32, &xs_r[i]);
+                for &j in &w.neighbors[i] {
+                    crate::linalg::axpy(out, w.weight(j, i) as f32, &enc[j].qval);
+                }
+                crate::linalg::axpy(out, -lr, &grads[i]);
+            });
         }
-        for i in 0..n {
-            xs[i].copy_from_slice(&self.scratch[i]);
+        {
+            let scratch = &self.scratch;
+            self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&scratch[i]));
         }
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {

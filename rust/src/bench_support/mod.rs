@@ -79,6 +79,24 @@ pub fn print_throughput(r: &BenchResult, bytes_per_iter: usize) {
     );
 }
 
+/// Median-time ratio `baseline / candidate`: > 1 means the candidate is
+/// faster. Used by the perf benches to report fused-vs-unfused and
+/// parallel-vs-sequential speedups.
+pub fn speedup(baseline: &BenchResult, candidate: &BenchResult) -> f64 {
+    baseline.median_s / candidate.median_s
+}
+
+/// Pretty-print a speedup line for two results.
+pub fn print_speedup(label: &str, baseline: &BenchResult, candidate: &BenchResult) {
+    println!(
+        "{:<40} {:>8.2}x  ({} -> {})",
+        label,
+        speedup(baseline, candidate),
+        baseline.name,
+        candidate.name
+    );
+}
+
 /// Prevent the optimizer from deleting a computation.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -116,5 +134,18 @@ mod tests {
             min_s: 0.5,
         };
         assert_eq!(r.throughput(1_000_000), 2_000_000.0);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |median_s: f64| BenchResult {
+            name: "y".into(),
+            iters: 1,
+            mean_s: median_s,
+            median_s,
+            stddev_s: 0.0,
+            min_s: median_s,
+        };
+        assert_eq!(speedup(&mk(1.0), &mk(0.25)), 4.0);
     }
 }

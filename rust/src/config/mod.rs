@@ -149,8 +149,22 @@ impl Config {
         };
         let compression = match self.str_or("compression", "none") {
             "none" => Compression::None,
-            "deflate" => Compression::Deflate,
-            "bzip2" => Compression::Bzip2,
+            "deflate" => {
+                if cfg!(feature = "deflate") {
+                    Compression::Deflate
+                } else {
+                    anyhow::bail!(
+                        "compression=deflate needs a build with `--features deflate`"
+                    )
+                }
+            }
+            "bzip2" => {
+                if cfg!(feature = "bzip2") {
+                    Compression::Bzip2
+                } else {
+                    anyhow::bail!("compression=bzip2 needs a build with `--features bzip2`")
+                }
+            }
             "rle" => Compression::Rle,
             other => anyhow::bail!("unknown compression '{other}'"),
         };

@@ -42,6 +42,10 @@ pub struct TrainConfig {
     pub grad_time_s: Option<f64>,
     pub eval_every: u64,
     pub seed: u64,
+    /// Round-engine pool width (None: all cores / MONIQUA_THREADS). The
+    /// engine determinism contract makes this a pure performance knob:
+    /// results are bitwise identical at every width.
+    pub threads: Option<usize>,
 }
 
 impl Default for TrainConfig {
@@ -57,6 +61,7 @@ impl Default for TrainConfig {
             grad_time_s: None,
             eval_every: 20,
             seed: 42,
+            threads: None,
         }
     }
 }
@@ -81,7 +86,10 @@ impl Trainer {
         );
         let w = topo.comm_matrix();
         let rho = w.rho();
-        let engine = cfg.algorithm.make_sync(&w, objective.dim());
+        let mut engine = cfg.algorithm.make_sync(&w, objective.dim());
+        if let Some(t) = cfg.threads {
+            engine.set_threads(t);
+        }
         let adj = topo.adjacency();
         let deg_max = adj.iter().map(|a| a.len()).max().unwrap_or(0);
         let deg_sum = adj.iter().map(|a| a.len()).sum();

@@ -79,9 +79,9 @@ pub fn run_threaded(cfg: ThreadedConfig, objective: &dyn Objective) -> Vec<Worke
         let start = Arc::clone(&start);
         handles.push(thread::spawn(move || {
             let codec = MoniquaCodec::from_theta(cfg.theta, &cfg.quant);
+            let wire_len = packing::packed_len(d, cfg.quant.bits);
             let mut x = init;
             let mut grad = vec![0.0f32; d];
-            let mut codes = vec![0u32; d];
             let mut noise = vec![0.0f32; d];
             let mut recover = vec![0.0f32; d];
             let mut xhat_self = vec![0.0f32; d];
@@ -102,8 +102,11 @@ pub fn run_threaded(cfg: ThreadedConfig, objective: &dyn Objective) -> Vec<Worke
                 // (decoding needs no noise).
                 let mut nrng = Pcg64::new(cfg.seed ^ step, w as u64);
                 nrng.fill_uniform_f32(&mut noise);
-                codec.encode_into(&x, &noise, &mut codes);
-                let payload = packing::pack(&codes, cfg.quant.bits);
+                // Fused wrap→quantize→pack straight into the message buffer:
+                // the owned Vec is the allocation the channel send needs
+                // anyway; no intermediate Vec<u32> code vector exists.
+                let mut payload = vec![0u8; wire_len];
+                codec.encode_packed_into(&x, &noise, &mut payload);
                 bytes_sent += payload.len() as u64;
                 let (_, tx) = &peers[rng.below(peers.len() as u64) as usize];
                 // peer may have exited already: ignore send failures.
@@ -113,8 +116,7 @@ pub fn run_threaded(cfg: ThreadedConfig, objective: &dyn Objective) -> Vec<Worke
                 // single-edge 1/2 averaging per message)
                 while let Ok(msg) = rx.try_recv() {
                     msgs_received += 1;
-                    packing::unpack_into(&msg.payload, cfg.quant.bits, &mut codes);
-                    codec.recover_into(&codes, &x, &mut recover);
+                    codec.recover_packed_into(&msg.payload, &x, &mut recover);
                     // self-biased term w.r.t. our own model
                     let mut srng = Pcg64::new(cfg.seed ^ msg.round, w as u64);
                     srng.fill_uniform_f32(&mut noise);

@@ -41,6 +41,25 @@
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
 //! the harnesses that regenerate every figure and table in the paper.
+//!
+//! ## Architecture notes
+//!
+//! `rust/DESIGN.md` documents the system design; in particular **§Engine**
+//! describes the parallel round engine every synchronous algorithm runs on
+//! ([`algorithms::engine::RoundPool`]): the three per-round phases, how
+//! they fan out across cores, the fused quantize→pack wire path
+//! ([`quant::MoniquaCodec::encode_packed_into`] /
+//! [`quant::MoniquaCodec::recover_packed_into`]), and the determinism
+//! contract that makes pool width a pure performance knob (bitwise-equal
+//! results at every width, pinned by `tests/engine_equivalence.rs`).
+
+// Style lints the codebase deliberately trades for explicit indexed hot
+// loops (the §Perf kernels are written against godbolt output, not clippy
+// idiom); CI runs `cargo clippy -- -D warnings` with these exceptions.
+#![allow(unknown_lints)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::manual_div_ceil)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod algorithms;
 pub mod bench_support;
@@ -58,7 +77,7 @@ pub mod topology;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
-    pub use crate::algorithms::{Algorithm, ThetaPolicy};
+    pub use crate::algorithms::{Algorithm, RoundPool, ThetaPolicy};
     pub use crate::coordinator::{
         AsyncTrainer, Report, TraceRow, TrainConfig, Trainer,
     };

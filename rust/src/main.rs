@@ -11,7 +11,8 @@
 //! choco, ...), `bits`, `theta` (number or `auto`), `topology`
 //! (ring/torus:RxC/...), `network` (fig1a..fig1d/fig2b/none),
 //! `objective` (quadratic|logistic|mlp|transformer), `partition`
-//! (iid|by_label), `config` (path to a key=value file), `csv` (output path).
+//! (iid|by_label), `threads` (round-engine pool width; default all cores),
+//! `config` (path to a key=value file), `csv` (output path).
 
 use std::sync::Arc;
 
@@ -125,6 +126,10 @@ fn train_config(cfg: &Config) -> Result<TrainConfig> {
         },
         eval_every: cfg.u64_or("eval_every", 20)?,
         seed: cfg.u64_or("seed", 42)?,
+        threads: match cfg.get("threads") {
+            Some(v) => Some(v.parse::<usize>().context("threads")?),
+            None => None,
+        },
     })
 }
 

@@ -4,10 +4,15 @@
 //!
 //! Near consensus, the modulo-wrapped values concentrate around 0, so the
 //! high-order bits of each code are heavily redundant; a generic entropy
-//! coder removes them. We expose bzip2 (the paper's choice), DEFLATE
-//! (cheaper), and an in-crate order-0 RLE for dependency-free use; `None`
-//! disables recompression.
+//! coder removes them. We expose bzip2 (the paper's choice, behind the
+//! `bzip2` cargo feature), DEFLATE (cheaper, behind `deflate`), and an
+//! in-crate order-0 RLE that is always available; `None` disables
+//! recompression. The external codecs are feature-gated so the default
+//! build works in fully offline environments; selecting a disabled codec
+//! panics with a clear message (the config layer rejects it earlier with a
+//! proper error).
 
+#[cfg(any(feature = "deflate", feature = "bzip2"))]
 use std::io::{Read, Write};
 
 /// Compression codec applied to the packed byte stream.
@@ -23,9 +28,23 @@ pub enum Compression {
 }
 
 impl Compression {
+    /// The codecs this build supports (always `None` + `Rle`; `Deflate` /
+    /// `Bzip2` when their cargo features are enabled). Benches and tests
+    /// iterate this instead of hard-coding the full set.
+    pub fn enabled() -> Vec<Compression> {
+        #[allow(unused_mut)]
+        let mut v = vec![Compression::None, Compression::Rle];
+        #[cfg(feature = "deflate")]
+        v.push(Compression::Deflate);
+        #[cfg(feature = "bzip2")]
+        v.push(Compression::Bzip2);
+        v
+    }
+
     pub fn compress(&self, data: &[u8]) -> Vec<u8> {
         match self {
             Compression::None => data.to_vec(),
+            #[cfg(feature = "deflate")]
             Compression::Deflate => {
                 let mut enc = flate2::write::DeflateEncoder::new(
                     Vec::new(),
@@ -34,6 +53,11 @@ impl Compression {
                 enc.write_all(data).expect("deflate write");
                 enc.finish().expect("deflate finish")
             }
+            #[cfg(not(feature = "deflate"))]
+            Compression::Deflate => {
+                panic!("DEFLATE support not compiled in (enable the `deflate` feature)")
+            }
+            #[cfg(feature = "bzip2")]
             Compression::Bzip2 => {
                 let mut enc = bzip2::write::BzEncoder::new(
                     Vec::new(),
@@ -42,6 +66,10 @@ impl Compression {
                 enc.write_all(data).expect("bzip2 write");
                 enc.finish().expect("bzip2 finish")
             }
+            #[cfg(not(feature = "bzip2"))]
+            Compression::Bzip2 => {
+                panic!("bzip2 support not compiled in (enable the `bzip2` feature)")
+            }
             Compression::Rle => rle_encode(data),
         }
     }
@@ -49,17 +77,27 @@ impl Compression {
     pub fn decompress(&self, data: &[u8]) -> Vec<u8> {
         match self {
             Compression::None => data.to_vec(),
+            #[cfg(feature = "deflate")]
             Compression::Deflate => {
                 let mut dec = flate2::read::DeflateDecoder::new(data);
                 let mut out = Vec::new();
                 dec.read_to_end(&mut out).expect("deflate read");
                 out
             }
+            #[cfg(not(feature = "deflate"))]
+            Compression::Deflate => {
+                panic!("DEFLATE support not compiled in (enable the `deflate` feature)")
+            }
+            #[cfg(feature = "bzip2")]
             Compression::Bzip2 => {
                 let mut dec = bzip2::read::BzDecoder::new(data);
                 let mut out = Vec::new();
                 dec.read_to_end(&mut out).expect("bzip2 read");
                 out
+            }
+            #[cfg(not(feature = "bzip2"))]
+            Compression::Bzip2 => {
+                panic!("bzip2 support not compiled in (enable the `bzip2` feature)")
             }
             Compression::Rle => rle_decode(data),
         }
@@ -126,19 +164,12 @@ mod tests {
     use super::*;
     use crate::testing::forall;
 
-    const ALL: [Compression; 4] = [
-        Compression::None,
-        Compression::Deflate,
-        Compression::Bzip2,
-        Compression::Rle,
-    ];
-
     #[test]
     fn roundtrip_random_data() {
         forall(40, |rng| {
             let n = rng.below(2000) as usize;
             let data: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
-            for c in ALL {
+            for c in Compression::enabled() {
                 assert_eq!(c.decompress(&c.compress(&data)), data, "{c:?}");
             }
         });
@@ -148,7 +179,7 @@ mod tests {
     fn roundtrip_runs_and_escapes() {
         let mut data = vec![7u8; 1000];
         data.extend([0xFF, 0xFF, 0xFF, 1, 2, 3, 0xFF]);
-        for c in ALL {
+        for c in Compression::enabled() {
             assert_eq!(c.decompress(&c.compress(&data)), data, "{c:?}");
         }
     }
@@ -157,7 +188,10 @@ mod tests {
     fn compressors_shrink_redundant_streams() {
         // Near-consensus modulo streams: most codes equal -> long runs.
         let data = vec![128u8; 64 * 1024];
-        for c in [Compression::Deflate, Compression::Bzip2, Compression::Rle] {
+        for c in Compression::enabled() {
+            if c == Compression::None {
+                continue;
+            }
             let z = c.compress(&data);
             assert!(z.len() < data.len() / 8, "{c:?}: {} bytes", z.len());
         }
@@ -166,15 +200,22 @@ mod tests {
     #[test]
     fn wire_len_matches_compressed_len() {
         let data = vec![5u8; 4096];
-        for c in ALL {
+        for c in Compression::enabled() {
             assert_eq!(c.wire_len(&data), c.compress(&data).len());
         }
     }
 
     #[test]
     fn empty_input_ok() {
-        for c in ALL {
+        for c in Compression::enabled() {
             assert_eq!(c.decompress(&c.compress(&[])), Vec::<u8>::new());
         }
+    }
+
+    #[test]
+    fn enabled_always_includes_dependency_free_codecs() {
+        let e = Compression::enabled();
+        assert!(e.contains(&Compression::None));
+        assert!(e.contains(&Compression::Rle));
     }
 }

@@ -49,6 +49,33 @@ pub fn sender_abs_codes(codec: &MoniquaCodec, x: &[f32], noise: &[f32]) -> Vec<i
         .collect()
 }
 
+/// Streaming sender digest: FNV-1a of the absolute codes of `x`, computed
+/// in one pass with **no intermediate allocations** — equivalent to
+/// `fnv1a_abs_codes(&sender_abs_codes(codec, x, noise))`, but cheap enough
+/// to run once per sender per round during the encode phase. The engine
+/// computes this exactly once per worker and reuses it at every receiving
+/// edge (previously it was recomputed per edge: O(n·m·d) hashing per round).
+pub fn sender_digest(codec: &MoniquaCodec, x: &[f32], noise: &[f32]) -> u64 {
+    // The wrapped code comes from the codec's shared EncodeKernel — the
+    // same per-element math `encode_into`/`encode_packed_into` run, so the
+    // digest can never drift from the wire path.
+    let ker = codec.encode_kernel();
+    let stochastic = ker.stochastic();
+    let li = codec.quant.levels as i64;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (i, &xi) in x.iter().enumerate() {
+        let c = ker.code(xi, if stochastic { noise[i] } else { 0.0 });
+        // Wrap count via true division, exactly as sender_abs_codes does
+        // (x/B and x*(1/B) can round differently at grid boundaries).
+        let abs = c as i64 + li * ((xi / codec.b_theta + 0.5).floor() as i64);
+        for b in abs.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
 /// Receiver side: absolute codes of a reconstruction `x̂` (which lies
 /// exactly on the absolute grid, so nearest rounding recovers the code).
 pub fn receiver_abs_codes(codec: &MoniquaCodec, xhat: &[f32]) -> Vec<i64> {
@@ -146,5 +173,34 @@ mod tests {
     #[test]
     fn bytes_digest_differs_from_codes_digest_domain() {
         assert_ne!(fnv1a_abs_codes(&[1]), fnv1a_bytes(&[1]));
+    }
+
+    #[test]
+    fn streaming_digest_matches_allocating_path() {
+        forall(100, |rng| {
+            let bits = 2 + rng.below(7) as u32;
+            let cfg = QuantConfig::stochastic(bits);
+            let theta = uniform(rng, 0.1, 3.0);
+            let codec = MoniquaCodec::from_theta(theta, &cfg);
+            let n = rng.below(200) as usize;
+            let x = gaussian_vec(rng, n, 6.0);
+            let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            assert_eq!(
+                sender_digest(&codec, &x, &noise),
+                fnv1a_abs_codes(&sender_abs_codes(&codec, &x, &noise)),
+            );
+        });
+    }
+
+    #[test]
+    fn streaming_digest_matches_for_nearest_rounding() {
+        let cfg = QuantConfig::nearest(4);
+        let codec = MoniquaCodec::from_theta(0.5, &cfg);
+        let mut rng = crate::rng::Pcg64::seeded(8);
+        let x = gaussian_vec(&mut rng, 333, 2.0);
+        assert_eq!(
+            sender_digest(&codec, &x, &[]),
+            fnv1a_abs_codes(&sender_abs_codes(&codec, &x, &[])),
+        );
     }
 }

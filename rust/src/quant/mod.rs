@@ -6,8 +6,13 @@
 //!   (nearest + stochastic rounding), semantics **identical** to the Pallas
 //!   kernels / `python/compile/kernels/ref.py` (cross-checked in tests).
 //! * [`moniqua`] — the centered modulo of Lemma 1 and the wrap → quantize →
-//!   recover pipeline of Lemma 2 / Algorithm 1, plus θ→B_θ plumbing.
-//! * [`packing`] — bit-packing integer codes at 1..=16 bits/parameter.
+//!   recover pipeline of Lemma 2 / Algorithm 1, plus θ→B_θ plumbing. The
+//!   round engine's hot path is the **fused** wire pair
+//!   [`MoniquaCodec::encode_packed_into`] /
+//!   [`MoniquaCodec::recover_packed_into`] (quantize⇄bit-pack in one pass,
+//!   no intermediate code vector — DESIGN.md §Engine).
+//! * [`packing`] — bit-packing integer codes at 1..=16 bits/parameter
+//!   (the standalone form of what the fused codec paths inline).
 //! * [`entropy`] — optional lossless recompression of packed code streams
 //!   (bzip2 / deflate / in-crate RLE), the paper's §6 "bzip" trick.
 //! * [`hash`] — FNV-1a digest of the code stream for the paper's §6

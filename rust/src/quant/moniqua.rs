@@ -17,7 +17,7 @@
 //! full-precision rate.
 
 use super::linear::LinearQuantizer;
-use super::QuantConfig;
+use super::{packing, QuantConfig};
 
 /// Centered modulo (paper Eq. 1): the unique value in `[-a/2, a/2)`
 /// congruent to `z` modulo `a`.
@@ -37,6 +37,41 @@ pub fn centered_mod64(z: f64, a: f64) -> f64 {
 pub struct MoniquaCodec {
     pub quant: LinearQuantizer,
     pub b_theta: f32,
+}
+
+/// Precomputed per-element encode math of Algorithm 1 line 3 — the single
+/// source of truth shared by [`MoniquaCodec::encode_into`],
+/// [`MoniquaCodec::encode_packed_into`], and the §6 sender digest
+/// (`hash::sender_digest`), so a change to the rounding/clamp rules cannot
+/// silently drift between the wire path and the verification path.
+#[derive(Clone, Copy)]
+pub(crate) struct EncodeKernel {
+    inv_b: f32,
+    l: f32,
+    max_code: f32,
+    stochastic: bool,
+}
+
+impl EncodeKernel {
+    #[inline(always)]
+    pub(crate) fn stochastic(&self) -> bool {
+        self.stochastic
+    }
+
+    /// Wrapped code of one element (`u` is the stochastic-rounding draw;
+    /// ignored — pass anything — for nearest rounding).
+    #[inline(always)]
+    pub(crate) fn code(&self, xi: f32, u: f32) -> u32 {
+        let z = xi * self.inv_b;
+        let w = z - (z + 0.5).floor(); // centered_mod(z, 1)
+        let t = if self.stochastic {
+            (w + 0.5) * self.l - 0.5 + u
+        } else {
+            (w + 0.5) * self.l
+        };
+        // §Perf: clamp on the f32 side (maxss/minss), no i64 round-trip.
+        t.floor().max(0.0).min(self.max_code) as u32
+    }
 }
 
 impl MoniquaCodec {
@@ -60,34 +95,143 @@ impl MoniquaCodec {
         (self.quant.delta() * self.b_theta as f64) as f32
     }
 
+    /// The shared per-element encode kernel (see [`EncodeKernel`]).
+    #[inline]
+    pub(crate) fn encode_kernel(&self) -> EncodeKernel {
+        EncodeKernel {
+            inv_b: 1.0 / self.b_theta,
+            l: self.quant.levels as f32,
+            max_code: (self.quant.levels - 1) as f32,
+            stochastic: matches!(self.quant.rounding, super::Rounding::Stochastic),
+        }
+    }
+
     /// Line 3: wrap each coordinate and quantize to codes. `noise` is the
     /// stochastic-rounding stream (shared across workers if configured).
     ///
     /// §Perf: the clamp happens on the f32 side (`max`/`min` lower to
     /// maxss/minss and `as u32` saturates), avoiding the f32→i64→clamp→u32
     /// round-trip of the naive formulation — 3.6× on the 1M-param
-    /// microbench (EXPERIMENTS.md §Perf).
+    /// microbench (EXPERIMENTS.md §Perf). The `stochastic` branch inside
+    /// [`EncodeKernel::code`] is loop-invariant and unswitched by LLVM.
     pub fn encode_into(&self, x: &[f32], noise: &[f32], codes: &mut [u32]) {
         debug_assert_eq!(x.len(), codes.len());
-        let inv_b = 1.0 / self.b_theta;
-        let l = self.quant.levels as f32;
-        let max_code = (self.quant.levels - 1) as f32;
-        match self.quant.rounding {
-            super::Rounding::Nearest => {
-                for (c, &xi) in codes.iter_mut().zip(x) {
-                    let z = xi * inv_b;
-                    let w = z - (z + 0.5).floor(); // centered_mod(z, 1)
-                    let t = ((w + 0.5) * l).floor();
-                    *c = t.max(0.0).min(max_code) as u32;
+        let ker = self.encode_kernel();
+        if ker.stochastic() {
+            debug_assert_eq!(noise.len(), x.len());
+            for ((c, &xi), &u) in codes.iter_mut().zip(x).zip(noise) {
+                *c = ker.code(xi, u);
+            }
+        } else {
+            for (c, &xi) in codes.iter_mut().zip(x) {
+                *c = ker.code(xi, 0.0);
+            }
+        }
+    }
+
+    /// Bits per parameter of the bound quantizer (levels = 2^bits always,
+    /// by [`QuantConfig`] construction).
+    #[inline]
+    pub fn bits(&self) -> u32 {
+        debug_assert!(self.quant.levels.is_power_of_two());
+        self.quant.levels.trailing_zeros()
+    }
+
+    /// Fused **line 3 + bit-packing**: wrap, quantize, and write packed
+    /// bytes directly into `out` (`out.len() == packed_len(x.len(), bits)`).
+    ///
+    /// This is the wire path: it produces bit-identical bytes to
+    /// `encode_into` followed by [`packing::pack_into`], but never
+    /// materializes the intermediate `Vec<u32>` code vector — one pass over
+    /// `x`, one pass over `out`. Byte-aligned budgets (8/16 bits) skip the
+    /// bit accumulator entirely, mirroring `pack_into`'s fast paths.
+    pub fn encode_packed_into(&self, x: &[f32], noise: &[f32], out: &mut [u8]) {
+        let bits = self.bits();
+        assert_eq!(out.len(), packing::packed_len(x.len(), bits));
+        let ker = self.encode_kernel();
+        let stochastic = ker.stochastic();
+        if stochastic {
+            debug_assert_eq!(noise.len(), x.len());
+        }
+        // The shared [`EncodeKernel`] guarantees every specialization below
+        // is bitwise the same computation as `encode_into`.
+        let code_at = |i: usize| -> u32 {
+            ker.code(x[i], if stochastic { noise[i] } else { 0.0 })
+        };
+        match bits {
+            8 => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = code_at(i) as u8;
                 }
             }
-            super::Rounding::Stochastic => {
-                debug_assert_eq!(noise.len(), x.len());
-                for ((c, &xi), &u) in codes.iter_mut().zip(x).zip(noise) {
-                    let z = xi * inv_b;
-                    let w = z - (z + 0.5).floor();
-                    let t = ((w + 0.5) * l - 0.5 + u).floor();
-                    *c = t.max(0.0).min(max_code) as u32;
+            16 => {
+                for (i, o) in out.chunks_exact_mut(2).enumerate() {
+                    o.copy_from_slice(&(code_at(i) as u16).to_le_bytes());
+                }
+            }
+            _ => {
+                let mut acc: u64 = 0;
+                let mut nbits: u32 = 0;
+                let mut o = 0usize;
+                for i in 0..x.len() {
+                    acc |= (code_at(i) as u64) << nbits;
+                    nbits += bits;
+                    while nbits >= 8 {
+                        out[o] = acc as u8;
+                        o += 1;
+                        acc >>= 8;
+                        nbits -= 8;
+                    }
+                }
+                if nbits > 0 {
+                    out[o] = acc as u8;
+                }
+            }
+        }
+    }
+
+    /// Fused **unpack + line 5**: reconstruct the remote vector straight
+    /// from the packed wire bytes, never materializing a `Vec<u32>`.
+    /// Bitwise identical to [`packing::unpack_into`] + `recover_into`.
+    pub fn recover_packed_into(&self, bytes: &[u8], y: &[f32], out: &mut [f32]) {
+        let bits = self.bits();
+        debug_assert_eq!(y.len(), out.len());
+        assert!(bytes.len() >= packing::packed_len(out.len(), bits));
+        let b = self.b_theta;
+        let inv_b = 1.0 / b;
+        let scale = b / self.quant.levels as f32;
+        let off = 0.5 * scale - 0.5 * b;
+        // Same per-element recovery math as `recover_into`.
+        let recover_one = |c: u32, yi: f32| -> f32 {
+            let q = c as f32 * scale + off;
+            let z = q - yi;
+            z - b * (z * inv_b + 0.5).floor() + yi
+        };
+        match bits {
+            8 => {
+                for ((o, &byte), &yi) in out.iter_mut().zip(bytes).zip(y) {
+                    *o = recover_one(byte as u32, yi);
+                }
+            }
+            16 => {
+                for ((o, c), &yi) in out.iter_mut().zip(bytes.chunks_exact(2)).zip(y) {
+                    *o = recover_one(u16::from_le_bytes([c[0], c[1]]) as u32, yi);
+                }
+            }
+            _ => {
+                let mask: u64 = (1u64 << bits) - 1;
+                let mut acc: u64 = 0;
+                let mut nbits: u32 = 0;
+                let mut i = 0usize;
+                for (o, &yi) in out.iter_mut().zip(y) {
+                    while nbits < bits {
+                        acc |= (bytes[i] as u64) << nbits;
+                        i += 1;
+                        nbits += 8;
+                    }
+                    *o = recover_one((acc & mask) as u32, yi);
+                    acc >>= bits;
+                    nbits -= bits;
                 }
             }
         }
@@ -278,6 +422,92 @@ mod tests {
         let codec = MoniquaCodec::from_theta(1.0, &cfg);
         let expect = 2.0 / (1.0 - 2.0 / 256.0);
         assert!((codec.b_theta - expect as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn encode_packed_matches_encode_then_pack() {
+        // The fused wire path must be byte-identical to the two-step path
+        // for every supported budget (satellite acceptance: bits ∈ {1,4,8,16}).
+        for bits in [1u32, 4, 8, 16] {
+            let cfg = if bits == 1 {
+                QuantConfig::nearest(bits) // 1-bit stochastic has δ = ½
+            } else {
+                QuantConfig::stochastic(bits)
+            };
+            let codec = MoniquaCodec::from_theta(1.7, &cfg);
+            forall(30, |rng| {
+                let n = rng.below(300) as usize;
+                let x = gaussian_vec(rng, n, 4.0);
+                let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+                let mut codes = vec![0u32; n];
+                codec.encode_into(&x, &noise, &mut codes);
+                let unfused = crate::quant::packing::pack(&codes, bits);
+                let mut fused = vec![0u8; crate::quant::packing::packed_len(n, bits)];
+                codec.encode_packed_into(&x, &noise, &mut fused);
+                assert_eq!(fused, unfused, "bits={bits} n={n}");
+            });
+        }
+    }
+
+    #[test]
+    fn recover_packed_matches_unpack_then_recover() {
+        for bits in [1u32, 4, 8, 16] {
+            let cfg = if bits == 1 {
+                QuantConfig::nearest(bits)
+            } else {
+                QuantConfig::stochastic(bits)
+            };
+            let codec = MoniquaCodec::from_theta(1.0, &cfg);
+            forall(30, |rng| {
+                let n = 1 + rng.below(200) as usize;
+                let y = gaussian_vec(rng, n, 3.0);
+                let codes: Vec<u32> = (0..n)
+                    .map(|_| rng.below(codec.quant.levels as u64) as u32)
+                    .collect();
+                let bytes = crate::quant::packing::pack(&codes, bits);
+                let mut unfused = vec![0.0f32; n];
+                codec.recover_into(&codes, &y, &mut unfused);
+                let mut fused = vec![0.0f32; n];
+                codec.recover_packed_into(&bytes, &y, &mut fused);
+                // bitwise, not approximate: same float ops in the same order
+                assert_eq!(
+                    fused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    unfused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "bits={bits} n={n}"
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip_respects_lemma2() {
+        // End-to-end over the *wire* representation only.
+        let cfg = QuantConfig::stochastic(6);
+        let codec = MoniquaCodec::from_theta(0.8, &cfg);
+        let mut rng = crate::rng::Pcg64::seeded(11);
+        let n = 500;
+        let y = gaussian_vec(&mut rng, n, 5.0);
+        let x: Vec<f32> = y
+            .iter()
+            .map(|&v| v + (rng.next_f32() - 0.5) * 1.6 * 0.8)
+            .collect();
+        let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let mut wire = vec![0u8; crate::quant::packing::packed_len(n, 6)];
+        codec.encode_packed_into(&x, &noise, &mut wire);
+        let mut xhat = vec![0.0f32; n];
+        codec.recover_packed_into(&wire, &y, &mut xhat);
+        let bound = codec.max_error() + 1e-4;
+        for i in 0..n {
+            assert!((xhat[i] - x[i]).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn bits_accessor_matches_config() {
+        for bits in [1u32, 3, 8, 16] {
+            let cfg = QuantConfig::nearest(bits);
+            assert_eq!(MoniquaCodec::from_theta(1.0, &cfg).bits(), bits);
+        }
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! charges and what the entropy coder recompresses. The packer writes codes
 //! little-endian into a u64 accumulator; the hot loop is branch-light and is
 //! one of the targets of the §Perf pass.
+//!
+//! On the round-engine hot path these standalone functions are inlined
+//! into the fused codec kernels (`MoniquaCodec::encode_packed_into` /
+//! `recover_packed_into`); the bit layout here is the wire-format contract
+//! both sides must honor (pinned by the fused-vs-unfused equality tests in
+//! `quant::moniqua`).
 
 /// Packed byte length for `d` codes at `bits` bits each.
 #[inline]

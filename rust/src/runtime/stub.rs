@@ -1,0 +1,108 @@
+//! Dependency-free stand-in for the PJRT bridge, compiled when the `pjrt`
+//! feature is off (the default in offline environments).
+//!
+//! It mirrors the public API of [`super::pjrt`] exactly, so every caller —
+//! the CLI's `objective=transformer` path, `examples/train_transformer`,
+//! the cross-language tests — type-checks identically against either
+//! implementation. The only reachable entry point, [`Runtime::new`],
+//! returns an error explaining how to enable the real bridge; the other
+//! methods are therefore unreachable in practice and defend themselves
+//! with panics carrying the same message.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::ModelMeta;
+use crate::data::corpus::Corpus;
+use crate::objectives::{Eval, Objective};
+
+const MSG: &str =
+    "PJRT runtime not compiled in: rebuild with `--features pjrt` (requires the `xla` crate \
+     and the AOT artifacts from `make artifacts`)";
+
+/// A compiled loss+grad executable plus its metadata and initialization.
+/// In the stub build this value cannot be produced by [`Runtime`]; the
+/// fields exist so diagnostic code paths compile unchanged.
+pub struct LoadedModel {
+    pub meta: ModelMeta,
+    pub init: Vec<f32>,
+}
+
+impl LoadedModel {
+    pub fn loss_and_grad(&self, _params: &[f32], _tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        anyhow::bail!(MSG)
+    }
+}
+
+/// PJRT CPU runtime holding the client and loaded executables (stub).
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails in stub builds — this is the single gate that keeps the
+    /// rest of the stub unreachable.
+    pub fn new<P: AsRef<Path>>(_artifacts_dir: P) -> Result<Self> {
+        anyhow::bail!(MSG)
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("{MSG}")
+    }
+
+    pub fn load_model(&self, _name: &str) -> Result<LoadedModel> {
+        anyhow::bail!(MSG)
+    }
+}
+
+/// [`Objective`] backed by the AOT transformer executable (stub).
+pub struct PjrtObjective {
+    model: std::sync::Arc<LoadedModel>,
+    n_workers: usize,
+}
+
+impl PjrtObjective {
+    pub fn new(model: LoadedModel, _corpus: &Corpus, n_workers: usize, _seed: u64) -> Self {
+        PjrtObjective { model: std::sync::Arc::new(model), n_workers }
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.model.meta
+    }
+}
+
+impl Objective for PjrtObjective {
+    fn dim(&self) -> usize {
+        self.model.meta.params
+    }
+
+    fn init(&self) -> Vec<f32> {
+        self.model.init.clone()
+    }
+
+    fn loss_grad(
+        &mut self,
+        _worker: usize,
+        _step: u64,
+        _params: &[f32],
+        _grad: &mut [f32],
+    ) -> f64 {
+        unreachable!("{MSG}")
+    }
+
+    fn eval(&mut self, _params: &[f32]) -> Eval {
+        unreachable!("{MSG}")
+    }
+
+    fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn box_clone(&self) -> Box<dyn Objective> {
+        Box::new(PjrtObjective {
+            model: std::sync::Arc::clone(&self.model),
+            n_workers: self.n_workers,
+        })
+    }
+}

@@ -1,6 +1,10 @@
 //! Cross-layer consistency: the L1 Pallas kernels (AOT-compiled to HLO,
 //! executed through PJRT) must agree with the L3 Rust-native codec.
 //!
+//! Requires the `pjrt` feature (and `make artifacts`); the whole file is
+//! compiled out of default builds, which have no `xla` crate.
+#![cfg(feature = "pjrt")]
+//!
 //! This is the contract that lets the Rust hot path do quantization locally
 //! while the device-side kernel does it inside the compiled model: both
 //! implement the semantics of python/compile/kernels/ref.py.

@@ -1,0 +1,157 @@
+//! The round-engine determinism contract (`rust/DESIGN.md` §Engine):
+//! every [`SyncAlgorithm`] must produce **bitwise-identical** models under
+//! any `RoundPool` width. A fixed seed, 50 rounds on a ring of 8, pool
+//! widths {1, 2, 3, 8, 16} — width 1 is the sequential reference.
+
+use moniqua::algorithms::{Algorithm, StepCtx, SyncAlgorithm, ThetaPolicy};
+use moniqua::quant::{QuantConfig, Rounding};
+use moniqua::topology::Topology;
+
+const N: usize = 8;
+const ROUNDS: u64 = 50;
+// Odd, non-multiple-of-8 dimension: exercises the sub-byte tails of the
+// fused pack/unpack paths.
+const D: usize = 37;
+
+fn run_rounds(algorithm: &Algorithm, threads: usize) -> Vec<Vec<u32>> {
+    let topo = Topology::Ring(N);
+    let w = topo.comm_matrix();
+    let rho = w.rho();
+    let mut engine = algorithm.make_sync(&w, D);
+    engine.set_threads(threads);
+    // Deterministic, worker- and coordinate-dependent start well inside θ.
+    let mut xs: Vec<Vec<f32>> = (0..N)
+        .map(|i| {
+            (0..D)
+                .map(|k| 0.9 + 0.05 * i as f32 + 0.01 * ((i * 31 + k) % 7) as f32)
+                .collect()
+        })
+        .collect();
+    let ctx = StepCtx { seed: 123, rho, g_inf: 1.0 };
+    for round in 0..ROUNDS {
+        // Quadratic gradients recomputed from the current state: any
+        // divergence feeds back and amplifies instead of washing out.
+        let grads: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| x.iter().map(|&v| v - 0.3).collect())
+            .collect();
+        engine.step(&mut xs, &grads, 0.05, round, &ctx);
+    }
+    xs.iter()
+        .map(|x| x.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn assert_equivalent(algorithm: Algorithm) {
+    let name = algorithm.name();
+    let reference = run_rounds(&algorithm, 1);
+    for threads in [2usize, 3, 8, 16] {
+        let parallel = run_rounds(&algorithm, threads);
+        assert_eq!(
+            parallel, reference,
+            "{name}: pool width {threads} diverged from sequential"
+        );
+    }
+    // Paranoia: the sequential run itself must be reproducible.
+    assert_eq!(run_rounds(&algorithm, 1), reference, "{name}: non-deterministic");
+}
+
+#[test]
+fn moniqua_parallel_equals_sequential() {
+    assert_equivalent(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    });
+}
+
+#[test]
+fn moniqua_subbyte_budget_parallel_equals_sequential() {
+    assert_equivalent(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(4),
+    });
+}
+
+#[test]
+fn moniqua_private_noise_parallel_equals_sequential() {
+    // Per-(worker, round) noise streams: the case where a naive port (one
+    // shared noise buffer mutated in worker order) would break.
+    assert_equivalent(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8).with_shared_randomness(false),
+    });
+}
+
+#[test]
+fn moniqua_verify_hash_parallel_equals_sequential() {
+    assert_equivalent(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8).with_verify_hash(true),
+    });
+}
+
+#[test]
+fn moniqua_slack_parallel_equals_sequential() {
+    let one_bit_nearest =
+        QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::stochastic(1) };
+    assert_equivalent(Algorithm::MoniquaSlack {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: one_bit_nearest,
+        gamma: 0.3,
+    });
+}
+
+#[test]
+fn dpsgd_and_allreduce_parallel_equals_sequential() {
+    assert_equivalent(Algorithm::DPsgd);
+    assert_equivalent(Algorithm::AllReduce);
+}
+
+#[test]
+fn d2_family_parallel_equals_sequential() {
+    assert_equivalent(Algorithm::D2);
+    assert_equivalent(Algorithm::MoniquaD2 {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    });
+}
+
+#[test]
+fn quantized_baselines_parallel_equals_sequential() {
+    let q = QuantConfig::stochastic(4);
+    assert_equivalent(Algorithm::NaiveQuant { quant: q, range: 4.0 });
+    assert_equivalent(Algorithm::Dcd { quant: q, range: 4.0 });
+    assert_equivalent(Algorithm::Dcd { quant: q, range: 0.0 }); // dynamic scaling
+    assert_equivalent(Algorithm::Ecd { quant: q, range: 16.0 });
+    assert_equivalent(Algorithm::Choco { quant: q, range: 4.0, gamma: 0.4 });
+    assert_equivalent(Algorithm::DeepSqueeze { quant: q, range: 4.0, gamma: 0.4 });
+}
+
+#[test]
+fn moniqua_verify_failures_identical_across_widths() {
+    // The §6 failure counter is part of the observable state too.
+    use moniqua::algorithms::moniqua::MoniquaSync;
+    let count = |threads: usize| -> u64 {
+        let w = Topology::Ring(N).comm_matrix();
+        let rho = w.rho();
+        let mut alg = MoniquaSync::new(
+            w,
+            16,
+            ThetaPolicy::Constant(0.05), // far too small: failures guaranteed
+            QuantConfig::nearest(8).with_verify_hash(true),
+        );
+        alg.set_threads(threads);
+        let mut xs: Vec<Vec<f32>> = (0..N).map(|i| vec![1.0 * i as f32; 16]).collect();
+        let grads: Vec<Vec<f32>> = (0..N).map(|_| vec![0.0; 16]).collect();
+        let ctx = StepCtx { seed: 3, rho, g_inf: 1.0 };
+        for k in 0..5 {
+            alg.step(&mut xs, &grads, 0.0, k, &ctx);
+        }
+        alg.verify_failures
+    };
+    let reference = count(1);
+    assert!(reference > 0, "failure injection must fire");
+    for threads in [2usize, 8] {
+        assert_eq!(count(threads), reference);
+    }
+}
