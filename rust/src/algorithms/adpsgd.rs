@@ -13,6 +13,8 @@
 //! The Moniqua variant exchanges modulo-quantized models on the gossip edge
 //! with θ = 16·t_mix·α·G∞ and δ = 1/(64·t_mix + 2) (Theorem 5).
 
+use std::collections::HashMap;
+
 use super::common::{self, CommStats};
 use crate::quant::{MoniquaCodec, QuantConfig};
 use crate::topology::{GossipSampler, PairGossip, Topology};
@@ -43,6 +45,18 @@ pub struct AdPsgd {
     grad_buf: Vec<f32>,
     noise: Vec<f32>,
     seed: u64,
+    /// Stale-neighbor cache for fault-tolerant gossip (`None` until
+    /// [`Self::enable_fault_tolerance`]): `stale[r][s]` is the last model of
+    /// sender `s` that receiver `r` successfully obtained (for Moniqua, the
+    /// *recovered* full-precision x̂ — so a drop-recovery never re-enters the
+    /// modulo decode, which is what keeps the decode in-range even while
+    /// faults temporarily widen the consensus distance past θ).
+    stale: Option<Vec<HashMap<usize, Vec<f32>>>>,
+    /// Directed deliveries that fell back to the stale cache.
+    pub stale_fallbacks: u64,
+    /// Directed deliveries dropped with no cached fallback (receiver side
+    /// of the exchange skipped entirely).
+    pub lost_exchanges: u64,
 }
 
 impl AdPsgd {
@@ -61,7 +75,34 @@ impl AdPsgd {
             grad_buf: vec![0.0; d],
             noise: Vec::new(),
             seed,
+            stale: None,
+            stale_fallbacks: 0,
+            lost_exchanges: 0,
         }
+    }
+
+    /// Turn on the stale-neighbor cache so dropped gossip messages degrade
+    /// to averaging with the last successfully received copy instead of
+    /// skipping the exchange. Off by default: the cache costs one d-vector
+    /// per live (receiver, sender) pair and one copy per delivery.
+    pub fn enable_fault_tolerance(&mut self) {
+        if self.stale.is_none() {
+            self.stale = Some(vec![HashMap::new(); self.snapshots.len()]);
+        }
+    }
+
+    /// Swap the gossip graph mid-run (a `TopologySchedule` stage boundary);
+    /// sampler RNG state and all per-worker state carry over.
+    pub fn set_topology(&mut self, topo: &Topology) {
+        assert_eq!(topo.n(), self.snapshots.len(), "topology swap changed worker count");
+        self.sampler.set_topology(topo);
+    }
+
+    /// Sample the gossip pair for waking worker `a` without stepping — the
+    /// DES runtime needs the peer to price the exchange's links before it
+    /// commits the event.
+    pub fn sample_pair(&mut self, a: usize) -> PairGossip {
+        self.sampler.pair_for(a)
     }
 
     /// Estimate t_mix of this topology's gossip chain (Theorem 5 inputs).
@@ -80,7 +121,7 @@ impl AdPsgd {
         event: u64,
     ) -> (PairGossip, CommStats) {
         let pair = self.sampler.next_pair();
-        self.step_pair(pair, xs, grad_of, lr, event)
+        self.step_pair_with_faults(pair, xs, grad_of, lr, event, true, true)
     }
 
     /// As [`Self::step_event`] but with the waking worker chosen by the
@@ -94,30 +135,66 @@ impl AdPsgd {
         event: u64,
     ) -> (PairGossip, CommStats) {
         let pair = self.sampler.pair_for(a);
-        self.step_pair(pair, xs, grad_of, lr, event)
+        self.step_pair_with_faults(pair, xs, grad_of, lr, event, true, true)
     }
 
-    fn step_pair(
+    /// One asynchronous event over a caller-chosen pair with per-direction
+    /// delivery flags (the DES runtime samples drops and prices links before
+    /// committing the event). `deliver_ab` is the a→b message reaching `b`;
+    /// `deliver_ba` is b→a reaching `a`. Both senders transmit regardless —
+    /// a drop loses the payload in flight, it does not refund the wire.
+    ///
+    /// A receiver whose incoming message dropped falls back to the stale
+    /// cache (see [`Self::enable_fault_tolerance`]); with no cached copy its
+    /// half of the averaging is skipped. With both flags true this is
+    /// bitwise-identical to the fault-free exchange.
+    pub fn step_pair_with_faults(
         &mut self,
         pair: PairGossip,
         xs: &mut [Vec<f32>],
         grad_of: &mut dyn FnMut(usize, &[f32], &mut [f32]),
         lr: f32,
         event: u64,
+        deliver_ab: bool,
+        deliver_ba: bool,
     ) -> (PairGossip, CommStats) {
         let (a, b) = (pair.a, pair.b);
+        let d = self.d;
+        // Clone the (small) variant descriptor: the fallback paths below
+        // need `&mut self` while the exchange dispatches on it.
+        let variant = self.variant.clone();
 
         // --- gossip averaging over the (a, b) edge -----------------------
-        let stats = match &self.variant {
+        let stats = match &variant {
             AsyncVariant::FullPrecision => {
-                for k in 0..self.d {
-                    let m = 0.5 * (xs[a][k] + xs[b][k]);
-                    self.buf_a[k] = m;
+                // Pre-exchange snapshots: both sides read the models as they
+                // were when the messages left.
+                self.buf_a.copy_from_slice(&xs[a]);
+                self.buf_b.copy_from_slice(&xs[b]);
+                if let Some(cache) = &mut self.stale {
+                    if deliver_ab {
+                        cache_store(cache, b, a, &self.buf_a);
+                    }
+                    if deliver_ba {
+                        cache_store(cache, a, b, &self.buf_b);
+                    }
                 }
-                xs[a].copy_from_slice(&self.buf_a);
-                xs[b].copy_from_slice(&self.buf_a);
+                if deliver_ba {
+                    for k in 0..d {
+                        xs[a][k] = 0.5 * (self.buf_a[k] + self.buf_b[k]);
+                    }
+                } else {
+                    self.recover_from_stale(xs, a, b);
+                }
+                if deliver_ab {
+                    for k in 0..d {
+                        xs[b][k] = 0.5 * (self.buf_b[k] + self.buf_a[k]);
+                    }
+                } else {
+                    self.recover_from_stale(xs, b, a);
+                }
                 CommStats {
-                    bytes_per_msg: self.d * 4,
+                    bytes_per_msg: d * 4,
                     messages: 2,
                     allreduce_bytes: None,
                     extra_local_passes: 0,
@@ -125,23 +202,48 @@ impl AdPsgd {
             }
             AsyncVariant::Moniqua { theta, quant } => {
                 let codec = MoniquaCodec::from_theta(*theta, quant);
-                common::rounding_noise(quant, self.seed, event, 0, self.d, &mut self.noise);
-                // a -> b
-                codec.encode_into(&xs[a], &self.noise, &mut self.codes);
+                common::rounding_noise(quant, self.seed, event, 0, d, &mut self.noise);
+                // Both senders encode and transmit regardless of delivery;
+                // each delivered direction is decoded against the
+                // *receiver's* model (Lemma 1's reference point), before
+                // either side updates.
+                codec.encode_into(&xs[a], &self.noise, &mut self.codes); // a -> b
                 let bytes = common::wire_bytes(quant, &self.codes);
-                codec.recover_into(&self.codes, &xs[b], &mut self.buf_a); // x̂_a at b
-                // b -> a
-                codec.encode_into(&xs[b], &self.noise, &mut self.codes);
-                codec.recover_into(&self.codes, &xs[a], &mut self.buf_b); // x̂_b at a
+                if deliver_ab {
+                    codec.recover_into(&self.codes, &xs[b], &mut self.buf_a); // x̂_a at b
+                    codec.local_biased_into(&xs[b], &self.noise, &mut self.self_b);
+                }
+                codec.encode_into(&xs[b], &self.noise, &mut self.codes); // b -> a
+                if deliver_ba {
+                    codec.recover_into(&self.codes, &xs[a], &mut self.buf_b); // x̂_b at a
+                    codec.local_biased_into(&xs[a], &self.noise, &mut self.self_a);
+                }
+                if let Some(cache) = &mut self.stale {
+                    // Cache the *recovered* full-precision copies: a later
+                    // drop-recovery averages with plain f32 values and never
+                    // asks the modulo decode to span a fault-widened gap.
+                    if deliver_ab {
+                        cache_store(cache, b, a, &self.buf_a);
+                    }
+                    if deliver_ba {
+                        cache_store(cache, a, b, &self.buf_b);
+                    }
+                }
                 // local biased terms cancel the self-quantization noise
                 // (persistent scratch: no per-event allocation on this path)
-                codec.local_biased_into(&xs[a], &self.noise, &mut self.self_a);
-                codec.local_biased_into(&xs[b], &self.noise, &mut self.self_b);
-                for k in 0..self.d {
-                    let da = 0.5 * (self.buf_b[k] - self.self_a[k]);
-                    let db = 0.5 * (self.buf_a[k] - self.self_b[k]);
-                    xs[a][k] += da;
-                    xs[b][k] += db;
+                if deliver_ba {
+                    for k in 0..d {
+                        xs[a][k] += 0.5 * (self.buf_b[k] - self.self_a[k]);
+                    }
+                } else {
+                    self.recover_from_stale(xs, a, b);
+                }
+                if deliver_ab {
+                    for k in 0..d {
+                        xs[b][k] += 0.5 * (self.buf_a[k] - self.self_b[k]);
+                    }
+                } else {
+                    self.recover_from_stale(xs, b, a);
                 }
                 CommStats {
                     bytes_per_msg: bytes,
@@ -171,6 +273,38 @@ impl AdPsgd {
 
         (pair, stats)
     }
+
+    /// Receiver `r` lost the incoming message from sender `s`: average with
+    /// the cached stale copy when one exists (plain f32, never through the
+    /// modulo decode), otherwise skip `r`'s half of the exchange.
+    fn recover_from_stale(&mut self, xs: &mut [Vec<f32>], r: usize, s: usize) {
+        let d = self.d;
+        let hit = if let Some(old) = self.stale.as_ref().and_then(|c| c[r].get(&s)) {
+            for k in 0..d {
+                xs[r][k] = 0.5 * (xs[r][k] + old[k]);
+            }
+            true
+        } else {
+            false
+        };
+        if hit {
+            self.stale_fallbacks += 1;
+        } else {
+            self.lost_exchanges += 1;
+        }
+    }
+}
+
+/// Overwrite receiver `recv`'s cached copy of sender `send`'s model.
+fn cache_store(
+    cache: &mut [HashMap<usize, Vec<f32>>],
+    recv: usize,
+    send: usize,
+    val: &[f32],
+) {
+    let slot = cache[recv].entry(send).or_default();
+    slot.resize(val.len(), 0.0);
+    slot.copy_from_slice(val);
 }
 
 #[cfg(test)]
@@ -254,6 +388,61 @@ mod tests {
         let (_, stats) = alg.step_event(&mut xs, &mut grad, 0.1, 0);
         assert_eq!(stats.bytes_per_msg, 1000);
         assert_eq!(stats.messages, 2);
+    }
+
+    #[test]
+    fn dropped_message_falls_back_to_stale_cache() {
+        let topo = Topology::Ring(4);
+        let d = 6;
+        let mut alg = AdPsgd::new(&topo, d, AsyncVariant::FullPrecision, 11);
+        alg.enable_fault_tolerance();
+        let mut xs: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32; d]).collect();
+        let mut grad = |_w: usize, _p: &[f32], g: &mut [f32]| g.fill(0.0);
+        let pair = PairGossip { a: 0, b: 1 };
+        // Delivered exchange caches each side's pre-exchange model.
+        alg.step_pair_with_faults(pair, &mut xs, &mut grad, 0.0, 0, true, true);
+        assert_eq!(xs[0][0], 0.5);
+        assert_eq!(xs[1][0], 0.5);
+        // Worker 0 drifts; its next message to 1 is dropped: 1 averages
+        // with the stale cached copy (0.0), 0 still gets 1's fresh model.
+        xs[0] = vec![10.0; d];
+        alg.step_pair_with_faults(pair, &mut xs, &mut grad, 0.0, 1, false, true);
+        assert_eq!(alg.stale_fallbacks, 1);
+        assert_eq!(xs[0][0], 0.5 * (10.0 + 0.5));
+        assert_eq!(xs[1][0], 0.5 * (0.5 + 0.0));
+        // A drop on a never-exchanged edge is a lost exchange: the receiver
+        // keeps its model.
+        let fresh = PairGossip { a: 2, b: 3 };
+        let before = xs[3][0];
+        alg.step_pair_with_faults(fresh, &mut xs, &mut grad, 0.0, 2, false, true);
+        assert_eq!(alg.lost_exchanges, 1);
+        assert_eq!(xs[3][0], before);
+    }
+
+    #[test]
+    fn moniqua_converges_under_random_drops_with_fallback() {
+        let topo = Topology::Ring(6);
+        let d = 8;
+        let quant = QuantConfig::stochastic(8);
+        let mut alg =
+            AdPsgd::new(&topo, d, AsyncVariant::Moniqua { theta: 2.0, quant }, 17);
+        alg.enable_fault_tolerance();
+        let mut xs: Vec<Vec<f32>> = (0..6).map(|_| vec![1.0; d]).collect();
+        let mut grad = quad_grad(0.3);
+        let mut drops = crate::rng::Pcg64::seeded(5);
+        for e in 0..4000u64 {
+            let a = drops.below(6) as usize;
+            let pair = alg.sample_pair(a);
+            let dab = drops.next_f64() >= 0.2;
+            let dba = drops.next_f64() >= 0.2;
+            alg.step_pair_with_faults(pair, &mut xs, &mut grad, 0.1, e, dab, dba);
+        }
+        assert!(alg.stale_fallbacks > 0, "drops must have fired");
+        for x in &xs {
+            for &v in x {
+                assert!((v - 0.3).abs() < 0.15, "v {v}");
+            }
+        }
     }
 
     #[test]

@@ -28,6 +28,10 @@ impl SyncAlgorithm for AllReduce {
         self.pool = RoundPool::new(threads);
     }
 
+    fn swap_matrix(&mut self, _w: &crate::topology::CommMatrix) -> bool {
+        true // AllReduce ignores the gossip graph entirely.
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

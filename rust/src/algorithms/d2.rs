@@ -89,6 +89,14 @@ impl SyncAlgorithm for D2 {
         self.pool = RoundPool::new(threads);
     }
 
+    fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
+        // D²'s history (x_prev/g_prev) is per-worker, not per-edge, so the
+        // averaging matrix may change between rounds.
+        assert_eq!(w.n(), self.w.n(), "matrix swap changed worker count");
+        self.w = w.clone();
+        true
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

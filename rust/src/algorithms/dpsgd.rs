@@ -32,6 +32,12 @@ impl SyncAlgorithm for DPsgd {
         self.pool = RoundPool::new(threads);
     }
 
+    fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
+        assert_eq!(w.n(), self.w.n(), "matrix swap changed worker count");
+        self.w = w.clone();
+        true
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

@@ -183,6 +183,19 @@ pub trait SyncAlgorithm: Send {
     fn set_threads(&mut self, threads: usize) {
         let _ = threads;
     }
+
+    /// Replace the communication matrix mid-run — a
+    /// [`TopologySchedule`](crate::topology::TopologySchedule) stage
+    /// boundary in the DES runtime (`coordinator::des`). The new matrix
+    /// must cover the same worker count. Returns `false` when this engine
+    /// cannot re-target (per-edge state, or a derived matrix like the
+    /// Theorem-3 slack form whose transform the engine cannot re-apply);
+    /// the DES surfaces a scheduled swap on such an engine as a
+    /// configuration error instead of silently training on a stale graph.
+    fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
+        let _ = w;
+        false
+    }
 }
 
 #[cfg(test)]

@@ -55,6 +55,10 @@ pub struct MoniquaSync {
     theta: ThetaPolicy,
     cfg: QuantConfig,
     name: &'static str,
+    /// False when `w` is a *derived* matrix (the Theorem-3 slack form):
+    /// the engine cannot re-apply the transform to a raw swap-in, so
+    /// topology swaps are refused.
+    raw_matrix: bool,
     last_theta: f64,
     pool: RoundPool,
     send: Vec<SendScratch>,
@@ -68,11 +72,14 @@ pub struct MoniquaSync {
 
 impl MoniquaSync {
     pub fn new(w: CommMatrix, d: usize, theta: ThetaPolicy, cfg: QuantConfig) -> Self {
-        Self::named(w, d, theta, cfg, "moniqua")
+        let mut s = Self::named(w, d, theta, cfg, "moniqua");
+        s.raw_matrix = true; // `w` is the graph's own Metropolis matrix
+        s
     }
 
     /// As `new` but with an explicit report name (the Theorem-3 slack-matrix
-    /// variant reports as "moniqua-slack").
+    /// variant reports as "moniqua-slack"). Engines built this way carry a
+    /// *transformed* matrix and refuse [`SyncAlgorithm::swap_matrix`].
     pub fn named(
         w: CommMatrix,
         d: usize,
@@ -88,6 +95,7 @@ impl MoniquaSync {
             theta,
             cfg,
             name,
+            raw_matrix: false,
             last_theta: 0.0,
             pool: RoundPool::for_dim(d),
             send: (0..n)
@@ -128,6 +136,17 @@ impl SyncAlgorithm for MoniquaSync {
 
     fn set_threads(&mut self, threads: usize) {
         self.pool = RoundPool::new(threads);
+    }
+
+    fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
+        // A derived matrix (slack W̄ = γW + (1−γ)I) can't absorb a raw
+        // swap-in: the engine doesn't know the transform to re-apply.
+        if !self.raw_matrix {
+            return false;
+        }
+        assert_eq!(w.n(), self.w.n(), "matrix swap changed worker count");
+        self.w = w.clone();
+        true
     }
 
     fn step(

@@ -10,10 +10,11 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::algorithms::{Algorithm, ThetaPolicy};
+use crate::coordinator::des::FaultConfig;
 use crate::data::partition::Partition;
-use crate::network::NetworkConfig;
+use crate::network::{LinkMatrix, NetworkConfig};
 use crate::quant::{Compression, QuantConfig, Rounding};
-use crate::topology::Topology;
+use crate::topology::{Topology, TopologySchedule};
 
 /// Ordered string map with typed access.
 #[derive(Clone, Debug, Default)]
@@ -116,27 +117,7 @@ impl Config {
     /// `topology=ring|chain|complete|star|torus:RxC|regular:D` over `workers`.
     pub fn topology(&self) -> Result<Topology> {
         let n = self.usize_or("workers", 8)?;
-        let spec = self.str_or("topology", "ring");
-        Ok(match spec {
-            "ring" => Topology::Ring(n),
-            "chain" => Topology::Chain(n),
-            "complete" => Topology::Complete(n),
-            "star" => Topology::Star(n),
-            s if s.starts_with("torus:") => {
-                let (r, c) = s[6..]
-                    .split_once('x')
-                    .context("torus:RxC")?;
-                let t = Topology::Torus(r.parse()?, c.parse()?);
-                anyhow::ensure!(t.n() == n, "torus dims != workers");
-                t
-            }
-            s if s.starts_with("regular:") => Topology::RandomRegular {
-                n,
-                degree: s[8..].parse()?,
-                seed: self.u64_or("seed", 42)?,
-            },
-            other => anyhow::bail!("unknown topology '{other}'"),
-        })
+        Topology::parse_spec(self.str_or("topology", "ring"), n, self.u64_or("seed", 42)?)
     }
 
     /// Quantizer from `bits`, `rounding`, `shared_randomness`, `compression`.
@@ -233,6 +214,52 @@ impl Config {
         }
     }
 
+    /// DES fault model from `drop_prob`, `delay_prob`, `delay_ms`,
+    /// `straggler` (all default 0 — the fault-free regime).
+    pub fn faults(&self) -> Result<FaultConfig> {
+        let f = FaultConfig {
+            drop_prob: self.f64_or("drop_prob", 0.0)?,
+            delay_prob: self.f64_or("delay_prob", 0.0)?,
+            delay_s: self.f64_or("delay_ms", 0.0)? * 1e-3,
+            straggler: self.f64_or("straggler", 0.0)?,
+        };
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Per-edge link matrix from `link_matrix=uniform|lognormal:S|file:PATH`
+    /// over the base `network` (which must not be `none` for the DES).
+    pub fn link_matrix(&self, n: usize) -> Result<LinkMatrix> {
+        let base = self
+            .network()?
+            .ok_or_else(|| anyhow::anyhow!("the DES runtime needs a network (network!=none)"))?;
+        self.link_matrix_with_base(n, base)
+    }
+
+    /// As [`Self::link_matrix`] but over a caller-supplied base link — the
+    /// async command substitutes its historical Figure-2b default instead
+    /// of erroring when `network` is unset.
+    pub fn link_matrix_with_base(&self, n: usize, base: NetworkConfig) -> Result<LinkMatrix> {
+        LinkMatrix::from_spec(
+            self.str_or("link_matrix", "uniform"),
+            n,
+            base,
+            self.u64_or("seed", 42)?,
+        )
+    }
+
+    /// Optional time-varying topology from `topo_schedule=spec@t,spec@t,…`.
+    pub fn topo_schedule(&self) -> Result<Option<TopologySchedule>> {
+        match self.get("topo_schedule") {
+            None => Ok(None),
+            Some(text) => Ok(Some(TopologySchedule::parse(
+                text,
+                self.usize_or("workers", 8)?,
+                self.u64_or("seed", 42)?,
+            )?)),
+        }
+    }
+
     pub fn partition(&self) -> Result<Partition> {
         match self.str_or("partition", "iid") {
             "iid" => Ok(Partition::Iid),
@@ -306,6 +333,36 @@ mod tests {
         assert_eq!(net.latency_s, 2e-3);
         let cfg = Config::from_str_cfg("network=none").unwrap();
         assert!(cfg.network().unwrap().is_none());
+    }
+
+    #[test]
+    fn des_keys_parse_and_validate() {
+        let cfg = Config::from_str_cfg(
+            "workers=4\ndrop_prob=0.1\ndelay_prob=0.2\ndelay_ms=5\nstraggler=0.4\n",
+        )
+        .unwrap();
+        let f = cfg.faults().unwrap();
+        assert_eq!(f.drop_prob, 0.1);
+        assert!((f.delay_s - 5e-3).abs() < 1e-12);
+        assert!(Config::from_str_cfg("drop_prob=1.0").unwrap().faults().is_err());
+
+        let cfg = Config::from_str_cfg("workers=4\nnetwork=fig1b\n").unwrap();
+        assert!(cfg.link_matrix(4).unwrap().is_uniform());
+        let cfg =
+            Config::from_str_cfg("workers=4\nnetwork=fig1b\nlink_matrix=lognormal:0.5\n")
+                .unwrap();
+        assert!(!cfg.link_matrix(4).unwrap().is_uniform());
+        let cfg = Config::from_str_cfg("workers=4\nnetwork=none\n").unwrap();
+        assert!(cfg.link_matrix(4).is_err(), "DES needs a priced network");
+
+        let cfg =
+            Config::from_str_cfg("workers=4\ntopo_schedule=ring,complete@2.0\n").unwrap();
+        let sched = cfg.topo_schedule().unwrap().unwrap();
+        assert_eq!(sched.stages().len(), 2);
+        assert!(Config::from_str_cfg("topo_schedule=bogus@0")
+            .unwrap()
+            .topo_schedule()
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,993 @@
+//! Discrete-event simulation (DES) runtime: heterogeneous links,
+//! stragglers, message faults, and time-varying topologies under one
+//! deterministic event loop.
+//!
+//! The pre-DES coordinator could model exactly two timing regimes: a
+//! lockstep synchronous round ([`super::Trainer`], one closed-form price
+//! per round) and a hard-coded AD-PSGD loop with a linear earliest-clock
+//! scan. This module subsumes both as *schedules* over one kernel:
+//!
+//! * [`EventQueue`] — a binary-heap future-event list ordered by
+//!   `(time, seq)`; `seq` is the global push counter, so simultaneous
+//!   events resolve in schedule order and the whole simulation is a pure
+//!   function of its inputs (the determinism contract below).
+//! * [`DesTrainer`] — the synchronous schedule: per round, every worker's
+//!   compute finishes at its own sampled time (log-normal stragglers), its
+//!   messages serialize on its uplink and land per-edge
+//!   ([`LinkMatrix`]), drops retransmit, and the round barrier is the last
+//!   arrival. The *value path* is byte-for-byte the same
+//!   [`SyncAlgorithm::step`] call the lockstep trainer makes, so model
+//!   trajectories are **bitwise identical** to [`super::Trainer`] under any
+//!   timing/fault configuration — faults in a synchronous (BSP) system cost
+//!   time (retransmission), never silently corrupt a round.
+//! * [`DesAsyncTrainer`] — the AD-PSGD schedule: each worker's next wake is
+//!   an event; drops hit the *value path* (gossip is loss-tolerant) through
+//!   the stale-neighbor fallback of
+//!   [`AdPsgd::step_pair_with_faults`] — a dropped direction degrades to
+//!   averaging with the last successfully received copy, so the Moniqua
+//!   modulo decode never spans a fault-widened gap (the Theorem-1 θ-bound
+//!   survives faults; see `rust/DESIGN.md` §Event-model).
+//!
+//! ## Determinism contract
+//!
+//! Same seed + same config ⇒ identical event sequence (pinned by
+//! [`EventQueue::digest`]) and bitwise-identical models at any
+//! `TrainConfig::threads` width:
+//!
+//! 1. every stochastic quantity is drawn from its own
+//!    `(seed, round/event, worker/edge)` PCG64 stream at *schedule* time —
+//!    arrival times never depend on pop order;
+//! 2. ties in the heap break on the push counter;
+//! 3. the heap itself is popped single-threaded; parallelism lives inside
+//!    the round engine, which carries its own bitwise contract (§Engine).
+//!
+//! Simulated time is **virtual**: unlike `Trainer::run`, no host-clock
+//! measurement ever enters `sim_time_s` (the lockstep trainer adds the
+//! measured engine wall time, which is irreproducible by design).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::algorithms::{AdPsgd, AsyncVariant, StepCtx, SyncAlgorithm};
+use crate::coordinator::{metrics::TraceRow, Report, TrainConfig};
+use crate::network::LinkMatrix;
+use crate::objectives::Objective;
+use crate::rng::Pcg64;
+use crate::topology::{Topology, TopologySchedule};
+
+// ---------------------------------------------------------------------------
+// Event kernel
+// ---------------------------------------------------------------------------
+
+/// The event vocabulary of both schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A worker finished the local gradient compute of the current
+    /// synchronous round.
+    ComputeDone { worker: usize },
+    /// A directed message landed (synchronous gossip or allreduce phase).
+    MsgArrive { src: usize, dst: usize },
+    /// An asynchronous worker wakes: gossip exchange + stale-gradient step.
+    Wake { worker: usize },
+    /// The gossip graph swaps to `stage` of the [`TopologySchedule`].
+    TopoSwap { stage: usize },
+}
+
+impl Event {
+    fn fold_into(&self, h: &mut u64) {
+        let (tag, x, y) = match *self {
+            Event::ComputeDone { worker } => (0u64, worker as u64, 0),
+            Event::MsgArrive { src, dst } => (1, src as u64, dst as u64),
+            Event::Wake { worker } => (2, worker as u64, 0),
+            Event::TopoSwap { stage } => (3, stage as u64, 0),
+        };
+        fnv_mix(h, tag);
+        fnv_mix(h, x);
+        fnv_mix(h, y);
+    }
+}
+
+#[inline]
+fn fnv_mix(h: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *h = (*h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    /// Reversed so the max-heap pops the *earliest* `(time, seq)` — the
+    /// deterministic tie-break: simultaneous events fire in push order.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Future-event list: a binary heap ordered by `(time, seq)` plus a running
+/// FNV-1a digest of every popped event — the observable the determinism
+/// tests pin.
+#[derive(Debug)]
+pub struct EventQueue {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    digest: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, digest: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn push(&mut self, time: f64, event: Event) {
+        assert!(time.is_finite(), "non-finite event time");
+        self.heap.push(Scheduled { time, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        let s = self.heap.pop()?;
+        fnv_mix(&mut self.digest, s.time.to_bits());
+        s.event.fold_into(&mut self.digest);
+        Some((s.time, s.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// FNV-1a over the popped `(time, event)` sequence: two runs popped the
+    /// same events in the same order iff their digests match.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault + runtime configuration
+// ---------------------------------------------------------------------------
+
+/// Stochastic fault model applied by both schedules. All zeros (the
+/// default) is the fault-free regime.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Per-directed-message drop probability. Synchronous (BSP) rounds
+    /// retransmit until delivery (a drop costs time); asynchronous gossip
+    /// loses the payload and falls back to the stale-neighbor cache.
+    pub drop_prob: f64,
+    /// Probability a delivered message suffers extra queueing delay.
+    pub delay_prob: f64,
+    /// Mean of the (exponential) extra delay, seconds.
+    pub delay_s: f64,
+    /// Log-normal straggler severity: each compute time is multiplied by
+    /// `exp(straggler · g)`, `g ~ N(0,1)`.
+    pub straggler: f64,
+}
+
+impl FaultConfig {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Self::default()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.drop_prob),
+            "drop_prob must be in [0, 1), got {}",
+            self.drop_prob
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.delay_prob),
+            "delay_prob must be in [0, 1], got {}",
+            self.delay_prob
+        );
+        anyhow::ensure!(self.delay_s >= 0.0, "delay_s must be >= 0");
+        anyhow::ensure!(self.straggler >= 0.0, "straggler must be >= 0");
+        Ok(())
+    }
+
+    /// Retransmission count of one message (geometric in `drop_prob`),
+    /// deterministic in the caller-supplied per-message stream.
+    fn sample_attempts(&self, rng: &mut Pcg64) -> u64 {
+        if self.drop_prob <= 0.0 {
+            return 0;
+        }
+        let mut k = 0;
+        while rng.next_f64() < self.drop_prob {
+            k += 1;
+            if k >= 1000 {
+                break; // drop_prob ≈ 1 backstop; validate() rejects 1.0
+            }
+        }
+        k
+    }
+
+    /// Extra queueing delay of one delivered message (0 when it misses the
+    /// delay coin-flip; draws are always consumed so stream shape is fixed).
+    fn sample_delay(&self, rng: &mut Pcg64) -> f64 {
+        if self.delay_prob <= 0.0 {
+            return 0.0;
+        }
+        let hit = rng.next_f64() < self.delay_prob;
+        let u = rng.next_f64();
+        if hit {
+            -self.delay_s * (1.0 - u).ln()
+        } else {
+            0.0
+        }
+    }
+
+    /// Log-normal compute multiplier for `(round, worker)`.
+    fn compute_jitter(&self, rng: &mut Pcg64) -> f64 {
+        (self.straggler * rng.next_gaussian()).exp()
+    }
+}
+
+/// Per-`(seed, round, src, dst, phase)` message stream: arrival times are a
+/// pure function of the schedule, never of heap pop order.
+fn msg_rng(seed: u64, round: u64, src: usize, dst: usize, phase: u64) -> Pcg64 {
+    Pcg64::new(
+        seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        (phase << 48) | ((src as u64) << 28) | ((dst as u64) << 8) | 0xE5,
+    )
+}
+
+/// Per-`(seed, round, worker)` compute-jitter stream.
+fn compute_rng(seed: u64, round: u64, worker: usize) -> Pcg64 {
+    Pcg64::new(
+        seed ^ round.wrapping_mul(0xD129_42A0_85B1_DD45),
+        ((worker as u64) << 8) | 0xC0,
+    )
+}
+
+/// DES-specific configuration riding alongside [`TrainConfig`].
+#[derive(Clone, Debug)]
+pub struct DesConfig {
+    /// Per-edge link parameters (uniform = pre-DES behavior).
+    pub links: LinkMatrix,
+    pub faults: FaultConfig,
+    /// Modeled mean per-worker gradient-compute seconds. Virtual time: the
+    /// DES never consults the host clock (that is what makes event order a
+    /// pure function of the config).
+    pub grad_time_s: f64,
+    /// Optional piecewise-constant gossip-graph schedule.
+    pub topo_schedule: Option<TopologySchedule>,
+}
+
+impl DesConfig {
+    /// Uniform links, no faults — the configuration under which
+    /// [`DesTrainer`] reproduces [`super::Trainer`] exactly.
+    pub fn uniform(n: usize, net: crate::network::NetworkConfig, grad_time_s: f64) -> Self {
+        DesConfig {
+            links: LinkMatrix::uniform(n, net),
+            faults: FaultConfig::none(),
+            grad_time_s,
+            topo_schedule: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synchronous schedule
+// ---------------------------------------------------------------------------
+
+/// Synchronous decentralized trainer on the DES kernel. The value path is
+/// the identical [`SyncAlgorithm::step`] sequence [`super::Trainer`] runs —
+/// only *when* things happen is simulated differently (per-edge links,
+/// stragglers, retransmitted drops, scheduled topology swaps).
+pub struct DesTrainer {
+    cfg: TrainConfig,
+    des: DesConfig,
+    topo: Topology,
+    objective: Box<dyn Objective>,
+    engine: Box<dyn SyncAlgorithm>,
+    rho: f64,
+    /// Event-order digest of the last `run` (determinism observable).
+    pub event_digest: u64,
+    /// Messages put on the wire (including retransmissions).
+    pub messages_sent: u64,
+    /// Messages lost to drops (each one retransmitted).
+    pub messages_dropped: u64,
+}
+
+impl DesTrainer {
+    pub fn new(
+        cfg: TrainConfig,
+        topo: Topology,
+        objective: Box<dyn Objective>,
+        des: DesConfig,
+    ) -> Self {
+        // With a schedule, stage 0 defines the starting graph.
+        let topo = match &des.topo_schedule {
+            Some(s) => s.stages()[0].1.clone(),
+            None => topo,
+        };
+        assert_eq!(topo.n(), cfg.workers, "topology/worker mismatch");
+        assert_eq!(des.links.n(), cfg.workers, "link matrix/worker mismatch");
+        assert!(
+            objective.workers() >= cfg.workers,
+            "objective sharded for fewer workers"
+        );
+        assert!(des.grad_time_s >= 0.0);
+        des.faults.validate().expect("invalid fault config");
+        if let Some(s) = &des.topo_schedule {
+            assert_eq!(s.n(), cfg.workers, "topology schedule/worker mismatch");
+        }
+        let w = topo.comm_matrix();
+        let rho = w.rho();
+        let mut engine = cfg.algorithm.make_sync(&w, objective.dim());
+        if let Some(t) = cfg.threads {
+            engine.set_threads(t);
+        }
+        // Fail a swap-incapable engine at construction, not after burning
+        // the whole pre-swap simulation. Probing with the stage-0 matrix is
+        // a no-op for engines that support swaps.
+        if des.topo_schedule.as_ref().is_some_and(|s| s.stages().len() > 1) {
+            assert!(
+                engine.swap_matrix(&w),
+                "algorithm '{}' does not support topology swaps",
+                engine.name()
+            );
+        }
+        DesTrainer {
+            cfg,
+            des,
+            topo,
+            objective,
+            engine,
+            rho,
+            event_digest: 0,
+            messages_sent: 0,
+            messages_dropped: 0,
+        }
+    }
+
+    pub fn rho(&self) -> f64 {
+        self.rho
+    }
+
+    /// Run the experiment. Model trajectory (losses, consensus, θ, bytes,
+    /// final parameters) is bitwise-identical to [`super::Trainer::run`]
+    /// with the same `TrainConfig`; `sim_time_s` is the DES barrier clock.
+    pub fn run(&mut self) -> Report {
+        let n = self.cfg.workers;
+        let d = self.objective.dim();
+        let init = self.objective.init();
+        let mut xs: Vec<Vec<f32>> = (0..n).map(|_| init.clone()).collect();
+        let mut grads: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0; d]).collect();
+        let mut mean = vec![0.0f32; d];
+
+        let mut report = Report::new(self.cfg.algorithm.name(), n, d);
+        report.extra_memory_floats = self
+            .cfg
+            .algorithm
+            .extra_memory_floats(n, self.topo.edge_count(), d);
+
+        let mut queue = EventQueue::new();
+        let mut adj = self.topo.adjacency();
+        let mut stage = 0usize;
+        let mut lr = self.cfg.lr;
+        let mut now = 0.0f64;
+        let mut g_inf = 0.0f64;
+        let mut total_bytes = 0u64;
+        self.messages_sent = 0;
+        self.messages_dropped = 0;
+
+        for step in 0..self.cfg.steps {
+            // --- topology swap at the round boundary ----------------------
+            if let Some(sch) = &self.des.topo_schedule {
+                let want = sch.stage_at(now);
+                if want != stage {
+                    let topo = sch.stages()[want].1.clone();
+                    let w = topo.comm_matrix();
+                    assert!(
+                        self.engine.swap_matrix(&w),
+                        "algorithm '{}' does not support topology swaps",
+                        self.engine.name()
+                    );
+                    self.rho = w.rho();
+                    adj = topo.adjacency();
+                    self.topo = topo;
+                    stage = want;
+                }
+            }
+            if self.cfg.decay_at.contains(&step) {
+                lr *= self.cfg.decay_factor;
+            }
+
+            // --- local gradients: the exact Trainer sequence --------------
+            let mut train_loss = 0.0f64;
+            for i in 0..n {
+                train_loss += self.objective.loss_grad(i, step, &xs[i], &mut grads[i]);
+                g_inf = g_inf.max(crate::linalg::norm_inf(&grads[i]) as f64);
+            }
+            train_loss /= n as f64;
+
+            // --- communication + update (value path — identical) ----------
+            let ctx = StepCtx { seed: self.cfg.seed, rho: self.rho, g_inf };
+            let stats = self.engine.step(&mut xs, &grads, lr, step, &ctx);
+            total_bytes += stats.bytes_per_msg as u64 * stats.messages
+                + stats.allreduce_bytes.map_or(0, |b| (2 * (n - 1) * b) as u64);
+
+            // --- event-driven round timing --------------------------------
+            now = self.round_barrier(&mut queue, now, step, &adj, &stats);
+
+            // --- trace ----------------------------------------------------
+            if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
+                crate::linalg::mean_into(
+                    &mut mean,
+                    &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
+                );
+                let eval = self.objective.eval(&mean);
+                let consensus = xs
+                    .iter()
+                    .map(|x| crate::linalg::linf_dist(x, &mean))
+                    .fold(0.0f32, f32::max);
+                report.trace.push(TraceRow {
+                    step,
+                    sim_time_s: now,
+                    train_loss,
+                    eval_loss: eval.loss,
+                    eval_acc: eval.accuracy,
+                    consensus_linf: consensus as f64,
+                    bytes_total: total_bytes,
+                    theta: self.engine.last_theta(),
+                });
+            }
+        }
+        self.event_digest = queue.digest();
+        report.total_bytes = total_bytes;
+        report.total_messages = self.messages_sent;
+        report.final_params = {
+            crate::linalg::mean_into(
+                &mut mean,
+                &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
+            );
+            mean.clone()
+        };
+        report
+    }
+
+    /// Drive one synchronous round's timing through the event loop: compute
+    /// finishes per worker, messages serialize on uplinks and land per edge
+    /// (drops retransmit, delays defer), and the returned barrier is the
+    /// last arrival. Leaves the queue empty.
+    fn round_barrier(
+        &mut self,
+        queue: &mut EventQueue,
+        start: f64,
+        round: u64,
+        adj: &[Vec<usize>],
+        stats: &crate::algorithms::CommStats,
+    ) -> f64 {
+        let n = self.cfg.workers;
+        let seed = self.cfg.seed;
+        let faults = self.des.faults;
+        for i in 0..n {
+            let jitter = faults.compute_jitter(&mut compute_rng(seed, round, i));
+            queue.push(start + self.des.grad_time_s * jitter, Event::ComputeDone { worker: i });
+        }
+
+        if let Some(total) = stats.allreduce_bytes {
+            // Ring allreduce: drain the compute barrier, then 2(n−1)
+            // phases of n ring messages, each phase a barrier of its own.
+            let mut barrier = start;
+            let mut pending = n;
+            while pending > 0 {
+                let (t, _) = queue.pop().expect("compute events");
+                barrier = barrier.max(t);
+                pending -= 1;
+            }
+            if n > 1 {
+                let chunk_bits = total as f64 / n as f64 * 8.0;
+                for phase in 0..2 * (n - 1) {
+                    for i in 0..n {
+                        let j = (i + 1) % n;
+                        let link = self.des.links.link(i, j);
+                        let mut rng = msg_rng(seed, round, i, j, 1 + phase as u64);
+                        let attempts = faults.sample_attempts(&mut rng);
+                        let one_way = link.latency_s + chunk_bits / link.bandwidth_bps;
+                        let arrival = barrier
+                            + (1 + attempts) as f64 * one_way
+                            + faults.sample_delay(&mut rng);
+                        self.messages_sent += 1 + attempts;
+                        self.messages_dropped += attempts;
+                        queue.push(arrival, Event::MsgArrive { src: i, dst: j });
+                    }
+                    let mut pending = n;
+                    while pending > 0 {
+                        let (t, _) = queue.pop().expect("phase events");
+                        barrier = barrier.max(t);
+                        pending -= 1;
+                    }
+                }
+            }
+            return barrier;
+        }
+
+        // Gossip round: each ComputeDone schedules that worker's sends.
+        let mut pending_compute = n;
+        let mut pending_msgs = 0usize;
+        let mut barrier = start;
+        while pending_compute > 0 || pending_msgs > 0 {
+            let (t, ev) = queue.pop().expect("round events");
+            barrier = barrier.max(t);
+            match ev {
+                Event::ComputeDone { worker: i } => {
+                    pending_compute -= 1;
+                    // Consecutive sends occupy the uplink serially, in
+                    // neighbor order; each then flies with its own latency.
+                    let mut busy = t;
+                    for &j in &adj[i] {
+                        let ser =
+                            self.des.links.serialization_time(i, j, stats.bytes_per_msg);
+                        busy += ser;
+                        let link = self.des.links.link(i, j);
+                        let mut rng = msg_rng(seed, round, i, j, 0);
+                        let attempts = faults.sample_attempts(&mut rng);
+                        let arrival = busy
+                            + link.latency_s
+                            + attempts as f64 * (ser + link.latency_s)
+                            + faults.sample_delay(&mut rng);
+                        self.messages_sent += 1 + attempts;
+                        self.messages_dropped += attempts;
+                        queue.push(arrival, Event::MsgArrive { src: i, dst: j });
+                        pending_msgs += 1;
+                    }
+                }
+                Event::MsgArrive { .. } => pending_msgs -= 1,
+                other => unreachable!("async event {other:?} in a synchronous round"),
+            }
+        }
+        debug_assert!(queue.is_empty());
+        barrier
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous schedule (AD-PSGD)
+// ---------------------------------------------------------------------------
+
+/// Observables of the last [`DesAsyncTrainer::run`] — reset at the start
+/// of each run, so stale values can never leak across runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DesOutputs {
+    /// Event-order digest (determinism observable).
+    pub event_digest: u64,
+    /// Directed gossip messages lost to drops.
+    pub messages_dropped: u64,
+    /// Drop recoveries that used the stale-neighbor cache.
+    pub stale_fallbacks: u64,
+}
+
+/// AD-PSGD / Moniqua-AD-PSGD on the DES kernel. [`super::AsyncTrainer`] is
+/// a thin wrapper over this type (uniform links, straggler-only faults).
+pub struct DesAsyncTrainer {
+    pub topo: Topology,
+    pub objective: Box<dyn Objective>,
+    pub variant: AsyncVariant,
+    pub links: LinkMatrix,
+    pub faults: FaultConfig,
+    pub topo_schedule: Option<TopologySchedule>,
+    /// Mean per-gradient compute time (seconds).
+    pub grad_time_s: f64,
+    pub lr: f32,
+    pub events: u64,
+    pub eval_every: u64,
+    pub seed: u64,
+    /// Observables of the last `run`.
+    pub out: DesOutputs,
+}
+
+impl DesAsyncTrainer {
+    pub fn run(&mut self) -> Report {
+        let topo0 = match &self.topo_schedule {
+            Some(s) => s.stages()[0].1.clone(),
+            None => self.topo.clone(),
+        };
+        let n = topo0.n();
+        self.out = DesOutputs::default();
+        self.faults.validate().expect("invalid fault config");
+        assert_eq!(self.links.n(), n, "link matrix/worker mismatch");
+        if let Some(s) = &self.topo_schedule {
+            assert_eq!(s.n(), n, "topology schedule/worker mismatch");
+        }
+        let d = self.objective.dim();
+        let init = self.objective.init();
+        let mut xs: Vec<Vec<f32>> = (0..n).map(|_| init.clone()).collect();
+        let mut mean = vec![0.0f32; d];
+        let mut engine = AdPsgd::new(&topo0, d, self.variant.clone(), self.seed);
+        if self.faults.drop_prob > 0.0 {
+            engine.enable_fault_tolerance();
+        }
+        let name = match self.variant {
+            AsyncVariant::FullPrecision => "adpsgd",
+            AsyncVariant::Moniqua { .. } => "moniqua-adpsgd",
+        };
+        let mut report = Report::new(name, n, d);
+
+        let mut queue = EventQueue::new();
+        for i in 0..n {
+            queue.push(0.0, Event::Wake { worker: i });
+        }
+        if let Some(s) = &self.topo_schedule {
+            for (idx, (t, _)) in s.stages().iter().enumerate().skip(1) {
+                queue.push(*t, Event::TopoSwap { stage: idx });
+            }
+        }
+
+        let mut total_bytes = 0u64;
+        let mut messages = 0u64;
+        let mut dropped = 0u64;
+        let mut processed = 0u64;
+        let objective = &mut self.objective;
+
+        while processed < self.events {
+            let Some((now, ev)) = queue.pop() else { break };
+            match ev {
+                Event::TopoSwap { stage } => {
+                    let sch = self.topo_schedule.as_ref().expect("swap without schedule");
+                    engine.set_topology(&sch.stages()[stage].1);
+                    continue;
+                }
+                Event::Wake { worker: a } => {
+                    let event = processed;
+                    // One stream per event index: jitter, then the two
+                    // drop coins, then the two delay draws — fixed shape.
+                    let mut rng = Pcg64::new(self.seed ^ 0xA5E4_71E4, event);
+                    let jitter = self.faults.compute_jitter(&mut rng);
+                    let pair = engine.sample_pair(a);
+                    let deliver_ab =
+                        self.faults.drop_prob == 0.0 || rng.next_f64() >= self.faults.drop_prob;
+                    let deliver_ba =
+                        self.faults.drop_prob == 0.0 || rng.next_f64() >= self.faults.drop_prob;
+                    let mut grad_of = |w: usize, p: &[f32], g: &mut [f32]| {
+                        objective.loss_grad(w, event, p, g);
+                    };
+                    let (pair, stats) = engine.step_pair_with_faults(
+                        pair, &mut xs, &mut grad_of, self.lr, event, deliver_ab, deliver_ba,
+                    );
+                    let bytes = stats.bytes_per_msg;
+                    let comm = self.links.message_time(pair.a, pair.b, bytes)
+                        + self.links.message_time(pair.b, pair.a, bytes)
+                        + self.faults.sample_delay(&mut rng)
+                        + self.faults.sample_delay(&mut rng);
+                    messages += 2;
+                    dropped += u64::from(!deliver_ab) + u64::from(!deliver_ba);
+                    total_bytes += 2 * bytes as u64;
+                    queue.push(
+                        now + self.grad_time_s * jitter + comm,
+                        Event::Wake { worker: pair.a },
+                    );
+
+                    if event % self.eval_every == 0 || event + 1 == self.events {
+                        crate::linalg::mean_into(
+                            &mut mean,
+                            &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
+                        );
+                        let eval = objective.eval(&mean);
+                        let consensus = xs
+                            .iter()
+                            .map(|x| crate::linalg::linf_dist(x, &mean))
+                            .fold(0.0f32, f32::max);
+                        report.trace.push(TraceRow {
+                            step: event,
+                            sim_time_s: now,
+                            train_loss: eval.loss,
+                            eval_loss: eval.loss,
+                            eval_acc: eval.accuracy,
+                            consensus_linf: consensus as f64,
+                            bytes_total: total_bytes,
+                            theta: None,
+                        });
+                    }
+                    processed += 1;
+                }
+                other => unreachable!("sync event {other:?} in the async schedule"),
+            }
+        }
+
+        self.out.event_digest = queue.digest();
+        self.out.messages_dropped = dropped;
+        self.out.stale_fallbacks = engine.stale_fallbacks;
+        report.total_bytes = total_bytes;
+        report.total_messages = messages;
+        crate::linalg::mean_into(
+            &mut mean,
+            &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
+        );
+        report.final_params = mean;
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{Algorithm, ThetaPolicy};
+    use crate::coordinator::Trainer;
+    use crate::data::partition::Partition;
+    use crate::data::{SynthClassification, SynthSpec};
+    use crate::network::NetworkConfig;
+    use crate::objectives::Logistic;
+    use crate::quant::QuantConfig;
+    use std::sync::Arc;
+
+    fn small_objective(n: usize) -> Box<dyn Objective> {
+        let data = Arc::new(SynthClassification::generate(SynthSpec {
+            dim: 8,
+            classes: 4,
+            train_per_class: 40,
+            test_per_class: 10,
+            ..SynthSpec::default()
+        }));
+        Box::new(Logistic::new(data, n, Partition::Iid, 8, 3))
+    }
+
+    fn train_cfg(algorithm: Algorithm, steps: u64) -> TrainConfig {
+        TrainConfig {
+            workers: 4,
+            steps,
+            lr: 0.2,
+            algorithm,
+            network: Some(NetworkConfig::fig1b()),
+            grad_time_s: Some(1e-3),
+            eval_every: 5,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn queue_orders_by_time_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(2.0, Event::ComputeDone { worker: 0 });
+        q.push(1.0, Event::ComputeDone { worker: 1 });
+        q.push(1.0, Event::ComputeDone { worker: 2 }); // tie: later push
+        q.push(0.5, Event::MsgArrive { src: 3, dst: 0 });
+        let order: Vec<Event> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(
+            order,
+            vec![
+                Event::MsgArrive { src: 3, dst: 0 },
+                Event::ComputeDone { worker: 1 },
+                Event::ComputeDone { worker: 2 },
+                Event::ComputeDone { worker: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn queue_digest_is_order_sensitive() {
+        let run = |flip: bool| {
+            let mut q = EventQueue::new();
+            q.push(if flip { 2.0 } else { 1.0 }, Event::Wake { worker: 0 });
+            q.push(if flip { 1.0 } else { 2.0 }, Event::Wake { worker: 1 });
+            while q.pop().is_some() {}
+            q.digest()
+        };
+        assert_eq!(run(false), run(false));
+        assert_ne!(run(false), run(true));
+    }
+
+    #[test]
+    fn fault_sampling_is_deterministic_and_validated() {
+        let f = FaultConfig { drop_prob: 0.5, delay_prob: 0.5, delay_s: 1.0, straggler: 0.3 };
+        f.validate().unwrap();
+        let a = f.sample_attempts(&mut Pcg64::seeded(1));
+        assert_eq!(a, f.sample_attempts(&mut Pcg64::seeded(1)));
+        assert!(FaultConfig { drop_prob: 1.0, ..Default::default() }.validate().is_err());
+        assert!(FaultConfig { delay_s: -1.0, ..Default::default() }.validate().is_err());
+        assert!(FaultConfig::none().is_zero());
+    }
+
+    #[test]
+    fn zero_fault_uniform_round_time_matches_closed_form() {
+        // DES barrier per gossip round must equal the lockstep price:
+        // grad_time + latency + deg_max · serialization.
+        let net = NetworkConfig::new(1e8, 2e-3);
+        let steps = 7u64;
+        let cfg = train_cfg(Algorithm::DPsgd, steps);
+        let des = DesConfig::uniform(4, net, 1e-3);
+        let mut t = DesTrainer::new(cfg, Topology::Ring(4), small_objective(4), des);
+        let r = t.run();
+        let d_bytes = small_objective(4).dim() * 4;
+        let per_round = 1e-3 + net.gossip_round_time(2, d_bytes);
+        let want = steps as f64 * per_round;
+        let got = r.final_sim_time();
+        assert!((got - want).abs() < 1e-9 * want, "got {got} want {want}");
+    }
+
+    #[test]
+    fn des_trajectory_matches_trainer_bitwise() {
+        let algo = Algorithm::Moniqua {
+            theta: ThetaPolicy::Constant(2.0),
+            quant: QuantConfig::stochastic(8),
+        };
+        let mut trainer = Trainer::new(
+            train_cfg(algo.clone(), 30),
+            Topology::Ring(4),
+            small_objective(4),
+        );
+        let r_lockstep = trainer.run();
+        let des = DesConfig {
+            // Heterogeneous links + stragglers + drops: the value path must
+            // be untouched (sync faults cost time, not correctness).
+            links: LinkMatrix::lognormal(4, NetworkConfig::fig1b(), 0.5, 3),
+            faults: FaultConfig { drop_prob: 0.2, straggler: 0.4, ..Default::default() },
+            grad_time_s: 1e-3,
+            topo_schedule: None,
+        };
+        let mut dt = DesTrainer::new(train_cfg(algo, 30), Topology::Ring(4), small_objective(4), des);
+        let r_des = dt.run();
+        assert_eq!(r_lockstep.trace.len(), r_des.trace.len());
+        for (a, b) in r_lockstep.trace.iter().zip(&r_des.trace) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits());
+            assert_eq!(a.consensus_linf.to_bits(), b.consensus_linf.to_bits());
+            assert_eq!(a.bytes_total, b.bytes_total);
+        }
+        assert_eq!(
+            r_lockstep.final_params.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            r_des.final_params.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(dt.messages_dropped > 0, "drop injection must have fired");
+    }
+
+    #[test]
+    fn faults_only_slow_the_synchronous_schedule_down() {
+        let run = |faults: FaultConfig| {
+            let mut t = DesTrainer::new(
+                train_cfg(Algorithm::DPsgd, 10),
+                Topology::Ring(4),
+                small_objective(4),
+                DesConfig {
+                    faults,
+                    ..DesConfig::uniform(4, NetworkConfig::fig1d(), 1e-3)
+                },
+            );
+            let r = t.run();
+            (r.final_sim_time(), r.final_loss())
+        };
+        let (t_clean, l_clean) = run(FaultConfig::none());
+        let (t_faulty, l_faulty) = run(FaultConfig {
+            drop_prob: 0.3,
+            delay_prob: 0.2,
+            delay_s: 5e-3,
+            straggler: 0.5,
+        });
+        assert!(t_faulty > t_clean, "{t_faulty} !> {t_clean}");
+        assert_eq!(l_clean.to_bits(), l_faulty.to_bits(), "sync faults must not touch values");
+    }
+
+    #[test]
+    fn allreduce_round_time_matches_closed_form() {
+        let net = NetworkConfig::new(1e9, 1e-3);
+        let steps = 5u64;
+        let mut t = DesTrainer::new(
+            train_cfg(Algorithm::AllReduce, steps),
+            Topology::Ring(4),
+            small_objective(4),
+            DesConfig::uniform(4, net, 2e-3),
+        );
+        let r = t.run();
+        let d_bytes = small_objective(4).dim() * 4;
+        let want = steps as f64 * (2e-3 + net.allreduce_time(4, d_bytes));
+        let got = r.final_sim_time();
+        assert!((got - want).abs() < 1e-9 * want, "got {got} want {want}");
+    }
+
+    #[test]
+    fn sync_topology_swap_changes_graph_and_stays_deterministic() {
+        let sched = TopologySchedule::new(vec![
+            (0.0, Topology::Ring(4)),
+            (0.05, Topology::Complete(4)),
+        ])
+        .unwrap();
+        let des = DesConfig {
+            topo_schedule: Some(sched),
+            ..DesConfig::uniform(4, NetworkConfig::fig1b(), 5e-3)
+        };
+        let run = || {
+            let mut t = DesTrainer::new(
+                train_cfg(Algorithm::DPsgd, 40),
+                Topology::Ring(4),
+                small_objective(4),
+                des.clone(),
+            );
+            let r = t.run();
+            (r, t.event_digest)
+        };
+        let (r1, d1) = run();
+        let (r2, d2) = run();
+        assert_eq!(d1, d2, "event order must be reproducible");
+        assert_eq!(
+            r1.final_params.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            r2.final_params.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(r1.final_loss() < r1.first_loss());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not support topology swaps")]
+    fn sync_topology_swap_rejects_stateful_engines() {
+        let sched = TopologySchedule::new(vec![
+            (0.0, Topology::Ring(4)),
+            (0.01, Topology::Complete(4)),
+        ])
+        .unwrap();
+        let des = DesConfig {
+            topo_schedule: Some(sched),
+            ..DesConfig::uniform(4, NetworkConfig::fig1b(), 5e-3)
+        };
+        let algo = Algorithm::Choco {
+            quant: QuantConfig::stochastic(8),
+            range: 4.0,
+            gamma: 0.5,
+        };
+        DesTrainer::new(train_cfg(algo, 20), Topology::Ring(4), small_objective(4), des)
+            .run();
+    }
+
+    #[test]
+    fn async_des_converges_with_faults_and_topology_swap() {
+        let sched = TopologySchedule::new(vec![
+            (0.0, Topology::Ring(4)),
+            (0.2, Topology::Complete(4)),
+        ])
+        .unwrap();
+        let mut at = DesAsyncTrainer {
+            topo: Topology::Ring(4),
+            objective: small_objective(4),
+            variant: AsyncVariant::Moniqua {
+                theta: 2.0,
+                quant: QuantConfig::stochastic(8),
+            },
+            links: LinkMatrix::lognormal(4, NetworkConfig::fig2b(), 0.4, 7),
+            faults: FaultConfig { drop_prob: 0.15, straggler: 0.3, ..Default::default() },
+            topo_schedule: Some(sched),
+            grad_time_s: 1e-3,
+            lr: 0.2,
+            events: 800,
+            eval_every: 100,
+            seed: 5,
+            out: Default::default(),
+        };
+        let r = at.run();
+        assert!(r.final_loss() < r.first_loss(), "{} -> {}", r.first_loss(), r.final_loss());
+        assert!(at.out.messages_dropped > 0);
+        assert!(at.out.stale_fallbacks > 0, "drop recovery must have engaged");
+    }
+}

@@ -6,15 +6,24 @@
 //!   the algorithm's extra local passes, normalized to per-worker) plus the
 //!   *simulated* network time of the round's traffic — the substitution for
 //!   the paper's tc-shaped links (DESIGN.md §Hardware-Adaptation).
+//! * [`des`] — the discrete-event simulation runtime: heterogeneous
+//!   per-edge links ([`network::LinkMatrix`](crate::network::LinkMatrix)),
+//!   log-normal stragglers, probabilistic message drop/delay, and
+//!   time-varying topologies, all over one deterministic binary-heap event
+//!   loop. [`des::DesTrainer`] reproduces [`Trainer`]'s model trajectory
+//!   bitwise; [`AsyncTrainer`] is a thin wrapper over
+//!   [`des::DesAsyncTrainer`].
 //! * [`AsyncTrainer`] — event-driven AD-PSGD wall-clock simulation with
 //!   per-worker clocks and straggler variance (Figure 2b), plus
 //!   [`threaded`] — a real `std::thread` gossip runtime proving the
 //!   algorithm runs under true concurrency.
 //! * [`metrics`] — trace rows + CSV/JSON writers.
 
+pub mod des;
 pub mod metrics;
 pub mod threaded;
 
+pub use des::{DesAsyncTrainer, DesConfig, DesOutputs, DesTrainer, EventQueue, FaultConfig};
 pub use metrics::{Report, TraceRow};
 
 use std::time::Instant;
@@ -202,6 +211,11 @@ impl Trainer {
 /// noise) plus the message time of the gossip exchange; the earliest-clock
 /// worker wakes next. Contrast with a synchronous round, which pays the
 /// *max* compute across workers every step — that gap is AD-PSGD's win.
+///
+/// Since the DES runtime landed, this type is a thin wrapper over
+/// [`des::DesAsyncTrainer`] (uniform links, straggler-only faults); use the
+/// DES type directly for per-edge links, message drop/delay, or topology
+/// schedules.
 pub struct AsyncTrainer {
     pub topo: Topology,
     pub objective: Box<dyn Objective>,
@@ -220,71 +234,28 @@ pub struct AsyncTrainer {
 
 impl AsyncTrainer {
     pub fn run(&mut self) -> Report {
-        let n = self.topo.n();
-        let d = self.objective.dim();
-        let init = self.objective.init();
-        let mut xs: Vec<Vec<f32>> = (0..n).map(|_| init.clone()).collect();
-        let mut mean = vec![0.0f32; d];
-        let mut engine =
-            crate::algorithms::AdPsgd::new(&self.topo, d, self.variant.clone(), self.seed);
-        let mut clocks = vec![0.0f64; n];
-        let mut time_rng = crate::rng::Pcg64::new(self.seed, 0x71E4);
-        let mut net = NetworkModel::new(self.network);
-        let name = match self.variant {
-            crate::algorithms::AsyncVariant::FullPrecision => "adpsgd",
-            crate::algorithms::AsyncVariant::Moniqua { .. } => "moniqua-adpsgd",
+        // Thin wrapper over the DES kernel: the heap pops the
+        // earliest-clock worker (what the old linear scan did), uniform
+        // links price the exchange, and the only fault is straggler jitter.
+        let placeholder: Box<dyn Objective> =
+            Box::new(crate::objectives::Quadratic::new(1, 1.0, 0.0, 1, 0));
+        let objective = std::mem::replace(&mut self.objective, placeholder);
+        let mut des = des::DesAsyncTrainer {
+            topo: self.topo.clone(),
+            objective,
+            variant: self.variant.clone(),
+            links: crate::network::LinkMatrix::uniform(self.topo.n(), self.network),
+            faults: des::FaultConfig { straggler: self.straggler, ..Default::default() },
+            topo_schedule: None,
+            grad_time_s: self.grad_time_s,
+            lr: self.lr,
+            events: self.events,
+            eval_every: self.eval_every,
+            seed: self.seed,
+            out: Default::default(),
         };
-        let mut report = Report::new(name, n, d);
-        let objective = &mut self.objective;
-        let mut total_bytes = 0u64;
-
-        for event in 0..self.events {
-            // earliest-clock worker wakes
-            let a = (0..n)
-                .min_by(|&i, &j| clocks[i].partial_cmp(&clocks[j]).unwrap())
-                .unwrap();
-            let mut grad_of = |w: usize, p: &[f32], g: &mut [f32]| {
-                objective.loss_grad(w, event, p, g);
-            };
-            let (_pair, stats) =
-                engine.step_for_worker(a, &mut xs, &mut grad_of, self.lr, event);
-            // advance the waking worker's clock
-            let jitter = (self.straggler * time_rng.next_gaussian()).exp();
-            let compute = self.grad_time_s * jitter;
-            let comm = net.charge_message(stats.bytes_per_msg)
-                + net.charge_message(stats.bytes_per_msg);
-            clocks[a] += compute + comm;
-            total_bytes += 2 * stats.bytes_per_msg as u64;
-
-            if event % self.eval_every == 0 || event + 1 == self.events {
-                crate::linalg::mean_into(
-                    &mut mean,
-                    &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-                );
-                let eval = objective.eval(&mean);
-                let consensus = xs
-                    .iter()
-                    .map(|x| crate::linalg::linf_dist(x, &mean))
-                    .fold(0.0f32, f32::max);
-                report.trace.push(TraceRow {
-                    step: event,
-                    sim_time_s: clocks[a],
-                    train_loss: eval.loss,
-                    eval_loss: eval.loss,
-                    eval_acc: eval.accuracy,
-                    consensus_linf: consensus as f64,
-                    bytes_total: total_bytes,
-                    theta: None,
-                });
-            }
-        }
-        report.total_bytes = total_bytes;
-        report.total_messages = net.total_messages;
-        crate::linalg::mean_into(
-            &mut mean,
-            &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-        );
-        report.final_params = mean;
+        let report = des.run();
+        self.objective = des.objective;
         report
     }
 }

@@ -52,6 +52,12 @@
 //! [`quant::MoniquaCodec::recover_packed_into`]), and the determinism
 //! contract that makes pool width a pure performance knob (bitwise-equal
 //! results at every width, pinned by `tests/engine_equivalence.rs`).
+//! **§Event-model** documents the discrete-event runtime
+//! ([`coordinator::des`]): heterogeneous per-edge links
+//! ([`network::LinkMatrix`]), straggler/drop/delay fault injection with
+//! Moniqua-aware recovery, time-varying topologies
+//! ([`topology::TopologySchedule`]), and the `(time, seq)` determinism
+//! contract pinned by `tests/des_determinism.rs`.
 
 // Style lints the codebase deliberately trades for explicit indexed hot
 // loops (the §Perf kernels are written against godbolt output, not clippy
@@ -79,12 +85,13 @@ pub mod topology;
 pub mod prelude {
     pub use crate::algorithms::{Algorithm, RoundPool, ThetaPolicy};
     pub use crate::coordinator::{
-        AsyncTrainer, Report, TraceRow, TrainConfig, Trainer,
+        AsyncTrainer, DesAsyncTrainer, DesConfig, DesTrainer, FaultConfig, Report,
+        TraceRow, TrainConfig, Trainer,
     };
     pub use crate::data::{partition::Partition, SynthClassification};
-    pub use crate::network::{NetworkConfig, NetworkModel};
+    pub use crate::network::{LinkMatrix, NetworkConfig, NetworkModel};
     pub use crate::objectives::{Objective, ObjectiveKind};
     pub use crate::quant::{QuantConfig, Rounding};
     pub use crate::rng::Pcg64;
-    pub use crate::topology::Topology;
+    pub use crate::topology::{Topology, TopologySchedule};
 }

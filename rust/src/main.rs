@@ -13,6 +13,16 @@
 //! `objective` (quadratic|logistic|mlp|transformer), `partition`
 //! (iid|by_label), `threads` (round-engine pool width; default all cores),
 //! `config` (path to a key=value file), `csv` (output path).
+//!
+//! DES runtime keys (`train runtime=des`, and always active for `async`):
+//! `grad_time_ms` (modeled compute; required meaningfully for `runtime=des`),
+//! `link_matrix` (uniform | lognormal:SIGMA | file:PATH — per-edge
+//! bandwidth/latency over the base `network`), `drop_prob` (per-message
+//! drop; sync rounds retransmit, async gossip falls back to the stale
+//! neighbor cache), `delay_prob`/`delay_ms` (extra queueing delay),
+//! `straggler` (log-normal compute jitter σ), `topo_schedule`
+//! (`spec@time,...` — time-varying gossip graph). See rust/DESIGN.md
+//! §Event-model.
 
 use std::sync::Arc;
 
@@ -20,7 +30,9 @@ use anyhow::{Context, Result};
 
 use moniqua::algorithms::AsyncVariant;
 use moniqua::config::Config;
-use moniqua::coordinator::{metrics, AsyncTrainer, TrainConfig, Trainer};
+use moniqua::coordinator::{
+    metrics, DesAsyncTrainer, DesConfig, DesTrainer, TrainConfig, Trainer,
+};
 use moniqua::data::corpus::Corpus;
 use moniqua::data::{SynthClassification, SynthSpec};
 use moniqua::objectives::{Logistic, Mlp, Objective, Quadratic};
@@ -32,6 +44,8 @@ fn usage() -> ! {
         "usage: moniqua <train|async|compare|info> [key=value | --key value]...\n\
          see rust/src/main.rs docs for keys; e.g.\n\
          moniqua train algorithm=moniqua workers=8 steps=300 bits=8 theta=2.0\n\
+         moniqua train runtime=des drop_prob=0.1 straggler=0.5 link_matrix=lognormal:0.4\n\
+         moniqua async algorithm=moniqua drop_prob=0.05 topo_schedule=ring,complete@2.0\n\
          moniqua compare algorithms=dpsgd,moniqua,choco network=fig1c"
     );
     std::process::exit(2);
@@ -133,6 +147,15 @@ fn train_config(cfg: &Config) -> Result<TrainConfig> {
     })
 }
 
+fn des_config(cfg: &Config, workers: usize) -> Result<DesConfig> {
+    Ok(DesConfig {
+        links: cfg.link_matrix(workers)?,
+        faults: cfg.faults()?,
+        grad_time_s: cfg.f64_or("grad_time_ms", 5.0)? * 1e-3,
+        topo_schedule: cfg.topo_schedule()?,
+    })
+}
+
 fn cmd_train(cfg: &Config) -> Result<()> {
     let tc = train_config(cfg)?;
     let topo = cfg.topology()?;
@@ -144,9 +167,25 @@ fn cmd_train(cfg: &Config) -> Result<()> {
         tc.steps,
         tc.lr
     );
-    let mut trainer = Trainer::new(tc, topo, objective);
-    println!("rho = {:.4}", trainer.rho());
-    let report = trainer.run();
+    let report = match cfg.str_or("runtime", "sync") {
+        "des" => {
+            let workers = tc.workers;
+            let mut trainer = DesTrainer::new(tc, topo, objective, des_config(cfg, workers)?);
+            println!("rho = {:.4} (runtime=des)", trainer.rho());
+            let report = trainer.run();
+            println!(
+                "des: {} messages on the wire, {} dropped, event digest {:#018x}",
+                trainer.messages_sent, trainer.messages_dropped, trainer.event_digest
+            );
+            report
+        }
+        "sync" => {
+            let mut trainer = Trainer::new(tc, topo, objective);
+            println!("rho = {:.4}", trainer.rho());
+            trainer.run()
+        }
+        other => anyhow::bail!("unknown runtime '{other}' (sync|des)"),
+    };
     for row in &report.trace {
         println!(
             "step {:>6}  t={:>9.3}s  loss={:<8.4} acc={:<6} consensus={:.3e}  MB={:.2}",
@@ -166,6 +205,14 @@ fn cmd_train(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_async(cfg: &Config) -> Result<()> {
+    // The async command historically defaults to 6 workers while the
+    // generic getters (topology, topo_schedule) default to 8 — pin the key
+    // so every consumer agrees.
+    let mut cfg = cfg.clone();
+    if cfg.get("workers").is_none() {
+        cfg.set("workers", "6");
+    }
+    let cfg = &cfg;
     let workers = cfg.usize_or("workers", 6)?;
     let topo = cfg.topology()?;
     let objective = build_objective(cfg, workers)?;
@@ -178,25 +225,38 @@ fn cmd_async(cfg: &Config) -> Result<()> {
         },
         other => anyhow::bail!("async supports adpsgd|moniqua, got '{other}'"),
     };
-    let mut trainer = AsyncTrainer {
+    let base = cfg
+        .network()?
+        .unwrap_or(moniqua::network::NetworkConfig::fig2b());
+    let mut faults = cfg.faults()?;
+    if cfg.get("straggler").is_none() {
+        faults.straggler = 0.3; // historical default of the async command
+    }
+    let mut trainer = DesAsyncTrainer {
         topo,
         objective,
         variant,
-        network: cfg
-            .network()?
-            .unwrap_or(moniqua::network::NetworkConfig::fig2b()),
+        links: cfg.link_matrix_with_base(workers, base)?,
+        faults,
+        topo_schedule: cfg.topo_schedule()?,
         grad_time_s: cfg.f64_or("grad_time_ms", 5.0)? * 1e-3,
-        straggler: cfg.f64_or("straggler", 0.3)?,
         lr: cfg.f64_or("lr", 0.1)? as f32,
         events: cfg.u64_or("events", 2000)?,
         eval_every: cfg.u64_or("eval_every", 200)?,
         seed: cfg.u64_or("seed", 42)?,
+        out: Default::default(),
     };
     let report = trainer.run();
     for row in &report.trace {
         println!(
             "event {:>7}  t={:>9.3}s  loss={:<8.4} consensus={:.3e}",
             row.step, row.sim_time_s, row.eval_loss, row.consensus_linf
+        );
+    }
+    if trainer.out.messages_dropped > 0 {
+        println!(
+            "des: {} gossip messages dropped, {} stale-cache recoveries",
+            trainer.out.messages_dropped, trainer.out.stale_fallbacks
         );
     }
     if let Some(path) = cfg.get("csv") {

@@ -1,0 +1,211 @@
+//! Per-edge link parameters — the heterogeneous-network generalization of
+//! the single [`NetworkConfig`](super::NetworkConfig) every link shared
+//! before the DES runtime existed.
+//!
+//! Real decentralized deployments (the regime Figures 1/2b abstract) do not
+//! run over one uniform link: rack-local pairs see 10 Gbps while
+//! cross-region pairs see 100 Mbps and 20 ms. A [`LinkMatrix`] assigns every
+//! directed worker pair its own bandwidth/latency; the DES runtime
+//! (`coordinator::des`) prices each message on the link it actually
+//! traverses. Links are stored symmetrically (`link(i,j) == link(j,i)`)
+//! because the gossip exchanges the paper studies are full-duplex pairwise
+//! connections.
+
+use anyhow::{Context, Result};
+
+use super::NetworkConfig;
+use crate::rng::Pcg64;
+
+/// An n×n matrix of link parameters. Construction guarantees symmetry;
+/// the diagonal is never consulted (workers do not message themselves).
+#[derive(Clone, Debug)]
+pub struct LinkMatrix {
+    n: usize,
+    links: Vec<NetworkConfig>,
+    uniform: bool,
+}
+
+impl LinkMatrix {
+    /// Every pair shares `cfg` — the degenerate case equivalent to the
+    /// pre-DES `NetworkConfig` pricing.
+    pub fn uniform(n: usize, cfg: NetworkConfig) -> Self {
+        assert!(n > 0);
+        LinkMatrix { n, links: vec![cfg; n * n], uniform: true }
+    }
+
+    /// Heterogeneous links: each undirected pair's bandwidth and latency are
+    /// the base values multiplied by independent log-normal factors
+    /// `exp(sigma·g)` (bandwidth divided, latency multiplied, so `sigma`
+    /// uniformly *degrades* in distribution tails — the shape measured for
+    /// shared cloud networks). Deterministic in `(n, base, sigma, seed)`.
+    pub fn lognormal(n: usize, base: NetworkConfig, sigma: f64, seed: u64) -> Self {
+        assert!(n > 0 && sigma >= 0.0);
+        let mut m = Self::uniform(n, base);
+        if sigma == 0.0 {
+            return m;
+        }
+        m.uniform = false;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                // Per-pair stream: independent of iteration order.
+                let mut rng = Pcg64::new(
+                    seed ^ 0x11_4B_ED_5E,
+                    ((i as u64) << 32) | j as u64,
+                );
+                let bw = base.bandwidth_bps / (sigma * rng.next_gaussian()).exp();
+                let lat = base.latency_s * (sigma * rng.next_gaussian()).exp();
+                let cfg = NetworkConfig::new(bw, lat);
+                m.links[i * n + j] = cfg;
+                m.links[j * n + i] = cfg;
+            }
+        }
+        m
+    }
+
+    /// Parse an explicit link table: one `i j bandwidth_mbps latency_ms`
+    /// line per undirected pair (`#` comments and blank lines ignored).
+    /// Pairs not listed keep `base`.
+    pub fn from_table(text: &str, n: usize, base: NetworkConfig) -> Result<Self> {
+        let mut m = Self::uniform(n, base);
+        m.uniform = false;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            let lno = lineno + 1;
+            anyhow::ensure!(
+                fields.len() == 4,
+                "link table line {lno}: expected `i j bandwidth_mbps latency_ms`"
+            );
+            let i: usize = fields[0].parse().with_context(|| format!("link table line {lno}"))?;
+            let j: usize = fields[1].parse().with_context(|| format!("link table line {lno}"))?;
+            let bw_mbps: f64 =
+                fields[2].parse().with_context(|| format!("link table line {lno}"))?;
+            let lat_ms: f64 =
+                fields[3].parse().with_context(|| format!("link table line {lno}"))?;
+            anyhow::ensure!(i < n && j < n && i != j, "link table line {lno}: bad pair {i},{j}");
+            let cfg = NetworkConfig::new(bw_mbps * 1e6, lat_ms * 1e-3);
+            m.links[i * n + j] = cfg;
+            m.links[j * n + i] = cfg;
+        }
+        Ok(m)
+    }
+
+    /// Parse a CLI/config spec: `uniform`, `lognormal:SIGMA`, or
+    /// `file:PATH` (a [`Self::from_table`] file).
+    pub fn from_spec(spec: &str, n: usize, base: NetworkConfig, seed: u64) -> Result<Self> {
+        if spec == "uniform" {
+            return Ok(Self::uniform(n, base));
+        }
+        if let Some(sigma) = spec.strip_prefix("lognormal:") {
+            let sigma: f64 = sigma.parse().context("link_matrix=lognormal:SIGMA")?;
+            return Ok(Self::lognormal(n, base, sigma, seed));
+        }
+        if let Some(path) = spec.strip_prefix("file:") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read link table {path}"))?;
+            return Self::from_table(&text, n, base);
+        }
+        anyhow::bail!("unknown link_matrix spec '{spec}' (uniform|lognormal:S|file:PATH)")
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// True when every link is identical (the DES round time then reduces
+    /// to the closed-form `NetworkConfig::gossip_round_time`).
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
+    }
+
+    /// Link parameters of the (i, j) pair.
+    #[inline]
+    pub fn link(&self, i: usize, j: usize) -> &NetworkConfig {
+        debug_assert!(i < self.n && j < self.n);
+        &self.links[i * self.n + j]
+    }
+
+    /// One-way time of a `bytes` message on the (i, j) link.
+    #[inline]
+    pub fn message_time(&self, i: usize, j: usize, bytes: usize) -> f64 {
+        self.link(i, j).message_time(bytes)
+    }
+
+    /// Serialization-only time (no latency) — the uplink occupancy of one
+    /// message, which consecutive sends from the same worker pay serially.
+    #[inline]
+    pub fn serialization_time(&self, i: usize, j: usize, bytes: usize) -> f64 {
+        bytes as f64 * 8.0 / self.link(i, j).bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_matches_base_everywhere() {
+        let m = LinkMatrix::uniform(4, NetworkConfig::fig1b());
+        assert!(m.is_uniform());
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(*m.link(i, j), NetworkConfig::fig1b());
+            }
+        }
+    }
+
+    #[test]
+    fn lognormal_is_symmetric_and_deterministic() {
+        let a = LinkMatrix::lognormal(6, NetworkConfig::fig1b(), 0.5, 9);
+        let b = LinkMatrix::lognormal(6, NetworkConfig::fig1b(), 0.5, 9);
+        assert!(!a.is_uniform());
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(a.link(i, j), b.link(i, j));
+                assert_eq!(a.link(i, j), a.link(j, i));
+            }
+        }
+        let c = LinkMatrix::lognormal(6, NetworkConfig::fig1b(), 0.5, 10);
+        assert_ne!(a.link(0, 1), c.link(0, 1), "seed must matter");
+    }
+
+    #[test]
+    fn lognormal_zero_sigma_is_uniform() {
+        let m = LinkMatrix::lognormal(4, NetworkConfig::fig1a(), 0.0, 1);
+        assert!(m.is_uniform());
+    }
+
+    #[test]
+    fn table_overrides_named_pairs_only() {
+        let base = NetworkConfig::new(1e9, 1e-3);
+        let m = LinkMatrix::from_table("# slow edge\n0 1 10 5\n", 3, base).unwrap();
+        assert_eq!(m.link(0, 1).bandwidth_bps, 10e6);
+        assert_eq!(m.link(1, 0).latency_s, 5e-3);
+        assert_eq!(*m.link(1, 2), base);
+        assert!(LinkMatrix::from_table("0 0 10 5\n", 3, base).is_err());
+        assert!(LinkMatrix::from_table("0 9 10 5\n", 3, base).is_err());
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let base = NetworkConfig::fig1b();
+        assert!(LinkMatrix::from_spec("uniform", 4, base, 1).unwrap().is_uniform());
+        assert!(!LinkMatrix::from_spec("lognormal:0.3", 4, base, 1)
+            .unwrap()
+            .is_uniform());
+        assert!(LinkMatrix::from_spec("nope", 4, base, 1).is_err());
+    }
+
+    #[test]
+    fn message_time_uses_the_edge_link() {
+        let mut m = LinkMatrix::uniform(2, NetworkConfig::new(8e6, 0.0));
+        m.uniform = false;
+        m.links[1] = NetworkConfig::new(8e6, 1e-3); // 0->1 gains latency
+        m.links[2] = m.links[1];
+        assert!((m.message_time(0, 1, 1000) - 2e-3).abs() < 1e-12);
+        assert!((m.serialization_time(0, 1, 1000) - 1e-3).abs() < 1e-12);
+    }
+}

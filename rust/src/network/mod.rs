@@ -17,6 +17,10 @@
 //! + algorithm-specific *extra local pass* cost, which is how the paper
 //! explains DCD/ECD/Choco/DeepSqueeze lagging Moniqua on fast networks).
 
+pub mod link;
+
+pub use link::LinkMatrix;
+
 /// Link parameters. Defaults correspond to Figure 1(a)'s "fast" network.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetworkConfig {

@@ -50,6 +50,16 @@ impl GossipSampler {
         self.adj.len()
     }
 
+    /// Swap the underlying graph mid-run (a [`TopologySchedule`] stage
+    /// boundary in the DES runtime). The RNG state carries over, so the
+    /// event stream stays one deterministic sequence.
+    ///
+    /// [`TopologySchedule`]: crate::topology::TopologySchedule
+    pub fn set_topology(&mut self, topo: &Topology) {
+        assert_eq!(topo.n(), self.adj.len(), "topology swap changed worker count");
+        self.adj = topo.adjacency();
+    }
+
     /// Next (worker, neighbor) gossip pair.
     pub fn next_pair(&mut self) -> PairGossip {
         let a = self.rng.below(self.adj.len() as u64) as usize;

@@ -13,9 +13,11 @@
 
 pub mod gossip;
 pub mod matrix;
+pub mod schedule;
 
 pub use gossip::{GossipSampler, PairGossip};
 pub use matrix::CommMatrix;
+pub use schedule::TopologySchedule;
 
 use crate::rng::Pcg64;
 
@@ -39,6 +41,31 @@ pub enum Topology {
 impl Topology {
     pub fn ring(n: usize) -> Self {
         Topology::Ring(n)
+    }
+
+    /// Parse a topology spec over `n` workers:
+    /// `ring|chain|complete|star|torus:RxC|regular:D`. The single source of
+    /// truth for the `topology=` config key and the stage specs inside a
+    /// [`TopologySchedule`].
+    pub fn parse_spec(spec: &str, n: usize, seed: u64) -> anyhow::Result<Topology> {
+        Ok(match spec {
+            "ring" => Topology::Ring(n),
+            "chain" => Topology::Chain(n),
+            "complete" => Topology::Complete(n),
+            "star" => Topology::Star(n),
+            s if s.starts_with("torus:") => {
+                let (r, c) = s[6..]
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("torus:RxC"))?;
+                let t = Topology::Torus(r.parse()?, c.parse()?);
+                anyhow::ensure!(t.n() == n, "torus dims != workers");
+                t
+            }
+            s if s.starts_with("regular:") => {
+                Topology::RandomRegular { n, degree: s[8..].parse()?, seed }
+            }
+            other => anyhow::bail!("unknown topology '{other}'"),
+        })
     }
 
     /// Number of workers.

@@ -1,0 +1,129 @@
+//! Time-varying topologies: a piecewise-constant schedule of worker graphs.
+//!
+//! Decentralized systems rarely keep one gossip graph for a whole training
+//! run — workers churn, overlays are rebuilt, and the theory (assumption A2
+//! holding *per round*) permits any sequence of doubly-stochastic matrices
+//! whose graphs stay connected. A [`TopologySchedule`] lists `(time, graph)`
+//! stages; the DES runtime (`coordinator::des`) swaps the gossip matrix at
+//! each stage boundary — for synchronous algorithms via
+//! [`SyncAlgorithm::swap_matrix`](crate::algorithms::SyncAlgorithm::swap_matrix),
+//! for AD-PSGD by re-pointing the [`GossipSampler`](super::GossipSampler).
+
+use anyhow::{Context, Result};
+
+use super::Topology;
+
+/// A sorted list of `(activation_time_s, topology)` stages. The first stage
+/// must activate at t = 0; all stages must share one worker count.
+#[derive(Clone, Debug)]
+pub struct TopologySchedule {
+    stages: Vec<(f64, Topology)>,
+}
+
+impl TopologySchedule {
+    pub fn new(stages: Vec<(f64, Topology)>) -> Result<Self> {
+        anyhow::ensure!(!stages.is_empty(), "topology schedule must have a stage");
+        anyhow::ensure!(stages[0].0 == 0.0, "first stage must activate at t=0");
+        let n = stages[0].1.n();
+        for win in stages.windows(2) {
+            anyhow::ensure!(
+                win[0].0 < win[1].0,
+                "stage times must strictly increase ({} !< {})",
+                win[0].0,
+                win[1].0
+            );
+        }
+        for (t, topo) in &stages {
+            anyhow::ensure!(topo.n() == n, "stage at t={t} has a different worker count");
+            anyhow::ensure!(topo.is_connected(), "stage at t={t} is disconnected");
+        }
+        Ok(TopologySchedule { stages })
+    }
+
+    /// Parse `spec@time,spec@time,...` (e.g. `ring@0,complete@2.5`); specs
+    /// as in [`Topology::parse_spec`]. Entries may omit `@time` only for the
+    /// first stage (implies 0).
+    pub fn parse(text: &str, n: usize, seed: u64) -> Result<Self> {
+        let mut stages = Vec::new();
+        for (idx, entry) in text.split(',').enumerate() {
+            let entry = entry.trim();
+            let (spec, time) = match entry.rsplit_once('@') {
+                Some((s, t)) => (
+                    s,
+                    t.parse::<f64>()
+                        .with_context(|| format!("stage '{entry}': time"))?,
+                ),
+                None if idx == 0 => (entry, 0.0),
+                None => anyhow::bail!("stage '{entry}': expected spec@time"),
+            };
+            stages.push((time, Topology::parse_spec(spec, n, seed)?));
+        }
+        Self::new(stages)
+    }
+
+    pub fn n(&self) -> usize {
+        self.stages[0].1.n()
+    }
+
+    pub fn stages(&self) -> &[(f64, Topology)] {
+        &self.stages
+    }
+
+    /// Index of the stage active at simulated time `t`.
+    pub fn stage_at(&self, t: f64) -> usize {
+        match self.stages.iter().rposition(|(at, _)| *at <= t) {
+            Some(i) => i,
+            None => 0,
+        }
+    }
+
+    /// The topology active at simulated time `t`.
+    pub fn at(&self, t: f64) -> &Topology {
+        &self.stages[self.stage_at(t)].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_lookup() {
+        let s = TopologySchedule::new(vec![
+            (0.0, Topology::Ring(4)),
+            (2.0, Topology::Complete(4)),
+            (5.0, Topology::Star(4)),
+        ])
+        .unwrap();
+        assert_eq!(s.stage_at(0.0), 0);
+        assert_eq!(s.stage_at(1.999), 0);
+        assert_eq!(s.stage_at(2.0), 1);
+        assert_eq!(s.stage_at(100.0), 2);
+        assert_eq!(*s.at(3.0), Topology::Complete(4));
+    }
+
+    #[test]
+    fn parse_specs_and_times() {
+        let s = TopologySchedule::parse("ring,complete@1.5", 4, 7).unwrap();
+        assert_eq!(s.stages().len(), 2);
+        assert_eq!(*s.at(0.0), Topology::Ring(4));
+        assert_eq!(*s.at(2.0), Topology::Complete(4));
+        assert!(TopologySchedule::parse("complete@1.0", 4, 7).is_err(), "no t=0 stage");
+        assert!(TopologySchedule::parse("ring,blob@1", 4, 7).is_err());
+    }
+
+    #[test]
+    fn rejects_mixed_worker_counts_and_unordered_times() {
+        assert!(TopologySchedule::new(vec![
+            (0.0, Topology::Ring(4)),
+            (1.0, Topology::Ring(6)),
+        ])
+        .is_err());
+        assert!(TopologySchedule::new(vec![
+            (0.0, Topology::Ring(4)),
+            (1.0, Topology::Complete(4)),
+            (1.0, Topology::Star(4)),
+        ])
+        .is_err());
+    }
+}

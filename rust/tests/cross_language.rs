@@ -18,6 +18,20 @@ fn artifacts() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Locate a required artifact, or skip with one uniform, explicit message.
+/// Every test in this file goes through here (and [`kernel_meta`]) so a
+/// half-built artifacts directory — e.g. `kernels.meta` committed but HLO
+/// regenerated away — skips cleanly instead of panicking mid-test.
+fn artifact(name: &str) -> Option<std::path::PathBuf> {
+    let path = artifacts().join(name);
+    if path.exists() {
+        Some(path)
+    } else {
+        eprintln!("skipping: artifact '{name}' not found (run `make artifacts` first)");
+        None
+    }
+}
+
 struct KernelMeta {
     n: usize,
     b_theta: f32,
@@ -25,7 +39,7 @@ struct KernelMeta {
 }
 
 fn kernel_meta() -> Option<KernelMeta> {
-    let text = std::fs::read_to_string(artifacts().join("kernels.meta")).ok()?;
+    let text = std::fs::read_to_string(artifact("kernels.meta")?).ok()?;
     let mut n = 0usize;
     let mut b = 0f32;
     let mut l = 0u32;
@@ -55,14 +69,10 @@ fn codec_for(meta: &KernelMeta) -> MoniquaCodec {
 
 #[test]
 fn pallas_quantize_kernel_matches_rust_codec() {
-    let Some(meta) = kernel_meta() else {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return;
-    };
+    let Some(meta) = kernel_meta() else { return };
+    let Some(hlo) = artifact(&format!("quantize_{}.hlo.txt", meta.n)) else { return };
     let rt = moniqua::runtime::Runtime::new(artifacts()).unwrap();
-    let exe = rt
-        .compile_hlo(artifacts().join(format!("quantize_{}.hlo.txt", meta.n)))
-        .unwrap();
+    let exe = rt.compile_hlo(hlo).unwrap();
 
     let mut rng = Pcg64::seeded(42);
     let x: Vec<f32> = (0..meta.n).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
@@ -100,14 +110,10 @@ fn pallas_quantize_kernel_matches_rust_codec() {
 
 #[test]
 fn pallas_recover_kernel_matches_rust_codec() {
-    let Some(meta) = kernel_meta() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
+    let Some(meta) = kernel_meta() else { return };
+    let Some(hlo) = artifact(&format!("recover_{}.hlo.txt", meta.n)) else { return };
     let rt = moniqua::runtime::Runtime::new(artifacts()).unwrap();
-    let exe = rt
-        .compile_hlo(artifacts().join(format!("recover_{}.hlo.txt", meta.n)))
-        .unwrap();
+    let exe = rt.compile_hlo(hlo).unwrap();
 
     let mut rng = Pcg64::seeded(7);
     let codes: Vec<i32> = (0..meta.n)
@@ -141,14 +147,10 @@ fn pallas_recover_kernel_matches_rust_codec() {
 fn roundtrip_through_both_layers_respects_lemma2() {
     // Quantize with the PJRT kernel, recover with the Rust codec: the
     // mixed-path error must still satisfy Lemma 2's δ·B bound.
-    let Some(meta) = kernel_meta() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
+    let Some(meta) = kernel_meta() else { return };
+    let Some(hlo) = artifact(&format!("quantize_{}.hlo.txt", meta.n)) else { return };
     let rt = moniqua::runtime::Runtime::new(artifacts()).unwrap();
-    let exe = rt
-        .compile_hlo(artifacts().join(format!("quantize_{}.hlo.txt", meta.n)))
-        .unwrap();
+    let exe = rt.compile_hlo(hlo).unwrap();
     let codec = codec_for(&meta);
     let theta = codec.b_theta * (1.0 - 2.0 * codec.quant.delta() as f32) / 2.0;
 

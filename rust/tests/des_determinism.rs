@@ -1,0 +1,216 @@
+//! The DES determinism contract (`rust/DESIGN.md` §Event-model):
+//!
+//! 1. same seed + same config ⇒ identical event order (pinned via the
+//!    popped-event digest) and bitwise-identical final models, at every
+//!    `threads` width;
+//! 2. the DES synchronous schedule with zero latency, zero stragglers, and
+//!    zero drops reproduces the lockstep [`Trainer`]'s trajectory exactly —
+//!    for **every** `SyncAlgorithm` in the crate.
+
+use std::sync::Arc;
+
+use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::coordinator::{DesConfig, DesTrainer, FaultConfig, Report, TrainConfig, Trainer};
+use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
+use moniqua::network::{LinkMatrix, NetworkConfig};
+use moniqua::objectives::{Logistic, Objective};
+use moniqua::quant::{QuantConfig, Rounding};
+use moniqua::topology::Topology;
+
+const N: usize = 4;
+const STEPS: u64 = 25;
+
+fn objective() -> Box<dyn Objective> {
+    let data = Arc::new(SynthClassification::generate(SynthSpec {
+        dim: 8,
+        classes: 4,
+        train_per_class: 40,
+        test_per_class: 10,
+        ..SynthSpec::default()
+    }));
+    Box::new(Logistic::new(data, N, Partition::Iid, 8, 3))
+}
+
+fn train_cfg(algorithm: Algorithm, threads: Option<usize>) -> TrainConfig {
+    TrainConfig {
+        workers: N,
+        steps: STEPS,
+        lr: 0.2,
+        algorithm,
+        network: Some(NetworkConfig::fig1b()),
+        grad_time_s: Some(1e-3),
+        eval_every: 5,
+        seed: 11,
+        threads,
+        ..TrainConfig::default()
+    }
+}
+
+fn all_sync_algorithms() -> Vec<Algorithm> {
+    let q8 = QuantConfig::stochastic(8);
+    let q4 = QuantConfig::stochastic(4);
+    let t = ThetaPolicy::Constant(2.0);
+    let one_bit_nearest = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::stochastic(1) };
+    vec![
+        Algorithm::AllReduce,
+        Algorithm::DPsgd,
+        Algorithm::NaiveQuant { quant: q4, range: 4.0 },
+        Algorithm::Moniqua { theta: t, quant: q8 },
+        Algorithm::MoniquaSlack { theta: t, quant: one_bit_nearest, gamma: 0.3 },
+        Algorithm::D2,
+        Algorithm::MoniquaD2 { theta: t, quant: q8 },
+        Algorithm::Dcd { quant: q8, range: 4.0 },
+        Algorithm::Ecd { quant: q8, range: 16.0 },
+        Algorithm::Choco { quant: q8, range: 4.0, gamma: 0.5 },
+        Algorithm::DeepSqueeze { quant: q8, range: 4.0, gamma: 0.5 },
+    ]
+}
+
+fn bits64(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Everything in the trace that must be reproducible (sim_time included for
+/// DES-vs-DES comparisons; excluded when comparing against the lockstep
+/// trainer, which mixes measured host time into its clock).
+fn assert_value_trajectory_eq(a: &Report, b: &Report, what: &str) {
+    assert_eq!(a.trace.len(), b.trace.len(), "{what}: trace length");
+    for (ra, rb) in a.trace.iter().zip(&b.trace) {
+        assert_eq!(ra.step, rb.step, "{what}");
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "{what} step {}", ra.step);
+        assert_eq!(ra.eval_loss.to_bits(), rb.eval_loss.to_bits(), "{what} step {}", ra.step);
+        assert_eq!(
+            ra.consensus_linf.to_bits(),
+            rb.consensus_linf.to_bits(),
+            "{what} step {}",
+            ra.step
+        );
+        assert_eq!(ra.bytes_total, rb.bytes_total, "{what} step {}", ra.step);
+        assert_eq!(
+            ra.theta.map(f64::to_bits),
+            rb.theta.map(f64::to_bits),
+            "{what} step {}",
+            ra.step
+        );
+    }
+    assert_eq!(bits64(&a.final_params), bits64(&b.final_params), "{what}: final params");
+}
+
+#[test]
+fn des_zero_fault_reproduces_lockstep_trainer_for_every_algorithm() {
+    // Zero latency, zero stragglers, zero drops (the acceptance wording);
+    // the link still has bandwidth so bytes are priced.
+    let net = NetworkConfig::new(1e9, 0.0);
+    for algorithm in all_sync_algorithms() {
+        let name = algorithm.name();
+        let lockstep = Trainer::new(
+            train_cfg(algorithm.clone(), None),
+            Topology::Ring(N),
+            objective(),
+        )
+        .run();
+        let mut des = DesTrainer::new(
+            train_cfg(algorithm, None),
+            Topology::Ring(N),
+            objective(),
+            DesConfig::uniform(N, net, 1e-3),
+        );
+        let r = des.run();
+        assert_value_trajectory_eq(&lockstep, &r, name);
+        assert_eq!(des.messages_dropped, 0, "{name}");
+    }
+}
+
+#[test]
+fn des_event_order_and_model_identical_at_any_thread_width() {
+    let algorithm = Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    };
+    let des_cfg = DesConfig {
+        links: LinkMatrix::lognormal(N, NetworkConfig::fig1b(), 0.5, 3),
+        faults: FaultConfig {
+            drop_prob: 0.15,
+            delay_prob: 0.1,
+            delay_s: 2e-3,
+            straggler: 0.5,
+        },
+        grad_time_s: 1e-3,
+        topo_schedule: None,
+    };
+    let run = |threads: Option<usize>| {
+        let mut t = DesTrainer::new(
+            train_cfg(algorithm.clone(), threads),
+            Topology::Ring(N),
+            objective(),
+            des_cfg.clone(),
+        );
+        let r = t.run();
+        (r, t.event_digest)
+    };
+    let (r1, d1) = run(Some(1));
+    for threads in [Some(2), Some(8), None] {
+        let (r, d) = run(threads);
+        assert_eq!(d, d1, "event order must not depend on thread width ({threads:?})");
+        assert_value_trajectory_eq(&r1, &r, "thread width");
+        // DES-vs-DES: even the virtual clock must replay bitwise.
+        for (ra, rb) in r1.trace.iter().zip(&r.trace) {
+            assert_eq!(
+                ra.sim_time_s.to_bits(),
+                rb.sim_time_s.to_bits(),
+                "virtual time drifted at step {}",
+                ra.step
+            );
+        }
+    }
+    // Different seed ⇒ different fault draws ⇒ different event digest.
+    let mut other = train_cfg(algorithm.clone(), Some(1));
+    other.seed = 12;
+    let mut t = DesTrainer::new(other, Topology::Ring(N), objective(), des_cfg);
+    t.run();
+    assert_ne!(t.event_digest, d1, "seed must drive the event sequence");
+}
+
+#[test]
+fn des_faults_never_change_synchronous_values() {
+    // BSP semantics: drops/delays/stragglers reshape *time* only. Compare a
+    // heavily faulted DES run against the clean lockstep trajectory.
+    let algorithm = Algorithm::Dcd { quant: QuantConfig::stochastic(8), range: 4.0 };
+    let lockstep = Trainer::new(
+        train_cfg(algorithm.clone(), None),
+        Topology::Ring(N),
+        objective(),
+    )
+    .run();
+    let mut des = DesTrainer::new(
+        train_cfg(algorithm, None),
+        Topology::Ring(N),
+        objective(),
+        DesConfig {
+            // Uniform links so the clean-vs-faulted clock comparison below
+            // isolates the fault cost (retransmits/delays only add time).
+            links: LinkMatrix::uniform(N, NetworkConfig::fig1d()),
+            faults: FaultConfig {
+                drop_prob: 0.4,
+                delay_prob: 0.3,
+                delay_s: 10e-3,
+                straggler: 1.0,
+            },
+            grad_time_s: 2e-3,
+            topo_schedule: None,
+        },
+    );
+    let r = des.run();
+    assert!(des.messages_dropped > 0, "fault injection must fire");
+    assert_value_trajectory_eq(&lockstep, &r, "faulted dcd");
+    // ...and the faulted clock is strictly slower than the same algorithm
+    // on clean uniform links.
+    let mut clean = DesTrainer::new(
+        train_cfg(Algorithm::Dcd { quant: QuantConfig::stochastic(8), range: 4.0 }, None),
+        Topology::Ring(N),
+        objective(),
+        DesConfig::uniform(N, NetworkConfig::fig1d(), 2e-3),
+    );
+    let rc = clean.run();
+    assert!(r.final_sim_time() > rc.final_sim_time());
+}

@@ -1,0 +1,125 @@
+//! Golden-trace regression fixtures: per-algorithm loss trajectories on a
+//! ring of 4 (fixed seed, 20 rounds) are pinned bitwise under
+//! `rust/tests/golden/`, so engine rewrites (like PR 1's parallel round
+//! engine or PR 2's DES) cannot silently shift any trajectory.
+//!
+//! Blessing protocol: when a fixture file is missing, this test writes it
+//! from the current build and passes (printing a reminder to commit it).
+//! When present, the replayed trace must match **byte for byte** — the
+//! fixtures serialize the raw f64 bit patterns, not rounded decimals. To
+//! intentionally re-bless after an algorithm-changing PR, delete the stale
+//! fixture(s) and rerun `cargo test`.
+
+use std::path::PathBuf;
+
+use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::coordinator::{Report, TrainConfig, Trainer};
+use moniqua::network::NetworkConfig;
+use moniqua::objectives::Quadratic;
+use moniqua::quant::{QuantConfig, Rounding};
+use moniqua::topology::Topology;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// The pinned scenario: ring of 4, quadratic objective with deterministic
+/// per-(worker, step) gradient noise, 20 rounds, eval every 5.
+fn run_trace(algorithm: Algorithm) -> Report {
+    let cfg = TrainConfig {
+        workers: 4,
+        steps: 20,
+        lr: 0.1,
+        algorithm,
+        network: Some(NetworkConfig::fig1b()),
+        grad_time_s: Some(1e-3),
+        eval_every: 5,
+        seed: 7,
+        ..TrainConfig::default()
+    };
+    let objective = Box::new(Quadratic::new(24, 1.0, 0.1, 4, 3));
+    Trainer::new(cfg, Topology::Ring(4), objective).run()
+}
+
+/// Serialize the determinism-relevant trajectory: every traced loss /
+/// consensus / θ as raw f64 bits, the byte counters, and the full final
+/// parameter vector as f32 bits. (`sim_time_s` is excluded: the lockstep
+/// trainer mixes measured host time into it by design.)
+fn fingerprint(r: &Report) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("algorithm={} workers={} dim={}\n", r.algorithm, r.workers, r.dim));
+    for row in &r.trace {
+        s.push_str(&format!(
+            "step={} train={:016x} eval={:016x} cons={:016x} bytes={} theta={}\n",
+            row.step,
+            row.train_loss.to_bits(),
+            row.eval_loss.to_bits(),
+            row.consensus_linf.to_bits(),
+            row.bytes_total,
+            row.theta.map_or("-".to_string(), |t| format!("{:016x}", t.to_bits())),
+        ));
+    }
+    s.push_str("final=");
+    for v in &r.final_params {
+        s.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    s.push('\n');
+    s
+}
+
+fn fixture_algorithms() -> Vec<(&'static str, Algorithm)> {
+    let q8 = QuantConfig::stochastic(8);
+    let t = ThetaPolicy::Constant(2.0);
+    let one_bit_nearest = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::stochastic(1) };
+    vec![
+        ("dpsgd", Algorithm::DPsgd),
+        ("allreduce", Algorithm::AllReduce),
+        ("moniqua", Algorithm::Moniqua { theta: t, quant: q8 }),
+        (
+            "moniqua-slack",
+            Algorithm::MoniquaSlack { theta: t, quant: one_bit_nearest, gamma: 0.3 },
+        ),
+        ("d2", Algorithm::D2),
+        ("moniqua-d2", Algorithm::MoniquaD2 { theta: t, quant: q8 }),
+        ("dcd", Algorithm::Dcd { quant: q8, range: 4.0 }),
+        ("ecd", Algorithm::Ecd { quant: q8, range: 16.0 }),
+        ("choco", Algorithm::Choco { quant: q8, range: 4.0, gamma: 0.5 }),
+        ("deepsqueeze", Algorithm::DeepSqueeze { quant: q8, range: 4.0, gamma: 0.5 }),
+    ]
+}
+
+#[test]
+fn golden_traces_replay_bitwise() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("create golden dir");
+    let mut blessed = Vec::new();
+    for (name, algorithm) in fixture_algorithms() {
+        let got = fingerprint(&run_trace(algorithm.clone()));
+        // In-process replay must be deterministic regardless of fixtures.
+        let again = fingerprint(&run_trace(algorithm));
+        assert_eq!(got, again, "{name}: run-to-run nondeterminism");
+
+        let path = dir.join(format!("{name}.golden"));
+        match std::fs::read_to_string(&path) {
+            Ok(want) => {
+                assert_eq!(
+                    got.trim_end(),
+                    want.replace("\r\n", "\n").trim_end(),
+                    "{name}: trajectory drifted from the committed fixture \
+                     {path:?} — if the change is intentional, delete the \
+                     fixture and rerun to re-bless"
+                );
+            }
+            Err(_) => {
+                std::fs::write(&path, &got).expect("write golden fixture");
+                blessed.push(path);
+            }
+        }
+    }
+    if !blessed.is_empty() {
+        eprintln!("blessed {} new golden fixture(s) — commit them:", blessed.len());
+        for p in &blessed {
+            eprintln!("  {}", p.display());
+        }
+    }
+}

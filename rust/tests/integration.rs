@@ -280,10 +280,15 @@ fn larger_rings_still_converge() {
 #[test]
 fn csv_export_writes_parsable_rows() {
     let r = run(Algorithm::DPsgd, 4, 20, logistic(4));
-    let path = std::env::temp_dir().join("moniqua_test_trace.csv");
+    // A per-process tempdir, not CWD and not a fixed shared filename:
+    // concurrent test invocations (the CI feature matrix runs several)
+    // must not race on the same path.
+    let dir = std::env::temp_dir().join(format!("moniqua-csv-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.csv");
     r.write_csv(path.to_str().unwrap()).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     assert!(text.lines().count() >= 2);
     assert!(text.starts_with("algorithm,step"));
-    std::fs::remove_file(path).ok();
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,154 @@
+//! Property tests (via `testing::forall`) for the quantization stack's
+//! contracts — the invariants every algorithm and the DES fault-recovery
+//! path lean on:
+//!
+//! * the Moniqua codec round-trip error bound of Lemma 2
+//!   (`‖decode(encode(x)) − x‖∞ ≤ δ·B_θ = 2δθ/(1−2δ)`, the θδ-scaled
+//!   bound Theorem 1 consumes) at every supported bit budget;
+//! * bit-packing round-trip identity on arbitrary lengths, including 0 and
+//!   lengths whose bit count is not a multiple of 8 (sub-byte tails);
+//! * entropy-coder round-trip identity for every codec compiled into this
+//!   build (RLE always; deflate/bzip2 under their features).
+
+use moniqua::quant::{packing, Compression, MoniquaCodec, QuantConfig};
+use moniqua::testing::{forall, gaussian_vec, uniform};
+
+/// Bit budgets the paper sweeps (Table 2 goes down to 1 bit; 16 is the
+/// packer's ceiling). 1-bit runs nearest rounding: stochastic rounding has
+/// δ = ½ there, which Lemma 2 excludes (the codec rejects it).
+const BITS: [u32; 5] = [1, 2, 4, 8, 16];
+
+fn quant_for(bits: u32) -> QuantConfig {
+    if bits == 1 {
+        QuantConfig::nearest(bits)
+    } else {
+        QuantConfig::stochastic(bits)
+    }
+}
+
+#[test]
+fn moniqua_roundtrip_error_within_lemma2_bound_all_bit_budgets() {
+    for bits in BITS {
+        let cfg = quant_for(bits);
+        forall(60, |rng| {
+            let theta = uniform(rng, 0.05, 5.0);
+            let codec = MoniquaCodec::from_theta(theta, &cfg);
+            let n = rng.below(257) as usize; // includes 0 and sub-byte tails
+            // Receiver reference y and a sender x within the consensus
+            // bound ‖x − y‖∞ < θ (Lemma 2's hypothesis).
+            let y = gaussian_vec(rng, n, 8.0);
+            let x: Vec<f32> = y
+                .iter()
+                .map(|&yi| yi + uniform(rng, -0.999, 0.999) * theta)
+                .collect();
+            let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            // Through the *wire* representation: packed bytes, as shipped.
+            let mut wire = vec![0u8; packing::packed_len(n, bits)];
+            codec.encode_packed_into(&x, &noise, &mut wire);
+            let mut xhat = vec![0.0f32; n];
+            codec.recover_packed_into(&wire, &y, &mut xhat);
+            // δ·B_θ plus an f32 arithmetic allowance scaled to the modulus.
+            let bound = codec.max_error() + 1e-4 * codec.b_theta.max(1.0);
+            for i in 0..n {
+                let err = (xhat[i] - x[i]).abs();
+                assert!(
+                    err <= bound,
+                    "bits={bits} theta={theta} i={i}: err {err} > bound {bound}"
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn moniqua_self_estimate_within_lemma2_bound() {
+    // Line 4's local biased term obeys the same δ·B_θ bound — the other
+    // half of the averaging update's error budget.
+    for bits in BITS {
+        let cfg = quant_for(bits);
+        forall(30, |rng| {
+            let theta = uniform(rng, 0.1, 3.0);
+            let codec = MoniquaCodec::from_theta(theta, &cfg);
+            let n = 1 + rng.below(128) as usize;
+            let x = gaussian_vec(rng, n, 10.0);
+            let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let mut xhat = vec![0.0f32; n];
+            codec.local_biased_into(&x, &noise, &mut xhat);
+            let bound = codec.max_error() + 1e-4 * codec.b_theta.max(1.0);
+            for i in 0..n {
+                assert!((xhat[i] - x[i]).abs() <= bound, "bits={bits} i={i}");
+            }
+        });
+    }
+}
+
+#[test]
+fn bit_packing_roundtrip_identity_random_lengths() {
+    forall(300, |rng| {
+        let bits = 1 + rng.below(16) as u32;
+        // Lengths concentrated on the interesting cases: 0, 1, and values
+        // straddling byte boundaries for sub-byte budgets.
+        let d = match rng.below(4) {
+            0 => 0,
+            1 => 1 + rng.below(9) as usize,
+            _ => rng.below(500) as usize,
+        };
+        let codes: Vec<u32> = (0..d)
+            .map(|_| (rng.next_u64() & ((1u64 << bits) - 1)) as u32)
+            .collect();
+        let bytes = packing::pack(&codes, bits);
+        assert_eq!(bytes.len(), packing::packed_len(d, bits), "bits={bits} d={d}");
+        assert_eq!(packing::unpack(&bytes, bits, d), codes, "bits={bits} d={d}");
+    });
+}
+
+#[test]
+fn packed_tail_bits_are_zero_padded() {
+    // The sub-byte tail must be deterministic (zero-filled), or wire bytes
+    // would not be a pure function of the codes — breaking digest
+    // verification and the DES's byte accounting.
+    forall(100, |rng| {
+        let bits = 1 + rng.below(7) as u32; // sub-byte budgets only
+        let d = 1 + rng.below(64) as usize;
+        let codes: Vec<u32> = (0..d)
+            .map(|_| (rng.next_u64() & ((1u64 << bits) - 1)) as u32)
+            .collect();
+        let a = packing::pack(&codes, bits);
+        let b = packing::pack(&codes, bits);
+        assert_eq!(a, b);
+        let used_bits = d * bits as usize;
+        if used_bits % 8 != 0 {
+            let tail = a[a.len() - 1];
+            let valid = used_bits % 8;
+            assert_eq!(tail >> valid, 0, "tail bits beyond the payload must be 0");
+        }
+    });
+}
+
+#[test]
+fn entropy_coders_roundtrip_identity() {
+    for comp in Compression::enabled() {
+        forall(80, |rng| {
+            let d = match rng.below(3) {
+                0 => 0,
+                1 => 1 + rng.below(10) as usize,
+                _ => rng.below(2000) as usize,
+            };
+            // Mix of runs (compressible) and noise (incompressible) so both
+            // coder paths are exercised.
+            let mut data = Vec::with_capacity(d);
+            while data.len() < d {
+                if rng.below(2) == 0 {
+                    let run = 1 + rng.below(32) as usize;
+                    let byte = rng.next_u32() as u8;
+                    data.extend(std::iter::repeat(byte).take(run.min(d - data.len())));
+                } else {
+                    data.push(rng.next_u32() as u8);
+                }
+            }
+            let packed = comp.compress(&data);
+            assert_eq!(comp.decompress(&packed), data, "{comp:?} d={d}");
+            assert_eq!(comp.wire_len(&data), packed.len(), "{comp:?} d={d}");
+        });
+    }
+}
