@@ -1,0 +1,122 @@
+//! Transport bench: mem vs tcp wall-clock for the cluster runtime, and
+//! measured-vs-predicted wire bytes per round.
+//!
+//! Three readouts per (algorithm, transport) cell:
+//!
+//! * wall-clock seconds for the whole run (real threads, real sockets for
+//!   tcp — this is host time, not simulated time);
+//! * predicted payload bytes per directed message (the arithmetic
+//!   `CommStats::bytes_per_msg` that Lemma 2 / the bit-budget analysis
+//!   bounds) vs the measured bytes the transport actually shipped per
+//!   frame (payload + the 36-byte frame header);
+//! * a cross-transport check: mem and tcp runs must report identical
+//!   `total_bytes` (the transports may not change the math).
+//!
+//! Run: `cargo bench --offline --bench bench_transport`
+//! (`MONIQUA_FAST=1` shrinks rounds and the model.)
+
+use std::time::Instant;
+
+use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::bench_support::section;
+use moniqua::coordinator::{ClusterConfig, ClusterTrainer, TrainConfig, TransportKind};
+use moniqua::objectives::{Objective, Quadratic};
+use moniqua::quant::QuantConfig;
+use moniqua::topology::Topology;
+use moniqua::transport::HEADER_LEN;
+
+fn main() {
+    let fast = std::env::var("MONIQUA_FAST").is_ok();
+    let workers = 4;
+    let d = if fast { 1 << 12 } else { 1 << 16 };
+    let steps = if fast { 10 } else { 40 };
+    let make_objective = || -> Box<dyn Objective> {
+        Box::new(Quadratic::new(d, 1.0, 0.1, workers, 11))
+    };
+
+    let algorithms: Vec<(&str, Algorithm)> = vec![
+        ("dpsgd", Algorithm::DPsgd),
+        (
+            "moniqua8",
+            Algorithm::Moniqua {
+                theta: ThetaPolicy::Constant(2.0),
+                quant: QuantConfig::stochastic(8),
+            },
+        ),
+        (
+            "moniqua2",
+            Algorithm::Moniqua {
+                theta: ThetaPolicy::Constant(2.0),
+                quant: QuantConfig::stochastic(2),
+            },
+        ),
+    ];
+    let transports: [(&str, TransportKind); 2] = [
+        ("mem", TransportKind::Mem),
+        ("tcp", TransportKind::Tcp { port_base: 0 }),
+    ];
+
+    section(&format!(
+        "cluster runtime, ring/{workers}, d = {d}, {steps} rounds (wall-clock is host time)"
+    ));
+    println!(
+        "{:<10} {:>6} {:>10} {:>10} {:>14} {:>14} {:>12}",
+        "algorithm", "xport", "wall_s", "frames", "pred_B/msg", "meas_B/frame", "overhead"
+    );
+    for (name, algorithm) in &algorithms {
+        let mut totals: Vec<u64> = Vec::new();
+        for (tname, kind) in &transports {
+            let cfg = TrainConfig {
+                workers,
+                steps,
+                lr: 0.05,
+                algorithm: algorithm.clone(),
+                network: None,
+                grad_time_s: Some(0.0),
+                eval_every: steps, // first + last only
+                seed: 11,
+                ..TrainConfig::default()
+            };
+            let mut trainer = ClusterTrainer::new(
+                cfg,
+                Topology::Ring(workers),
+                make_objective(),
+                ClusterConfig { transport: *kind, ..ClusterConfig::default() },
+            )
+            .expect("cluster config");
+            let t0 = Instant::now();
+            let report = trainer.run().expect("cluster run");
+            let wall = t0.elapsed().as_secs_f64();
+            totals.push(report.total_bytes);
+            let predicted_per_msg = report.total_bytes as f64 / trainer.frames_sent as f64;
+            let measured_per_frame =
+                trainer.wire_bytes_sent as f64 / trainer.frames_sent as f64;
+            // Per-frame overhead beyond the payload must be exactly the
+            // fixed header.
+            assert_eq!(
+                trainer.wire_bytes_sent,
+                report.total_bytes + trainer.frames_sent * HEADER_LEN as u64,
+                "{name}/{tname}: measured bytes must be payload + header*frames"
+            );
+            println!(
+                "{:<10} {:>6} {:>10.3} {:>10} {:>14.1} {:>14.1} {:>11.2}%",
+                name,
+                tname,
+                wall,
+                trainer.frames_sent,
+                predicted_per_msg,
+                measured_per_frame,
+                100.0 * (measured_per_frame - predicted_per_msg) / predicted_per_msg,
+            );
+        }
+        assert!(
+            totals.windows(2).all(|w| w[0] == w[1]),
+            "{name}: transports disagree on modeled bytes: {totals:?}"
+        );
+    }
+    println!(
+        "\nframe header is {HEADER_LEN} bytes; overhead shrinks as 1/payload — at 8 bits \
+         and d = {d} it is already noise, which is why the paper's bit-budget bound \
+         survives a real wire format."
+    );
+}

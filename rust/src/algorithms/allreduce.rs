@@ -5,17 +5,24 @@
 //! Figure 1(c)/(d).
 
 use super::engine::RoundPool;
-use super::{CommStats, StepCtx, SyncAlgorithm};
+use super::{common, CommScope, CommStats, Inbox, StepCtx, SyncAlgorithm};
 
 pub struct AllReduce {
     d: usize,
     pool: RoundPool,
     mean_grad: Vec<f32>,
+    /// Node-mode decode buffer for one peer's gradient payload.
+    decode: Vec<f32>,
 }
 
 impl AllReduce {
     pub fn new(d: usize) -> Self {
-        AllReduce { d, pool: RoundPool::for_dim(d), mean_grad: vec![0.0; d] }
+        AllReduce {
+            d,
+            pool: RoundPool::for_dim(d),
+            mean_grad: vec![0.0; d],
+            decode: vec![0.0; d],
+        }
     }
 }
 
@@ -53,6 +60,60 @@ impl SyncAlgorithm for AllReduce {
                 crate::linalg::axpy(x, -lr, mean_grad);
             });
         }
+        CommStats {
+            bytes_per_msg: 0,
+            messages: 0,
+            allreduce_bytes: Some(self.d * 4),
+            extra_local_passes: 0,
+        }
+    }
+
+    fn comm_scope(&self) -> CommScope {
+        // The collective needs every worker's gradient; the cluster runtime
+        // realizes the allreduce as an all-broadcast (the network *model*
+        // still prices it as a ring-allreduce, exactly like the lockstep
+        // trainer).
+        CommScope::All
+    }
+
+    fn node_send(
+        &mut self,
+        _i: usize,
+        _x: &[f32],
+        grad: &[f32],
+        _lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        common::put_f32s(payload, grad);
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        // Same sequential worker-order reduction as the lockstep step —
+        // summation order is part of the determinism contract.
+        let n = inbox.len() + 1;
+        let AllReduce { mean_grad, decode, .. } = self;
+        mean_grad.fill(0.0);
+        for j in 0..n {
+            let g: &[f32] = if j == i {
+                grad
+            } else {
+                common::read_f32s_into(inbox.payload(j), decode);
+                decode
+            };
+            crate::linalg::axpy(mean_grad, 1.0 / n as f32, g);
+        }
+        crate::linalg::axpy(x, -lr, mean_grad);
         CommStats {
             bytes_per_msg: 0,
             messages: 0,

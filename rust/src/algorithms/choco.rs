@@ -11,8 +11,8 @@
 //! ```
 
 use super::engine::RoundPool;
-use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
-use crate::quant::QuantConfig;
+use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
 /// Per-worker round scratch (each field was previously either a shared
@@ -35,6 +35,9 @@ pub struct Choco {
     pool: RoundPool,
     xhat: Vec<Vec<f32>>,
     ws: Vec<Ws>,
+    /// Node-mode decode buffers for one neighbor's quantized difference.
+    node_codes: Vec<u32>,
+    node_vals: Vec<f32>,
 }
 
 impl Choco {
@@ -58,6 +61,8 @@ impl Choco {
                     qdiff: vec![0.0; d],
                 })
                 .collect(),
+            node_codes: vec![0; d],
+            node_vals: vec![0.0; d],
         }
     }
 }
@@ -130,6 +135,80 @@ impl SyncAlgorithm for Choco {
             messages: deg_sum as u64,
             allreduce_bytes: None,
             extra_local_passes: 1, // estimate maintenance
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let d = self.d;
+        let Choco { xhat, ws, .. } = self;
+        let ws = &mut ws[i];
+        for k in 0..d {
+            ws.half[k] = x[k] - lr * grad[k];
+        }
+        common::rounding_noise(&cfg, ctx.seed, round, i, d, &mut ws.noise);
+        for k in 0..d {
+            ws.diff[k] = ws.half[k] - xhat[i][k];
+        }
+        quant.quantize_into(&ws.diff, &ws.noise, &mut ws.codes, &mut ws.qdiff);
+        payload.resize(packing::packed_len(d, cfg.bits), 0);
+        packing::pack_into(&ws.codes, cfg.bits, payload);
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        _grad: &[f32],
+        _lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let d = self.d;
+        let gamma = self.gamma as f32;
+        let Choco { w, ws, xhat, node_codes, node_vals, .. } = self;
+        for k in 0..d {
+            xhat[i][k] += ws[i].qdiff[k];
+        }
+        for &j in &w.neighbors[i] {
+            common::decode_baseline_payload(
+                &quant,
+                false,
+                cfg.bits,
+                inbox.payload(j),
+                node_codes,
+                node_vals,
+            );
+            for k in 0..d {
+                xhat[j][k] += node_vals[k];
+            }
+        }
+        x.copy_from_slice(&ws[i].half);
+        for &j in &w.neighbors[i] {
+            let wji = w.weight(j, i) as f32;
+            for k in 0..d {
+                x[k] += gamma * wji * (xhat[j][k] - xhat[i][k]);
+            }
+        }
+        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes),
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            extra_local_passes: 1,
         }
     }
 }

@@ -104,6 +104,102 @@ pub fn wire_bytes_packed(cfg: &QuantConfig, d: usize, packed: &[u8]) -> usize {
     payload + if cfg.verify_hash { 8 } else { 0 }
 }
 
+/// Which peers a node-level round exchanges payloads with (the
+/// [`super::SyncAlgorithm::node_send`] /
+/// [`super::SyncAlgorithm::node_recv`] split).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommScope {
+    /// Gossip: payloads flow along topology edges only.
+    Neighbors,
+    /// Collective: every worker's payload reaches every other worker
+    /// (AllReduce's gradient exchange).
+    All,
+}
+
+/// One round's inbound payloads at a node, keyed by sender id. Construction
+/// sorts by sender so engine iteration order never depends on arrival
+/// order — the message-passing analogue of the round engine's
+/// "accumulate in neighbor order" determinism rule.
+pub struct Inbox<'a> {
+    msgs: Vec<(usize, &'a [u8])>,
+}
+
+impl<'a> Inbox<'a> {
+    pub fn new(mut msgs: Vec<(usize, &'a [u8])>) -> Self {
+        msgs.sort_by_key(|&(from, _)| from);
+        debug_assert!(
+            msgs.windows(2).all(|w| w[0].0 != w[1].0),
+            "duplicate sender in inbox"
+        );
+        Inbox { msgs }
+    }
+
+    /// Payload from sender `from`; panics if that peer's frame is missing
+    /// (the cluster round barrier guarantees completeness before recv).
+    pub fn payload(&self, from: usize) -> &'a [u8] {
+        self.msgs
+            .iter()
+            .find(|&&(j, _)| j == from)
+            .map(|&(_, p)| p)
+            .unwrap_or_else(|| panic!("inbox missing payload from worker {from}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.msgs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs.is_empty()
+    }
+
+    /// `(sender, payload)` pairs in ascending sender order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &'a [u8])> + '_ {
+        self.msgs.iter().copied()
+    }
+}
+
+/// Append `xs` as little-endian f32 words — the full-precision payload
+/// encoding (lossless: `f32 → bits → f32` is the identity, so decoded
+/// models are bitwise the models the lockstep engines read directly).
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(4 * xs.len());
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Decode a [`put_f32s`] payload into `out` (lengths must agree).
+pub fn read_f32s_into(bytes: &[u8], out: &mut [f32]) {
+    assert_eq!(bytes.len(), 4 * out.len(), "f32 payload length mismatch");
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+}
+
+/// Receiver half of the baseline engines' wire format: strip the optional
+/// 4-byte dynamic-scale header (QSGD-style self-describing range), unpack
+/// the `bits`-packed codes, and decode them to grid values — bitwise the
+/// `values` the sender's `quantize_into`/`quantize_dynamic_into` produced.
+/// One definition so the dcd/ecd/naive/choco/deepsqueeze recv halves can
+/// never disagree on this layout.
+pub fn decode_baseline_payload(
+    quant: &RangeQuantizer,
+    dynamic: bool,
+    bits: u32,
+    payload: &[u8],
+    codes: &mut [u32],
+    vals: &mut [f32],
+) {
+    let (range, codes_bytes) = if dynamic {
+        let b = u32::from_le_bytes(payload[..4].try_into().expect("4-byte scale header"));
+        (f32::from_bits(b), &payload[4..])
+    } else {
+        (quant.range, payload)
+    };
+    packing::unpack_into(codes_bytes, bits, codes);
+    RangeQuantizer { inner: quant.inner, range }.dequantize_into(codes, vals);
+}
+
 /// A bounded-range quantizer used by the *baseline* algorithms (DCD/ECD/
 /// Choco/DeepSqueeze and the naive scheme): values are scaled by `1/range`,
 /// clipped into `[-1/2, 1/2)`, and quantized by the shared linear quantizer.
@@ -148,6 +244,18 @@ impl RangeQuantizer {
         let q = RangeQuantizer { inner: self.inner, range };
         q.quantize_into(x, noise, codes, values);
         range
+    }
+
+    /// Receiver-side decode: grid values for `codes` — exactly the
+    /// `values` that [`Self::quantize_into`] wrote on the sender (the value
+    /// is a pure function of the code, the level count, and the range, so
+    /// recomputing it from the wire codes is bitwise the sender's result).
+    pub fn dequantize_into(&self, codes: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), out.len());
+        let l = self.inner.levels as f32;
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = ((c as f32 + 0.5) / l - 0.5) * self.range;
+        }
     }
 
     /// Quantize `x` into codes (scaled+clipped), writing grid values
@@ -276,6 +384,63 @@ mod tests {
         // failure mode at low bit budgets.
         assert!(vals[0] < 1.0 && vals[1] > -1.0);
         assert!((vals[0] - 100.0).abs() > 90.0);
+    }
+
+    #[test]
+    fn dequantize_matches_sender_values_bitwise() {
+        forall(100, |rng| {
+            let cfg = QuantConfig::stochastic(1 + rng.below(16) as u32);
+            let range = 0.5 + rng.next_f32() * 8.0;
+            let q = RangeQuantizer::new(&cfg, range);
+            let n = rng.below(200) as usize;
+            let x = gaussian_vec(rng, n, 2.0);
+            let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            let mut codes = vec![0u32; n];
+            let mut vals = vec![0.0f32; n];
+            q.quantize_into(&x, &noise, &mut codes, &mut vals);
+            let mut decoded = vec![0.0f32; n];
+            q.dequantize_into(&codes, &mut decoded);
+            assert_eq!(
+                decoded.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            );
+        });
+    }
+
+    #[test]
+    fn f32_payload_roundtrip_is_bitwise() {
+        forall(50, |rng| {
+            let n = rng.below(300) as usize;
+            let x = gaussian_vec(rng, n, 10.0);
+            let mut bytes = Vec::new();
+            put_f32s(&mut bytes, &x);
+            assert_eq!(bytes.len(), 4 * n);
+            let mut back = vec![0.0f32; n];
+            read_f32s_into(&bytes, &mut back);
+            assert_eq!(
+                back.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            );
+        });
+    }
+
+    #[test]
+    fn inbox_sorts_and_looks_up() {
+        let p2 = [2u8];
+        let p0 = [0u8];
+        let inbox = Inbox::new(vec![(2, &p2[..]), (0, &p0[..])]);
+        assert_eq!(inbox.len(), 2);
+        assert_eq!(inbox.payload(0), &p0[..]);
+        assert_eq!(inbox.payload(2), &p2[..]);
+        let order: Vec<usize> = inbox.iter().map(|(j, _)| j).collect();
+        assert_eq!(order, vec![0, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inbox_panics_on_missing_sender() {
+        let inbox = Inbox::new(vec![]);
+        inbox.payload(3);
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //! SGD. D² requires λ_n(W) > −1/3 (checked at construction).
 
 use super::engine::RoundPool;
-use super::{common, CommStats, StepCtx, SyncAlgorithm, ThetaPolicy};
-use crate::quant::{packing, MoniquaCodec, QuantConfig};
+use super::{common, CommStats, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
+use crate::quant::{hash, packing, MoniquaCodec, QuantConfig};
 use crate::topology::CommMatrix;
 
 /// Per-worker state + scratch. `x_prev`/`g_prev` are the variance-reduction
@@ -40,6 +40,8 @@ pub struct D2 {
     recover: Vec<Vec<f32>>,
     /// Round-shared noise (shared-randomness mode): one fill per round.
     shared_noise: Vec<f32>,
+    /// Node-mode decode buffer for full-precision neighbor payloads.
+    decode: Vec<f32>,
     last_theta: f64,
 }
 
@@ -67,8 +69,31 @@ impl D2 {
                 .collect(),
             recover: vec![vec![0.0; d]; n],
             shared_noise: Vec::new(),
+            decode: vec![0.0; d],
             last_theta: 0.0,
         }
+    }
+
+    /// Node-mode half step (variance reduction + history update) for one
+    /// worker — the same math step's first phase runs for every worker.
+    fn node_half_step(&mut self, i: usize, x: &[f32], grad: &[f32], lr: f32) {
+        let d = self.d;
+        let started = self.started;
+        let ws = &mut self.ws[i];
+        if started {
+            for k in 0..d {
+                ws.half[k] = 2.0 * x[k] - ws.x_prev[k] - lr * (grad[k] - ws.g_prev[k]);
+            }
+        } else {
+            for k in 0..d {
+                ws.half[k] = x[k] - lr * grad[k];
+            }
+        }
+        ws.x_prev.copy_from_slice(x);
+        ws.g_prev.copy_from_slice(grad);
+        // Pinned-instance semantics: this worker has now taken its k = 0
+        // plain-SGD step, matching the lockstep flag flip per round.
+        self.started = true;
     }
 }
 
@@ -188,6 +213,101 @@ impl SyncAlgorithm for D2 {
                 let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
                 CommStats {
                     bytes_per_msg: bytes,
+                    messages: deg_sum as u64,
+                    allreduce_bytes: None,
+                    extra_local_passes: 0,
+                }
+            }
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        self.node_half_step(i, x, grad, lr);
+        match self.moniqua.clone() {
+            None => common::put_f32s(payload, &self.ws[i].half),
+            Some((theta_policy, cfg)) => {
+                let theta = theta_policy.theta(lr as f64, ctx.g_inf, self.w.n(), ctx.rho);
+                self.last_theta = theta;
+                let codec = MoniquaCodec::from_theta(theta as f32, &cfg);
+                let d = self.d;
+                let seed = ctx.seed;
+                if cfg.shared_randomness {
+                    common::rounding_noise(&cfg, seed, round, 0, d, &mut self.shared_noise);
+                }
+                let D2 { ws, shared_noise, .. } = self;
+                let ws = &mut ws[i];
+                let noise =
+                    common::phase_noise(&cfg, seed, round, i, d, shared_noise, &mut ws.noise);
+                codec.encode_packed_into(&ws.half, noise, &mut ws.wire);
+                codec.local_biased_into(&ws.half, noise, &mut ws.xhat_self);
+                payload.extend_from_slice(&ws.wire);
+                if cfg.verify_hash {
+                    // Keeps the shipped bytes equal to what
+                    // `wire_bytes_packed` accounts (+8 when hashing is on).
+                    payload.extend_from_slice(
+                        &hash::sender_digest(&codec, &ws.half, noise).to_le_bytes(),
+                    );
+                }
+            }
+        }
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        _grad: &[f32],
+        lr: f32,
+        _round: u64,
+        ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let d = self.d;
+        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        match self.moniqua.clone() {
+            None => {
+                let D2 { w, ws, decode, .. } = self;
+                x.fill(0.0);
+                crate::linalg::axpy(x, w.weight(i, i) as f32, &ws[i].half);
+                for &j in &w.neighbors[i] {
+                    common::read_f32s_into(inbox.payload(j), decode);
+                    crate::linalg::axpy(x, w.weight(j, i) as f32, decode);
+                }
+                CommStats {
+                    bytes_per_msg: d * 4,
+                    messages: deg_sum as u64,
+                    allreduce_bytes: None,
+                    extra_local_passes: 0,
+                }
+            }
+            Some((theta_policy, cfg)) => {
+                let theta = theta_policy.theta(lr as f64, ctx.g_inf, self.w.n(), ctx.rho);
+                let codec = MoniquaCodec::from_theta(theta as f32, &cfg);
+                let wire_len = packing::packed_len(d, cfg.bits);
+                let D2 { w, ws, recover, .. } = self;
+                let rec = &mut recover[i];
+                x.copy_from_slice(&ws[i].half);
+                for &j in &w.neighbors[i] {
+                    let payload = inbox.payload(j);
+                    let wire =
+                        if cfg.verify_hash { &payload[..wire_len] } else { payload };
+                    let wji = w.weight(j, i) as f32;
+                    codec.recover_packed_into(wire, &ws[i].half, rec);
+                    for k in 0..d {
+                        x[k] += wji * (rec[k] - ws[i].xhat_self[k]);
+                    }
+                }
+                CommStats {
+                    bytes_per_msg: common::wire_bytes_packed(&cfg, d, &ws[i].wire),
                     messages: deg_sum as u64,
                     allreduce_bytes: None,
                     extra_local_passes: 0,

@@ -16,8 +16,8 @@
 //! (1–2 bits) exactly as Table 2 reports ("diverge").
 
 use super::engine::RoundPool;
-use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
-use crate::quant::QuantConfig;
+use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
 /// Per-worker quantization scratch for the compress phase.
@@ -44,6 +44,9 @@ pub struct Dcd {
     z: Vec<Vec<f32>>,
     ws: Vec<Ws>,
     initialized: bool,
+    /// Node-mode decode buffers for one neighbor's quantized difference.
+    node_codes: Vec<u32>,
+    node_vals: Vec<f32>,
 }
 
 impl Dcd {
@@ -70,6 +73,8 @@ impl Dcd {
                 })
                 .collect(),
             initialized: false,
+            node_codes: vec![0; d],
+            node_vals: vec![0.0; d],
         }
     }
 }
@@ -156,6 +161,108 @@ impl SyncAlgorithm for Dcd {
             messages: deg_sum as u64,
             allreduce_bytes: None,
             // replica maintenance: one extra full-vector pass per round
+            extra_local_passes: 1,
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let dynamic = self.dynamic;
+        let d = self.d;
+        if !self.initialized {
+            // Replicas start at the identical initialization (assumption
+            // A4) — worker i's own model is every worker's model at k = 0.
+            for xh in self.xhat.iter_mut() {
+                xh.copy_from_slice(x);
+            }
+            self.initialized = true;
+        }
+        // z_i = Σ_j W_ji x̂_j − α g_i over replicas i actually holds.
+        {
+            let Dcd { w, xhat, z, .. } = self;
+            let z = &mut z[i];
+            z.fill(0.0);
+            crate::linalg::axpy(z, w.weight(i, i) as f32, &xhat[i]);
+            for &j in &w.neighbors[i] {
+                crate::linalg::axpy(z, w.weight(j, i) as f32, &xhat[j]);
+            }
+            crate::linalg::axpy(z, -lr, grad);
+        }
+        let scale = {
+            let Dcd { z, xhat, ws, .. } = self;
+            let ws = &mut ws[i];
+            common::rounding_noise(&cfg, ctx.seed, round, i, d, &mut ws.noise);
+            for k in 0..d {
+                ws.diff[k] = z[i][k] - xhat[i][k];
+            }
+            if dynamic {
+                quant.quantize_dynamic_into(&ws.diff, &ws.noise, &mut ws.codes, &mut ws.qdiff)
+            } else {
+                quant.quantize_into(&ws.diff, &ws.noise, &mut ws.codes, &mut ws.qdiff);
+                quant.range
+            }
+        };
+        if dynamic {
+            // QSGD-style self-describing scale: the 4-byte header
+            // `wire_bytes` has always charged for dynamic mode.
+            payload.extend_from_slice(&scale.to_bits().to_le_bytes());
+        }
+        let base = payload.len();
+        payload.resize(base + packing::packed_len(d, cfg.bits), 0);
+        packing::pack_into(&self.ws[i].codes, cfg.bits, &mut payload[base..]);
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        _grad: &[f32],
+        _lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let dynamic = self.dynamic;
+        let d = self.d;
+        let Dcd { w, ws, xhat, z, node_codes, node_vals, .. } = self;
+        // Own replica absorbs the difference i just broadcast…
+        for k in 0..d {
+            xhat[i][k] += ws[i].qdiff[k];
+        }
+        // …and each neighbor replica absorbs the decoded wire difference
+        // (bitwise the sender's qdiff — the value is a pure function of the
+        // code and the scale).
+        for &j in &w.neighbors[i] {
+            common::decode_baseline_payload(
+                &quant,
+                dynamic,
+                cfg.bits,
+                inbox.payload(j),
+                node_codes,
+                node_vals,
+            );
+            for k in 0..d {
+                xhat[j][k] += node_vals[k];
+            }
+        }
+        x.copy_from_slice(&z[i]);
+        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes) + if dynamic { 4 } else { 0 },
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
             extra_local_passes: 1,
         }
     }

@@ -15,8 +15,8 @@
 //! lower accuracy than Moniqua/Choco.
 
 use super::engine::RoundPool;
-use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
-use crate::quant::QuantConfig;
+use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
 /// Per-worker state + scratch: `err` is the algorithm's persistent error
@@ -38,6 +38,9 @@ pub struct DeepSqueeze {
     pub gamma: f64,
     pool: RoundPool,
     ws: Vec<Ws>,
+    /// Node-mode decode buffers for one neighbor's compressed vector.
+    node_codes: Vec<u32>,
+    node_vals: Vec<f32>,
 }
 
 impl DeepSqueeze {
@@ -60,6 +63,8 @@ impl DeepSqueeze {
                     noise: Vec::new(),
                 })
                 .collect(),
+            node_codes: vec![0; d],
+            node_vals: vec![0.0; d],
         }
     }
 
@@ -125,6 +130,72 @@ impl SyncAlgorithm for DeepSqueeze {
             messages: deg_sum as u64,
             allreduce_bytes: None,
             extra_local_passes: 1, // error-tracking pass
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let d = self.d;
+        let ws = &mut self.ws[i];
+        for k in 0..d {
+            ws.v[k] = x[k] - lr * grad[k];
+            ws.u[k] = ws.v[k] + ws.err[k];
+        }
+        common::rounding_noise(&cfg, ctx.seed, round, i, d, &mut ws.noise);
+        quant.quantize_into(&ws.u, &ws.noise, &mut ws.codes, &mut ws.c);
+        for k in 0..d {
+            ws.err[k] = ws.u[k] - ws.c[k];
+        }
+        payload.resize(packing::packed_len(d, cfg.bits), 0);
+        packing::pack_into(&ws.codes, cfg.bits, payload);
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        _grad: &[f32],
+        _lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let d = self.d;
+        let gamma = self.gamma as f32;
+        let DeepSqueeze { w, ws, node_codes, node_vals, .. } = self;
+        x.copy_from_slice(&ws[i].v);
+        for &j in &w.neighbors[i] {
+            common::decode_baseline_payload(
+                &quant,
+                false,
+                cfg.bits,
+                inbox.payload(j),
+                node_codes,
+                node_vals,
+            );
+            let wji = w.weight(j, i) as f32;
+            for k in 0..d {
+                x[k] += gamma * wji * (node_vals[k] - ws[i].c[k]);
+            }
+        }
+        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes),
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            extra_local_passes: 1,
         }
     }
 }

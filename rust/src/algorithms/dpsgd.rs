@@ -6,7 +6,7 @@
 //! ```
 
 use super::engine::RoundPool;
-use super::{CommStats, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, StepCtx, SyncAlgorithm};
 use crate::topology::CommMatrix;
 
 pub struct DPsgd {
@@ -14,12 +14,20 @@ pub struct DPsgd {
     d: usize,
     pool: RoundPool,
     scratch: Vec<Vec<f32>>,
+    /// Node-mode decode buffer for one neighbor's f32 payload.
+    decode: Vec<f32>,
 }
 
 impl DPsgd {
     pub fn new(w: CommMatrix, d: usize) -> Self {
         let n = w.n();
-        DPsgd { w, d, pool: RoundPool::for_dim(d), scratch: vec![vec![0.0; d]; n] }
+        DPsgd {
+            w,
+            d,
+            pool: RoundPool::for_dim(d),
+            scratch: vec![vec![0.0; d]; n],
+            decode: vec![0.0; d],
+        }
     }
 }
 
@@ -66,6 +74,49 @@ impl SyncAlgorithm for DPsgd {
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {
             bytes_per_msg: self.d * 4, // full f32 model
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            extra_local_passes: 0,
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        _i: usize,
+        x: &[f32],
+        _grad: &[f32],
+        _lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        // Exact neighbor models on the wire: the payload is the raw model.
+        common::put_f32s(payload, x);
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let DPsgd { w, scratch, decode, .. } = self;
+        let out = &mut scratch[i];
+        out.fill(0.0);
+        crate::linalg::axpy(out, w.weight(i, i) as f32, x);
+        for &j in &w.neighbors[i] {
+            common::read_f32s_into(inbox.payload(j), decode);
+            crate::linalg::axpy(out, w.weight(j, i) as f32, decode);
+        }
+        crate::linalg::axpy(out, -lr, grad);
+        x.copy_from_slice(out);
+        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: self.d * 4,
             messages: deg_sum as u64,
             allreduce_bytes: None,
             extra_local_passes: 0,

@@ -16,8 +16,8 @@
 //! 1 bit, ≈36% accuracy at 2 bits).
 
 use super::engine::RoundPool;
-use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
-use crate::quant::QuantConfig;
+use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
 /// Per-worker extrapolate+quantize scratch.
@@ -40,6 +40,9 @@ pub struct Ecd {
     x_new: Vec<Vec<f32>>,
     ws: Vec<Ws>,
     initialized: bool,
+    /// Node-mode decode buffers for one neighbor's quantized estimate.
+    node_codes: Vec<u32>,
+    node_vals: Vec<f32>,
 }
 
 impl Ecd {
@@ -65,6 +68,8 @@ impl Ecd {
                 })
                 .collect(),
             initialized: false,
+            node_codes: vec![0; d],
+            node_vals: vec![0.0; d],
         }
     }
 }
@@ -155,6 +160,101 @@ impl SyncAlgorithm for Ecd {
             messages: deg_sum as u64,
             allreduce_bytes: None,
             // extrapolation + estimate update: two extra full-vector passes
+            extra_local_passes: 2,
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let dynamic = self.dynamic;
+        let d = self.d;
+        if !self.initialized {
+            for xh in self.xhat.iter_mut() {
+                xh.copy_from_slice(x); // identical init (A4)
+            }
+            self.initialized = true;
+        }
+        let ext = (round as f32 + 2.0) / 2.0;
+        {
+            let Ecd { w, xhat, x_new, .. } = self;
+            let xn = &mut x_new[i];
+            xn.fill(0.0);
+            crate::linalg::axpy(xn, w.weight(i, i) as f32, &xhat[i]);
+            for &j in &w.neighbors[i] {
+                crate::linalg::axpy(xn, w.weight(j, i) as f32, &xhat[j]);
+            }
+            crate::linalg::axpy(xn, -lr, grad);
+        }
+        let scale = {
+            let Ecd { x_new, ws, .. } = self;
+            let ws = &mut ws[i];
+            common::rounding_noise(&cfg, ctx.seed, round, i, d, &mut ws.noise);
+            for kk in 0..d {
+                ws.z[kk] = (1.0 - ext) * x[kk] + ext * x_new[i][kk];
+            }
+            if dynamic {
+                quant.quantize_dynamic_into(&ws.z, &ws.noise, &mut ws.codes, &mut ws.qz)
+            } else {
+                quant.quantize_into(&ws.z, &ws.noise, &mut ws.codes, &mut ws.qz);
+                quant.range
+            }
+        };
+        if dynamic {
+            payload.extend_from_slice(&scale.to_bits().to_le_bytes());
+        }
+        let base = payload.len();
+        payload.resize(base + packing::packed_len(d, cfg.bits), 0);
+        packing::pack_into(&self.ws[i].codes, cfg.bits, &mut payload[base..]);
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        _grad: &[f32],
+        _lr: f32,
+        round: u64,
+        _ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let dynamic = self.dynamic;
+        let d = self.d;
+        let eta = 2.0 / (round as f32 + 2.0);
+        let Ecd { w, ws, xhat, x_new, node_codes, node_vals, .. } = self;
+        for k in 0..d {
+            xhat[i][k] = (1.0 - eta) * xhat[i][k] + eta * ws[i].qz[k];
+        }
+        for &j in &w.neighbors[i] {
+            common::decode_baseline_payload(
+                &quant,
+                dynamic,
+                cfg.bits,
+                inbox.payload(j),
+                node_codes,
+                node_vals,
+            );
+            for k in 0..d {
+                xhat[j][k] = (1.0 - eta) * xhat[j][k] + eta * node_vals[k];
+            }
+        }
+        x.copy_from_slice(&x_new[i]);
+        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes) + if dynamic { 4 } else { 0 },
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
             extra_local_passes: 2,
         }
     }

@@ -36,7 +36,7 @@ pub mod moniqua;
 pub mod naive;
 
 pub use adpsgd::{AdPsgd, AsyncVariant};
-pub use common::{CommStats, RangeQuantizer, StepCtx};
+pub use common::{CommScope, CommStats, Inbox, RangeQuantizer, StepCtx};
 pub use engine::RoundPool;
 
 use crate::quant::QuantConfig;
@@ -155,6 +155,39 @@ impl Algorithm {
 }
 
 /// One synchronous communication+update engine.
+///
+/// Engines expose the same round through two surfaces:
+///
+/// * [`Self::step`] — the lockstep form: the trainer hands over the whole
+///   cluster state and the engine fans the phases across the
+///   [`RoundPool`].
+/// * [`Self::node_send`] / [`Self::node_recv`] — the **message-passing
+///   decomposition** the cluster runtime
+///   ([`coordinator::cluster`](crate::coordinator::cluster)) drives: the
+///   send half computes everything worker `i` can from its *own* model and
+///   gradient and serializes the payload `i` broadcasts; the recv half
+///   integrates the peers' payloads (delivered as an [`Inbox`]) and
+///   finishes the round.
+///
+/// ### Node-mode contract
+///
+/// A node-mode engine instance is constructed exactly like a lockstep one
+/// (full cluster shape — worker-indexed state such as DCD/ECD replicas is
+/// allocated for all `n`), but each instance is *pinned to one worker
+/// index*: all `node_send`/`node_recv` calls on it use the same `i`, and
+/// the only worker-`j` state it may touch is replica state that worker `i`
+/// reconstructs purely from `j`'s wire payloads. Under that rule, `n`
+/// pinned instances wired payload-for-payload produce **bitwise** the
+/// models one lockstep instance produces (pinned by
+/// `tests/cluster_equivalence.rs`), because every float op runs in the
+/// same order on the same bits — the payload encodings are either
+/// lossless (raw f32 words) or the exact wire codes the lockstep engines
+/// already exchange.
+///
+/// The recv half must accumulate neighbors in ascending-sender order (what
+/// [`Inbox::iter`] yields and the lockstep phases' "neighbor order" rule
+/// requires) and must return the same [`CommStats`] the lockstep `step`
+/// reports.
 pub trait SyncAlgorithm: Send {
     fn name(&self) -> &'static str;
 
@@ -169,6 +202,40 @@ pub trait SyncAlgorithm: Send {
         round: u64,
         ctx: &StepCtx,
     ) -> CommStats;
+
+    /// Node-mode send half: update worker `i`'s pre-communication state
+    /// from its own model/gradient and append `i`'s round payload to
+    /// `payload` (cleared by the caller). See the trait docs for the
+    /// pinned-instance contract.
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    );
+
+    /// Node-mode recv half: integrate the round's inbound payloads and
+    /// finish worker `i`'s round, mutating `x` in place. Returns the same
+    /// cluster-wide traffic stats the lockstep [`Self::step`] reports.
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats;
+
+    /// Which peers the node-mode round exchanges payloads with.
+    fn comm_scope(&self) -> CommScope {
+        CommScope::Neighbors
+    }
 
     /// The θ bound the algorithm used this round (Moniqua variants), for
     /// diagnostics/verification traces.

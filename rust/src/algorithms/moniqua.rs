@@ -26,7 +26,7 @@
 //! reused at every receiving edge.
 
 use super::engine::RoundPool;
-use super::{common, CommStats, StepCtx, SyncAlgorithm, ThetaPolicy};
+use super::{common, CommStats, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
 use crate::quant::{hash, packing, MoniquaCodec, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -234,6 +234,88 @@ impl SyncAlgorithm for MoniquaSync {
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {
             bytes_per_msg,
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            extra_local_passes: 0,
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        _grad: &[f32],
+        lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        // Same per-worker work as step's encode phase, pinned to worker i.
+        let codec = self.codec(lr, ctx);
+        self.last_theta = codec.b_theta as f64 * (1.0 - 2.0 * codec.quant.delta()) / 2.0;
+        let cfg = self.cfg;
+        let d = self.d;
+        let seed = ctx.seed;
+        if cfg.shared_randomness {
+            common::rounding_noise(&cfg, seed, round, 0, d, &mut self.shared_noise);
+        }
+        let MoniquaSync { send, shared_noise, .. } = self;
+        let ws = &mut send[i];
+        let noise = common::phase_noise(&cfg, seed, round, i, d, shared_noise, &mut ws.noise);
+        codec.encode_packed_into(x, noise, &mut ws.wire);
+        codec.local_biased_into(x, noise, &mut ws.xhat_self);
+        payload.extend_from_slice(&ws.wire);
+        if cfg.verify_hash {
+            // The §6 digest travels appended to the payload — exactly the
+            // +8 bytes `wire_bytes_packed` has always accounted for.
+            ws.digest = hash::sender_digest(&codec, x, noise);
+            payload.extend_from_slice(&ws.digest.to_le_bytes());
+        }
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        _round: u64,
+        ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let codec = self.codec(lr, ctx);
+        let cfg = self.cfg;
+        let d = self.d;
+        let wire_len = packing::packed_len(d, cfg.bits);
+        let MoniquaSync { w, send, recv, verify_failures, .. } = self;
+        let rs = &mut recv[i];
+        rs.failures = 0;
+        rs.acc.fill(0.0);
+        for &j in &w.neighbors[i] {
+            let payload = inbox.payload(j);
+            let (wire, digest) = if cfg.verify_hash {
+                let (wb, db) = payload.split_at(wire_len);
+                (wb, u64::from_le_bytes(db.try_into().expect("8-byte digest tail")))
+            } else {
+                (payload, 0u64)
+            };
+            let wji = w.weight(j, i) as f32;
+            codec.recover_packed_into(wire, x, &mut rs.recover);
+            if cfg.verify_hash && !hash::verify_reconstruction(&codec, &rs.recover, digest) {
+                rs.failures += 1;
+            }
+            let xh = &send[i].xhat_self;
+            for k in 0..d {
+                rs.acc[k] += wji * (rs.recover[k] - xh[k]);
+            }
+        }
+        *verify_failures += rs.failures;
+        for k in 0..d {
+            x[k] += rs.acc[k] - lr * grad[k];
+        }
+        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: common::wire_bytes_packed(&cfg, d, &send[i].wire),
             messages: deg_sum as u64,
             allreduce_bytes: None,
             extra_local_passes: 0,

@@ -10,8 +10,8 @@
 //! to regenerate that result (bench_theorem1_naive).
 
 use super::engine::RoundPool;
-use super::{common, CommStats, RangeQuantizer, StepCtx, SyncAlgorithm};
-use crate::quant::QuantConfig;
+use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
 /// Per-worker encode scratch (noise + codes were previously shared single
@@ -30,6 +30,9 @@ pub struct NaiveQuant {
     pool: RoundPool,
     enc: Vec<Enc>,
     scratch: Vec<Vec<f32>>,
+    /// Node-mode decode buffers for one neighbor's packed codes.
+    node_codes: Vec<u32>,
+    node_vals: Vec<f32>,
 }
 
 impl NaiveQuant {
@@ -49,6 +52,8 @@ impl NaiveQuant {
                 })
                 .collect(),
             scratch: vec![vec![0.0; d]; n],
+            node_codes: vec![0; d],
+            node_vals: vec![0.0; d],
         }
     }
 
@@ -109,6 +114,64 @@ impl SyncAlgorithm for NaiveQuant {
         let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
         CommStats {
             bytes_per_msg: bytes,
+            messages: deg_sum as u64,
+            allreduce_bytes: None,
+            extra_local_passes: 0,
+        }
+    }
+
+    fn node_send(
+        &mut self,
+        i: usize,
+        x: &[f32],
+        _grad: &[f32],
+        _lr: f32,
+        round: u64,
+        ctx: &StepCtx,
+        payload: &mut Vec<u8>,
+    ) {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let d = self.d;
+        let e = &mut self.enc[i];
+        common::rounding_noise(&cfg, ctx.seed, round, i, d, &mut e.noise);
+        quant.quantize_into(x, &e.noise, &mut e.codes, &mut e.qval);
+        payload.resize(packing::packed_len(d, cfg.bits), 0);
+        packing::pack_into(&e.codes, cfg.bits, payload);
+    }
+
+    fn node_recv(
+        &mut self,
+        i: usize,
+        x: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        _round: u64,
+        _ctx: &StepCtx,
+        inbox: &Inbox,
+    ) -> CommStats {
+        let cfg = self.cfg;
+        let quant = self.quant;
+        let NaiveQuant { w, enc, scratch, node_codes, node_vals, .. } = self;
+        let out = &mut scratch[i];
+        out.fill(0.0);
+        crate::linalg::axpy(out, w.weight(i, i) as f32, x);
+        for &j in &w.neighbors[i] {
+            common::decode_baseline_payload(
+                &quant,
+                false,
+                cfg.bits,
+                inbox.payload(j),
+                node_codes,
+                node_vals,
+            );
+            crate::linalg::axpy(out, w.weight(j, i) as f32, node_vals);
+        }
+        crate::linalg::axpy(out, -lr, grad);
+        x.copy_from_slice(out);
+        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        CommStats {
+            bytes_per_msg: common::wire_bytes(&cfg, &enc[i].codes),
             messages: deg_sum as u64,
             allreduce_bytes: None,
             extra_local_passes: 0,

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::algorithms::{Algorithm, ThetaPolicy};
+use crate::coordinator::cluster::{ClusterConfig, TransportKind};
 use crate::coordinator::des::FaultConfig;
 use crate::data::partition::Partition;
 use crate::network::{LinkMatrix, NetworkConfig};
@@ -260,6 +261,28 @@ impl Config {
         }
     }
 
+    /// Cluster-runtime config from `transport=mem|tcp`, `port_base`
+    /// (0 = OS ephemeral ports, collision-safe), `recv_timeout_ms`.
+    pub fn cluster(&self) -> Result<ClusterConfig> {
+        let transport = match self.str_or("transport", "mem") {
+            "mem" => TransportKind::Mem,
+            "tcp" => {
+                let base = self.u64_or("port_base", 0)?;
+                if base > u16::MAX as u64 {
+                    anyhow::bail!("port_base={base} exceeds the u16 port range");
+                }
+                TransportKind::Tcp { port_base: base as u16 }
+            }
+            other => anyhow::bail!("unknown transport '{other}' (mem|tcp)"),
+        };
+        Ok(ClusterConfig {
+            transport,
+            recv_timeout: std::time::Duration::from_millis(
+                self.u64_or("recv_timeout_ms", 30_000)?,
+            ),
+        })
+    }
+
     pub fn partition(&self) -> Result<Partition> {
         match self.str_or("partition", "iid") {
             "iid" => Ok(Partition::Iid),
@@ -362,6 +385,29 @@ mod tests {
         assert!(Config::from_str_cfg("topo_schedule=bogus@0")
             .unwrap()
             .topo_schedule()
+            .is_err());
+    }
+
+    #[test]
+    fn cluster_keys_parse_and_validate() {
+        let cfg = Config::from_str_cfg("").unwrap();
+        let c = cfg.cluster().unwrap();
+        assert_eq!(c.transport, TransportKind::Mem);
+        assert_eq!(c.recv_timeout.as_millis(), 30_000);
+
+        let cfg = Config::from_str_cfg("transport=tcp\nport_base=9000\nrecv_timeout_ms=500")
+            .unwrap();
+        let c = cfg.cluster().unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp { port_base: 9000 });
+        assert_eq!(c.recv_timeout.as_millis(), 500);
+
+        assert!(Config::from_str_cfg("transport=carrier-pigeon")
+            .unwrap()
+            .cluster()
+            .is_err());
+        assert!(Config::from_str_cfg("transport=tcp\nport_base=70000")
+            .unwrap()
+            .cluster()
             .is_err());
     }
 

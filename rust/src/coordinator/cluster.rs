@@ -1,0 +1,554 @@
+//! The cluster runtime: one OS thread per worker, communicating
+//! **exclusively** through a [`Transport`] — the first runtime in the repo
+//! where neighbor models exist only as wire bytes.
+//!
+//! ## Structure
+//!
+//! Every worker thread owns its model, its gradient buffer, its RNG
+//! streams (implicit in the per-`(seed, round, worker)` keying), and one
+//! transport endpoint. A synchronous round is:
+//!
+//! 1. local gradient (`Objective::loss_grad` on this worker's shard);
+//! 2. [`SyncAlgorithm::node_send`] — serialize this worker's payload —
+//!    then one [`Frame`] per peer through the transport;
+//! 3. a **round barrier built from the frames themselves**: the worker
+//!    blocks in `recv` until it holds a round-`k` frame from every peer
+//!    (frames from workers running ahead are parked in a pending map);
+//! 4. [`SyncAlgorithm::node_recv`] — integrate the inbox, finish the
+//!    round.
+//!
+//! ## Bitwise equivalence
+//!
+//! The run is bitwise-identical to the lockstep [`Trainer`](super::Trainer)
+//! — same per-round losses, same final models, same wire-byte accounting —
+//! for every [`SyncAlgorithm`], because (a) per-sender FIFO plus round
+//! tagging means each worker integrates exactly the payloads the lockstep
+//! engine would hand it, (b) payload encodings are lossless or are the
+//! exact wire codes the lockstep engines already exchange, and (c) each
+//! engine's recv half accumulates in ascending-sender order — the same
+//! order the lockstep phases use. `tests/cluster_equivalence.rs` pins this
+//! for all algorithms; `rust/DESIGN.md` §Wire-format spells out the
+//! argument.
+//!
+//! Two configurations are refused because they need *global* statistics no
+//! message-passing worker can know locally: the Theorem-2 θ policy (its
+//! G∞ estimate is a cluster-wide max) and compressed-stream accounting
+//! (the lockstep model charges worker 0's compressed length for every
+//! message). Both fail fast in [`ClusterTrainer::new`].
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::{Report, TraceRow};
+use super::TrainConfig;
+use crate::algorithms::{Algorithm, CommScope, CommStats, Inbox, StepCtx, ThetaPolicy};
+use crate::objectives::Objective;
+use crate::topology::Topology;
+use crate::transport::{algo_wire_id, Frame, MemTransport, TcpTransport, Transport};
+
+/// Which transport implementation carries the cluster's frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (deterministic, no sockets).
+    Mem,
+    /// Localhost TCP; `port_base = 0` uses OS-assigned ephemeral ports
+    /// (collision-safe), otherwise worker `i` listens on `port_base + i`.
+    Tcp { port_base: u16 },
+}
+
+/// Cluster-runtime knobs on top of [`TrainConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub transport: TransportKind,
+    /// Per-`recv` timeout of the round barrier: a worker that waits this
+    /// long without a frame declares the cluster wedged and panics (which
+    /// fails the run loudly instead of hanging CI).
+    pub recv_timeout: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            transport: TransportKind::Mem,
+            recv_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Everything one worker thread brings home.
+struct NodeResult {
+    worker: usize,
+    final_x: Vec<f32>,
+    losses: Vec<f64>,
+    thetas: Vec<Option<f64>>,
+    stats: Vec<CommStats>,
+    snapshots: Vec<(u64, Vec<f32>)>,
+    grad_wall: Vec<f64>,
+    algo_wall: Vec<f64>,
+    frames_sent: u64,
+    bytes_sent: u64,
+}
+
+/// Message-passing decentralized trainer (see module docs).
+pub struct ClusterTrainer {
+    cfg: TrainConfig,
+    cluster: ClusterConfig,
+    topo: Topology,
+    objective: Box<dyn Objective>,
+    rho: f64,
+    deg_max: usize,
+    deg_sum: usize,
+    /// Frames actually shipped through the transport in the last `run`.
+    pub frames_sent: u64,
+    /// Measured wire bytes (header + payload) of the last `run` — compare
+    /// against `Report::total_bytes`, the model's payload-only prediction.
+    pub wire_bytes_sent: u64,
+}
+
+impl ClusterTrainer {
+    pub fn new(
+        cfg: TrainConfig,
+        topo: Topology,
+        objective: Box<dyn Objective>,
+        cluster: ClusterConfig,
+    ) -> Result<Self> {
+        if topo.n() != cfg.workers {
+            bail!("topology covers {} workers, config says {}", topo.n(), cfg.workers);
+        }
+        if objective.workers() < cfg.workers {
+            bail!("objective sharded for fewer workers than the cluster");
+        }
+        if let Some(theta) = theta_policy(&cfg.algorithm) {
+            if matches!(theta, ThetaPolicy::Theorem2 { .. }) {
+                bail!(
+                    "runtime=cluster needs a constant θ: the Theorem-2 policy tracks a \
+                     cluster-wide G∞ estimate no message-passing worker can know locally"
+                );
+            }
+        }
+        if let Some(q) = quant_config(&cfg.algorithm) {
+            if q.compression != crate::quant::Compression::None {
+                bail!(
+                    "runtime=cluster ships raw packed payloads; compressed-stream \
+                     accounting is lockstep-only (set compression=none)"
+                );
+            }
+            // Only the Moniqua family actually ships the §6 digest its
+            // byte accounting charges (+8/message); on the baselines the
+            // lockstep model counts bytes that would never cross the wire,
+            // which would break measured = predicted + header·frames.
+            let ships_digest = matches!(
+                cfg.algorithm,
+                Algorithm::Moniqua { .. }
+                    | Algorithm::MoniquaSlack { .. }
+                    | Algorithm::MoniquaD2 { .. }
+            );
+            if q.verify_hash && !ships_digest {
+                bail!(
+                    "runtime=cluster supports verify_hash only for the Moniqua family \
+                     (algorithm '{}' has no digest on its wire format)",
+                    cfg.algorithm.name()
+                );
+            }
+        }
+        let w = topo.comm_matrix();
+        let rho = w.rho();
+        let adj = topo.adjacency();
+        let deg_max = adj.iter().map(|a| a.len()).max().unwrap_or(0);
+        let deg_sum = adj.iter().map(|a| a.len()).sum();
+        Ok(ClusterTrainer {
+            cfg,
+            cluster,
+            topo,
+            objective,
+            rho,
+            deg_max,
+            deg_sum,
+            frames_sent: 0,
+            wire_bytes_sent: 0,
+        })
+    }
+
+    /// ρ of the communication matrix in use.
+    pub fn rho(&self) -> f64 {
+        self.rho
+    }
+
+    /// Run the experiment: spawn the cluster, train, reassemble the
+    /// [`Report`] from the per-node traces.
+    pub fn run(&mut self) -> Result<Report> {
+        let n = self.cfg.workers;
+        let d = self.objective.dim();
+        let w = self.topo.comm_matrix();
+        let adj = self.topo.adjacency();
+
+        let mut engines: Vec<_> =
+            (0..n).map(|_| self.cfg.algorithm.make_sync(&w, d)).collect();
+        for e in engines.iter_mut() {
+            // One engine per OS thread: keep each round pool sequential so
+            // an n-node cluster doesn't oversubscribe n× the cores. The
+            // engine determinism contract makes this a pure perf knob.
+            e.set_threads(1);
+        }
+        let scope = engines[0].comm_scope();
+        let algo_id = algo_wire_id(self.cfg.algorithm.name());
+        let wire_bits = quant_config(&self.cfg.algorithm).map_or(32, |q| q.bits as u16);
+
+        let transports: Vec<Box<dyn Transport>> = match self.cluster.transport {
+            TransportKind::Mem => MemTransport::cluster(n)
+                .into_iter()
+                .map(|t| Box::new(t) as Box<dyn Transport>)
+                .collect(),
+            TransportKind::Tcp { port_base } => TcpTransport::cluster(n, port_base)
+                .context("bind cluster TCP listeners")?
+                .into_iter()
+                .map(|t| Box::new(t) as Box<dyn Transport>)
+                .collect(),
+        };
+
+        let recv_timeout = self.cluster.recv_timeout;
+        let mut results: Vec<NodeResult> = {
+            let cfg = &self.cfg;
+            let objective = &self.objective;
+            let adj = &adj;
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(n);
+                for (i, (engine, transport)) in
+                    engines.into_iter().zip(transports).enumerate()
+                {
+                    let peers: Vec<usize> = match scope {
+                        CommScope::Neighbors => adj[i].clone(),
+                        CommScope::All => (0..n).filter(|&j| j != i).collect(),
+                    };
+                    let node_cfg = cfg.clone();
+                    let node_obj = objective.box_clone();
+                    let rho = self.rho;
+                    handles.push(s.spawn(move || {
+                        run_node(
+                            i,
+                            node_cfg,
+                            engine,
+                            transport,
+                            node_obj,
+                            peers,
+                            rho,
+                            recv_timeout,
+                            algo_id,
+                            wire_bits,
+                        )
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("cluster worker panicked"))
+                    .collect()
+            })
+        };
+        results.sort_by_key(|r| r.worker);
+        self.frames_sent = results.iter().map(|r| r.frames_sent).sum();
+        self.wire_bytes_sent = results.iter().map(|r| r.bytes_sent).sum();
+
+        Ok(self.assemble_report(n, d, results))
+    }
+
+    /// Reassemble the lockstep trainer's [`Report`] from per-node traces.
+    /// The pricing calls, byte formulas, and mean/consensus evaluation are
+    /// the *same code* `Trainer::run` uses ([`RoundLedger`](super::RoundLedger),
+    /// [`eval_mean`](super::eval_mean)), and the summation orders match
+    /// (losses in ascending worker order), so every determinism-relevant
+    /// field is bitwise what the lockstep run produces. Only `sim_time_s`
+    /// differs in *semantics*: a concurrent round is paced by its slowest
+    /// worker (max over nodes) rather than the lockstep's
+    /// sequential-measured average.
+    fn assemble_report(&mut self, n: usize, d: usize, results: Vec<NodeResult>) -> Report {
+        let mut report = Report::new(self.cfg.algorithm.name(), n, d);
+        report.extra_memory_floats = self
+            .cfg
+            .algorithm
+            .extra_memory_floats(n, self.topo.edge_count(), d);
+        let mut ledger =
+            super::RoundLedger::new(self.cfg.network, n, self.deg_sum, self.deg_max);
+        let mut mean = vec![0.0f32; d];
+        let mut eval_idx = 0usize;
+        for step in 0..self.cfg.steps {
+            let r = step as usize;
+            let stats = results[0].stats[r];
+            let train_loss =
+                results.iter().map(|nr| nr.losses[r]).sum::<f64>() / n as f64;
+            let grad_wall =
+                results.iter().map(|nr| nr.grad_wall[r]).fold(0.0f64, f64::max);
+            let grad_time = self.cfg.grad_time_s.unwrap_or(grad_wall);
+            let algo_wall =
+                results.iter().map(|nr| nr.algo_wall[r]).fold(0.0f64, f64::max);
+            ledger.charge(&stats, grad_time, algo_wall);
+
+            if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
+                let xs: Vec<&[f32]> = results
+                    .iter()
+                    .map(|nr| {
+                        let (snap_step, x) = &nr.snapshots[eval_idx];
+                        debug_assert_eq!(*snap_step, step);
+                        x.as_slice()
+                    })
+                    .collect();
+                let (eval, consensus) =
+                    super::eval_mean(self.objective.as_mut(), &xs, &mut mean);
+                report.trace.push(TraceRow {
+                    step,
+                    sim_time_s: ledger.sim_time,
+                    train_loss,
+                    eval_loss: eval.loss,
+                    eval_acc: eval.accuracy,
+                    consensus_linf: consensus,
+                    bytes_total: ledger.total_bytes,
+                    theta: results[0].thetas[r],
+                });
+                eval_idx += 1;
+            }
+        }
+        ledger.finish(&mut report);
+        report.final_params = {
+            let xs: Vec<&[f32]> =
+                results.iter().map(|nr| nr.final_x.as_slice()).collect();
+            crate::linalg::mean_into(&mut mean, &xs);
+            mean.clone()
+        };
+        report
+    }
+}
+
+/// θ policy carried by the algorithm selector, if any.
+fn theta_policy(a: &Algorithm) -> Option<ThetaPolicy> {
+    match a {
+        Algorithm::Moniqua { theta, .. }
+        | Algorithm::MoniquaSlack { theta, .. }
+        | Algorithm::MoniquaD2 { theta, .. } => Some(*theta),
+        _ => None,
+    }
+}
+
+/// Quantizer config carried by the algorithm selector, if any.
+fn quant_config(a: &Algorithm) -> Option<crate::quant::QuantConfig> {
+    match a {
+        Algorithm::NaiveQuant { quant, .. }
+        | Algorithm::Moniqua { quant, .. }
+        | Algorithm::MoniquaSlack { quant, .. }
+        | Algorithm::MoniquaD2 { quant, .. }
+        | Algorithm::Dcd { quant, .. }
+        | Algorithm::Ecd { quant, .. }
+        | Algorithm::Choco { quant, .. }
+        | Algorithm::DeepSqueeze { quant, .. } => Some(*quant),
+        Algorithm::AllReduce | Algorithm::DPsgd | Algorithm::D2 => None,
+    }
+}
+
+/// One worker's whole life: gradient → send → frame barrier → recv, for
+/// every round. Panics (failing the run) on transport errors or protocol
+/// violations — a wedged or corrupt cluster must die loudly.
+#[allow(clippy::too_many_arguments)]
+fn run_node(
+    i: usize,
+    cfg: TrainConfig,
+    mut engine: Box<dyn crate::algorithms::SyncAlgorithm>,
+    mut transport: Box<dyn Transport>,
+    mut objective: Box<dyn Objective>,
+    peers: Vec<usize>,
+    rho: f64,
+    recv_timeout: Duration,
+    algo_id: u16,
+    wire_bits: u16,
+) -> NodeResult {
+    let d = objective.dim();
+    let mut x = objective.init();
+    let mut grad = vec![0.0f32; d];
+    let mut payload: Vec<u8> = Vec::new();
+    // Frames from workers running ahead of us, keyed (round, sender).
+    let mut pending: BTreeMap<(u64, usize), Frame> = BTreeMap::new();
+    let mut result = NodeResult {
+        worker: i,
+        final_x: Vec::new(),
+        losses: Vec::with_capacity(cfg.steps as usize),
+        thetas: Vec::with_capacity(cfg.steps as usize),
+        stats: Vec::with_capacity(cfg.steps as usize),
+        snapshots: Vec::new(),
+        grad_wall: Vec::with_capacity(cfg.steps as usize),
+        algo_wall: Vec::with_capacity(cfg.steps as usize),
+        frames_sent: 0,
+        bytes_sent: 0,
+    };
+    let mut lr = cfg.lr;
+    let mut g_inf = 0.0f64;
+    for round in 0..cfg.steps {
+        if cfg.decay_at.contains(&round) {
+            lr *= cfg.decay_factor;
+        }
+        // --- local gradient --------------------------------------------
+        let t0 = Instant::now();
+        let loss = objective.loss_grad(i, round, &x, &mut grad);
+        // Node-local running max — Trainer's global version only feeds the
+        // Theorem-2 θ policy, which this runtime refuses.
+        g_inf = g_inf.max(crate::linalg::norm_inf(&grad) as f64);
+        result.grad_wall.push(t0.elapsed().as_secs_f64());
+        let ctx = StepCtx { seed: cfg.seed, rho, g_inf };
+
+        // --- send half --------------------------------------------------
+        let t1 = Instant::now();
+        payload.clear();
+        engine.node_send(i, &x, &grad, lr, round, &ctx, &mut payload);
+        let frame = Frame {
+            round,
+            sender: i as u16,
+            algo: algo_id,
+            bits: wire_bits,
+            theta: engine.last_theta().unwrap_or(0.0) as f32,
+            payload: std::mem::take(&mut payload),
+        };
+        let send_compute = t1.elapsed().as_secs_f64();
+        // One broadcast call: the frame is serialized + checksummed once
+        // and the wire bytes are reused for every peer.
+        transport
+            .broadcast(&peers, &frame)
+            .unwrap_or_else(|e| panic!("worker {i} round {round}: broadcast failed: {e}"));
+        result.frames_sent += peers.len() as u64;
+        result.bytes_sent += peers.len() as u64 * frame.encoded_len() as u64;
+
+        // --- round barrier from the frames themselves ------------------
+        let mut got: Vec<Frame> = Vec::with_capacity(peers.len());
+        for &p in &peers {
+            if let Some(f) = pending.remove(&(round, p)) {
+                got.push(f);
+            }
+        }
+        while got.len() < peers.len() {
+            let f = transport.recv(recv_timeout).unwrap_or_else(|e| {
+                panic!("worker {i} round {round}: barrier recv failed: {e}")
+            });
+            let from = f.sender as usize;
+            assert_eq!(f.algo, algo_id, "worker {i}: cross-algorithm frame from {from}");
+            assert_eq!(f.bits, wire_bits, "worker {i}: bit-budget mismatch from {from}");
+            assert!(
+                peers.contains(&from),
+                "worker {i}: frame from non-peer {from}"
+            );
+            assert!(
+                f.round >= round,
+                "worker {i}: stale round-{} frame from {from} at round {round}",
+                f.round
+            );
+            if f.round == round {
+                got.push(f);
+            } else {
+                pending.insert((f.round, from), f);
+            }
+        }
+
+        // --- recv half --------------------------------------------------
+        let t2 = Instant::now();
+        let inbox = Inbox::new(
+            got.iter().map(|f| (f.sender as usize, f.payload.as_slice())).collect(),
+        );
+        let stats = engine.node_recv(i, &mut x, &grad, lr, round, &ctx, &inbox);
+        result.algo_wall.push(send_compute + t2.elapsed().as_secs_f64());
+        result.losses.push(loss);
+        result.thetas.push(engine.last_theta());
+        result.stats.push(stats);
+        if round % cfg.eval_every == 0 || round + 1 == cfg.steps {
+            result.snapshots.push((round, x.clone()));
+        }
+        payload = frame.payload; // reuse the allocation next round
+    }
+    result.final_x = x;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::ThetaPolicy;
+    use crate::quant::{Compression, QuantConfig};
+
+    fn base_cfg(algorithm: Algorithm) -> TrainConfig {
+        TrainConfig { workers: 4, steps: 6, eval_every: 2, algorithm, ..TrainConfig::default() }
+    }
+
+    fn objective() -> Box<dyn Objective> {
+        Box::new(crate::objectives::Quadratic::new(8, 1.0, 0.1, 4, 3))
+    }
+
+    #[test]
+    fn refuses_theorem2_theta() {
+        let cfg = base_cfg(Algorithm::Moniqua {
+            theta: ThetaPolicy::Theorem2 { warmup: 5, safety: 2.0 },
+            quant: QuantConfig::stochastic(8),
+        });
+        let err = ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn refuses_verify_hash_outside_moniqua_family() {
+        // Baselines charge +8 B/message for a digest they never ship.
+        let cfg = base_cfg(Algorithm::Dcd {
+            quant: QuantConfig::stochastic(8).with_verify_hash(true),
+            range: 4.0,
+        });
+        assert!(ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        )
+        .is_err());
+        // …while Moniqua (which does ship it) is accepted.
+        let cfg = base_cfg(Algorithm::Moniqua {
+            theta: ThetaPolicy::Constant(2.0),
+            quant: QuantConfig::stochastic(8).with_verify_hash(true),
+        });
+        assert!(ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn refuses_compressed_streams() {
+        let cfg = base_cfg(Algorithm::Moniqua {
+            theta: ThetaPolicy::Constant(2.0),
+            quant: QuantConfig::stochastic(8).with_compression(Compression::Rle),
+        });
+        assert!(ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn mem_cluster_trains_and_reports() {
+        let cfg = base_cfg(Algorithm::DPsgd);
+        let mut t = ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        )
+        .unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.trace.len(), 4); // steps 0,2,4,5
+        assert!(t.frames_sent > 0);
+        assert!(t.wire_bytes_sent as usize > report.total_bytes as usize);
+        assert_eq!(report.final_params.len(), 8);
+    }
+}

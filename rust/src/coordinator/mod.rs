@@ -13,25 +13,105 @@
 //!   loop. [`des::DesTrainer`] reproduces [`Trainer`]'s model trajectory
 //!   bitwise; [`AsyncTrainer`] is a thin wrapper over
 //!   [`des::DesAsyncTrainer`].
+//! * [`cluster`] — the message-passing runtime: one OS thread per worker,
+//!   each owning only its own model, every inter-worker byte traveling as
+//!   a framed message over a pluggable
+//!   [`Transport`](crate::transport::Transport) (in-process channels or
+//!   localhost TCP). Bitwise-identical to [`Trainer`] for every
+//!   [`SyncAlgorithm`] — pinned by `tests/cluster_equivalence.rs`.
 //! * [`AsyncTrainer`] — event-driven AD-PSGD wall-clock simulation with
 //!   per-worker clocks and straggler variance (Figure 2b), plus
 //!   [`threaded`] — a real `std::thread` gossip runtime proving the
 //!   algorithm runs under true concurrency.
 //! * [`metrics`] — trace rows + CSV/JSON writers.
 
+pub mod cluster;
 pub mod des;
 pub mod metrics;
 pub mod threaded;
 
+pub use cluster::{ClusterConfig, ClusterTrainer, TransportKind};
 pub use des::{DesAsyncTrainer, DesConfig, DesOutputs, DesTrainer, EventQueue, FaultConfig};
 pub use metrics::{Report, TraceRow};
 
 use std::time::Instant;
 
-use crate::algorithms::{Algorithm, StepCtx, SyncAlgorithm};
+use crate::algorithms::{Algorithm, CommStats, StepCtx, SyncAlgorithm};
 use crate::network::{NetworkConfig, NetworkModel};
 use crate::objectives::Objective;
 use crate::topology::Topology;
+
+/// Round accounting shared by the lockstep [`Trainer`] and the cluster
+/// runtime ([`cluster::ClusterTrainer`]): one place owns the pricing calls
+/// and the byte formulas, so the two runtimes cannot drift — their Reports
+/// must agree bitwise (pinned by `tests/cluster_equivalence.rs`).
+pub(crate) struct RoundLedger {
+    net: Option<NetworkModel>,
+    n: usize,
+    deg_sum: usize,
+    deg_max: usize,
+    pub sim_time: f64,
+    pub total_bytes: u64,
+}
+
+impl RoundLedger {
+    pub fn new(
+        network: Option<NetworkConfig>,
+        n: usize,
+        deg_sum: usize,
+        deg_max: usize,
+    ) -> Self {
+        RoundLedger {
+            net: network.map(NetworkModel::new),
+            n,
+            deg_sum,
+            deg_max,
+            sim_time: 0.0,
+            total_bytes: 0,
+        }
+    }
+
+    /// Price one round's traffic and advance the simulated clock.
+    pub fn charge(&mut self, stats: &CommStats, grad_time: f64, algo_wall: f64) {
+        let comm_time = match (&mut self.net, stats.allreduce_bytes) {
+            (Some(net), Some(bytes)) => net.charge_allreduce(self.n, bytes),
+            (Some(net), None) => net.charge_gossip_round(
+                self.n,
+                self.deg_sum,
+                self.deg_max,
+                stats.bytes_per_msg,
+            ),
+            (None, _) => 0.0,
+        };
+        self.total_bytes += stats.bytes_per_msg as u64 * stats.messages
+            + stats.allreduce_bytes.map_or(0, |b| (2 * (self.n - 1) * b) as u64);
+        self.sim_time += grad_time + algo_wall + comm_time;
+    }
+
+    /// Write the run totals into the report.
+    pub fn finish(self, report: &mut Report) {
+        if let Some(net) = self.net {
+            report.total_messages = net.total_messages;
+        }
+        report.total_bytes = self.total_bytes;
+    }
+}
+
+/// Mean-model evaluation + consensus for one trace row, shared by both
+/// runtimes (identical summation order: ascending worker index).
+pub(crate) fn eval_mean(
+    objective: &mut dyn Objective,
+    xs: &[&[f32]],
+    mean: &mut [f32],
+) -> (crate::objectives::Eval, f64) {
+    crate::linalg::mean_into(mean, xs);
+    let eval = objective.eval(mean);
+    let consensus = xs
+        .iter()
+        .map(|x| crate::linalg::linf_dist(x, mean))
+        .fold(0.0f32, f32::max);
+    (eval, consensus as f64)
+}
 
 /// Experiment configuration for the synchronous trainer.
 #[derive(Clone, Debug)]
@@ -119,17 +199,16 @@ impl Trainer {
         let mut grads: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0; d]).collect();
         let mut mean = vec![0.0f32; d];
 
-        let mut net = self.cfg.network.map(NetworkModel::new);
         let mut report = Report::new(self.cfg.algorithm.name(), n, d);
         report.extra_memory_floats = self
             .cfg
             .algorithm
             .extra_memory_floats(n, self.topo.edge_count(), d);
+        let mut ledger =
+            RoundLedger::new(self.cfg.network, n, self.deg_sum, self.deg_max);
 
         let mut lr = self.cfg.lr;
-        let mut sim_time = 0.0f64;
         let mut g_inf = 0.0f64;
-        let mut total_bytes = 0u64;
 
         for step in 0..self.cfg.steps {
             if self.cfg.decay_at.contains(&step) {
@@ -152,48 +231,27 @@ impl Trainer {
             let stats = self.engine.step(&mut xs, &grads, lr, step, &ctx);
             let algo_wall = t1.elapsed().as_secs_f64() / n as f64;
 
-            // --- price the round ------------------------------------------
-            let comm_time = match (&mut net, stats.allreduce_bytes) {
-                (Some(net), Some(bytes)) => net.charge_allreduce(n, bytes),
-                (Some(net), None) => net.charge_gossip_round(
-                    n,
-                    self.deg_sum,
-                    self.deg_max,
-                    stats.bytes_per_msg,
-                ),
-                (None, _) => 0.0,
-            };
-            total_bytes += stats.bytes_per_msg as u64 * stats.messages
-                + stats.allreduce_bytes.map_or(0, |b| (2 * (n - 1) * b) as u64);
-            sim_time += grad_time + algo_wall + comm_time;
+            // --- price the round (shared with the cluster runtime) --------
+            ledger.charge(&stats, grad_time, algo_wall);
 
             // --- trace ----------------------------------------------------
             if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
-                crate::linalg::mean_into(
-                    &mut mean,
-                    &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-                );
-                let eval = self.objective.eval(&mean);
-                let consensus = xs
-                    .iter()
-                    .map(|x| crate::linalg::linf_dist(x, &mean))
-                    .fold(0.0f32, f32::max);
+                let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+                let (eval, consensus) =
+                    eval_mean(self.objective.as_mut(), &refs, &mut mean);
                 report.trace.push(TraceRow {
                     step,
-                    sim_time_s: sim_time,
+                    sim_time_s: ledger.sim_time,
                     train_loss,
                     eval_loss: eval.loss,
                     eval_acc: eval.accuracy,
-                    consensus_linf: consensus as f64,
-                    bytes_total: total_bytes,
+                    consensus_linf: consensus,
+                    bytes_total: ledger.total_bytes,
                     theta: self.engine.last_theta(),
                 });
             }
         }
-        if let Some(net) = net {
-            report.total_messages = net.total_messages;
-        }
-        report.total_bytes = total_bytes;
+        ledger.finish(&mut report);
         report.final_params = {
             crate::linalg::mean_into(
                 &mut mean,

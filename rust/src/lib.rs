@@ -80,14 +80,16 @@ pub mod rng;
 pub mod runtime;
 pub mod testing;
 pub mod topology;
+pub mod transport;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
     pub use crate::algorithms::{Algorithm, RoundPool, ThetaPolicy};
     pub use crate::coordinator::{
-        AsyncTrainer, DesAsyncTrainer, DesConfig, DesTrainer, FaultConfig, Report,
-        TraceRow, TrainConfig, Trainer,
+        AsyncTrainer, ClusterConfig, ClusterTrainer, DesAsyncTrainer, DesConfig,
+        DesTrainer, FaultConfig, Report, TraceRow, TrainConfig, Trainer, TransportKind,
     };
+    pub use crate::transport::{Frame, MemTransport, TcpTransport, Transport};
     pub use crate::data::{partition::Partition, SynthClassification};
     pub use crate::network::{LinkMatrix, NetworkConfig, NetworkModel};
     pub use crate::objectives::{Objective, ObjectiveKind};

@@ -14,6 +14,12 @@
 //! (iid|by_label), `threads` (round-engine pool width; default all cores),
 //! `config` (path to a key=value file), `csv` (output path).
 //!
+//! Cluster runtime keys (`train runtime=cluster` — one OS thread per
+//! worker exchanging framed messages, bitwise-identical to `runtime=sync`):
+//! `transport` (mem = in-process channels | tcp = localhost sockets),
+//! `port_base` (tcp only; 0 = OS ephemeral ports, N = worker i listens on
+//! N+i), `recv_timeout_ms` (round-barrier watchdog, default 30000).
+//!
 //! DES runtime keys (`train runtime=des`, and always active for `async`):
 //! `grad_time_ms` (modeled compute; required meaningfully for `runtime=des`),
 //! `link_matrix` (uniform | lognormal:SIGMA | file:PATH — per-edge
@@ -31,7 +37,7 @@ use anyhow::{Context, Result};
 use moniqua::algorithms::AsyncVariant;
 use moniqua::config::Config;
 use moniqua::coordinator::{
-    metrics, DesAsyncTrainer, DesConfig, DesTrainer, TrainConfig, Trainer,
+    metrics, ClusterTrainer, DesAsyncTrainer, DesConfig, DesTrainer, TrainConfig, Trainer,
 };
 use moniqua::data::corpus::Corpus;
 use moniqua::data::{SynthClassification, SynthSpec};
@@ -45,6 +51,7 @@ fn usage() -> ! {
          see rust/src/main.rs docs for keys; e.g.\n\
          moniqua train algorithm=moniqua workers=8 steps=300 bits=8 theta=2.0\n\
          moniqua train runtime=des drop_prob=0.1 straggler=0.5 link_matrix=lognormal:0.4\n\
+         moniqua train runtime=cluster transport=tcp workers=4 algorithm=moniqua\n\
          moniqua async algorithm=moniqua drop_prob=0.05 topo_schedule=ring,complete@2.0\n\
          moniqua compare algorithms=dpsgd,moniqua,choco network=fig1c"
     );
@@ -179,12 +186,27 @@ fn cmd_train(cfg: &Config) -> Result<()> {
             );
             report
         }
+        "cluster" => {
+            let mut trainer = ClusterTrainer::new(tc, topo, objective, cfg.cluster()?)?;
+            println!(
+                "rho = {:.4} (runtime=cluster, transport={})",
+                trainer.rho(),
+                cfg.str_or("transport", "mem")
+            );
+            let report = trainer.run()?;
+            println!(
+                "cluster: {} frames on the wire, {} measured bytes (headers included) \
+                 vs {} payload bytes predicted",
+                trainer.frames_sent, trainer.wire_bytes_sent, report.total_bytes
+            );
+            report
+        }
         "sync" => {
             let mut trainer = Trainer::new(tc, topo, objective);
             println!("rho = {:.4}", trainer.rho());
             trainer.run()
         }
-        other => anyhow::bail!("unknown runtime '{other}' (sync|des)"),
+        other => anyhow::bail!("unknown runtime '{other}' (sync|des|cluster)"),
     };
     for row in &report.trace {
         println!(

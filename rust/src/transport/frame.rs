@@ -1,0 +1,302 @@
+//! The versioned wire frame — the unit every byte of inter-worker traffic
+//! travels in.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//!  offset  size  field
+//!  ------  ----  -----------------------------------------------------
+//!       0     4  magic        b"MQWF"
+//!       4     2  version      wire-format version (currently 1)
+//!       6     2  algo         algorithm id (see [`algo_wire_id`])
+//!       8     8  round        synchronous round index
+//!      16     2  sender       worker id of the sender
+//!      18     2  bits         quantizer bit budget (32 = raw f32 payload)
+//!      20     4  theta        sender's θ this round (f32 bits; diagnostics)
+//!      24     4  payload_len  payload bytes following the header
+//!      28     8  checksum     FNV-1a over bytes 0..28 ++ payload
+//!      36     …  payload      packed-quantized codes / raw f32 vector
+//! ```
+//!
+//! The payload is exactly what the fused codec paths produce
+//! ([`MoniquaCodec::encode_packed_into`](crate::quant::MoniquaCodec::encode_packed_into)
+//! for the Moniqua family, [`packing::pack`](crate::quant::packing) for the
+//! code-based baselines, raw f32 little-endian words for the
+//! full-precision ones) — the frame layer never re-encodes it.
+//!
+//! Decoding is total: every malformed input maps to a typed [`FrameError`]
+//! (no panics, no truncation reads), which the property suite
+//! (`tests/frame_codec.rs`) fuzzes with the repo's deterministic RNG.
+
+use crate::quant::hash::fnv1a_bytes;
+
+/// Leading magic of every frame.
+pub const MAGIC: [u8; 4] = *b"MQWF";
+/// Current wire-format version.
+pub const VERSION: u16 = 1;
+/// Header bytes before the payload.
+pub const HEADER_LEN: usize = 36;
+/// Upper bound on a frame payload (1 GiB) — rejects absurd length prefixes
+/// before any allocation happens on the receive path.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+
+/// Typed decode failures. Every variant carries enough context to debug a
+/// corrupt capture without a hex dump.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Fewer bytes than the fixed header, or fewer than the header's
+    /// declared payload length.
+    Truncated { expected: usize, got: usize },
+    /// More bytes than header + declared payload — the framing layer
+    /// (length prefix) and the header disagree.
+    TrailingBytes { expected: usize, got: usize },
+    /// First four bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unknown wire-format version.
+    BadVersion(u16),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversize(usize),
+    /// FNV-1a over header+payload does not match the checksum field.
+    ChecksumMismatch { expected: u64, got: u64 },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { expected, got } => {
+                write!(f, "truncated frame: need {expected} bytes, got {got}")
+            }
+            FrameError::TrailingBytes { expected, got } => {
+                write!(f, "frame length mismatch: header says {expected} bytes, got {got}")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::BadVersion(v) => write!(f, "unsupported frame version {v}"),
+            FrameError::Oversize(n) => write!(f, "payload length {n} exceeds MAX_PAYLOAD"),
+            FrameError::ChecksumMismatch { expected, got } => write!(
+                f,
+                "frame checksum mismatch: header {expected:#018x}, computed {got:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// One wire message: header fields + the packed payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub round: u64,
+    pub sender: u16,
+    /// Algorithm id ([`algo_wire_id`]); receivers reject cross-algorithm
+    /// frames instead of mis-decoding the payload.
+    pub algo: u16,
+    /// Bits per parameter of the payload encoding (32 = raw f32).
+    pub bits: u16,
+    /// The sender's θ bound this round (0.0 for unquantized algorithms).
+    pub theta: f32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Total encoded size.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Serialize into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize by appending to `out` (the TCP path reuses one buffer).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        assert!(self.payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+        let base = out.len();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.algo.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.sender.to_le_bytes());
+        out.extend_from_slice(&self.bits.to_le_bytes());
+        out.extend_from_slice(&self.theta.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        // checksum covers header-so-far ++ payload
+        let mut h = fnv1a_bytes(&out[base..base + 28]);
+        h = fnv1a_continue(h, &self.payload);
+        out.extend_from_slice(&h.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+    }
+
+    /// Decode a complete frame from `bytes` (must contain exactly one
+    /// frame — the transports deliver length-prefixed units).
+    pub fn decode(bytes: &[u8]) -> Result<Frame, FrameError> {
+        let mut f = Self::validate(bytes)?;
+        f.payload = bytes[HEADER_LEN..].to_vec();
+        Ok(f)
+    }
+
+    /// As [`Self::decode`] but consuming the wire buffer: the payload is
+    /// the buffer itself with the header drained off — no copy. This is
+    /// the transports' receive path (they already own the bytes).
+    pub fn decode_owned(mut bytes: Vec<u8>) -> Result<Frame, FrameError> {
+        let mut f = Self::validate(&bytes)?;
+        bytes.drain(..HEADER_LEN);
+        f.payload = bytes;
+        Ok(f)
+    }
+
+    /// Full header + checksum validation; returns the frame with an empty
+    /// payload (the callers above attach it without re-checking).
+    fn validate(bytes: &[u8]) -> Result<Frame, FrameError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(FrameError::Truncated { expected: HEADER_LEN, got: bytes.len() });
+        }
+        if bytes[0..4] != MAGIC {
+            return Err(FrameError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != VERSION {
+            return Err(FrameError::BadVersion(version));
+        }
+        let algo = u16::from_le_bytes([bytes[6], bytes[7]]);
+        let round = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let sender = u16::from_le_bytes([bytes[16], bytes[17]]);
+        let bits = u16::from_le_bytes([bytes[18], bytes[19]]);
+        let theta = f32::from_bits(u32::from_le_bytes(bytes[20..24].try_into().unwrap()));
+        let payload_len = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+        if payload_len > MAX_PAYLOAD {
+            return Err(FrameError::Oversize(payload_len));
+        }
+        let expected = HEADER_LEN + payload_len;
+        if bytes.len() < expected {
+            return Err(FrameError::Truncated { expected, got: bytes.len() });
+        }
+        if bytes.len() > expected {
+            return Err(FrameError::TrailingBytes { expected, got: bytes.len() });
+        }
+        let checksum = u64::from_le_bytes(bytes[28..36].try_into().unwrap());
+        let mut h = fnv1a_bytes(&bytes[0..28]);
+        h = fnv1a_continue(h, &bytes[HEADER_LEN..]);
+        if h != checksum {
+            return Err(FrameError::ChecksumMismatch { expected: checksum, got: h });
+        }
+        Ok(Frame { round, sender, algo, bits, theta, payload: Vec::new() })
+    }
+}
+
+/// Continue an FNV-1a hash over more bytes (same constants as
+/// [`fnv1a_bytes`], which seeds with the FNV offset basis).
+fn fnv1a_continue(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Stable wire id for each algorithm's report name. Ids are part of the
+/// wire format: never renumber, only append.
+pub fn algo_wire_id(name: &str) -> u16 {
+    match name {
+        "allreduce" => 1,
+        "dpsgd" => 2,
+        "naive" => 3,
+        "moniqua" => 4,
+        "moniqua-slack" => 5,
+        "d2" => 6,
+        "moniqua-d2" => 7,
+        "dcd" => 8,
+        "ecd" => 9,
+        "choco" => 10,
+        "deepsqueeze" => 11,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(payload: Vec<u8>) -> Frame {
+        Frame { round: 7, sender: 3, algo: 4, bits: 8, theta: 2.0, payload }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let f = sample(vec![1, 2, 3, 250]);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), f.encoded_len());
+        let g = Frame::decode(&bytes).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let f = sample(Vec::new());
+        assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn decode_owned_matches_decode() {
+        let f = sample((0..200u32).map(|v| v as u8).collect());
+        let bytes = f.encode();
+        assert_eq!(Frame::decode_owned(bytes.clone()).unwrap(), f);
+        assert_eq!(Frame::decode_owned(bytes).unwrap(), Frame::decode(&f.encode()).unwrap());
+        let mut bad = f.encode();
+        bad[0] ^= 1;
+        assert!(matches!(Frame::decode_owned(bad), Err(FrameError::BadMagic(_))));
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let bytes = sample(vec![9; 16]).encode();
+        for cut in 0..bytes.len() {
+            match Frame::decode(&bytes[..cut]) {
+                Err(FrameError::Truncated { .. }) => {}
+                other => panic!("cut={cut}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = sample(vec![9; 8]).encode();
+        bytes.push(0);
+        assert!(matches!(
+            Frame::decode(&bytes),
+            Err(FrameError::TrailingBytes { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_magic_version_checksum() {
+        let f = sample(vec![5; 32]);
+        let mut bad = f.encode();
+        bad[0] ^= 0xff;
+        assert!(matches!(Frame::decode(&bad), Err(FrameError::BadMagic(_))));
+        let mut bad = f.encode();
+        bad[4] ^= 0x01;
+        assert!(matches!(Frame::decode(&bad), Err(FrameError::BadVersion(_))));
+        let mut bad = f.encode();
+        *bad.last_mut().unwrap() ^= 0x01; // flip a payload bit
+        assert!(matches!(
+            Frame::decode(&bad),
+            Err(FrameError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn algo_ids_are_stable_and_distinct() {
+        let names = [
+            "allreduce", "dpsgd", "naive", "moniqua", "moniqua-slack", "d2",
+            "moniqua-d2", "dcd", "ecd", "choco", "deepsqueeze",
+        ];
+        let ids: Vec<u16> = names.iter().map(|n| algo_wire_id(n)).collect();
+        let uniq: std::collections::HashSet<_> = ids.iter().collect();
+        assert_eq!(uniq.len(), ids.len());
+        assert!(ids.iter().all(|&i| i != 0));
+        assert_eq!(algo_wire_id("unknown"), 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! In-process transport over `std::sync::mpsc` channels.
+//!
+//! Every endpoint owns a receiver; senders hold clones of each peer's
+//! `Sender`. Frames are serialized to wire bytes on `send` and decoded on
+//! `recv` — the mem transport ships the *same bytes* TCP would, so a codec
+//! bug cannot hide behind shared memory. Buffered frames are delivered in
+//! `(round, sender)` order (see [`ReorderBuffer`](super::ReorderBuffer)).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use super::{Frame, ReorderBuffer, Transport, TransportError};
+
+/// One worker's endpoint of an in-process cluster.
+pub struct MemTransport {
+    id: usize,
+    txs: Vec<Sender<Vec<u8>>>,
+    rx: Receiver<Vec<u8>>,
+    buf: ReorderBuffer,
+}
+
+impl MemTransport {
+    /// Build a fully-connected cluster of `n` endpoints.
+    pub fn cluster(n: usize) -> Vec<MemTransport> {
+        assert!(n > 0);
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        rxs.iter_mut()
+            .enumerate()
+            .map(|(id, rx)| MemTransport {
+                id,
+                txs: txs.clone(),
+                rx: rx.take().expect("receiver taken once"),
+                buf: ReorderBuffer::default(),
+            })
+            .collect()
+    }
+
+    /// Move everything already sitting in the channel into the reorder
+    /// buffer (non-blocking).
+    fn drain(&mut self) -> Result<(), TransportError> {
+        loop {
+            match self.rx.try_recv() {
+                Ok(bytes) => self.buf.push(Frame::decode_owned(bytes)?),
+                Err(TryRecvError::Empty) => return Ok(()),
+                // All peer senders dropped; buffered frames stay poppable.
+                Err(TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+    }
+}
+
+impl Transport for MemTransport {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn cluster_size(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn send(&mut self, peer: usize, frame: &Frame) -> Result<(), TransportError> {
+        assert!(peer < self.txs.len(), "peer {peer} out of range");
+        self.txs[peer]
+            .send(frame.encode())
+            .map_err(|_| TransportError::Closed)
+    }
+
+    fn broadcast(&mut self, peers: &[usize], frame: &Frame) -> Result<(), TransportError> {
+        // Encode (and checksum) once; each channel send needs its own
+        // owned buffer, which is the unavoidable per-peer copy.
+        let bytes = frame.encode();
+        for &p in peers {
+            assert!(p < self.txs.len(), "peer {p} out of range");
+            self.txs[p]
+                .send(bytes.clone())
+                .map_err(|_| TransportError::Closed)?;
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.drain()?;
+            if let Some(f) = self.buf.pop() {
+                return Ok(f);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(bytes) => self.buf.push(Frame::decode_owned(bytes)?),
+                Err(RecvTimeoutError::Timeout) => return Err(TransportError::Timeout),
+                Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(round: u64, sender: u16, payload: Vec<u8>) -> Frame {
+        Frame { round, sender, algo: 4, bits: 8, theta: 2.0, payload }
+    }
+
+    #[test]
+    fn delivers_across_endpoints() {
+        let mut eps = MemTransport::cluster(2);
+        let (mut a, mut b) = {
+            let b = eps.pop().unwrap();
+            (eps.pop().unwrap(), b)
+        };
+        assert_eq!(a.local_id(), 0);
+        assert_eq!(a.cluster_size(), 2);
+        a.send(1, &frame(0, 0, vec![1, 2, 3])).unwrap();
+        let got = b.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.payload, vec![1, 2, 3]);
+        assert_eq!(got.sender, 0);
+    }
+
+    #[test]
+    fn buffered_frames_pop_in_round_sender_order() {
+        let mut eps = MemTransport::cluster(3);
+        let mut rx = eps.remove(0);
+        eps[1].send(0, &frame(1, 2, vec![])).unwrap();
+        eps[0].send(0, &frame(0, 1, vec![])).unwrap();
+        eps[1].send(0, &frame(0, 2, vec![])).unwrap();
+        let order: Vec<(u64, u16)> = (0..3)
+            .map(|_| {
+                let f = rx.recv(Duration::from_secs(1)).unwrap();
+                (f.round, f.sender)
+            })
+            .collect();
+        assert_eq!(order, vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn timeout_on_idle_endpoint() {
+        let mut eps = MemTransport::cluster(2);
+        let mut a = eps.remove(0);
+        let err = a.recv(Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, TransportError::Timeout);
+    }
+}

@@ -1,0 +1,203 @@
+//! Real message-passing transport: the layer that turns the simulator's
+//! shared-memory "communication" into bytes crossing an actual boundary.
+//!
+//! * [`frame`] — the versioned wire format ([`Frame`]): a 36-byte header
+//!   (magic, version, algo id, round, sender, bit budget, θ, payload
+//!   length, FNV-1a checksum) followed by the packed-quantized payload the
+//!   fused codec paths produce. Decoding returns typed [`FrameError`]s,
+//!   never panics.
+//! * [`Transport`] — the pluggable endpoint trait: `send(peer, &Frame)` +
+//!   `recv(timeout)`. One endpoint per worker; endpoints are `Send` so a
+//!   worker thread can own one.
+//! * [`mem`] — [`MemTransport`]: process-local mpsc channels. Frames are
+//!   serialized/deserialized through the real codec (so the mem transport
+//!   exercises the same bytes TCP ships) and delivered in deterministic
+//!   `(round, sender)` order from the receive buffer.
+//! * [`tcp`] — [`TcpTransport`]: length-prefixed frames over
+//!   `std::net::TcpStream` on localhost, one listener per worker,
+//!   lazily-dialed outbound connections, reader threads draining inbound
+//!   sockets. Binding port 0 + discovered addresses makes clusters
+//!   port-collision-safe under parallel test runs.
+//!
+//! Both implementations satisfy one conformance contract
+//! (`tests/transport_conformance.rs`): per-sender FIFO, `(round, sender)`
+//! ordering of buffered frames, concurrent senders, >64 KiB frames, and
+//! timeout on an idle endpoint.
+//!
+//! The consumer above this layer is
+//! [`coordinator::cluster::ClusterTrainer`](crate::coordinator::cluster):
+//! one OS thread per worker, each owning only its own model, every model
+//! byte it learns about a neighbor arriving through `recv`.
+
+pub mod frame;
+pub mod mem;
+pub mod tcp;
+
+pub use frame::{algo_wire_id, Frame, FrameError, HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION};
+pub use mem::MemTransport;
+pub use tcp::TcpTransport;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+/// Transport-level failures.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportError {
+    /// No frame arrived within the `recv` timeout.
+    Timeout,
+    /// The peer endpoint (or the whole cluster) is gone.
+    Closed,
+    /// Socket-level failure (TCP only), stringified for portability.
+    Io(String),
+    /// The peer shipped bytes that do not decode as a frame.
+    Frame(FrameError),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Timeout => write!(f, "recv timed out"),
+            TransportError::Closed => write!(f, "transport closed"),
+            TransportError::Io(e) => write!(f, "transport io error: {e}"),
+            TransportError::Frame(e) => write!(f, "frame decode error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<FrameError> for TransportError {
+    fn from(e: FrameError) -> Self {
+        TransportError::Frame(e)
+    }
+}
+
+/// One worker's endpoint of a cluster transport.
+///
+/// `send` is non-blocking from the caller's perspective (buffered channels
+/// / OS socket buffers drained by reader threads), so the lockstep
+/// send-all-then-receive-all round pattern cannot deadlock. `recv` returns
+/// the buffered frame with the smallest `(round, sender)` key — ties (same
+/// sender re-sending within a round) break by arrival order, preserving
+/// per-sender FIFO.
+pub trait Transport: Send {
+    /// This endpoint's worker id.
+    fn local_id(&self) -> usize;
+
+    /// Number of endpoints in the cluster (peer ids are `0..cluster_size`).
+    fn cluster_size(&self) -> usize;
+
+    /// Ship one frame to `peer`.
+    fn send(&mut self, peer: usize, frame: &Frame) -> Result<(), TransportError>;
+
+    /// Ship one frame to every peer in `peers` — the cluster's hot send
+    /// path. Both implementations override the default to serialize (and
+    /// checksum) the frame **once** and reuse the wire bytes per peer;
+    /// the default exists so the two stay behaviorally interchangeable.
+    fn broadcast(&mut self, peers: &[usize], frame: &Frame) -> Result<(), TransportError> {
+        for &p in peers {
+            self.send(p, frame)?;
+        }
+        Ok(())
+    }
+
+    /// Receive the next frame in `(round, sender)` order, waiting up to
+    /// `timeout` for one to arrive.
+    fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError>;
+}
+
+/// Receive-side reorder buffer shared by both transports: frames are pushed
+/// in arrival order and popped in `(round, sender, arrival)` order, which
+/// is what makes delivery deterministic regardless of thread interleaving
+/// among frames that have already arrived.
+#[derive(Default)]
+pub(crate) struct ReorderBuffer {
+    heap: BinaryHeap<Reverse<Keyed>>,
+    arrivals: u64,
+}
+
+struct Keyed {
+    round: u64,
+    sender: u16,
+    arrival: u64,
+    frame: Frame,
+}
+
+impl PartialEq for Keyed {
+    fn eq(&self, other: &Self) -> bool {
+        (self.round, self.sender, self.arrival) == (other.round, other.sender, other.arrival)
+    }
+}
+impl Eq for Keyed {}
+impl PartialOrd for Keyed {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Keyed {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.round, self.sender, self.arrival).cmp(&(
+            other.round,
+            other.sender,
+            other.arrival,
+        ))
+    }
+}
+
+impl ReorderBuffer {
+    pub fn push(&mut self, frame: Frame) {
+        let key = Keyed {
+            round: frame.round,
+            sender: frame.sender,
+            arrival: self.arrivals,
+            frame,
+        };
+        self.arrivals += 1;
+        self.heap.push(Reverse(key));
+    }
+
+    pub fn pop(&mut self) -> Option<Frame> {
+        self.heap.pop().map(|Reverse(k)| k.frame)
+    }
+
+    #[cfg(test)]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(round: u64, sender: u16) -> Frame {
+        Frame { round, sender, algo: 2, bits: 32, theta: 0.0, payload: vec![sender as u8] }
+    }
+
+    #[test]
+    fn reorder_pops_round_then_sender() {
+        let mut rb = ReorderBuffer::default();
+        rb.push(frame(1, 0));
+        rb.push(frame(0, 2));
+        rb.push(frame(0, 1));
+        let order: Vec<(u64, u16)> = std::iter::from_fn(|| rb.pop())
+            .map(|f| (f.round, f.sender))
+            .collect();
+        assert_eq!(order, vec![(0, 1), (0, 2), (1, 0)]);
+        assert!(rb.is_empty());
+    }
+
+    #[test]
+    fn reorder_ties_break_by_arrival() {
+        let mut rb = ReorderBuffer::default();
+        let mut a = frame(0, 1);
+        a.payload = vec![10];
+        let mut b = frame(0, 1);
+        b.payload = vec![20];
+        rb.push(a);
+        rb.push(b);
+        assert_eq!(rb.pop().unwrap().payload, vec![10]);
+        assert_eq!(rb.pop().unwrap().payload, vec![20]);
+    }
+}

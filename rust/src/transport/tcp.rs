@@ -1,0 +1,278 @@
+//! TCP transport: length-prefixed frames over `std::net` on localhost.
+//!
+//! Topology-of-sockets: one `TcpListener` per worker (bound before any
+//! endpoint is handed out, so dials never race the bind), outbound
+//! connections dialed lazily on first `send` to a peer, one reader thread
+//! per accepted inbound connection pushing decoded-length units into the
+//! endpoint's channel. The stream protocol is `u32 le frame_len ++ frame
+//! bytes`; the frame itself re-validates magic/version/checksum, so a
+//! desynchronized stream surfaces as a typed error, not garbage models.
+//!
+//! Binding `port_base = 0` asks the OS for ephemeral ports and shares the
+//! *discovered* addresses with every endpoint — the port-collision-safe
+//! mode the conformance and equivalence suites use. A non-zero `port_base`
+//! pins worker `i` to `port_base + i` (useful for externally-observed runs,
+//! e.g. packet captures).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{Frame, ReorderBuffer, Transport, TransportError, HEADER_LEN, MAX_PAYLOAD};
+
+/// One worker's TCP endpoint.
+pub struct TcpTransport {
+    id: usize,
+    addrs: Vec<SocketAddr>,
+    outs: Vec<Option<TcpStream>>,
+    rx: Receiver<Result<Vec<u8>, String>>,
+    buf: ReorderBuffer,
+    scratch: Vec<u8>,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl TcpTransport {
+    /// Build an `n`-endpoint cluster on loopback. `port_base = 0` uses OS
+    /// ephemeral ports (collision-safe); otherwise worker `i` listens on
+    /// `port_base + i`.
+    pub fn cluster(n: usize, port_base: u16) -> std::io::Result<Vec<TcpTransport>> {
+        assert!(n > 0);
+        // Last worker listens on port_base + n - 1; 65535 itself is valid.
+        if port_base != 0 && port_base as usize + n - 1 > u16::MAX as usize {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("port_base {port_base} + {n} workers exceeds the u16 port range"),
+            ));
+        }
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|i| {
+                let port = if port_base == 0 { 0 } else { port_base + i as u16 };
+                TcpListener::bind(("127.0.0.1", port))
+            })
+            .collect::<std::io::Result<_>>()?;
+        let addrs: Vec<SocketAddr> = listeners
+            .iter()
+            .map(|l| l.local_addr())
+            .collect::<std::io::Result<_>>()?;
+        Ok(listeners
+            .into_iter()
+            .enumerate()
+            .map(|(id, listener)| {
+                let (tx, rx) = channel();
+                let shutdown = Arc::new(AtomicBool::new(false));
+                let accept_handle =
+                    Some(spawn_acceptor(listener, tx, Arc::clone(&shutdown)));
+                TcpTransport {
+                    id,
+                    addrs: addrs.clone(),
+                    outs: (0..n).map(|_| None).collect(),
+                    rx,
+                    buf: ReorderBuffer::default(),
+                    scratch: Vec::new(),
+                    shutdown,
+                    accept_handle,
+                }
+            })
+            .collect())
+    }
+
+    /// The address each worker listens on (index = worker id).
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    fn connect(&mut self, peer: usize) -> Result<&mut TcpStream, TransportError> {
+        if self.outs[peer].is_none() {
+            let stream = TcpStream::connect(self.addrs[peer])
+                .map_err(|e| TransportError::Io(e.to_string()))?;
+            stream
+                .set_nodelay(true)
+                .map_err(|e| TransportError::Io(e.to_string()))?;
+            self.outs[peer] = Some(stream);
+        }
+        Ok(self.outs[peer].as_mut().expect("just connected"))
+    }
+
+    fn drain(&mut self) -> Result<(), TransportError> {
+        loop {
+            match self.rx.try_recv() {
+                Ok(Ok(bytes)) => self.buf.push(Frame::decode_owned(bytes)?),
+                Ok(Err(io)) => return Err(TransportError::Io(io)),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn cluster_size(&self) -> usize {
+        self.addrs.len()
+    }
+
+    fn send(&mut self, peer: usize, frame: &Frame) -> Result<(), TransportError> {
+        self.broadcast(&[peer], frame)
+    }
+
+    fn broadcast(&mut self, peers: &[usize], frame: &Frame) -> Result<(), TransportError> {
+        // Serialize (length prefix + header + checksum) once; every peer
+        // gets the same bytes straight from the scratch buffer.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        scratch.extend_from_slice(&(frame.encoded_len() as u32).to_le_bytes());
+        frame.encode_into(&mut scratch);
+        let mut result = Ok(());
+        for &p in peers {
+            assert!(p < self.addrs.len(), "peer {p} out of range");
+            result = self.connect(p).and_then(|s| {
+                s.write_all(&scratch).map_err(|e| TransportError::Io(e.to_string()))
+            });
+            if result.is_err() {
+                // A broken pipe poisons the cached stream; redial on retry.
+                self.outs[p] = None;
+                break;
+            }
+        }
+        self.scratch = scratch;
+        result
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            self.drain()?;
+            if let Some(f) = self.buf.pop() {
+                return Ok(f);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(Ok(bytes)) => self.buf.push(Frame::decode_owned(bytes)?),
+                Ok(Err(io)) => return Err(TransportError::Io(io)),
+                Err(RecvTimeoutError::Timeout) => return Err(TransportError::Timeout),
+                Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Closing our outbound streams EOFs the peers' reader threads.
+        for out in self.outs.iter_mut() {
+            *out = None;
+        }
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Accept loop: non-blocking accept polled against the shutdown flag; each
+/// inbound connection gets a reader thread that reframes the byte stream
+/// into length-delimited units.
+fn spawn_acceptor(
+    listener: TcpListener,
+    tx: Sender<Result<Vec<u8>, String>>,
+    shutdown: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        if listener.set_nonblocking(true).is_err() {
+            return;
+        }
+        while !shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let tx = tx.clone();
+                    std::thread::spawn(move || read_frames(stream, tx));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    // All dials land in round 0 (lazy connect on first
+                    // send); afterwards this poll only has to notice
+                    // shutdown and the rare redial, so a coarse interval
+                    // keeps the acceptor near-idle for the whole run.
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+    })
+}
+
+/// Reader loop for one inbound connection. Exits on EOF (peer closed) or
+/// when the owning endpoint dropped its receiver.
+fn read_frames(mut stream: TcpStream, tx: Sender<Result<Vec<u8>, String>>) {
+    let max_frame = HEADER_LEN + MAX_PAYLOAD;
+    loop {
+        let mut len_bytes = [0u8; 4];
+        match stream.read_exact(&mut len_bytes) {
+            Ok(()) => {}
+            // Clean EOF between frames: peer closed its end.
+            Err(_) => return,
+        }
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        if len > max_frame {
+            let _ = tx.send(Err(format!("frame length prefix {len} exceeds maximum")));
+            return;
+        }
+        let mut bytes = vec![0u8; len];
+        if let Err(e) = stream.read_exact(&mut bytes) {
+            let _ = tx.send(Err(format!("mid-frame read failed: {e}")));
+            return;
+        }
+        if tx.send(Ok(bytes)).is_err() {
+            return; // endpoint dropped
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(round: u64, sender: u16, payload: Vec<u8>) -> Frame {
+        Frame { round, sender, algo: 4, bits: 8, theta: 2.0, payload }
+    }
+
+    #[test]
+    fn loopback_roundtrip() {
+        let mut eps = TcpTransport::cluster(2, 0).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &frame(3, 0, vec![7; 100])).unwrap();
+        let got = b.recv(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.round, 3);
+        assert_eq!(got.payload, vec![7; 100]);
+    }
+
+    #[test]
+    fn ephemeral_ports_are_distinct() {
+        let eps = TcpTransport::cluster(3, 0).unwrap();
+        let ports: std::collections::HashSet<u16> =
+            eps[0].addrs().iter().map(|a| a.port()).collect();
+        assert_eq!(ports.len(), 3);
+        assert!(eps[0].addrs().iter().all(|a| a.port() != 0));
+    }
+
+    #[test]
+    fn timeout_on_idle_endpoint() {
+        let mut eps = TcpTransport::cluster(1, 0).unwrap();
+        let err = eps[0].recv(Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, TransportError::Timeout);
+    }
+}

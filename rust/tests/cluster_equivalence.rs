@@ -1,0 +1,170 @@
+//! The cluster runtime's acceptance gate: for every sync algorithm on
+//! ring/4, [`ClusterTrainer`] — real OS threads, real frames, any thread
+//! interleaving — must produce **bitwise** the lockstep [`Trainer`]'s
+//! results: same per-round train losses, same eval losses, same consensus,
+//! same wire-byte accounting, same final model.
+//!
+//! The mem-transport run covers every algorithm; the TCP run covers every
+//! algorithm too (no `#[ignore]`), and is port-collision-safe because the
+//! cluster binds port 0 and shares the discovered addresses. `sim_time_s`
+//! is excluded from the digest — it mixes measured host time by design in
+//! both runtimes.
+
+use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::coordinator::{
+    ClusterConfig, ClusterTrainer, Report, TrainConfig, Trainer, TransportKind,
+};
+use moniqua::network::NetworkConfig;
+use moniqua::objectives::{Objective, Quadratic};
+use moniqua::quant::{QuantConfig, Rounding};
+use moniqua::topology::Topology;
+
+const STEPS: u64 = 12;
+
+fn config(algorithm: Algorithm) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        steps: STEPS,
+        lr: 0.1,
+        decay_factor: 0.5,
+        decay_at: vec![6], // exercise the lr schedule in both runtimes
+        algorithm,
+        network: Some(NetworkConfig::fig1b()),
+        grad_time_s: Some(1e-3),
+        eval_every: 4,
+        seed: 7,
+        threads: None,
+    }
+}
+
+fn objective() -> Box<dyn Objective> {
+    // Same family as the golden-trace scenario: deterministic per-(worker,
+    // step) gradient noise, so the RNG streams are exercised end to end.
+    Box::new(Quadratic::new(24, 1.0, 0.1, 4, 3))
+}
+
+/// Every determinism-relevant field of a report, as raw bit patterns.
+fn fingerprint(r: &Report) -> String {
+    let mut s = format!(
+        "algo={} workers={} dim={} total_bytes={} total_messages={} extra_mem={}\n",
+        r.algorithm, r.workers, r.dim, r.total_bytes, r.total_messages, r.extra_memory_floats
+    );
+    for row in &r.trace {
+        s.push_str(&format!(
+            "step={} train={:016x} eval={:016x} cons={:016x} bytes={} theta={}\n",
+            row.step,
+            row.train_loss.to_bits(),
+            row.eval_loss.to_bits(),
+            row.consensus_linf.to_bits(),
+            row.bytes_total,
+            row.theta.map_or("-".to_string(), |t| format!("{:016x}", t.to_bits())),
+        ));
+    }
+    s.push_str("final=");
+    for v in &r.final_params {
+        s.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    s
+}
+
+fn algorithms() -> Vec<(&'static str, Algorithm)> {
+    let q8 = QuantConfig::stochastic(8);
+    let t = ThetaPolicy::Constant(2.0);
+    let one_bit_nearest =
+        QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::stochastic(1) };
+    vec![
+        ("allreduce", Algorithm::AllReduce),
+        ("dpsgd", Algorithm::DPsgd),
+        ("naive", Algorithm::NaiveQuant { quant: q8, range: 4.0 }),
+        ("moniqua", Algorithm::Moniqua { theta: t, quant: q8 }),
+        (
+            "moniqua-private-noise",
+            Algorithm::Moniqua { theta: t, quant: q8.with_shared_randomness(false) },
+        ),
+        (
+            "moniqua-verify",
+            Algorithm::Moniqua { theta: t, quant: q8.with_verify_hash(true) },
+        ),
+        (
+            "moniqua-slack",
+            Algorithm::MoniquaSlack { theta: t, quant: one_bit_nearest, gamma: 0.3 },
+        ),
+        ("d2", Algorithm::D2),
+        ("moniqua-d2", Algorithm::MoniquaD2 { theta: t, quant: q8 }),
+        ("dcd", Algorithm::Dcd { quant: q8, range: 4.0 }),
+        ("dcd-dynamic", Algorithm::Dcd { quant: q8, range: 0.0 }),
+        ("ecd", Algorithm::Ecd { quant: q8, range: 16.0 }),
+        ("choco", Algorithm::Choco { quant: q8, range: 4.0, gamma: 0.5 }),
+        ("deepsqueeze", Algorithm::DeepSqueeze { quant: q8, range: 4.0, gamma: 0.5 }),
+    ]
+}
+
+fn run_lockstep(algorithm: Algorithm) -> Report {
+    Trainer::new(config(algorithm), Topology::Ring(4), objective()).run()
+}
+
+fn run_cluster(algorithm: Algorithm, transport: TransportKind) -> Report {
+    let mut t = ClusterTrainer::new(
+        config(algorithm),
+        Topology::Ring(4),
+        objective(),
+        ClusterConfig { transport, ..ClusterConfig::default() },
+    )
+    .expect("cluster config accepted");
+    t.run().expect("cluster run")
+}
+
+#[test]
+fn mem_cluster_bitwise_matches_lockstep_for_all_algorithms() {
+    for (name, algorithm) in algorithms() {
+        let want = fingerprint(&run_lockstep(algorithm.clone()));
+        let got = fingerprint(&run_cluster(algorithm, TransportKind::Mem));
+        assert_eq!(got, want, "{name}: mem cluster diverged from lockstep trainer");
+    }
+}
+
+#[test]
+fn tcp_cluster_bitwise_matches_lockstep_for_all_algorithms() {
+    for (name, algorithm) in algorithms() {
+        let want = fingerprint(&run_lockstep(algorithm.clone()));
+        let got =
+            fingerprint(&run_cluster(algorithm, TransportKind::Tcp { port_base: 0 }));
+        assert_eq!(got, want, "{name}: tcp cluster diverged from lockstep trainer");
+    }
+}
+
+#[test]
+fn cluster_run_is_reproducible_across_interleavings() {
+    // Thread scheduling differs run to run; the digests must not.
+    let algorithm = Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(4),
+    };
+    let a = fingerprint(&run_cluster(algorithm.clone(), TransportKind::Mem));
+    for _ in 0..3 {
+        let b = fingerprint(&run_cluster(algorithm.clone(), TransportKind::Mem));
+        assert_eq!(a, b, "cluster digest depends on thread interleaving");
+    }
+}
+
+#[test]
+fn measured_wire_bytes_are_payload_plus_headers() {
+    let algorithm = Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    };
+    let mut t = ClusterTrainer::new(
+        config(algorithm),
+        Topology::Ring(4),
+        objective(),
+        ClusterConfig::default(),
+    )
+    .unwrap();
+    let report = t.run().unwrap();
+    // ring/4: 8 directed edges × STEPS rounds.
+    assert_eq!(t.frames_sent, 8 * STEPS);
+    assert_eq!(
+        t.wire_bytes_sent,
+        report.total_bytes + t.frames_sent * moniqua::transport::HEADER_LEN as u64,
+    );
+}

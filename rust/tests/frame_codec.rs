@@ -1,0 +1,131 @@
+//! Property tests for the wire-frame codec, fuzzed with the repo's
+//! deterministic RNG (`testing::forall`): round-trips at every quantizer
+//! bit budget and arbitrary payload lengths, plus totality of `decode` —
+//! truncation, bad magic, bad version, and flipped bytes must all come
+//! back as *typed* [`FrameError`]s, never panics.
+
+use moniqua::quant::{packing, MoniquaCodec, QuantConfig};
+use moniqua::testing::{forall, gaussian_vec};
+use moniqua::transport::{Frame, FrameError, HEADER_LEN, VERSION};
+
+#[test]
+fn roundtrip_at_every_bit_budget_and_length() {
+    for bits in [1u32, 2, 4, 8, 16] {
+        let cfg = if bits == 1 {
+            QuantConfig::nearest(bits) // 1-bit stochastic has δ = ½
+        } else {
+            QuantConfig::stochastic(bits)
+        };
+        let codec = MoniquaCodec::from_theta(1.5, &cfg);
+        forall(40, |rng| {
+            let d = rng.below(500) as usize; // includes 0 and sub-byte tails
+            let x = gaussian_vec(rng, d, 3.0);
+            let noise: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+            let mut payload = vec![0u8; packing::packed_len(d, bits)];
+            codec.encode_packed_into(&x, &noise, &mut payload);
+            let f = Frame {
+                round: rng.next_u64(),
+                sender: rng.below(1 << 16) as u16,
+                algo: 4,
+                bits: bits as u16,
+                theta: rng.next_f32() * 8.0,
+                payload,
+            };
+            let bytes = f.encode();
+            assert_eq!(bytes.len(), HEADER_LEN + packing::packed_len(d, bits));
+            let g = Frame::decode(&bytes).expect("well-formed frame decodes");
+            assert_eq!(f, g, "bits={bits} d={d}");
+        });
+    }
+}
+
+#[test]
+fn arbitrary_binary_payloads_roundtrip() {
+    forall(100, |rng| {
+        let len = rng.below(200_000) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let f = Frame {
+            round: rng.next_u64(),
+            sender: 1,
+            algo: 2,
+            bits: 32,
+            theta: 0.0,
+            payload,
+        };
+        assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
+    });
+}
+
+#[test]
+fn every_truncation_is_a_typed_error() {
+    forall(30, |rng| {
+        let len = rng.below(300) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let bytes =
+            Frame { round: 3, sender: 0, algo: 4, bits: 8, theta: 1.0, payload }.encode();
+        // Every strict prefix must fail Truncated — never panic, never Ok.
+        let cut = rng.below(bytes.len() as u64) as usize;
+        match Frame::decode(&bytes[..cut]) {
+            Err(FrameError::Truncated { expected, got }) => {
+                assert_eq!(got, cut);
+                assert!(expected > cut);
+            }
+            other => panic!("cut={cut}: expected Truncated, got {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn flipped_bytes_map_to_typed_errors_by_region() {
+    forall(200, |rng| {
+        let len = 1 + rng.below(2000) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let good =
+            Frame { round: 9, sender: 2, algo: 4, bits: 8, theta: 2.0, payload }.encode();
+        let pos = rng.below(good.len() as u64) as usize;
+        let mut bad = good.clone();
+        let flip = 1u8 << rng.below(8) as u32;
+        bad[pos] ^= flip;
+        let result = Frame::decode(&bad);
+        match pos {
+            0..=3 => assert!(matches!(result, Err(FrameError::BadMagic(_))), "pos={pos}"),
+            4..=5 => {
+                assert!(matches!(result, Err(FrameError::BadVersion(v)) if v != VERSION))
+            }
+            // algo/round/sender/bits/theta: caught by the checksum.
+            6..=23 => assert!(
+                matches!(result, Err(FrameError::ChecksumMismatch { .. })),
+                "pos={pos}"
+            ),
+            // payload_len: a length disagreement (or oversize), surfaced
+            // before any checksum work.
+            24..=27 => assert!(
+                matches!(
+                    result,
+                    Err(FrameError::Truncated { .. })
+                        | Err(FrameError::TrailingBytes { .. })
+                        | Err(FrameError::Oversize(_))
+                ),
+                "pos={pos}: {result:?}"
+            ),
+            // checksum field or payload body: checksum mismatch.
+            _ => assert!(
+                matches!(result, Err(FrameError::ChecksumMismatch { .. })),
+                "pos={pos}: {result:?}"
+            ),
+        }
+    });
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    forall(300, |rng| {
+        let len = rng.below(400) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        // Totality: any outcome is fine as long as it is a value, and an
+        // (astronomically unlikely) Ok must re-encode to the same bytes.
+        if let Ok(f) = Frame::decode(&bytes) {
+            assert_eq!(f.encode(), bytes);
+        }
+    });
+}

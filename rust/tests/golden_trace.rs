@@ -9,6 +9,11 @@
 //! fixtures serialize the raw f64 bit patterns, not rounded decimals. To
 //! intentionally re-bless after an algorithm-changing PR, delete the stale
 //! fixture(s) and rerun `cargo test`.
+//!
+//! With `MONIQUA_GOLDEN_STRICT=1` a missing fixture is a hard failure
+//! instead of a bless — CI's golden-pinning step uses this on the second
+//! pass (debug blesses, release must replay bitwise), so a debug/release
+//! or run-to-run divergence cannot slip through as a silent re-bless.
 
 use std::path::PathBuf;
 
@@ -111,6 +116,15 @@ fn golden_traces_replay_bitwise() {
                 );
             }
             Err(_) => {
+                // Opt-in by value: "0"/""/"false" still mean bless-on-missing.
+                let strict = std::env::var("MONIQUA_GOLDEN_STRICT")
+                    .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+                    .unwrap_or(false);
+                assert!(
+                    !strict,
+                    "{name}: fixture {path:?} missing under MONIQUA_GOLDEN_STRICT \
+                     (bless first without the env var, then commit the file)"
+                );
                 std::fs::write(&path, &got).expect("write golden fixture");
                 blessed.push(path);
             }

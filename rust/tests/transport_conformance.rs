@@ -1,0 +1,249 @@
+//! Transport conformance suite: one generic contract, run verbatim against
+//! both [`MemTransport`] and [`TcpTransport`]. Whatever carries the frames
+//! must provide:
+//!
+//! * per-sender FIFO (a sender's frames arrive in send order);
+//! * deterministic `(round, sender)` delivery order for buffered frames;
+//! * correctness under concurrent senders;
+//! * large (>64 KiB) frames surviving intact (checksummed);
+//! * a typed timeout on an idle endpoint.
+//!
+//! The TCP side always binds port 0 (OS ephemeral ports), so the suite is
+//! port-collision-safe under parallel CI jobs.
+
+use std::time::Duration;
+
+use moniqua::transport::{Frame, MemTransport, TcpTransport, Transport, TransportError};
+
+fn frame(round: u64, sender: u16, payload: Vec<u8>) -> Frame {
+    Frame { round, sender, algo: 4, bits: 8, theta: 2.0, payload }
+}
+
+/// Build an n-endpoint cluster for each implementation.
+fn mem_cluster(n: usize) -> Vec<Box<dyn Transport>> {
+    MemTransport::cluster(n)
+        .into_iter()
+        .map(|t| Box::new(t) as Box<dyn Transport>)
+        .collect()
+}
+
+fn tcp_cluster(n: usize) -> Vec<Box<dyn Transport>> {
+    TcpTransport::cluster(n, 0)
+        .expect("bind loopback listeners")
+        .into_iter()
+        .map(|t| Box::new(t) as Box<dyn Transport>)
+        .collect()
+}
+
+const RECV: Duration = Duration::from_secs(10);
+
+// ---------------------------------------------------------------- contract
+
+fn per_sender_fifo(mk: fn(usize) -> Vec<Box<dyn Transport>>) {
+    let mut eps = mk(2);
+    let mut rx = eps.remove(0);
+    let mut tx = eps.remove(0);
+    for round in 0..50u64 {
+        tx.send(0, &frame(round, 1, vec![round as u8; 3])).unwrap();
+    }
+    for round in 0..50u64 {
+        let f = rx.recv(RECV).unwrap();
+        assert_eq!(f.round, round, "sender's frames must arrive in send order");
+        assert_eq!(f.payload, vec![round as u8; 3]);
+    }
+}
+
+fn round_sender_order_of_buffered(mk: fn(usize) -> Vec<Box<dyn Transport>>) {
+    let mut eps = mk(4);
+    let mut rx = eps.remove(0);
+    // Senders 1..=3 each send rounds 0..3 (FIFO-safe per sender),
+    // interleaved across senders in descending-sender order so raw arrival
+    // order disagrees with the contract order.
+    for r in 0..3u64 {
+        for (s, ep) in eps.iter_mut().enumerate().rev() {
+            ep.send(0, &frame(r, (s + 1) as u16, vec![])).unwrap();
+        }
+    }
+    // Regardless of arrival interleaving, per-sender order must be exact.
+    // (The full (round, sender) sort of a quiesced buffer cannot be
+    // asserted transport-generically without racing reader threads; the
+    // deterministic mem transport pins it in
+    // mem_quiesced_buffer_drains_sorted, and the shared ReorderBuffer's
+    // pop order is unit-tested in the transport module itself.)
+    let mut got = Vec::new();
+    for _ in 0..9 {
+        let f = rx.recv(RECV).unwrap();
+        got.push((f.round, f.sender));
+    }
+    for s in 1..=3u16 {
+        let rounds: Vec<u64> =
+            got.iter().filter(|&&(_, x)| x == s).map(|&(r, _)| r).collect();
+        assert_eq!(rounds, vec![0, 1, 2], "sender {s} out of order");
+    }
+}
+
+fn broadcast_reaches_every_peer(mk: fn(usize) -> Vec<Box<dyn Transport>>) {
+    let mut eps = mk(4);
+    let mut tx = eps.remove(3);
+    // One broadcast per round: the frame is encoded once and every peer
+    // must receive identical, checksum-clean bytes.
+    for round in 0..5u64 {
+        tx.broadcast(&[0, 1, 2], &frame(round, 3, vec![round as u8; 33]))
+            .unwrap();
+    }
+    for (p, rx) in eps.iter_mut().enumerate() {
+        for round in 0..5u64 {
+            let f = rx.recv(RECV).unwrap();
+            assert_eq!(f.round, round, "peer {p}");
+            assert_eq!(f.sender, 3);
+            assert_eq!(f.payload, vec![round as u8; 33]);
+        }
+    }
+}
+
+fn concurrent_senders(mk: fn(usize) -> Vec<Box<dyn Transport>>) {
+    const SENDERS: usize = 3;
+    const PER_SENDER: usize = 40;
+    let mut eps = mk(SENDERS + 1);
+    let mut rx = eps.remove(0);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .enumerate()
+        .map(|(s, mut ep)| {
+            std::thread::spawn(move || {
+                for round in 0..PER_SENDER as u64 {
+                    let sender = (s + 1) as u16;
+                    ep.send(0, &frame(round, sender, vec![sender as u8; 8])).unwrap();
+                }
+            })
+        })
+        .collect();
+    let mut per_sender: Vec<Vec<u64>> = vec![Vec::new(); SENDERS + 1];
+    for _ in 0..SENDERS * PER_SENDER {
+        let f = rx.recv(RECV).unwrap();
+        assert_eq!(f.payload, vec![f.sender as u8; 8], "payload corrupted");
+        per_sender[f.sender as usize].push(f.round);
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    for s in 1..=SENDERS {
+        assert_eq!(per_sender[s].len(), PER_SENDER, "lost frames from sender {s}");
+        assert!(
+            per_sender[s].windows(2).all(|w| w[0] < w[1]),
+            "sender {s} reordered: {:?}",
+            per_sender[s]
+        );
+    }
+}
+
+fn large_frames(mk: fn(usize) -> Vec<Box<dyn Transport>>) {
+    let mut eps = mk(2);
+    let mut rx = eps.remove(0);
+    let mut tx = eps.remove(0);
+    // > 64 KiB payload with position-dependent bytes: any slicing bug in
+    // the stream reassembly shows up as a mismatch, and the frame checksum
+    // double-checks.
+    let payload: Vec<u8> = (0..100_000usize).map(|k| (k * 31 % 251) as u8).collect();
+    tx.send(0, &frame(0, 1, payload.clone())).unwrap();
+    let f = rx.recv(RECV).unwrap();
+    assert_eq!(f.payload.len(), 100_000);
+    assert_eq!(f.payload, payload);
+}
+
+fn recv_timeout(mk: fn(usize) -> Vec<Box<dyn Transport>>) {
+    let mut eps = mk(2);
+    let t0 = std::time::Instant::now();
+    let err = eps[0].recv(Duration::from_millis(50)).unwrap_err();
+    assert_eq!(err, TransportError::Timeout);
+    let waited = t0.elapsed();
+    assert!(waited >= Duration::from_millis(45), "returned early: {waited:?}");
+    assert!(waited < Duration::from_secs(5), "gross overshoot: {waited:?}");
+}
+
+// ------------------------------------------------------------- mem harness
+
+#[test]
+fn mem_per_sender_fifo() {
+    per_sender_fifo(mem_cluster);
+}
+
+#[test]
+fn mem_round_sender_order() {
+    round_sender_order_of_buffered(mem_cluster);
+}
+
+#[test]
+fn mem_broadcast_reaches_every_peer() {
+    broadcast_reaches_every_peer(mem_cluster);
+}
+
+#[test]
+fn mem_quiesced_buffer_drains_sorted() {
+    // Mem delivery is synchronous (the channel holds every frame before
+    // the first recv), so the (round, sender) sorted-drain contract is
+    // deterministic here — no sleeps, no reader-thread races.
+    let mut eps = mem_cluster(4);
+    let mut rx = eps.remove(0);
+    for r in 0..3u64 {
+        for (s, ep) in eps.iter_mut().enumerate().rev() {
+            ep.send(0, &frame(r, (s + 1) as u16, vec![])).unwrap();
+        }
+    }
+    let drained: Vec<(u64, u16)> = (0..9)
+        .map(|_| {
+            let f = rx.recv(RECV).unwrap();
+            (f.round, f.sender)
+        })
+        .collect();
+    let mut expect = drained.clone();
+    expect.sort();
+    assert_eq!(drained, expect, "quiesced buffer must drain in (round, sender) order");
+}
+
+#[test]
+fn mem_concurrent_senders() {
+    concurrent_senders(mem_cluster);
+}
+
+#[test]
+fn mem_large_frames() {
+    large_frames(mem_cluster);
+}
+
+#[test]
+fn mem_recv_timeout() {
+    recv_timeout(mem_cluster);
+}
+
+// ------------------------------------------------------------- tcp harness
+
+#[test]
+fn tcp_per_sender_fifo() {
+    per_sender_fifo(tcp_cluster);
+}
+
+#[test]
+fn tcp_round_sender_order() {
+    round_sender_order_of_buffered(tcp_cluster);
+}
+
+#[test]
+fn tcp_broadcast_reaches_every_peer() {
+    broadcast_reaches_every_peer(tcp_cluster);
+}
+
+#[test]
+fn tcp_concurrent_senders() {
+    concurrent_senders(tcp_cluster);
+}
+
+#[test]
+fn tcp_large_frames() {
+    large_frames(tcp_cluster);
+}
+
+#[test]
+fn tcp_recv_timeout() {
+    recv_timeout(tcp_cluster);
+}
