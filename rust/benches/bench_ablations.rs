@@ -15,7 +15,7 @@
 //! Run: `cargo bench --offline --bench bench_ablations`
 
 use moniqua::algorithms::{Algorithm, StepCtx, SyncAlgorithm, ThetaPolicy};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::quant::{packing, Compression, MoniquaCodec, QuantConfig, Rounding};
 use moniqua::rng::Pcg64;
 use moniqua::topology::Topology;
@@ -41,6 +41,8 @@ fn quad_loss(algorithm: Algorithm, w: &moniqua::topology::CommMatrix, steps: u64
 }
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("ablations");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let steps = if fast { 100 } else { 600 };
     let w = Topology::Ring(8).comm_matrix();
@@ -79,6 +81,7 @@ fn main() {
             "  spread {spread:<5} shared = {shared:.3e}   independent = {indep:.3e}   reduction = {:.2}x",
             indep / shared
         );
+        json.metric(&format!("shared_noise.spread{spread}.reduction_x"), indep / shared);
     }
 
     // ---------------- B: entropy coding ------------------------------------
@@ -111,6 +114,13 @@ fn main() {
             .map(|c| format!("{:>10}", c.wire_len(&packed)))
             .collect();
         println!("  {:<22} {:>10} {}", format!("±{spread}"), packed.len(), row);
+        json.metric(&format!("entropy.spread{spread}.packed_bytes"), packed.len() as f64);
+        for c in &codecs {
+            json.metric(
+                &format!("entropy.spread{spread}.{c:?}_bytes"),
+                c.wire_len(&packed) as f64,
+            );
+        }
     }
     println!("  (tight consensus → strongly compressible modulo streams, as §6 predicts; deflate/bzip2 rows appear with `--features compression`)");
 
@@ -124,6 +134,7 @@ fn main() {
             steps,
         );
         println!("  theta = {theta:<6} final loss = {loss:.3e}");
+        json.metric(&format!("theta_sweep.theta{theta}.final_loss"), loss);
     }
     let loss_auto = quad_loss(
         Algorithm::Moniqua {
@@ -201,6 +212,9 @@ fn main() {
             steps * 2,
         );
         println!("  gamma = {gamma:<5} final loss = {loss:.3e}");
+        json.metric(&format!("slack.gamma{gamma}.final_loss"), loss);
     }
     println!("  (moderate γ balances 1-bit modulo noise vs consensus speed — Theorem 3's trade-off)");
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

@@ -12,7 +12,7 @@
 //! Run: `cargo bench --offline --bench bench_bits_bound`
 
 use moniqua::algorithms::{Algorithm, StepCtx, SyncAlgorithm, ThetaPolicy};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::quant::theta::{bits_bound, theta_theorem2};
 use moniqua::quant::QuantConfig;
 use moniqua::topology::{CommMatrix, Topology};
@@ -55,6 +55,8 @@ fn empirical_bits(w: &CommMatrix, d: usize, steps: u64, target: f64) -> u32 {
 }
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("bits_bound");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let steps = if fast { 100 } else { 400 };
     let sizes: &[usize] = if fast { &[4, 8, 16] } else { &[4, 8, 16, 32, 64, 128] };
@@ -80,6 +82,9 @@ fn main() {
             e16,
             e256
         );
+        json.metric(&format!("ring{n}.bound_bits"), bits_bound(n, rho) as f64)
+            .metric(&format!("ring{n}.empirical_bits_d16"), e16 as f64)
+            .metric(&format!("ring{n}.empirical_bits_d256"), e256 as f64);
     }
 
     section("expander (random 4-regular): better gap → smaller bound");
@@ -89,13 +94,12 @@ fn main() {
         let rho = w.rho();
         let ref_loss = run_quadratic(&w, Algorithm::DPsgd.make_sync(&w, 16), 16, steps);
         let target = (ref_loss * 4.0).max(1e-4);
-        println!(
-            "{:>6} {:>8.4} {:>12} {:>16}",
-            n,
-            rho,
-            bits_bound(n, rho),
-            empirical_bits(&w, 16, steps, target)
-        );
+        let emp = empirical_bits(&w, 16, steps, target);
+        println!("{:>6} {:>8.4} {:>12} {:>16}", n, rho, bits_bound(n, rho), emp);
+        json.metric(&format!("regular4_{n}.bound_bits"), bits_bound(n, rho) as f64)
+            .metric(&format!("regular4_{n}.empirical_bits_d16"), emp as f64);
     }
     println!("\n(paper: bound grows O(log log n) and is independent of d; expanders need fewer bits than rings)");
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

@@ -19,7 +19,7 @@
 use std::sync::Arc;
 
 use moniqua::algorithms::AsyncVariant;
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::coordinator::{DesAsyncTrainer, FaultConfig};
 use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
 use moniqua::network::{LinkMatrix, NetworkConfig};
@@ -28,6 +28,8 @@ use moniqua::quant::QuantConfig;
 use moniqua::topology::Topology;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("des_faults");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let workers = 6;
     let topo = Topology::Ring(workers);
@@ -100,6 +102,12 @@ fn main() {
                     trainer.out.messages_dropped,
                     trainer.out.stale_fallbacks,
                 );
+                json.scenario(
+                    &format!("{name}.drop{drop_prob}.straggler{straggler}"),
+                    r.final_sim_time(),
+                    r.total_bytes,
+                    r.final_loss(),
+                );
             }
         }
     }
@@ -128,4 +136,6 @@ fn main() {
     assert_eq!(a, b, "same seed must replay the identical event sequence");
     assert_ne!(a, c, "different seeds must not");
     println!("(expected: moniqua-adpsgd ≈4x faster in sim time at every fault level)");
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

@@ -22,7 +22,7 @@
 use std::sync::Arc;
 
 use moniqua::algorithms::{Algorithm, ThetaPolicy};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::coordinator::{metrics, TrainConfig, Trainer};
 use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
 use moniqua::network::NetworkConfig;
@@ -31,6 +31,8 @@ use moniqua::quant::QuantConfig;
 use moniqua::topology::Topology;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("fig1_wallclock");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let workers = 8;
     let (hidden, steps) = if fast { (64, 20) } else { (512, 80) };
@@ -72,6 +74,7 @@ fn main() {
 
     for (label, net) in networks {
         section(label);
+        let fig = &label[..5]; // "fig1a" … "fig1d"
         let mut reports = Vec::new();
         for algorithm in algorithms() {
             let cfg = TrainConfig {
@@ -108,5 +111,15 @@ fn main() {
             t_allreduce / t_moniqua,
             t_dpsgd / t_moniqua
         );
+        for r in &reports {
+            json.scenario(
+                &format!("{fig}.{}", r.algorithm),
+                r.final_sim_time(),
+                r.total_bytes,
+                r.final_loss(),
+            );
+        }
     }
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use moniqua::algorithms::{Algorithm, SyncAlgorithm, StepCtx, ThetaPolicy};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::coordinator::{metrics, TrainConfig, Trainer};
 use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
 use moniqua::objectives::{Logistic, Objective};
@@ -22,6 +22,8 @@ use moniqua::quant::QuantConfig;
 use moniqua::topology::Topology;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("fig2a_d2");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let workers = 10;
     let steps = if fast { 100 } else { 800 };
@@ -77,6 +79,14 @@ fn main() {
         reports.push(r);
     }
     println!("\n{}", metrics::comparison_table(&reports.iter().collect::<Vec<_>>()));
+    for r in &reports {
+        json.scenario(
+            &format!("bylabel.{}", r.algorithm),
+            r.final_sim_time(),
+            r.total_bytes,
+            r.final_loss(),
+        );
+    }
 
     section("heterogeneous quadratic (provable D-PSGD bias floor)");
     // worker i minimizes ½‖x−c_i‖² with spread-out c_i; global optimum at 0.
@@ -117,6 +127,9 @@ fn main() {
             name,
             curve.iter().map(|v| format!("{v:.2e}")).collect::<Vec<_>>().join(" ")
         );
+        json.metric(&format!("quadratic.{name}.worst_local_err"), *curve.last().unwrap());
     }
     println!("\n(D-PSGD stalls at its ς²-bias floor; D² and Moniqua-D² go to ~0 — Figure 2a's shape.)");
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

@@ -16,7 +16,7 @@
 use std::sync::Arc;
 
 use moniqua::algorithms::{AdPsgd, Algorithm, AsyncVariant};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::coordinator::{AsyncTrainer, TrainConfig, Trainer};
 use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
 use moniqua::network::NetworkConfig;
@@ -26,6 +26,8 @@ use moniqua::quant::QuantConfig;
 use moniqua::topology::Topology;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("fig2b_adpsgd");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let workers = 6;
     let topo = Topology::Ring(workers);
@@ -75,6 +77,12 @@ fn main() {
     let bits = ((1.0 / delta).log2().ceil() as u32).clamp(2, 12);
     println!("\nTheorem-5: t_mix = {t_mix}, theta = {theta:.2}, delta = {delta:.5} → {bits} bits");
 
+    json.scenario(
+        "dpsgd-sync",
+        sync_report.final_sim_time(),
+        sync_report.total_bytes,
+        sync_report.final_loss(),
+    );
     let mut finals = vec![("dpsgd(sync)", sync_report.final_sim_time(), sync_report.final_loss())];
     for (name, variant) in [
         ("adpsgd", AsyncVariant::FullPrecision),
@@ -100,6 +108,7 @@ fn main() {
         for row in &r.trace {
             println!("  event {:>6} t={:>8.2}s loss={:.4}", row.step, row.sim_time_s, row.eval_loss);
         }
+        json.scenario(name, r.final_sim_time(), r.total_bytes, r.final_loss());
         finals.push((name, r.final_sim_time(), r.final_loss()));
     }
 
@@ -108,4 +117,6 @@ fn main() {
         println!("  {name:<16} {t:>8.2}s   final loss {loss:.4}");
     }
     println!("(expected: adpsgd < dpsgd in time; moniqua-adpsgd < adpsgd — Figure 2b)");
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

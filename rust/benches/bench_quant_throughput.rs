@@ -13,12 +13,16 @@
 //! Run: `cargo bench --offline --bench bench_quant_throughput`
 
 use moniqua::algorithms::{Algorithm, StepCtx, SyncAlgorithm, ThetaPolicy};
-use moniqua::bench_support::{bench, black_box, print_speedup, print_throughput, section};
+use moniqua::bench_support::{
+    bench, black_box, print_speedup, print_throughput, section, speedup, BenchJson,
+};
 use moniqua::quant::{packing, Compression, MoniquaCodec, QuantConfig};
 use moniqua::rng::Pcg64;
 use moniqua::topology::Topology;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("quant_throughput");
     let d = 1_000_000usize;
     let bytes_f32 = d * 4;
     let mut rng = Pcg64::seeded(1);
@@ -40,10 +44,18 @@ fn main() {
             codec.encode_packed_into(black_box(&x), &noise, &mut wire);
         });
         print_throughput(&r, bytes_f32);
+        json.metric(
+            &format!("encode_packed_{bits}bit.gbps"),
+            r.throughput(bytes_f32) / 1e9,
+        );
         let r = bench(&format!("recover_packed {bits}-bit"), 2, 9, || {
             codec.recover_packed_into(black_box(&wire), &y, &mut out);
         });
         print_throughput(&r, bytes_f32);
+        json.metric(
+            &format!("recover_packed_{bits}bit.gbps"),
+            r.throughput(bytes_f32) / 1e9,
+        );
     }
     let cfg8 = QuantConfig::stochastic(8);
     let codec8 = MoniquaCodec::from_theta(2.0, &cfg8);
@@ -111,6 +123,8 @@ fn main() {
     });
     print_throughput(&unfused, bytes_f32);
     print_speedup("fusion speedup (wire path)", &unfused, &fused);
+    json.metric("fused_pipeline_8bit.gbps", fused.throughput(bytes_f32) / 1e9)
+        .metric("fusion_speedup_x", speedup(&unfused, &fused));
 
     section("parallel round engine: full Moniqua rounds, ring(8), d = 250k");
     // One full synchronous round (encode + recover/accumulate + apply) per
@@ -147,12 +161,18 @@ fn main() {
             round += 1;
         });
         print_throughput(&r, n_workers * dm * 4);
+        json.metric(
+            &format!("round_engine_{threads}t.gbps"),
+            r.throughput(n_workers * dm * 4) / 1e9,
+        );
         if threads == 1 {
             seq = Some(r);
         } else if let Some(seq) = &seq {
             print_speedup(&format!("engine speedup at {threads} threads"), seq, &r);
         }
     }
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
     println!(
         "\nFor reference: a 1 GB/s pipeline quantizes a 1M-param model in ~4 ms —\n\
          below the 8.8 ms one fp32 model costs on a 1 Gbps link (Fig 1b regime)."

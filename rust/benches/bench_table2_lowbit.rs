@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use moniqua::algorithms::{Algorithm, ThetaPolicy};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::coordinator::{TrainConfig, Trainer};
 use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
 use moniqua::objectives::{Mlp, Objective};
@@ -25,6 +25,8 @@ use moniqua::quant::{QuantConfig, Rounding};
 use moniqua::topology::Topology;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("table2_lowbit");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let workers = 8;
     let steps = if fast { 100 } else { 1200 };
@@ -55,6 +57,12 @@ fn main() {
     println!(
         "full-precision D-PSGD reference accuracy: {:.1}%\n",
         ref_report.final_accuracy().unwrap() * 100.0
+    );
+    json.scenario(
+        "fp32.dpsgd",
+        ref_report.final_sim_time(),
+        ref_report.total_bytes,
+        ref_report.final_loss(),
     );
 
     println!(
@@ -100,6 +108,12 @@ fn main() {
             let report = Trainer::new(cfg, Topology::Ring(workers), make_objective()).run();
             let loss = report.final_loss();
             let diverged = !loss.is_finite() || loss > 2.0;
+            json.scenario(
+                &format!("{bits}bit.{name}"),
+                report.final_sim_time(),
+                report.total_bytes,
+                loss,
+            );
             println!(
                 "{:<8} {:<14} {:>10} {:>8} {:>14.1}",
                 format!("{bits}bit"),
@@ -117,4 +131,6 @@ fn main() {
     println!(
         "\n(Moniqua extra memory is exactly 0; DeepSqueeze Θ(nd) < ChocoSGD/DCD/ECD Θ(md) — Table 1/2.)"
     );
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

@@ -12,12 +12,14 @@
 //! Run: `cargo bench --offline --bench bench_theorem1_naive`
 
 use moniqua::algorithms::{Algorithm, StepCtx, SyncAlgorithm, ThetaPolicy};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::objectives::quadratic::theorem1_floor;
 use moniqua::quant::QuantConfig;
 use moniqua::topology::Topology;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("theorem1_naive");
     let n = 4usize;
     let d = 64usize;
     let topo = Topology::Ring(n);
@@ -74,12 +76,14 @@ fn main() {
     section("E‖∇f‖² trajectories (one row per system, sampled every 50 steps)");
     let mut naive_final = f64::NAN;
     for (name, algorithm, lr) in systems {
+        let algo_name = algorithm.name();
         let curve = run(algorithm.make_sync(&w, d), lr);
         println!(
             "{:<20} {}",
             name,
             curve.iter().map(|v| format!("{v:.2e}")).collect::<Vec<_>>().join(" ")
         );
+        json.metric(&format!("{algo_name}.final_grad_norm_sq"), *curve.last().unwrap());
         if name.starts_with("naive") {
             naive_final = *curve.last().unwrap();
         }
@@ -90,4 +94,7 @@ fn main() {
         if naive_final >= floor { "ABOVE" } else { "below?!" }
     );
     assert!(naive_final >= floor, "Theorem 1 violated by the implementation");
+    json.metric("theorem1_floor", floor)
+        .metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

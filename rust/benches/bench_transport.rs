@@ -8,7 +8,7 @@
 //! * predicted payload bytes per directed message (the arithmetic
 //!   `CommStats::bytes_per_msg` that Lemma 2 / the bit-budget analysis
 //!   bounds) vs the measured bytes the transport actually shipped per
-//!   frame (payload + the 36-byte frame header);
+//!   frame (payload + the `HEADER_LEN`-byte frame header);
 //! * a cross-transport check: mem and tcp runs must report identical
 //!   `total_bytes` (the transports may not change the math).
 //!
@@ -18,7 +18,7 @@
 use std::time::Instant;
 
 use moniqua::algorithms::{Algorithm, ThetaPolicy};
-use moniqua::bench_support::section;
+use moniqua::bench_support::{section, BenchJson};
 use moniqua::coordinator::{ClusterConfig, ClusterTrainer, TrainConfig, TransportKind};
 use moniqua::objectives::{Objective, Quadratic};
 use moniqua::quant::QuantConfig;
@@ -26,6 +26,8 @@ use moniqua::topology::Topology;
 use moniqua::transport::HEADER_LEN;
 
 fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("transport");
     let fast = std::env::var("MONIQUA_FAST").is_ok();
     let workers = 4;
     let d = if fast { 1 << 12 } else { 1 << 16 };
@@ -108,6 +110,12 @@ fn main() {
                 measured_per_frame,
                 100.0 * (measured_per_frame - predicted_per_msg) / predicted_per_msg,
             );
+            json.scenario(
+                &format!("{name}.{tname}"),
+                wall,
+                trainer.wire_bytes_sent,
+                report.final_loss(),
+            );
         }
         assert!(
             totals.windows(2).all(|w| w[0] == w[1]),
@@ -119,4 +127,6 @@ fn main() {
          and d = {d} it is already noise, which is why the paper's bit-budget bound \
          survives a real wire format."
     );
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
 }

@@ -274,6 +274,113 @@ impl AdPsgd {
         (pair, stats)
     }
 
+    /// Serialize the engine's persistent state: the gossip sampler's RNG
+    /// cursor, the in-flight stale-gradient snapshots, the stale-neighbor
+    /// cache, and the fault counters — everything a crashed async worker
+    /// needs to resume its event stream bit-for-bit. Companion of
+    /// [`SyncAlgorithm::snapshot`](crate::algorithms::SyncAlgorithm::snapshot)
+    /// for the event-driven engine (which is not a `SyncAlgorithm`).
+    pub fn snapshot(&self, out: &mut Vec<u8>) {
+        use crate::elastic::snapshot as ss;
+        for w in self.sampler.rng_raw() {
+            ss::put_u64(out, w);
+        }
+        ss::put_u64(out, self.max_observed_delay);
+        ss::put_u64(out, self.stale_fallbacks);
+        ss::put_u64(out, self.lost_exchanges);
+        ss::put_u32(out, self.snapshots.len() as u32);
+        for snap in &self.snapshots {
+            match snap {
+                None => ss::put_u8(out, 0),
+                Some((x, when)) => {
+                    ss::put_u8(out, 1);
+                    ss::put_f32_slice(out, x);
+                    ss::put_u64(out, *when);
+                }
+            }
+        }
+        match &self.stale {
+            None => ss::put_u8(out, 0),
+            Some(cache) => {
+                ss::put_u8(out, 1);
+                for per_recv in cache {
+                    // Sorted sender order: HashMap iteration order must not
+                    // leak into the blob (snapshot bytes are compared
+                    // bitwise by the roundtrip property test).
+                    let mut senders: Vec<usize> = per_recv.keys().copied().collect();
+                    senders.sort_unstable();
+                    ss::put_u32(out, senders.len() as u32);
+                    for s in senders {
+                        ss::put_u64(out, s as u64);
+                        ss::put_f32_slice(out, &per_recv[&s]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Restore state written by [`Self::snapshot`] onto a freshly
+    /// constructed engine of the same topology/dimension/variant.
+    pub fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        use crate::elastic::{snapshot as ss, SnapshotError};
+        let mut r = ss::Reader::new(bytes);
+        let raw = [r.take_u64()?, r.take_u64()?, r.take_u64()?, r.take_u64()?];
+        let max_observed_delay = r.take_u64()?;
+        let stale_fallbacks = r.take_u64()?;
+        let lost_exchanges = r.take_u64()?;
+        let n = r.take_u32()? as usize;
+        if n != self.snapshots.len() {
+            return Err(SnapshotError::Malformed("adpsgd worker count"));
+        }
+        let mut snapshots = Vec::with_capacity(n);
+        for _ in 0..n {
+            snapshots.push(match r.take_u8()? {
+                0 => None,
+                1 => {
+                    let x = r.take_f32_vec()?;
+                    if x.len() != self.d {
+                        return Err(SnapshotError::Malformed("adpsgd snapshot dim"));
+                    }
+                    let when = r.take_u64()?;
+                    Some((x, when))
+                }
+                _ => return Err(SnapshotError::Malformed("adpsgd snapshot tag")),
+            });
+        }
+        let stale = match r.take_u8()? {
+            0 => None,
+            1 => {
+                let mut cache = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let entries = r.take_u32()? as usize;
+                    let mut per_recv = HashMap::with_capacity(entries);
+                    for _ in 0..entries {
+                        let s = r.take_u64()? as usize;
+                        if s >= n {
+                            return Err(SnapshotError::Malformed("adpsgd stale sender"));
+                        }
+                        let x = r.take_f32_vec()?;
+                        if x.len() != self.d {
+                            return Err(SnapshotError::Malformed("adpsgd stale dim"));
+                        }
+                        per_recv.insert(s, x);
+                    }
+                    cache.push(per_recv);
+                }
+                Some(cache)
+            }
+            _ => return Err(SnapshotError::Malformed("adpsgd stale tag")),
+        };
+        r.finish()?;
+        self.sampler.set_rng_raw(raw);
+        self.max_observed_delay = max_observed_delay;
+        self.stale_fallbacks = stale_fallbacks;
+        self.lost_exchanges = lost_exchanges;
+        self.snapshots = snapshots;
+        self.stale = stale;
+        Ok(())
+    }
+
     /// Receiver `r` lost the incoming message from sender `s`: average with
     /// the cached stale copy when one exists (plain f32, never through the
     /// modulo decode), otherwise skip `r`'s half of the exchange.

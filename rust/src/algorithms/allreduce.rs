@@ -100,18 +100,25 @@ impl SyncAlgorithm for AllReduce {
         inbox: &Inbox,
     ) -> CommStats {
         // Same sequential worker-order reduction as the lockstep step —
-        // summation order is part of the determinism contract.
+        // summation order is part of the determinism contract. The cohort is
+        // {i} ∪ inbox senders, merged in ascending id order (identical to
+        // the old 0..n loop for a contiguous cohort, and correct when an
+        // elastic membership leaves holes in the id space).
         let n = inbox.len() + 1;
         let AllReduce { mean_grad, decode, .. } = self;
         mean_grad.fill(0.0);
-        for j in 0..n {
-            let g: &[f32] = if j == i {
-                grad
-            } else {
-                common::read_f32s_into(inbox.payload(j), decode);
-                decode
-            };
-            crate::linalg::axpy(mean_grad, 1.0 / n as f32, g);
+        let scale = 1.0 / n as f32;
+        let mut own_added = false;
+        for (j, payload) in inbox.iter() {
+            if !own_added && i < j {
+                crate::linalg::axpy(mean_grad, scale, grad);
+                own_added = true;
+            }
+            common::read_f32s_into(payload, decode);
+            crate::linalg::axpy(mean_grad, scale, decode);
+        }
+        if !own_added {
+            crate::linalg::axpy(mean_grad, scale, grad);
         }
         crate::linalg::axpy(x, -lr, mean_grad);
         CommStats {

@@ -76,6 +76,28 @@ impl SyncAlgorithm for Choco {
         self.pool = RoundPool::new(threads);
     }
 
+    // Persistent state: the gossip estimates x̂ (initialized at 0, so no
+    // lazy-init flag to carry).
+    fn snapshot(&self, out: &mut Vec<u8>) {
+        use crate::elastic::snapshot as ss;
+        ss::put_u32(out, self.xhat.len() as u32);
+        for row in &self.xhat {
+            ss::put_f32_slice(out, row);
+        }
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        use crate::elastic::{snapshot as ss, SnapshotError};
+        let mut r = ss::Reader::new(bytes);
+        if r.take_u32()? as usize != self.xhat.len() {
+            return Err(SnapshotError::Malformed("choco estimate count"));
+        }
+        for row in self.xhat.iter_mut() {
+            r.take_f32_into(row)?;
+        }
+        r.finish()
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

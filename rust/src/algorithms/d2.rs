@@ -122,6 +122,41 @@ impl SyncAlgorithm for D2 {
         true
     }
 
+    // Persistent state: the variance-reduction history (x_prev/g_prev per
+    // worker) plus the started flag and θ diagnostic.
+    fn snapshot(&self, out: &mut Vec<u8>) {
+        use crate::elastic::snapshot as ss;
+        ss::put_u8(out, self.started as u8);
+        ss::put_f64(out, self.last_theta);
+        ss::put_u32(out, self.ws.len() as u32);
+        for ws in &self.ws {
+            ss::put_f32_slice(out, &ws.x_prev);
+            ss::put_f32_slice(out, &ws.g_prev);
+        }
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        use crate::elastic::{snapshot as ss, SnapshotError};
+        let mut r = ss::Reader::new(bytes);
+        let started = match r.take_u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(SnapshotError::Malformed("d2 started flag")),
+        };
+        let last_theta = r.take_f64()?;
+        if r.take_u32()? as usize != self.ws.len() {
+            return Err(SnapshotError::Malformed("d2 worker count"));
+        }
+        for ws in self.ws.iter_mut() {
+            r.take_f32_into(&mut ws.x_prev)?;
+            r.take_f32_into(&mut ws.g_prev)?;
+        }
+        r.finish()?;
+        self.started = started;
+        self.last_theta = last_theta;
+        Ok(())
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

@@ -88,6 +88,37 @@ impl SyncAlgorithm for Dcd {
         self.pool = RoundPool::new(threads);
     }
 
+    // Persistent state: the per-neighbor replicas x̂ (Table 1's Θ(md)
+    // memory) plus the lazy-init flag. `z` is round scratch (recomputed by
+    // the next send half).
+    fn snapshot(&self, out: &mut Vec<u8>) {
+        use crate::elastic::snapshot as ss;
+        ss::put_u8(out, self.initialized as u8);
+        ss::put_u32(out, self.xhat.len() as u32);
+        for row in &self.xhat {
+            ss::put_f32_slice(out, row);
+        }
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        use crate::elastic::{snapshot as ss, SnapshotError};
+        let mut r = ss::Reader::new(bytes);
+        let initialized = match r.take_u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(SnapshotError::Malformed("dcd initialized flag")),
+        };
+        if r.take_u32()? as usize != self.xhat.len() {
+            return Err(SnapshotError::Malformed("dcd replica count"));
+        }
+        for row in self.xhat.iter_mut() {
+            r.take_f32_into(row)?;
+        }
+        r.finish()?;
+        self.initialized = initialized;
+        Ok(())
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

@@ -83,6 +83,28 @@ impl SyncAlgorithm for DeepSqueeze {
         self.pool = RoundPool::new(threads);
     }
 
+    // Persistent state: the error-feedback accumulators (Table 1's Θ(nd)
+    // memory); everything else in Ws is round scratch.
+    fn snapshot(&self, out: &mut Vec<u8>) {
+        use crate::elastic::snapshot as ss;
+        ss::put_u32(out, self.ws.len() as u32);
+        for ws in &self.ws {
+            ss::put_f32_slice(out, &ws.err);
+        }
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        use crate::elastic::{snapshot as ss, SnapshotError};
+        let mut r = ss::Reader::new(bytes);
+        if r.take_u32()? as usize != self.ws.len() {
+            return Err(SnapshotError::Malformed("deepsqueeze accumulator count"));
+        }
+        for ws in self.ws.iter_mut() {
+            r.take_f32_into(&mut ws.err)?;
+        }
+        r.finish()
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

@@ -83,6 +83,37 @@ impl SyncAlgorithm for Ecd {
         self.pool = RoundPool::new(threads);
     }
 
+    // Persistent state: the extrapolated estimates x̂ plus the lazy-init
+    // flag (`x_new`/`z` are within-round scratch; the round-indexed
+    // ext/eta weights come from the round number, not stored state).
+    fn snapshot(&self, out: &mut Vec<u8>) {
+        use crate::elastic::snapshot as ss;
+        ss::put_u8(out, self.initialized as u8);
+        ss::put_u32(out, self.xhat.len() as u32);
+        for row in &self.xhat {
+            ss::put_f32_slice(out, row);
+        }
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        use crate::elastic::{snapshot as ss, SnapshotError};
+        let mut r = ss::Reader::new(bytes);
+        let initialized = match r.take_u8()? {
+            0 => false,
+            1 => true,
+            _ => return Err(SnapshotError::Malformed("ecd initialized flag")),
+        };
+        if r.take_u32()? as usize != self.xhat.len() {
+            return Err(SnapshotError::Malformed("ecd estimate count"));
+        }
+        for row in self.xhat.iter_mut() {
+            r.take_f32_into(row)?;
+        }
+        r.finish()?;
+        self.initialized = initialized;
+        Ok(())
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

@@ -253,15 +253,47 @@ pub trait SyncAlgorithm: Send {
 
     /// Replace the communication matrix mid-run — a
     /// [`TopologySchedule`](crate::topology::TopologySchedule) stage
-    /// boundary in the DES runtime (`coordinator::des`). The new matrix
-    /// must cover the same worker count. Returns `false` when this engine
-    /// cannot re-target (per-edge state, or a derived matrix like the
-    /// Theorem-3 slack form whose transform the engine cannot re-apply);
-    /// the DES surfaces a scheduled swap on such an engine as a
-    /// configuration error instead of silently training on a stale graph.
+    /// boundary in the DES runtime (`coordinator::des`), or an elastic
+    /// reconfiguration barrier in the cluster runtime
+    /// ([`crate::elastic`]). The new matrix must cover the same worker
+    /// count. Returns `false` when this engine cannot re-target (per-edge
+    /// state, or a derived matrix like the Theorem-3 slack form whose
+    /// transform the engine cannot re-apply); the runtimes surface a
+    /// scheduled swap on such an engine as a configuration error instead of
+    /// silently training on a stale graph.
     fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
         let _ = w;
         false
+    }
+
+    /// Serialize every bit of *persistent* state this engine carries across
+    /// rounds (compressor replicas, error-feedback accumulators,
+    /// variance-reduction history, diagnostic counters) into `out` — the
+    /// engine section of an elastic [`Snapshot`](crate::elastic::Snapshot).
+    /// Round-scratch buffers are excluded by definition: a round boundary
+    /// is the only snapshot point. Default: no persistent state (the
+    /// zero-extra-memory engines — exactly Table 1's memory column).
+    ///
+    /// Contract (pinned by `tests/snapshot_roundtrip.rs`): for a fresh
+    /// engine `b` of the same construction,
+    /// `b.restore(&a.snapshot())` makes every subsequent round of `b`
+    /// bitwise-identical to `a`'s, and `b.snapshot() == a.snapshot()`.
+    fn snapshot(&self, out: &mut Vec<u8>) {
+        let _ = out;
+    }
+
+    /// Restore state written by [`Self::snapshot`] on an engine of the same
+    /// construction (same algorithm, cluster shape, and dimension). Total:
+    /// malformed blobs return a typed error and must not leave the engine
+    /// partially mutated in ways a caller could observe after discarding it.
+    fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            Err(crate::elastic::SnapshotError::Malformed(
+                "engine has no persistent state but the snapshot carries some",
+            ))
+        }
     }
 }
 

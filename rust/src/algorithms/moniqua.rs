@@ -149,6 +149,20 @@ impl SyncAlgorithm for MoniquaSync {
         true
     }
 
+    // Moniqua's headline property — zero extra memory — means the only
+    // cross-round state is diagnostics: last θ and the §6 failure counter.
+    fn snapshot(&self, out: &mut Vec<u8>) {
+        crate::elastic::snapshot::put_f64(out, self.last_theta);
+        crate::elastic::snapshot::put_u64(out, self.verify_failures);
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<(), crate::elastic::SnapshotError> {
+        let mut r = crate::elastic::snapshot::Reader::new(bytes);
+        self.last_theta = r.take_f64()?;
+        self.verify_failures = r.take_u64()?;
+        r.finish()
+    }
+
     fn step(
         &mut self,
         xs: &mut [Vec<f32>],

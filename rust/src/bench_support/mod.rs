@@ -108,6 +108,105 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench output: every `benches/bench_*.rs` writes a
+/// `BENCH_<name>.json` next to its human-readable stdout so the
+/// perf-trajectory tooling can diff runs without scraping text. The format
+/// is deliberately flat: `{"bench": "...", "metrics": {"key": number, …},
+/// "labels": {"key": "...", …}}`. No serde offline — values are emitted
+/// with enough precision to round-trip f64.
+pub struct BenchJson {
+    name: String,
+    metrics: Vec<(String, f64)>,
+    labels: Vec<(String, String)>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        BenchJson { name: name.to_string(), metrics: Vec::new(), labels: Vec::new() }
+    }
+
+    /// Record a numeric metric (wall-clock seconds, bytes on wire, final
+    /// loss, speedups — whatever the bench measures). Non-finite values are
+    /// stored as JSON `null` at write time.
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut Self {
+        self.metrics.push((key.to_string(), value));
+        self
+    }
+
+    /// Record a string label (scenario names, modes).
+    pub fn label(&mut self, key: &str, value: &str) -> &mut Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// The canonical per-scenario triple every training bench emits:
+    /// wall-clock (simulated or host seconds), bytes on the wire, final
+    /// loss — keyed `<tag>.wall_s` / `<tag>.bytes_on_wire` /
+    /// `<tag>.final_loss`.
+    pub fn scenario(
+        &mut self,
+        tag: &str,
+        wall_s: f64,
+        bytes_on_wire: u64,
+        final_loss: f64,
+    ) -> &mut Self {
+        self.metric(&format!("{tag}.wall_s"), wall_s)
+            .metric(&format!("{tag}.bytes_on_wire"), bytes_on_wire as f64)
+            .metric(&format!("{tag}.final_loss"), final_loss)
+    }
+
+    fn render(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.chars()
+                .flat_map(|c| match c {
+                    '"' => "\\\"".chars().collect::<Vec<_>>(),
+                    '\\' => "\\\\".chars().collect(),
+                    '\n' => "\\n".chars().collect(),
+                    c if (c as u32) < 0x20 => {
+                        format!("\\u{:04x}", c as u32).chars().collect()
+                    }
+                    c => vec![c],
+                })
+                .collect()
+        }
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", esc(&self.name)));
+        s.push_str("  \"metrics\": {");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            if v.is_finite() {
+                s.push_str(&format!("\n    \"{}\": {v:e}", esc(k)));
+            } else {
+                s.push_str(&format!("\n    \"{}\": null", esc(k)));
+            }
+        }
+        s.push_str("\n  },\n  \"labels\": {");
+        for (i, (k, v)) in self.labels.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": \"{}\"", esc(k), esc(v)));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory (or
+    /// `$MONIQUA_BENCH_DIR` when set) and echo the path to stdout.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var_os("MONIQUA_BENCH_DIR")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("."));
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        println!("bench json written to {}", path.display());
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +233,29 @@ mod tests {
             min_s: 0.5,
         };
         assert_eq!(r.throughput(1_000_000), 2_000_000.0);
+    }
+
+    #[test]
+    fn bench_json_renders_and_writes() {
+        let dir = std::env::temp_dir()
+            .join(format!("moniqua-benchjson-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::set_var("MONIQUA_BENCH_DIR", &dir);
+        let mut j = BenchJson::new("unit_test");
+        j.metric("wall_s", 1.25)
+            .metric("bytes_on_wire", 1024.0)
+            .metric("final_loss", 0.5)
+            .metric("nan_is_null", f64::NAN)
+            .label("algo\"rithm", "moni\\qua");
+        let path = j.write().unwrap();
+        std::env::remove_var("MONIQUA_BENCH_DIR");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"unit_test\""));
+        assert!(text.contains("\"wall_s\": 1.25e0"));
+        assert!(text.contains("\"nan_is_null\": null"));
+        assert!(text.contains("algo\\\"rithm"));
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_unit_test.json");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

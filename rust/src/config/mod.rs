@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 use crate::algorithms::{Algorithm, ThetaPolicy};
 use crate::coordinator::cluster::{ClusterConfig, TransportKind};
 use crate::coordinator::des::FaultConfig;
+use crate::elastic::{ElasticConfig, MembershipPlan};
 use crate::data::partition::Partition;
 use crate::network::{LinkMatrix, NetworkConfig};
 use crate::quant::{Compression, QuantConfig, Rounding};
@@ -262,7 +263,8 @@ impl Config {
     }
 
     /// Cluster-runtime config from `transport=mem|tcp`, `port_base`
-    /// (0 = OS ephemeral ports, collision-safe), `recv_timeout_ms`.
+    /// (0 = OS ephemeral ports, collision-safe), `recv_timeout_ms`, plus
+    /// the elastic keys (see [`Self::elastic`]).
     pub fn cluster(&self) -> Result<ClusterConfig> {
         let transport = match self.str_or("transport", "mem") {
             "mem" => TransportKind::Mem,
@@ -280,7 +282,34 @@ impl Config {
             recv_timeout: std::time::Duration::from_millis(
                 self.u64_or("recv_timeout_ms", 30_000)?,
             ),
+            elastic: self.elastic()?,
         })
+    }
+
+    /// Elastic membership + checkpointing from `churn=kind@round:worker,…`
+    /// (`kind ∈ {join, leave, crash}`), `ckpt_every=K` (rounds between
+    /// checkpoints; 0 = never), `ckpt_dir=PATH` (durability directory,
+    /// required for crash plans), and the testing-only `skip_bootstrap`.
+    /// `None` when no elastic key is present — the static cluster.
+    pub fn elastic(&self) -> Result<Option<ElasticConfig>> {
+        let churn = self.get("churn");
+        let ckpt_every = self.u64_or("ckpt_every", 0)?;
+        let ckpt_dir = self.get("ckpt_dir").map(std::path::PathBuf::from);
+        let skip_bootstrap = self.bool_or("skip_bootstrap", false)?;
+        if churn.is_none() && ckpt_every == 0 && ckpt_dir.is_none() {
+            return Ok(None);
+        }
+        let plan = match churn {
+            Some(spec) => MembershipPlan::parse(spec)?,
+            None => MembershipPlan::default(),
+        };
+        if ckpt_every > 0 || plan.has_crashes() {
+            anyhow::ensure!(
+                ckpt_dir.is_some(),
+                "ckpt_every/crash plans need a ckpt_dir=PATH to write into"
+            );
+        }
+        Ok(Some(ElasticConfig { plan, ckpt_every, ckpt_dir, skip_bootstrap }))
     }
 
     pub fn partition(&self) -> Result<Partition> {
@@ -394,6 +423,7 @@ mod tests {
         let c = cfg.cluster().unwrap();
         assert_eq!(c.transport, TransportKind::Mem);
         assert_eq!(c.recv_timeout.as_millis(), 30_000);
+        assert!(c.elastic.is_none());
 
         let cfg = Config::from_str_cfg("transport=tcp\nport_base=9000\nrecv_timeout_ms=500")
             .unwrap();
@@ -409,6 +439,37 @@ mod tests {
             .unwrap()
             .cluster()
             .is_err());
+    }
+
+    #[test]
+    fn elastic_keys_parse_and_validate() {
+        // churn + checkpoints
+        let cfg = Config::from_str_cfg(
+            "churn=crash@12:2,leave@20:1\nckpt_every=5\nckpt_dir=/tmp/ck\n",
+        )
+        .unwrap();
+        let e = cfg.elastic().unwrap().unwrap();
+        assert_eq!(e.plan.events().len(), 2);
+        assert_eq!(e.ckpt_every, 5);
+        assert_eq!(e.ckpt_dir.as_deref(), Some(std::path::Path::new("/tmp/ck")));
+        assert!(!e.skip_bootstrap);
+        // crash plans insist on a durability directory
+        assert!(Config::from_str_cfg("churn=crash@3:0")
+            .unwrap()
+            .elastic()
+            .is_err());
+        assert!(Config::from_str_cfg("ckpt_every=5").unwrap().elastic().is_err());
+        // churn without crashes needs no ckpt_dir
+        let e = Config::from_str_cfg("churn=leave@3:0")
+            .unwrap()
+            .elastic()
+            .unwrap()
+            .unwrap();
+        assert!(e.ckpt_dir.is_none());
+        // garbage spec
+        assert!(Config::from_str_cfg("churn=dance@3:0").unwrap().elastic().is_err());
+        // no keys → None
+        assert!(Config::from_str_cfg("workers=4").unwrap().elastic().unwrap().is_none());
     }
 
     #[test]

@@ -30,6 +30,26 @@
 //! for all algorithms; `rust/DESIGN.md` §Wire-format spells out the
 //! argument.
 //!
+//! ## Elasticity
+//!
+//! With an [`ElasticConfig`] the run becomes a sequence of **epochs of
+//! stable membership** separated by reconfiguration barriers
+//! ([`MembershipPlan`], `rust/DESIGN.md` §Elasticity):
+//!
+//! * **crash@r:w** — worker `w` loses all in-memory state at the start of
+//!   round `r`, restores its last [`Snapshot`] from `ckpt_dir`, replays the
+//!   rounds in between against its [`FrameLog`] (no retransmissions, no
+//!   peer involvement), and produces a **bitwise-identical** run — pinned
+//!   by `tests/elastic_equivalence.rs` against the uninterrupted lockstep
+//!   trainer for every algorithm over both transports.
+//! * **join@r:w / leave@r:w** — the gossip matrix is re-wired through
+//!   [`SyncAlgorithm::swap_matrix`] over the active cohort. A joiner first
+//!   receives one full-precision [`FrameKind::Bootstrap`] frame from its
+//!   designated neighbor and adopts that model: the modulo decode of
+//!   Lemma 1 is only exact within the θ proximity ball, which an arbitrary
+//!   model does not satisfy (the negative test shows the decode corrupting
+//!   when the bootstrap is skipped).
+//!
 //! Two configurations are refused because they need *global* statistics no
 //! message-passing worker can know locally: the Theorem-2 θ policy (its
 //! G∞ estimate is a cluster-wide max) and compressed-stream accounting
@@ -37,16 +57,23 @@
 //! message). Both fail fast in [`ClusterTrainer::new`].
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::metrics::{Report, TraceRow};
 use super::TrainConfig;
-use crate::algorithms::{Algorithm, CommScope, CommStats, Inbox, StepCtx, ThetaPolicy};
+use crate::algorithms::{Algorithm, CommScope, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
+use crate::elastic::membership::{epoch_at, epoch_index, ElasticConfig, Epoch};
+use crate::elastic::snapshot::{
+    load_checkpoint, write_checkpoint, FrameLog, NodeTrace, Snapshot,
+};
 use crate::objectives::Objective;
 use crate::topology::Topology;
-use crate::transport::{algo_wire_id, Frame, MemTransport, TcpTransport, Transport};
+use crate::transport::{
+    algo_wire_id, Frame, FrameKind, MemTransport, TcpTransport, Transport, TransportError,
+};
 
 /// Which transport implementation carries the cluster's frames.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,13 +86,17 @@ pub enum TransportKind {
 }
 
 /// Cluster-runtime knobs on top of [`TrainConfig`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub transport: TransportKind,
     /// Per-`recv` timeout of the round barrier: a worker that waits this
     /// long without a frame declares the cluster wedged and panics (which
-    /// fails the run loudly instead of hanging CI).
+    /// fails the run loudly instead of hanging CI), naming the exact
+    /// `(round, sender)` pairs it is still missing.
     pub recv_timeout: Duration,
+    /// Elastic membership + checkpoint/recovery plan (None = the fixed
+    /// cohort the runtime always had).
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -73,6 +104,7 @@ impl Default for ClusterConfig {
         ClusterConfig {
             transport: TransportKind::Mem,
             recv_timeout: Duration::from_secs(30),
+            elastic: None,
         }
     }
 }
@@ -81,26 +113,20 @@ impl Default for ClusterConfig {
 struct NodeResult {
     worker: usize,
     final_x: Vec<f32>,
-    losses: Vec<f64>,
-    thetas: Vec<Option<f64>>,
-    stats: Vec<CommStats>,
-    snapshots: Vec<(u64, Vec<f32>)>,
-    grad_wall: Vec<f64>,
-    algo_wall: Vec<f64>,
-    frames_sent: u64,
-    bytes_sent: u64,
+    trace: NodeTrace,
 }
 
 /// Message-passing decentralized trainer (see module docs).
 pub struct ClusterTrainer {
     cfg: TrainConfig,
     cluster: ClusterConfig,
-    topo: Topology,
     objective: Box<dyn Objective>,
+    /// Membership epochs (exactly one for a non-elastic run).
+    epochs: Vec<Epoch>,
     rho: f64,
-    deg_max: usize,
-    deg_sum: usize,
-    /// Frames actually shipped through the transport in the last `run`.
+    /// Frames actually shipped through the transport in the last `run`
+    /// (bootstrap frames included; replayed rounds count their original
+    /// send exactly once).
     pub frames_sent: u64,
     /// Measured wire bytes (header + payload) of the last `run` — compare
     /// against `Report::total_bytes`, the model's payload-only prediction.
@@ -153,25 +179,49 @@ impl ClusterTrainer {
                 );
             }
         }
-        let w = topo.comm_matrix();
-        let rho = w.rho();
-        let adj = topo.adjacency();
-        let deg_max = adj.iter().map(|a| a.len()).max().unwrap_or(0);
-        let deg_sum = adj.iter().map(|a| a.len()).sum();
+        // Membership epochs: one full-cohort epoch without a plan; a
+        // validated sequence of reconfigurations with one. The epoch-0
+        // matrix of a full cohort is bitwise the topology's own Metropolis
+        // matrix, so the non-elastic path is unchanged.
+        let plan = cluster
+            .elastic
+            .as_ref()
+            .map(|e| e.plan.clone())
+            .unwrap_or_default();
+        let epochs = plan
+            .epochs(&topo, cfg.steps)
+            .context("invalid elastic membership plan")?;
+        if let Some(elastic) = &cluster.elastic {
+            if elastic.plan.has_crashes() && elastic.ckpt_dir.is_none() {
+                bail!("churn plan contains crashes but no ckpt_dir is configured");
+            }
+            if elastic.plan.reconfigures() {
+                // Probe: reconfiguration re-wires the gossip matrix through
+                // swap_matrix, which per-edge-state engines (and derived
+                // matrices like the Theorem-3 slack form) refuse.
+                let mut probe = cfg.algorithm.make_sync(&epochs[0].matrix, objective.dim());
+                if !probe.swap_matrix(&epochs[0].matrix) {
+                    bail!(
+                        "algorithm '{}' cannot re-target its gossip matrix, so it does \
+                         not support elastic joins/leaves (crash-only plans are fine)",
+                        cfg.algorithm.name()
+                    );
+                }
+            }
+        }
+        let rho = epochs[0].rho;
         Ok(ClusterTrainer {
             cfg,
             cluster,
-            topo,
             objective,
+            epochs,
             rho,
-            deg_max,
-            deg_sum,
             frames_sent: 0,
             wire_bytes_sent: 0,
         })
     }
 
-    /// ρ of the communication matrix in use.
+    /// ρ of the founding epoch's communication matrix.
     pub fn rho(&self) -> f64 {
         self.rho
     }
@@ -181,11 +231,10 @@ impl ClusterTrainer {
     pub fn run(&mut self) -> Result<Report> {
         let n = self.cfg.workers;
         let d = self.objective.dim();
-        let w = self.topo.comm_matrix();
-        let adj = self.topo.adjacency();
 
-        let mut engines: Vec<_> =
-            (0..n).map(|_| self.cfg.algorithm.make_sync(&w, d)).collect();
+        let mut engines: Vec<_> = (0..n)
+            .map(|_| self.cfg.algorithm.make_sync(&self.epochs[0].matrix, d))
+            .collect();
         for e in engines.iter_mut() {
             // One engine per OS thread: keep each round pool sequential so
             // an n-node cluster doesn't oversubscribe n× the cores. The
@@ -208,36 +257,38 @@ impl ClusterTrainer {
                 .collect(),
         };
 
+        let (ckpt_every, ckpt_dir, skip_bootstrap) = match &self.cluster.elastic {
+            Some(e) => (e.ckpt_every, e.ckpt_dir.clone(), e.skip_bootstrap),
+            None => (0, None, false),
+        };
         let recv_timeout = self.cluster.recv_timeout;
         let mut results: Vec<NodeResult> = {
             let cfg = &self.cfg;
             let objective = &self.objective;
-            let adj = &adj;
+            let epochs: &[Epoch] = &self.epochs;
+            let elastic_plan = self.cluster.elastic.as_ref().map(|e| &e.plan);
             std::thread::scope(|s| {
                 let mut handles = Vec::with_capacity(n);
                 for (i, (engine, transport)) in
                     engines.into_iter().zip(transports).enumerate()
                 {
-                    let peers: Vec<usize> = match scope {
-                        CommScope::Neighbors => adj[i].clone(),
-                        CommScope::All => (0..n).filter(|&j| j != i).collect(),
+                    let spec = NodeSpec {
+                        cfg: cfg.clone(),
+                        recv_timeout,
+                        algo_id,
+                        wire_bits,
+                        scope,
+                        epochs,
+                        crashes: elastic_plan
+                            .map(|p| p.crashes_for(i))
+                            .unwrap_or_default(),
+                        ckpt_every,
+                        ckpt_dir: ckpt_dir.clone(),
+                        skip_bootstrap,
                     };
-                    let node_cfg = cfg.clone();
                     let node_obj = objective.box_clone();
-                    let rho = self.rho;
                     handles.push(s.spawn(move || {
-                        run_node(
-                            i,
-                            node_cfg,
-                            engine,
-                            transport,
-                            node_obj,
-                            peers,
-                            rho,
-                            recv_timeout,
-                            algo_id,
-                            wire_bits,
-                        )
+                        run_node(i, engine, transport, node_obj, spec)
                     }));
                 }
                 handles
@@ -247,8 +298,8 @@ impl ClusterTrainer {
             })
         };
         results.sort_by_key(|r| r.worker);
-        self.frames_sent = results.iter().map(|r| r.frames_sent).sum();
-        self.wire_bytes_sent = results.iter().map(|r| r.bytes_sent).sum();
+        self.frames_sent = results.iter().map(|r| r.trace.frames_sent).sum();
+        self.wire_bytes_sent = results.iter().map(|r| r.trace.bytes_sent).sum();
 
         Ok(self.assemble_report(n, d, results))
     }
@@ -257,40 +308,72 @@ impl ClusterTrainer {
     /// The pricing calls, byte formulas, and mean/consensus evaluation are
     /// the *same code* `Trainer::run` uses ([`RoundLedger`](super::RoundLedger),
     /// [`eval_mean`](super::eval_mean)), and the summation orders match
-    /// (losses in ascending worker order), so every determinism-relevant
+    /// (ascending worker order over the round's *active* cohort — the whole
+    /// cluster when membership is static), so every determinism-relevant
     /// field is bitwise what the lockstep run produces. Only `sim_time_s`
     /// differs in *semantics*: a concurrent round is paced by its slowest
     /// worker (max over nodes) rather than the lockstep's
     /// sequential-measured average.
     fn assemble_report(&mut self, n: usize, d: usize, results: Vec<NodeResult>) -> Report {
         let mut report = Report::new(self.cfg.algorithm.name(), n, d);
-        report.extra_memory_floats = self
-            .cfg
-            .algorithm
-            .extra_memory_floats(n, self.topo.edge_count(), d);
-        let mut ledger =
-            super::RoundLedger::new(self.cfg.network, n, self.deg_sum, self.deg_max);
+        report.extra_memory_floats = self.cfg.algorithm.extra_memory_floats(
+            n,
+            self.epochs[0].adj.iter().map(|a| a.len()).sum::<usize>() / 2,
+            d,
+        );
+        let (deg_sum0, deg_max0) = self.epochs[0].degrees();
+        let mut ledger = super::RoundLedger::new(
+            self.cfg.network,
+            self.epochs[0].active_count(),
+            deg_sum0,
+            deg_max0,
+        );
         let mut mean = vec![0.0f32; d];
-        let mut eval_idx = 0usize;
+        let mut cur_epoch_start = self.epochs[0].start;
         for step in 0..self.cfg.steps {
-            let r = step as usize;
-            let stats = results[0].stats[r];
-            let train_loss =
-                results.iter().map(|nr| nr.losses[r]).sum::<f64>() / n as f64;
-            let grad_wall =
-                results.iter().map(|nr| nr.grad_wall[r]).fold(0.0f64, f64::max);
+            let ep = epoch_at(&self.epochs, step);
+            if ep.start != cur_epoch_start {
+                cur_epoch_start = ep.start;
+                let (deg_sum, deg_max) = ep.degrees();
+                ledger.reconfigure(ep.active_count(), deg_sum, deg_max);
+            }
+            let active: Vec<&NodeResult> = results
+                .iter()
+                .filter(|nr| ep.active[nr.worker])
+                .collect();
+            let stats = active[0].trace.stats_at(step).unwrap_or_else(|| {
+                panic!("worker {} has no stats for round {step}", active[0].worker)
+            });
+            let train_loss = active
+                .iter()
+                .map(|nr| {
+                    nr.trace.loss_at(step).unwrap_or_else(|| {
+                        panic!("worker {} has no loss for round {step}", nr.worker)
+                    })
+                })
+                .sum::<f64>()
+                / active.len() as f64;
+            let grad_wall = active
+                .iter()
+                .map(|nr| nr.trace.grad_wall_at(step).unwrap_or(0.0))
+                .fold(0.0f64, f64::max);
             let grad_time = self.cfg.grad_time_s.unwrap_or(grad_wall);
-            let algo_wall =
-                results.iter().map(|nr| nr.algo_wall[r]).fold(0.0f64, f64::max);
+            let algo_wall = active
+                .iter()
+                .map(|nr| nr.trace.algo_wall_at(step).unwrap_or(0.0))
+                .fold(0.0f64, f64::max);
             ledger.charge(&stats, grad_time, algo_wall);
 
             if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
-                let xs: Vec<&[f32]> = results
+                let xs: Vec<&[f32]> = active
                     .iter()
                     .map(|nr| {
-                        let (snap_step, x) = &nr.snapshots[eval_idx];
-                        debug_assert_eq!(*snap_step, step);
-                        x.as_slice()
+                        nr.trace.eval_at(step).unwrap_or_else(|| {
+                            panic!(
+                                "worker {} has no eval snapshot for round {step}",
+                                nr.worker
+                            )
+                        })
                     })
                     .collect();
                 let (eval, consensus) =
@@ -303,15 +386,18 @@ impl ClusterTrainer {
                     eval_acc: eval.accuracy,
                     consensus_linf: consensus,
                     bytes_total: ledger.total_bytes,
-                    theta: results[0].thetas[r],
+                    theta: active[0].trace.theta_at(step).flatten(),
                 });
-                eval_idx += 1;
             }
         }
         ledger.finish(&mut report);
         report.final_params = {
-            let xs: Vec<&[f32]> =
-                results.iter().map(|nr| nr.final_x.as_slice()).collect();
+            let last_ep = epoch_at(&self.epochs, self.cfg.steps.saturating_sub(1));
+            let xs: Vec<&[f32]> = results
+                .iter()
+                .filter(|nr| last_ep.active[nr.worker])
+                .map(|nr| nr.final_x.as_slice())
+                .collect();
             crate::linalg::mean_into(&mut mean, &xs);
             mean.clone()
         };
@@ -344,94 +430,346 @@ fn quant_config(a: &Algorithm) -> Option<crate::quant::QuantConfig> {
     }
 }
 
-/// One worker's whole life: gradient → send → frame barrier → recv, for
-/// every round. Panics (failing the run) on transport errors or protocol
-/// violations — a wedged or corrupt cluster must die loudly.
-#[allow(clippy::too_many_arguments)]
-fn run_node(
-    i: usize,
+/// Everything a node thread needs beyond its engine/transport/objective.
+struct NodeSpec<'a> {
     cfg: TrainConfig,
-    mut engine: Box<dyn crate::algorithms::SyncAlgorithm>,
-    mut transport: Box<dyn Transport>,
-    mut objective: Box<dyn Objective>,
-    peers: Vec<usize>,
-    rho: f64,
     recv_timeout: Duration,
     algo_id: u16,
     wire_bits: u16,
+    scope: CommScope,
+    epochs: &'a [Epoch],
+    /// Sorted rounds at which this worker crashes.
+    crashes: Vec<u64>,
+    /// Checkpoint cadence (0 = never; crashes recover from genesis).
+    ckpt_every: u64,
+    ckpt_dir: Option<PathBuf>,
+    skip_bootstrap: bool,
+}
+
+/// This worker's peer set during an epoch.
+fn peers_of(ep: &Epoch, i: usize, scope: CommScope) -> Vec<usize> {
+    match scope {
+        CommScope::Neighbors => ep.adj[i].clone(),
+        CommScope::All => (0..ep.active.len())
+            .filter(|&j| j != i && ep.active[j])
+            .collect(),
+    }
+}
+
+/// First round ≥ `from` in which worker `i` is active, if any.
+fn next_active_round(epochs: &[Epoch], i: usize, from: u64, steps: u64) -> Option<u64> {
+    let mut round = from;
+    while round < steps {
+        let ep = epoch_at(epochs, round);
+        if ep.active[i] {
+            return Some(round);
+        }
+        // jump to the next epoch boundary
+        round = epochs
+            .iter()
+            .map(|e| e.start)
+            .find(|&s| s > round)?;
+    }
+    None
+}
+
+/// One worker's whole life: gradient → send → frame barrier → recv, for
+/// every round it is a member of, with crash/restore and join/leave
+/// handling when an elastic plan is active. Panics (failing the run) on
+/// transport errors or protocol violations — a wedged or corrupt cluster
+/// must die loudly.
+fn run_node(
+    i: usize,
+    mut engine: Box<dyn SyncAlgorithm>,
+    mut transport: Box<dyn Transport>,
+    mut objective: Box<dyn Objective>,
+    spec: NodeSpec<'_>,
 ) -> NodeResult {
     let d = objective.dim();
+    let steps = spec.cfg.steps;
+    let seed = spec.cfg.seed;
+
+    let Some(start_round) = next_active_round(spec.epochs, i, 0, steps) else {
+        // Provisioned slot that never activates: idle for the whole run.
+        return NodeResult {
+            worker: i,
+            final_x: objective.init(),
+            trace: NodeTrace::starting_at(steps),
+        };
+    };
+
     let mut x = objective.init();
     let mut grad = vec![0.0f32; d];
     let mut payload: Vec<u8> = Vec::new();
-    // Frames from workers running ahead of us, keyed (round, sender).
+    // Data frames from workers running ahead of us, keyed (round, sender).
     let mut pending: BTreeMap<(u64, usize), Frame> = BTreeMap::new();
-    let mut result = NodeResult {
-        worker: i,
-        final_x: Vec::new(),
-        losses: Vec::with_capacity(cfg.steps as usize),
-        thetas: Vec::with_capacity(cfg.steps as usize),
-        stats: Vec::with_capacity(cfg.steps as usize),
-        snapshots: Vec::new(),
-        grad_wall: Vec::with_capacity(cfg.steps as usize),
-        algo_wall: Vec::with_capacity(cfg.steps as usize),
-        frames_sent: 0,
-        bytes_sent: 0,
-    };
-    let mut lr = cfg.lr;
+    // Bootstrap frames waiting for their join round, keyed by round: a
+    // bootstrapper past an upcoming barrier can deliver one while we are
+    // still in an earlier round's recv loop, and crash replay reloads them
+    // from the log.
+    let mut boot_pending: BTreeMap<u64, Frame> = BTreeMap::new();
+    let mut trace = NodeTrace::starting_at(start_round);
+    let mut lr = lr_at(&spec.cfg, start_round);
     let mut g_inf = 0.0f64;
-    for round in 0..cfg.steps {
-        if cfg.decay_at.contains(&round) {
-            lr *= cfg.decay_factor;
+    let mut crashes = spec.crashes.iter().copied().peekable();
+    // The receive-side WAL only exists to serve this worker's own crash
+    // replays; workers with no scheduled crash skip the per-frame disk
+    // write entirely.
+    let mut framelog = if spec.crashes.is_empty() {
+        None
+    } else {
+        spec.ckpt_dir
+            .as_ref()
+            .map(|dir| FrameLog::create(dir, i).expect("create frame log"))
+    };
+    // Rounds < live_from are replays after a crash: sends are suppressed
+    // (their frames already crossed the wire) and the barrier is satisfied
+    // purely from the logged frames.
+    let mut live_from = start_round;
+    let mut cur_epoch = usize::MAX;
+    let mut round = start_round;
+
+    while round < steps {
+        let ep_idx = epoch_index(spec.epochs, round);
+        let ep = &spec.epochs[ep_idx];
+        if !ep.active[i] {
+            // We left the cohort; either rejoin at a later epoch or retire.
+            match next_active_round(spec.epochs, i, round, steps) {
+                Some(r) => {
+                    for k in round..r {
+                        if spec.cfg.decay_at.contains(&k) {
+                            lr *= spec.cfg.decay_factor;
+                        }
+                    }
+                    round = r;
+                    continue;
+                }
+                None => break,
+            }
         }
-        // --- local gradient --------------------------------------------
+
+        // --- scheduled crash: lose everything, restore, replay ------------
+        if round >= live_from && crashes.peek() == Some(&round) {
+            crashes.next();
+            let dir = spec
+                .ckpt_dir
+                .as_ref()
+                .expect("crash plans are validated to carry a ckpt_dir");
+            let snap = load_checkpoint(dir, i)
+                .unwrap_or_else(|e| panic!("worker {i}: corrupt checkpoint: {e}"));
+            pending.clear();
+            boot_pending.clear();
+            for f in FrameLog::read_all(dir, i)
+                .unwrap_or_else(|e| panic!("worker {i}: corrupt frame log: {e}"))
+            {
+                match f.kind {
+                    FrameKind::Data => {
+                        validate_data_frame(i, &f, &spec);
+                        pending.insert((f.round, f.sender as usize), f);
+                    }
+                    FrameKind::Bootstrap => {
+                        boot_pending.insert(f.round, f);
+                    }
+                }
+            }
+            engine = spec.cfg.algorithm.make_sync(&spec.epochs[0].matrix, d);
+            engine.set_threads(1);
+            match snap {
+                Some(s) => {
+                    assert_eq!(
+                        s.algo, spec.algo_id,
+                        "worker {i}: checkpoint belongs to another algorithm"
+                    );
+                    assert_eq!(s.worker as usize, i, "worker {i}: foreign checkpoint");
+                    assert_eq!(s.model.len(), d, "worker {i}: checkpoint dimension");
+                    engine
+                        .restore(&s.engine)
+                        .unwrap_or_else(|e| panic!("worker {i}: engine restore: {e}"));
+                    x = s.model;
+                    lr = s.lr;
+                    g_inf = s.g_inf;
+                    live_from = round;
+                    round = s.round + 1;
+                    trace = s.trace;
+                }
+                None => {
+                    // Genesis recovery: no checkpoint yet — replay the whole
+                    // history from the (never-truncated) frame log.
+                    x = objective.init();
+                    lr = lr_at(&spec.cfg, start_round);
+                    g_inf = 0.0;
+                    live_from = round;
+                    round = start_round;
+                    trace = NodeTrace::starting_at(start_round);
+                }
+            }
+            cur_epoch = usize::MAX; // force re-wiring below
+            continue;
+        }
+
+        // --- reconfiguration barrier: wire the engine for this epoch ------
+        if ep_idx != cur_epoch {
+            if spec.epochs.len() > 1 {
+                assert!(
+                    engine.swap_matrix(&ep.matrix),
+                    "engine '{}' refused a matrix swap (validated at construction)",
+                    engine.name()
+                );
+            }
+            cur_epoch = ep_idx;
+        }
+
+        // --- bootstrap handshake at an epoch's opening round --------------
+        if round == ep.start {
+            for &(joiner, boot) in &ep.joins {
+                if boot == i {
+                    // Our duty: ship the joiner one full-precision model so
+                    // its decode reference is inside the cohort's θ ball.
+                    // (During replay the pre-crash incarnation already sent
+                    // it; count it once, transmit nothing.)
+                    let mut model_bytes = Vec::with_capacity(4 * d);
+                    crate::algorithms::common::put_f32s(&mut model_bytes, &x);
+                    let bf = Frame {
+                        round,
+                        sender: i as u16,
+                        algo: spec.algo_id,
+                        bits: 32,
+                        kind: FrameKind::Bootstrap,
+                        theta: 0.0,
+                        payload: model_bytes,
+                    };
+                    if round >= live_from {
+                        transport.send(joiner, &bf).unwrap_or_else(|e| {
+                            panic!("worker {i} round {round}: bootstrap send failed: {e}")
+                        });
+                    }
+                    trace.frames_sent += 1;
+                    trace.bytes_sent += bf.encoded_len() as u64;
+                }
+                if joiner == i {
+                    // The frame may already be parked (it overtook us while
+                    // we were in an earlier barrier, or came from the crash
+                    // replay log); otherwise block for it.
+                    let bf = if let Some(f) = boot_pending.remove(&round) {
+                        f
+                    } else if round < live_from {
+                        panic!(
+                            "worker {i}: replay log is missing the round-{round} \
+                             bootstrap frame from worker {boot}"
+                        )
+                    } else {
+                        wait_for_bootstrap(
+                            i,
+                            round,
+                            &mut transport,
+                            &mut pending,
+                            &mut boot_pending,
+                            framelog.as_mut(),
+                            &spec,
+                        )
+                    };
+                    assert_eq!(
+                        bf.sender as usize, boot,
+                        "worker {i}: bootstrap from unexpected sender"
+                    );
+                    assert_eq!(bf.bits, 32, "worker {i}: bootstrap must be full precision");
+                    assert_eq!(bf.payload.len(), 4 * d, "bootstrap payload size");
+                    if spec.skip_bootstrap {
+                        // TESTING ONLY: consume the frame but keep the stale
+                        // model — the θ-proximity violation the negative
+                        // test demonstrates.
+                    } else {
+                        crate::algorithms::common::read_f32s_into(&bf.payload, &mut x);
+                    }
+                }
+            }
+        }
+
+        if spec.cfg.decay_at.contains(&round) {
+            lr *= spec.cfg.decay_factor;
+        }
+
+        // --- local gradient ------------------------------------------------
         let t0 = Instant::now();
         let loss = objective.loss_grad(i, round, &x, &mut grad);
         // Node-local running max — Trainer's global version only feeds the
         // Theorem-2 θ policy, which this runtime refuses.
         g_inf = g_inf.max(crate::linalg::norm_inf(&grad) as f64);
-        result.grad_wall.push(t0.elapsed().as_secs_f64());
-        let ctx = StepCtx { seed: cfg.seed, rho, g_inf };
+        let grad_wall = t0.elapsed().as_secs_f64();
+        let ctx = StepCtx { seed, rho: ep.rho, g_inf };
 
-        // --- send half --------------------------------------------------
+        // --- send half -----------------------------------------------------
         let t1 = Instant::now();
         payload.clear();
         engine.node_send(i, &x, &grad, lr, round, &ctx, &mut payload);
         let frame = Frame {
             round,
             sender: i as u16,
-            algo: algo_id,
-            bits: wire_bits,
+            algo: spec.algo_id,
+            bits: spec.wire_bits,
+            kind: FrameKind::Data,
             theta: engine.last_theta().unwrap_or(0.0) as f32,
             payload: std::mem::take(&mut payload),
         };
         let send_compute = t1.elapsed().as_secs_f64();
-        // One broadcast call: the frame is serialized + checksummed once
-        // and the wire bytes are reused for every peer.
-        transport
-            .broadcast(&peers, &frame)
-            .unwrap_or_else(|e| panic!("worker {i} round {round}: broadcast failed: {e}"));
-        result.frames_sent += peers.len() as u64;
-        result.bytes_sent += peers.len() as u64 * frame.encoded_len() as u64;
+        let peers = peers_of(ep, i, spec.scope);
+        if round >= live_from {
+            // One broadcast call: the frame is serialized + checksummed once
+            // and the wire bytes are reused for every peer.
+            transport.broadcast(&peers, &frame).unwrap_or_else(|e| {
+                panic!("worker {i} round {round}: broadcast failed: {e}")
+            });
+        }
+        // Replayed rounds count their original (pre-crash) send exactly
+        // once: the counters that recorded it died with the old incarnation.
+        trace.frames_sent += peers.len() as u64;
+        trace.bytes_sent += peers.len() as u64 * frame.encoded_len() as u64;
 
-        // --- round barrier from the frames themselves ------------------
+        // --- round barrier from the frames themselves ----------------------
         let mut got: Vec<Frame> = Vec::with_capacity(peers.len());
         for &p in &peers {
             if let Some(f) = pending.remove(&(round, p)) {
                 got.push(f);
             }
         }
-        while got.len() < peers.len() {
-            let f = transport.recv(recv_timeout).unwrap_or_else(|e| {
-                panic!("worker {i} round {round}: barrier recv failed: {e}")
-            });
-            let from = f.sender as usize;
-            assert_eq!(f.algo, algo_id, "worker {i}: cross-algorithm frame from {from}");
-            assert_eq!(f.bits, wire_bits, "worker {i}: bit-budget mismatch from {from}");
-            assert!(
-                peers.contains(&from),
-                "worker {i}: frame from non-peer {from}"
+        if round < live_from && got.len() < peers.len() {
+            let missing = missing_pairs(round, &peers, &got);
+            panic!(
+                "worker {i}: replay log is missing frames {missing:?} for round {round} \
+                 (log truncated outside a checkpoint?)"
             );
+        }
+        let wait_start = Instant::now();
+        while got.len() < peers.len() {
+            let f = match transport.recv(spec.recv_timeout) {
+                Ok(f) => f,
+                Err(TransportError::Timeout) => {
+                    let missing = missing_pairs(round, &peers, &got);
+                    panic!(
+                        "worker {i} round {round}: barrier timed out after {:.1?} \
+                         ({} of {} peer frames held) still waiting on (round, sender) \
+                         pairs {missing:?}",
+                        wait_start.elapsed(),
+                        got.len(),
+                        peers.len(),
+                    );
+                }
+                Err(e) => {
+                    panic!("worker {i} round {round}: barrier recv failed: {e}")
+                }
+            };
+            if let Some(log) = framelog.as_mut() {
+                log.append(&f).expect("frame log append");
+            }
+            if f.kind == FrameKind::Bootstrap {
+                // A bootstrapper past an upcoming reconfiguration barrier
+                // delivered our (re)join bootstrap early: park it for the
+                // join round.
+                boot_pending.insert(f.round, f);
+                continue;
+            }
+            validate_data_frame(i, &f, &spec);
+            let from = f.sender as usize;
             assert!(
                 f.round >= round,
                 "worker {i}: stale round-{} frame from {from} at round {round}",
@@ -444,29 +782,158 @@ fn run_node(
             }
         }
 
-        // --- recv half --------------------------------------------------
+        // --- recv half -----------------------------------------------------
         let t2 = Instant::now();
         let inbox = Inbox::new(
             got.iter().map(|f| (f.sender as usize, f.payload.as_slice())).collect(),
         );
         let stats = engine.node_recv(i, &mut x, &grad, lr, round, &ctx, &inbox);
-        result.algo_wall.push(send_compute + t2.elapsed().as_secs_f64());
-        result.losses.push(loss);
-        result.thetas.push(engine.last_theta());
-        result.stats.push(stats);
-        if round % cfg.eval_every == 0 || round + 1 == cfg.steps {
-            result.snapshots.push((round, x.clone()));
+        trace.push_round(
+            round,
+            loss,
+            engine.last_theta(),
+            stats,
+            grad_wall,
+            send_compute + t2.elapsed().as_secs_f64(),
+        );
+        if round % spec.cfg.eval_every == 0 || round + 1 == steps {
+            trace.evals.push((round, x.clone()));
         }
         payload = frame.payload; // reuse the allocation next round
+
+        // --- checkpoint at the round boundary ------------------------------
+        if round >= live_from
+            && spec.ckpt_every > 0
+            && (round + 1) % spec.ckpt_every == 0
+        {
+            if let Some(dir) = spec.ckpt_dir.as_ref() {
+                let mut engine_blob = Vec::new();
+                engine.snapshot(&mut engine_blob);
+                let snap = Snapshot {
+                    worker: i as u16,
+                    algo: spec.algo_id,
+                    round,
+                    lr,
+                    g_inf,
+                    model: x.clone(),
+                    engine: engine_blob,
+                    trace: trace.clone(),
+                };
+                write_checkpoint(dir, &snap).expect("write checkpoint");
+                if let Some(log) = framelog.as_mut() {
+                    // The log's new epoch is "everything since this
+                    // snapshot": truncate, then re-log frames that were
+                    // received but not yet consumed (data frames parked for
+                    // future rounds and any early-delivered bootstrap).
+                    log.truncate().expect("truncate frame log");
+                    for f in pending.values() {
+                        log.append(f).expect("re-log pending frame");
+                    }
+                    for f in boot_pending.values() {
+                        log.append(f).expect("re-log pending bootstrap");
+                    }
+                }
+            }
+        }
+        round += 1;
     }
-    result.final_x = x;
-    result
+    NodeResult { worker: i, final_x: x, trace }
+}
+
+/// Learning rate in effect entering `round` (all scheduled decays at
+/// earlier rounds applied).
+fn lr_at(cfg: &TrainConfig, round: u64) -> f32 {
+    let mut lr = cfg.lr;
+    for k in 0..round {
+        if cfg.decay_at.contains(&k) {
+            lr *= cfg.decay_factor;
+        }
+    }
+    lr
+}
+
+/// The `(round, sender)` pairs a barrier is still waiting on.
+fn missing_pairs(round: u64, peers: &[usize], got: &[Frame]) -> Vec<(u64, usize)> {
+    peers
+        .iter()
+        .filter(|&&p| !got.iter().any(|f| f.sender as usize == p))
+        .map(|&p| (round, p))
+        .collect()
+}
+
+/// Shared sanity gate for every Data frame before it can reach an engine:
+/// same algorithm, same bit budget, and a sender that is actually a peer
+/// in the *frame's own* epoch (a fast peer may already be past an upcoming
+/// reconfiguration barrier). Applied on the live recv path, on frames
+/// parked during a bootstrap wait, and on crash-replay frames from the
+/// log — a corrupt or misrouted frame must die loudly, never be averaged.
+fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>) {
+    let from = f.sender as usize;
+    assert_eq!(f.algo, spec.algo_id, "worker {i}: cross-algorithm frame from {from}");
+    assert_eq!(f.bits, spec.wire_bits, "worker {i}: bit-budget mismatch from {from}");
+    let f_ep = epoch_at(spec.epochs, f.round);
+    let is_peer = match spec.scope {
+        CommScope::Neighbors => f_ep.adj[i].contains(&from),
+        CommScope::All => f_ep.active[from] && from != i,
+    };
+    assert!(
+        is_peer,
+        "worker {i}: round-{} frame from non-peer {from}",
+        f.round
+    );
+}
+
+/// Block until this worker's bootstrap frame for `round` arrives, parking
+/// any frames that overtake it (data frames keyed by `(round, sender)`,
+/// bootstrap frames for other rounds by round). The caller validates the
+/// returned frame's sender/precision.
+fn wait_for_bootstrap(
+    i: usize,
+    round: u64,
+    transport: &mut Box<dyn Transport>,
+    pending: &mut BTreeMap<(u64, usize), Frame>,
+    boot_pending: &mut BTreeMap<u64, Frame>,
+    mut framelog: Option<&mut FrameLog>,
+    spec: &NodeSpec<'_>,
+) -> Frame {
+    let wait_start = Instant::now();
+    loop {
+        let f = match transport.recv(spec.recv_timeout) {
+            Ok(f) => f,
+            Err(TransportError::Timeout) => panic!(
+                "worker {i} round {round}: timed out after {:.1?} waiting for the \
+                 round-{round} bootstrap frame",
+                wait_start.elapsed(),
+            ),
+            Err(e) => panic!("worker {i} round {round}: bootstrap recv failed: {e}"),
+        };
+        if let Some(log) = &mut framelog {
+            log.append(&f).expect("frame log append");
+        }
+        match f.kind {
+            FrameKind::Bootstrap if f.round == round => return f,
+            FrameKind::Bootstrap => {
+                boot_pending.insert(f.round, f);
+            }
+            FrameKind::Data => {
+                validate_data_frame(i, &f, spec);
+                let from = f.sender as usize;
+                assert!(
+                    f.round >= round,
+                    "worker {i}: pre-join round-{} frame from {from}",
+                    f.round
+                );
+                pending.insert((f.round, from), f);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::algorithms::ThetaPolicy;
+    use crate::elastic::MembershipPlan;
     use crate::quant::{Compression, QuantConfig};
 
     fn base_cfg(algorithm: Algorithm) -> TrainConfig {
@@ -475,6 +942,18 @@ mod tests {
 
     fn objective() -> Box<dyn Objective> {
         Box::new(crate::objectives::Quadratic::new(8, 1.0, 0.1, 4, 3))
+    }
+
+    fn elastic(spec: &str, ckpt_dir: Option<&str>) -> ClusterConfig {
+        ClusterConfig {
+            elastic: Some(ElasticConfig {
+                plan: MembershipPlan::parse(spec).unwrap(),
+                ckpt_every: 2,
+                ckpt_dir: ckpt_dir.map(PathBuf::from),
+                skip_bootstrap: false,
+            }),
+            ..ClusterConfig::default()
+        }
     }
 
     #[test]
@@ -536,6 +1015,53 @@ mod tests {
     }
 
     #[test]
+    fn refuses_crash_plan_without_ckpt_dir() {
+        let cfg = base_cfg(Algorithm::DPsgd);
+        assert!(ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            elastic("crash@3:1", None),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn refuses_churn_on_swap_refusing_engines() {
+        // moniqua-slack carries a derived (slack) matrix: joins/leaves are
+        // refused, crash-only plans are accepted.
+        let slack = || {
+            base_cfg(Algorithm::MoniquaSlack {
+                theta: ThetaPolicy::Constant(2.0),
+                quant: QuantConfig::stochastic(8),
+                gamma: 0.3,
+            })
+        };
+        assert!(ClusterTrainer::new(
+            slack(),
+            Topology::Ring(4),
+            objective(),
+            elastic("leave@3:1", Some("/tmp/moniqua-never-used")),
+        )
+        .is_err());
+        assert!(ClusterTrainer::new(
+            slack(),
+            Topology::Ring(4),
+            objective(),
+            elastic("crash@3:1", Some("/tmp/moniqua-never-used")),
+        )
+        .is_ok());
+        // DCD keeps per-neighbor replicas: same refusal.
+        assert!(ClusterTrainer::new(
+            base_cfg(Algorithm::Dcd { quant: QuantConfig::stochastic(8), range: 4.0 }),
+            Topology::Ring(4),
+            objective(),
+            elastic("leave@3:1", Some("/tmp/moniqua-never-used")),
+        )
+        .is_err());
+    }
+
+    #[test]
     fn mem_cluster_trains_and_reports() {
         let cfg = base_cfg(Algorithm::DPsgd);
         let mut t = ClusterTrainer::new(
@@ -550,5 +1076,38 @@ mod tests {
         assert!(t.frames_sent > 0);
         assert!(t.wire_bytes_sent as usize > report.total_bytes as usize);
         assert_eq!(report.final_params.len(), 8);
+    }
+
+    #[test]
+    fn membership_run_with_leave_and_rejoin() {
+        let dir = std::env::temp_dir()
+            .join(format!("moniqua-cluster-churn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = TrainConfig {
+            workers: 4,
+            steps: 10,
+            eval_every: 3,
+            algorithm: Algorithm::DPsgd,
+            ..TrainConfig::default()
+        };
+        let mut t = ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig {
+                elastic: Some(ElasticConfig {
+                    plan: MembershipPlan::parse("leave@3:2,join@7:2").unwrap(),
+                    ckpt_every: 0,
+                    ckpt_dir: Some(dir.clone()),
+                    skip_bootstrap: false,
+                }),
+                ..ClusterConfig::default()
+            },
+        )
+        .unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.trace.len(), 4); // steps 0, 3, 6, 9 (9 is also last)
+        assert!(report.final_params.iter().all(|v| v.is_finite()));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

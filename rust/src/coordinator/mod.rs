@@ -71,6 +71,15 @@ impl RoundLedger {
         }
     }
 
+    /// Re-point the pricing at a new cohort shape — an elastic
+    /// reconfiguration barrier ([`crate::elastic`]). Static-membership runs
+    /// never call this, so their pricing is bit-for-bit unchanged.
+    pub fn reconfigure(&mut self, n: usize, deg_sum: usize, deg_max: usize) {
+        self.n = n;
+        self.deg_sum = deg_sum;
+        self.deg_max = deg_max;
+    }
+
     /// Price one round's traffic and advance the simulated clock.
     pub fn charge(&mut self, stats: &CommStats, grad_time: f64, algo_wall: f64) {
         let comm_time = match (&mut self.net, stats.allreduce_bytes) {

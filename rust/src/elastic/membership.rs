@@ -1,0 +1,479 @@
+//! **Elastic membership**: a declarative plan of joins, leaves, and crashes
+//! that drives the cluster runtime through epochs of stable membership
+//! separated by reconfiguration barriers.
+//!
+//! The paper's machinery (Lemma 1 / Theorem 1) never needs a fixed worker
+//! set — it needs (a) a doubly-stochastic gossip matrix over whoever is
+//! currently present and (b) every pair of gossiping neighbors within the θ
+//! proximity bound. A [`MembershipPlan`] preserves exactly those two
+//! invariants:
+//!
+//! * the provisioned cluster has `n` **slots**; at any round a subset is
+//!   *active*. The gossip matrix of an epoch is the configured topology
+//!   family re-instantiated over the active cohort
+//!   ([`Topology::resized`]), embedded back into the n×n matrix with
+//!   inactive slots as isolated identity rows — still symmetric and doubly
+//!   stochastic, so every engine's math is unchanged;
+//! * a worker **joining** (or re-joining) first receives one full-precision
+//!   [`FrameKind::Bootstrap`](crate::transport::FrameKind::Bootstrap) frame
+//!   from its designated neighbor and adopts that model, which places it
+//!   inside the cohort's θ ball *before* any modulo-quantized frame reaches
+//!   it — without this the modulo decode is garbage
+//!   (`tests/elastic_equivalence.rs` demonstrates the corruption);
+//! * a **crash** is invisible to the rest of the cluster: the worker
+//!   restores its last [`Snapshot`](crate::elastic::snapshot::Snapshot) and
+//!   replays its [`FrameLog`](crate::elastic::snapshot::FrameLog).
+//!
+//! Spec syntax (the `churn=` config key): comma-separated events
+//! `kind@round:worker`, e.g. `churn=crash@12:2,leave@20:1,join@24:5`.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::topology::{CommMatrix, Topology};
+
+/// What happens to a worker at a round boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// The worker becomes active at `round` (first round it participates
+    /// in), after a bootstrap handshake.
+    Join,
+    /// The worker completes `round - 1` and departs cleanly.
+    Leave,
+    /// The worker loses all in-memory state at the start of `round` and
+    /// recovers from its last checkpoint + frame log. Membership and the
+    /// gossip matrix are unchanged.
+    Crash,
+}
+
+/// One scheduled membership event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub kind: ChurnKind,
+    pub round: u64,
+    pub worker: usize,
+}
+
+/// The full churn schedule of a run (possibly empty).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MembershipPlan {
+    /// Events sorted by (round, worker).
+    events: Vec<ChurnEvent>,
+}
+
+/// One stretch of rounds with a fixed active cohort, plus everything the
+/// workers need at its opening barrier.
+#[derive(Clone, Debug)]
+pub struct Epoch {
+    /// First round of the epoch.
+    pub start: u64,
+    /// Which of the n slots are active during the epoch.
+    pub active: Vec<bool>,
+    /// n-sized adjacency (inactive slots have no edges).
+    pub adj: Vec<Vec<usize>>,
+    /// n×n doubly-stochastic matrix (inactive slots are identity rows).
+    pub matrix: CommMatrix,
+    /// ρ of `matrix` restricted to the active cohort.
+    pub rho: f64,
+    /// `(joiner, bootstrapper)` pairs for workers activating at `start`:
+    /// the bootstrapper is the joiner's lowest-id active neighbor, and must
+    /// ship it one full-precision model frame before round `start` data.
+    pub joins: Vec<(usize, usize)>,
+}
+
+impl Epoch {
+    /// Number of active workers.
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Sum and max of active degrees (the [`RoundLedger`] pricing inputs).
+    ///
+    /// [`RoundLedger`]: crate::coordinator
+    pub fn degrees(&self) -> (usize, usize) {
+        let deg_sum = self.adj.iter().map(|a| a.len()).sum();
+        let deg_max = self.adj.iter().map(|a| a.len()).max().unwrap_or(0);
+        (deg_sum, deg_max)
+    }
+}
+
+impl MembershipPlan {
+    /// Parse the `churn=` spec: `kind@round:worker[,...]` with
+    /// `kind ∈ {join, leave, crash}`. An empty spec is the empty plan.
+    pub fn parse(spec: &str) -> Result<MembershipPlan> {
+        let mut events = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = part
+                .split_once('@')
+                .with_context(|| format!("churn event '{part}': expected kind@round:worker"))?;
+            let kind = match kind {
+                "join" => ChurnKind::Join,
+                "leave" => ChurnKind::Leave,
+                "crash" => ChurnKind::Crash,
+                other => bail!("unknown churn kind '{other}' (join|leave|crash)"),
+            };
+            let (round, worker) = rest
+                .split_once(':')
+                .with_context(|| format!("churn event '{part}': expected kind@round:worker"))?;
+            events.push(ChurnEvent {
+                kind,
+                round: round
+                    .parse()
+                    .with_context(|| format!("churn event '{part}': round"))?,
+                worker: worker
+                    .parse()
+                    .with_context(|| format!("churn event '{part}': worker"))?,
+            });
+        }
+        events.sort_by_key(|e| (e.round, e.worker));
+        Ok(MembershipPlan { events })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// True if the plan reconfigures membership (joins or leaves) — i.e.
+    /// needs matrix swaps; crashes alone do not.
+    pub fn reconfigures(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, ChurnKind::Join | ChurnKind::Leave))
+    }
+
+    pub fn has_crashes(&self) -> bool {
+        self.events.iter().any(|e| e.kind == ChurnKind::Crash)
+    }
+
+    /// Sorted crash rounds scheduled for `worker`.
+    pub fn crashes_for(&self, worker: usize) -> Vec<u64> {
+        self.events
+            .iter()
+            .filter(|e| e.kind == ChurnKind::Crash && e.worker == worker)
+            .map(|e| e.round)
+            .collect()
+    }
+
+    /// Founding membership: a slot whose *first* event is a Join starts
+    /// inactive (it is provisioned but waits off to the side).
+    pub fn initial_active(&self, n: usize) -> Vec<bool> {
+        let mut active = vec![true; n];
+        for w in 0..n {
+            if let Some(first) = self
+                .events
+                .iter()
+                .find(|e| e.worker == w && e.kind != ChurnKind::Crash)
+            {
+                if first.kind == ChurnKind::Join {
+                    active[w] = false;
+                }
+            }
+        }
+        active
+    }
+
+    /// Validate the plan against cluster shape and schedule, then compute
+    /// the epoch sequence. Checks: bounds, orderable per-worker histories
+    /// (inactive workers can only Join, active ones only Leave/Crash), a
+    /// never-empty cohort, at most one membership event per (round, worker),
+    /// and a bootstrappable neighbor for every joiner.
+    pub fn epochs(&self, base: &Topology, steps: u64) -> Result<Vec<Epoch>> {
+        let n = base.n();
+        for e in &self.events {
+            ensure!(e.worker < n, "churn worker {} out of range (n = {n})", e.worker);
+            ensure!(
+                e.round >= 1 && e.round < steps,
+                "churn round {} outside 1..{steps} (round 0 membership is the initial \
+                 cohort; use a plan without the worker instead)",
+                e.round
+            );
+        }
+        for pair in self.events.windows(2) {
+            ensure!(
+                (pair[0].round, pair[0].worker) != (pair[1].round, pair[1].worker),
+                "worker {} has two churn events at round {}",
+                pair[0].worker,
+                pair[0].round
+            );
+        }
+
+        let mut active = self.initial_active(n);
+        ensure!(
+            active.iter().any(|&a| a),
+            "the initial cohort is empty — every worker joins later"
+        );
+
+        let mut epochs = vec![self.make_epoch(base, 0, &active, &[])?];
+        let mut boundaries: Vec<u64> = self
+            .events
+            .iter()
+            .filter(|e| e.kind != ChurnKind::Crash)
+            .map(|e| e.round)
+            .collect();
+        boundaries.dedup();
+        for round in boundaries {
+            let mut joiners = Vec::new();
+            for e in self.events.iter().filter(|e| e.round == round) {
+                match e.kind {
+                    ChurnKind::Join => {
+                        ensure!(
+                            !active[e.worker],
+                            "worker {} joins at round {round} but is already active",
+                            e.worker
+                        );
+                        active[e.worker] = true;
+                        joiners.push(e.worker);
+                    }
+                    ChurnKind::Leave => {
+                        ensure!(
+                            active[e.worker],
+                            "worker {} leaves at round {round} but is not active",
+                            e.worker
+                        );
+                        active[e.worker] = false;
+                    }
+                    ChurnKind::Crash => {
+                        ensure!(
+                            active[e.worker],
+                            "worker {} crashes at round {round} but is not active",
+                            e.worker
+                        );
+                    }
+                }
+            }
+            ensure!(
+                active.iter().any(|&a| a),
+                "membership at round {round} leaves the cohort empty"
+            );
+            epochs.push(self.make_epoch(base, round, &active, &joiners)?);
+        }
+        // Crashes of inactive workers (validated per-epoch above only for
+        // boundary rounds): check against the epoch each crash lands in.
+        for e in self.events.iter().filter(|e| e.kind == ChurnKind::Crash) {
+            let ep = epoch_at(&epochs, e.round);
+            ensure!(
+                ep.active[e.worker],
+                "worker {} crashes at round {} but is inactive then",
+                e.worker,
+                e.round
+            );
+        }
+        Ok(epochs)
+    }
+
+    fn make_epoch(
+        &self,
+        base: &Topology,
+        start: u64,
+        active: &[bool],
+        joiners: &[usize],
+    ) -> Result<Epoch> {
+        let n = base.n();
+        let slots: Vec<usize> =
+            (0..n).filter(|&w| active[w]).collect();
+        let shape = base.resized(slots.len())?;
+        ensure!(
+            shape.is_connected(),
+            "membership at round {start} disconnects the cohort ({shape:?})"
+        );
+        // Embed the m-worker shape into the n slots (ascending id order) —
+        // inactive slots end up isolated (identity rows in the matrix).
+        let small = shape.adjacency();
+        let mut adj = vec![Vec::new(); n];
+        for (si, nbrs) in small.iter().enumerate() {
+            adj[slots[si]] = nbrs.iter().map(|&sj| slots[sj]).collect();
+        }
+        let matrix = CommMatrix::metropolis(&adj);
+        let rho = if slots.len() == n {
+            matrix.rho()
+        } else {
+            // ρ of the active block: the embedded identity rows each add a
+            // λ = 1 eigenvalue that is *not* a consensus direction of the
+            // cohort, so measure the resized shape directly.
+            shape.comm_matrix().rho()
+        };
+        let mut joins = Vec::new();
+        for &j in joiners {
+            let boot = adj[j]
+                .iter()
+                .copied()
+                .filter(|&b| !joiners.contains(&b))
+                .min()
+                .with_context(|| {
+                    format!(
+                        "joiner {j} at round {start} has no established active neighbor \
+                         to bootstrap from"
+                    )
+                })?;
+            joins.push((j, boot));
+        }
+        Ok(Epoch { start, active: active.to_vec(), adj, matrix, rho, joins })
+    }
+}
+
+/// Index of the epoch covering `round` (epochs are sorted by `start`, the
+/// first starts at 0).
+pub fn epoch_index(epochs: &[Epoch], round: u64) -> usize {
+    match epochs.binary_search_by_key(&round, |e| e.start) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    }
+}
+
+/// The epoch covering `round`.
+pub fn epoch_at(epochs: &[Epoch], round: u64) -> &Epoch {
+    &epochs[epoch_index(epochs, round)]
+}
+
+/// Elastic knobs of a cluster run ([`ClusterConfig`]'s `elastic` field).
+///
+/// [`ClusterConfig`]: crate::coordinator::cluster::ClusterConfig
+#[derive(Clone, Debug, Default)]
+pub struct ElasticConfig {
+    pub plan: MembershipPlan,
+    /// Write a checkpoint after every `ckpt_every` completed rounds
+    /// (0 = never; crashes then recover from genesis by full replay).
+    pub ckpt_every: u64,
+    /// Durability directory for checkpoints + frame logs. Required whenever
+    /// the plan contains crashes.
+    pub ckpt_dir: Option<PathBuf>,
+    /// TESTING ONLY: joiners consume but ignore their bootstrap frame —
+    /// demonstrates the θ-proximity corruption the bootstrap exists to
+    /// prevent (`tests/elastic_equivalence.rs`).
+    pub skip_bootstrap: bool,
+}
+
+impl ElasticConfig {
+    /// A plan with checkpoints under `dir` every `every` rounds.
+    pub fn with_checkpoints(plan: MembershipPlan, every: u64, dir: PathBuf) -> Self {
+        ElasticConfig { plan, ckpt_every: every, ckpt_dir: Some(dir), skip_bootstrap: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_kinds_and_sorts() {
+        let p = MembershipPlan::parse("leave@20:1, crash@12:2,join@24:5").unwrap();
+        let kinds: Vec<(ChurnKind, u64, usize)> =
+            p.events().iter().map(|e| (e.kind, e.round, e.worker)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (ChurnKind::Crash, 12, 2),
+                (ChurnKind::Leave, 20, 1),
+                (ChurnKind::Join, 24, 5),
+            ]
+        );
+        assert!(p.reconfigures());
+        assert!(p.has_crashes());
+        assert_eq!(p.crashes_for(2), vec![12]);
+        assert!(p.crashes_for(1).is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage_specs() {
+        assert!(MembershipPlan::parse("evaporate@3:1").is_err());
+        assert!(MembershipPlan::parse("join@x:1").is_err());
+        assert!(MembershipPlan::parse("join@3").is_err());
+        assert!(MembershipPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn initial_active_excludes_future_joiners() {
+        let p = MembershipPlan::parse("join@5:2,leave@9:2,crash@3:0").unwrap();
+        assert_eq!(p.initial_active(4), vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn epochs_partition_the_run() {
+        let topo = Topology::Ring(5);
+        let p = MembershipPlan::parse("leave@4:1,join@8:1").unwrap();
+        let epochs = p.epochs(&topo, 12).unwrap();
+        assert_eq!(epochs.len(), 3);
+        assert_eq!(epochs[0].start, 0);
+        assert_eq!(epochs[0].active_count(), 5);
+        assert_eq!(epochs[1].start, 4);
+        assert_eq!(epochs[1].active_count(), 4);
+        assert!(epochs[1].adj[1].is_empty(), "departed slot isolated");
+        assert_eq!(epochs[2].start, 8);
+        assert_eq!(epochs[2].active_count(), 5);
+        assert_eq!(epochs[2].joins.len(), 1);
+        let (joiner, boot) = epochs[2].joins[0];
+        assert_eq!(joiner, 1);
+        assert!(epochs[2].adj[1].contains(&boot));
+        // lookups
+        assert_eq!(epoch_at(&epochs, 0).start, 0);
+        assert_eq!(epoch_at(&epochs, 3).start, 0);
+        assert_eq!(epoch_at(&epochs, 4).start, 4);
+        assert_eq!(epoch_at(&epochs, 11).start, 8);
+    }
+
+    #[test]
+    fn embedded_matrix_is_doubly_stochastic_with_identity_rows() {
+        let topo = Topology::Ring(6);
+        let p = MembershipPlan::parse("leave@2:3").unwrap();
+        let epochs = p.epochs(&topo, 10).unwrap();
+        let m = &epochs[1].matrix;
+        assert_eq!(m.n(), 6);
+        assert_eq!(m.weight(3, 3), 1.0);
+        assert!(m.neighbors[3].is_empty());
+        // the active block is the ring(5) metropolis matrix over {0,1,2,4,5}
+        assert_eq!(epochs[1].adj[2], vec![1, 4]);
+        let (deg_sum, deg_max) = epochs[1].degrees();
+        assert_eq!(deg_sum, 10);
+        assert_eq!(deg_max, 2);
+        assert!(epochs[1].rho < 1.0);
+    }
+
+    #[test]
+    fn validation_catches_impossible_histories() {
+        let topo = Topology::Ring(4);
+        // join of an already-active worker
+        assert!(MembershipPlan::parse("join@3:1").unwrap().epochs(&topo, 10).is_err());
+        // leave of a never-joined worker
+        assert!(MembershipPlan::parse("join@3:1,leave@5:1")
+            .unwrap()
+            .epochs(&topo, 10)
+            .is_err());
+        // crash of an inactive worker
+        assert!(MembershipPlan::parse("leave@2:1,crash@5:1")
+            .unwrap()
+            .epochs(&topo, 10)
+            .is_err());
+        // out-of-range round / worker
+        assert!(MembershipPlan::parse("leave@20:1").unwrap().epochs(&topo, 10).is_err());
+        assert!(MembershipPlan::parse("leave@2:9").unwrap().epochs(&topo, 10).is_err());
+        // a valid leave+rejoin of the same worker is fine
+        assert!(MembershipPlan::parse("leave@2:1,join@5:1")
+            .unwrap()
+            .epochs(&topo, 10)
+            .is_ok());
+        // torus cannot resize
+        assert!(MembershipPlan::parse("leave@2:1")
+            .unwrap()
+            .epochs(&Topology::Torus(2, 2), 10)
+            .is_err());
+        // crash-only plans never resize, so torus is fine there
+        assert!(MembershipPlan::parse("crash@2:1")
+            .unwrap()
+            .epochs(&Topology::Torus(2, 2), 10)
+            .is_ok());
+    }
+
+    #[test]
+    fn all_joiners_need_an_established_bootstrapper() {
+        // ring(2): worker 1 leaves, later rejoins — bootstrapper must be 0.
+        let topo = Topology::Ring(2);
+        let p = MembershipPlan::parse("leave@2:1,join@4:1").unwrap();
+        let epochs = p.epochs(&topo, 8).unwrap();
+        assert_eq!(epochs[2].joins, vec![(1, 0)]);
+    }
+}

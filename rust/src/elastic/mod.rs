@@ -1,0 +1,31 @@
+//! Elastic membership + checkpoint/recovery: the subsystem that lets the
+//! cluster runtime survive crashes bitwise-exactly and grow/shrink its
+//! cohort mid-run.
+//!
+//! * [`snapshot`] — the durable formats: the versioned, checksummed
+//!   [`Snapshot`] (model + per-algorithm engine state + node ledger + round
+//!   cursors, same magic/version/FNV discipline as the wire frame), the
+//!   per-worker [`FrameLog`] write-ahead log, and the byte-level helpers
+//!   every [`SyncAlgorithm::snapshot`] implementation encodes with.
+//! * [`membership`] — the [`MembershipPlan`] (`churn=join@r:w,...`), epoch
+//!   computation with per-epoch gossip matrices over the active cohort, and
+//!   the bootstrap designation rule for joiners.
+//!
+//! The consumer is [`coordinator::cluster::ClusterTrainer`]
+//! (`runtime=cluster churn=... ckpt_every=K ckpt_dir=...`); the paper-side
+//! argument for why a joiner must receive one full-precision frame before
+//! quantized traffic is laid out in `rust/DESIGN.md` §Elasticity.
+//!
+//! [`Snapshot`]: snapshot::Snapshot
+//! [`FrameLog`]: snapshot::FrameLog
+//! [`MembershipPlan`]: membership::MembershipPlan
+//! [`SyncAlgorithm::snapshot`]: crate::algorithms::SyncAlgorithm::snapshot
+//! [`coordinator::cluster::ClusterTrainer`]: crate::coordinator::cluster::ClusterTrainer
+
+pub mod membership;
+pub mod snapshot;
+
+pub use membership::{
+    epoch_at, epoch_index, ChurnEvent, ChurnKind, ElasticConfig, Epoch, MembershipPlan,
+};
+pub use snapshot::{FrameLog, NodeTrace, Snapshot, SnapshotError};

@@ -1,0 +1,759 @@
+//! Versioned, checksummed **snapshots** — the durability format of the
+//! elastic runtime.
+//!
+//! A [`Snapshot`] is everything one worker needs to come back from the dead
+//! bitwise-exactly: its model, its engine's persistent state (compressor
+//! replicas, error-feedback accumulators, variance-reduction history — the
+//! per-algorithm blob written by [`SyncAlgorithm::snapshot`]), its node-local
+//! ledger contribution ([`NodeTrace`]: per-round losses/θ/traffic/wall
+//! times, eval snapshots, wire counters), the training cursors (round, lr,
+//! g∞), all encoded with the same magic/version/FNV discipline as
+//! [`transport::Frame`](crate::transport::Frame):
+//!
+//! ```text
+//!  offset  size  field
+//!  ------  ----  -----------------------------------------------------
+//!       0     4  magic        b"MQSS"
+//!       4     2  version      snapshot-format version (currently 1)
+//!       6     2  worker       worker id the snapshot belongs to
+//!       8     2  algo         algorithm wire id (cross-algorithm restores
+//!                             are refused before any state is touched)
+//!      10     8  round        last round this worker fully completed
+//!      18     4  lr           learning rate after `round` (f32 bits)
+//!      22     8  g_inf        node-local gradient ∞-norm running max
+//!      30     …  model        u32 length + f32 little-endian words
+//!       …     …  engine       u32 length + per-algorithm state blob
+//!       …     …  trace        [`NodeTrace`] section
+//!    end-8     8  checksum    FNV-1a over every preceding byte
+//! ```
+//!
+//! Decoding is total: malformed input maps to a typed [`SnapshotError`],
+//! fuzzed by `tests/snapshot_roundtrip.rs` exactly like the frame codec.
+//!
+//! The module also owns the [`FrameLog`] — the receive-side write-ahead log
+//! that makes crash recovery *exact*: every frame a worker consumes (or
+//! parks) after its last checkpoint is appended to the log, so a recovering
+//! worker can replay the rounds between its snapshot and the crash against
+//! the very bytes its peers shipped, without asking anyone to retransmit.
+//!
+//! [`SyncAlgorithm::snapshot`]: crate::algorithms::SyncAlgorithm::snapshot
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::algorithms::CommStats;
+use crate::quant::hash::fnv1a_bytes;
+use crate::transport::{Frame, FrameError};
+
+/// Leading magic of every snapshot.
+pub const MAGIC: [u8; 4] = *b"MQSS";
+/// Current snapshot-format version.
+pub const VERSION: u16 = 1;
+/// Fixed header bytes before the variable sections.
+pub const HEADER_LEN: usize = 30;
+/// Upper bound on any length prefix inside a snapshot (1 GiB of f32s) —
+/// rejects absurd lengths before allocation, like `Frame::MAX_PAYLOAD`.
+pub const MAX_SECTION: usize = 1 << 28;
+
+/// Typed decode/restore failures. Mirrors
+/// [`FrameError`](crate::transport::FrameError): every variant carries
+/// enough context to debug a corrupt checkpoint without a hex dump.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SnapshotError {
+    /// Fewer bytes than a section or the fixed header needs.
+    Truncated { expected: usize, got: usize },
+    /// Bytes left over after the last section — framing disagreement.
+    TrailingBytes { expected: usize, got: usize },
+    /// First four bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unknown snapshot-format version.
+    BadVersion(u16),
+    /// A length prefix exceeds [`MAX_SECTION`].
+    Oversize(usize),
+    /// FNV-1a over the body does not match the checksum field.
+    ChecksumMismatch { expected: u64, got: u64 },
+    /// The snapshot was written by a different algorithm (wire id).
+    AlgoMismatch { expected: u16, got: u16 },
+    /// Engine-state blob disagrees with the engine's shape (worker count,
+    /// dimension) or carries an invalid tag.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Truncated { expected, got } => {
+                write!(f, "truncated snapshot: need {expected} bytes, got {got}")
+            }
+            SnapshotError::TrailingBytes { expected, got } => {
+                write!(f, "snapshot length mismatch: sections end at {expected}, got {got}")
+            }
+            SnapshotError::BadMagic(m) => write!(f, "bad snapshot magic {m:02x?}"),
+            SnapshotError::BadVersion(v) => write!(f, "unsupported snapshot version {v}"),
+            SnapshotError::Oversize(n) => {
+                write!(f, "section length {n} exceeds MAX_SECTION")
+            }
+            SnapshotError::ChecksumMismatch { expected, got } => write!(
+                f,
+                "snapshot checksum mismatch: stored {expected:#018x}, computed {got:#018x}"
+            ),
+            SnapshotError::AlgoMismatch { expected, got } => write!(
+                f,
+                "snapshot belongs to algorithm id {got}, restore target is id {expected}"
+            ),
+            SnapshotError::Malformed(what) => write!(f, "malformed snapshot state: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+// ---------------------------------------------------------------- encoding
+
+/// Append little-endian scalars to a state blob. Free functions (not a
+/// writer struct) so engine `snapshot` impls stay one-liners.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Length-prefixed f32 vector (bit-exact: values travel as raw bits).
+pub fn put_f32_slice(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    out.reserve(4 * xs.len());
+    for &x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Length-prefixed byte section.
+pub fn put_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+/// Cursor over a state blob with typed truncation errors. Engine `restore`
+/// impls take everything through this so no length arithmetic is ever
+/// duplicated.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        if self.buf.len() - self.pos < n {
+            return Err(SnapshotError::Truncated {
+                expected: self.pos + n,
+                got: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn take_u16(&mut self) -> Result<u16, SnapshotError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn take_u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn take_u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn take_f32(&mut self) -> Result<f32, SnapshotError> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+    pub fn take_f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    /// Length-prefixed f32 vector written by [`put_f32_slice`].
+    pub fn take_f32_vec(&mut self) -> Result<Vec<f32>, SnapshotError> {
+        let n = self.take_u32()? as usize;
+        if n > MAX_SECTION / 4 {
+            return Err(SnapshotError::Oversize(n));
+        }
+        let bytes = self.take(4 * n)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+
+    /// As [`Self::take_f32_vec`] but into an existing buffer whose length
+    /// must match (engine state with a fixed shape).
+    pub fn take_f32_into(&mut self, out: &mut [f32]) -> Result<(), SnapshotError> {
+        let n = self.take_u32()? as usize;
+        if n != out.len() {
+            return Err(SnapshotError::Malformed("f32 section length != engine shape"));
+        }
+        let bytes = self.take(4 * n)?;
+        for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *o = f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(())
+    }
+
+    /// Length-prefixed byte section written by [`put_bytes`].
+    pub fn take_bytes(&mut self) -> Result<&'a [u8], SnapshotError> {
+        let n = self.take_u32()? as usize;
+        if n > MAX_SECTION {
+            return Err(SnapshotError::Oversize(n));
+        }
+        self.take(n)
+    }
+
+    /// Assert the blob is fully consumed — trailing garbage is corruption.
+    pub fn finish(self) -> Result<(), SnapshotError> {
+        if self.pos != self.buf.len() {
+            return Err(SnapshotError::TrailingBytes {
+                expected: self.pos,
+                got: self.buf.len(),
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- trace
+
+/// One worker's accumulated contribution to the run's
+/// [`RoundLedger`](crate::coordinator) — per-round losses, θ, traffic
+/// stats, wall times, eval snapshots, and wire counters — indexed by
+/// absolute round starting at `start_round` (a joiner's trace starts at its
+/// join round). Carried inside every [`Snapshot`] so a recovered worker
+/// reports exactly what the uninterrupted worker would have.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeTrace {
+    /// First round this worker participated in (0 for founding members).
+    pub start_round: u64,
+    /// Absolute round of each recorded entry, strictly increasing but not
+    /// necessarily contiguous (a leave+rejoin worker has a gap).
+    pub rounds: Vec<u64>,
+    pub losses: Vec<f64>,
+    pub thetas: Vec<Option<f64>>,
+    pub stats: Vec<CommStats>,
+    pub grad_wall: Vec<f64>,
+    pub algo_wall: Vec<f64>,
+    /// `(round, model)` eval snapshots (rounds where the trainer traces).
+    pub evals: Vec<(u64, Vec<f32>)>,
+    /// Frames actually shipped through the transport.
+    pub frames_sent: u64,
+    /// Measured wire bytes (header + payload) shipped.
+    pub bytes_sent: u64,
+}
+
+impl NodeTrace {
+    pub fn starting_at(start_round: u64) -> Self {
+        NodeTrace { start_round, ..NodeTrace::default() }
+    }
+
+    /// Rounds recorded so far.
+    pub fn len(&self) -> usize {
+        self.losses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.losses.is_empty()
+    }
+
+    /// Index of an absolute round in the per-round vectors.
+    fn idx(&self, round: u64) -> Option<usize> {
+        self.rounds.binary_search(&round).ok()
+    }
+
+    pub fn loss_at(&self, round: u64) -> Option<f64> {
+        self.idx(round).map(|i| self.losses[i])
+    }
+
+    pub fn theta_at(&self, round: u64) -> Option<Option<f64>> {
+        self.idx(round).map(|i| self.thetas[i])
+    }
+
+    pub fn stats_at(&self, round: u64) -> Option<CommStats> {
+        self.idx(round).map(|i| self.stats[i])
+    }
+
+    pub fn grad_wall_at(&self, round: u64) -> Option<f64> {
+        self.idx(round).map(|i| self.grad_wall[i])
+    }
+
+    pub fn algo_wall_at(&self, round: u64) -> Option<f64> {
+        self.idx(round).map(|i| self.algo_wall[i])
+    }
+
+    /// Eval snapshot recorded at `round`, if any.
+    pub fn eval_at(&self, round: u64) -> Option<&[f32]> {
+        self.evals
+            .iter()
+            .find(|(r, _)| *r == round)
+            .map(|(_, x)| x.as_slice())
+    }
+
+    /// Record one completed round (must be called in strictly increasing
+    /// round order; gaps are fine — a rejoin resumes at a later round).
+    #[allow(clippy::too_many_arguments)]
+    pub fn push_round(
+        &mut self,
+        round: u64,
+        loss: f64,
+        theta: Option<f64>,
+        stats: CommStats,
+        grad_wall: f64,
+        algo_wall: f64,
+    ) {
+        debug_assert!(match self.rounds.last() {
+            Some(&last) => last < round,
+            None => true,
+        });
+        self.rounds.push(round);
+        self.losses.push(loss);
+        self.thetas.push(theta);
+        self.stats.push(stats);
+        self.grad_wall.push(grad_wall);
+        self.algo_wall.push(algo_wall);
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.start_round);
+        put_u32(out, self.len() as u32);
+        for i in 0..self.len() {
+            put_u64(out, self.rounds[i]);
+            put_f64(out, self.losses[i]);
+            match self.thetas[i] {
+                None => put_u8(out, 0),
+                Some(t) => {
+                    put_u8(out, 1);
+                    put_f64(out, t);
+                }
+            }
+            let s = &self.stats[i];
+            put_u64(out, s.bytes_per_msg as u64);
+            put_u64(out, s.messages);
+            match s.allreduce_bytes {
+                None => put_u8(out, 0),
+                Some(b) => {
+                    put_u8(out, 1);
+                    put_u64(out, b as u64);
+                }
+            }
+            put_u32(out, s.extra_local_passes);
+            put_f64(out, self.grad_wall[i]);
+            put_f64(out, self.algo_wall[i]);
+        }
+        put_u32(out, self.evals.len() as u32);
+        for (round, x) in &self.evals {
+            put_u64(out, *round);
+            put_f32_slice(out, x);
+        }
+        put_u64(out, self.frames_sent);
+        put_u64(out, self.bytes_sent);
+    }
+
+    fn decode_from(r: &mut Reader<'_>) -> Result<NodeTrace, SnapshotError> {
+        let start_round = r.take_u64()?;
+        let rounds = r.take_u32()? as usize;
+        if rounds > MAX_SECTION {
+            return Err(SnapshotError::Oversize(rounds));
+        }
+        let mut t = NodeTrace::starting_at(start_round);
+        let mut prev: Option<u64> = None;
+        for _ in 0..rounds {
+            let round = r.take_u64()?;
+            if prev.is_some() && prev >= Some(round) {
+                return Err(SnapshotError::Malformed("trace rounds not increasing"));
+            }
+            prev = Some(round);
+            let loss = r.take_f64()?;
+            let theta = match r.take_u8()? {
+                0 => None,
+                1 => Some(r.take_f64()?),
+                _ => return Err(SnapshotError::Malformed("theta tag")),
+            };
+            let bytes_per_msg = r.take_u64()? as usize;
+            let messages = r.take_u64()?;
+            let allreduce_bytes = match r.take_u8()? {
+                0 => None,
+                1 => Some(r.take_u64()? as usize),
+                _ => return Err(SnapshotError::Malformed("allreduce tag")),
+            };
+            let extra_local_passes = r.take_u32()?;
+            let grad_wall = r.take_f64()?;
+            let algo_wall = r.take_f64()?;
+            t.push_round(
+                round,
+                loss,
+                theta,
+                CommStats { bytes_per_msg, messages, allreduce_bytes, extra_local_passes },
+                grad_wall,
+                algo_wall,
+            );
+        }
+        let evals = r.take_u32()? as usize;
+        if evals > MAX_SECTION {
+            return Err(SnapshotError::Oversize(evals));
+        }
+        for _ in 0..evals {
+            let round = r.take_u64()?;
+            let x = r.take_f32_vec()?;
+            t.evals.push((round, x));
+        }
+        t.frames_sent = r.take_u64()?;
+        t.bytes_sent = r.take_u64()?;
+        Ok(t)
+    }
+}
+
+// ---------------------------------------------------------------- snapshot
+
+/// One worker's full recoverable state at a round boundary (module docs
+/// have the wire diagram).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub worker: u16,
+    /// Algorithm wire id ([`algo_wire_id`](crate::transport::algo_wire_id)).
+    pub algo: u16,
+    /// Last round this worker fully completed (send + recv + trace).
+    pub round: u64,
+    /// Learning rate in effect *after* `round` (decays already applied).
+    pub lr: f32,
+    /// Node-local gradient ∞-norm running max.
+    pub g_inf: f64,
+    /// The model at the end of `round`.
+    pub model: Vec<f32>,
+    /// Per-algorithm persistent state ([`SyncAlgorithm::snapshot`]).
+    ///
+    /// [`SyncAlgorithm::snapshot`]: crate::algorithms::SyncAlgorithm::snapshot
+    pub engine: Vec<u8>,
+    /// The worker's ledger contribution up to and including `round`.
+    pub trace: NodeTrace,
+}
+
+impl Snapshot {
+    /// Serialize into a fresh checksummed buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            HEADER_LEN + 8 + 4 * self.model.len() + self.engine.len() + 64,
+        );
+        out.extend_from_slice(&MAGIC);
+        put_u16(&mut out, VERSION);
+        put_u16(&mut out, self.worker);
+        put_u16(&mut out, self.algo);
+        put_u64(&mut out, self.round);
+        put_f32(&mut out, self.lr);
+        put_f64(&mut out, self.g_inf);
+        put_f32_slice(&mut out, &self.model);
+        put_bytes(&mut out, &self.engine);
+        self.trace.encode_into(&mut out);
+        let h = fnv1a_bytes(&out);
+        put_u64(&mut out, h);
+        out
+    }
+
+    /// Total decode: every malformed input maps to a typed
+    /// [`SnapshotError`] — no panics, no partial state.
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot, SnapshotError> {
+        if bytes.len() < HEADER_LEN + 8 {
+            return Err(SnapshotError::Truncated {
+                expected: HEADER_LEN + 8,
+                got: bytes.len(),
+            });
+        }
+        if bytes[0..4] != MAGIC {
+            return Err(SnapshotError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let stored =
+            u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv1a_bytes(body);
+        if stored != computed {
+            return Err(SnapshotError::ChecksumMismatch {
+                expected: stored,
+                got: computed,
+            });
+        }
+        let mut r = Reader::new(&body[4..]);
+        let version = r.take_u16()?;
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let worker = r.take_u16()?;
+        let algo = r.take_u16()?;
+        let round = r.take_u64()?;
+        let lr = r.take_f32()?;
+        let g_inf = r.take_f64()?;
+        let model = r.take_f32_vec()?;
+        let engine = r.take_bytes()?.to_vec();
+        let trace = NodeTrace::decode_from(&mut r)?;
+        r.finish()?;
+        Ok(Snapshot { worker, algo, round, lr, g_inf, model, engine, trace })
+    }
+}
+
+// ---------------------------------------------------------------- storage
+
+/// Checkpoint file for worker `i` inside `dir`.
+pub fn ckpt_path(dir: &Path, worker: usize) -> PathBuf {
+    dir.join(format!("ckpt_w{worker}.mqss"))
+}
+
+/// Frame-log file for worker `i` inside `dir`.
+pub fn log_path(dir: &Path, worker: usize) -> PathBuf {
+    dir.join(format!("frames_w{worker}.mqfl"))
+}
+
+/// Write a snapshot atomically (tmp file + rename): a crash mid-write can
+/// never leave a torn checkpoint, only the previous one.
+pub fn write_checkpoint(dir: &Path, snap: &Snapshot) -> std::io::Result<()> {
+    fs::create_dir_all(dir)?;
+    let path = ckpt_path(dir, snap.worker as usize);
+    let tmp = path.with_extension("mqss.tmp");
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&snap.encode())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, &path)
+}
+
+/// Load worker `i`'s checkpoint. `Ok(None)` when none was ever written
+/// (recovery restarts from genesis); decode failures are real errors — a
+/// corrupt checkpoint must fail the run loudly, not silently re-init.
+pub fn load_checkpoint(
+    dir: &Path,
+    worker: usize,
+) -> Result<Option<Snapshot>, SnapshotError> {
+    let path = ckpt_path(dir, worker);
+    let bytes = match fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(SnapshotError::Malformed(match e.kind() {
+                std::io::ErrorKind::PermissionDenied => "checkpoint unreadable",
+                _ => "checkpoint io error",
+            }))
+        }
+    };
+    Snapshot::decode(&bytes).map(Some)
+}
+
+/// Receive-side write-ahead log: length-prefixed encoded frames, truncated
+/// at every checkpoint (after re-appending still-pending future frames, so
+/// the invariant *log = everything received since the snapshot* holds).
+pub struct FrameLog {
+    path: PathBuf,
+    file: fs::File,
+}
+
+impl FrameLog {
+    /// Open (creating/truncating) worker `i`'s log under `dir`.
+    pub fn create(dir: &Path, worker: usize) -> std::io::Result<FrameLog> {
+        fs::create_dir_all(dir)?;
+        let path = log_path(dir, worker);
+        let file = fs::File::create(&path)?;
+        Ok(FrameLog { path, file })
+    }
+
+    /// Append one frame (u32 length + the frame's own checksummed wire
+    /// bytes — corruption detection comes for free from the frame codec).
+    pub fn append(&mut self, frame: &Frame) -> std::io::Result<()> {
+        let bytes = frame.encode();
+        self.file.write_all(&(bytes.len() as u32).to_le_bytes())?;
+        self.file.write_all(&bytes)
+    }
+
+    /// Drop everything logged so far (called right after a checkpoint is
+    /// durably on disk).
+    pub fn truncate(&mut self) -> std::io::Result<()> {
+        self.file = fs::File::create(&self.path)?;
+        Ok(())
+    }
+
+    /// Read a log back into frames. A trailing partial record (torn final
+    /// write during the crash) is ignored; a corrupt *complete* record is a
+    /// frame-codec error.
+    pub fn read_all(dir: &Path, worker: usize) -> Result<Vec<Frame>, FrameError> {
+        let bytes = match fs::read(log_path(dir, worker)) {
+            Ok(b) => b,
+            Err(_) => return Ok(Vec::new()),
+        };
+        let mut frames = Vec::new();
+        let mut pos = 0usize;
+        while bytes.len() - pos >= 4 {
+            let len =
+                u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            if bytes.len() - pos - 4 < len {
+                break; // torn tail
+            }
+            frames.push(Frame::decode(&bytes[pos + 4..pos + 4 + len])?);
+            pos += 4 + len;
+        }
+        Ok(frames)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::FrameKind;
+
+    fn sample() -> Snapshot {
+        let mut trace = NodeTrace::starting_at(0);
+        for k in 0..3u64 {
+            trace.push_round(
+                k,
+                0.5 + k as f64,
+                if k == 1 { Some(2.0) } else { None },
+                CommStats {
+                    bytes_per_msg: 24 * (k as usize + 1),
+                    messages: 8,
+                    allreduce_bytes: if k == 2 { Some(96) } else { None },
+                    extra_local_passes: 1,
+                },
+                1e-3,
+                2e-4,
+            );
+        }
+        trace.evals.push((0, vec![1.0, -2.5]));
+        trace.frames_sent = 24;
+        trace.bytes_sent = 1234;
+        Snapshot {
+            worker: 3,
+            algo: 4,
+            round: 2,
+            lr: 0.05,
+            g_inf: 1.75,
+            model: vec![0.25, -1.5, f32::MIN_POSITIVE, 0.0],
+            engine: vec![9, 8, 7],
+            trace,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let s = sample();
+        let bytes = s.encode();
+        let t = Snapshot::decode(&bytes).unwrap();
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    fn every_truncation_is_typed() {
+        let bytes = sample().encode();
+        for cut in 0..bytes.len() {
+            match Snapshot::decode(&bytes[..cut]) {
+                Err(
+                    SnapshotError::Truncated { .. }
+                    | SnapshotError::ChecksumMismatch { .. }
+                    | SnapshotError::Oversize(_),
+                ) => {}
+                other => panic!("cut={cut}: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let good = sample().encode();
+        for pos in [0usize, 4, 6, 11, 40, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[pos] ^= 0x10;
+            assert!(Snapshot::decode(&bad).is_err(), "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn trace_lookup_by_absolute_round() {
+        let mut t = NodeTrace::starting_at(10);
+        t.push_round(10, 1.0, None, CommStats::default(), 0.0, 0.0);
+        t.push_round(11, 2.0, Some(0.5), CommStats::default(), 0.0, 0.0);
+        assert_eq!(t.loss_at(10), Some(1.0));
+        assert_eq!(t.loss_at(11), Some(2.0));
+        assert_eq!(t.loss_at(9), None);
+        assert_eq!(t.loss_at(12), None);
+        assert_eq!(t.theta_at(11), Some(Some(0.5)));
+    }
+
+    #[test]
+    fn checkpoint_store_roundtrip_and_genesis() {
+        let dir = std::env::temp_dir()
+            .join(format!("moniqua-snap-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        assert_eq!(load_checkpoint(&dir, 0).unwrap(), None);
+        let s = sample();
+        write_checkpoint(&dir, &s).unwrap();
+        assert_eq!(load_checkpoint(&dir, 3).unwrap(), Some(s));
+        // another worker's slot is still genesis
+        assert_eq!(load_checkpoint(&dir, 1).unwrap(), None);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn frame_log_roundtrip_and_torn_tail() {
+        let dir = std::env::temp_dir()
+            .join(format!("moniqua-framelog-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut log = FrameLog::create(&dir, 2).unwrap();
+        let mk = |round: u64, sender: u16| Frame {
+            round,
+            sender,
+            algo: 4,
+            bits: 8,
+            kind: FrameKind::Data,
+            theta: 1.0,
+            payload: vec![sender as u8; 5],
+        };
+        log.append(&mk(0, 1)).unwrap();
+        log.append(&mk(1, 0)).unwrap();
+        drop(log);
+        let frames = FrameLog::read_all(&dir, 2).unwrap();
+        assert_eq!(frames.len(), 2);
+        assert_eq!((frames[0].round, frames[0].sender), (0, 1));
+        // torn tail: append garbage length prefix + partial bytes
+        {
+            let mut f = fs::OpenOptions::new()
+                .append(true)
+                .open(log_path(&dir, 2))
+                .unwrap();
+            f.write_all(&[200, 0, 0, 0, 1, 2, 3]).unwrap();
+        }
+        let frames = FrameLog::read_all(&dir, 2).unwrap();
+        assert_eq!(frames.len(), 2, "torn tail ignored");
+        // truncate drops everything
+        let mut log = FrameLog::create(&dir, 2).unwrap();
+        log.truncate().unwrap();
+        drop(log);
+        assert!(FrameLog::read_all(&dir, 2).unwrap().is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_log_is_empty() {
+        let dir = std::env::temp_dir().join("moniqua-framelog-missing");
+        assert!(FrameLog::read_all(&dir, 9).unwrap().is_empty());
+    }
+}

@@ -57,7 +57,13 @@
 //! ([`network::LinkMatrix`]), straggler/drop/delay fault injection with
 //! Moniqua-aware recovery, time-varying topologies
 //! ([`topology::TopologySchedule`]), and the `(time, seq)` determinism
-//! contract pinned by `tests/des_determinism.rs`.
+//! contract pinned by `tests/des_determinism.rs`. **§Elasticity** documents
+//! the membership + checkpoint/recovery subsystem ([`elastic`]): versioned
+//! snapshots with per-algorithm engine state, frame-log crash replay that
+//! is bitwise-transparent to the rest of the cluster (pinned by
+//! `tests/elastic_equivalence.rs`), reconfiguration barriers for joins and
+//! leaves, and the full-precision bootstrap handshake a joiner needs
+//! before the θ proximity bound lets it decode modulo-quantized traffic.
 
 // Style lints the codebase deliberately trades for explicit indexed hot
 // loops (the §Perf kernels are written against godbolt output, not clippy
@@ -72,6 +78,7 @@ pub mod bench_support;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod elastic;
 pub mod linalg;
 pub mod network;
 pub mod objectives;
@@ -89,7 +96,8 @@ pub mod prelude {
         AsyncTrainer, ClusterConfig, ClusterTrainer, DesAsyncTrainer, DesConfig,
         DesTrainer, FaultConfig, Report, TraceRow, TrainConfig, Trainer, TransportKind,
     };
-    pub use crate::transport::{Frame, MemTransport, TcpTransport, Transport};
+    pub use crate::elastic::{ElasticConfig, MembershipPlan, Snapshot};
+    pub use crate::transport::{Frame, FrameKind, MemTransport, TcpTransport, Transport};
     pub use crate::data::{partition::Partition, SynthClassification};
     pub use crate::network::{LinkMatrix, NetworkConfig, NetworkModel};
     pub use crate::objectives::{Objective, ObjectiveKind};

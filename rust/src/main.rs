@@ -20,6 +20,15 @@
 //! `port_base` (tcp only; 0 = OS ephemeral ports, N = worker i listens on
 //! N+i), `recv_timeout_ms` (round-barrier watchdog, default 30000).
 //!
+//! Elastic membership keys (cluster only — see rust/DESIGN.md §Elasticity):
+//! `churn=kind@round:worker,...` with kind ∈ {join, leave, crash} (e.g.
+//! `churn=crash@12:2,leave@20:1,join@24:1`), `ckpt_every=K` (checkpoint
+//! cadence in rounds; 0 = never), `ckpt_dir=PATH` (durability directory for
+//! checkpoints + frame logs; required for crash plans). A crash restores
+//! the worker's last snapshot and replays its frame log — bitwise-identical
+//! to the uninterrupted run; a joiner first receives one full-precision
+//! bootstrap frame from a neighbor before touching quantized traffic.
+//!
 //! DES runtime keys (`train runtime=des`, and always active for `async`):
 //! `grad_time_ms` (modeled compute; required meaningfully for `runtime=des`),
 //! `link_matrix` (uniform | lognormal:SIGMA | file:PATH — per-edge
@@ -52,6 +61,7 @@ fn usage() -> ! {
          moniqua train algorithm=moniqua workers=8 steps=300 bits=8 theta=2.0\n\
          moniqua train runtime=des drop_prob=0.1 straggler=0.5 link_matrix=lognormal:0.4\n\
          moniqua train runtime=cluster transport=tcp workers=4 algorithm=moniqua\n\
+         moniqua train runtime=cluster churn=crash@12:2 ckpt_every=5 ckpt_dir=ckpts\n\
          moniqua async algorithm=moniqua drop_prob=0.05 topo_schedule=ring,complete@2.0\n\
          moniqua compare algorithms=dpsgd,moniqua,choco network=fig1c"
     );
@@ -187,7 +197,19 @@ fn cmd_train(cfg: &Config) -> Result<()> {
             report
         }
         "cluster" => {
-            let mut trainer = ClusterTrainer::new(tc, topo, objective, cfg.cluster()?)?;
+            let cluster_cfg = cfg.cluster()?;
+            if let Some(elastic) = &cluster_cfg.elastic {
+                println!(
+                    "elastic: {} churn events, ckpt_every={}, ckpt_dir={}",
+                    elastic.plan.events().len(),
+                    elastic.ckpt_every,
+                    elastic
+                        .ckpt_dir
+                        .as_ref()
+                        .map_or("-".into(), |p| p.display().to_string()),
+                );
+            }
+            let mut trainer = ClusterTrainer::new(tc, topo, objective, cluster_cfg)?;
             println!(
                 "rho = {:.4} (runtime=cluster, transport={})",
                 trainer.rho(),

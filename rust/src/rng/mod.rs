@@ -40,6 +40,27 @@ impl Pcg64 {
         Self::new(seed, 0)
     }
 
+    /// The generator's raw `(state, inc)` words, little-end first — the RNG
+    /// cursor an elastic [`Snapshot`](crate::elastic::Snapshot) persists so
+    /// a restored stream continues bit-for-bit where it left off.
+    pub fn raw(&self) -> [u64; 4] {
+        [
+            self.state as u64,
+            (self.state >> 64) as u64,
+            self.inc as u64,
+            (self.inc >> 64) as u64,
+        ]
+    }
+
+    /// Rebuild a generator from [`Self::raw`] output (no warmup — the words
+    /// are the post-warmup cursor).
+    pub fn from_raw(raw: [u64; 4]) -> Self {
+        Pcg64 {
+            state: (raw[0] as u128) | ((raw[1] as u128) << 64),
+            inc: (raw[2] as u128) | ((raw[3] as u128) << 64),
+        }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -191,6 +212,16 @@ mod tests {
         // ...but different rounds differ.
         let mut r6 = shared_round_rng(99, 6);
         assert_ne!(shared_round_rng(99, 5).next_u64(), r6.next_u64());
+    }
+
+    #[test]
+    fn raw_roundtrip_resumes_stream() {
+        let mut a = Pcg64::new(9, 3);
+        a.next_u64();
+        let mut b = Pcg64::from_raw(a.raw());
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

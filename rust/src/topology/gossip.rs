@@ -50,6 +50,17 @@ impl GossipSampler {
         self.adj.len()
     }
 
+    /// Raw RNG cursor (for elastic snapshots — the event stream must resume
+    /// bit-for-bit after a restore).
+    pub fn rng_raw(&self) -> [u64; 4] {
+        self.rng.raw()
+    }
+
+    /// Restore the RNG cursor saved by [`Self::rng_raw`].
+    pub fn set_rng_raw(&mut self, raw: [u64; 4]) {
+        self.rng = Pcg64::from_raw(raw);
+    }
+
     /// Swap the underlying graph mid-run (a [`TopologySchedule`] stage
     /// boundary in the DES runtime). The RNG state carries over, so the
     /// event stream stays one deterministic sequence.

@@ -68,6 +68,31 @@ impl Topology {
         })
     }
 
+    /// The same graph *family* re-instantiated over `m` workers — how the
+    /// elastic runtime ([`crate::elastic`]) re-wires the gossip graph when
+    /// membership changes: the surviving cohort keeps the shape it was
+    /// configured with, at its new size. The torus is refused (its shape is
+    /// a fixed r×c grid with no canonical resize).
+    pub fn resized(&self, m: usize) -> anyhow::Result<Topology> {
+        anyhow::ensure!(m >= 1, "cannot resize a topology to zero workers");
+        if m == self.n() {
+            return Ok(self.clone()); // identity resize (full membership)
+        }
+        Ok(match *self {
+            Topology::Ring(_) => Topology::Ring(m),
+            Topology::Chain(_) => Topology::Chain(m),
+            Topology::Complete(_) => Topology::Complete(m),
+            Topology::Star(_) => Topology::Star(m),
+            Topology::RandomRegular { degree, seed, .. } => {
+                Topology::RandomRegular { n: m, degree: degree.min(m.saturating_sub(1)), seed }
+            }
+            Topology::Torus(r, c) => anyhow::bail!(
+                "elastic membership needs a resizable topology; torus:{r}x{c} has no \
+                 canonical shape at other sizes"
+            ),
+        })
+    }
+
     /// Number of workers.
     pub fn n(&self) -> usize {
         match *self {

@@ -7,16 +7,23 @@
 //!  offset  size  field
 //!  ------  ----  -----------------------------------------------------
 //!       0     4  magic        b"MQWF"
-//!       4     2  version      wire-format version (currently 1)
+//!       4     2  version      wire-format version (currently 2)
 //!       6     2  algo         algorithm id (see [`algo_wire_id`])
 //!       8     8  round        synchronous round index
 //!      16     2  sender       worker id of the sender
 //!      18     2  bits         quantizer bit budget (32 = raw f32 payload)
-//!      20     4  theta        sender's θ this round (f32 bits; diagnostics)
-//!      24     4  payload_len  payload bytes following the header
-//!      28     8  checksum     FNV-1a over bytes 0..28 ++ payload
-//!      36     …  payload      packed-quantized codes / raw f32 vector
+//!      20     2  kind         frame kind (see [`FrameKind`])
+//!      22     4  theta        sender's θ this round (f32 bits; diagnostics)
+//!      26     4  payload_len  payload bytes following the header
+//!      30     8  checksum     FNV-1a over bytes 0..30 ++ payload
+//!      38     …  payload      packed-quantized codes / raw f32 vector
 //! ```
+//!
+//! Version 2 added the `kind` field for the elastic runtime
+//! ([`crate::elastic`]): a [`FrameKind::Bootstrap`] frame carries a raw
+//! full-precision model a (re)joining node must adopt before it may decode
+//! modulo-quantized traffic (the θ proximity bound of Lemma 1 does not hold
+//! for a node arbitrarily far from the cohort).
 //!
 //! The payload is exactly what the fused codec paths produce
 //! ([`MoniquaCodec::encode_packed_into`](crate::quant::MoniquaCodec::encode_packed_into)
@@ -33,9 +40,9 @@ use crate::quant::hash::fnv1a_bytes;
 /// Leading magic of every frame.
 pub const MAGIC: [u8; 4] = *b"MQWF";
 /// Current wire-format version.
-pub const VERSION: u16 = 1;
+pub const VERSION: u16 = 2;
 /// Header bytes before the payload.
-pub const HEADER_LEN: usize = 36;
+pub const HEADER_LEN: usize = 38;
 /// Upper bound on a frame payload (1 GiB) — rejects absurd length prefixes
 /// before any allocation happens on the receive path.
 pub const MAX_PAYLOAD: usize = 1 << 30;
@@ -58,6 +65,9 @@ pub enum FrameError {
     Oversize(usize),
     /// FNV-1a over header+payload does not match the checksum field.
     ChecksumMismatch { expected: u64, got: u64 },
+    /// Unknown frame kind (checked after the checksum, so it can only fire
+    /// on a well-formed frame from a newer/foreign sender).
+    BadKind(u16),
 }
 
 impl std::fmt::Display for FrameError {
@@ -76,11 +86,35 @@ impl std::fmt::Display for FrameError {
                 f,
                 "frame checksum mismatch: header {expected:#018x}, computed {got:#018x}"
             ),
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
         }
     }
 }
 
 impl std::error::Error for FrameError {}
+
+/// What a frame's payload *is* — added in wire-format version 2 for the
+/// elastic runtime. Ids are part of the wire format: never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum FrameKind {
+    /// A regular round payload (the only kind version 1 could express).
+    Data = 0,
+    /// A full-precision model (raw f32 little-endian words, `bits = 32`)
+    /// a neighbor ships to a (re)joining node so its model is inside the θ
+    /// proximity bound before any modulo-quantized traffic reaches it.
+    Bootstrap = 1,
+}
+
+impl FrameKind {
+    fn from_wire(v: u16) -> Result<FrameKind, FrameError> {
+        match v {
+            0 => Ok(FrameKind::Data),
+            1 => Ok(FrameKind::Bootstrap),
+            other => Err(FrameError::BadKind(other)),
+        }
+    }
+}
 
 /// One wire message: header fields + the packed payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -92,6 +126,8 @@ pub struct Frame {
     pub algo: u16,
     /// Bits per parameter of the payload encoding (32 = raw f32).
     pub bits: u16,
+    /// What the payload carries (round data vs. a bootstrap model).
+    pub kind: FrameKind,
     /// The sender's θ bound this round (0.0 for unquantized algorithms).
     pub theta: f32,
     pub payload: Vec<u8>,
@@ -120,10 +156,11 @@ impl Frame {
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.sender.to_le_bytes());
         out.extend_from_slice(&self.bits.to_le_bytes());
+        out.extend_from_slice(&(self.kind as u16).to_le_bytes());
         out.extend_from_slice(&self.theta.to_bits().to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         // checksum covers header-so-far ++ payload
-        let mut h = fnv1a_bytes(&out[base..base + 28]);
+        let mut h = fnv1a_bytes(&out[base..base + 30]);
         h = fnv1a_continue(h, &self.payload);
         out.extend_from_slice(&h.to_le_bytes());
         out.extend_from_slice(&self.payload);
@@ -164,8 +201,9 @@ impl Frame {
         let round = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
         let sender = u16::from_le_bytes([bytes[16], bytes[17]]);
         let bits = u16::from_le_bytes([bytes[18], bytes[19]]);
-        let theta = f32::from_bits(u32::from_le_bytes(bytes[20..24].try_into().unwrap()));
-        let payload_len = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+        let kind_raw = u16::from_le_bytes([bytes[20], bytes[21]]);
+        let theta = f32::from_bits(u32::from_le_bytes(bytes[22..26].try_into().unwrap()));
+        let payload_len = u32::from_le_bytes(bytes[26..30].try_into().unwrap()) as usize;
         if payload_len > MAX_PAYLOAD {
             return Err(FrameError::Oversize(payload_len));
         }
@@ -176,13 +214,16 @@ impl Frame {
         if bytes.len() > expected {
             return Err(FrameError::TrailingBytes { expected, got: bytes.len() });
         }
-        let checksum = u64::from_le_bytes(bytes[28..36].try_into().unwrap());
-        let mut h = fnv1a_bytes(&bytes[0..28]);
+        let checksum = u64::from_le_bytes(bytes[30..38].try_into().unwrap());
+        let mut h = fnv1a_bytes(&bytes[0..30]);
         h = fnv1a_continue(h, &bytes[HEADER_LEN..]);
         if h != checksum {
             return Err(FrameError::ChecksumMismatch { expected: checksum, got: h });
         }
-        Ok(Frame { round, sender, algo, bits, theta, payload: Vec::new() })
+        // Kind is validated *after* the checksum: a BadKind is a well-formed
+        // frame from a foreign/newer peer, not corruption.
+        let kind = FrameKind::from_wire(kind_raw)?;
+        Ok(Frame { round, sender, algo, bits, kind, theta, payload: Vec::new() })
     }
 }
 
@@ -220,7 +261,15 @@ mod tests {
     use super::*;
 
     fn sample(payload: Vec<u8>) -> Frame {
-        Frame { round: 7, sender: 3, algo: 4, bits: 8, theta: 2.0, payload }
+        Frame {
+            round: 7,
+            sender: 3,
+            algo: 4,
+            bits: 8,
+            kind: FrameKind::Data,
+            theta: 2.0,
+            payload,
+        }
     }
 
     #[test]
@@ -285,6 +334,28 @@ mod tests {
             Frame::decode(&bad),
             Err(FrameError::ChecksumMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn bootstrap_kind_roundtrips() {
+        let mut f = sample(vec![0, 0, 128, 63]); // one f32 1.0
+        f.kind = FrameKind::Bootstrap;
+        f.bits = 32;
+        let g = Frame::decode(&f.encode()).unwrap();
+        assert_eq!(g.kind, FrameKind::Bootstrap);
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn unknown_kind_is_typed_after_checksum() {
+        // Forge a frame with kind = 7 and a *correct* checksum: decode must
+        // report BadKind, not ChecksumMismatch.
+        let mut bytes = sample(vec![1, 2, 3]).encode();
+        bytes[20] = 7;
+        let mut h = crate::quant::hash::fnv1a_bytes(&bytes[0..30]);
+        h = super::fnv1a_continue(h, &bytes[HEADER_LEN..]);
+        bytes[30..38].copy_from_slice(&h.to_le_bytes());
+        assert_eq!(Frame::decode(&bytes), Err(FrameError::BadKind(7)));
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Real message-passing transport: the layer that turns the simulator's
 //! shared-memory "communication" into bytes crossing an actual boundary.
 //!
-//! * [`frame`] — the versioned wire format ([`Frame`]): a 36-byte header
-//!   (magic, version, algo id, round, sender, bit budget, θ, payload
-//!   length, FNV-1a checksum) followed by the packed-quantized payload the
-//!   fused codec paths produce. Decoding returns typed [`FrameError`]s,
-//!   never panics.
+//! * [`frame`] — the versioned wire format ([`Frame`]): a 38-byte header
+//!   (magic, version, algo id, round, sender, bit budget, frame kind, θ,
+//!   payload length, FNV-1a checksum) followed by the packed-quantized
+//!   payload the fused codec paths produce. Decoding returns typed
+//!   [`FrameError`]s, never panics. [`FrameKind::Bootstrap`] frames carry
+//!   the full-precision model a (re)joining elastic node adopts before it
+//!   may decode modulo-quantized traffic ([`crate::elastic`]).
 //! * [`Transport`] — the pluggable endpoint trait: `send(peer, &Frame)` +
 //!   `recv(timeout)`. One endpoint per worker; endpoints are `Send` so a
 //!   worker thread can own one.
@@ -33,7 +35,9 @@ pub mod frame;
 pub mod mem;
 pub mod tcp;
 
-pub use frame::{algo_wire_id, Frame, FrameError, HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION};
+pub use frame::{
+    algo_wire_id, Frame, FrameError, FrameKind, HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION,
+};
 pub use mem::MemTransport;
 pub use tcp::TcpTransport;
 
@@ -172,7 +176,15 @@ mod tests {
     use super::*;
 
     fn frame(round: u64, sender: u16) -> Frame {
-        Frame { round, sender, algo: 2, bits: 32, theta: 0.0, payload: vec![sender as u8] }
+        Frame {
+            round,
+            sender,
+            algo: 2,
+            bits: 32,
+            kind: FrameKind::Data,
+            theta: 0.0,
+            payload: vec![sender as u8],
+        }
     }
 
     #[test]

@@ -246,7 +246,15 @@ mod tests {
     use super::*;
 
     fn frame(round: u64, sender: u16, payload: Vec<u8>) -> Frame {
-        Frame { round, sender, algo: 4, bits: 8, theta: 2.0, payload }
+        Frame {
+            round,
+            sender,
+            algo: 4,
+            bits: 8,
+            kind: crate::transport::FrameKind::Data,
+            theta: 2.0,
+            payload,
+        }
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! The elastic subsystem's acceptance gate.
+//!
+//! **Crash transparency:** a cluster run with `ckpt_every=5` and a
+//! crash+recover at round 12 must produce a **bitwise-identical** final
+//! model, trace, and ledger to the *uninterrupted lockstep* [`Trainer`] for
+//! every sync algorithm, over both transports. The crashed worker restores
+//! its round-9 snapshot and replays rounds 10–11 from its frame log; its
+//! peers never notice.
+//!
+//! **θ-bootstrap necessity:** a worker joining a Moniqua cohort whose
+//! models have drifted beyond the θ proximity ball corrupts the modulo
+//! decode unless it first adopts a neighbor's full-precision bootstrap
+//! frame — shown both at the codec level (the recover really wraps) and
+//! end-to-end (the bootstrapped join converges, the skipped one diverges).
+
+use std::path::PathBuf;
+
+use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::coordinator::{
+    ClusterConfig, ClusterTrainer, Report, TrainConfig, Trainer, TransportKind,
+};
+use moniqua::elastic::{ElasticConfig, MembershipPlan};
+use moniqua::network::NetworkConfig;
+use moniqua::objectives::{Objective, Quadratic};
+use moniqua::quant::{MoniquaCodec, QuantConfig, Rounding};
+use moniqua::topology::Topology;
+
+const STEPS: u64 = 16;
+const CKPT_EVERY: u64 = 5;
+const CRASH_ROUND: u64 = 12;
+
+fn config(algorithm: Algorithm) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        steps: STEPS,
+        lr: 0.1,
+        decay_factor: 0.5,
+        decay_at: vec![6, 11], // one decay inside the replayed window
+        algorithm,
+        network: Some(NetworkConfig::fig1b()),
+        grad_time_s: Some(1e-3),
+        eval_every: 4,
+        seed: 7,
+        threads: None,
+    }
+}
+
+fn objective() -> Box<dyn Objective> {
+    Box::new(Quadratic::new(24, 1.0, 0.1, 4, 3))
+}
+
+/// Every determinism-relevant field of a report, as raw bit patterns
+/// (same fingerprint as `tests/cluster_equivalence.rs`).
+fn fingerprint(r: &Report) -> String {
+    let mut s = format!(
+        "algo={} workers={} dim={} total_bytes={} total_messages={} extra_mem={}\n",
+        r.algorithm, r.workers, r.dim, r.total_bytes, r.total_messages, r.extra_memory_floats
+    );
+    for row in &r.trace {
+        s.push_str(&format!(
+            "step={} train={:016x} eval={:016x} cons={:016x} bytes={} theta={}\n",
+            row.step,
+            row.train_loss.to_bits(),
+            row.eval_loss.to_bits(),
+            row.consensus_linf.to_bits(),
+            row.bytes_total,
+            row.theta.map_or("-".to_string(), |t| format!("{:016x}", t.to_bits())),
+        ));
+    }
+    s.push_str("final=");
+    for v in &r.final_params {
+        s.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    s
+}
+
+fn algorithms() -> Vec<(&'static str, Algorithm)> {
+    let q8 = QuantConfig::stochastic(8);
+    let t = ThetaPolicy::Constant(2.0);
+    let one_bit_nearest =
+        QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::stochastic(1) };
+    vec![
+        ("allreduce", Algorithm::AllReduce),
+        ("dpsgd", Algorithm::DPsgd),
+        ("naive", Algorithm::NaiveQuant { quant: q8, range: 4.0 }),
+        ("moniqua", Algorithm::Moniqua { theta: t, quant: q8 }),
+        (
+            "moniqua-verify",
+            Algorithm::Moniqua { theta: t, quant: q8.with_verify_hash(true) },
+        ),
+        (
+            "moniqua-slack",
+            Algorithm::MoniquaSlack { theta: t, quant: one_bit_nearest, gamma: 0.3 },
+        ),
+        ("d2", Algorithm::D2),
+        ("moniqua-d2", Algorithm::MoniquaD2 { theta: t, quant: q8 }),
+        ("dcd", Algorithm::Dcd { quant: q8, range: 4.0 }),
+        ("dcd-dynamic", Algorithm::Dcd { quant: q8, range: 0.0 }),
+        ("ecd", Algorithm::Ecd { quant: q8, range: 16.0 }),
+        ("choco", Algorithm::Choco { quant: q8, range: 4.0, gamma: 0.5 }),
+        ("deepsqueeze", Algorithm::DeepSqueeze { quant: q8, range: 4.0, gamma: 0.5 }),
+    ]
+}
+
+/// Fresh per-case durability dir so parallel jobs can never collide.
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "moniqua-elastic-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn run_lockstep(algorithm: Algorithm) -> Report {
+    Trainer::new(config(algorithm), Topology::Ring(4), objective()).run()
+}
+
+fn run_crashing_cluster(
+    algorithm: Algorithm,
+    transport: TransportKind,
+    tag: &str,
+    crash_spec: &str,
+) -> (Report, u64) {
+    let dir = ckpt_dir(tag);
+    let mut t = ClusterTrainer::new(
+        config(algorithm),
+        Topology::Ring(4),
+        objective(),
+        ClusterConfig {
+            transport,
+            elastic: Some(ElasticConfig {
+                plan: MembershipPlan::parse(crash_spec).unwrap(),
+                ckpt_every: CKPT_EVERY,
+                ckpt_dir: Some(dir.clone()),
+                skip_bootstrap: false,
+            }),
+            ..ClusterConfig::default()
+        },
+    )
+    .expect("elastic cluster config accepted");
+    let report = t.run().expect("elastic cluster run");
+    // durability evidence: the crashed worker's checkpoint is on disk
+    assert!(
+        moniqua::elastic::snapshot::ckpt_path(&dir, 2).exists(),
+        "{tag}: no checkpoint written"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    (report, t.frames_sent)
+}
+
+#[test]
+fn crash_recover_is_bitwise_identical_to_lockstep_mem() {
+    for (name, algorithm) in algorithms() {
+        let want = fingerprint(&run_lockstep(algorithm.clone()));
+        let (report, _) = run_crashing_cluster(
+            algorithm,
+            TransportKind::Mem,
+            &format!("mem-{name}"),
+            &format!("crash@{CRASH_ROUND}:2"),
+        );
+        assert_eq!(
+            fingerprint(&report),
+            want,
+            "{name}: crash+recover diverged from the uninterrupted lockstep trainer"
+        );
+    }
+}
+
+#[test]
+fn crash_recover_is_bitwise_identical_to_lockstep_tcp() {
+    for (name, algorithm) in algorithms() {
+        let want = fingerprint(&run_lockstep(algorithm.clone()));
+        let (report, _) = run_crashing_cluster(
+            algorithm,
+            TransportKind::Tcp { port_base: 0 },
+            &format!("tcp-{name}"),
+            &format!("crash@{CRASH_ROUND}:2"),
+        );
+        assert_eq!(
+            fingerprint(&report),
+            want,
+            "{name}: crash+recover over tcp diverged from the lockstep trainer"
+        );
+    }
+}
+
+#[test]
+fn genesis_recovery_and_double_crash_also_match() {
+    // Crash before the first checkpoint (full replay from round 0), plus a
+    // second crash later in the same run that restores a real snapshot.
+    let algorithm = Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    };
+    let want = fingerprint(&run_lockstep(algorithm.clone()));
+    let (report, _) = run_crashing_cluster(
+        algorithm,
+        TransportKind::Mem,
+        "genesis",
+        "crash@3:2,crash@12:2",
+    );
+    assert_eq!(want, fingerprint(&report), "genesis/double crash diverged");
+}
+
+#[test]
+fn crash_does_not_inflate_wire_accounting() {
+    // Replayed rounds must count their original send exactly once: the
+    // crashing run ships the same number of frames as a crash-free one.
+    let algorithm = Algorithm::DPsgd;
+    let (_, clean_frames) = {
+        let mut t = ClusterTrainer::new(
+            config(algorithm.clone()),
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        )
+        .unwrap();
+        let r = t.run().unwrap();
+        (r, t.frames_sent)
+    };
+    let (_, crash_frames) = run_crashing_cluster(
+        algorithm,
+        TransportKind::Mem,
+        "accounting",
+        &format!("crash@{CRASH_ROUND}:2"),
+    );
+    assert_eq!(clean_frames, crash_frames);
+}
+
+// ---------------------------------------------------------------- bootstrap
+
+/// Codec-level demonstration of the θ proximity requirement: the modulo
+/// recover of a model that sits outside the θ ball of the receiver's
+/// reference is *not* the sender's model (the decode wraps), while adopting
+/// a neighbor's model first makes the decode exact to quantization error.
+#[test]
+fn modulo_decode_corrupts_outside_theta_ball() {
+    let quant = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::stochastic(8) };
+    let codec = MoniquaCodec::from_theta(2.0, &quant);
+    let d = 16;
+    let cohort = vec![7.0f32; d]; // where the training has drifted
+    let stale = vec![1.0f32; d]; // a joiner that skipped the bootstrap
+    let noise = vec![0.0f32; d];
+    let mut codes = vec![0u32; d];
+    let mut recovered = vec![0.0f32; d];
+
+    // cohort member broadcasts; the stale joiner decodes against its own
+    // far-away model: the wrap puts the result θ-periodically wrong
+    codec.encode_into(&cohort, &noise, &mut codes);
+    codec.recover_into(&codes, &stale, &mut recovered);
+    let err_stale =
+        recovered.iter().map(|&v| (v - 7.0).abs()).fold(0.0f32, f32::max);
+    assert!(
+        err_stale > 1.0,
+        "decode against a stale reference should wrap (err {err_stale})"
+    );
+
+    // after adopting a neighbor's model (the bootstrap), the same wire
+    // bytes decode exactly (to quantization error)
+    let bootstrapped = vec![7.0f32; d];
+    codec.recover_into(&codes, &bootstrapped, &mut recovered);
+    let err_boot =
+        recovered.iter().map(|&v| (v - 7.0).abs()).fold(0.0f32, f32::max);
+    assert!(
+        err_boot < 0.05,
+        "decode after bootstrap should be exact to quant error (err {err_boot})"
+    );
+}
+
+/// End-to-end: a Moniqua cohort drifts far from the initialization; a
+/// worker that joins *with* the bootstrap handshake lands inside the θ
+/// ball and the cluster reaches consensus; the same join with the
+/// bootstrap skipped corrupts the decode and wrecks consensus.
+#[test]
+fn join_without_bootstrap_corrupts_the_run() {
+    let run = |skip_bootstrap: bool| -> Report {
+        let algorithm = Algorithm::Moniqua {
+            theta: ThetaPolicy::Constant(2.0),
+            quant: QuantConfig::stochastic(8),
+        };
+        let cfg = TrainConfig {
+            workers: 4,
+            steps: 40,
+            lr: 0.1,
+            algorithm,
+            network: None,
+            grad_time_s: Some(0.0),
+            eval_every: 10,
+            seed: 7,
+            // optimum sits at delta/2 = 8.0, far from the 1.0 init: by the
+            // join round the cohort is ≈ 7, so the joiner's stale model is
+            // ≈ 6 away — far outside θ = 2
+            ..TrainConfig::default()
+        };
+        let mut t = ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            Box::new(Quadratic::new(16, 16.0, 0.0, 4, 3)),
+            ClusterConfig {
+                elastic: Some(ElasticConfig {
+                    plan: MembershipPlan::parse("join@25:3").unwrap(),
+                    ckpt_every: 0,
+                    ckpt_dir: None,
+                    skip_bootstrap,
+                }),
+                ..ClusterConfig::default()
+            },
+        )
+        .expect("join plan accepted");
+        t.run().expect("join run")
+    };
+
+    let boot = run(false);
+    let skipped = run(true);
+    let boot_consensus = boot.trace.last().unwrap().consensus_linf;
+    let skip_consensus = skipped.trace.last().unwrap().consensus_linf;
+    assert!(
+        boot_consensus < 0.1,
+        "bootstrapped join should reach consensus (linf {boot_consensus})"
+    );
+    assert!(
+        skip_consensus > 10.0 * boot_consensus.max(1e-6),
+        "skipping the bootstrap should corrupt the decode: \
+         consensus {skip_consensus} vs bootstrapped {boot_consensus}"
+    );
+    assert!(
+        skipped.final_loss() > 2.0 * boot.final_loss().max(1e-9),
+        "corrupted decode should hurt the loss: {} vs {}",
+        skipped.final_loss(),
+        boot.final_loss()
+    );
+}
+
+/// Leaves and rejoins re-wire the gossip matrix through the reconfiguration
+/// barrier; the run stays healthy for a full-precision algorithm.
+#[test]
+fn leave_and_rejoin_trains_through_reconfiguration() {
+    let cfg = TrainConfig {
+        workers: 4,
+        steps: 30,
+        lr: 0.1,
+        algorithm: Algorithm::DPsgd,
+        network: None,
+        grad_time_s: Some(0.0),
+        eval_every: 29,
+        seed: 11,
+        ..TrainConfig::default()
+    };
+    let mut t = ClusterTrainer::new(
+        cfg,
+        Topology::Ring(4),
+        Box::new(Quadratic::new(8, 1.0, 0.0, 4, 3)),
+        ClusterConfig {
+            elastic: Some(ElasticConfig {
+                plan: MembershipPlan::parse("leave@8:1,join@16:1").unwrap(),
+                ckpt_every: 0,
+                ckpt_dir: None,
+                skip_bootstrap: false,
+            }),
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap();
+    let report = t.run().unwrap();
+    let last = report.trace.last().unwrap();
+    // quadratic optimum at 0.5; everyone (including the rejoiner) converges
+    assert!(last.eval_loss < 1e-2, "loss {}", last.eval_loss);
+    assert!(last.consensus_linf < 1e-2, "consensus {}", last.consensus_linf);
+}

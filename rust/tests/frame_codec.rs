@@ -6,7 +6,7 @@
 
 use moniqua::quant::{packing, MoniquaCodec, QuantConfig};
 use moniqua::testing::{forall, gaussian_vec};
-use moniqua::transport::{Frame, FrameError, HEADER_LEN, VERSION};
+use moniqua::transport::{Frame, FrameError, FrameKind, HEADER_LEN, VERSION};
 
 #[test]
 fn roundtrip_at_every_bit_budget_and_length() {
@@ -28,6 +28,7 @@ fn roundtrip_at_every_bit_budget_and_length() {
                 sender: rng.below(1 << 16) as u16,
                 algo: 4,
                 bits: bits as u16,
+                kind: FrameKind::Data,
                 theta: rng.next_f32() * 8.0,
                 payload,
             };
@@ -44,11 +45,13 @@ fn arbitrary_binary_payloads_roundtrip() {
     forall(100, |rng| {
         let len = rng.below(200_000) as usize;
         let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let kind = if rng.below(2) == 0 { FrameKind::Data } else { FrameKind::Bootstrap };
         let f = Frame {
             round: rng.next_u64(),
             sender: 1,
             algo: 2,
             bits: 32,
+            kind,
             theta: 0.0,
             payload,
         };
@@ -61,8 +64,16 @@ fn every_truncation_is_a_typed_error() {
     forall(30, |rng| {
         let len = rng.below(300) as usize;
         let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
-        let bytes =
-            Frame { round: 3, sender: 0, algo: 4, bits: 8, theta: 1.0, payload }.encode();
+        let bytes = Frame {
+            round: 3,
+            sender: 0,
+            algo: 4,
+            bits: 8,
+            kind: FrameKind::Data,
+            theta: 1.0,
+            payload,
+        }
+        .encode();
         // Every strict prefix must fail Truncated — never panic, never Ok.
         let cut = rng.below(bytes.len() as u64) as usize;
         match Frame::decode(&bytes[..cut]) {
@@ -80,8 +91,16 @@ fn flipped_bytes_map_to_typed_errors_by_region() {
     forall(200, |rng| {
         let len = 1 + rng.below(2000) as usize;
         let payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
-        let good =
-            Frame { round: 9, sender: 2, algo: 4, bits: 8, theta: 2.0, payload }.encode();
+        let good = Frame {
+            round: 9,
+            sender: 2,
+            algo: 4,
+            bits: 8,
+            kind: FrameKind::Data,
+            theta: 2.0,
+            payload,
+        }
+        .encode();
         let pos = rng.below(good.len() as u64) as usize;
         let mut bad = good.clone();
         let flip = 1u8 << rng.below(8) as u32;
@@ -92,14 +111,15 @@ fn flipped_bytes_map_to_typed_errors_by_region() {
             4..=5 => {
                 assert!(matches!(result, Err(FrameError::BadVersion(v)) if v != VERSION))
             }
-            // algo/round/sender/bits/theta: caught by the checksum.
-            6..=23 => assert!(
+            // algo/round/sender/bits/kind/theta: caught by the checksum
+            // (kind is only inspected after the checksum passes).
+            6..=25 => assert!(
                 matches!(result, Err(FrameError::ChecksumMismatch { .. })),
                 "pos={pos}"
             ),
             // payload_len: a length disagreement (or oversize), surfaced
             // before any checksum work.
-            24..=27 => assert!(
+            26..=29 => assert!(
                 matches!(
                     result,
                     Err(FrameError::Truncated { .. })

@@ -1,0 +1,300 @@
+//! Snapshot/restore property suite: for every sync engine (all 9 types,
+//! including both Moniqua wrappers and both DCD modes) and for AD-PSGD,
+//! `restore(snapshot(engine))` onto a freshly constructed engine is
+//! **bitwise-identical state** at bits {1, 4, 8}:
+//!
+//! * the restored engine re-serializes to the exact snapshot bytes, and
+//! * stepping the original and the restored engine with identical inputs
+//!   produces bitwise-identical models for several further rounds.
+//!
+//! Plus a truncation/corruption fuzz pass over the full [`Snapshot`]
+//! container mirroring `tests/frame_codec.rs`: every malformed input maps
+//! to a typed [`SnapshotError`], never a panic, and an accidental `Ok`
+//! must re-encode to the same bytes.
+
+use moniqua::algorithms::{Algorithm, AsyncVariant, AdPsgd, StepCtx, ThetaPolicy};
+use moniqua::elastic::snapshot::{NodeTrace, Snapshot};
+use moniqua::elastic::SnapshotError;
+use moniqua::quant::{QuantConfig, Rounding};
+use moniqua::rng::Pcg64;
+use moniqua::testing::{forall, gaussian_vec};
+use moniqua::topology::Topology;
+
+const D: usize = 12;
+const N: usize = 4;
+
+fn quant(bits: u32) -> QuantConfig {
+    if bits == 1 {
+        // 1-bit stochastic has δ = ½; nearest keeps the decode meaningful.
+        QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::stochastic(1) }
+    } else {
+        QuantConfig::stochastic(bits)
+    }
+}
+
+/// Every sync-engine construction the repo has, at the given bit budget.
+fn algorithms(bits: u32) -> Vec<(&'static str, Algorithm)> {
+    let q = quant(bits);
+    let t = ThetaPolicy::Constant(2.0);
+    vec![
+        ("allreduce", Algorithm::AllReduce),
+        ("dpsgd", Algorithm::DPsgd),
+        ("naive", Algorithm::NaiveQuant { quant: q, range: 4.0 }),
+        ("moniqua", Algorithm::Moniqua { theta: t, quant: q }),
+        ("moniqua-slack", Algorithm::MoniquaSlack { theta: t, quant: q, gamma: 0.3 }),
+        ("d2", Algorithm::D2),
+        ("moniqua-d2", Algorithm::MoniquaD2 { theta: t, quant: q }),
+        ("dcd", Algorithm::Dcd { quant: q, range: 4.0 }),
+        ("dcd-dynamic", Algorithm::Dcd { quant: q, range: 0.0 }),
+        ("ecd", Algorithm::Ecd { quant: q, range: 16.0 }),
+        ("choco", Algorithm::Choco { quant: q, range: 4.0, gamma: 0.5 }),
+        ("deepsqueeze", Algorithm::DeepSqueeze { quant: q, range: 4.0, gamma: 0.5 }),
+    ]
+}
+
+fn bits_of(xs: &[Vec<f32>]) -> Vec<u32> {
+    xs.iter().flat_map(|x| x.iter().map(|v| v.to_bits())).collect()
+}
+
+#[test]
+fn restore_is_bitwise_identical_for_every_sync_engine() {
+    for bits in [1u32, 4, 8] {
+        for (name, algorithm) in algorithms(bits) {
+            let w = Topology::Ring(N).comm_matrix();
+            let rho = w.rho();
+            let ctx = StepCtx { seed: 11, rho, g_inf: 1.0 };
+            let mut rng = Pcg64::seeded(17 + bits as u64);
+            let mut a = algorithm.make_sync(&w, D);
+            a.set_threads(1);
+            let mut xs: Vec<Vec<f32>> =
+                (0..N).map(|_| gaussian_vec(&mut rng, D, 0.05)).collect();
+
+            // warm up: enough rounds that replicas/accumulators/history are
+            // non-trivial
+            for round in 0..7u64 {
+                let grads: Vec<Vec<f32>> =
+                    (0..N).map(|_| gaussian_vec(&mut rng, D, 0.5)).collect();
+                a.step(&mut xs, &grads, 0.05, round, &ctx);
+            }
+
+            let mut blob = Vec::new();
+            a.snapshot(&mut blob);
+            let mut b = algorithm.make_sync(&w, D);
+            b.set_threads(1);
+            b.restore(&blob)
+                .unwrap_or_else(|e| panic!("{name}/{bits}b: restore failed: {e}"));
+            let mut blob_b = Vec::new();
+            b.snapshot(&mut blob_b);
+            assert_eq!(blob, blob_b, "{name}/{bits}b: re-snapshot differs");
+
+            // both continue from identical models: every further round must
+            // be bitwise identical
+            let mut xs_b = xs.clone();
+            for round in 7..12u64 {
+                let grads: Vec<Vec<f32>> =
+                    (0..N).map(|_| gaussian_vec(&mut rng, D, 0.5)).collect();
+                a.step(&mut xs, &grads, 0.05, round, &ctx);
+                b.step(&mut xs_b, &grads, 0.05, round, &ctx);
+                assert_eq!(
+                    bits_of(&xs),
+                    bits_of(&xs_b),
+                    "{name}/{bits}b: models diverged at round {round}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stateless_engines_reject_foreign_state() {
+    let w = Topology::Ring(N).comm_matrix();
+    let mut e = Algorithm::DPsgd.make_sync(&w, D);
+    assert!(e.restore(&[1, 2, 3]).is_err());
+    assert!(e.restore(&[]).is_ok());
+}
+
+#[test]
+fn stateful_engines_reject_truncated_and_mis_shaped_blobs() {
+    let w = Topology::Ring(N).comm_matrix();
+    for (name, algorithm) in algorithms(8) {
+        let ctx = StepCtx { seed: 3, rho: 0.8, g_inf: 1.0 };
+        let mut a = algorithm.make_sync(&w, D);
+        a.set_threads(1);
+        let mut xs: Vec<Vec<f32>> = (0..N).map(|_| vec![0.5; D]).collect();
+        let grads: Vec<Vec<f32>> = (0..N).map(|_| vec![0.1; D]).collect();
+        a.step(&mut xs, &grads, 0.05, 0, &ctx);
+        let mut blob = Vec::new();
+        a.snapshot(&mut blob);
+        if blob.is_empty() {
+            continue; // stateless: covered above
+        }
+        // every strict prefix must be rejected
+        for cut in [0usize, 1, blob.len() / 2, blob.len() - 1] {
+            let mut b = algorithm.make_sync(&w, D);
+            assert!(
+                b.restore(&blob[..cut]).is_err(),
+                "{name}: truncated blob (cut {cut}) accepted"
+            );
+        }
+        // trailing garbage must be rejected
+        let mut long = blob.clone();
+        long.push(0);
+        let mut b = algorithm.make_sync(&w, D);
+        assert!(b.restore(&long).is_err(), "{name}: trailing byte accepted");
+        // engines with per-worker state must reject a different cluster
+        // shape (the Moniqua family's blob is shape-free diagnostics)
+        if matches!(
+            name,
+            "d2" | "moniqua-d2" | "dcd" | "dcd-dynamic" | "ecd" | "choco" | "deepsqueeze"
+        ) {
+            let mut b = algorithm.make_sync(&Topology::Ring(N + 1).comm_matrix(), D);
+            assert!(
+                b.restore(&blob).is_err(),
+                "{name}: blob for n={N} restored onto n={}",
+                N + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn adpsgd_restore_is_bitwise_identical_including_stale_cache() {
+    for bits in [1u32, 4, 8] {
+        let topo = Topology::Ring(N);
+        let variant = AsyncVariant::Moniqua { theta: 2.0, quant: quant(bits) };
+        let mut a = AdPsgd::new(&topo, D, variant.clone(), 23);
+        a.enable_fault_tolerance();
+        let mut xs: Vec<Vec<f32>> = (0..N).map(|i| vec![0.1 * i as f32; D]).collect();
+        let mut grad = |_w: usize, p: &[f32], g: &mut [f32]| {
+            for (gi, &pi) in g.iter_mut().zip(p) {
+                *gi = pi - 0.3;
+            }
+        };
+        // some drops so the stale-neighbor cache is populated
+        let mut faults = Pcg64::seeded(5);
+        for e in 0..60u64 {
+            let pair = a.sample_pair(faults.below(N as u64) as usize);
+            let dab = faults.next_f64() >= 0.3;
+            let dba = faults.next_f64() >= 0.3;
+            a.step_pair_with_faults(pair, &mut xs, &mut grad, 0.05, e, dab, dba);
+        }
+        assert!(a.stale_fallbacks > 0, "drops must have populated the cache");
+
+        let mut blob = Vec::new();
+        a.snapshot(&mut blob);
+        let mut b = AdPsgd::new(&topo, D, variant, 23);
+        b.restore(&blob).unwrap_or_else(|e| panic!("adpsgd/{bits}b: {e}"));
+        let mut blob_b = Vec::new();
+        b.snapshot(&mut blob_b);
+        assert_eq!(blob, blob_b, "adpsgd/{bits}b: re-snapshot differs");
+
+        // identical continuation: same events, same pair sampling (the RNG
+        // cursor travels in the snapshot), same models
+        let mut xs_b = xs.clone();
+        for e in 60..90u64 {
+            let (pa, _) = a.step_event(&mut xs, &mut grad, 0.05, e);
+            let (pb, _) = b.step_event(&mut xs_b, &mut grad, 0.05, e);
+            assert_eq!(pa, pb, "adpsgd/{bits}b: gossip pair diverged at event {e}");
+            assert_eq!(
+                bits_of(&xs),
+                bits_of(&xs_b),
+                "adpsgd/{bits}b: models diverged at event {e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adpsgd_rejects_malformed_blobs() {
+    let topo = Topology::Ring(N);
+    let mut a = AdPsgd::new(&topo, D, AsyncVariant::FullPrecision, 1);
+    let mut blob = Vec::new();
+    a.snapshot(&mut blob);
+    for cut in [0usize, 8, blob.len() - 1] {
+        let mut b = AdPsgd::new(&topo, D, AsyncVariant::FullPrecision, 1);
+        assert!(b.restore(&blob[..cut]).is_err(), "cut {cut}");
+    }
+    // wrong worker count
+    let mut b = AdPsgd::new(&Topology::Ring(N + 2), D, AsyncVariant::FullPrecision, 1);
+    assert!(b.restore(&blob).is_err());
+}
+
+// ---------------------------------------------------------------- container
+
+fn sample_snapshot(rng: &mut Pcg64) -> Snapshot {
+    let mut trace = NodeTrace::starting_at(0);
+    let rounds = 1 + rng.below(6);
+    for k in 0..rounds {
+        trace.push_round(
+            k,
+            rng.next_f64(),
+            if rng.below(2) == 0 { None } else { Some(rng.next_f64()) },
+            moniqua::algorithms::CommStats {
+                bytes_per_msg: rng.below(4096) as usize,
+                messages: rng.below(64),
+                allreduce_bytes: if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(rng.below(4096) as usize)
+                },
+                extra_local_passes: rng.below(3) as u32,
+            },
+            rng.next_f64() * 1e-3,
+            rng.next_f64() * 1e-3,
+        );
+    }
+    trace.evals.push((0, gaussian_vec(rng, 6, 1.0)));
+    trace.frames_sent = rng.below(1000);
+    trace.bytes_sent = rng.below(1 << 20);
+    Snapshot {
+        worker: rng.below(16) as u16,
+        algo: rng.below(12) as u16,
+        round: rounds - 1,
+        lr: rng.next_f32(),
+        g_inf: rng.next_f64(),
+        model: gaussian_vec(rng, 1 + rng.below(64) as usize, 2.0),
+        engine: (0..rng.below(128)).map(|_| rng.next_u32() as u8).collect(),
+        trace,
+    }
+}
+
+#[test]
+fn container_roundtrips_under_fuzzed_contents() {
+    forall(60, |rng| {
+        let s = sample_snapshot(rng);
+        let bytes = s.encode();
+        assert_eq!(Snapshot::decode(&bytes).expect("well-formed"), s);
+    });
+}
+
+#[test]
+fn every_truncation_is_a_typed_error() {
+    forall(40, |rng| {
+        let bytes = sample_snapshot(rng).encode();
+        let cut = rng.below(bytes.len() as u64) as usize;
+        match Snapshot::decode(&bytes[..cut]) {
+            Err(e) => {
+                // a typed error — most cuts die on the length or checksum
+                // gates before any section parsing
+                let _: SnapshotError = e;
+            }
+            Ok(s) => panic!("cut={cut}: truncated snapshot decoded: {s:?}"),
+        }
+    });
+}
+
+#[test]
+fn flipped_bytes_never_panic_and_never_alias() {
+    forall(150, |rng| {
+        let good = sample_snapshot(rng).encode();
+        let mut bad = good.clone();
+        let pos = rng.below(bad.len() as u64) as usize;
+        bad[pos] ^= 1u8 << rng.below(8) as u32;
+        match Snapshot::decode(&bad) {
+            Err(_) => {}
+            // FNV collisions are astronomically unlikely; an Ok must at
+            // least re-encode to the mutated bytes (totality, no aliasing).
+            Ok(s) => assert_eq!(s.encode(), bad),
+        }
+    });
+}

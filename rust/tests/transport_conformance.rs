@@ -13,10 +13,20 @@
 
 use std::time::Duration;
 
-use moniqua::transport::{Frame, MemTransport, TcpTransport, Transport, TransportError};
+use moniqua::transport::{
+    Frame, FrameKind, MemTransport, TcpTransport, Transport, TransportError,
+};
 
 fn frame(round: u64, sender: u16, payload: Vec<u8>) -> Frame {
-    Frame { round, sender, algo: 4, bits: 8, theta: 2.0, payload }
+    Frame {
+        round,
+        sender,
+        algo: 4,
+        bits: 8,
+        kind: FrameKind::Data,
+        theta: 2.0,
+        payload,
+    }
 }
 
 /// Build an n-endpoint cluster for each implementation.
