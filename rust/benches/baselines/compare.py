@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Gate a fresh BENCH json against a committed baseline.
+
+Usage: compare.py FRESH.json BASELINE.json [--max-regression 0.25] [--gate-gbps]
+
+Rules (stdlib only, no deps):
+  * missing baseline file, or baseline with an empty ``metrics`` map
+    -> exit 0 with a notice (nothing blessed yet — skip gracefully);
+  * **gated** metrics are the self-relative ``speedup`` ratios (word
+    kernels vs the in-run reference, fused vs unfused): both sides of a
+    ratio are measured in the same run on the same machine, so they are
+    portable between CI's quick mode and a full-mode blessing machine. A
+    gated metric present in both files that dropped by more than
+    ``--max-regression`` (fraction of the baseline) fails the run;
+  * absolute ``.gbps`` throughputs are machine- and mode-sized
+    (CI's quick mode runs 1-3 iterations on a shared runner; the blessing
+    protocol is full mode on a quiet machine), so they are reported for
+    the trajectory but NEVER fail — unless ``--gate-gbps`` is passed for
+    a same-machine, same-mode comparison;
+  * metrics present only on one side are reported but never fail (the
+    sweep grid is allowed to grow).
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    fresh_path, base_path = argv[1], argv[2]
+    max_reg = 0.25
+    if "--max-regression" in argv:
+        max_reg = float(argv[argv.index("--max-regression") + 1])
+    gate_gbps = "--gate-gbps" in argv
+
+    def gated(key):
+        return "speedup" in key or (gate_gbps and key.endswith(".gbps"))
+
+    def informational(key):
+        return key.endswith(".gbps") and not gated(key)
+
+    try:
+        base = load(base_path)
+    except FileNotFoundError:
+        print(f"[bench-compare] no baseline at {base_path}; skipping (bless one per README)")
+        return 0
+    base_metrics = {k: v for k, v in base.get("metrics", {}).items() if v is not None}
+    if not base_metrics:
+        print(f"[bench-compare] baseline {base_path} is an unblessed placeholder; skipping")
+        return 0
+
+    fresh = load(fresh_path)
+    fresh_metrics = {k: v for k, v in fresh.get("metrics", {}).items() if v is not None}
+
+    failures = []
+    for key in sorted(base_metrics):
+        if not (gated(key) or informational(key)):
+            continue
+        if key not in fresh_metrics:
+            print(f"[bench-compare] NOTE: baseline metric {key} missing from fresh run")
+            continue
+        b, f = base_metrics[key], fresh_metrics[key]
+        if b <= 0:
+            continue
+        delta = (f - b) / b
+        if gated(key):
+            marker = "OK  "
+            if delta < -max_reg:
+                marker = "REG "
+                failures.append((key, b, f, delta))
+        else:
+            marker = "info"
+        print(f"[bench-compare] {marker} {key}: baseline {b:.3f} fresh {f:.3f} ({delta:+.1%})")
+    for key in sorted(set(fresh_metrics) - set(base_metrics)):
+        if "speedup" in key or key.endswith(".gbps"):
+            print(f"[bench-compare] NOTE: new metric {key} (not in baseline)")
+
+    if failures:
+        print(f"[bench-compare] FAIL: {len(failures)} gated metric(s) regressed more than {max_reg:.0%}")
+        return 1
+    print("[bench-compare] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -143,15 +143,15 @@ impl SyncAlgorithm for Choco {
             let xhat = &self.xhat;
             self.pool.for_each_mut(xs, |i, x| {
                 x.copy_from_slice(&ws[i].half);
-                for &j in &w.neighbors[i] {
-                    let wji = w.weight(j, i) as f32;
+                for (j, wji) in w.in_edges(i) {
+                    let wji = wji as f32;
                     for k in 0..d {
                         x[k] += gamma * wji * (xhat[j][k] - xhat[i][k]);
                     }
                 }
             });
         }
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         CommStats {
             bytes_per_msg: bytes,
             messages: deg_sum as u64,
@@ -219,13 +219,13 @@ impl SyncAlgorithm for Choco {
             }
         }
         x.copy_from_slice(&ws[i].half);
-        for &j in &w.neighbors[i] {
-            let wji = w.weight(j, i) as f32;
+        for (j, wji) in w.in_edges(i) {
+            let wji = wji as f32;
             for k in 0..d {
                 x[k] += gamma * wji * (xhat[j][k] - xhat[i][k]);
             }
         }
-        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = w.deg_sum();
         CommStats {
             bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes),
             messages: deg_sum as u64,

@@ -116,12 +116,25 @@ pub enum CommScope {
     All,
 }
 
-/// One round's inbound payloads at a node, keyed by sender id. Construction
-/// sorts by sender so engine iteration order never depends on arrival
-/// order — the message-passing analogue of the round engine's
-/// "accumulate in neighbor order" determinism rule.
+/// One round's inbound payloads at a node, keyed by sender id. Engine
+/// iteration order never depends on arrival order — the message-passing
+/// analogue of the round engine's "accumulate in neighbor order"
+/// determinism rule.
+///
+/// Two representations, same contract:
+///
+/// * [`Inbox::new`] — owned `(sender, payload)` pairs, sorted here;
+/// * [`Inbox::from_frames`] — a borrowed slice of received
+///   [`Frame`](crate::transport::Frame)s the caller sorted by sender
+///   (§Perf: the cluster node's persistent frame buffer, so building an
+///   inbox allocates nothing — pinned by `tests/alloc_discipline.rs`).
 pub struct Inbox<'a> {
-    msgs: Vec<(usize, &'a [u8])>,
+    msgs: InboxRepr<'a>,
+}
+
+enum InboxRepr<'a> {
+    Pairs(Vec<(usize, &'a [u8])>),
+    Frames(&'a [crate::transport::Frame]),
 }
 
 impl<'a> Inbox<'a> {
@@ -131,30 +144,60 @@ impl<'a> Inbox<'a> {
             msgs.windows(2).all(|w| w[0].0 != w[1].0),
             "duplicate sender in inbox"
         );
-        Inbox { msgs }
+        Inbox { msgs: InboxRepr::Pairs(msgs) }
+    }
+
+    /// Borrow a round's frames directly — no per-round allocation. The
+    /// caller must have sorted them by ascending sender (the determinism
+    /// order); duplicate senders are rejected in debug builds.
+    pub fn from_frames(frames: &'a [crate::transport::Frame]) -> Self {
+        debug_assert!(
+            frames.windows(2).all(|w| w[0].sender < w[1].sender),
+            "frames must be sorted by sender, without duplicates"
+        );
+        Inbox { msgs: InboxRepr::Frames(frames) }
     }
 
     /// Payload from sender `from`; panics if that peer's frame is missing
     /// (the cluster round barrier guarantees completeness before recv).
     pub fn payload(&self, from: usize) -> &'a [u8] {
-        self.msgs
-            .iter()
-            .find(|&&(j, _)| j == from)
-            .map(|&(_, p)| p)
-            .unwrap_or_else(|| panic!("inbox missing payload from worker {from}"))
+        let found = match &self.msgs {
+            InboxRepr::Pairs(msgs) => msgs
+                .iter()
+                .find(|&&(j, _)| j == from)
+                .map(|&(_, p)| p),
+            InboxRepr::Frames(frames) => {
+                let frames: &'a [crate::transport::Frame] = *frames;
+                frames
+                    .iter()
+                    .find(|f| f.sender as usize == from)
+                    .map(|f| f.payload.as_slice())
+            }
+        };
+        found.unwrap_or_else(|| panic!("inbox missing payload from worker {from}"))
     }
 
     pub fn len(&self) -> usize {
-        self.msgs.len()
+        match &self.msgs {
+            InboxRepr::Pairs(msgs) => msgs.len(),
+            InboxRepr::Frames(frames) => frames.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.msgs.is_empty()
+        self.len() == 0
     }
 
     /// `(sender, payload)` pairs in ascending sender order.
     pub fn iter(&self) -> impl Iterator<Item = (usize, &'a [u8])> + '_ {
-        self.msgs.iter().copied()
+        let (pairs, frames) = match &self.msgs {
+            InboxRepr::Pairs(msgs) => (Some(msgs.iter().copied()), None),
+            InboxRepr::Frames(fs) => {
+                let fs: &'a [crate::transport::Frame] = *fs;
+                (None, Some(fs.iter().map(|f| (f.sender as usize, f.payload.as_slice()))))
+            }
+        };
+        pairs.into_iter().flatten().chain(frames.into_iter().flatten())
     }
 }
 
@@ -441,6 +484,33 @@ mod tests {
     fn inbox_panics_on_missing_sender() {
         let inbox = Inbox::new(vec![]);
         inbox.payload(3);
+    }
+
+    #[test]
+    fn inbox_from_frames_matches_owned_repr() {
+        use crate::transport::{Frame, FrameKind};
+        let mk = |sender: u16, payload: Vec<u8>| Frame {
+            round: 1,
+            sender,
+            algo: 4,
+            bits: 8,
+            kind: FrameKind::Data,
+            theta: 0.0,
+            payload,
+        };
+        let frames = vec![mk(0, vec![10]), mk(2, vec![20, 21])];
+        let borrowed = Inbox::from_frames(&frames);
+        let owned = Inbox::new(
+            frames.iter().map(|f| (f.sender as usize, f.payload.as_slice())).collect(),
+        );
+        assert_eq!(borrowed.len(), owned.len());
+        for from in [0usize, 2] {
+            assert_eq!(borrowed.payload(from), owned.payload(from));
+        }
+        let a: Vec<(usize, &[u8])> = borrowed.iter().collect();
+        let b: Vec<(usize, &[u8])> = owned.iter().collect();
+        assert_eq!(a, b);
+        assert!(!borrowed.is_empty());
     }
 
     #[test]

@@ -196,11 +196,11 @@ impl SyncAlgorithm for D2 {
                 self.pool.for_each_mut(xs, |i, x| {
                     x.fill(0.0);
                     crate::linalg::axpy(x, w.weight(i, i) as f32, &ws[i].half);
-                    for &j in &w.neighbors[i] {
-                        crate::linalg::axpy(x, w.weight(j, i) as f32, &ws[j].half);
+                    for (j, wji) in w.in_edges(i) {
+                        crate::linalg::axpy(x, wji as f32, &ws[j].half);
                     }
                 });
-                let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+                let deg_sum = self.w.deg_sum();
                 CommStats {
                     bytes_per_msg: self.d * 4,
                     messages: deg_sum as u64,
@@ -236,8 +236,8 @@ impl SyncAlgorithm for D2 {
                     let ws = &self.ws;
                     self.pool.for_each_mut2(xs, &mut self.recover, |i, x, rec| {
                         x.copy_from_slice(&ws[i].half);
-                        for &j in &w.neighbors[i] {
-                            let wji = w.weight(j, i) as f32;
+                        for (j, wji) in w.in_edges(i) {
+                            let wji = wji as f32;
                             codec.recover_packed_into(&ws[j].wire, &ws[i].half, rec);
                             for k in 0..d {
                                 x[k] += wji * (rec[k] - ws[i].xhat_self[k]);
@@ -245,7 +245,7 @@ impl SyncAlgorithm for D2 {
                         }
                     });
                 }
-                let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+                let deg_sum = self.w.deg_sum();
                 CommStats {
                     bytes_per_msg: bytes,
                     messages: deg_sum as u64,
@@ -307,15 +307,15 @@ impl SyncAlgorithm for D2 {
         inbox: &Inbox,
     ) -> CommStats {
         let d = self.d;
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         match self.moniqua.clone() {
             None => {
                 let D2 { w, ws, decode, .. } = self;
                 x.fill(0.0);
                 crate::linalg::axpy(x, w.weight(i, i) as f32, &ws[i].half);
-                for &j in &w.neighbors[i] {
+                for (j, wji) in w.in_edges(i) {
                     common::read_f32s_into(inbox.payload(j), decode);
-                    crate::linalg::axpy(x, w.weight(j, i) as f32, decode);
+                    crate::linalg::axpy(x, wji as f32, decode);
                 }
                 CommStats {
                     bytes_per_msg: d * 4,
@@ -331,11 +331,11 @@ impl SyncAlgorithm for D2 {
                 let D2 { w, ws, recover, .. } = self;
                 let rec = &mut recover[i];
                 x.copy_from_slice(&ws[i].half);
-                for &j in &w.neighbors[i] {
+                for (j, wji) in w.in_edges(i) {
                     let payload = inbox.payload(j);
                     let wire =
                         if cfg.verify_hash { &payload[..wire_len] } else { payload };
-                    let wji = w.weight(j, i) as f32;
+                    let wji = wji as f32;
                     codec.recover_packed_into(wire, &ws[i].half, rec);
                     for k in 0..d {
                         x[k] += wji * (rec[k] - ws[i].xhat_self[k]);

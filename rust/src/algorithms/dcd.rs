@@ -147,8 +147,8 @@ impl SyncAlgorithm for Dcd {
             self.pool.for_each_mut(&mut self.z, |i, z| {
                 z.fill(0.0);
                 crate::linalg::axpy(z, w.weight(i, i) as f32, &xhat[i]);
-                for &j in &w.neighbors[i] {
-                    crate::linalg::axpy(z, w.weight(j, i) as f32, &xhat[j]);
+                for (j, wji) in w.in_edges(i) {
+                    crate::linalg::axpy(z, wji as f32, &xhat[j]);
                 }
                 crate::linalg::axpy(z, -lr, &grads[i]);
             });
@@ -186,7 +186,7 @@ impl SyncAlgorithm for Dcd {
             let z = &self.z;
             self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&z[i]));
         }
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         CommStats {
             bytes_per_msg: bytes,
             messages: deg_sum as u64,
@@ -224,8 +224,8 @@ impl SyncAlgorithm for Dcd {
             let z = &mut z[i];
             z.fill(0.0);
             crate::linalg::axpy(z, w.weight(i, i) as f32, &xhat[i]);
-            for &j in &w.neighbors[i] {
-                crate::linalg::axpy(z, w.weight(j, i) as f32, &xhat[j]);
+            for (j, wji) in w.in_edges(i) {
+                crate::linalg::axpy(z, wji as f32, &xhat[j]);
             }
             crate::linalg::axpy(z, -lr, grad);
         }
@@ -289,7 +289,7 @@ impl SyncAlgorithm for Dcd {
             }
         }
         x.copy_from_slice(&z[i]);
-        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = w.deg_sum();
         CommStats {
             bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes) + if dynamic { 4 } else { 0 },
             messages: deg_sum as u64,

@@ -138,15 +138,15 @@ impl SyncAlgorithm for DeepSqueeze {
             let ws = &self.ws;
             self.pool.for_each_mut(xs, |i, x| {
                 x.copy_from_slice(&ws[i].v);
-                for &j in &w.neighbors[i] {
-                    let wji = w.weight(j, i) as f32;
+                for (j, wji) in w.in_edges(i) {
+                    let wji = wji as f32;
                     for k in 0..d {
                         x[k] += gamma * wji * (ws[j].c[k] - ws[i].c[k]);
                     }
                 }
             });
         }
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         CommStats {
             bytes_per_msg: bytes,
             messages: deg_sum as u64,
@@ -198,7 +198,7 @@ impl SyncAlgorithm for DeepSqueeze {
         let gamma = self.gamma as f32;
         let DeepSqueeze { w, ws, node_codes, node_vals, .. } = self;
         x.copy_from_slice(&ws[i].v);
-        for &j in &w.neighbors[i] {
+        for (j, wji) in w.in_edges(i) {
             common::decode_baseline_payload(
                 &quant,
                 false,
@@ -207,12 +207,12 @@ impl SyncAlgorithm for DeepSqueeze {
                 node_codes,
                 node_vals,
             );
-            let wji = w.weight(j, i) as f32;
+            let wji = wji as f32;
             for k in 0..d {
                 x[k] += gamma * wji * (node_vals[k] - ws[i].c[k]);
             }
         }
-        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = w.deg_sum();
         CommStats {
             bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes),
             messages: deg_sum as u64,

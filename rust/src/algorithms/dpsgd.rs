@@ -61,8 +61,8 @@ impl SyncAlgorithm for DPsgd {
             self.pool.for_each_mut(&mut self.scratch, |i, out| {
                 out.fill(0.0);
                 crate::linalg::axpy(out, w.weight(i, i) as f32, &xs_r[i]);
-                for &j in &w.neighbors[i] {
-                    crate::linalg::axpy(out, w.weight(j, i) as f32, &xs_r[j]);
+                for (j, wji) in w.in_edges(i) {
+                    crate::linalg::axpy(out, wji as f32, &xs_r[j]);
                 }
                 crate::linalg::axpy(out, -lr, &grads[i]);
             });
@@ -71,7 +71,7 @@ impl SyncAlgorithm for DPsgd {
             let scratch = &self.scratch;
             self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&scratch[i]));
         }
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         CommStats {
             bytes_per_msg: self.d * 4, // full f32 model
             messages: deg_sum as u64,
@@ -108,13 +108,13 @@ impl SyncAlgorithm for DPsgd {
         let out = &mut scratch[i];
         out.fill(0.0);
         crate::linalg::axpy(out, w.weight(i, i) as f32, x);
-        for &j in &w.neighbors[i] {
+        for (j, wji) in w.in_edges(i) {
             common::read_f32s_into(inbox.payload(j), decode);
-            crate::linalg::axpy(out, w.weight(j, i) as f32, decode);
+            crate::linalg::axpy(out, wji as f32, decode);
         }
         crate::linalg::axpy(out, -lr, grad);
         x.copy_from_slice(out);
-        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = w.deg_sum();
         CommStats {
             bytes_per_msg: self.d * 4,
             messages: deg_sum as u64,

@@ -144,8 +144,8 @@ impl SyncAlgorithm for Ecd {
             self.pool.for_each_mut(&mut self.x_new, |i, xn| {
                 xn.fill(0.0);
                 crate::linalg::axpy(xn, w.weight(i, i) as f32, &xhat[i]);
-                for &j in &w.neighbors[i] {
-                    crate::linalg::axpy(xn, w.weight(j, i) as f32, &xhat[j]);
+                for (j, wji) in w.in_edges(i) {
+                    crate::linalg::axpy(xn, wji as f32, &xhat[j]);
                 }
                 crate::linalg::axpy(xn, -lr, &grads[i]);
             });
@@ -185,7 +185,7 @@ impl SyncAlgorithm for Ecd {
             let x_new = &self.x_new;
             self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&x_new[i]));
         }
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         CommStats {
             bytes_per_msg: bytes,
             messages: deg_sum as u64,
@@ -221,8 +221,8 @@ impl SyncAlgorithm for Ecd {
             let xn = &mut x_new[i];
             xn.fill(0.0);
             crate::linalg::axpy(xn, w.weight(i, i) as f32, &xhat[i]);
-            for &j in &w.neighbors[i] {
-                crate::linalg::axpy(xn, w.weight(j, i) as f32, &xhat[j]);
+            for (j, wji) in w.in_edges(i) {
+                crate::linalg::axpy(xn, wji as f32, &xhat[j]);
             }
             crate::linalg::axpy(xn, -lr, grad);
         }
@@ -281,7 +281,7 @@ impl SyncAlgorithm for Ecd {
             }
         }
         x.copy_from_slice(&x_new[i]);
-        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = w.deg_sum();
         CommStats {
             bytes_per_msg: common::wire_bytes(&cfg, &ws[i].codes) + if dynamic { 4 } else { 0 },
             messages: deg_sum as u64,

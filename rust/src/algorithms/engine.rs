@@ -163,6 +163,96 @@ impl Default for RoundPool {
     }
 }
 
+/// Chunk size (in codes) of the pooled fused-codec paths: 32 Ki codes is
+/// 128 KiB of f32 input — sized to stream through a per-core L2 — and a
+/// multiple of 64, so every chunk boundary lands on an 8-byte word boundary
+/// of the packed stream at *every* bit width (`64·bits ≡ 0 (mod 8)`).
+/// Word-aligned boundaries are what let each chunk run the word kernels
+/// independently with byte-identical output to the single-pass kernel.
+pub const CODEC_CHUNK_CODES: usize = 1 << 15;
+
+impl RoundPool {
+    /// Fused encode ([`crate::quant::MoniquaCodec::encode_packed_into`]) blocked into
+    /// cache-sized, word-aligned chunks and fanned across the pool.
+    ///
+    /// Bitwise-identical to the single-pass kernel at every pool width
+    /// (each element's code is a pure function of its index, and chunk
+    /// writes are disjoint byte ranges), pinned by
+    /// `tests/quant_properties.rs`. Width-1 pools and small inputs take the
+    /// single-pass kernel directly — no chunk bookkeeping, no allocation
+    /// (the cluster runtime's per-node engines run exactly this path).
+    pub fn encode_packed(
+        &self,
+        codec: &crate::quant::MoniquaCodec,
+        x: &[f32],
+        noise: &[f32],
+        out: &mut [u8],
+    ) {
+        let n = x.len();
+        if self.threads <= 1 || n < 2 * CODEC_CHUNK_CODES {
+            codec.encode_packed_into(x, noise, out);
+            return;
+        }
+        let byte_per = CODEC_CHUNK_CODES * codec.bits() as usize / 8;
+        let mut chunks: Vec<(&[f32], &[f32], &mut [u8])> =
+            Vec::with_capacity(n.div_ceil(CODEC_CHUNK_CODES));
+        let mut xr = x;
+        // Nearest-rounding callers pass an ignored (possibly d-length)
+        // noise buffer; slice it alongside x only when it actually zips.
+        let mut nr = if noise.len() == n { noise } else { &[][..] };
+        let mut or: &mut [u8] = out;
+        while xr.len() > CODEC_CHUNK_CODES {
+            let (xa, xb) = xr.split_at(CODEC_CHUNK_CODES);
+            let (na, nb) = if nr.is_empty() {
+                (nr, nr)
+            } else {
+                nr.split_at(CODEC_CHUNK_CODES)
+            };
+            let (oa, ob) = std::mem::replace(&mut or, &mut []).split_at_mut(byte_per);
+            chunks.push((xa, na, oa));
+            xr = xb;
+            nr = nb;
+            or = ob;
+        }
+        chunks.push((xr, nr, or));
+        self.for_each_mut(&mut chunks, |_, c| codec.encode_packed_into(c.0, c.1, c.2));
+    }
+
+    /// Fused recover ([`crate::quant::MoniquaCodec::recover_packed_into`]) blocked into
+    /// the same word-aligned chunks as [`Self::encode_packed`] and fanned
+    /// across the pool. Same bitwise-identity contract.
+    pub fn recover_packed(
+        &self,
+        codec: &crate::quant::MoniquaCodec,
+        bytes: &[u8],
+        y: &[f32],
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        if self.threads <= 1 || n < 2 * CODEC_CHUNK_CODES {
+            codec.recover_packed_into(bytes, y, out);
+            return;
+        }
+        let byte_per = CODEC_CHUNK_CODES * codec.bits() as usize / 8;
+        let mut chunks: Vec<(&[u8], &[f32], &mut [f32])> =
+            Vec::with_capacity(n.div_ceil(CODEC_CHUNK_CODES));
+        let mut br = bytes;
+        let mut yr = y;
+        let mut or: &mut [f32] = out;
+        while or.len() > CODEC_CHUNK_CODES {
+            let (ba, bb) = br.split_at(byte_per);
+            let (ya, yb) = yr.split_at(CODEC_CHUNK_CODES);
+            let (oa, ob) = std::mem::replace(&mut or, &mut []).split_at_mut(CODEC_CHUNK_CODES);
+            chunks.push((ba, ya, oa));
+            br = bb;
+            yr = yb;
+            or = ob;
+        }
+        chunks.push((br, yr, or));
+        self.for_each_mut(&mut chunks, |_, c| codec.recover_packed_into(c.0, c.1, c.2));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

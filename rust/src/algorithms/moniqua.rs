@@ -214,8 +214,8 @@ impl SyncAlgorithm for MoniquaSync {
             self.pool.for_each_mut(&mut self.recv, |i, rs| {
                 rs.failures = 0;
                 rs.acc.fill(0.0);
-                for &j in &w.neighbors[i] {
-                    let wji = w.weight(j, i) as f32;
+                for (j, wji) in w.in_edges(i) {
+                    let wji = wji as f32;
                     codec.recover_packed_into(&send[j].wire, &xs_r[i], &mut rs.recover);
                     if cfg.verify_hash
                         && !hash::verify_reconstruction(&codec, &rs.recover, send[j].digest)
@@ -245,7 +245,7 @@ impl SyncAlgorithm for MoniquaSync {
             });
         }
 
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         CommStats {
             bytes_per_msg,
             messages: deg_sum as u64,
@@ -273,10 +273,12 @@ impl SyncAlgorithm for MoniquaSync {
         if cfg.shared_randomness {
             common::rounding_noise(&cfg, seed, round, 0, d, &mut self.shared_noise);
         }
-        let MoniquaSync { send, shared_noise, .. } = self;
+        let MoniquaSync { send, shared_noise, pool, .. } = self;
         let ws = &mut send[i];
         let noise = common::phase_noise(&cfg, seed, round, i, d, shared_noise, &mut ws.noise);
-        codec.encode_packed_into(x, noise, &mut ws.wire);
+        // Chunked across this node's pool when one is configured; width-1
+        // pools (the cluster default) take the plain fused kernel inline.
+        pool.encode_packed(&codec, x, noise, &mut ws.wire);
         codec.local_biased_into(x, noise, &mut ws.xhat_self);
         payload.extend_from_slice(&ws.wire);
         if cfg.verify_hash {
@@ -301,11 +303,11 @@ impl SyncAlgorithm for MoniquaSync {
         let cfg = self.cfg;
         let d = self.d;
         let wire_len = packing::packed_len(d, cfg.bits);
-        let MoniquaSync { w, send, recv, verify_failures, .. } = self;
+        let MoniquaSync { w, send, recv, verify_failures, pool, .. } = self;
         let rs = &mut recv[i];
         rs.failures = 0;
         rs.acc.fill(0.0);
-        for &j in &w.neighbors[i] {
+        for (j, wji) in w.in_edges(i) {
             let payload = inbox.payload(j);
             let (wire, digest) = if cfg.verify_hash {
                 let (wb, db) = payload.split_at(wire_len);
@@ -313,8 +315,8 @@ impl SyncAlgorithm for MoniquaSync {
             } else {
                 (payload, 0u64)
             };
-            let wji = w.weight(j, i) as f32;
-            codec.recover_packed_into(wire, x, &mut rs.recover);
+            let wji = wji as f32;
+            pool.recover_packed(&codec, wire, x, &mut rs.recover);
             if cfg.verify_hash && !hash::verify_reconstruction(&codec, &rs.recover, digest) {
                 rs.failures += 1;
             }
@@ -327,7 +329,7 @@ impl SyncAlgorithm for MoniquaSync {
         for k in 0..d {
             x[k] += rs.acc[k] - lr * grad[k];
         }
-        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = w.deg_sum();
         CommStats {
             bytes_per_msg: common::wire_bytes_packed(&cfg, d, &send[i].wire),
             messages: deg_sum as u64,

@@ -101,8 +101,8 @@ impl SyncAlgorithm for NaiveQuant {
             self.pool.for_each_mut(&mut self.scratch, |i, out| {
                 out.fill(0.0);
                 crate::linalg::axpy(out, w.weight(i, i) as f32, &xs_r[i]);
-                for &j in &w.neighbors[i] {
-                    crate::linalg::axpy(out, w.weight(j, i) as f32, &enc[j].qval);
+                for (j, wji) in w.in_edges(i) {
+                    crate::linalg::axpy(out, wji as f32, &enc[j].qval);
                 }
                 crate::linalg::axpy(out, -lr, &grads[i]);
             });
@@ -111,7 +111,7 @@ impl SyncAlgorithm for NaiveQuant {
             let scratch = &self.scratch;
             self.pool.for_each_mut(xs, |i, x| x.copy_from_slice(&scratch[i]));
         }
-        let deg_sum: usize = self.w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = self.w.deg_sum();
         CommStats {
             bytes_per_msg: bytes,
             messages: deg_sum as u64,
@@ -156,7 +156,7 @@ impl SyncAlgorithm for NaiveQuant {
         let out = &mut scratch[i];
         out.fill(0.0);
         crate::linalg::axpy(out, w.weight(i, i) as f32, x);
-        for &j in &w.neighbors[i] {
+        for (j, wji) in w.in_edges(i) {
             common::decode_baseline_payload(
                 &quant,
                 false,
@@ -165,11 +165,11 @@ impl SyncAlgorithm for NaiveQuant {
                 node_codes,
                 node_vals,
             );
-            crate::linalg::axpy(out, w.weight(j, i) as f32, node_vals);
+            crate::linalg::axpy(out, wji as f32, node_vals);
         }
         crate::linalg::axpy(out, -lr, grad);
         x.copy_from_slice(out);
-        let deg_sum: usize = w.neighbors.iter().map(|v| v.len()).sum();
+        let deg_sum = w.deg_sum();
         CommStats {
             bytes_per_msg: common::wire_bytes(&cfg, &enc[i].codes),
             messages: deg_sum as u64,

@@ -500,15 +500,31 @@ fn run_node(
 
     let mut x = objective.init();
     let mut grad = vec![0.0f32; d];
-    let mut payload: Vec<u8> = Vec::new();
-    // Data frames from workers running ahead of us, keyed (round, sender).
-    let mut pending: BTreeMap<(u64, usize), Frame> = BTreeMap::new();
+    // Round-local buffers come out of a per-node arena (§Perf): after the
+    // warm-up rounds every checkout is recycled capacity, so a steady-state
+    // round allocates nothing (tests/alloc_discipline.rs).
+    let mut arena = crate::mem::ScratchArena::new();
+    let mut payload: Vec<u8> = arena.take_bytes();
+    // Data frames from workers running ahead of us. A peer can run at most
+    // one round ahead (it needs our round-k frame to pass its own round-k
+    // barrier), so this stays tiny in steady state; crash replay preloads
+    // the whole frame log into it. A linear-scan Vec with swap_remove
+    // keeps the steady-state path allocation-free — the BTreeMap it
+    // replaces allocated/freed a node every time it emptied and refilled.
+    let mut parked: Vec<Frame> = Vec::new();
     // Bootstrap frames waiting for their join round, keyed by round: a
     // bootstrapper past an upcoming barrier can deliver one while we are
     // still in an earlier round's recv loop, and crash replay reloads them
     // from the log.
     let mut boot_pending: BTreeMap<u64, Frame> = BTreeMap::new();
+    // This round's barrier frames, reused across rounds (payload buffers
+    // are recycled into the transport's pool after the recv half).
+    let mut got: Vec<Frame> = Vec::new();
+    // Peer list of the current epoch (recomputed only at epoch boundaries,
+    // not per round).
+    let mut peers: Vec<usize> = Vec::new();
     let mut trace = NodeTrace::starting_at(start_round);
+    trace.reserve((steps - start_round) as usize);
     let mut lr = lr_at(&spec.cfg, start_round);
     let mut g_inf = 0.0f64;
     let mut crashes = spec.crashes.iter().copied().peekable();
@@ -557,7 +573,7 @@ fn run_node(
                 .expect("crash plans are validated to carry a ckpt_dir");
             let snap = load_checkpoint(dir, i)
                 .unwrap_or_else(|e| panic!("worker {i}: corrupt checkpoint: {e}"));
-            pending.clear();
+            parked.clear();
             boot_pending.clear();
             for f in FrameLog::read_all(dir, i)
                 .unwrap_or_else(|e| panic!("worker {i}: corrupt frame log: {e}"))
@@ -565,7 +581,7 @@ fn run_node(
                 match f.kind {
                     FrameKind::Data => {
                         validate_data_frame(i, &f, &spec);
-                        pending.insert((f.round, f.sender as usize), f);
+                        parked.push(f);
                     }
                     FrameKind::Bootstrap => {
                         boot_pending.insert(f.round, f);
@@ -616,6 +632,9 @@ fn run_node(
                     engine.name()
                 );
             }
+            // Peer set is a pure function of the epoch: compute it once
+            // here instead of cloning the adjacency row every round.
+            peers = peers_of(ep, i, spec.scope);
             cur_epoch = ep_idx;
         }
 
@@ -662,7 +681,7 @@ fn run_node(
                             i,
                             round,
                             &mut transport,
-                            &mut pending,
+                            &mut parked,
                             &mut boot_pending,
                             framelog.as_mut(),
                             &spec,
@@ -712,7 +731,6 @@ fn run_node(
             payload: std::mem::take(&mut payload),
         };
         let send_compute = t1.elapsed().as_secs_f64();
-        let peers = peers_of(ep, i, spec.scope);
         if round >= live_from {
             // One broadcast call: the frame is serialized + checksummed once
             // and the wire bytes are reused for every peer.
@@ -726,9 +744,9 @@ fn run_node(
         trace.bytes_sent += peers.len() as u64 * frame.encoded_len() as u64;
 
         // --- round barrier from the frames themselves ----------------------
-        let mut got: Vec<Frame> = Vec::with_capacity(peers.len());
+        got.clear();
         for &p in &peers {
-            if let Some(f) = pending.remove(&(round, p)) {
+            if let Some(f) = take_parked(&mut parked, round, p) {
                 got.push(f);
             }
         }
@@ -778,16 +796,24 @@ fn run_node(
             if f.round == round {
                 got.push(f);
             } else {
-                pending.insert((f.round, from), f);
+                parked.push(f);
             }
         }
 
         // --- recv half -----------------------------------------------------
         let t2 = Instant::now();
-        let inbox = Inbox::new(
-            got.iter().map(|f| (f.sender as usize, f.payload.as_slice())).collect(),
-        );
-        let stats = engine.node_recv(i, &mut x, &grad, lr, round, &ctx, &inbox);
+        // Ascending-sender order is the engines' determinism contract;
+        // sort_unstable is in-place, and the borrowed inbox makes this the
+        // allocation-free path (Inbox::from_frames).
+        got.sort_unstable_by_key(|f| f.sender);
+        let stats = {
+            let inbox = Inbox::from_frames(&got);
+            engine.node_recv(i, &mut x, &grad, lr, round, &ctx, &inbox)
+        };
+        // Consumed payload buffers go back to the transport's wire pool.
+        for f in got.drain(..) {
+            transport.recycle(f.payload);
+        }
         trace.push_round(
             round,
             loss,
@@ -807,7 +833,7 @@ fn run_node(
             && (round + 1) % spec.ckpt_every == 0
         {
             if let Some(dir) = spec.ckpt_dir.as_ref() {
-                let mut engine_blob = Vec::new();
+                let mut engine_blob = arena.take_bytes();
                 engine.snapshot(&mut engine_blob);
                 let snap = Snapshot {
                     worker: i as u16,
@@ -820,13 +846,16 @@ fn run_node(
                     trace: trace.clone(),
                 };
                 write_checkpoint(dir, &snap).expect("write checkpoint");
+                arena.give_bytes(snap.engine);
                 if let Some(log) = framelog.as_mut() {
                     // The log's new epoch is "everything since this
                     // snapshot": truncate, then re-log frames that were
                     // received but not yet consumed (data frames parked for
                     // future rounds and any early-delivered bootstrap).
+                    // Replay consumes them by (round, sender) lookup, so
+                    // their order in the log does not matter.
                     log.truncate().expect("truncate frame log");
-                    for f in pending.values() {
+                    for f in &parked {
                         log.append(f).expect("re-log pending frame");
                     }
                     for f in boot_pending.values() {
@@ -850,6 +879,17 @@ fn lr_at(cfg: &TrainConfig, round: u64) -> f32 {
         }
     }
     lr
+}
+
+/// Remove and return the parked frame for `(round, sender)`, if present.
+/// Linear scan + `swap_remove`: the parked set holds at most one frame per
+/// peer in steady state (see `run_node`), and replay consumption order is
+/// keyed, not positional.
+fn take_parked(parked: &mut Vec<Frame>, round: u64, sender: usize) -> Option<Frame> {
+    parked
+        .iter()
+        .position(|f| f.round == round && f.sender as usize == sender)
+        .map(|at| parked.swap_remove(at))
 }
 
 /// The `(round, sender)` pairs a barrier is still waiting on.
@@ -891,7 +931,7 @@ fn wait_for_bootstrap(
     i: usize,
     round: u64,
     transport: &mut Box<dyn Transport>,
-    pending: &mut BTreeMap<(u64, usize), Frame>,
+    parked: &mut Vec<Frame>,
     boot_pending: &mut BTreeMap<u64, Frame>,
     mut framelog: Option<&mut FrameLog>,
     spec: &NodeSpec<'_>,
@@ -923,7 +963,7 @@ fn wait_for_bootstrap(
                     "worker {i}: pre-join round-{} frame from {from}",
                     f.round
                 );
-                pending.insert((f.round, from), f);
+                parked.push(f);
             }
         }
     }

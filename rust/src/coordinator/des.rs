@@ -446,10 +446,7 @@ impl DesTrainer {
 
             // --- trace ----------------------------------------------------
             if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
-                crate::linalg::mean_into(
-                    &mut mean,
-                    &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-                );
+                crate::linalg::mean_into(&mut mean, &xs);
                 let eval = self.objective.eval(&mean);
                 let consensus = xs
                     .iter()
@@ -471,10 +468,7 @@ impl DesTrainer {
         report.total_bytes = total_bytes;
         report.total_messages = self.messages_sent;
         report.final_params = {
-            crate::linalg::mean_into(
-                &mut mean,
-                &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-            );
+            crate::linalg::mean_into(&mut mean, &xs);
             mean.clone()
         };
         report
@@ -693,10 +687,7 @@ impl DesAsyncTrainer {
                     );
 
                     if event % self.eval_every == 0 || event + 1 == self.events {
-                        crate::linalg::mean_into(
-                            &mut mean,
-                            &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-                        );
+                        crate::linalg::mean_into(&mut mean, &xs);
                         let eval = objective.eval(&mean);
                         let consensus = xs
                             .iter()
@@ -724,10 +715,7 @@ impl DesAsyncTrainer {
         self.out.stale_fallbacks = engine.stale_fallbacks;
         report.total_bytes = total_bytes;
         report.total_messages = messages;
-        crate::linalg::mean_into(
-            &mut mean,
-            &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-        );
+        crate::linalg::mean_into(&mut mean, &xs);
         report.final_params = mean;
         report
     }

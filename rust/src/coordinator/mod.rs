@@ -107,17 +107,21 @@ impl RoundLedger {
 }
 
 /// Mean-model evaluation + consensus for one trace row, shared by both
-/// runtimes (identical summation order: ascending worker index).
-pub(crate) fn eval_mean(
+/// runtimes (identical summation order: ascending worker index). Generic
+/// over the row type — the lockstep trainers pass their `Vec<Vec<f32>>`
+/// state directly, the cluster reassembly passes its filtered
+/// `Vec<&[f32]>` — so every caller runs the same float ops in the same
+/// order without a per-eval slice vector (§Perf).
+pub(crate) fn eval_mean<V: AsRef<[f32]>>(
     objective: &mut dyn Objective,
-    xs: &[&[f32]],
+    xs: &[V],
     mean: &mut [f32],
 ) -> (crate::objectives::Eval, f64) {
     crate::linalg::mean_into(mean, xs);
     let eval = objective.eval(mean);
     let consensus = xs
         .iter()
-        .map(|x| crate::linalg::linf_dist(x, mean))
+        .map(|x| crate::linalg::linf_dist(x.as_ref(), mean))
         .fold(0.0f32, f32::max);
     (eval, consensus as f64)
 }
@@ -245,9 +249,8 @@ impl Trainer {
 
             // --- trace ----------------------------------------------------
             if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
-                let refs: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
                 let (eval, consensus) =
-                    eval_mean(self.objective.as_mut(), &refs, &mut mean);
+                    eval_mean(self.objective.as_mut(), &xs, &mut mean);
                 report.trace.push(TraceRow {
                     step,
                     sim_time_s: ledger.sim_time,
@@ -262,10 +265,7 @@ impl Trainer {
         }
         ledger.finish(&mut report);
         report.final_params = {
-            crate::linalg::mean_into(
-                &mut mean,
-                &xs.iter().map(|x| x.as_slice()).collect::<Vec<_>>(),
-            );
+            crate::linalg::mean_into(&mut mean, &xs);
             mean.clone()
         };
         report

@@ -277,6 +277,19 @@ impl NodeTrace {
         self.losses.len()
     }
 
+    /// Pre-size the per-round vectors for `additional` more rounds (§Perf:
+    /// the cluster node reserves its whole run up front so steady-state
+    /// `push_round`s never hit an amortized growth reallocation —
+    /// `tests/alloc_discipline.rs` counts on it).
+    pub fn reserve(&mut self, additional: usize) {
+        self.rounds.reserve(additional);
+        self.losses.reserve(additional);
+        self.thetas.reserve(additional);
+        self.stats.reserve(additional);
+        self.grad_wall.reserve(additional);
+        self.algo_wall.reserve(additional);
+    }
+
     pub fn is_empty(&self) -> bool {
         self.losses.is_empty()
     }

@@ -80,6 +80,7 @@ pub mod coordinator;
 pub mod data;
 pub mod elastic;
 pub mod linalg;
+pub mod mem;
 pub mod network;
 pub mod objectives;
 pub mod quant;

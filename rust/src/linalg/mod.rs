@@ -63,12 +63,16 @@ pub fn linf_dist(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
 }
 
-/// Mean of several equal-length vectors into `out`.
-pub fn mean_into(out: &mut [f32], vs: &[&[f32]]) {
+/// Mean of several equal-length vectors into `out`. Generic over the row
+/// type so callers holding `Vec<Vec<f32>>` state (the trainers' eval path,
+/// every `eval_every` rounds) pass their rows directly instead of
+/// materializing a `Vec<&[f32]>` per call (§Perf) — one accumulation loop,
+/// one summation order, for every caller.
+pub fn mean_into<V: AsRef<[f32]>>(out: &mut [f32], vs: &[V]) {
     assert!(!vs.is_empty());
     out.fill(0.0);
     for v in vs {
-        axpy(out, 1.0, v);
+        axpy(out, 1.0, v.as_ref());
     }
     scale(out, 1.0 / vs.len() as f32);
 }

@@ -1,0 +1,174 @@
+//! Buffer pools for zero-allocation steady-state rounds (§Perf).
+//!
+//! A synchronous round touches three kinds of transient buffers: the
+//! payload a node encodes, the wire bytes a transport ships, and the
+//! received frames a node integrates. Before this module each of those was
+//! a fresh heap allocation per round per peer; now every one is **checked
+//! out** of a pool on first use and **returned** when its round is done, so
+//! a steady-state round performs zero heap allocations — enforced by the
+//! counting-allocator suite in `tests/alloc_discipline.rs` (two warm-up
+//! rounds, then a zero budget for the next N rounds across
+//! moniqua/dpsgd/choco on the mem transport).
+//!
+//! Two types, split by ownership:
+//!
+//! * [`FramePool`] — a cheaply-clonable, thread-shared pool of `Vec<u8>`
+//!   wire buffers. Both transports draw from one pool per cluster: a
+//!   sender checks a buffer out, encodes the frame into it, and the
+//!   *receiver* (via [`Transport::recycle`](crate::transport::Transport::recycle))
+//!   returns it after the engine consumed the payload — so after warm-up
+//!   the same few buffers just circulate. A `Mutex<Vec<_>>` is plenty: the
+//!   lock is held for one push/pop, far off the critical path next to the
+//!   per-frame memcpy.
+//! * [`ScratchArena`] — a single-owner checkout pool for round-local byte
+//!   scratch, used where a buffer's lifetime is one round but its owner
+//!   persists (the cluster node's payload buffer and checkpoint engine
+//!   blob; the DES/lockstep trainers need no arena — their former per-eval
+//!   allocation was removed by making `linalg::mean_into` generic).
+//!
+//! ## Why pooling preserves bitwise determinism
+//!
+//! A checked-out buffer is always `clear()`ed (length 0) before reuse and
+//! every producer writes its full contents before any consumer reads it —
+//! stale *capacity* is recycled, stale *bytes* are never observable. The
+//! value path is byte-for-byte what freshly-allocated buffers produce,
+//! which is why the cluster/golden equivalence suites run unchanged on top
+//! of the pools.
+
+use std::sync::{Arc, Mutex};
+
+/// Upper bound on pooled buffers kept per pool — a backstop so a transient
+/// burst (e.g. a crash replay loading a long frame log) cannot pin its
+/// high-water mark in memory forever.
+const MAX_POOLED: usize = 256;
+
+/// Thread-shared pool of byte buffers (see module docs). Clones share the
+/// same pool.
+#[derive(Clone, Default)]
+pub struct FramePool {
+    bufs: Arc<Mutex<Vec<Vec<u8>>>>,
+}
+
+impl FramePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check a buffer out: recycled (empty, capacity retained) when one is
+    /// pooled, freshly allocated otherwise.
+    pub fn take(&self) -> Vec<u8> {
+        self.bufs
+            .lock()
+            .expect("frame pool poisoned")
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool. Contents are cleared; capacity is what
+    /// makes the next [`Self::take`] allocation-free.
+    pub fn give(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        let mut g = self.bufs.lock().expect("frame pool poisoned");
+        if g.len() < MAX_POOLED {
+            g.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().expect("frame pool poisoned").len()
+    }
+}
+
+/// Single-owner checkout pool for round-local scratch buffers.
+#[derive(Default)]
+pub struct ScratchArena {
+    bytes: Vec<Vec<u8>>,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out an empty byte buffer (capacity recycled when available).
+    pub fn take_bytes(&mut self) -> Vec<u8> {
+        self.bytes.pop().unwrap_or_default()
+    }
+
+    /// Return a byte buffer checked out with [`Self::take_bytes`].
+    pub fn give_bytes(&mut self, mut buf: Vec<u8>) {
+        buf.clear();
+        if self.bytes.len() < MAX_POOLED {
+            self.bytes.push(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_pool_recycles_capacity() {
+        let pool = FramePool::new();
+        let mut b = pool.take();
+        b.extend_from_slice(&[1u8; 4096]);
+        let cap = b.capacity();
+        let ptr = b.as_ptr();
+        pool.give(b);
+        assert_eq!(pool.pooled(), 1);
+        let b2 = pool.take();
+        assert_eq!(b2.len(), 0, "recycled buffers come back empty");
+        assert!(b2.capacity() >= cap);
+        assert_eq!(b2.as_ptr(), ptr, "same allocation circulates");
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    #[test]
+    fn frame_pool_is_shared_across_clones() {
+        let pool = FramePool::new();
+        let clone = pool.clone();
+        clone.give(Vec::with_capacity(128));
+        assert_eq!(pool.pooled(), 1);
+        assert!(pool.take().capacity() >= 128);
+    }
+
+    #[test]
+    fn frame_pool_bounds_its_size() {
+        let pool = FramePool::new();
+        for _ in 0..(MAX_POOLED + 50) {
+            pool.give(Vec::with_capacity(8));
+        }
+        assert_eq!(pool.pooled(), MAX_POOLED);
+    }
+
+    #[test]
+    fn arena_checkout_roundtrip() {
+        let mut a = ScratchArena::new();
+        let mut b = a.take_bytes();
+        b.resize(100, 7);
+        a.give_bytes(b);
+        let back = a.take_bytes();
+        assert!(back.capacity() >= 100);
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn concurrent_checkouts_are_safe() {
+        let pool = FramePool::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let p = pool.clone();
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        let mut b = p.take();
+                        b.push(1);
+                        p.give(b);
+                    }
+                });
+            }
+        });
+        assert!(pool.pooled() <= 4);
+    }
+}

@@ -11,8 +11,10 @@
 //!   [`MoniquaCodec::encode_packed_into`] /
 //!   [`MoniquaCodec::recover_packed_into`] (quantize⇄bit-pack in one pass,
 //!   no intermediate code vector — DESIGN.md §Engine).
-//! * [`packing`] — bit-packing integer codes at 1..=16 bits/parameter
-//!   (the standalone form of what the fused codec paths inline).
+//! * [`packing`] — bit-packing integer codes at 1..=16 bits/parameter via
+//!   the §Perf word-level kernels; the fused codec paths feed the same
+//!   kernels through per-index closures, so the wire layout has exactly
+//!   one implementation (plus a retained byte-accumulator reference).
 //! * [`entropy`] — optional lossless recompression of packed code streams
 //!   (bzip2 / deflate / in-crate RLE), the paper's §6 "bzip" trick.
 //! * [`hash`] — FNV-1a digest of the code stream for the paper's §6

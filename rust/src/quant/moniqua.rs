@@ -143,56 +143,30 @@ impl MoniquaCodec {
     /// This is the wire path: it produces bit-identical bytes to
     /// `encode_into` followed by [`packing::pack_into`], but never
     /// materializes the intermediate `Vec<u32>` code vector — one pass over
-    /// `x`, one pass over `out`. Byte-aligned budgets (8/16 bits) skip the
-    /// bit accumulator entirely, mirroring `pack_into`'s fast paths.
+    /// `x`, one pass over `out`. The bit layout is owned entirely by
+    /// [`packing::pack_with`]'s word kernels (§Perf): this method only
+    /// supplies the per-index quantizer closure, so the fused and unfused
+    /// paths cannot diverge on layout.
     pub fn encode_packed_into(&self, x: &[f32], noise: &[f32], out: &mut [u8]) {
         let bits = self.bits();
         assert_eq!(out.len(), packing::packed_len(x.len(), bits));
         let ker = self.encode_kernel();
-        let stochastic = ker.stochastic();
-        if stochastic {
+        // The shared [`EncodeKernel`] guarantees the closure below is
+        // bitwise the same computation as `encode_into`; the branch is
+        // hoisted so the word kernels see a noise-free closure in nearest
+        // mode.
+        if ker.stochastic() {
             debug_assert_eq!(noise.len(), x.len());
-        }
-        // The shared [`EncodeKernel`] guarantees every specialization below
-        // is bitwise the same computation as `encode_into`.
-        let code_at = |i: usize| -> u32 {
-            ker.code(x[i], if stochastic { noise[i] } else { 0.0 })
-        };
-        match bits {
-            8 => {
-                for (i, o) in out.iter_mut().enumerate() {
-                    *o = code_at(i) as u8;
-                }
-            }
-            16 => {
-                for (i, o) in out.chunks_exact_mut(2).enumerate() {
-                    o.copy_from_slice(&(code_at(i) as u16).to_le_bytes());
-                }
-            }
-            _ => {
-                let mut acc: u64 = 0;
-                let mut nbits: u32 = 0;
-                let mut o = 0usize;
-                for i in 0..x.len() {
-                    acc |= (code_at(i) as u64) << nbits;
-                    nbits += bits;
-                    while nbits >= 8 {
-                        out[o] = acc as u8;
-                        o += 1;
-                        acc >>= 8;
-                        nbits -= 8;
-                    }
-                }
-                if nbits > 0 {
-                    out[o] = acc as u8;
-                }
-            }
+            packing::pack_with(bits, x.len(), out, |i| ker.code(x[i], noise[i]));
+        } else {
+            packing::pack_with(bits, x.len(), out, |i| ker.code(x[i], 0.0));
         }
     }
 
     /// Fused **unpack + line 5**: reconstruct the remote vector straight
     /// from the packed wire bytes, never materializing a `Vec<u32>`.
-    /// Bitwise identical to [`packing::unpack_into`] + `recover_into`.
+    /// Bitwise identical to [`packing::unpack_into`] + `recover_into`; the
+    /// code stream is read by [`packing::unpack_with`]'s word kernels.
     pub fn recover_packed_into(&self, bytes: &[u8], y: &[f32], out: &mut [f32]) {
         let bits = self.bits();
         debug_assert_eq!(y.len(), out.len());
@@ -202,39 +176,11 @@ impl MoniquaCodec {
         let scale = b / self.quant.levels as f32;
         let off = 0.5 * scale - 0.5 * b;
         // Same per-element recovery math as `recover_into`.
-        let recover_one = |c: u32, yi: f32| -> f32 {
+        packing::unpack_with(bits, out.len(), bytes, |i, c| {
             let q = c as f32 * scale + off;
-            let z = q - yi;
-            z - b * (z * inv_b + 0.5).floor() + yi
-        };
-        match bits {
-            8 => {
-                for ((o, &byte), &yi) in out.iter_mut().zip(bytes).zip(y) {
-                    *o = recover_one(byte as u32, yi);
-                }
-            }
-            16 => {
-                for ((o, c), &yi) in out.iter_mut().zip(bytes.chunks_exact(2)).zip(y) {
-                    *o = recover_one(u16::from_le_bytes([c[0], c[1]]) as u32, yi);
-                }
-            }
-            _ => {
-                let mask: u64 = (1u64 << bits) - 1;
-                let mut acc: u64 = 0;
-                let mut nbits: u32 = 0;
-                let mut i = 0usize;
-                for (o, &yi) in out.iter_mut().zip(y) {
-                    while nbits < bits {
-                        acc |= (bytes[i] as u64) << nbits;
-                        i += 1;
-                        nbits += 8;
-                    }
-                    *o = recover_one((acc & mask) as u32, yi);
-                    acc >>= bits;
-                    nbits -= bits;
-                }
-            }
-        }
+            let z = q - y[i];
+            out[i] = z - b * (z * inv_b + 0.5).floor() + y[i];
+        });
     }
 
     /// Dequantized grid value (scaled by B_θ) for a code.
@@ -427,8 +373,9 @@ mod tests {
     #[test]
     fn encode_packed_matches_encode_then_pack() {
         // The fused wire path must be byte-identical to the two-step path
-        // for every supported budget (satellite acceptance: bits ∈ {1,4,8,16}).
-        for bits in [1u32, 4, 8, 16] {
+        // for every supported budget — all 16, so the word kernels' pow2,
+        // byte-aligned, and ragged paths are each pinned with tails.
+        for bits in 1..=16u32 {
             let cfg = if bits == 1 {
                 QuantConfig::nearest(bits) // 1-bit stochastic has δ = ½
             } else {
@@ -451,7 +398,7 @@ mod tests {
 
     #[test]
     fn recover_packed_matches_unpack_then_recover() {
-        for bits in [1u32, 4, 8, 16] {
+        for bits in 1..=16u32 {
             let cfg = if bits == 1 {
                 QuantConfig::nearest(bits)
             } else {

@@ -1,21 +1,62 @@
-//! Bit-packing of quantizer codes.
+//! Bit-packing of quantizer codes — the §Perf word-level kernels.
 //!
 //! Messages on the wire carry `bits` bits per parameter, so a d-parameter
 //! tensor costs `ceil(d*bits/8)` bytes — this is what the network simulator
-//! charges and what the entropy coder recompresses. The packer writes codes
-//! little-endian into a u64 accumulator; the hot loop is branch-light and is
-//! one of the targets of the §Perf pass.
+//! charges and what the entropy coder recompresses.
 //!
-//! On the round-engine hot path these standalone functions are inlined
-//! into the fused codec kernels (`MoniquaCodec::encode_packed_into` /
-//! `recover_packed_into`); the bit layout here is the wire-format contract
-//! both sides must honor (pinned by the fused-vs-unfused equality tests in
-//! `quant::moniqua`).
+//! ## Layout contract
+//!
+//! The stream is one continuous **little-endian bit stream**: code `i`
+//! occupies bits `[i·bits, (i+1)·bits)` counted LSB-first from byte 0, and
+//! the sub-byte tail is zero-padded. This layout is the wire-format
+//! contract both sides must honor; it is pinned by the retained reference
+//! implementation ([`pack_into_ref`] / [`unpack_into_ref`] — the original
+//! byte-at-a-time accumulator) and by the fused-vs-unfused equality tests
+//! in `quant::moniqua` plus the exhaustive tail suite in
+//! `tests/quant_properties.rs`.
+//!
+//! ## Kernels (§Perf)
+//!
+//! The hot kernels move whole 64-bit words instead of single bytes:
+//!
+//! * **bits ∈ {8, 16}** — byte/halfword memcpy loops (no accumulator);
+//! * **bits ∈ {1, 2, 4}** — a fixed `64/bits` codes-per-word inner loop
+//!   (branchless shift-or into a `u64`, one 8-byte store per word; the
+//!   constant trip count lets LLVM fully unroll it). 1-bit is the paper's
+//!   headline Table-2 configuration;
+//! * **ragged widths (3, 5, 6, 7, 9..15)** — a two-word `u128` staging
+//!   accumulator: codes shift-or into the low word, and every time 64 bits
+//!   are ready one 8-byte store (or load, on the unpack side) moves a whole
+//!   word via `chunks_exact`. At most `⌈64/bits⌉+1` codes are staged, so
+//!   the accumulator never overflows 80 bits.
+//!
+//! Sub-word tails fall back to the byte accumulator, which is also the
+//! retained reference the property tests cross-check every width × tail
+//! combination against.
+//!
+//! On the round-engine hot path these kernels are shared with the fused
+//! codec (`MoniquaCodec::encode_packed_into` / `recover_packed_into`)
+//! through [`pack_with`] / [`unpack_with`]: the codec supplies a
+//! per-index code source/sink closure, so the wire layout exists in
+//! exactly one place.
+
+/// Packed byte length for `d` codes at `bits` bits each, or `None` when
+/// `d * bits` overflows `usize` (a >2-exabit message on 64-bit targets —
+/// only reachable through corrupt/hostile configuration, but the old
+/// unchecked multiply would silently wrap to a tiny buffer).
+#[inline]
+pub fn try_packed_len(d: usize, bits: u32) -> Option<usize> {
+    d.checked_mul(bits as usize)?.checked_add(7).map(|b| b / 8)
+}
 
 /// Packed byte length for `d` codes at `bits` bits each.
+///
+/// Panics (rather than wrapping) when `d * bits` overflows `usize`; use
+/// [`try_packed_len`] to handle untrusted dimensions gracefully.
 #[inline]
 pub fn packed_len(d: usize, bits: u32) -> usize {
-    (d * bits as usize + 7) / 8
+    try_packed_len(d, bits)
+        .unwrap_or_else(|| panic!("packed_len overflows usize: d={d} bits={bits}"))
 }
 
 /// Pack `codes` (each `< 2^bits`) into bytes.
@@ -30,20 +71,243 @@ pub fn pack_into(codes: &[u32], bits: u32, out: &mut [u8]) {
     assert!((1..=16).contains(&bits));
     assert_eq!(out.len(), packed_len(codes.len(), bits));
     debug_assert!(codes.iter().all(|&c| (c as u64) < (1u64 << bits)));
-    // §Perf: byte-aligned budgets skip the bit accumulator entirely
-    // (the 8-bit case is the paper's main experimental configuration).
-    if bits == 8 {
-        for (o, &c) in out.iter_mut().zip(codes) {
-            *o = c as u8;
+    pack_with(bits, codes.len(), out, |i| codes[i]);
+}
+
+/// Unpack `d` codes of `bits` bits from `bytes`.
+pub fn unpack(bytes: &[u8], bits: u32, d: usize) -> Vec<u32> {
+    let mut out = vec![0u32; d];
+    unpack_into(bytes, bits, &mut out);
+    out
+}
+
+/// Unpack into a preallocated buffer.
+pub fn unpack_into(bytes: &[u8], bits: u32, out: &mut [u32]) {
+    assert!((1..=16).contains(&bits));
+    assert!(bytes.len() >= packed_len(out.len(), bits));
+    unpack_with(bits, out.len(), bytes, |i, c| out[i] = c);
+}
+
+// ---------------------------------------------------------------------------
+// Streaming word kernels (shared with the fused codec paths)
+// ---------------------------------------------------------------------------
+
+/// Pack `n` codes produced by `code_at(i)` (called once per index, `i`
+/// ascending) into `out` (`out.len() == packed_len(n, bits)`). This is the
+/// single wire-layout implementation: `pack_into` feeds it from a slice,
+/// the fused `MoniquaCodec::encode_packed_into` feeds it straight from the
+/// quantizer so no intermediate code vector ever exists.
+#[inline]
+pub(crate) fn pack_with<F: FnMut(usize) -> u32>(
+    bits: u32,
+    n: usize,
+    out: &mut [u8],
+    mut code_at: F,
+) {
+    debug_assert!((1..=16).contains(&bits));
+    debug_assert_eq!(out.len(), packed_len(n, bits));
+    match bits {
+        8 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = code_at(i) as u8;
+            }
         }
-        return;
-    }
-    if bits == 16 {
-        for (o, &c) in out.chunks_exact_mut(2).zip(codes) {
-            o.copy_from_slice(&(c as u16).to_le_bytes());
+        16 => {
+            for (i, o) in out.chunks_exact_mut(2).enumerate() {
+                o.copy_from_slice(&(code_at(i) as u16).to_le_bytes());
+            }
         }
-        return;
+        1 | 2 | 4 => pack_pow2(bits, n, out, code_at),
+        _ => pack_ragged(bits, n, out, code_at),
     }
+}
+
+/// Unpack `n` codes from `bytes` into `sink(i, code)` (called once per
+/// index, `i` ascending). `bytes` may be longer than the packed length;
+/// only the first `packed_len(n, bits)` bytes are consumed.
+#[inline]
+pub(crate) fn unpack_with<F: FnMut(usize, u32)>(
+    bits: u32,
+    n: usize,
+    bytes: &[u8],
+    mut sink: F,
+) {
+    debug_assert!((1..=16).contains(&bits));
+    debug_assert!(bytes.len() >= packed_len(n, bits));
+    match bits {
+        8 => {
+            for (i, &b) in bytes.iter().take(n).enumerate() {
+                sink(i, b as u32);
+            }
+        }
+        16 => {
+            for (i, c) in bytes.chunks_exact(2).take(n).enumerate() {
+                sink(i, u16::from_le_bytes([c[0], c[1]]) as u32);
+            }
+        }
+        1 | 2 | 4 => unpack_pow2(bits, n, bytes, sink),
+        _ => unpack_ragged(bits, n, bytes, sink),
+    }
+}
+
+/// Word kernel for the power-of-two sub-byte widths: exactly `64/bits`
+/// codes per `u64`, branchless shift-or, one 8-byte store per word.
+fn pack_pow2<F: FnMut(usize) -> u32>(bits: u32, n: usize, out: &mut [u8], mut code_at: F) {
+    let cpw = (64 / bits) as usize;
+    let full = n / cpw;
+    let mut i = 0usize;
+    for ob in out[..full * 8].chunks_exact_mut(8) {
+        let mut word = 0u64;
+        for k in 0..cpw {
+            word |= (code_at(i + k) as u64) << (k as u32 * bits);
+        }
+        ob.copy_from_slice(&word.to_le_bytes());
+        i += cpw;
+    }
+    pack_tail(bits, i, n, &mut out[full * 8..], code_at);
+}
+
+fn unpack_pow2<F: FnMut(usize, u32)>(bits: u32, n: usize, bytes: &[u8], mut sink: F) {
+    let cpw = (64 / bits) as usize;
+    let mask = (1u64 << bits) - 1;
+    let full = n / cpw;
+    let mut i = 0usize;
+    for wb in bytes[..full * 8].chunks_exact(8) {
+        let mut word = u64::from_le_bytes(wb.try_into().expect("8-byte chunk"));
+        for k in 0..cpw {
+            sink(i + k, (word & mask) as u32);
+            word >>= bits;
+        }
+        i += cpw;
+    }
+    unpack_tail(bits, i, n, &bytes[full * 8..], sink);
+}
+
+/// Two-word staging kernel for the ragged widths: codes shift-or into a
+/// `u128` and every complete low word leaves as one 8-byte store. The
+/// accumulator holds < 64 + bits ≤ 80 bits at any time, so the widest
+/// shift is `< 64 + 16 < 128`.
+fn pack_ragged<F: FnMut(usize) -> u32>(bits: u32, n: usize, out: &mut [u8], mut code_at: F) {
+    let mut acc: u128 = 0;
+    let mut nb: u32 = 0;
+    let mut o = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        while nb < 64 && i < n {
+            acc |= (code_at(i) as u128) << nb;
+            nb += bits;
+            i += 1;
+        }
+        while nb >= 64 {
+            out[o..o + 8].copy_from_slice(&(acc as u64).to_le_bytes());
+            o += 8;
+            acc >>= 64;
+            nb -= 64;
+        }
+    }
+    // flush the sub-word tail byte by byte (zero-padded high bits)
+    while nb > 0 {
+        out[o] = acc as u8;
+        o += 1;
+        acc >>= 8;
+        nb = nb.saturating_sub(8);
+    }
+    debug_assert_eq!(o, out.len());
+}
+
+fn unpack_ragged<F: FnMut(usize, u32)>(bits: u32, n: usize, bytes: &[u8], mut sink: F) {
+    // Bound whole-word loads by the bytes the n codes actually occupy:
+    // `bytes` is allowed to be longer, and the tail refill below must read
+    // exactly the reference implementation's bytes.
+    let used = packed_len(n, bits);
+    let mask: u128 = (1u128 << bits) - 1;
+    let mut acc: u128 = 0;
+    let mut nb: u32 = 0;
+    let mut o = 0usize;
+    for i in 0..n {
+        if nb < bits {
+            if o + 8 <= used {
+                let w = u64::from_le_bytes(bytes[o..o + 8].try_into().expect("8-byte chunk"));
+                acc |= (w as u128) << nb;
+                o += 8;
+                nb += 64;
+            } else {
+                while nb < bits {
+                    acc |= (bytes[o] as u128) << nb;
+                    o += 1;
+                    nb += 8;
+                }
+            }
+        }
+        sink(i, (acc & mask) as u32);
+        acc >>= bits;
+        nb -= bits;
+    }
+}
+
+/// Byte-accumulator tail for the word kernels: packs codes `start..n` into
+/// `out` (the bytes after the last whole word). Same code as the reference
+/// implementation, so word path + tail ≡ reference end to end.
+fn pack_tail<F: FnMut(usize) -> u32>(
+    bits: u32,
+    start: usize,
+    n: usize,
+    out: &mut [u8],
+    mut code_at: F,
+) {
+    let mut acc: u64 = 0;
+    let mut nb: u32 = 0;
+    let mut o = 0usize;
+    for i in start..n {
+        acc |= (code_at(i) as u64) << nb;
+        nb += bits;
+        while nb >= 8 {
+            out[o] = acc as u8;
+            o += 1;
+            acc >>= 8;
+            nb -= 8;
+        }
+    }
+    if nb > 0 {
+        out[o] = acc as u8;
+    }
+}
+
+fn unpack_tail<F: FnMut(usize, u32)>(
+    bits: u32,
+    start: usize,
+    n: usize,
+    bytes: &[u8],
+    mut sink: F,
+) {
+    let mask: u64 = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut nb: u32 = 0;
+    let mut o = 0usize;
+    for i in start..n {
+        while nb < bits {
+            acc |= (bytes[o] as u64) << nb;
+            o += 1;
+            nb += 8;
+        }
+        sink(i, (acc & mask) as u32);
+        acc >>= bits;
+        nb -= bits;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retained reference implementation (the wire-layout source of truth)
+// ---------------------------------------------------------------------------
+
+/// The original byte-at-a-time accumulator packer, retained verbatim as the
+/// executable definition of the wire layout. The word kernels must produce
+/// byte-identical output (pinned exhaustively — every `bits` × tail length
+/// — by `tests/quant_properties.rs`); the throughput bench reports the
+/// word kernels' speedup over this.
+pub fn pack_into_ref(codes: &[u32], bits: u32, out: &mut [u8]) {
+    assert!((1..=16).contains(&bits));
+    assert_eq!(out.len(), packed_len(codes.len(), bits));
     let mut acc: u64 = 0;
     let mut nbits: u32 = 0;
     let mut o = 0usize;
@@ -62,29 +326,10 @@ pub fn pack_into(codes: &[u32], bits: u32, out: &mut [u8]) {
     }
 }
 
-/// Unpack `d` codes of `bits` bits from `bytes`.
-pub fn unpack(bytes: &[u8], bits: u32, d: usize) -> Vec<u32> {
-    let mut out = vec![0u32; d];
-    unpack_into(bytes, bits, &mut out);
-    out
-}
-
-/// Unpack into a preallocated buffer.
-pub fn unpack_into(bytes: &[u8], bits: u32, out: &mut [u32]) {
+/// Reference unpacker paired with [`pack_into_ref`].
+pub fn unpack_into_ref(bytes: &[u8], bits: u32, out: &mut [u32]) {
     assert!((1..=16).contains(&bits));
     assert!(bytes.len() >= packed_len(out.len(), bits));
-    if bits == 8 {
-        for (o, &b) in out.iter_mut().zip(bytes) {
-            *o = b as u32;
-        }
-        return;
-    }
-    if bits == 16 {
-        for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
-            *o = u16::from_le_bytes([b[0], b[1]]) as u32;
-        }
-        return;
-    }
     let mask: u64 = (1u64 << bits) - 1;
     let mut acc: u64 = 0;
     let mut nbits: u32 = 0;
@@ -122,12 +367,64 @@ mod tests {
     }
 
     #[test]
+    fn word_kernels_match_reference_bytes() {
+        // The word kernels must be byte-identical to the retained reference
+        // accumulator (the exhaustive bits × tail matrix lives in
+        // tests/quant_properties.rs; this is the in-module smoke version).
+        forall(200, |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            let d = rng.below(600) as usize;
+            let codes: Vec<u32> = (0..d)
+                .map(|_| (rng.next_u32() as u64 & ((1u64 << bits) - 1)) as u32)
+                .collect();
+            let mut word = vec![0u8; packed_len(d, bits)];
+            let mut byte = vec![0u8; packed_len(d, bits)];
+            pack_into(&codes, bits, &mut word);
+            pack_into_ref(&codes, bits, &mut byte);
+            assert_eq!(word, byte, "bits={bits} d={d}");
+            let mut back_word = vec![0u32; d];
+            let mut back_byte = vec![0u32; d];
+            unpack_into(&word, bits, &mut back_word);
+            unpack_into_ref(&byte, bits, &mut back_byte);
+            assert_eq!(back_word, codes, "bits={bits} d={d}");
+            assert_eq!(back_byte, codes, "bits={bits} d={d}");
+        });
+    }
+
+    #[test]
+    fn unpack_tolerates_oversized_byte_slices() {
+        // recover paths hand the whole payload in; trailing bytes beyond
+        // packed_len(n) must be ignored, not folded into codes.
+        forall(100, |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            let d = rng.below(200) as usize;
+            let codes: Vec<u32> = (0..d)
+                .map(|_| (rng.next_u32() as u64 & ((1u64 << bits) - 1)) as u32)
+                .collect();
+            let mut bytes = pack(&codes, bits);
+            for _ in 0..(rng.below(16) as usize) {
+                bytes.push(rng.next_u32() as u8); // garbage tail
+            }
+            assert_eq!(unpack(&bytes, bits, d), codes, "bits={bits} d={d}");
+        });
+    }
+
+    #[test]
     fn packed_len_exact() {
         assert_eq!(packed_len(8, 1), 1);
         assert_eq!(packed_len(9, 1), 2);
         assert_eq!(packed_len(3, 8), 3);
         assert_eq!(packed_len(5, 3), 2); // 15 bits -> 2 bytes
         assert_eq!(packed_len(0, 7), 0);
+    }
+
+    #[test]
+    fn packed_len_overflow_is_checked() {
+        // d * bits wraps in the old formulation; now it is a typed None /
+        // loud panic instead of a silently tiny buffer.
+        assert_eq!(try_packed_len(usize::MAX, 2), None);
+        assert_eq!(try_packed_len(usize::MAX / 16, 16), Some(usize::MAX / 16 * 2));
+        assert!(std::panic::catch_unwind(|| packed_len(usize::MAX, 3)).is_err());
     }
 
     #[test]
@@ -142,6 +439,17 @@ mod tests {
         // codes 1,0,1,1,0,0,0,1 -> little-endian bit order -> 0b1000_1101
         let bytes = pack(&[1, 0, 1, 1, 0, 0, 0, 1], 1);
         assert_eq!(bytes, vec![0b1000_1101]);
+    }
+
+    #[test]
+    fn one_bit_word_boundary_layout() {
+        // 65 one-bits: a full u64 word of 1s plus a 1-bit tail — the word
+        // store and the tail byte must butt-join with no gap or overlap.
+        let codes = vec![1u32; 65];
+        let bytes = pack(&codes, 1);
+        assert_eq!(bytes.len(), 9);
+        assert_eq!(&bytes[..8], &[0xFF; 8]);
+        assert_eq!(bytes[8], 0x01);
     }
 
     #[test]

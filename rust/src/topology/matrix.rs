@@ -9,6 +9,18 @@ pub struct CommMatrix {
     pub w: MatF64,
     /// Neighbor lists (j such that `W[j][i] > 0`, j ≠ i).
     pub neighbors: Vec<Vec<usize>>,
+    /// Sparse per-edge weights parallel to [`Self::neighbors`]:
+    /// `neighbor_weights[i][k] = W[neighbors[i][k]][i]` (equal to
+    /// `W[i][neighbors[i][k]]` by symmetry). The engines' accumulate loops
+    /// zip these with the neighbor lists instead of doing a dense `n`-wide
+    /// row lookup per edge — the values are *copies of the same matrix
+    /// entries*, so every weighted sum is bitwise what the dense lookup
+    /// produced (pinned by `sparse_weights_match_dense` below and the
+    /// topology-equivalence case in `tests/engine_equivalence.rs`).
+    pub neighbor_weights: Vec<Vec<f64>>,
+    /// Cached Σ_i deg(i) — the per-round directed-message count every
+    /// engine reports, hoisted out of the round loops.
+    deg_sum: usize,
 }
 
 impl CommMatrix {
@@ -62,14 +74,36 @@ impl CommMatrix {
             assert!((row - 1.0).abs() < 1e-9, "row {i} sums to {row}");
             assert!(w.row(i).iter().all(|&v| v > -1e-12), "negative entry in row {i}");
         }
-        let neighbors = (0..n)
+        let neighbors: Vec<Vec<usize>> = (0..n)
             .map(|i| {
                 (0..n)
                     .filter(|&j| j != i && w.at(i, j) > 1e-15)
                     .collect::<Vec<_>>()
             })
             .collect();
-        CommMatrix { w, neighbors }
+        let neighbor_weights = neighbors
+            .iter()
+            .enumerate()
+            .map(|(i, nbrs)| nbrs.iter().map(|&j| w.at(j, i)).collect::<Vec<_>>())
+            .collect();
+        let deg_sum = neighbors.iter().map(|v| v.len()).sum();
+        CommMatrix { w, neighbors, neighbor_weights, deg_sum }
+    }
+
+    /// Cached Σ_i deg(i): directed gossip messages per synchronous round.
+    #[inline]
+    pub fn deg_sum(&self) -> usize {
+        self.deg_sum
+    }
+
+    /// Sparse receiver view of row/column `i`: `(j, W[j][i])` pairs in
+    /// ascending-neighbor order — the engines' accumulate-loop iterator.
+    #[inline]
+    pub fn in_edges(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.neighbors[i]
+            .iter()
+            .copied()
+            .zip(self.neighbor_weights[i].iter().copied())
     }
 
     pub fn n(&self) -> usize {
@@ -257,6 +291,37 @@ mod tests {
     fn neighbors_match_adjacency() {
         let cm = ring_w(5);
         assert_eq!(cm.neighbors[0], vec![1, 4]);
+    }
+
+    #[test]
+    fn sparse_weights_match_dense() {
+        // The sparse lists must be bitwise copies of the dense entries —
+        // every engine's accumulate loop now reads them instead of W.
+        for topo in [
+            Topology::Ring(8),
+            Topology::Star(6),
+            Topology::RandomRegular { n: 12, degree: 4, seed: 9 },
+        ] {
+            let cm = topo.comm_matrix();
+            for i in 0..cm.n() {
+                assert_eq!(cm.neighbors[i].len(), cm.neighbor_weights[i].len());
+                for (j, wji) in cm.in_edges(i) {
+                    assert_eq!(wji.to_bits(), cm.weight(j, i).to_bits(), "{topo:?} i={i} j={j}");
+                }
+            }
+            let rescanned: usize = cm.neighbors.iter().map(|v| v.len()).sum();
+            assert_eq!(cm.deg_sum(), rescanned, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn slack_matrix_keeps_sparse_structure_consistent() {
+        let s = ring_w(8).slack(0.25);
+        for i in 0..8 {
+            for (j, wji) in s.in_edges(i) {
+                assert_eq!(wji.to_bits(), s.weight(j, i).to_bits(), "i={i} j={j}");
+            }
+        }
     }
 
     #[test]

@@ -1,57 +1,123 @@
-//! In-process transport over `std::sync::mpsc` channels.
+//! In-process transport over shared pooled queues.
 //!
-//! Every endpoint owns a receiver; senders hold clones of each peer's
-//! `Sender`. Frames are serialized to wire bytes on `send` and decoded on
-//! `recv` — the mem transport ships the *same bytes* TCP would, so a codec
-//! bug cannot hide behind shared memory. Buffered frames are delivered in
-//! `(round, sender)` order (see [`ReorderBuffer`](super::ReorderBuffer)).
+//! Every endpoint owns a receive queue (`Mutex<VecDeque> + Condvar`);
+//! senders hold `Arc`s of each peer's queue. Frames are serialized to wire
+//! bytes on `send` and decoded on `recv` — the mem transport ships the
+//! *same bytes* TCP ships, so a codec bug cannot hide behind shared
+//! memory. Buffered frames are delivered in `(round, sender)` order (see
+//! [`ReorderBuffer`](super::ReorderBuffer)).
+//!
+//! §Perf: wire buffers come from one cluster-shared
+//! [`FramePool`](crate::mem::FramePool) and are returned by the consumer
+//! through [`Transport::recycle`], so a steady-state round moves bytes
+//! through recycled capacity only — zero heap allocations (the previous
+//! `mpsc` channel allocated a node per send). `tests/alloc_discipline.rs`
+//! pins this.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::{Frame, ReorderBuffer, Transport, TransportError};
+use crate::mem::FramePool;
+
+/// One endpoint's inbound queue: preallocated ring of wire-byte buffers
+/// plus a condvar for blocking receives. `closed` flips when the owning
+/// endpoint drops, so senders fail fast with
+/// [`TransportError::Closed`] instead of silently queueing into the void
+/// (the mpsc-backed transport errored the same way when the receiver was
+/// gone).
+struct ByteQueue {
+    q: Mutex<VecDeque<Vec<u8>>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl ByteQueue {
+    fn with_capacity(cap: usize) -> Self {
+        ByteQueue {
+            q: Mutex::new(VecDeque::with_capacity(cap)),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    fn push(&self, bytes: Vec<u8>) {
+        self.q.lock().expect("mem queue poisoned").push_back(bytes);
+        self.cv.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<Vec<u8>> {
+        self.q.lock().expect("mem queue poisoned").pop_front()
+    }
+
+    /// Block up to `timeout` for one buffer.
+    fn pop_timeout(&self, timeout: Duration) -> Option<Vec<u8>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.q.lock().expect("mem queue poisoned");
+        loop {
+            if let Some(b) = g.pop_front() {
+                return Some(b);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .expect("mem queue poisoned")
+                .0;
+        }
+    }
+}
 
 /// One worker's endpoint of an in-process cluster.
 pub struct MemTransport {
     id: usize,
-    txs: Vec<Sender<Vec<u8>>>,
-    rx: Receiver<Vec<u8>>,
+    queues: Vec<Arc<ByteQueue>>,
     buf: ReorderBuffer,
+    pool: FramePool,
 }
 
 impl MemTransport {
-    /// Build a fully-connected cluster of `n` endpoints.
+    /// Build a fully-connected cluster of `n` endpoints sharing one wire
+    /// buffer pool.
     pub fn cluster(n: usize) -> Vec<MemTransport> {
         assert!(n > 0);
-        let mut txs = Vec::with_capacity(n);
-        let mut rxs = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            txs.push(tx);
-            rxs.push(Some(rx));
-        }
-        rxs.iter_mut()
-            .enumerate()
-            .map(|(id, rx)| MemTransport {
+        let pool = FramePool::new();
+        let queues: Vec<Arc<ByteQueue>> = (0..n)
+            // Depth 64 covers a full round of frames per peer with slack;
+            // beyond it the deque grows (an allocation, not a loss).
+            .map(|_| Arc::new(ByteQueue::with_capacity(64)))
+            .collect();
+        (0..n)
+            .map(|id| MemTransport {
                 id,
-                txs: txs.clone(),
-                rx: rx.take().expect("receiver taken once"),
+                queues: queues.clone(),
                 buf: ReorderBuffer::default(),
+                pool: pool.clone(),
             })
             .collect()
     }
 
-    /// Move everything already sitting in the channel into the reorder
+    /// The cluster-shared wire buffer pool (tests assert recycling works).
+    pub fn pool(&self) -> &FramePool {
+        &self.pool
+    }
+
+    /// Move everything already sitting in the queue into the reorder
     /// buffer (non-blocking).
     fn drain(&mut self) -> Result<(), TransportError> {
-        loop {
-            match self.rx.try_recv() {
-                Ok(bytes) => self.buf.push(Frame::decode_owned(bytes)?),
-                Err(TryRecvError::Empty) => return Ok(()),
-                // All peer senders dropped; buffered frames stay poppable.
-                Err(TryRecvError::Disconnected) => return Ok(()),
-            }
+        while let Some(bytes) = self.queues[self.id].try_pop() {
+            self.buf.push(Frame::decode_owned(bytes)?);
         }
+        Ok(())
     }
 }
 
@@ -61,26 +127,45 @@ impl Transport for MemTransport {
     }
 
     fn cluster_size(&self) -> usize {
-        self.txs.len()
+        self.queues.len()
     }
 
     fn send(&mut self, peer: usize, frame: &Frame) -> Result<(), TransportError> {
-        assert!(peer < self.txs.len(), "peer {peer} out of range");
-        self.txs[peer]
-            .send(frame.encode())
-            .map_err(|_| TransportError::Closed)
+        assert!(peer < self.queues.len(), "peer {peer} out of range");
+        if self.queues[peer].is_closed() {
+            return Err(TransportError::Closed);
+        }
+        let mut bytes = self.pool.take();
+        frame.encode_into(&mut bytes);
+        self.queues[peer].push(bytes);
+        Ok(())
     }
 
     fn broadcast(&mut self, peers: &[usize], frame: &Frame) -> Result<(), TransportError> {
-        // Encode (and checksum) once; each channel send needs its own
-        // owned buffer, which is the unavoidable per-peer copy.
-        let bytes = frame.encode();
-        for &p in peers {
-            assert!(p < self.txs.len(), "peer {p} out of range");
-            self.txs[p]
-                .send(bytes.clone())
-                .map_err(|_| TransportError::Closed)?;
+        // Encode (and checksum) once into a pooled scratch; intermediate
+        // peers get a copy into a recycled buffer, the last peer takes the
+        // scratch itself — k peers cost k−1 memcpys, not k.
+        let Some((&last, rest)) = peers.split_last() else {
+            return Ok(());
+        };
+        let mut wire = self.pool.take();
+        frame.encode_into(&mut wire);
+        for &p in rest {
+            assert!(p < self.queues.len(), "peer {p} out of range");
+            if self.queues[p].is_closed() {
+                self.pool.give(wire);
+                return Err(TransportError::Closed);
+            }
+            let mut bytes = self.pool.take();
+            bytes.extend_from_slice(&wire);
+            self.queues[p].push(bytes);
         }
+        assert!(last < self.queues.len(), "peer {last} out of range");
+        if self.queues[last].is_closed() {
+            self.pool.give(wire);
+            return Err(TransportError::Closed);
+        }
+        self.queues[last].push(wire);
         Ok(())
     }
 
@@ -95,12 +180,24 @@ impl Transport for MemTransport {
             if now >= deadline {
                 return Err(TransportError::Timeout);
             }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(bytes) => self.buf.push(Frame::decode_owned(bytes)?),
-                Err(RecvTimeoutError::Timeout) => return Err(TransportError::Timeout),
-                Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
+            match self.queues[self.id].pop_timeout(deadline - now) {
+                Some(bytes) => self.buf.push(Frame::decode_owned(bytes)?),
+                None => return Err(TransportError::Timeout),
             }
         }
+    }
+
+    fn recycle(&mut self, payload: Vec<u8>) {
+        self.pool.give(payload);
+    }
+}
+
+impl Drop for MemTransport {
+    fn drop(&mut self) {
+        // Senders to this endpoint fail fast from now on; anyone blocked
+        // in a wait sees the flag after the notify.
+        self.queues[self.id].closed.store(true, Ordering::Release);
+        self.queues[self.id].cv.notify_all();
     }
 }
 
@@ -157,5 +254,54 @@ mod tests {
         let mut a = eps.remove(0);
         let err = a.recv(Duration::from_millis(20)).unwrap_err();
         assert_eq!(err, TransportError::Timeout);
+    }
+
+    #[test]
+    fn recycled_buffers_circulate_through_the_pool() {
+        let mut eps = MemTransport::cluster(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // Warm-up round: allocates the first buffers.
+        a.send(1, &frame(0, 0, vec![9; 256])).unwrap();
+        let f = b.recv(Duration::from_secs(1)).unwrap();
+        b.recycle(f.payload);
+        assert!(b.pool().pooled() >= 1, "consumer must return capacity");
+        // Steady state: the sender's take() reuses the recycled buffer.
+        a.send(1, &frame(1, 0, vec![7; 256])).unwrap();
+        let f = b.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(f.payload, vec![7; 256]);
+        b.recycle(f.payload);
+    }
+
+    #[test]
+    fn send_to_dropped_endpoint_is_closed() {
+        let mut eps = MemTransport::cluster(3);
+        let gone = eps.remove(2);
+        drop(gone);
+        let err = eps[0].send(2, &frame(0, 0, vec![1])).unwrap_err();
+        assert_eq!(err, TransportError::Closed);
+        // Broadcast fails fast too (peer 2 is the copy target here)…
+        let err = eps[0].broadcast(&[2, 1], &frame(0, 0, vec![1])).unwrap_err();
+        assert_eq!(err, TransportError::Closed);
+        // …and as the final (buffer-handoff) target.
+        let err = eps[0].broadcast(&[1, 2], &frame(0, 0, vec![1])).unwrap_err();
+        assert_eq!(err, TransportError::Closed);
+        // The surviving pair still works.
+        eps[0].send(1, &frame(1, 0, vec![9])).unwrap();
+        assert_eq!(eps[1].recv(Duration::from_secs(1)).unwrap().payload, vec![9]);
+    }
+
+    #[test]
+    fn blocking_recv_wakes_on_push() {
+        let mut eps = MemTransport::cluster(2);
+        let mut rx = eps.remove(0);
+        let mut tx = eps.remove(0);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            tx.send(0, &frame(5, 1, vec![1])).unwrap();
+        });
+        let f = rx.recv(Duration::from_secs(5)).unwrap();
+        assert_eq!(f.round, 5);
+        h.join().unwrap();
     }
 }

@@ -11,14 +11,17 @@
 //! * [`Transport`] — the pluggable endpoint trait: `send(peer, &Frame)` +
 //!   `recv(timeout)`. One endpoint per worker; endpoints are `Send` so a
 //!   worker thread can own one.
-//! * [`mem`] — [`MemTransport`]: process-local mpsc channels. Frames are
+//! * [`mem`] — [`MemTransport`]: process-local shared queues drawing wire
+//!   buffers from a cluster-shared [`FramePool`](crate::mem::FramePool)
+//!   (§Perf: zero allocations per steady-state round). Frames are
 //!   serialized/deserialized through the real codec (so the mem transport
 //!   exercises the same bytes TCP ships) and delivered in deterministic
 //!   `(round, sender)` order from the receive buffer.
 //! * [`tcp`] — [`TcpTransport`]: length-prefixed frames over
 //!   `std::net::TcpStream` on localhost, one listener per worker,
-//!   lazily-dialed outbound connections, reader threads draining inbound
-//!   sockets. Binding port 0 + discovered addresses makes clusters
+//!   lazily-dialed outbound connections (each behind a `BufWriter`, so a
+//!   frame is one syscall), reader threads draining inbound sockets into
+//!   pooled buffers. Binding port 0 + discovered addresses makes clusters
 //!   port-collision-safe under parallel test runs.
 //!
 //! Both implementations satisfy one conformance contract
@@ -109,6 +112,17 @@ pub trait Transport: Send {
     /// Receive the next frame in `(round, sender)` order, waiting up to
     /// `timeout` for one to arrive.
     fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError>;
+
+    /// Return a consumed frame's payload buffer to the transport's wire
+    /// pool (§Perf). Both implementations feed it back into the
+    /// [`FramePool`](crate::mem::FramePool) their senders draw from, which
+    /// is what makes steady-state rounds allocation-free
+    /// (`tests/alloc_discipline.rs`); the default drops the buffer, so
+    /// recycling is always a pure optimization — never a correctness
+    /// requirement.
+    fn recycle(&mut self, payload: Vec<u8>) {
+        drop(payload);
+    }
 }
 
 /// Receive-side reorder buffer shared by both transports: frames are pushed

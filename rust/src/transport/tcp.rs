@@ -14,7 +14,7 @@
 //! pins worker `i` to `port_base + i` (useful for externally-observed runs,
 //! e.g. packet captures).
 
-use std::io::{ErrorKind, Read, Write};
+use std::io::{BufWriter, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -23,15 +23,30 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::{Frame, ReorderBuffer, Transport, TransportError, HEADER_LEN, MAX_PAYLOAD};
+use crate::mem::FramePool;
+
+/// Write-buffer capacity per outbound connection: large enough that a
+/// typical quantized frame (length prefix + header + packed payload) is
+/// staged in full and leaves as **one** `write` syscall on flush, instead
+/// of whatever partial-write pattern the raw socket produces.
+const WRITE_BUF: usize = 1 << 16;
 
 /// One worker's TCP endpoint.
 pub struct TcpTransport {
     id: usize,
     addrs: Vec<SocketAddr>,
-    outs: Vec<Option<TcpStream>>,
+    /// Outbound connections, each behind a [`BufWriter`] flushed once per
+    /// frame (§Perf: one syscall per frame per peer on the broadcast path).
+    outs: Vec<Option<BufWriter<TcpStream>>>,
     rx: Receiver<Result<Vec<u8>, String>>,
     buf: ReorderBuffer,
+    /// Pooled frame-encode scratch, reused across every send on this
+    /// endpoint (length prefix + header + payload serialized once per
+    /// broadcast).
     scratch: Vec<u8>,
+    /// Wire buffer pool shared with this endpoint's reader threads; the
+    /// cluster consumer returns payloads through [`Transport::recycle`].
+    pool: FramePool,
     shutdown: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
 }
@@ -59,14 +74,19 @@ impl TcpTransport {
             .iter()
             .map(|l| l.local_addr())
             .collect::<std::io::Result<_>>()?;
+        let pool = FramePool::new();
         Ok(listeners
             .into_iter()
             .enumerate()
             .map(|(id, listener)| {
                 let (tx, rx) = channel();
                 let shutdown = Arc::new(AtomicBool::new(false));
-                let accept_handle =
-                    Some(spawn_acceptor(listener, tx, Arc::clone(&shutdown)));
+                let accept_handle = Some(spawn_acceptor(
+                    listener,
+                    tx,
+                    Arc::clone(&shutdown),
+                    pool.clone(),
+                ));
                 TcpTransport {
                     id,
                     addrs: addrs.clone(),
@@ -74,6 +94,7 @@ impl TcpTransport {
                     rx,
                     buf: ReorderBuffer::default(),
                     scratch: Vec::new(),
+                    pool: pool.clone(),
                     shutdown,
                     accept_handle,
                 }
@@ -86,14 +107,14 @@ impl TcpTransport {
         &self.addrs
     }
 
-    fn connect(&mut self, peer: usize) -> Result<&mut TcpStream, TransportError> {
+    fn connect(&mut self, peer: usize) -> Result<&mut BufWriter<TcpStream>, TransportError> {
         if self.outs[peer].is_none() {
             let stream = TcpStream::connect(self.addrs[peer])
                 .map_err(|e| TransportError::Io(e.to_string()))?;
             stream
                 .set_nodelay(true)
                 .map_err(|e| TransportError::Io(e.to_string()))?;
-            self.outs[peer] = Some(stream);
+            self.outs[peer] = Some(BufWriter::with_capacity(WRITE_BUF, stream));
         }
         Ok(self.outs[peer].as_mut().expect("just connected"))
     }
@@ -123,8 +144,10 @@ impl Transport for TcpTransport {
     }
 
     fn broadcast(&mut self, peers: &[usize], frame: &Frame) -> Result<(), TransportError> {
-        // Serialize (length prefix + header + checksum) once; every peer
-        // gets the same bytes straight from the scratch buffer.
+        // Serialize (length prefix + header + checksum) once into the
+        // pooled per-endpoint scratch; every peer gets the same bytes. The
+        // buffered writer stages prefix + frame together and the explicit
+        // flush hands the kernel one contiguous write per frame.
         let mut scratch = std::mem::take(&mut self.scratch);
         scratch.clear();
         scratch.extend_from_slice(&(frame.encoded_len() as u32).to_le_bytes());
@@ -133,7 +156,9 @@ impl Transport for TcpTransport {
         for &p in peers {
             assert!(p < self.addrs.len(), "peer {p} out of range");
             result = self.connect(p).and_then(|s| {
-                s.write_all(&scratch).map_err(|e| TransportError::Io(e.to_string()))
+                s.write_all(&scratch)
+                    .and_then(|()| s.flush())
+                    .map_err(|e| TransportError::Io(e.to_string()))
             });
             if result.is_err() {
                 // A broken pipe poisons the cached stream; redial on retry.
@@ -164,6 +189,10 @@ impl Transport for TcpTransport {
             }
         }
     }
+
+    fn recycle(&mut self, payload: Vec<u8>) {
+        self.pool.give(payload);
+    }
 }
 
 impl Drop for TcpTransport {
@@ -186,6 +215,7 @@ fn spawn_acceptor(
     listener: TcpListener,
     tx: Sender<Result<Vec<u8>, String>>,
     shutdown: Arc<AtomicBool>,
+    pool: FramePool,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
         if listener.set_nonblocking(true).is_err() {
@@ -199,7 +229,8 @@ fn spawn_acceptor(
                     }
                     let _ = stream.set_nodelay(true);
                     let tx = tx.clone();
-                    std::thread::spawn(move || read_frames(stream, tx));
+                    let pool = pool.clone();
+                    std::thread::spawn(move || read_frames(stream, tx, pool));
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     // All dials land in round 0 (lazy connect on first
@@ -215,8 +246,10 @@ fn spawn_acceptor(
 }
 
 /// Reader loop for one inbound connection. Exits on EOF (peer closed) or
-/// when the owning endpoint dropped its receiver.
-fn read_frames(mut stream: TcpStream, tx: Sender<Result<Vec<u8>, String>>) {
+/// when the owning endpoint dropped its receiver. Read buffers are checked
+/// out of the cluster's [`FramePool`]; the consumer returns them through
+/// [`Transport::recycle`], so steady-state reads reuse capacity.
+fn read_frames(mut stream: TcpStream, tx: Sender<Result<Vec<u8>, String>>, pool: FramePool) {
     let max_frame = HEADER_LEN + MAX_PAYLOAD;
     loop {
         let mut len_bytes = [0u8; 4];
@@ -230,7 +263,8 @@ fn read_frames(mut stream: TcpStream, tx: Sender<Result<Vec<u8>, String>>) {
             let _ = tx.send(Err(format!("frame length prefix {len} exceeds maximum")));
             return;
         }
-        let mut bytes = vec![0u8; len];
+        let mut bytes = pool.take();
+        bytes.resize(len, 0);
         if let Err(e) = stream.read_exact(&mut bytes) {
             let _ = tx.send(Err(format!("mid-frame read failed: {e}")));
             return;

@@ -1,0 +1,183 @@
+//! Allocation discipline of the steady-state round (§Perf).
+//!
+//! The zero-allocation contract: after two warm-up rounds, a synchronous
+//! message-passing round — engine encode (`node_send`), frame build,
+//! `Transport::broadcast` over the mem transport, barrier `recv`, borrowed
+//! [`Inbox`] construction, engine integrate (`node_recv`), and payload
+//! recycling — performs **zero heap allocations**, for every engine the
+//! contract names (moniqua, dpsgd, choco).
+//!
+//! Enforced with a counting global allocator wrapped around `System`. The
+//! whole suite is ONE `#[test]` on purpose: integration-test functions run
+//! on concurrent threads within one binary, and a second test's
+//! allocations would pollute the counter window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use moniqua::algorithms::{Algorithm, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
+use moniqua::quant::QuantConfig;
+use moniqua::topology::Topology;
+use moniqua::transport::{algo_wire_id, Frame, FrameKind, MemTransport, Transport};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A growth realloc is an allocation event for budget purposes.
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+const RECV: Duration = Duration::from_secs(10);
+
+/// Drive `rounds` synchronous rounds of `algo` through the real node-mode
+/// pipeline over the mem transport (single thread, round-robin over the
+/// workers — the same calls `ClusterTrainer`'s worker threads make, in a
+/// deterministic order the counter can window).
+#[allow(clippy::too_many_arguments)]
+fn run_rounds(
+    algo: &Algorithm,
+    engines: &mut [Box<dyn SyncAlgorithm>],
+    transports: &mut [MemTransport],
+    xs: &mut [Vec<f32>],
+    grads: &[Vec<f32>],
+    payloads: &mut [Vec<u8>],
+    gots: &mut [Vec<Frame>],
+    peers: &[Vec<usize>],
+    ctx: &StepCtx,
+    from_round: u64,
+    rounds: u64,
+) {
+    let n = engines.len();
+    let algo_id = algo_wire_id(algo.name());
+    for round in from_round..from_round + rounds {
+        for i in 0..n {
+            payloads[i].clear();
+            engines[i].node_send(i, &xs[i], &grads[i], 0.05, round, ctx, &mut payloads[i]);
+            let frame = Frame {
+                round,
+                sender: i as u16,
+                algo: algo_id,
+                bits: 8,
+                kind: FrameKind::Data,
+                theta: engines[i].last_theta().unwrap_or(0.0) as f32,
+                payload: std::mem::take(&mut payloads[i]),
+            };
+            transports[i].broadcast(&peers[i], &frame).expect("broadcast");
+            payloads[i] = frame.payload;
+        }
+        for i in 0..n {
+            let got = &mut gots[i];
+            got.clear();
+            while got.len() < peers[i].len() {
+                got.push(transports[i].recv(RECV).expect("barrier recv"));
+            }
+            got.sort_unstable_by_key(|f| f.sender);
+            {
+                let inbox = Inbox::from_frames(got);
+                engines[i].node_recv(i, &mut xs[i], &grads[i], 0.05, round, ctx, &inbox);
+            }
+            for f in got.drain(..) {
+                transports[i].recycle(f.payload);
+            }
+        }
+    }
+}
+
+fn check_algo(algo: Algorithm) {
+    const N: usize = 4;
+    const D: usize = 256;
+    const WARMUP: u64 = 2;
+    const WINDOW: u64 = 8;
+
+    let topo = Topology::Ring(N);
+    let w = topo.comm_matrix();
+    let rho = w.rho();
+    let peers: Vec<Vec<usize>> = topo.adjacency();
+    let mut engines: Vec<Box<dyn SyncAlgorithm>> =
+        (0..N).map(|_| algo.make_sync(&w, D)).collect();
+    for e in engines.iter_mut() {
+        e.set_threads(1);
+    }
+    let mut transports = MemTransport::cluster(N);
+    let mut xs: Vec<Vec<f32>> = (0..N)
+        .map(|i| (0..D).map(|k| 0.3 + 0.001 * ((i + k) % 13) as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = (0..N).map(|_| vec![0.01f32; D]).collect();
+    let mut payloads: Vec<Vec<u8>> = (0..N).map(|_| Vec::new()).collect();
+    let mut gots: Vec<Vec<Frame>> = (0..N).map(|_| Vec::new()).collect();
+    let ctx = StepCtx { seed: 7, rho, g_inf: 1.0 };
+
+    run_rounds(
+        &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
+        &peers, &ctx, 0, WARMUP,
+    );
+    let allocs_before = ALLOCS.load(Ordering::SeqCst);
+    let deallocs_before = DEALLOCS.load(Ordering::SeqCst);
+    run_rounds(
+        &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
+        &peers, &ctx, WARMUP, WINDOW,
+    );
+    let allocs = ALLOCS.load(Ordering::SeqCst) - allocs_before;
+    let deallocs = DEALLOCS.load(Ordering::SeqCst) - deallocs_before;
+    assert_eq!(
+        allocs, 0,
+        "{}: {allocs} heap allocations across {WINDOW} steady-state rounds \
+         (budget: 0 after {WARMUP} warm-up rounds)",
+        algo.name()
+    );
+    assert_eq!(
+        deallocs, 0,
+        "{}: {deallocs} heap frees across {WINDOW} steady-state rounds — \
+         some buffer is being dropped instead of recycled",
+        algo.name()
+    );
+    // The rounds must still have done real work: models moved.
+    assert!(xs[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn steady_state_rounds_allocate_nothing() {
+    // ONE test fn on purpose — see module docs. Order: the contract's
+    // three named engines.
+    check_algo(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    });
+    // 3-bit budget drives the ragged-width word kernels through the same
+    // zero-allocation window.
+    check_algo(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(3),
+    });
+    check_algo(Algorithm::DPsgd);
+    check_algo(Algorithm::Choco {
+        quant: QuantConfig::stochastic(8),
+        range: 4.0,
+        gamma: 0.5,
+    });
+}

@@ -155,3 +155,56 @@ fn moniqua_verify_failures_identical_across_widths() {
         assert_eq!(count(threads), reference);
     }
 }
+
+#[test]
+fn sparse_weight_lists_match_dense_row_scan() {
+    // §Perf: the engines' accumulate loops read CommMatrix's precomputed
+    // sparse (neighbor, weight) lists instead of dense row lookups. One
+    // D-PSGD averaging step must be bitwise the dense-row-scan reference
+    // (same ascending-j summation order) on structurally distinct graphs.
+    for topo in [
+        Topology::Ring(N),
+        Topology::Star(N),
+        Topology::RandomRegular { n: N, degree: 4, seed: 3 },
+    ] {
+        let w = topo.comm_matrix();
+        let rho = w.rho();
+        let xs0: Vec<Vec<f32>> = (0..N)
+            .map(|i| (0..D).map(|k| 0.5 + 0.03 * ((i * 13 + k) % 11) as f32).collect())
+            .collect();
+        let grads: Vec<Vec<f32>> = (0..N)
+            .map(|i| (0..D).map(|k| 0.01 * ((i + k) % 5) as f32).collect())
+            .collect();
+        let lr = 0.05f32;
+        let mut xs = xs0.clone();
+        let mut engine = Algorithm::DPsgd.make_sync(&w, D);
+        engine.set_threads(1);
+        let ctx = StepCtx { seed: 1, rho, g_inf: 1.0 };
+        engine.step(&mut xs, &grads, lr, 0, &ctx);
+        for i in 0..N {
+            // Dense reference: scan the whole matrix row in ascending j —
+            // the same order the sorted sparse lists produce.
+            let mut want = vec![0.0f32; D];
+            for (k, v) in want.iter_mut().enumerate() {
+                *v = w.weight(i, i) as f32 * xs0[i][k];
+            }
+            for j in 0..N {
+                if j == i || w.weight(j, i) <= 1e-15 {
+                    continue;
+                }
+                let wji = w.weight(j, i) as f32;
+                for (k, v) in want.iter_mut().enumerate() {
+                    *v += wji * xs0[j][k];
+                }
+            }
+            for (k, v) in want.iter_mut().enumerate() {
+                *v += -lr * grads[i][k];
+            }
+            assert_eq!(
+                xs[i].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{topo:?} worker {i}: sparse-list step diverged from dense row scan"
+            );
+        }
+    }
+}

@@ -10,7 +10,10 @@
 //! * entropy-coder round-trip identity for every codec compiled into this
 //!   build (RLE always; deflate/bzip2 under their features).
 
+use moniqua::algorithms::engine::CODEC_CHUNK_CODES;
+use moniqua::algorithms::RoundPool;
 use moniqua::quant::{packing, Compression, MoniquaCodec, QuantConfig};
+use moniqua::rng::Pcg64;
 use moniqua::testing::{forall, gaussian_vec, uniform};
 
 /// Bit budgets the paper sweeps (Table 2 goes down to 1 bit; 16 is the
@@ -123,6 +126,80 @@ fn packed_tail_bits_are_zero_padded() {
             assert_eq!(tail >> valid, 0, "tail bits beyond the payload must be 0");
         }
     });
+}
+
+#[test]
+fn word_kernels_exhaustive_tail_matrix_vs_reference() {
+    // §Perf acceptance: every bits ∈ 1..=16 × tail length 0..=15 codes,
+    // cross-checked byte-for-byte against the retained naive reference
+    // implementation. Lengths cover 0, tail-only, one-word+tail, and
+    // several-words+tail, so both the pow2 fixed-count kernel and the
+    // u128 two-word staging kernel hit every refill/flush edge.
+    let mut rng = Pcg64::seeded(0xB17);
+    for bits in 1..=16u32 {
+        // Codes per whole 64-bit output word (pow2 widths) or a generic
+        // multi-word run (ragged widths).
+        let word_runs = [0usize, 64, 192];
+        for base in word_runs {
+            for tail in 0..=15usize {
+                let d = base + tail;
+                let codes: Vec<u32> = (0..d)
+                    .map(|_| (rng.next_u64() & ((1u64 << bits) - 1)) as u32)
+                    .collect();
+                let len = packing::packed_len(d, bits);
+                let mut word = vec![0u8; len];
+                let mut reference = vec![0u8; len];
+                packing::pack_into(&codes, bits, &mut word);
+                packing::pack_into_ref(&codes, bits, &mut reference);
+                assert_eq!(word, reference, "pack bits={bits} d={d}");
+                let mut back_word = vec![0u32; d];
+                let mut back_ref = vec![0u32; d];
+                packing::unpack_into(&word, bits, &mut back_word);
+                packing::unpack_into_ref(&reference, bits, &mut back_ref);
+                assert_eq!(back_word, codes, "unpack bits={bits} d={d}");
+                assert_eq!(back_ref, codes, "unpack_ref bits={bits} d={d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_chunked_codec_bitwise_identical_at_any_width() {
+    // The chunked encode/recover fanned across a RoundPool must be
+    // byte/bit-identical to the single-pass fused kernels at every pool
+    // width — including widths above the chunk count — for byte-divisible
+    // and ragged budgets alike. n straddles two chunk boundaries plus a
+    // ragged tail so the word-aligned splits are genuinely exercised.
+    let n = 2 * CODEC_CHUNK_CODES + 1037;
+    let mut rng = Pcg64::seeded(42);
+    let x: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32 * 2.0).collect();
+    let y: Vec<f32> = x.iter().map(|&v| v + 0.01).collect();
+    let noise: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+    for bits in [1u32, 3, 8] {
+        let cfg = if bits == 1 {
+            QuantConfig::nearest(bits)
+        } else {
+            QuantConfig::stochastic(bits)
+        };
+        let codec = MoniquaCodec::from_theta(1.5, &cfg);
+        let mut plain_wire = vec![0u8; packing::packed_len(n, bits)];
+        codec.encode_packed_into(&x, &noise, &mut plain_wire);
+        let mut plain_out = vec![0.0f32; n];
+        codec.recover_packed_into(&plain_wire, &y, &mut plain_out);
+        for threads in [1usize, 2, 3, 8] {
+            let pool = RoundPool::new(threads);
+            let mut wire = vec![0u8; packing::packed_len(n, bits)];
+            pool.encode_packed(&codec, &x, &noise, &mut wire);
+            assert_eq!(wire, plain_wire, "encode bits={bits} threads={threads}");
+            let mut out = vec![0.0f32; n];
+            pool.recover_packed(&codec, &wire, &y, &mut out);
+            assert_eq!(
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                plain_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "recover bits={bits} threads={threads}"
+            );
+        }
+    }
 }
 
 #[test]

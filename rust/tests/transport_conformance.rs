@@ -257,3 +257,37 @@ fn tcp_large_frames() {
 fn tcp_recv_timeout() {
     recv_timeout(tcp_cluster);
 }
+
+#[test]
+fn tcp_buffered_writer_burst_stays_fifo() {
+    // §Perf: outbound TCP connections sit behind a per-connection
+    // BufWriter flushed once per frame. A rapid burst of small frames to
+    // one peer, interleaved with broadcasts to several peers, must come
+    // out the far end in exact per-sender FIFO order with intact payloads
+    // — no frame may be coalesced away, truncated, or left stranded in the
+    // write buffer (every send path flushes before returning).
+    let mut eps = tcp_cluster(3);
+    let mut rx = eps.remove(0);
+    let mut other = eps.remove(0); // worker 1 (also receives broadcasts)
+    let mut tx = eps.remove(0); // worker 2 sends
+    const BURST: u64 = 200;
+    for round in 0..BURST {
+        if round % 3 == 0 {
+            // multi-peer round: one encode, one buffered write per peer
+            tx.broadcast(&[0, 1], &frame(round, 2, vec![round as u8; 5]))
+                .unwrap();
+        } else {
+            tx.send(0, &frame(round, 2, vec![round as u8; 5])).unwrap();
+        }
+    }
+    for round in 0..BURST {
+        let f = rx.recv(RECV).unwrap();
+        assert_eq!(f.round, round, "burst reordered through the buffered path");
+        assert_eq!(f.payload, vec![round as u8; 5]);
+    }
+    // The broadcast copies must also have landed, in order, at peer 1.
+    for want in (0..BURST).filter(|r| r % 3 == 0) {
+        let f = other.recv(RECV).unwrap();
+        assert_eq!(f.round, want, "broadcast copy reordered at second peer");
+    }
+}
