@@ -13,7 +13,10 @@
 //! The Moniqua variant exchanges modulo-quantized models on the gossip edge
 //! with θ = 16·t_mix·α·G∞ and δ = 1/(64·t_mix + 2) (Theorem 5).
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: the stale cache is serialized into snapshot blobs
+// that equivalence suites compare bitwise, so iteration order is part of
+// the value path (`unordered` lint).
+use std::collections::BTreeMap;
 
 use super::common::{self, CommStats};
 use crate::quant::{MoniquaCodec, QuantConfig};
@@ -51,7 +54,7 @@ pub struct AdPsgd {
     /// *recovered* full-precision x̂ — so a drop-recovery never re-enters the
     /// modulo decode, which is what keeps the decode in-range even while
     /// faults temporarily widen the consensus distance past θ).
-    stale: Option<Vec<HashMap<usize, Vec<f32>>>>,
+    stale: Option<Vec<BTreeMap<usize, Vec<f32>>>>,
     /// Directed deliveries that fell back to the stale cache.
     pub stale_fallbacks: u64,
     /// Directed deliveries dropped with no cached fallback (receiver side
@@ -87,7 +90,7 @@ impl AdPsgd {
     /// per live (receiver, sender) pair and one copy per delivery.
     pub fn enable_fault_tolerance(&mut self) {
         if self.stale.is_none() {
-            self.stale = Some(vec![HashMap::new(); self.snapshots.len()]);
+            self.stale = Some(vec![BTreeMap::new(); self.snapshots.len()]);
         }
     }
 
@@ -304,15 +307,14 @@ impl AdPsgd {
             Some(cache) => {
                 ss::put_u8(out, 1);
                 for per_recv in cache {
-                    // Sorted sender order: HashMap iteration order must not
-                    // leak into the blob (snapshot bytes are compared
-                    // bitwise by the roundtrip property test).
-                    let mut senders: Vec<usize> = per_recv.keys().copied().collect();
-                    senders.sort_unstable();
-                    ss::put_u32(out, senders.len() as u32);
-                    for s in senders {
-                        ss::put_u64(out, s as u64);
-                        ss::put_f32_slice(out, &per_recv[&s]);
+                    // BTreeMap iteration is already sorted by sender, so
+                    // the blob is insertion-order independent (snapshot
+                    // bytes are compared bitwise by the roundtrip property
+                    // test and `stale_cache_snapshot_is_order_independent`).
+                    ss::put_u32(out, per_recv.len() as u32);
+                    for (s, x) in per_recv {
+                        ss::put_u64(out, *s as u64);
+                        ss::put_f32_slice(out, x);
                     }
                 }
             }
@@ -353,7 +355,7 @@ impl AdPsgd {
                 let mut cache = Vec::with_capacity(n);
                 for _ in 0..n {
                     let entries = r.take_u32()? as usize;
-                    let mut per_recv = HashMap::with_capacity(entries);
+                    let mut per_recv = BTreeMap::new();
                     for _ in 0..entries {
                         let s = r.take_u64()? as usize;
                         if s >= n {
@@ -404,7 +406,7 @@ impl AdPsgd {
 
 /// Overwrite receiver `recv`'s cached copy of sender `send`'s model.
 fn cache_store(
-    cache: &mut [HashMap<usize, Vec<f32>>],
+    cache: &mut [BTreeMap<usize, Vec<f32>>],
     recv: usize,
     send: usize,
     val: &[f32],
@@ -437,6 +439,33 @@ mod tests {
             alg.step_event(&mut xs, &mut grad, lr, e);
         }
         xs
+    }
+
+    #[test]
+    fn stale_cache_snapshot_is_order_independent() {
+        // Pins the `unordered` lint's reason to exist: the stale cache is
+        // serialized into snapshot blobs that replicas compare bitwise, so
+        // the bytes must not depend on cache insertion order.
+        let topo = Topology::Ring(4);
+        let d = 4;
+        let mk = || {
+            let mut a = AdPsgd::new(&topo, d, AsyncVariant::FullPrecision, 7);
+            a.enable_fault_tolerance();
+            a
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let vals: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 + 0.5; d]).collect();
+        for s in 0..4usize {
+            cache_store(a.stale.as_mut().unwrap(), 0, s, &vals[s]);
+        }
+        for s in (0..4usize).rev() {
+            cache_store(b.stale.as_mut().unwrap(), 0, s, &vals[s]);
+        }
+        let (mut blob_a, mut blob_b) = (Vec::new(), Vec::new());
+        a.snapshot(&mut blob_a);
+        b.snapshot(&mut blob_b);
+        assert_eq!(blob_a, blob_b, "snapshot bytes depend on insertion order");
     }
 
     #[test]

@@ -181,6 +181,7 @@ impl RoundPool {
     /// `tests/quant_properties.rs`. Width-1 pools and small inputs take the
     /// single-pass kernel directly — no chunk bookkeeping, no allocation
     /// (the cluster runtime's per-node engines run exactly this path).
+    // lint: hot-path
     pub fn encode_packed(
         &self,
         codec: &crate::quant::MoniquaCodec,
@@ -221,6 +222,7 @@ impl RoundPool {
     /// Fused recover ([`crate::quant::MoniquaCodec::recover_packed_into`]) blocked into
     /// the same word-aligned chunks as [`Self::encode_packed`] and fanned
     /// across the pool. Same bitwise-identity contract.
+    // lint: hot-path
     pub fn recover_packed(
         &self,
         codec: &crate::quant::MoniquaCodec,

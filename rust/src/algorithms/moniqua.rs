@@ -254,6 +254,7 @@ impl SyncAlgorithm for MoniquaSync {
         }
     }
 
+    // lint: hot-path
     fn node_send(
         &mut self,
         i: usize,
@@ -289,6 +290,7 @@ impl SyncAlgorithm for MoniquaSync {
         }
     }
 
+    // lint: hot-path
     fn node_recv(
         &mut self,
         i: usize,

@@ -485,6 +485,8 @@ fn run_node(
     mut objective: Box<dyn Objective>,
     spec: NodeSpec<'_>,
 ) -> NodeResult {
+    // lint: allow(wall_clock) — phase timers here feed per-node perf
+    // accounting and recv-deadline diagnostics; model bytes are unaffected.
     let d = objective.dim();
     let steps = spec.cfg.steps;
     let seed = spec.cfg.seed;
@@ -936,6 +938,8 @@ fn wait_for_bootstrap(
     mut framelog: Option<&mut FrameLog>,
     spec: &NodeSpec<'_>,
 ) -> Frame {
+    // lint: allow(wall_clock) — the wait timer only enriches the timeout
+    // panic message; frame selection is purely round/sender keyed.
     let wait_start = Instant::now();
     loop {
         let f = match transport.recv(spec.recv_timeout) {

@@ -205,6 +205,8 @@ impl Trainer {
 
     /// Run the experiment, returning the full trace.
     pub fn run(&mut self) -> Report {
+        // lint: allow(wall_clock) — per-round wall timings feed the Report's
+        // throughput columns only; trajectory bytes never depend on them.
         let n = self.cfg.workers;
         let d = self.objective.dim();
         let init = self.objective.init();

@@ -54,21 +54,29 @@ impl FramePool {
         Self::default()
     }
 
+    /// Lock the pool, recovering from poisoning: pooled buffers are plain
+    /// capacity with no cross-buffer invariant, so a panic elsewhere never
+    /// leaves the pool half-updated in a way worth propagating.
+    fn locked(&self) -> std::sync::MutexGuard<'_, Vec<Vec<u8>>> {
+        match self.bufs.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     /// Check a buffer out: recycled (empty, capacity retained) when one is
     /// pooled, freshly allocated otherwise.
+    // lint: hot-path
     pub fn take(&self) -> Vec<u8> {
-        self.bufs
-            .lock()
-            .expect("frame pool poisoned")
-            .pop()
-            .unwrap_or_default()
+        self.locked().pop().unwrap_or_default()
     }
 
     /// Return a buffer to the pool. Contents are cleared; capacity is what
     /// makes the next [`Self::take`] allocation-free.
+    // lint: hot-path
     pub fn give(&self, mut buf: Vec<u8>) {
         buf.clear();
-        let mut g = self.bufs.lock().expect("frame pool poisoned");
+        let mut g = self.locked();
         if g.len() < MAX_POOLED {
             g.push(buf);
         }
@@ -76,7 +84,7 @@ impl FramePool {
 
     /// Buffers currently parked in the pool (diagnostics/tests).
     pub fn pooled(&self) -> usize {
-        self.bufs.lock().expect("frame pool poisoned").len()
+        self.locked().len()
     }
 }
 

@@ -105,6 +105,12 @@ impl Compression {
 
     /// Wire size for a payload under this codec (compression may *expand*
     /// incompressible data; the network layer charges the real size).
+    ///
+    /// Cold for the hot-path lint: recompression is opt-in and explicitly
+    /// outside the zero-alloc steady-state contract
+    /// (`tests/alloc_discipline.rs` runs with `Compression::None`), so the
+    /// allocating codec calls behind it are not hot-path violations.
+    // lint: cold
     pub fn wire_len(&self, data: &[u8]) -> usize {
         match self {
             Compression::None => data.len(),
@@ -119,7 +125,7 @@ const RLE_ESCAPE: u8 = 0xFF;
 /// as `ESC, byte, len`; other bytes are literal; a literal escape byte is
 /// `ESC, ESC, 1`.
 fn rle_encode(data: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(data.len() / 2 + 8);
+    let mut out = Vec::with_capacity((data.len() / 2).saturating_add(8));
     let mut i = 0;
     while i < data.len() {
         let b = data[i];
@@ -130,7 +136,12 @@ fn rle_encode(data: &[u8]) -> Vec<u8> {
         if run >= 4 || b == RLE_ESCAPE {
             out.push(RLE_ESCAPE);
             out.push(b);
-            out.push(run as u8);
+            let run_byte = match u8::try_from(run) {
+                Ok(v) => v,
+                // Unreachable: the scan loop caps run at 254.
+                Err(_) => unreachable!("RLE run exceeds a byte"),
+            };
+            out.push(run_byte);
         } else {
             for _ in 0..run {
                 out.push(b);
@@ -142,7 +153,7 @@ fn rle_encode(data: &[u8]) -> Vec<u8> {
 }
 
 fn rle_decode(data: &[u8]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut out = Vec::with_capacity(data.len().saturating_mul(2));
     let mut i = 0;
     while i < data.len() {
         if data[i] == RLE_ESCAPE {

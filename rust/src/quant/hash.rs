@@ -88,6 +88,12 @@ pub fn receiver_abs_codes(codec: &MoniquaCodec, xhat: &[f32]) -> Vec<i64> {
 
 /// Full §6 verification: does the receiver's reconstruction hash to the
 /// sender's digest? `false` flags a violated θ bound.
+///
+/// Cold for the hot-path lint: digest *verification* is opt-in
+/// (`QuantConfig::with_verify_hash`) and allocates a codes vector; the
+/// zero-alloc contract covers the always-on sender digest
+/// ([`sender_digest`]), which streams without allocating.
+// lint: cold
 pub fn verify_reconstruction(
     codec: &MoniquaCodec,
     xhat: &[f32],

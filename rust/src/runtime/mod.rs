@@ -31,7 +31,9 @@ pub struct ModelMeta {
 
 impl ModelMeta {
     pub fn parse(text: &str) -> Result<Self> {
-        let mut kv = std::collections::HashMap::new();
+        // BTreeMap for deterministic behavior under the `unordered` lint;
+        // lookup-only here, but the rule is uniform across the crate.
+        let mut kv = std::collections::BTreeMap::new();
         for line in text.lines() {
             if let Some((k, v)) = line.split_once('=') {
                 kv.insert(k.trim().to_string(), v.trim().to_string());

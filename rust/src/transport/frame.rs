@@ -47,6 +47,38 @@ pub const HEADER_LEN: usize = 38;
 /// before any allocation happens on the receive path.
 pub const MAX_PAYLOAD: usize = 1 << 30;
 
+/// Named header field offsets. These are the single source of truth for
+/// the byte layout: `encode_into`/`validate` address fields through them,
+/// [`FIELD_LAYOUT`] proves they tile the header, and `moniqua-lint`'s
+/// `wire_format` rule re-checks the tiling on every run (as does the
+/// `field_layout_tiles_header` unit test).
+pub const OFF_MAGIC: usize = 0;
+pub const OFF_VERSION: usize = 4;
+pub const OFF_ALGO: usize = 6;
+pub const OFF_ROUND: usize = 8;
+pub const OFF_SENDER: usize = 16;
+pub const OFF_BITS: usize = 18;
+pub const OFF_KIND: usize = 20;
+pub const OFF_THETA: usize = 22;
+pub const OFF_PAYLOAD_LEN: usize = 26;
+pub const OFF_CHECKSUM: usize = 30;
+
+/// `(offset, width)` of every header field, in wire order. Must start at
+/// 0, be gap-free, and sum to [`HEADER_LEN`] — checked statically by
+/// `moniqua-lint` and dynamically by the unit test below.
+pub const FIELD_LAYOUT: [(usize, usize); 10] = [
+    (OFF_MAGIC, 4),
+    (OFF_VERSION, 2),
+    (OFF_ALGO, 2),
+    (OFF_ROUND, 8),
+    (OFF_SENDER, 2),
+    (OFF_BITS, 2),
+    (OFF_KIND, 2),
+    (OFF_THETA, 4),
+    (OFF_PAYLOAD_LEN, 4),
+    (OFF_CHECKSUM, 8),
+];
+
 /// Typed decode failures. Every variant carries enough context to debug a
 /// corrupt capture without a hex dump.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -107,11 +139,23 @@ pub enum FrameKind {
 }
 
 impl FrameKind {
+    /// Decode a wire id. Total: unknown ids are a typed error, and the
+    /// `wire_format` lint checks every variant appears here.
     fn from_wire(v: u16) -> Result<FrameKind, FrameError> {
         match v {
             0 => Ok(FrameKind::Data),
             1 => Ok(FrameKind::Bootstrap),
             other => Err(FrameError::BadKind(other)),
+        }
+    }
+
+    /// Wire id of this kind — the inverse of [`Self::from_wire`], spelled
+    /// as an explicit match (not `as u16`) so the `wire_format` lint can
+    /// prove every variant is encodable.
+    fn to_wire(self) -> u16 {
+        match self {
+            FrameKind::Data => 0,
+            FrameKind::Bootstrap => 1,
         }
     }
 }
@@ -134,9 +178,12 @@ pub struct Frame {
 }
 
 impl Frame {
-    /// Total encoded size.
+    /// Total encoded size. Saturating: a `Frame` whose payload somehow
+    /// exceeded `usize::MAX - HEADER_LEN` would already have tripped the
+    /// `MAX_PAYLOAD` assert in `encode_into`, but length math on frame
+    /// fields is checked as a matter of policy (`checked_arith` lint).
     pub fn encoded_len(&self) -> usize {
-        HEADER_LEN + self.payload.len()
+        HEADER_LEN.saturating_add(self.payload.len())
     }
 
     /// Serialize into a fresh buffer.
@@ -147,8 +194,15 @@ impl Frame {
     }
 
     /// Serialize by appending to `out` (the TCP path reuses one buffer).
+    // lint: hot-path
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         assert!(self.payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+        let payload_len = match u32::try_from(self.payload.len()) {
+            Ok(v) => v,
+            // MAX_PAYLOAD (1 GiB) fits in u32; the assert above already
+            // rejected anything larger.
+            Err(_) => unreachable!("payload exceeds MAX_PAYLOAD"),
+        };
         let base = out.len();
         out.extend_from_slice(&MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
@@ -156,11 +210,11 @@ impl Frame {
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.sender.to_le_bytes());
         out.extend_from_slice(&self.bits.to_le_bytes());
-        out.extend_from_slice(&(self.kind as u16).to_le_bytes());
+        out.extend_from_slice(&self.kind.to_wire().to_le_bytes());
         out.extend_from_slice(&self.theta.to_bits().to_le_bytes());
-        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload_len.to_le_bytes());
         // checksum covers header-so-far ++ payload
-        let mut h = fnv1a_bytes(&out[base..base + 30]);
+        let mut h = fnv1a_bytes(&out[base..base + OFF_CHECKSUM]);
         h = fnv1a_continue(h, &self.payload);
         out.extend_from_slice(&h.to_le_bytes());
         out.extend_from_slice(&self.payload);
@@ -177,6 +231,7 @@ impl Frame {
     /// As [`Self::decode`] but consuming the wire buffer: the payload is
     /// the buffer itself with the header drained off — no copy. This is
     /// the transports' receive path (they already own the bytes).
+    // lint: hot-path
     pub fn decode_owned(mut bytes: Vec<u8>) -> Result<Frame, FrameError> {
         let mut f = Self::validate(&bytes)?;
         bytes.drain(..HEADER_LEN);
@@ -190,32 +245,34 @@ impl Frame {
         if bytes.len() < HEADER_LEN {
             return Err(FrameError::Truncated { expected: HEADER_LEN, got: bytes.len() });
         }
-        if bytes[0..4] != MAGIC {
+        if bytes[OFF_MAGIC..OFF_VERSION] != MAGIC {
             return Err(FrameError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
         }
-        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        let version = read_u16(bytes, OFF_VERSION);
         if version != VERSION {
             return Err(FrameError::BadVersion(version));
         }
-        let algo = u16::from_le_bytes([bytes[6], bytes[7]]);
-        let round = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
-        let sender = u16::from_le_bytes([bytes[16], bytes[17]]);
-        let bits = u16::from_le_bytes([bytes[18], bytes[19]]);
-        let kind_raw = u16::from_le_bytes([bytes[20], bytes[21]]);
-        let theta = f32::from_bits(u32::from_le_bytes(bytes[22..26].try_into().unwrap()));
-        let payload_len = u32::from_le_bytes(bytes[26..30].try_into().unwrap()) as usize;
+        let algo = read_u16(bytes, OFF_ALGO);
+        let round = read_u64(bytes, OFF_ROUND);
+        let sender = read_u16(bytes, OFF_SENDER);
+        let bits = read_u16(bytes, OFF_BITS);
+        let kind_raw = read_u16(bytes, OFF_KIND);
+        let theta = f32::from_bits(read_u32(bytes, OFF_THETA));
+        let payload_len = read_u32(bytes, OFF_PAYLOAD_LEN) as usize;
         if payload_len > MAX_PAYLOAD {
             return Err(FrameError::Oversize(payload_len));
         }
-        let expected = HEADER_LEN + payload_len;
+        let expected = HEADER_LEN
+            .checked_add(payload_len)
+            .ok_or(FrameError::Oversize(payload_len))?;
         if bytes.len() < expected {
             return Err(FrameError::Truncated { expected, got: bytes.len() });
         }
         if bytes.len() > expected {
             return Err(FrameError::TrailingBytes { expected, got: bytes.len() });
         }
-        let checksum = u64::from_le_bytes(bytes[30..38].try_into().unwrap());
-        let mut h = fnv1a_bytes(&bytes[0..30]);
+        let checksum = read_u64(bytes, OFF_CHECKSUM);
+        let mut h = fnv1a_bytes(&bytes[OFF_MAGIC..OFF_CHECKSUM]);
         h = fnv1a_continue(h, &bytes[HEADER_LEN..]);
         if h != checksum {
             return Err(FrameError::ChecksumMismatch { expected: checksum, got: h });
@@ -223,8 +280,33 @@ impl Frame {
         // Kind is validated *after* the checksum: a BadKind is a well-formed
         // frame from a foreign/newer peer, not corruption.
         let kind = FrameKind::from_wire(kind_raw)?;
+        // lint: allow(hot_alloc) — a capacity-0 `Vec::new` never touches
+        // the heap; the decode entry points attach the real payload buffer.
         Ok(Frame { round, sender, algo, bits, kind, theta, payload: Vec::new() })
     }
+}
+
+/// Little-endian field readers. Bounds are guaranteed by the
+/// `bytes.len() >= HEADER_LEN` check in `validate` plus the
+/// [`FIELD_LAYOUT`] tiling invariant, so no per-field `try_into` (and no
+/// panic path the `panic_surface` lint would have to trust) is needed.
+#[inline]
+fn read_u16(b: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([b[off], b[off + 1]])
+}
+
+#[inline]
+fn read_u32(b: &[u8], off: usize) -> u32 {
+    let mut a = [0u8; 4];
+    a.copy_from_slice(&b[off..off + 4]);
+    u32::from_le_bytes(a)
+}
+
+#[inline]
+fn read_u64(b: &[u8], off: usize) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[off..off + 8]);
+    u64::from_le_bytes(a)
 }
 
 /// Continue an FNV-1a hash over more bytes (same constants as
@@ -270,6 +352,26 @@ mod tests {
             theta: 2.0,
             payload,
         }
+    }
+
+    #[test]
+    fn field_layout_tiles_header() {
+        let mut expect = 0;
+        for (off, width) in FIELD_LAYOUT {
+            assert_eq!(off, expect, "field at offset {off} leaves a gap/overlap");
+            expect += width;
+        }
+        assert_eq!(expect, HEADER_LEN);
+    }
+
+    #[test]
+    fn kind_wire_ids_roundtrip_and_stay_stable() {
+        for k in [FrameKind::Data, FrameKind::Bootstrap] {
+            assert_eq!(FrameKind::from_wire(k.to_wire()).unwrap(), k);
+        }
+        // Ids are part of the wire format: never renumber.
+        assert_eq!(FrameKind::Data.to_wire(), 0);
+        assert_eq!(FrameKind::Bootstrap.to_wire(), 1);
     }
 
     #[test]

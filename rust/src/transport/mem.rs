@@ -47,19 +47,32 @@ impl ByteQueue {
         self.closed.load(Ordering::Acquire)
     }
 
+    /// Lock the queue, recovering from poisoning: the deque holds plain
+    /// byte buffers with no invariant a panicking holder could have half
+    /// applied, so the poison flag carries no information worth dying for
+    /// (and the transport hot path must stay panic-free).
+    fn locked(&self) -> std::sync::MutexGuard<'_, VecDeque<Vec<u8>>> {
+        match self.q.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     fn push(&self, bytes: Vec<u8>) {
-        self.q.lock().expect("mem queue poisoned").push_back(bytes);
+        self.locked().push_back(bytes);
         self.cv.notify_one();
     }
 
     fn try_pop(&self) -> Option<Vec<u8>> {
-        self.q.lock().expect("mem queue poisoned").pop_front()
+        self.locked().pop_front()
     }
 
     /// Block up to `timeout` for one buffer.
     fn pop_timeout(&self, timeout: Duration) -> Option<Vec<u8>> {
+        // lint: allow(wall_clock) — condvar deadline arithmetic; purely
+        // about *when* to give up waiting, never about frame contents.
         let deadline = Instant::now() + timeout;
-        let mut g = self.q.lock().expect("mem queue poisoned");
+        let mut g = self.locked();
         loop {
             if let Some(b) = g.pop_front() {
                 return Some(b);
@@ -68,11 +81,10 @@ impl ByteQueue {
             if now >= deadline {
                 return None;
             }
-            g = self
-                .cv
-                .wait_timeout(g, deadline - now)
-                .expect("mem queue poisoned")
-                .0;
+            g = match self.cv.wait_timeout(g, deadline - now) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
         }
     }
 }
@@ -130,6 +142,7 @@ impl Transport for MemTransport {
         self.queues.len()
     }
 
+    // lint: hot-path
     fn send(&mut self, peer: usize, frame: &Frame) -> Result<(), TransportError> {
         assert!(peer < self.queues.len(), "peer {peer} out of range");
         if self.queues[peer].is_closed() {
@@ -141,6 +154,7 @@ impl Transport for MemTransport {
         Ok(())
     }
 
+    // lint: hot-path
     fn broadcast(&mut self, peers: &[usize], frame: &Frame) -> Result<(), TransportError> {
         // Encode (and checksum) once into a pooled scratch; intermediate
         // peers get a copy into a recycled buffer, the last peer takes the
@@ -169,7 +183,10 @@ impl Transport for MemTransport {
         Ok(())
     }
 
+    // lint: hot-path
     fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError> {
+        // lint: allow(wall_clock) — the recv deadline is transport-local
+        // timing; it gates *when* a frame is returned, never its bytes.
         let deadline = Instant::now() + timeout;
         loop {
             self.drain()?;
@@ -187,6 +204,7 @@ impl Transport for MemTransport {
         }
     }
 
+    // lint: hot-path
     fn recycle(&mut self, payload: Vec<u8>) {
         self.pool.give(payload);
     }

@@ -34,8 +34,14 @@
 //! one OS thread per worker, each owning only its own model, every model
 //! byte it learns about a neighbor arriving through `recv`.
 
+// Decode/recv paths return typed errors, never panic — enforced twice:
+// `moniqua-lint`'s `panic_surface` rule and clippy's unwrap/expect lints,
+// scoped to the transport modules (tests keep their unwraps).
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod frame;
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod mem;
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod tcp;
 
 pub use frame::{

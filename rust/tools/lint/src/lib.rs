@@ -1,0 +1,1031 @@
+//! `moniqua-lint` — repo-invariant static analysis for the runtime crate.
+//!
+//! The runtime's correctness story (DESIGN.md §Static-analysis) rests on
+//! invariants that `rustc` cannot see:
+//!
+//! * **Bitwise-deterministic replicas** — Trainer, DES, and ClusterTrainer
+//!   must compute identical bytes, so unordered-iteration containers and
+//!   wall-clock reads in value paths are correctness bugs, not style.
+//! * **Zero-allocation steady-state rounds** — the pooled wire path
+//!   (`tests/alloc_discipline.rs`) only stays allocation-free if nobody
+//!   reintroduces a `Vec::new`/`clone`/`collect` under `node_send`/
+//!   `node_recv`/the transports.
+//! * **Total, checked decode** — the frame layer promises typed errors and
+//!   overflow-free length arithmetic on attacker-controlled input.
+//! * **Wire-format layout** — the 38-byte header is spelled out as named
+//!   offsets that must tile `HEADER_LEN` exactly, and every `FrameKind`
+//!   must round-trip through both encode and decode matches.
+//!
+//! This crate parses `rust/src/` with `syn` and enforces those invariants
+//! as six rules, each reported as `file:line: [rule] message`:
+//!
+//! | tag                    | rule                                          |
+//! |------------------------|-----------------------------------------------|
+//! | `unordered`            | no `HashMap`/`HashSet` in non-test code       |
+//! | `wall_clock`           | no `Instant`/`SystemTime`/`thread_rng`/`RandomState` outside `rng/`, `bench_support/` |
+//! | `checked_arith`        | no unchecked `+`/`*`/narrowing `as` on length-like values in the pack/frame kernels |
+//! | `panic_surface`        | no `unwrap()`/`expect()` in `transport/` non-test code |
+//! | `wire_format`          | `FIELD_LAYOUT` offsets tile `HEADER_LEN`; every `FrameKind` variant appears in `from_wire` **and** `to_wire` |
+//! | `hot_alloc`            | no `Vec::new`/`vec!`/`clone`/`collect`/`to_vec`/`Box::new` in the call-graph closure of `// lint: hot-path` seeds |
+//!
+//! ## Marker protocol (the escape hatch)
+//!
+//! Markers are ordinary line comments, placed either on the line directly
+//! above a `fn` signature (one attribute line may sit between) or anywhere
+//! inside the function body:
+//!
+//! * `// lint: hot-path` — seeds the `hot_alloc` call-graph closure.
+//! * `// lint: cold` — excludes the function from the hot set and stops
+//!   traversal through it (for opt-in paths such as entropy recompression
+//!   that are off under the zero-alloc contract).
+//! * `// lint: allow(<tag>) — <reason>` — suppresses diagnostics of
+//!   `<tag>`: on the next line when placed immediately above it, or from
+//!   the marker line to the end of the enclosing function when placed in
+//!   a body. Every allow must carry a reason; reviewers treat a new allow
+//!   like a new `unsafe` block.
+//!
+//! The analysis is deliberately syntactic (no type inference): length-like
+//! means "mentions `.len()` or an identifier named `len`/`*_len`/`*_LEN`",
+//! and the call graph resolves `Type::fn` by impl-type name and method
+//! calls by name alone. That makes it conservative in a predictable way —
+//! `#[cfg(not(test))]` code is under-linted rather than mis-linted, and a
+//! name-only edge can only *widen* the hot set, never drop a function
+//! from it.
+
+use proc_macro2::TokenTree;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+
+/// The six enforced rules plus the bookkeeping `parse` rule (a file that
+/// does not parse cannot be certified, so it is itself a diagnostic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    Unordered,
+    WallClock,
+    CheckedArith,
+    PanicSurface,
+    WireFormat,
+    HotAlloc,
+    Parse,
+}
+
+impl Rule {
+    /// The short tag used in diagnostics and in `// lint: allow(<tag>)`.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Rule::Unordered => "unordered",
+            Rule::WallClock => "wall_clock",
+            Rule::CheckedArith => "checked_arith",
+            Rule::PanicSurface => "panic_surface",
+            Rule::WireFormat => "wire_format",
+            Rule::HotAlloc => "hot_alloc",
+            Rule::Parse => "parse",
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// One finding, addressed like a compiler error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+const UNORDERED_TYPES: &[&str] = &["HashMap", "HashSet"];
+const WALL_CLOCK_NAMES: &[&str] = &["Instant", "SystemTime", "thread_rng", "RandomState"];
+const DENIED_ALLOC_METHODS: &[&str] = &["clone", "collect", "to_vec"];
+/// Files under the checked-arithmetic rule: the kernels whose length math
+/// runs against wire-controlled sizes.
+const ARITH_SCOPE: &[&str] = &[
+    "quant/packing.rs",
+    "quant/moniqua.rs",
+    "quant/entropy.rs",
+    "transport/frame.rs",
+];
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum MarkerKind {
+    HotPath,
+    Cold,
+    Allow(String),
+}
+
+#[derive(Clone, Debug)]
+struct Marker {
+    kind: MarkerKind,
+    line: usize,
+}
+
+#[derive(Clone, Debug)]
+struct FnRec {
+    name: String,
+    /// Impl self-type (or trait name) for `Type::fn` call resolution.
+    owner: Option<String>,
+    sig_line: usize,
+    end_line: usize,
+}
+
+#[derive(Clone, Debug)]
+struct CallRec {
+    fn_ix: usize,
+    name: String,
+    /// `Some(TypeName)` only for `Type::fn(..)` paths with an
+    /// uppercase-initial qualifier (`Self::` is resolved to the enclosing
+    /// impl type at collection time). Method calls and module-qualified
+    /// calls resolve by name alone.
+    qual: Option<String>,
+}
+
+#[derive(Clone, Debug)]
+enum EventKind {
+    Unordered(String),
+    WallClock(String),
+    LenArith(&'static str),
+    LenCast(String),
+    Panic(String),
+    Alloc(String),
+}
+
+#[derive(Clone, Debug)]
+struct Event {
+    kind: EventKind,
+    line: usize,
+    fn_ix: Option<usize>,
+}
+
+/// Reference to an offset in `FIELD_LAYOUT`: a named `OFF_*` const or an
+/// integer literal.
+#[derive(Clone, Debug)]
+enum OffRef {
+    Name(String),
+    Lit(usize),
+}
+
+#[derive(Default)]
+struct FileAnalysis {
+    rel: String,
+    fns: Vec<FnRec>,
+    calls: Vec<CallRec>,
+    events: Vec<Event>,
+    markers: Vec<Marker>,
+    /// Integer-literal consts (`HEADER_LEN`, `OFF_*`) for the wire rule.
+    int_consts: BTreeMap<String, usize>,
+    field_layout: Option<(usize, Vec<(OffRef, usize)>)>,
+    field_layout_malformed: Option<usize>,
+    /// `FrameKind` enum: declaration line + variant names.
+    frame_kind: Option<(usize, Vec<String>)>,
+    /// Path identifiers mentioned inside `from_wire` / `to_wire` bodies.
+    wire_fn_idents: BTreeMap<String, Vec<String>>,
+}
+
+fn parse_markers(text: &str) -> Vec<Marker> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let ln = i + 1;
+        let Some(pos) = line.find("// lint:") else { continue };
+        let rest = line[pos + "// lint:".len()..].trim_start();
+        if rest.starts_with("hot-path") {
+            out.push(Marker { kind: MarkerKind::HotPath, line: ln });
+        } else if rest.starts_with("cold") {
+            out.push(Marker { kind: MarkerKind::Cold, line: ln });
+        } else if let Some(r) = rest.strip_prefix("allow(") {
+            if let Some(end) = r.find(')') {
+                out.push(Marker {
+                    kind: MarkerKind::Allow(r[..end].trim().to_string()),
+                    line: ln,
+                });
+            }
+        }
+    }
+    out
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        if a.path().is_ident("test") {
+            return true;
+        }
+        if !a.path().is_ident("cfg") {
+            return false;
+        }
+        match &a.meta {
+            // NB: matches `cfg(not(test))` too — deliberate under-linting
+            // in preference to parsing cfg boolean logic.
+            syn::Meta::List(l) => l.tokens.to_string().contains("test"),
+            _ => false,
+        }
+    })
+}
+
+/// Syntactic "this expression is about a length": mentions `.len()` or an
+/// identifier named `len` / `*_len` / `*_LEN`.
+fn is_len_like(e: &syn::Expr) -> bool {
+    struct F {
+        found: bool,
+    }
+    impl<'a> Visit<'a> for F {
+        fn visit_expr_method_call(&mut self, n: &'a syn::ExprMethodCall) {
+            if n.method == "len" && n.args.is_empty() {
+                self.found = true;
+            }
+            visit::visit_expr_method_call(self, n);
+        }
+        fn visit_path(&mut self, n: &'a syn::Path) {
+            if let Some(seg) = n.segments.last() {
+                let s = seg.ident.to_string();
+                if s == "len" || s.ends_with("_len") || s.ends_with("_LEN") {
+                    self.found = true;
+                }
+            }
+            visit::visit_path(self, n);
+        }
+    }
+    let mut f = F { found: false };
+    f.visit_expr(e);
+    f.found
+}
+
+fn lit_usize(e: &syn::Expr) -> Option<usize> {
+    if let syn::Expr::Lit(l) = e {
+        if let syn::Lit::Int(i) = &l.lit {
+            return i.base10_parse::<usize>().ok();
+        }
+    }
+    None
+}
+
+fn parse_layout(e: &syn::Expr) -> Option<Vec<(OffRef, usize)>> {
+    let syn::Expr::Array(arr) = e else { return None };
+    let mut out = Vec::new();
+    for elem in &arr.elems {
+        let syn::Expr::Tuple(t) = elem else { return None };
+        if t.elems.len() != 2 {
+            return None;
+        }
+        let off = match &t.elems[0] {
+            syn::Expr::Path(p) => OffRef::Name(p.path.segments.last()?.ident.to_string()),
+            other => OffRef::Lit(lit_usize(other)?),
+        };
+        let width = lit_usize(&t.elems[1])?;
+        out.push((off, width));
+    }
+    Some(out)
+}
+
+struct Collector<'a> {
+    out: &'a mut FileAnalysis,
+    fn_stack: Vec<usize>,
+    impl_type: Vec<Option<String>>,
+    test_depth: usize,
+}
+
+impl<'a> Collector<'a> {
+    fn in_fn(&self) -> Option<usize> {
+        self.fn_stack.last().copied()
+    }
+
+    fn event(&mut self, kind: EventKind, line: usize) {
+        let fn_ix = self.in_fn();
+        self.out.events.push(Event { kind, line, fn_ix });
+    }
+
+    fn begin_fn(&mut self, sig: &syn::Signature, body: &syn::Block) -> bool {
+        if self.test_depth > 0 {
+            return false;
+        }
+        self.out.fns.push(FnRec {
+            name: sig.ident.to_string(),
+            owner: self.impl_type.last().cloned().flatten(),
+            sig_line: sig.ident.span().start().line,
+            end_line: body.span().end().line,
+        });
+        self.fn_stack.push(self.out.fns.len() - 1);
+        true
+    }
+
+    fn scan_tokens(&mut self, ts: proc_macro2::TokenStream) {
+        for tt in ts {
+            match tt {
+                TokenTree::Group(g) => self.scan_tokens(g.stream()),
+                TokenTree::Ident(id) => {
+                    let s = id.to_string();
+                    let line = id.span().start().line;
+                    if UNORDERED_TYPES.contains(&s.as_str()) {
+                        self.event(EventKind::Unordered(s.clone()), line);
+                    }
+                    if WALL_CLOCK_NAMES.contains(&s.as_str()) && self.in_fn().is_some() {
+                        self.event(EventKind::WallClock(s), line);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+impl<'a, 'ast> Visit<'ast> for Collector<'a> {
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        let test = is_cfg_test(&node.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        visit::visit_item_mod(self, node);
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        let test = is_cfg_test(&node.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        let name = match &*node.self_ty {
+            syn::Type::Path(tp) => tp.path.segments.last().map(|s| s.ident.to_string()),
+            _ => None,
+        };
+        self.impl_type.push(name);
+        visit::visit_item_impl(self, node);
+        self.impl_type.pop();
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_item_trait(&mut self, node: &'ast syn::ItemTrait) {
+        let test = is_cfg_test(&node.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        self.impl_type.push(Some(node.ident.to_string()));
+        visit::visit_item_trait(self, node);
+        self.impl_type.pop();
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        let test = is_cfg_test(&node.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        let registered = !test && self.begin_fn(&node.sig, &node.block);
+        visit::visit_item_fn(self, node);
+        if registered {
+            self.fn_stack.pop();
+        }
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        let test = is_cfg_test(&node.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        let registered = !test && self.begin_fn(&node.sig, &node.block);
+        visit::visit_impl_item_fn(self, node);
+        if registered {
+            self.fn_stack.pop();
+        }
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_trait_item_fn(&mut self, node: &'ast syn::TraitItemFn) {
+        let test = is_cfg_test(&node.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        // Only default methods have bodies worth walking.
+        let registered = match (&node.default, test) {
+            (Some(body), false) => self.begin_fn(&node.sig, body),
+            _ => false,
+        };
+        visit::visit_trait_item_fn(self, node);
+        if registered {
+            self.fn_stack.pop();
+        }
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_item_use(&mut self, node: &'ast syn::ItemUse) {
+        if self.test_depth == 0 {
+            fn walk(c: &mut Collector<'_>, t: &syn::UseTree) {
+                match t {
+                    syn::UseTree::Path(p) => walk(c, &p.tree),
+                    syn::UseTree::Name(n) => {
+                        let s = n.ident.to_string();
+                        if UNORDERED_TYPES.contains(&s.as_str()) {
+                            let line = n.ident.span().start().line;
+                            c.event(EventKind::Unordered(s), line);
+                        }
+                    }
+                    syn::UseTree::Rename(r) => {
+                        let s = r.ident.to_string();
+                        if UNORDERED_TYPES.contains(&s.as_str()) {
+                            let line = r.ident.span().start().line;
+                            c.event(EventKind::Unordered(s), line);
+                        }
+                    }
+                    syn::UseTree::Group(g) => {
+                        for item in &g.items {
+                            walk(c, item);
+                        }
+                    }
+                    syn::UseTree::Glob(_) => {}
+                }
+            }
+            walk(self, &node.tree);
+        }
+        visit::visit_item_use(self, node);
+    }
+
+    fn visit_path(&mut self, node: &'ast syn::Path) {
+        if self.test_depth == 0 {
+            let wire_fn = self.in_fn().map(|f| self.out.fns[f].name.clone());
+            for seg in &node.segments {
+                let id = seg.ident.to_string();
+                let line = seg.ident.span().start().line;
+                if UNORDERED_TYPES.contains(&id.as_str()) {
+                    self.event(EventKind::Unordered(id.clone()), line);
+                }
+                if WALL_CLOCK_NAMES.contains(&id.as_str()) && self.in_fn().is_some() {
+                    self.event(EventKind::WallClock(id.clone()), line);
+                }
+                if let Some(name) = &wire_fn {
+                    if name == "from_wire" || name == "to_wire" {
+                        self.out
+                            .wire_fn_idents
+                            .entry(name.clone())
+                            .or_default()
+                            .push(id);
+                    }
+                }
+            }
+        }
+        visit::visit_path(self, node);
+    }
+
+    fn visit_expr_call(&mut self, node: &'ast syn::ExprCall) {
+        if self.test_depth == 0 {
+            if let Some(f) = self.in_fn() {
+                if let syn::Expr::Path(p) = &*node.func {
+                    let segs: Vec<String> =
+                        p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+                    if let Some(name) = segs.last().cloned() {
+                        let mut qual = if segs.len() >= 2 {
+                            Some(segs[segs.len() - 2].clone())
+                        } else {
+                            None
+                        };
+                        if qual.as_deref() == Some("Self") {
+                            qual = self.impl_type.last().cloned().flatten();
+                        }
+                        let typed = qual
+                            .as_deref()
+                            .and_then(|q| q.chars().next())
+                            .is_some_and(|c| c.is_ascii_uppercase());
+                        if typed && name == "new" {
+                            if let Some(q) = qual.as_deref() {
+                                if q == "Vec" || q == "Box" {
+                                    self.event(
+                                        EventKind::Alloc(format!("{q}::new()")),
+                                        node.span().start().line,
+                                    );
+                                }
+                            }
+                        }
+                        self.out.calls.push(CallRec {
+                            fn_ix: f,
+                            name,
+                            qual: if typed { qual } else { None },
+                        });
+                    }
+                }
+            }
+        }
+        visit::visit_expr_call(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        if self.test_depth == 0 {
+            if let Some(f) = self.in_fn() {
+                let m = node.method.to_string();
+                let line = node.method.span().start().line;
+                if m == "unwrap" || m == "expect" {
+                    self.event(EventKind::Panic(format!("{m}()")), line);
+                }
+                if DENIED_ALLOC_METHODS.contains(&m.as_str()) {
+                    self.event(EventKind::Alloc(format!(".{m}()")), line);
+                }
+                self.out.calls.push(CallRec { fn_ix: f, name: m, qual: None });
+            }
+        }
+        visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_binary(&mut self, node: &'ast syn::ExprBinary) {
+        if self.test_depth == 0 {
+            use syn::BinOp;
+            let op = match node.op {
+                BinOp::Add(_) | BinOp::AddAssign(_) => Some("+"),
+                BinOp::Mul(_) | BinOp::MulAssign(_) => Some("*"),
+                _ => None,
+            };
+            if let Some(op) = op {
+                if is_len_like(&node.left) || is_len_like(&node.right) {
+                    self.event(EventKind::LenArith(op), node.span().start().line);
+                }
+            }
+        }
+        visit::visit_expr_binary(self, node);
+    }
+
+    fn visit_expr_cast(&mut self, node: &'ast syn::ExprCast) {
+        if self.test_depth == 0 {
+            if let syn::Type::Path(tp) = &*node.ty {
+                if let Some(seg) = tp.path.segments.last() {
+                    let t = seg.ident.to_string();
+                    if matches!(t.as_str(), "u8" | "u16" | "u32") && is_len_like(&node.expr) {
+                        self.event(EventKind::LenCast(t), node.span().start().line);
+                    }
+                }
+            }
+        }
+        visit::visit_expr_cast(self, node);
+    }
+
+    fn visit_macro(&mut self, node: &'ast syn::Macro) {
+        if self.test_depth == 0 {
+            if let Some(seg) = node.path.segments.last() {
+                if seg.ident == "vec" && self.in_fn().is_some() {
+                    self.event(
+                        EventKind::Alloc("vec! macro".to_string()),
+                        node.span().start().line,
+                    );
+                }
+            }
+            self.scan_tokens(node.tokens.clone());
+        }
+        visit::visit_macro(self, node);
+    }
+
+    fn visit_item_const(&mut self, node: &'ast syn::ItemConst) {
+        if self.test_depth == 0 {
+            let name = node.ident.to_string();
+            let line = node.ident.span().start().line;
+            if name == "FIELD_LAYOUT" {
+                match parse_layout(&node.expr) {
+                    Some(entries) => self.out.field_layout = Some((line, entries)),
+                    None => self.out.field_layout_malformed = Some(line),
+                }
+            } else if let Some(v) = lit_usize(&node.expr) {
+                self.out.int_consts.insert(name, v);
+            }
+        }
+        visit::visit_item_const(self, node);
+    }
+
+    fn visit_item_enum(&mut self, node: &'ast syn::ItemEnum) {
+        if self.test_depth == 0 && node.ident == "FrameKind" {
+            let variants = node.variants.iter().map(|v| v.ident.to_string()).collect();
+            self.out.frame_kind = Some((node.ident.span().start().line, variants));
+        }
+        visit::visit_item_enum(self, node);
+    }
+}
+
+/// The function a marker belongs to: the signature on the next line or the
+/// one after (one attribute line may intervene), else the innermost
+/// function whose body spans the marker line.
+fn attach_fn(fns: &[FnRec], line: usize) -> Option<usize> {
+    let mut above: Option<usize> = None;
+    for (i, f) in fns.iter().enumerate() {
+        if f.sig_line > line && f.sig_line - line <= 2 {
+            match above {
+                Some(j) if fns[j].sig_line <= f.sig_line => {}
+                _ => above = Some(i),
+            }
+        }
+    }
+    if above.is_some() {
+        return above;
+    }
+    let mut best: Option<usize> = None;
+    for (i, f) in fns.iter().enumerate() {
+        if f.sig_line <= line && line <= f.end_line {
+            match best {
+                Some(j) if fns[j].end_line - fns[j].sig_line <= f.end_line - f.sig_line => {}
+                _ => best = Some(i),
+            }
+        }
+    }
+    best
+}
+
+fn suppressed(fa: &FileAnalysis, tag: &str, line: usize) -> bool {
+    fa.markers.iter().any(|m| {
+        let MarkerKind::Allow(r) = &m.kind else { return false };
+        if r != tag {
+            return false;
+        }
+        if m.line == line || m.line + 1 == line {
+            return true;
+        }
+        if let Some(ix) = attach_fn(&fa.fns, m.line) {
+            let f = &fa.fns[ix];
+            return m.line <= line && f.sig_line <= line && line <= f.end_line;
+        }
+        false
+    })
+}
+
+/// Analyze in-memory sources: `(relative_path, contents)` pairs. Paths use
+/// `/` separators relative to the source root (e.g. `transport/frame.rs`).
+pub fn analyze_sources(files: &[(String, String)]) -> Vec<Diagnostic> {
+    let mut analyses: Vec<FileAnalysis> = Vec::new();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    for (rel, text) in files {
+        let mut fa = FileAnalysis { rel: rel.clone(), ..FileAnalysis::default() };
+        fa.markers = parse_markers(text);
+        match syn::parse_file(text) {
+            Ok(ast) => {
+                let mut c = Collector {
+                    out: &mut fa,
+                    fn_stack: Vec::new(),
+                    impl_type: Vec::new(),
+                    test_depth: 0,
+                };
+                c.visit_file(&ast);
+            }
+            Err(e) => {
+                diags.push(Diagnostic {
+                    file: rel.clone(),
+                    line: e.span().start().line.max(1),
+                    rule: Rule::Parse,
+                    message: format!("file does not parse: {e}"),
+                });
+            }
+        }
+        analyses.push(fa);
+    }
+
+    // Per-file rules 1–5.
+    for fa in &analyses {
+        let rel = fa.rel.as_str();
+        let in_bench = rel.starts_with("bench_support");
+        let in_rng = rel.starts_with("rng");
+        let in_transport = rel.starts_with("transport");
+        let in_arith = ARITH_SCOPE.contains(&rel);
+
+        for ev in &fa.events {
+            match &ev.kind {
+                EventKind::Unordered(name) if !in_bench => {
+                    if !suppressed(fa, Rule::Unordered.tag(), ev.line) {
+                        diags.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: ev.line,
+                            rule: Rule::Unordered,
+                            message: format!(
+                                "`{name}` has nondeterministic iteration order; replicas must \
+                                 be bitwise-identical — use `BTreeMap`/`BTreeSet` or sort \
+                                 explicitly"
+                            ),
+                        });
+                    }
+                }
+                EventKind::WallClock(name) if !in_bench && !in_rng => {
+                    if !suppressed(fa, Rule::WallClock.tag(), ev.line) {
+                        diags.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: ev.line,
+                            rule: Rule::WallClock,
+                            message: format!(
+                                "`{name}` reads ambient entropy/time; value paths must be \
+                                 deterministic (allowed only in `rng/` and `bench_support/`)"
+                            ),
+                        });
+                    }
+                }
+                EventKind::LenArith(op) if in_arith => {
+                    if !suppressed(fa, Rule::CheckedArith.tag(), ev.line) {
+                        diags.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: ev.line,
+                            rule: Rule::CheckedArith,
+                            message: format!(
+                                "unchecked `{op}` on a length-like value; use \
+                                 `checked_add`/`saturating_mul`/`try_packed_len`-style helpers"
+                            ),
+                        });
+                    }
+                }
+                EventKind::LenCast(ty) if in_arith => {
+                    if !suppressed(fa, Rule::CheckedArith.tag(), ev.line) {
+                        diags.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: ev.line,
+                            rule: Rule::CheckedArith,
+                            message: format!(
+                                "narrowing `as {ty}` cast of a length-like value; use \
+                                 `{ty}::try_from` and handle the error"
+                            ),
+                        });
+                    }
+                }
+                EventKind::Panic(what) if in_transport => {
+                    if !suppressed(fa, Rule::PanicSurface.tag(), ev.line) {
+                        diags.push(Diagnostic {
+                            file: rel.to_string(),
+                            line: ev.line,
+                            rule: Rule::PanicSurface,
+                            message: format!(
+                                "`{what}` in transport code; decode/recv paths return typed \
+                                 `FrameError`/`TransportError`, never panic"
+                            ),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Rule 5: wire-format structure, only meaningful for frame.rs.
+        if rel.ends_with("transport/frame.rs") || rel == "transport/frame.rs" {
+            diags.extend(check_wire_format(fa));
+        }
+    }
+
+    // Rule 6: hot-path allocation, a crate-global call-graph closure.
+    diags.extend(check_hot_alloc(&analyses));
+
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    diags
+}
+
+fn check_wire_format(fa: &FileAnalysis) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let rel = fa.rel.clone();
+    let mk = |line: usize, message: String| Diagnostic {
+        file: rel.clone(),
+        line,
+        rule: Rule::WireFormat,
+        message,
+    };
+
+    if let Some(line) = fa.field_layout_malformed {
+        diags.push(mk(
+            line,
+            "FIELD_LAYOUT must be a literal array of (OFF_* | integer, width) tuples".into(),
+        ));
+        return diags;
+    }
+    match (&fa.field_layout, fa.int_consts.get("HEADER_LEN")) {
+        (Some((line, entries)), Some(&header_len)) => {
+            let mut expected = 0usize;
+            let mut ok = true;
+            for (off_ref, width) in entries {
+                let off = match off_ref {
+                    OffRef::Lit(v) => Some(*v),
+                    OffRef::Name(n) => fa.int_consts.get(n).copied(),
+                };
+                match off {
+                    None => {
+                        let n = match off_ref {
+                            OffRef::Name(n) => n.clone(),
+                            OffRef::Lit(v) => v.to_string(),
+                        };
+                        diags.push(mk(
+                            *line,
+                            format!("FIELD_LAYOUT references `{n}`, which is not an \
+                                     integer-literal const in this file"),
+                        ));
+                        ok = false;
+                        break;
+                    }
+                    Some(o) if o != expected => {
+                        diags.push(mk(
+                            *line,
+                            format!(
+                                "FIELD_LAYOUT gap/overlap: field at offset {o} but the \
+                                 previous field ends at {expected}"
+                            ),
+                        ));
+                        ok = false;
+                        break;
+                    }
+                    Some(o) => expected = o + width,
+                }
+            }
+            if ok && expected != header_len {
+                diags.push(mk(
+                    *line,
+                    format!(
+                        "FIELD_LAYOUT widths sum to {expected} but HEADER_LEN is {header_len}"
+                    ),
+                ));
+            }
+        }
+        (None, _) => diags.push(mk(
+            1,
+            "frame.rs must declare the header as a FIELD_LAYOUT const of named offsets".into(),
+        )),
+        (_, None) => diags.push(mk(
+            1,
+            "frame.rs must declare HEADER_LEN as an integer-literal const".into(),
+        )),
+    }
+
+    if let Some((line, variants)) = &fa.frame_kind {
+        for dir in ["from_wire", "to_wire"] {
+            match fa.wire_fn_idents.get(dir) {
+                None => diags.push(mk(
+                    *line,
+                    format!("FrameKind must have a `{dir}` conversion covering every variant"),
+                )),
+                Some(idents) => {
+                    for v in variants {
+                        if !idents.iter().any(|i| i == v) {
+                            diags.push(mk(
+                                *line,
+                                format!("FrameKind variant `{v}` never appears in `{dir}`"),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    diags
+}
+
+fn check_hot_alloc(analyses: &[FileAnalysis]) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+
+    // Global function tables.
+    let mut by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    let mut by_typed: BTreeMap<(&str, &str), Vec<(usize, usize)>> = BTreeMap::new();
+    for (fi, fa) in analyses.iter().enumerate() {
+        for (xi, f) in fa.fns.iter().enumerate() {
+            by_name.entry(f.name.as_str()).or_default().push((fi, xi));
+            if let Some(owner) = &f.owner {
+                by_typed
+                    .entry((owner.as_str(), f.name.as_str()))
+                    .or_default()
+                    .push((fi, xi));
+            }
+        }
+    }
+
+    // Seeds and cold boundaries from markers.
+    let mut seeds: Vec<(usize, usize)> = Vec::new();
+    let mut cold: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for (fi, fa) in analyses.iter().enumerate() {
+        for m in &fa.markers {
+            let target = attach_fn(&fa.fns, m.line);
+            match (&m.kind, target) {
+                (MarkerKind::HotPath, Some(ix)) => seeds.push((fi, ix)),
+                (MarkerKind::Cold, Some(ix)) => {
+                    cold.insert((fi, ix));
+                }
+                (MarkerKind::HotPath, None) | (MarkerKind::Cold, None) => {
+                    diags.push(Diagnostic {
+                        file: fa.rel.clone(),
+                        line: m.line,
+                        rule: Rule::HotAlloc,
+                        message: "lint marker is not attached to any function (place it \
+                                  directly above a `fn` signature or inside a body)"
+                            .into(),
+                    });
+                }
+                (MarkerKind::Allow(_), _) => {}
+            }
+        }
+    }
+
+    // Closure over the call graph.
+    let mut hot: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut work: Vec<(usize, usize)> = Vec::new();
+    for s in seeds {
+        if !cold.contains(&s) && hot.insert(s) {
+            work.push(s);
+        }
+    }
+    while let Some((fi, xi)) = work.pop() {
+        for call in analyses[fi].calls.iter().filter(|c| c.fn_ix == xi) {
+            let candidates: &[(usize, usize)] = match &call.qual {
+                // `Type::fn` resolves within impls of that type name only;
+                // no fallback — an unmatched typed call targets std.
+                Some(q) => by_typed
+                    .get(&(q.as_str(), call.name.as_str()))
+                    .map(|v| v.as_slice())
+                    .unwrap_or(&[]),
+                None => by_name
+                    .get(call.name.as_str())
+                    .map(|v| v.as_slice())
+                    .unwrap_or(&[]),
+            };
+            for &c in candidates {
+                if !cold.contains(&c) && hot.insert(c) {
+                    work.push(c);
+                }
+            }
+        }
+    }
+
+    for &(fi, xi) in &hot {
+        let fa = &analyses[fi];
+        let fname = &fa.fns[xi].name;
+        for ev in &fa.events {
+            if ev.fn_ix != Some(xi) {
+                continue;
+            }
+            let EventKind::Alloc(what) = &ev.kind else { continue };
+            if suppressed(fa, Rule::HotAlloc.tag(), ev.line) {
+                continue;
+            }
+            diags.push(Diagnostic {
+                file: fa.rel.clone(),
+                line: ev.line,
+                rule: Rule::HotAlloc,
+                message: format!(
+                    "{what} allocates inside `{fname}`, which is reachable from a \
+                     `// lint: hot-path` seed; steady-state rounds must be allocation-free"
+                ),
+            });
+        }
+    }
+    diags
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for deterministic
+/// output, as paths relative to `root`.
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, base: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+        let mut entries: Vec<_> =
+            std::fs::read_dir(dir)?.collect::<std::io::Result<Vec<_>>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, base, out)?;
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                if let Ok(rel) = p.strip_prefix(base) {
+                    out.push(rel.to_path_buf());
+                }
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    Ok(out)
+}
+
+/// Analyze every `.rs` file under `root` (the crate's `src/` directory).
+/// Diagnostics carry paths prefixed with `root` so they are clickable from
+/// the invocation directory.
+pub fn analyze_tree(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let rels = collect_rs_files(root)?;
+    let mut files = Vec::new();
+    for rel in &rels {
+        let text = std::fs::read_to_string(root.join(rel))?;
+        let rel_str = rel
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push((rel_str, text));
+    }
+    let mut diags = analyze_sources(&files);
+    for d in &mut diags {
+        d.file = format!("{}/{}", root.display(), d.file);
+    }
+    Ok(diags)
+}

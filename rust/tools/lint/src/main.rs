@@ -1,0 +1,48 @@
+//! CLI for `moniqua-lint`: analyze a source tree, print `file:line`
+//! diagnostics, exit nonzero on any finding.
+//!
+//! ```text
+//! moniqua-lint [SRC_DIR]    # default: src (run from rust/)
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("src"));
+    if !root.is_dir() {
+        eprintln!("moniqua-lint: `{}` is not a directory", root.display());
+        return ExitCode::from(2);
+    }
+    let files = match moniqua_lint::collect_rs_files(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("moniqua-lint: cannot walk `{}`: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let diags = match moniqua_lint::analyze_tree(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("moniqua-lint: cannot read `{}`: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!(
+            "moniqua-lint: {} files clean (unordered, wall_clock, checked_arith, \
+             panic_surface, wire_format, hot_alloc)",
+            files.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!("moniqua-lint: {} diagnostic(s) in {} files", diags.len(), files.len());
+        ExitCode::FAILURE
+    }
+}

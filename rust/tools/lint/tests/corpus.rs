@@ -1,0 +1,144 @@
+//! Self-test corpus for `moniqua-lint`.
+//!
+//! Two halves:
+//!
+//! 1. `tests/fixtures/bad_tree/` mimics the runtime crate's layout (the
+//!    path-scoped rules key off relative paths like `quant/packing.rs`)
+//!    with one deliberately-bad file per rule; every fixture must be
+//!    flagged at its exact `file:line`, and nothing else may be flagged.
+//! 2. The real `rust/src/` tree must produce **zero** diagnostics — the
+//!    same invariant the CI `lint` job enforces.
+
+use moniqua_lint::{analyze_sources, analyze_tree, Diagnostic, Rule};
+use std::path::{Path, PathBuf};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/bad_tree")
+}
+
+/// (line, rule) pairs for one fixture file, sorted.
+fn hits(diags: &[Diagnostic], suffix: &str) -> Vec<(usize, Rule)> {
+    let mut v: Vec<(usize, Rule)> = diags
+        .iter()
+        .filter(|d| d.file.ends_with(suffix))
+        .map(|d| (d.line, d.rule))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn every_fixture_is_flagged_at_its_exact_line() {
+    let diags = analyze_tree(&fixture_root()).expect("read fixture tree");
+
+    assert_eq!(
+        hits(&diags, "algorithms/graph.rs"),
+        vec![(3, Rule::Unordered), (5, Rule::Unordered), (6, Rule::Unordered)],
+    );
+    assert_eq!(hits(&diags, "coordinator/timer.rs"), vec![(4, Rule::WallClock)]);
+    assert_eq!(
+        hits(&diags, "quant/packing.rs"),
+        vec![(4, Rule::CheckedArith), (8, Rule::CheckedArith), (12, Rule::CheckedArith)],
+    );
+    assert_eq!(
+        hits(&diags, "transport/bad_panic.rs"),
+        vec![(4, Rule::PanicSurface), (8, Rule::PanicSurface)],
+    );
+    assert_eq!(
+        hits(&diags, "transport/frame.rs"),
+        vec![(8, Rule::WireFormat), (10, Rule::WireFormat)],
+    );
+    assert_eq!(
+        hits(&diags, "engine/hot.rs"),
+        vec![(9, Rule::HotAlloc), (15, Rule::HotAlloc)],
+    );
+
+    // The unparsable fixture reports the bookkeeping `parse` rule (its
+    // exact line is syn's error span, which we do not pin).
+    let parse: Vec<_> = diags.iter().filter(|d| d.file.ends_with("parse_error.rs")).collect();
+    assert_eq!(parse.len(), 1);
+    assert_eq!(parse[0].rule, Rule::Parse);
+
+    // ... and nothing beyond the expectations above was flagged.
+    assert_eq!(diags.len(), 14, "unexpected extra diagnostics:\n{}", render(&diags));
+}
+
+#[test]
+fn real_source_tree_is_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+    let diags = analyze_tree(&src).expect("read rust/src");
+    assert!(diags.is_empty(), "rust/src must lint clean:\n{}", render(&diags));
+}
+
+#[test]
+fn allow_marker_suppresses_the_flagged_line() {
+    let src = r#"
+pub fn stamp() -> u64 {
+    // lint: allow(wall_clock) — timing is display-only here
+    let t = std::time::Instant::now();
+    let _ = t;
+    0
+}
+"#;
+    let diags = analyze_sources(&[("coordinator/timer.rs".into(), src.into())]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+
+    // The same allow does NOT silence a different rule's tag.
+    let diags = analyze_sources(&[(
+        "coordinator/timer.rs".into(),
+        src.replace("allow(wall_clock)", "allow(unordered)"),
+    )]);
+    assert_eq!(hits(&diags, "coordinator/timer.rs"), vec![(4, Rule::WallClock)]);
+}
+
+#[test]
+fn cold_marker_cuts_the_hot_closure() {
+    let hot_then_cold = r#"
+// lint: hot-path
+pub fn round_step() {
+    helper();
+}
+
+// lint: cold
+fn helper() {
+    let _ = Vec::new();
+}
+"#;
+    let diags = analyze_sources(&[("engine.rs".into(), hot_then_cold.into())]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+
+    // Without the cold boundary the same allocation is reachable.
+    let diags = analyze_sources(&[(
+        "engine.rs".into(),
+        hot_then_cold.replace("// lint: cold\n", ""),
+    )]);
+    assert_eq!(hits(&diags, "engine.rs"), vec![(8, Rule::HotAlloc)]);
+}
+
+#[test]
+fn unattached_marker_is_itself_a_diagnostic() {
+    let diags = analyze_sources(&[("orphan.rs".into(), "// lint: hot-path\n".into())]);
+    assert_eq!(hits(&diags, "orphan.rs"), vec![(1, Rule::HotAlloc)]);
+}
+
+#[test]
+fn test_code_is_exempt() {
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn uses_hash_containers_freely() {
+        let _ = HashMap::<u32, u32>::new();
+        let _ = std::time::Instant::now();
+    }
+}
+"#;
+    let diags = analyze_sources(&[("algorithms/x.rs".into(), src.into())]);
+    assert!(diags.is_empty(), "{}", render(&diags));
+}
+
+fn render(diags: &[Diagnostic]) -> String {
+    diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+}

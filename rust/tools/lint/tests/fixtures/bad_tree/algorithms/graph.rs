@@ -1,0 +1,11 @@
+//! Fixture: `unordered` — a hash container in non-test code.
+
+use std::collections::HashMap;
+
+pub fn degree_table(edges: &[(usize, usize)]) -> HashMap<usize, usize> {
+    let mut m = HashMap::new();
+    for &(a, _) in edges {
+        *m.entry(a).or_insert(0) += 1;
+    }
+    m
+}

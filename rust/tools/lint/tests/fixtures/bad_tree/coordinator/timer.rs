@@ -1,0 +1,7 @@
+//! Fixture: `wall_clock` — a wall-clock read in a value path.
+
+pub fn stamp() -> u64 {
+    let t = std::time::Instant::now();
+    let _ = t;
+    0
+}

@@ -1,0 +1,16 @@
+//! Fixture: `hot_alloc` — allocations reachable from a hot-path seed.
+
+// lint: hot-path
+pub fn round_step(out: &mut Vec<u8>) {
+    fill_payload(out);
+}
+
+fn fill_payload(out: &mut Vec<u8>) {
+    let scratch = Vec::new();
+    out.extend_from_slice(&scratch);
+    let _ = make_frame();
+}
+
+fn make_frame() -> Vec<u8> {
+    vec![0u8; 4]
+}

@@ -1,0 +1,3 @@
+//! Fixture: `parse` — this file is grammatically invalid on purpose.
+
+pub fn broken() -> {}

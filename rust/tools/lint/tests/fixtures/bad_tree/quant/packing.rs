@@ -1,0 +1,13 @@
+//! Fixture: `checked_arith` — raw length arithmetic in a pack kernel.
+
+pub fn packed_bytes(n_len: usize, bits: usize) -> usize {
+    n_len * bits
+}
+
+pub fn joined_size(a: &[u8], b: &[u8]) -> usize {
+    a.len() + b.len()
+}
+
+pub fn header_guess(data: &[u8]) -> u32 {
+    data.len() as u32
+}

@@ -1,0 +1,9 @@
+//! Fixture: `panic_surface` — unwrap/expect on the transport surface.
+
+pub fn parse_port(s: &str) -> u16 {
+    s.parse().unwrap()
+}
+
+pub fn first_byte(b: &[u8]) -> u8 {
+    b.first().copied().expect("empty buffer")
+}

@@ -1,0 +1,30 @@
+//! Fixture: `wire_format` — a layout gap and a `FrameKind` variant that
+//! never appears in `to_wire`.
+
+pub const HEADER_LEN: usize = 10;
+pub const OFF_MAGIC: usize = 0;
+pub const OFF_ROUND: usize = 6;
+
+pub const FIELD_LAYOUT: [(usize, usize); 2] = [(OFF_MAGIC, 4), (OFF_ROUND, 4)];
+
+pub enum FrameKind {
+    Data,
+    Bootstrap,
+}
+
+impl FrameKind {
+    fn from_wire(v: u16) -> Option<FrameKind> {
+        match v {
+            0 => Some(FrameKind::Data),
+            1 => Some(FrameKind::Bootstrap),
+            _ => None,
+        }
+    }
+
+    fn to_wire(self) -> u16 {
+        match self {
+            FrameKind::Data => 0,
+            _ => 1,
+        }
+    }
+}
