@@ -4,6 +4,11 @@
 Usage: compare.py FRESH.json BASELINE.json [--max-regression 0.25] [--gate-gbps]
 
 Rules (stdlib only, no deps):
+  * ``overlap_vs_lockstep`` ratios in the FRESH file are gated
+    **absolutely**: each must be >= 1.0. Both sides of the ratio come out
+    of the DES's virtual clock — a pure function of the config, identical
+    on every machine and in both quick and full mode — so this check needs
+    no baseline and runs even against an unblessed placeholder;
   * missing baseline file, or baseline with an empty ``metrics`` map
     -> exit 0 with a notice (nothing blessed yet — skip gracefully);
   * **gated** metrics are the self-relative ``speedup`` ratios (word
@@ -46,6 +51,27 @@ def main(argv):
     def informational(key):
         return key.endswith(".gbps") and not gated(key)
 
+    fresh = load(fresh_path)
+    fresh_metrics = {k: v for k, v in fresh.get("metrics", {}).items() if v is not None}
+
+    # Absolute, baseline-free gate: DES virtual-time overlap/lockstep
+    # ratios are machine-portable, so overlap must never lose to lockstep.
+    absolute_failures = []
+    for key in sorted(fresh_metrics):
+        if "overlap_vs_lockstep" not in key:
+            continue
+        value = fresh_metrics[key]
+        marker = "OK  " if value >= 1.0 else "SLOW"
+        if value < 1.0:
+            absolute_failures.append((key, value))
+        print(f"[bench-compare] {marker} {key}: {value:.3f} (absolute gate: >= 1.0)")
+    if absolute_failures:
+        print(
+            f"[bench-compare] FAIL: {len(absolute_failures)} overlap ratio(s) below 1.0 "
+            "(pipelined rounds slower than lockstep)"
+        )
+        return 1
+
     try:
         base = load(base_path)
     except FileNotFoundError:
@@ -55,9 +81,6 @@ def main(argv):
     if not base_metrics:
         print(f"[bench-compare] baseline {base_path} is an unblessed placeholder; skipping")
         return 0
-
-    fresh = load(fresh_path)
-    fresh_metrics = {k: v for k, v in fresh.get("metrics", {}).items() if v is not None}
 
     failures = []
     for key in sorted(base_metrics):

@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use moniqua::algorithms::{Algorithm, ThetaPolicy};
 use moniqua::bench_support::{section, BenchJson};
-use moniqua::coordinator::{metrics, TrainConfig, Trainer};
+use moniqua::coordinator::{metrics, DesConfig, DesTrainer, TrainConfig, Trainer};
 use moniqua::data::{partition::Partition, SynthClassification, SynthSpec};
 use moniqua::network::NetworkConfig;
 use moniqua::objectives::{Mlp, Objective};
@@ -120,6 +120,51 @@ fn main() {
             );
         }
     }
+    // --- overlap vs lockstep per-round wall clock (DES, fig1d) -------------
+    // The comm-bound corner (100 Mbps / 20 ms, the paper's worst network):
+    // with the pipelined scheduler, gradient-independent frames stream
+    // under the 50 ms compute, so a round costs max(compute, comm) instead
+    // of compute + comm. DES virtual time makes the ratio machine-portable
+    // — it is a pure function of the config, not of the host — which is
+    // what lets compare.py hard-gate `overlap_vs_lockstep` ≥ 1.
+    section("fig1d: pipelined overlap vs lockstep per-round wall clock (DES)");
+    let overlap_algos = [
+        ("dpsgd", Algorithm::DPsgd),
+        ("moniqua", Algorithm::Moniqua { theta: ThetaPolicy::Constant(2.0), quant: q8 }),
+    ];
+    for (name, algorithm) in overlap_algos {
+        let round_s = |overlap: bool| {
+            let cfg = TrainConfig {
+                workers,
+                steps,
+                lr: 0.1,
+                algorithm: algorithm.clone(),
+                network: Some(NetworkConfig::fig1d()),
+                grad_time_s: Some(50e-3),
+                eval_every: (steps / 8).max(1),
+                seed: 7,
+                ..TrainConfig::default()
+            };
+            let des = DesConfig {
+                overlap,
+                ..DesConfig::uniform(workers, NetworkConfig::fig1d(), 50e-3)
+            };
+            let mut t = DesTrainer::new(cfg, Topology::Ring(workers), make_objective(), des);
+            t.run().final_sim_time() / steps as f64
+        };
+        let lockstep = round_s(false);
+        let overlapped = round_s(true);
+        let speedup = lockstep / overlapped;
+        println!(
+            "  {name:<8} per-round: lockstep {:.1} ms, overlap {:.1} ms ({speedup:.2}x)",
+            lockstep * 1e3,
+            overlapped * 1e3,
+        );
+        json.metric(&format!("fig1d.{name}.round_s_lockstep"), lockstep);
+        json.metric(&format!("fig1d.{name}.round_s_overlap"), overlapped);
+        json.metric(&format!("fig1d.{name}.overlap_vs_lockstep_speedup"), speedup);
+    }
+
     json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
     json.write().expect("write bench json");
 }

@@ -5,7 +5,7 @@
 //! Figure 1(c)/(d).
 
 use super::engine::RoundPool;
-use super::{common, CommScope, CommStats, Inbox, StepCtx, SyncAlgorithm};
+use super::{common, CommScope, CommStats, Inbox, SendPhase, StepCtx, SyncAlgorithm};
 
 pub struct AllReduce {
     d: usize,
@@ -87,6 +87,12 @@ impl SyncAlgorithm for AllReduce {
         payload: &mut Vec<u8>,
     ) {
         common::put_f32s(payload, grad);
+    }
+
+    /// The payload *is* the gradient: nothing exists to send before
+    /// `loss_grad` finishes.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PostGradient
     }
 
     fn node_recv(

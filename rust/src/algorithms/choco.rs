@@ -11,7 +11,7 @@
 //! ```
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, RangeQuantizer, SendPhase, StepCtx, SyncAlgorithm};
 use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -185,6 +185,12 @@ impl SyncAlgorithm for Choco {
         quant.quantize_into(&ws.diff, &ws.noise, &mut ws.codes, &mut ws.qdiff);
         payload.resize(packing::packed_len(d, cfg.bits), 0);
         packing::pack_into(&ws.codes, cfg.bits, payload);
+    }
+
+    /// The quantized difference is taken from the half-step
+    /// `x − α g` — the gradient is baked into the payload.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PostGradient
     }
 
     fn node_recv(

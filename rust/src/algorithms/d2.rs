@@ -12,7 +12,7 @@
 //! SGD. D² requires λ_n(W) > −1/3 (checked at construction).
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
+use super::{common, CommStats, Inbox, SendPhase, StepCtx, SyncAlgorithm, ThetaPolicy};
 use crate::quant::{hash, packing, MoniquaCodec, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -294,6 +294,13 @@ impl SyncAlgorithm for D2 {
                 }
             }
         }
+    }
+
+    /// `node_send` runs the variance-reduced half-step (which consumes
+    /// this round's *and* last round's gradients) before encoding, so the
+    /// frame cannot leave until the gradient is done.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PostGradient
     }
 
     fn node_recv(

@@ -16,7 +16,7 @@
 //! (1–2 bits) exactly as Table 2 reports ("diverge").
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, RangeQuantizer, SendPhase, StepCtx, SyncAlgorithm};
 use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -251,6 +251,12 @@ impl SyncAlgorithm for Dcd {
         let base = payload.len();
         payload.resize(base + packing::packed_len(d, cfg.bits), 0);
         packing::pack_into(&self.ws[i].codes, cfg.bits, &mut payload[base..]);
+    }
+
+    /// The wire difference is taken against `z = Σ_j W_ji x̂_j − α g_i`,
+    /// which consumes the round's gradient — send must follow compute.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PostGradient
     }
 
     fn node_recv(

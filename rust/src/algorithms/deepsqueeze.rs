@@ -15,7 +15,7 @@
 //! lower accuracy than Moniqua/Choco.
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, RangeQuantizer, SendPhase, StepCtx, SyncAlgorithm};
 use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -180,6 +180,12 @@ impl SyncAlgorithm for DeepSqueeze {
         }
         payload.resize(packing::packed_len(d, cfg.bits), 0);
         packing::pack_into(&ws.codes, cfg.bits, payload);
+    }
+
+    /// Error feedback compresses `v = x − α g` plus the carried error:
+    /// both the payload and the updated `err` state need the gradient.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PostGradient
     }
 
     fn node_recv(

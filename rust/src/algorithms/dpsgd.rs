@@ -6,7 +6,7 @@
 //! ```
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, SendPhase, StepCtx, SyncAlgorithm};
 use crate::topology::CommMatrix;
 
 pub struct DPsgd {
@@ -92,6 +92,13 @@ impl SyncAlgorithm for DPsgd {
     ) {
         // Exact neighbor models on the wire: the payload is the raw model.
         common::put_f32s(payload, x);
+    }
+
+    /// The payload is the raw model — `node_send` never touches the
+    /// gradient (the `x − α g` update happens in the recv half), so the
+    /// frame can stream on the wire while `loss_grad` runs.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PreGradient
     }
 
     fn node_recv(

@@ -16,7 +16,7 @@
 //! 1 bit, ≈36% accuracy at 2 bits).
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, RangeQuantizer, SendPhase, StepCtx, SyncAlgorithm};
 use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -246,6 +246,12 @@ impl SyncAlgorithm for Ecd {
         let base = payload.len();
         payload.resize(base + packing::packed_len(d, cfg.bits), 0);
         packing::pack_into(&self.ws[i].codes, cfg.bits, &mut payload[base..]);
+    }
+
+    /// The extrapolated send state folds in `−α g` before quantizing, so
+    /// the gradient gates the send half.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PostGradient
     }
 
     fn node_recv(

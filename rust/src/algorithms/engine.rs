@@ -31,6 +31,19 @@
 //! The `tests/engine_equivalence.rs` suite pins this contract for every
 //! algorithm in the crate.
 //!
+//! ## Phase split at the node level
+//!
+//! The same three phases reappear in the message-passing runtime as the
+//! per-node halves `node_send` (phase 1 for one worker) and `node_recv`
+//! (phases 2–3 against the inbox). Whether phase 1 runs before or after
+//! the round's gradient is the engine's [`super::SendPhase`]: engines
+//! whose encode reads only `x` declare `PreGradient`, which lets the
+//! cluster scheduler broadcast the frame while the gradient computes
+//! (`coordinator::cluster`, §Pipelined rounds) without changing a single
+//! payload byte. Engines whose encode consumes the gradient (`x − αg`
+//! half-steps, error feedback, the raw-gradient baselines) declare
+//! `PostGradient` and keep the strict order.
+//!
 //! ## Threading model
 //!
 //! The [`RoundPool`] object is persistent (constructed once per algorithm

@@ -42,6 +42,32 @@ pub use engine::RoundPool;
 use crate::quant::QuantConfig;
 use crate::topology::CommMatrix;
 
+/// When, relative to the round's local gradient computation, an engine's
+/// [`SyncAlgorithm::node_send`] half may run.
+///
+/// The pipelined cluster scheduler
+/// ([`coordinator::cluster`](crate::coordinator::cluster)) broadcasts a
+/// `PreGradient` engine's frame at round entry, so the wire drains *while*
+/// the gradient is computed and a comm-bound round costs
+/// `max(compute, comm) + mix` instead of `compute + comm`. This is bitwise
+/// safe exactly when the send half's payload bytes are a pure function of
+/// `(x, lr, round, seed)`: the model is unchanged until the recv half, and
+/// the only `StepCtx` field that differs before vs. after the gradient is
+/// `g_inf`, which feeds nothing but the Theorem-2 θ policy the cluster
+/// runtime refuses at construction. The DES runtime uses the same flag to
+/// model overlapped round timing (`coordinator::des`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendPhase {
+    /// `node_send` never reads the gradient: the frame can be encoded and
+    /// broadcast before `loss_grad` runs. The scheduler passes an **empty
+    /// gradient slice** in this mode — any accidental read is a loud index
+    /// panic, not a silent value divergence.
+    PreGradient,
+    /// `node_send` consumes the round's gradient (payload = f(x, g)): the
+    /// frame can only leave after the gradient finishes. Safe default.
+    PostGradient,
+}
+
 /// θ policy for Moniqua variants (paper §6 "Choosing θ empirically").
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ThetaPolicy {
@@ -235,6 +261,15 @@ pub trait SyncAlgorithm: Send {
     /// Which peers the node-mode round exchanges payloads with.
     fn comm_scope(&self) -> CommScope {
         CommScope::Neighbors
+    }
+
+    /// Whether this engine's send half depends on the round's gradient
+    /// (see [`SendPhase`]). Engines whose payload is a pure function of
+    /// `(x, lr, round, seed)` override this to [`SendPhase::PreGradient`]
+    /// to opt into the pipelined scheduler's early broadcast; the default
+    /// is the conservative [`SendPhase::PostGradient`].
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PostGradient
     }
 
     /// The θ bound the algorithm used this round (Moniqua variants), for

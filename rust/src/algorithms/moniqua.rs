@@ -26,7 +26,7 @@
 //! reused at every receiving edge.
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
+use super::{common, CommStats, Inbox, SendPhase, StepCtx, SyncAlgorithm, ThetaPolicy};
 use crate::quant::{hash, packing, MoniquaCodec, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -291,6 +291,16 @@ impl SyncAlgorithm for MoniquaSync {
     }
 
     // lint: hot-path
+    /// The modulo-encoded payload is a pure function of `(x, lr, round,
+    /// seed)`: the gradient only enters in the recv half's
+    /// `x ← mix − α g` update, and `ctx.g_inf` only feeds the Theorem-2 θ
+    /// policy, which the cluster runtime refuses at construction (the
+    /// Constant policy — the only one that reaches this path — ignores
+    /// it). The frame can therefore stream under the gradient compute.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PreGradient
+    }
+
     fn node_recv(
         &mut self,
         i: usize,

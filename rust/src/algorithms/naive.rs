@@ -10,7 +10,7 @@
 //! to regenerate that result (bench_theorem1_naive).
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, RangeQuantizer, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, RangeQuantizer, SendPhase, StepCtx, SyncAlgorithm};
 use crate::quant::{packing, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -138,6 +138,13 @@ impl SyncAlgorithm for NaiveQuant {
         quant.quantize_into(x, &e.noise, &mut e.codes, &mut e.qval);
         payload.resize(packing::packed_len(d, cfg.bits), 0);
         packing::pack_into(&e.codes, cfg.bits, payload);
+    }
+
+    /// Quantizes the model `x` with `(seed, round, i)`-keyed noise — no
+    /// gradient read in the send half (the update is applied on recv), so
+    /// the frame can leave before the gradient is computed.
+    fn send_phase(&self) -> SendPhase {
+        SendPhase::PreGradient
     }
 
     fn node_recv(

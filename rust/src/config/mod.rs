@@ -263,8 +263,10 @@ impl Config {
     }
 
     /// Cluster-runtime config from `transport=mem|tcp`, `port_base`
-    /// (0 = OS ephemeral ports, collision-safe), `recv_timeout_ms`, plus
-    /// the elastic keys (see [`Self::elastic`]).
+    /// (0 = OS ephemeral ports, collision-safe), `recv_timeout_ms`,
+    /// `pipeline=true|false` (send-early round pipelining; on by default,
+    /// bitwise value-equivalent to the strict schedule), plus the elastic
+    /// keys (see [`Self::elastic`]).
     pub fn cluster(&self) -> Result<ClusterConfig> {
         let transport = match self.str_or("transport", "mem") {
             "mem" => TransportKind::Mem,
@@ -283,6 +285,7 @@ impl Config {
                 self.u64_or("recv_timeout_ms", 30_000)?,
             ),
             elastic: self.elastic()?,
+            pipeline: self.bool_or("pipeline", true)?,
         })
     }
 
@@ -424,12 +427,16 @@ mod tests {
         assert_eq!(c.transport, TransportKind::Mem);
         assert_eq!(c.recv_timeout.as_millis(), 30_000);
         assert!(c.elastic.is_none());
+        assert!(c.pipeline, "send-early pipelining is on by default");
 
-        let cfg = Config::from_str_cfg("transport=tcp\nport_base=9000\nrecv_timeout_ms=500")
-            .unwrap();
+        let cfg = Config::from_str_cfg(
+            "transport=tcp\nport_base=9000\nrecv_timeout_ms=500\npipeline=false",
+        )
+        .unwrap();
         let c = cfg.cluster().unwrap();
         assert_eq!(c.transport, TransportKind::Tcp { port_base: 9000 });
         assert_eq!(c.recv_timeout.as_millis(), 500);
+        assert!(!c.pipeline);
 
         assert!(Config::from_str_cfg("transport=carrier-pigeon")
             .unwrap()

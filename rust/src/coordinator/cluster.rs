@@ -17,6 +17,36 @@
 //! 4. [`SyncAlgorithm::node_recv`] — integrate the inbox, finish the
 //!    round.
 //!
+//! ## Pipelined rounds
+//!
+//! With [`ClusterConfig::pipeline`] (the default), step 2 moves to *round
+//! entry* for engines whose send half never reads the gradient
+//! ([`SendPhase::PreGradient`]): the frame is encoded from `x` alone and
+//! broadcast before `loss_grad` runs, so the wire drains **under** the
+//! compute and a comm-bound round costs `max(compute, comm) + mix`
+//! instead of `compute + comm`. The payload bytes are identical either
+//! way — `x`, `lr`, `round`, and the RNG seed are all fixed before the
+//! gradient, and the one `StepCtx` field that is not (`g_inf`) feeds only
+//! the Theorem-2 θ policy this runtime refuses — so the bitwise contract
+//! below is untouched (`tests/cluster_equivalence.rs` pins the pipelined
+//! and strict schedules against the lockstep trainer). Gradient-consuming
+//! engines ([`SendPhase::PostGradient`]) keep the strict order under the
+//! same scheduler. `rust/DESIGN.md` §Pipelining has the full state machine
+//! and the WAL/checkpoint interaction.
+//!
+//! ## Failure propagation
+//!
+//! A worker that cannot complete a round — its barrier deadline expires,
+//! or the transport fails under it — does not panic: it records a typed
+//! [`WorkerFailure`] on the cluster's shared abort latch and returns it.
+//! Sibling workers poll the latch once per recv tick
+//! ([`ABORT_POLL_TICK`]), so they abort within one tick instead of each
+//! burning its own full `recv_timeout` and dying with a misleading
+//! "missing frames" message. [`ClusterTrainer::run`] surfaces the
+//! *originating* worker (the first to trip the latch) in its error.
+//! Protocol violations (corrupt frames, cross-algorithm traffic, replay
+//! holes) still panic — those are bugs, not cluster wedges.
+//!
 //! ## Bitwise equivalence
 //!
 //! The run is bitwise-identical to the lockstep [`Trainer`](super::Trainer)
@@ -58,13 +88,17 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::metrics::{Report, TraceRow};
 use super::TrainConfig;
-use crate::algorithms::{Algorithm, CommScope, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
+use crate::algorithms::{
+    Algorithm, CommScope, Inbox, SendPhase, StepCtx, SyncAlgorithm, ThetaPolicy,
+};
 use crate::elastic::membership::{epoch_at, epoch_index, ElasticConfig, Epoch};
 use crate::elastic::snapshot::{
     load_checkpoint, write_checkpoint, FrameLog, NodeTrace, Snapshot,
@@ -89,14 +123,23 @@ pub enum TransportKind {
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub transport: TransportKind,
-    /// Per-`recv` timeout of the round barrier: a worker that waits this
-    /// long without a frame declares the cluster wedged and panics (which
-    /// fails the run loudly instead of hanging CI), naming the exact
-    /// `(round, sender)` pairs it is still missing.
+    /// Total time budget of one round barrier (and of one bootstrap
+    /// wait). The deadline is computed **once** at barrier entry and every
+    /// `recv` gets only the remaining slice, so a trickle of stragglers
+    /// can never stretch one "30s" barrier to `peers × 30s`. A worker
+    /// whose deadline expires fails the run with a typed error naming the
+    /// configured timeout and the exact `(round, sender)` pairs it is
+    /// still missing.
     pub recv_timeout: Duration,
     /// Elastic membership + checkpoint/recovery plan (None = the fixed
     /// cohort the runtime always had).
     pub elastic: Option<ElasticConfig>,
+    /// Pipelined round scheduling (module docs §Pipelined rounds):
+    /// gradient-independent frames are broadcast at round entry so they
+    /// stream on the wire while the local gradient is computed. Bitwise
+    /// value-equivalent to the strict schedule; `false` forces the strict
+    /// gradient → send → barrier → mix sequence for every engine.
+    pub pipeline: bool,
 }
 
 impl Default for ClusterConfig {
@@ -105,6 +148,119 @@ impl Default for ClusterConfig {
             transport: TransportKind::Mem,
             recv_timeout: Duration::from_secs(30),
             elastic: None,
+            pipeline: true,
+        }
+    }
+}
+
+/// How often a worker blocked in a barrier/bootstrap wait wakes to poll
+/// the cluster's [`AbortLatch`]: the bound on how long a sibling outlives
+/// the originating failure.
+const ABORT_POLL_TICK: Duration = Duration::from_millis(50);
+
+/// Typed round failure a worker hands back instead of panicking: a barrier
+/// deadline expiry, a transport error, or an abort triggered by a sibling.
+/// [`ClusterTrainer::run`] joins these and names the originating worker.
+#[derive(Clone, Debug)]
+pub struct WorkerFailure {
+    pub worker: usize,
+    pub round: u64,
+    pub reason: String,
+}
+
+impl WorkerFailure {
+    fn new(worker: usize, round: u64, reason: String) -> Self {
+        WorkerFailure { worker, round, reason }
+    }
+}
+
+impl std::fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} round {}: {}", self.worker, self.round, self.reason)
+    }
+}
+
+/// Shared round-failure latch: the first worker to fail records itself
+/// here; every sibling's recv loop polls [`Self::tripped`] once per
+/// [`ABORT_POLL_TICK`] and aborts instead of burning its own full
+/// `recv_timeout` on frames that will never arrive.
+#[derive(Default)]
+struct AbortLatch {
+    tripped: AtomicBool,
+    origin: Mutex<Option<WorkerFailure>>,
+}
+
+impl AbortLatch {
+    fn tripped(&self) -> bool {
+        self.tripped.load(Ordering::Acquire)
+    }
+
+    /// Record `failure` as the origin if the latch is still clear; either
+    /// way the latch is tripped and `failure` is handed back so callers
+    /// can `return Err(latch.trip(f))`.
+    fn trip(&self, failure: WorkerFailure) -> WorkerFailure {
+        {
+            let mut origin = self.origin.lock().unwrap();
+            if origin.is_none() {
+                *origin = Some(failure.clone());
+            }
+        }
+        self.tripped.store(true, Ordering::Release);
+        failure
+    }
+
+    fn origin(&self) -> Option<WorkerFailure> {
+        self.origin.lock().unwrap().clone()
+    }
+
+    /// A sibling's failure for aborting out of a wait after someone else
+    /// tripped the latch.
+    fn sibling_abort(&self, worker: usize, round: u64) -> WorkerFailure {
+        let reason = match self.origin() {
+            Some(o) => format!(
+                "aborted within one recv tick: sibling worker {} failed round {}",
+                o.worker, o.round
+            ),
+            None => "aborted within one recv tick by the cluster latch".to_string(),
+        };
+        WorkerFailure::new(worker, round, reason)
+    }
+}
+
+/// One deadline-bounded, abort-aware transport wait.
+enum BarrierRecv {
+    Frame(Frame),
+    /// The caller's deadline passed without a frame.
+    TimedOut,
+    /// A sibling tripped the [`AbortLatch`]; stop waiting.
+    Aborted,
+    Failed(TransportError),
+}
+
+/// Wait for one frame until `deadline`, polling `abort` once per
+/// [`ABORT_POLL_TICK`]. The deadline is the *caller's* (computed once per
+/// barrier), so consecutive calls consume one shared budget — an arriving
+/// frame never resets the clock.
+fn recv_until(
+    transport: &mut dyn Transport,
+    deadline: Instant,
+    abort: &AbortLatch,
+) -> BarrierRecv {
+    // lint: allow(wall_clock) — deadline arithmetic gates *when* a frame is
+    // handed to the caller, never which frame or its bytes.
+    loop {
+        if abort.tripped() {
+            return BarrierRecv::Aborted;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return BarrierRecv::TimedOut;
+        }
+        let wait = ABORT_POLL_TICK.min(deadline - now);
+        match transport.recv(wait) {
+            Ok(f) => return BarrierRecv::Frame(f),
+            Err(TransportError::Timeout) => continue,
+            Err(e) => return BarrierRecv::Failed(e),
         }
     }
 }
@@ -246,7 +402,11 @@ impl ClusterTrainer {
         let wire_bits = quant_config(&self.cfg.algorithm).map_or(32, |q| q.bits as u16);
 
         let transports: Vec<Box<dyn Transport>> = match self.cluster.transport {
-            TransportKind::Mem => MemTransport::cluster(n)
+            // Prewarm for the pipelined working set (two rounds of frames
+            // in flight per directed pair): d·4 bytes covers every payload
+            // encoding — quantized codes are strictly smaller — plus header
+            // slack, so warm-up rounds draw only recycled capacity.
+            TransportKind::Mem => MemTransport::cluster_prewarmed(n, 4 * d + 64)
                 .into_iter()
                 .map(|t| Box::new(t) as Box<dyn Transport>)
                 .collect(),
@@ -262,11 +422,16 @@ impl ClusterTrainer {
             None => (0, None, false),
         };
         let recv_timeout = self.cluster.recv_timeout;
-        let mut results: Vec<NodeResult> = {
+        let pipeline = self.cluster.pipeline;
+        let abort = AbortLatch::default();
+        let mut results: Vec<NodeResult> = Vec::with_capacity(n);
+        let mut failures: Vec<WorkerFailure> = Vec::new();
+        {
             let cfg = &self.cfg;
             let objective = &self.objective;
             let epochs: &[Epoch] = &self.epochs;
             let elastic_plan = self.cluster.elastic.as_ref().map(|e| &e.plan);
+            let abort = &abort;
             std::thread::scope(|s| {
                 let mut handles = Vec::with_capacity(n);
                 for (i, (engine, transport)) in
@@ -285,18 +450,39 @@ impl ClusterTrainer {
                         ckpt_every,
                         ckpt_dir: ckpt_dir.clone(),
                         skip_bootstrap,
+                        pipeline,
+                        abort,
                     };
                     let node_obj = objective.box_clone();
                     handles.push(s.spawn(move || {
                         run_node(i, engine, transport, node_obj, spec)
                     }));
                 }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("cluster worker panicked"))
-                    .collect()
+                for h in handles {
+                    match h.join() {
+                        Ok(Ok(r)) => results.push(r),
+                        Ok(Err(f)) => failures.push(f),
+                        // Protocol-violation panics stay panics: re-raise
+                        // after the scope has joined every thread.
+                        Err(p) => std::panic::resume_unwind(p),
+                    }
+                }
             })
         };
+        if !failures.is_empty() {
+            // The originating worker is the first to have tripped the
+            // latch; every other failure is (usually) a sibling abort.
+            let origin = abort.origin().unwrap_or_else(|| failures[0].clone());
+            let siblings: Vec<String> = failures
+                .iter()
+                .filter(|f| f.worker != origin.worker)
+                .map(|f| f.to_string())
+                .collect();
+            if siblings.is_empty() {
+                bail!("cluster run failed at {origin}");
+            }
+            bail!("cluster run failed at {origin}; siblings: [{}]", siblings.join("; "));
+        }
         results.sort_by_key(|r| r.worker);
         self.frames_sent = results.iter().map(|r| r.trace.frames_sent).sum();
         self.wire_bytes_sent = results.iter().map(|r| r.trace.bytes_sent).sum();
@@ -444,6 +630,12 @@ struct NodeSpec<'a> {
     ckpt_every: u64,
     ckpt_dir: Option<PathBuf>,
     skip_bootstrap: bool,
+    /// Send-early pipelining: PreGradient engines ship their round frame
+    /// before the gradient step (see `ClusterConfig::pipeline`).
+    pipeline: bool,
+    /// Cluster-wide failure latch: one worker's round failure aborts every
+    /// sibling barrier within one recv tick.
+    abort: &'a AbortLatch,
 }
 
 /// This worker's peer set during an epoch.
@@ -473,18 +665,20 @@ fn next_active_round(epochs: &[Epoch], i: usize, from: u64, steps: u64) -> Optio
     None
 }
 
-/// One worker's whole life: gradient → send → frame barrier → recv, for
-/// every round it is a member of, with crash/restore and join/leave
-/// handling when an elastic plan is active. Panics (failing the run) on
-/// transport errors or protocol violations — a wedged or corrupt cluster
-/// must die loudly.
+/// One worker's whole life: send (pipelined) → gradient → frame barrier →
+/// recv, for every round it is a member of, with crash/restore and
+/// join/leave handling when an elastic plan is active. Expected runtime
+/// failures (barrier deadline, transport errors, sibling aborts) come back
+/// as typed [`WorkerFailure`]s so the coordinator can name the originating
+/// worker; protocol violations (corrupt frames, foreign checkpoints) stay
+/// panics — a corrupt cluster must die loudly.
 fn run_node(
     i: usize,
     mut engine: Box<dyn SyncAlgorithm>,
     mut transport: Box<dyn Transport>,
     mut objective: Box<dyn Objective>,
     spec: NodeSpec<'_>,
-) -> NodeResult {
+) -> Result<NodeResult, WorkerFailure> {
     // lint: allow(wall_clock) — phase timers here feed per-node perf
     // accounting and recv-deadline diagnostics; model bytes are unaffected.
     let d = objective.dim();
@@ -493,11 +687,11 @@ fn run_node(
 
     let Some(start_round) = next_active_round(spec.epochs, i, 0, steps) else {
         // Provisioned slot that never activates: idle for the whole run.
-        return NodeResult {
+        return Ok(NodeResult {
             worker: i,
             final_x: objective.init(),
             trace: NodeTrace::starting_at(steps),
-        };
+        });
     };
 
     let mut x = objective.init();
@@ -660,9 +854,13 @@ fn run_node(
                         payload: model_bytes,
                     };
                     if round >= live_from {
-                        transport.send(joiner, &bf).unwrap_or_else(|e| {
-                            panic!("worker {i} round {round}: bootstrap send failed: {e}")
-                        });
+                        transport.send(joiner, &bf).map_err(|e| {
+                            spec.abort.trip(WorkerFailure::new(
+                                i,
+                                round,
+                                format!("bootstrap send failed: {e}"),
+                            ))
+                        })?;
                     }
                     trace.frames_sent += 1;
                     trace.bytes_sent += bf.encoded_len() as u64;
@@ -687,7 +885,7 @@ fn run_node(
                             &mut boot_pending,
                             framelog.as_mut(),
                             &spec,
-                        )
+                        )?
                     };
                     assert_eq!(
                         bf.sender as usize, boot,
@@ -710,6 +908,38 @@ fn run_node(
             lr *= spec.cfg.decay_factor;
         }
 
+        // --- pipelined send half (PreGradient engines) ----------------------
+        // Engines whose payload does not read this round's gradient ship
+        // their frame *before* the gradient step: the frame crosses the
+        // wire while `loss_grad` runs, so the round's wall clock is
+        // max(compute, comm) + mix instead of compute + comm. The empty
+        // gradient slice is a tripwire — a PreGradient engine that reads it
+        // dies loudly instead of silently consuming stale data. `ctx.g_inf`
+        // is the pre-round running max here, which is safe because the only
+        // g_inf consumer is the Theorem-2 θ policy this runtime refuses at
+        // construction.
+        let pre_send =
+            spec.pipeline && engine.send_phase() == SendPhase::PreGradient;
+        let mut sent: Option<(Frame, f64)> = None;
+        if pre_send {
+            let ctx = StepCtx { seed, rho: ep.rho, g_inf };
+            sent = Some(send_round_frame(
+                i,
+                engine.as_mut(),
+                transport.as_mut(),
+                &x,
+                &[],
+                lr,
+                round,
+                &ctx,
+                &mut payload,
+                &peers,
+                round >= live_from,
+                &spec,
+                &mut trace,
+            )?);
+        }
+
         // --- local gradient ------------------------------------------------
         let t0 = Instant::now();
         let loss = objective.loss_grad(i, round, &x, &mut grad);
@@ -719,31 +949,25 @@ fn run_node(
         let grad_wall = t0.elapsed().as_secs_f64();
         let ctx = StepCtx { seed, rho: ep.rho, g_inf };
 
-        // --- send half -----------------------------------------------------
-        let t1 = Instant::now();
-        payload.clear();
-        engine.node_send(i, &x, &grad, lr, round, &ctx, &mut payload);
-        let frame = Frame {
-            round,
-            sender: i as u16,
-            algo: spec.algo_id,
-            bits: spec.wire_bits,
-            kind: FrameKind::Data,
-            theta: engine.last_theta().unwrap_or(0.0) as f32,
-            payload: std::mem::take(&mut payload),
+        // --- send half (PostGradient engines, or pipelining off) ------------
+        let (frame, send_compute) = match sent.take() {
+            Some(s) => s,
+            None => send_round_frame(
+                i,
+                engine.as_mut(),
+                transport.as_mut(),
+                &x,
+                &grad,
+                lr,
+                round,
+                &ctx,
+                &mut payload,
+                &peers,
+                round >= live_from,
+                &spec,
+                &mut trace,
+            )?,
         };
-        let send_compute = t1.elapsed().as_secs_f64();
-        if round >= live_from {
-            // One broadcast call: the frame is serialized + checksummed once
-            // and the wire bytes are reused for every peer.
-            transport.broadcast(&peers, &frame).unwrap_or_else(|e| {
-                panic!("worker {i} round {round}: broadcast failed: {e}")
-            });
-        }
-        // Replayed rounds count their original (pre-crash) send exactly
-        // once: the counters that recorded it died with the old incarnation.
-        trace.frames_sent += peers.len() as u64;
-        trace.bytes_sent += peers.len() as u64 * frame.encoded_len() as u64;
 
         // --- round barrier from the frames themselves ----------------------
         got.clear();
@@ -759,23 +983,39 @@ fn run_node(
                  (log truncated outside a checkpoint?)"
             );
         }
-        let wait_start = Instant::now();
+        // One deadline for the whole barrier, computed once: each recv gets
+        // only the *remaining* time, so a trickling straggler set can no
+        // longer reset the clock per frame and stretch one "recv_timeout"
+        // barrier to peers × recv_timeout.
+        let deadline = Instant::now() + spec.recv_timeout;
         while got.len() < peers.len() {
-            let f = match transport.recv(spec.recv_timeout) {
-                Ok(f) => f,
-                Err(TransportError::Timeout) => {
+            let f = match recv_until(transport.as_mut(), deadline, spec.abort) {
+                BarrierRecv::Frame(f) => f,
+                BarrierRecv::TimedOut => {
                     let missing = missing_pairs(round, &peers, &got);
-                    panic!(
-                        "worker {i} round {round}: barrier timed out after {:.1?} \
-                         ({} of {} peer frames held) still waiting on (round, sender) \
-                         pairs {missing:?}",
-                        wait_start.elapsed(),
-                        got.len(),
-                        peers.len(),
-                    );
+                    return Err(spec.abort.trip(WorkerFailure::new(
+                        i,
+                        round,
+                        format!(
+                            "barrier timed out: exceeded the configured \
+                             recv_timeout of {:?} with {} of {} peer frames \
+                             held; still waiting on (round, sender) pairs \
+                             {missing:?}",
+                            spec.recv_timeout,
+                            got.len(),
+                            peers.len(),
+                        ),
+                    )));
                 }
-                Err(e) => {
-                    panic!("worker {i} round {round}: barrier recv failed: {e}")
+                BarrierRecv::Aborted => {
+                    return Err(spec.abort.sibling_abort(i, round));
+                }
+                BarrierRecv::Failed(e) => {
+                    return Err(spec.abort.trip(WorkerFailure::new(
+                        i,
+                        round,
+                        format!("barrier recv failed: {e}"),
+                    )));
                 }
             };
             if let Some(log) = framelog.as_mut() {
@@ -868,7 +1108,58 @@ fn run_node(
         }
         round += 1;
     }
-    NodeResult { worker: i, final_x: x, trace }
+    Ok(NodeResult { worker: i, final_x: x, trace })
+}
+
+/// The "send half" of a round: encode this worker's frame and broadcast it
+/// to every peer. Shared between the pipelined pre-gradient path (where
+/// `grad` is the empty tripwire slice) and the post-gradient path. Returns
+/// the frame (its payload buffer is recycled by the caller) and the encode
+/// wall time.
+#[allow(clippy::too_many_arguments)]
+fn send_round_frame(
+    i: usize,
+    engine: &mut dyn SyncAlgorithm,
+    transport: &mut dyn Transport,
+    x: &[f32],
+    grad: &[f32],
+    lr: f32,
+    round: u64,
+    ctx: &StepCtx,
+    payload: &mut Vec<u8>,
+    peers: &[usize],
+    live: bool,
+    spec: &NodeSpec<'_>,
+    trace: &mut NodeTrace,
+) -> Result<(Frame, f64), WorkerFailure> {
+    // lint: allow(wall_clock) — the encode timer feeds per-node perf
+    // accounting only; frame contents are unaffected.
+    let t1 = Instant::now();
+    payload.clear();
+    engine.node_send(i, x, grad, lr, round, ctx, payload);
+    let frame = Frame {
+        round,
+        sender: i as u16,
+        algo: spec.algo_id,
+        bits: spec.wire_bits,
+        kind: FrameKind::Data,
+        theta: engine.last_theta().unwrap_or(0.0) as f32,
+        payload: std::mem::take(payload),
+    };
+    let send_compute = t1.elapsed().as_secs_f64();
+    if live {
+        // One broadcast call: the frame is serialized + checksummed once
+        // and the wire bytes are reused for every peer.
+        transport.broadcast(peers, &frame).map_err(|e| {
+            spec.abort
+                .trip(WorkerFailure::new(i, round, format!("broadcast failed: {e}")))
+        })?;
+    }
+    // Replayed rounds count their original (pre-crash) send exactly
+    // once: the counters that recorded it died with the old incarnation.
+    trace.frames_sent += peers.len() as u64;
+    trace.bytes_sent += peers.len() as u64 * frame.encoded_len() as u64;
+    Ok((frame, send_compute))
 }
 
 /// Learning rate in effect entering `round` (all scheduled decays at
@@ -928,7 +1219,9 @@ fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>) {
 /// Block until this worker's bootstrap frame for `round` arrives, parking
 /// any frames that overtake it (data frames keyed by `(round, sender)`,
 /// bootstrap frames for other rounds by round). The caller validates the
-/// returned frame's sender/precision.
+/// returned frame's sender/precision. Like the round barrier, the wait
+/// runs against a single deadline of the configured `recv_timeout` —
+/// overtaking frames do not reset the clock — and honors sibling aborts.
 fn wait_for_bootstrap(
     i: usize,
     round: u64,
@@ -937,25 +1230,38 @@ fn wait_for_bootstrap(
     boot_pending: &mut BTreeMap<u64, Frame>,
     mut framelog: Option<&mut FrameLog>,
     spec: &NodeSpec<'_>,
-) -> Frame {
-    // lint: allow(wall_clock) — the wait timer only enriches the timeout
-    // panic message; frame selection is purely round/sender keyed.
-    let wait_start = Instant::now();
+) -> Result<Frame, WorkerFailure> {
+    // lint: allow(wall_clock) — the deadline only bounds the wait; frame
+    // selection is purely round/sender keyed.
+    let deadline = Instant::now() + spec.recv_timeout;
     loop {
-        let f = match transport.recv(spec.recv_timeout) {
-            Ok(f) => f,
-            Err(TransportError::Timeout) => panic!(
-                "worker {i} round {round}: timed out after {:.1?} waiting for the \
-                 round-{round} bootstrap frame",
-                wait_start.elapsed(),
-            ),
-            Err(e) => panic!("worker {i} round {round}: bootstrap recv failed: {e}"),
+        let f = match recv_until(transport.as_mut(), deadline, spec.abort) {
+            BarrierRecv::Frame(f) => f,
+            BarrierRecv::TimedOut => {
+                return Err(spec.abort.trip(WorkerFailure::new(
+                    i,
+                    round,
+                    format!(
+                        "timed out waiting for the round-{round} bootstrap \
+                         frame: exceeded the configured recv_timeout of {:?}",
+                        spec.recv_timeout,
+                    ),
+                )));
+            }
+            BarrierRecv::Aborted => return Err(spec.abort.sibling_abort(i, round)),
+            BarrierRecv::Failed(e) => {
+                return Err(spec.abort.trip(WorkerFailure::new(
+                    i,
+                    round,
+                    format!("bootstrap recv failed: {e}"),
+                )));
+            }
         };
         if let Some(log) = &mut framelog {
             log.append(&f).expect("frame log append");
         }
         match f.kind {
-            FrameKind::Bootstrap if f.round == round => return f,
+            FrameKind::Bootstrap if f.round == round => return Ok(f),
             FrameKind::Bootstrap => {
                 boot_pending.insert(f.round, f);
             }

@@ -48,7 +48,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::algorithms::{AdPsgd, AsyncVariant, StepCtx, SyncAlgorithm};
+use crate::algorithms::{AdPsgd, AsyncVariant, SendPhase, StepCtx, SyncAlgorithm};
 use crate::coordinator::{metrics::TraceRow, Report, TrainConfig};
 use crate::network::LinkMatrix;
 use crate::objectives::Objective;
@@ -284,17 +284,27 @@ pub struct DesConfig {
     pub grad_time_s: f64,
     /// Optional piecewise-constant gossip-graph schedule.
     pub topo_schedule: Option<TopologySchedule>,
+    /// Model the cluster runtime's send-early pipelining: engines whose
+    /// send half never reads the gradient ([`SendPhase::PreGradient`]) put
+    /// their frames on the uplink at round *start*, so serialization +
+    /// flight overlap the compute and a comm-bound round costs
+    /// `max(compute, comm)` instead of `compute + comm`. Timing-only — the
+    /// value path (and therefore every loss/param in the report) is
+    /// identical; gradient-consuming engines keep the strict schedule.
+    pub overlap: bool,
 }
 
 impl DesConfig {
-    /// Uniform links, no faults — the configuration under which
-    /// [`DesTrainer`] reproduces [`super::Trainer`] exactly.
+    /// Uniform links, no faults, strict (non-overlapped) send scheduling —
+    /// the configuration under which [`DesTrainer`] reproduces
+    /// [`super::Trainer`] exactly, wall-clock included.
     pub fn uniform(n: usize, net: crate::network::NetworkConfig, grad_time_s: f64) -> Self {
         DesConfig {
             links: LinkMatrix::uniform(n, net),
             faults: FaultConfig::none(),
             grad_time_s,
             topo_schedule: None,
+            overlap: false,
         }
     }
 }
@@ -531,34 +541,46 @@ impl DesTrainer {
             return barrier;
         }
 
-        // Gossip round: each ComputeDone schedules that worker's sends.
+        // Gossip round. With overlap on (and an engine whose payload never
+        // reads the gradient), every worker's frames enter the uplink at
+        // round start and stream while the compute runs — the DES mirror of
+        // the cluster runtime's send-early pipelining. Otherwise each
+        // ComputeDone schedules that worker's sends (strict order). The
+        // per-(round, src, dst) RNG streams are keyed, not order-dependent,
+        // so both modes sample identical attempts/delays and the overlap
+        // barrier is pointwise ≤ the strict one.
+        let overlap =
+            self.des.overlap && self.engine.send_phase() == SendPhase::PreGradient;
         let mut pending_compute = n;
         let mut pending_msgs = 0usize;
         let mut barrier = start;
+        if overlap {
+            for i in 0..n {
+                pending_msgs += self.schedule_gossip_sends(
+                    queue,
+                    start,
+                    round,
+                    i,
+                    &adj[i],
+                    stats.bytes_per_msg,
+                );
+            }
+        }
         while pending_compute > 0 || pending_msgs > 0 {
             let (t, ev) = queue.pop().expect("round events");
             barrier = barrier.max(t);
             match ev {
                 Event::ComputeDone { worker: i } => {
                     pending_compute -= 1;
-                    // Consecutive sends occupy the uplink serially, in
-                    // neighbor order; each then flies with its own latency.
-                    let mut busy = t;
-                    for &j in &adj[i] {
-                        let ser =
-                            self.des.links.serialization_time(i, j, stats.bytes_per_msg);
-                        busy += ser;
-                        let link = self.des.links.link(i, j);
-                        let mut rng = msg_rng(seed, round, i, j, 0);
-                        let attempts = faults.sample_attempts(&mut rng);
-                        let arrival = busy
-                            + link.latency_s
-                            + attempts as f64 * (ser + link.latency_s)
-                            + faults.sample_delay(&mut rng);
-                        self.messages_sent += 1 + attempts;
-                        self.messages_dropped += attempts;
-                        queue.push(arrival, Event::MsgArrive { src: i, dst: j });
-                        pending_msgs += 1;
+                    if !overlap {
+                        pending_msgs += self.schedule_gossip_sends(
+                            queue,
+                            t,
+                            round,
+                            i,
+                            &adj[i],
+                            stats.bytes_per_msg,
+                        );
                     }
                 }
                 Event::MsgArrive { .. } => pending_msgs -= 1,
@@ -567,6 +589,39 @@ impl DesTrainer {
         }
         debug_assert!(queue.is_empty());
         barrier
+    }
+
+    /// Schedule worker `i`'s gossip sends starting at `from`: consecutive
+    /// sends occupy the uplink serially, in neighbor order; each then flies
+    /// with its own latency (drops retransmit, delays defer). Returns the
+    /// number of messages put in flight.
+    fn schedule_gossip_sends(
+        &mut self,
+        queue: &mut EventQueue,
+        from: f64,
+        round: u64,
+        i: usize,
+        neighbors: &[usize],
+        bytes_per_msg: usize,
+    ) -> usize {
+        let seed = self.cfg.seed;
+        let faults = self.des.faults;
+        let mut busy = from;
+        for &j in neighbors {
+            let ser = self.des.links.serialization_time(i, j, bytes_per_msg);
+            busy += ser;
+            let link = self.des.links.link(i, j);
+            let mut rng = msg_rng(seed, round, i, j, 0);
+            let attempts = faults.sample_attempts(&mut rng);
+            let arrival = busy
+                + link.latency_s
+                + attempts as f64 * (ser + link.latency_s)
+                + faults.sample_delay(&mut rng);
+            self.messages_sent += 1 + attempts;
+            self.messages_dropped += attempts;
+            queue.push(arrival, Event::MsgArrive { src: i, dst: j });
+        }
+        neighbors.len()
     }
 }
 
@@ -818,6 +873,51 @@ mod tests {
     }
 
     #[test]
+    fn overlap_hides_comm_under_compute_without_touching_values() {
+        // Comm-bound config (low bandwidth, small compute): with overlap, a
+        // gradient-independent engine's round costs max(compute, comm)
+        // instead of compute + comm, and the value path is bitwise
+        // untouched either way.
+        let net = NetworkConfig::new(1e6, 2e-3);
+        let steps = 7u64;
+        let run = |overlap: bool, algo: Algorithm| {
+            let des = DesConfig { overlap, ..DesConfig::uniform(4, net, 1e-3) };
+            let mut t =
+                DesTrainer::new(train_cfg(algo, steps), Topology::Ring(4), small_objective(4), des);
+            t.run()
+        };
+        let strict = run(false, Algorithm::DPsgd);
+        let fast = run(true, Algorithm::DPsgd);
+        for (a, b) in strict.trace.iter().zip(&fast.trace) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.eval_loss.to_bits(), b.eval_loss.to_bits());
+        }
+        assert_eq!(
+            strict.final_params.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            fast.final_params.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Closed form: zero-fault uniform rounds cost exactly
+        // max(compute, comm) overlapped vs compute + comm strict.
+        let d_bytes = small_objective(4).dim() * 4;
+        let comm = net.gossip_round_time(2, d_bytes);
+        let want_fast = steps as f64 * f64::max(1e-3, comm);
+        let want_strict = steps as f64 * (1e-3 + comm);
+        let got_fast = fast.final_sim_time();
+        let got_strict = strict.final_sim_time();
+        assert!((got_fast - want_fast).abs() < 1e-9 * want_fast, "got {got_fast} want {want_fast}");
+        assert!((got_strict - want_strict).abs() < 1e-9 * want_strict);
+        assert!(got_fast < got_strict, "comm-bound overlap must beat strict");
+
+        // Gradient-consuming engines (PostGradient send phase) must ignore
+        // the overlap flag entirely: same clock with it on or off.
+        let choco =
+            || Algorithm::Choco { quant: QuantConfig::stochastic(8), range: 4.0, gamma: 0.5 };
+        let a = run(false, choco());
+        let b = run(true, choco());
+        assert_eq!(a.final_sim_time().to_bits(), b.final_sim_time().to_bits());
+    }
+
+    #[test]
     fn des_trajectory_matches_trainer_bitwise() {
         let algo = Algorithm::Moniqua {
             theta: ThetaPolicy::Constant(2.0),
@@ -836,6 +936,7 @@ mod tests {
             faults: FaultConfig { drop_prob: 0.2, straggler: 0.4, ..Default::default() },
             grad_time_s: 1e-3,
             topo_schedule: None,
+            overlap: false,
         };
         let mut dt = DesTrainer::new(train_cfg(algo, 30), Topology::Ring(4), small_objective(4), des);
         let r_des = dt.run();

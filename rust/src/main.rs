@@ -170,6 +170,9 @@ fn des_config(cfg: &Config, workers: usize) -> Result<DesConfig> {
         faults: cfg.faults()?,
         grad_time_s: cfg.f64_or("grad_time_ms", 5.0)? * 1e-3,
         topo_schedule: cfg.topo_schedule()?,
+        // Mirrors the cluster runtime's `pipeline` default in wall-clock
+        // modeling: gradient-independent sends stream under the compute.
+        overlap: cfg.bool_or("overlap", true)?,
     })
 }
 

@@ -26,6 +26,19 @@
 //!   blob; the DES/lockstep trainers need no arena — their former per-eval
 //!   allocation was removed by making `linalg::mean_into` generic).
 //!
+//! ## Pool depth under pipelined rounds
+//!
+//! The cluster runtime's send-early pipelining (`coordinator::cluster`,
+//! §Pipelined rounds) does not deepen the pool's steady-state working set:
+//! a peer can still run at most **one** round ahead (its round-k+1 frame
+//! needs its round-k mix, which needs our round-k frame), so at most two
+//! rounds of frames are ever in flight toward one receiver — the same
+//! bound the strict schedule already had from frame parking. The
+//! alloc-discipline suite runs with pipelining at its default (on) and
+//! still sees zero steady-state allocations. [`FramePool::prewarm`] lets a
+//! caller pay the working set up front when even warm-up allocations are
+//! unwelcome.
+//!
 //! ## Why pooling preserves bitwise determinism
 //!
 //! A checked-out buffer is always `clear()`ed (length 0) before reuse and
@@ -85,6 +98,17 @@ impl FramePool {
     /// Buffers currently parked in the pool (diagnostics/tests).
     pub fn pooled(&self) -> usize {
         self.locked().len()
+    }
+
+    /// Seed the pool with `count` buffers of `capacity` bytes each, capped
+    /// at [`MAX_POOLED`]. Callers that know their working set (e.g. two
+    /// rounds of frames in flight per peer under the pipelined scheduler)
+    /// can move even the warm-up allocations out of the round loop.
+    pub fn prewarm(&self, count: usize, capacity: usize) {
+        let mut g = self.locked();
+        while g.len() < count.min(MAX_POOLED) {
+            g.push(Vec::with_capacity(capacity));
+        }
     }
 }
 
@@ -148,6 +172,23 @@ mod tests {
         for _ in 0..(MAX_POOLED + 50) {
             pool.give(Vec::with_capacity(8));
         }
+        assert_eq!(pool.pooled(), MAX_POOLED);
+    }
+
+    #[test]
+    fn prewarm_seeds_capacity_up_to_the_cap() {
+        let pool = FramePool::new();
+        pool.prewarm(8, 1024);
+        assert_eq!(pool.pooled(), 8);
+        for _ in 0..8 {
+            assert!(pool.take().capacity() >= 1024, "prewarmed capacity");
+        }
+        assert_eq!(pool.pooled(), 0);
+        // Idempotent up to `count`, and never past the backstop.
+        pool.prewarm(4, 64);
+        pool.prewarm(4, 64);
+        assert_eq!(pool.pooled(), 4);
+        pool.prewarm(MAX_POOLED + 100, 1);
         assert_eq!(pool.pooled(), MAX_POOLED);
     }
 

@@ -57,16 +57,37 @@ pub fn delta_adpsgd(t_mix: f64) -> f64 {
     1.0 / (64.0 * t_mix + 2.0)
 }
 
+/// Modulus of the dominant root of D²'s per-eigenvalue recursion
+/// `z² − 2λz + λ = 0` (supplementary Lemma 12). The roots are
+/// `λ ± sqrt(λ² − λ)`; for `λ ∈ (0, 1)` the radicand is negative, so the
+/// pair is complex-conjugate and — because the product of the roots is the
+/// constant term λ — both have modulus `sqrt(λ)`. Outside that interval the
+/// roots are real and the larger magnitude is `|λ| + sqrt(λ² − λ)`.
+/// Boundary check: `λ = −1/3` gives modulus exactly 1, matching D²'s
+/// `λn > −1/3` convergence requirement.
+fn d2_root_modulus(lambda: f64) -> f64 {
+    let rad = lambda * lambda - lambda;
+    if rad >= 0.0 {
+        lambda.abs() + rad.sqrt()
+    } else {
+        lambda.sqrt()
+    }
+}
+
 /// Supplementary Lemma 12's D1/D2 constants from W's extreme eigenvalues.
+/// `vn` is the dominant-root modulus of the recursion at `λn`, taken from
+/// the correct complex/real branch ([`d2_root_modulus`]) — the naive
+/// `λ − sqrt(λ² − λ)` form is NaN for `λn ∈ (0, 1)` (lazy / PSD gossip
+/// matrices) and used to silently poison θ/δ for Moniqua-on-D².
 pub fn d2_constants(lambda2: f64, lambda_n: f64) -> (f64, f64) {
-    let vn = lambda_n - (lambda_n * lambda_n - lambda_n).sqrt();
+    let vn = d2_root_modulus(lambda_n);
     let d1 = f64::max(
-        vn.abs() + 2.0 * lambda_n.abs() / (1.0 - vn.abs()).max(1e-9),
+        vn + 2.0 * lambda_n.abs() / (1.0 - vn).max(1e-9),
         (lambda2 / (1.0 - lambda2).max(1e-9)).max(0.0).sqrt()
             + 2.0 * lambda2 / (1.0 - lambda2).max(1e-9),
     );
     let d2 = f64::max(
-        2.0 / (1.0 - vn.abs()).max(1e-9),
+        2.0 / (1.0 - vn).max(1e-9),
         2.0 / (1.0 - lambda2).max(1e-9).sqrt(),
     );
     (d1, d2)
@@ -161,6 +182,49 @@ mod tests {
         let theta = theta_d2(0.1, 1.0, 8, d1);
         let delta = delta_d2(8, d2);
         assert!(theta > 0.0 && delta > 0.0 && delta < 0.5);
+    }
+
+    #[test]
+    fn d2_root_modulus_branches() {
+        // Complex pair for λ ∈ (0, 1): modulus sqrt(λ) (product of roots).
+        assert!((d2_root_modulus(0.25) - 0.5).abs() < 1e-12);
+        // Real branch: |λ| + sqrt(λ² − λ).
+        assert!((d2_root_modulus(-0.2) - (0.2 + 0.24f64.sqrt())).abs() < 1e-12);
+        // λ = −1/3 sits exactly on the unit circle — D²'s λn > −1/3 wall.
+        assert!((d2_root_modulus(-1.0 / 3.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn d2_constants_finite_positive_over_eigenvalue_grid() {
+        // Regression for the NaN radicand: λn ∈ (0, 1) (lazy / PSD gossip
+        // matrices) used to poison d1 → theta_d2/delta_d2 with NaN. Sweep
+        // both signs of both eigenvalues (λn ≤ λ2 < 1 for a gossip matrix).
+        for &lambda2 in &[-0.2, 0.1, 0.5, 0.9] {
+            for &lambda_n in &[-0.3, -0.1, 0.05, 0.3, 0.7, 0.95] {
+                if lambda_n > lambda2 {
+                    continue;
+                }
+                let (d1, d2) = d2_constants(lambda2, lambda_n);
+                assert!(
+                    d1.is_finite() && d1 > 0.0,
+                    "d1={d1} at λ2={lambda2} λn={lambda_n}"
+                );
+                assert!(
+                    d2.is_finite() && d2 > 0.0,
+                    "d2={d2} at λ2={lambda2} λn={lambda_n}"
+                );
+                let theta = theta_d2(0.1, 1.0, 8, d1);
+                let delta = delta_d2(8, d2);
+                assert!(
+                    theta.is_finite() && theta > 0.0,
+                    "θ={theta} at λ2={lambda2} λn={lambda_n}"
+                );
+                assert!(
+                    delta.is_finite() && delta > 0.0 && delta < 0.5,
+                    "δ={delta} at λ2={lambda2} λn={lambda_n}"
+                );
+            }
+        }
     }
 
     #[test]

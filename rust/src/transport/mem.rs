@@ -118,6 +118,19 @@ impl MemTransport {
             .collect()
     }
 
+    /// As [`Self::cluster`], with the shared pool prewarmed for
+    /// `frame_capacity`-byte wire buffers. The working set is two rounds of
+    /// frames in flight per directed peer pair — the pipelined scheduler's
+    /// bound (a peer runs at most one round ahead; see `mem` module docs) —
+    /// so even the warm-up rounds allocate nothing.
+    pub fn cluster_prewarmed(n: usize, frame_capacity: usize) -> Vec<MemTransport> {
+        let eps = Self::cluster(n);
+        eps[0]
+            .pool
+            .prewarm(2 * n * n.saturating_sub(1), frame_capacity);
+        eps
+    }
+
     /// The cluster-shared wire buffer pool (tests assert recycling works).
     pub fn pool(&self) -> &FramePool {
         &self.pool

@@ -108,6 +108,146 @@ fn run_rounds(
     }
 }
 
+/// One node's send half: encode, build the frame, broadcast, reclaim the
+/// payload buffer. Factored out so the pipelined schedule below can issue
+/// a node's round-r+1 frame while its peers still hold round r in flight.
+#[allow(clippy::too_many_arguments)]
+fn node_broadcast(
+    algo_id: u16,
+    engine: &mut dyn SyncAlgorithm,
+    transport: &mut MemTransport,
+    i: usize,
+    x: &[f32],
+    grad: &[f32],
+    payload: &mut Vec<u8>,
+    peers: &[usize],
+    ctx: &StepCtx,
+    round: u64,
+) {
+    payload.clear();
+    engine.node_send(i, x, grad, 0.05, round, ctx, payload);
+    let frame = Frame {
+        round,
+        sender: i as u16,
+        algo: algo_id,
+        bits: 8,
+        kind: FrameKind::Data,
+        theta: engine.last_theta().unwrap_or(0.0) as f32,
+        payload: std::mem::take(payload),
+    };
+    transport.broadcast(peers, &frame).expect("broadcast");
+    *payload = frame.payload;
+}
+
+/// The pipelined (double-buffered) schedule of DESIGN.md §Pipelining:
+/// each node finishes round r and immediately broadcasts round r+1 —
+/// before the *next* node has drained its round-r barrier — so every
+/// queue holds two rounds of live payload buffers at once, the deepest
+/// frame-pool working set the ClusterTrainer pipeline can produce (a
+/// peer runs at most one round ahead). Per-node call order is exactly
+/// the real scheduler's (send r → recv r → send r+1), and the
+/// steady-state window must still allocate and free nothing with both
+/// rounds in flight.
+fn check_algo_pipelined(algo: Algorithm) {
+    const N: usize = 4;
+    const D: usize = 256;
+    const WARMUP: u64 = 2;
+    const WINDOW: u64 = 8;
+    const LAST: u64 = WARMUP + WINDOW;
+
+    let topo = Topology::Ring(N);
+    let w = topo.comm_matrix();
+    let rho = w.rho();
+    let peers: Vec<Vec<usize>> = topo.adjacency();
+    let mut engines: Vec<Box<dyn SyncAlgorithm>> =
+        (0..N).map(|_| algo.make_sync(&w, D)).collect();
+    for e in engines.iter_mut() {
+        e.set_threads(1);
+    }
+    let mut transports = MemTransport::cluster(N);
+    let mut xs: Vec<Vec<f32>> = (0..N)
+        .map(|i| (0..D).map(|k| 0.3 + 0.001 * ((i + k) % 13) as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = (0..N).map(|_| vec![0.01f32; D]).collect();
+    let mut payloads: Vec<Vec<u8>> = (0..N).map(|_| Vec::new()).collect();
+    let mut gots: Vec<Vec<Frame>> = (0..N).map(|_| Vec::new()).collect();
+    let mut parked: Vec<Vec<Frame>> = (0..N).map(|_| Vec::new()).collect();
+    let ctx = StepCtx { seed: 7, rho, g_inf: 1.0 };
+    let algo_id = algo_wire_id(algo.name());
+
+    let mut allocs_before = 0;
+    let mut deallocs_before = 0;
+    // Prime the pipeline: every node's round-0 frame is on the wire before
+    // any round-0 barrier opens (the PreGradient send-at-round-entry).
+    for i in 0..N {
+        node_broadcast(
+            algo_id, engines[i].as_mut(), &mut transports[i], i, &xs[i], &grads[i],
+            &mut payloads[i], &peers[i], &ctx, 0,
+        );
+    }
+    for round in 0..LAST {
+        if round == WARMUP {
+            allocs_before = ALLOCS.load(Ordering::SeqCst);
+            deallocs_before = DEALLOCS.load(Ordering::SeqCst);
+        }
+        for i in 0..N {
+            let got = &mut gots[i];
+            got.clear();
+            // Adopt anything an earlier barrier parked for this round
+            // (swap_remove: in-place, allocation-free), then drain the
+            // queue, parking overtaking round-r+1 frames.
+            let mut k = 0;
+            while k < parked[i].len() {
+                if parked[i][k].round == round {
+                    got.push(parked[i].swap_remove(k));
+                } else {
+                    k += 1;
+                }
+            }
+            while got.len() < peers[i].len() {
+                let f = transports[i].recv(RECV).expect("barrier recv");
+                if f.round == round {
+                    got.push(f);
+                } else {
+                    parked[i].push(f);
+                }
+            }
+            got.sort_unstable_by_key(|f| f.sender);
+            {
+                let inbox = Inbox::from_frames(got);
+                engines[i].node_recv(i, &mut xs[i], &grads[i], 0.05, round, &ctx, &inbox);
+            }
+            for f in got.drain(..) {
+                transports[i].recycle(f.payload);
+            }
+            // Node i enters round r+1 and sends while later nodes are
+            // still draining round r: two rounds in flight on their
+            // queues.
+            if round + 1 < LAST {
+                node_broadcast(
+                    algo_id, engines[i].as_mut(), &mut transports[i], i, &xs[i],
+                    &grads[i], &mut payloads[i], &peers[i], &ctx, round + 1,
+                );
+            }
+        }
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - allocs_before;
+    let deallocs = DEALLOCS.load(Ordering::SeqCst) - deallocs_before;
+    assert_eq!(
+        allocs, 0,
+        "{} (pipelined): {allocs} heap allocations across the two-in-flight \
+         steady-state window (budget: 0 after {WARMUP} warm-up rounds)",
+        algo.name()
+    );
+    assert_eq!(
+        deallocs, 0,
+        "{} (pipelined): {deallocs} heap frees across the two-in-flight \
+         steady-state window — a parked or pooled buffer is being dropped",
+        algo.name()
+    );
+    assert!(xs[0].iter().all(|v| v.is_finite()));
+}
+
 fn check_algo(algo: Algorithm) {
     const N: usize = 4;
     const D: usize = 256;
@@ -176,6 +316,19 @@ fn steady_state_rounds_allocate_nothing() {
     });
     check_algo(Algorithm::DPsgd);
     check_algo(Algorithm::Choco {
+        quant: QuantConfig::stochastic(8),
+        range: 4.0,
+        gamma: 0.5,
+    });
+    // Double-buffered schedule: the same zero budget must hold with two
+    // rounds of frames in flight (DESIGN.md §Pipelining) for the engines
+    // that pre-send (the PreGradient set) and one that doesn't.
+    check_algo_pipelined(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    });
+    check_algo_pipelined(Algorithm::DPsgd);
+    check_algo_pipelined(Algorithm::Choco {
         quant: QuantConfig::stochastic(8),
         range: 4.0,
         gamma: 0.5,

@@ -1,0 +1,175 @@
+//! Regression pins for the barrier-deadline fix and the failure-cascade
+//! contract (DESIGN.md §Pipelining, "Failure propagation").
+//!
+//! The old barrier passed the full `recv_timeout` to **every** `recv`
+//! call, so each arriving frame reset the clock: a set of stragglers
+//! trickling in at intervals just under the timeout stretched one
+//! "recv_timeout" barrier to peers × recv_timeout — and a trickle whose
+//! gaps all fit under the timeout never failed at all, however late the
+//! last frame. The fixed barrier computes **one** deadline per round and
+//! hands every recv only the remaining time, so the exact trickle that
+//! the buggy barrier survived must now fail, naming the *configured*
+//! timeout and the originating worker, and siblings must abort within
+//! one recv tick instead of burning their own full timeout.
+//!
+//! The companion test runs the same straggler objective with pipelining
+//! ON: dpsgd declares `SendPhase::PreGradient`, so every frame is on the
+//! wire *before* the slow gradient — the identical cluster that dies
+//! under strict scheduling completes under the pipelined schedule, and
+//! bitwise-matches the lockstep trainer.
+//!
+//! Wall-clock sensitive: CI runs this suite with `--test-threads=1`.
+
+use std::time::{Duration, Instant};
+
+use moniqua::algorithms::Algorithm;
+use moniqua::coordinator::{
+    ClusterConfig, ClusterTrainer, Report, TrainConfig, Trainer, TransportKind,
+};
+use moniqua::objectives::{Eval, Objective, Quadratic};
+use moniqua::topology::Topology;
+
+/// Per-worker straggler delays (ms) injected into round-0 `loss_grad`.
+///
+/// Chosen so consecutive frame arrivals at worker 0's barrier are spaced
+/// *under* `RECV_TIMEOUT` (300/600/600 ms gaps) while the last frame lands
+/// well past it (1.5 s > 0.8 s): the per-frame-reset barrier accepted this
+/// trickle; the single-deadline barrier must not.
+const DELAYS_MS: [u64; 4] = [0, 300, 900, 1500];
+const RECV_TIMEOUT: Duration = Duration::from_millis(800);
+
+/// Quadratic objective whose round-0 gradient stalls for a per-worker
+/// delay. Values are untouched — only wall-clock timing changes — so a
+/// run that completes must still bitwise-match the lockstep trainer.
+#[derive(Clone)]
+struct Straggler {
+    inner: Quadratic,
+}
+
+impl Objective for Straggler {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn init(&self) -> Vec<f32> {
+        self.inner.init()
+    }
+
+    fn loss_grad(&mut self, worker: usize, step: u64, params: &[f32], grad: &mut [f32]) -> f64 {
+        if step == 0 {
+            std::thread::sleep(Duration::from_millis(DELAYS_MS[worker]));
+        }
+        self.inner.loss_grad(worker, step, params, grad)
+    }
+
+    fn eval(&mut self, params: &[f32]) -> Eval {
+        self.inner.eval(params)
+    }
+
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn box_clone(&self) -> Box<dyn Objective> {
+        Box::new(self.clone())
+    }
+}
+
+fn quadratic() -> Quadratic {
+    Quadratic::new(8, 1.0, 0.1, 4, 3)
+}
+
+fn config() -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        steps: 1,
+        lr: 0.1,
+        decay_factor: 1.0,
+        decay_at: Vec::new(),
+        algorithm: Algorithm::DPsgd,
+        network: None,
+        grad_time_s: None,
+        eval_every: 1,
+        seed: 7,
+        threads: None,
+    }
+}
+
+fn run_stragglers(pipeline: bool) -> (anyhow::Result<Report>, Duration) {
+    let mut t = ClusterTrainer::new(
+        config(),
+        // Complete graph: worker 0's one barrier sees the full trickle.
+        Topology::Complete(4),
+        Box::new(Straggler { inner: quadratic() }),
+        ClusterConfig {
+            transport: TransportKind::Mem,
+            recv_timeout: RECV_TIMEOUT,
+            pipeline,
+            ..ClusterConfig::default()
+        },
+    )
+    .expect("cluster config accepted");
+    let start = Instant::now();
+    let result = t.run();
+    (result, start.elapsed())
+}
+
+#[test]
+fn trickling_stragglers_fail_one_deadline_not_peers_times_timeout() {
+    let (result, elapsed) = run_stragglers(false);
+    let err = result.expect_err(
+        "per-frame gaps under recv_timeout but total past it must fail the \
+         barrier (the per-frame clock reset accepted this trickle)",
+    );
+    let msg = format!("{err}");
+
+    // The originating failure is worker 0's: the only fast worker, whose
+    // round-0 barrier deadline (0.8 s) expires before the 0.9 s frame.
+    assert!(
+        msg.contains("cluster run failed at worker 0 round 0"),
+        "error must name the originating worker and round: {msg}"
+    );
+    assert!(msg.contains("barrier timed out"), "error must say what expired: {msg}");
+    // The *configured* timeout — not the dwindling per-recv remainder the
+    // last recv call happened to get.
+    assert!(
+        msg.contains("exceeded the configured recv_timeout of 800ms"),
+        "error must report the configured timeout verbatim: {msg}"
+    );
+    // Worker 1 (asleep only 0.3 s) is parked in its own barrier when the
+    // latch trips at 0.8 s and must come back as a sibling abort, not a
+    // second full-timeout expiry.
+    assert!(
+        msg.contains("aborted within one recv tick"),
+        "siblings must abort off the latch, not burn their own timeout: {msg}"
+    );
+
+    // One deadline, not peers × timeout: the run ends once the slowest
+    // sleeper (1.5 s) wakes and hits the tripped latch. Generous bound —
+    // the buggy accumulation (3 peers × 0.8 s past the last sleep) would
+    // more than double it.
+    assert!(
+        elapsed < Duration::from_secs(4),
+        "failed run took {elapsed:?}; deadline accumulated per frame?"
+    );
+}
+
+#[test]
+fn pipelining_streams_frames_under_the_straggling_gradient() {
+    // Same stragglers, same 0.8 s timeout — but with the pipelined
+    // schedule dpsgd's frames leave before loss_grad sleeps, so every
+    // barrier is already satisfied when it opens.
+    let (result, elapsed) = run_stragglers(true);
+    let report = result.expect("pre-sent frames must satisfy the barrier despite slow gradients");
+    assert!(
+        elapsed < Duration::from_secs(4),
+        "pipelined run took {elapsed:?}; frames were not pre-sent?"
+    );
+
+    // The sleeps change timing only: the delayed pipelined cluster still
+    // bitwise-matches the lockstep trainer on the undelayed objective.
+    let want = Trainer::new(config(), Topology::Complete(4), Box::new(quadratic())).run();
+    let got_bits: Vec<u32> = report.final_params.iter().map(|v| v.to_bits()).collect();
+    let want_bits: Vec<u32> = want.final_params.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got_bits, want_bits, "straggler sleeps perturbed the trained model");
+}

@@ -114,6 +114,21 @@ fn run_cluster(algorithm: Algorithm, transport: TransportKind) -> Report {
     t.run().expect("cluster run")
 }
 
+fn run_cluster_scheduled(
+    algorithm: Algorithm,
+    transport: TransportKind,
+    pipeline: bool,
+) -> Report {
+    let mut t = ClusterTrainer::new(
+        config(algorithm),
+        Topology::Ring(4),
+        objective(),
+        ClusterConfig { transport, pipeline, ..ClusterConfig::default() },
+    )
+    .expect("cluster config accepted");
+    t.run().expect("cluster run")
+}
+
 #[test]
 fn mem_cluster_bitwise_matches_lockstep_for_all_algorithms() {
     for (name, algorithm) in algorithms() {
@@ -130,6 +145,37 @@ fn tcp_cluster_bitwise_matches_lockstep_for_all_algorithms() {
         let got =
             fingerprint(&run_cluster(algorithm, TransportKind::Tcp { port_base: 0 }));
         assert_eq!(got, want, "{name}: tcp cluster diverged from lockstep trainer");
+    }
+}
+
+#[test]
+fn pipelined_and_strict_scheduling_agree_with_lockstep_on_mem_and_tcp() {
+    // The send-early pipelined schedule (frames broadcast before the
+    // gradient for gradient-independent engines) and the strict schedule
+    // must be mutually bitwise-identical AND identical to the lockstep
+    // trainer. moniqua/dpsgd exercise the PreGradient path; choco pins
+    // that a PostGradient engine is untouched by the pipeline flag.
+    let q8 = QuantConfig::stochastic(8);
+    let cases: Vec<(&str, Algorithm)> = vec![
+        ("moniqua", Algorithm::Moniqua { theta: ThetaPolicy::Constant(2.0), quant: q8 }),
+        ("dpsgd", Algorithm::DPsgd),
+        ("choco", Algorithm::Choco { quant: q8, range: 4.0, gamma: 0.5 }),
+    ];
+    for (name, algorithm) in cases {
+        let want = fingerprint(&run_lockstep(algorithm.clone()));
+        for transport in [TransportKind::Mem, TransportKind::Tcp { port_base: 0 }] {
+            for pipeline in [true, false] {
+                let got = fingerprint(&run_cluster_scheduled(
+                    algorithm.clone(),
+                    transport,
+                    pipeline,
+                ));
+                assert_eq!(
+                    got, want,
+                    "{name} on {transport:?} (pipeline={pipeline}) diverged from lockstep"
+                );
+            }
+        }
     }
 }
 

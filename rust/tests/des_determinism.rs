@@ -137,6 +137,7 @@ fn des_event_order_and_model_identical_at_any_thread_width() {
         },
         grad_time_s: 1e-3,
         topo_schedule: None,
+        overlap: false,
     };
     let run = |threads: Option<usize>| {
         let mut t = DesTrainer::new(
@@ -198,6 +199,7 @@ fn des_faults_never_change_synchronous_values() {
             },
             grad_time_s: 2e-3,
             topo_schedule: None,
+            overlap: false,
         },
     );
     let r = des.run();
