@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 use crate::algorithms::{Algorithm, ThetaPolicy};
-use crate::coordinator::cluster::{ClusterConfig, TransportKind};
+use crate::coordinator::cluster::{ClusterConfig, DriverKind, TransportKind};
 use crate::coordinator::des::FaultConfig;
 use crate::elastic::{ElasticConfig, MembershipPlan};
 use crate::data::partition::Partition;
@@ -265,8 +265,10 @@ impl Config {
     /// Cluster-runtime config from `transport=mem|tcp`, `port_base`
     /// (0 = OS ephemeral ports, collision-safe), `recv_timeout_ms`,
     /// `pipeline=true|false` (send-early round pipelining; on by default,
-    /// bitwise value-equivalent to the strict schedule), plus the elastic
-    /// keys (see [`Self::elastic`]).
+    /// bitwise value-equivalent to the strict schedule), and
+    /// `reactor_threads=N` (readiness-loop driver threads; only consulted
+    /// when `runtime=reactor`, 0 = one per core), plus the elastic keys
+    /// (see [`Self::elastic`]).
     pub fn cluster(&self) -> Result<ClusterConfig> {
         let transport = match self.str_or("transport", "mem") {
             "mem" => TransportKind::Mem,
@@ -279,6 +281,12 @@ impl Config {
             }
             other => anyhow::bail!("unknown transport '{other}' (mem|tcp)"),
         };
+        let driver = if self.str_or("runtime", "sync") == "reactor" {
+            let threads = self.u64_or("reactor_threads", 0)? as usize;
+            DriverKind::Reactor { threads }
+        } else {
+            DriverKind::Threaded
+        };
         Ok(ClusterConfig {
             transport,
             recv_timeout: std::time::Duration::from_millis(
@@ -286,6 +294,7 @@ impl Config {
             ),
             elastic: self.elastic()?,
             pipeline: self.bool_or("pipeline", true)?,
+            driver,
         })
     }
 
@@ -428,6 +437,7 @@ mod tests {
         assert_eq!(c.recv_timeout.as_millis(), 30_000);
         assert!(c.elastic.is_none());
         assert!(c.pipeline, "send-early pipelining is on by default");
+        assert_eq!(c.driver, DriverKind::Threaded);
 
         let cfg = Config::from_str_cfg(
             "transport=tcp\nport_base=9000\nrecv_timeout_ms=500\npipeline=false",
@@ -437,6 +447,12 @@ mod tests {
         assert_eq!(c.transport, TransportKind::Tcp { port_base: 9000 });
         assert_eq!(c.recv_timeout.as_millis(), 500);
         assert!(!c.pipeline);
+
+        let cfg =
+            Config::from_str_cfg("runtime=reactor\nreactor_threads=3").unwrap();
+        assert_eq!(cfg.cluster().unwrap().driver, DriverKind::Reactor { threads: 3 });
+        let cfg = Config::from_str_cfg("runtime=reactor").unwrap();
+        assert_eq!(cfg.cluster().unwrap().driver, DriverKind::Reactor { threads: 0 });
 
         assert!(Config::from_str_cfg("transport=carrier-pigeon")
             .unwrap()

@@ -1,51 +1,67 @@
-//! The cluster runtime: one OS thread per worker, communicating
-//! **exclusively** through a [`Transport`] — the first runtime in the repo
-//! where neighbor models exist only as wire bytes.
+//! The cluster runtime: workers communicating **exclusively** through a
+//! [`Transport`] — the first runtime in the repo where neighbor models
+//! exist only as wire bytes.
 //!
 //! ## Structure
 //!
-//! Every worker thread owns its model, its gradient buffer, its RNG
-//! streams (implicit in the per-`(seed, round, worker)` keying), and one
-//! transport endpoint. A synchronous round is:
+//! Every worker owns its model, its gradient buffer, its RNG streams
+//! (implicit in the per-`(seed, round, worker)` keying), and one transport
+//! endpoint. A synchronous round is:
 //!
 //! 1. local gradient (`Objective::loss_grad` on this worker's shard);
 //! 2. [`SyncAlgorithm::node_send`] — serialize this worker's payload —
-//!    then one [`Frame`] per peer through the transport;
+//!    then one [`Frame`](crate::transport::Frame) per peer through the
+//!    transport;
 //! 3. a **round barrier built from the frames themselves**: the worker
-//!    blocks in `recv` until it holds a round-`k` frame from every peer
-//!    (frames from workers running ahead are parked in a pending map);
+//!    waits until it holds a round-`k` frame from every peer (frames from
+//!    workers running ahead are parked in a pending map);
 //! 4. [`SyncAlgorithm::node_recv`] — integrate the inbox, finish the
 //!    round.
+//!
+//! The whole per-worker protocol lives in
+//! [`RoundStateMachine`](super::round::RoundStateMachine) (`round.rs`),
+//! which is runtime-agnostic. Two drivers advance it:
+//!
+//! * [`DriverKind::Threaded`] — one OS thread per worker, blocking in
+//!   `recv` between state-machine steps (this module's [`run_node`]);
+//! * [`DriverKind::Reactor`] — a readiness loop
+//!   ([`super::reactor`]) multiplexing hundreds-to-thousands of workers
+//!   onto a small pool of driver threads over nonblocking transports.
+//!
+//! Both produce bitwise-identical runs; `tests/reactor_equivalence.rs`
+//! pins reactor ≡ threaded ≡ lockstep.
 //!
 //! ## Pipelined rounds
 //!
 //! With [`ClusterConfig::pipeline`] (the default), step 2 moves to *round
 //! entry* for engines whose send half never reads the gradient
-//! ([`SendPhase::PreGradient`]): the frame is encoded from `x` alone and
-//! broadcast before `loss_grad` runs, so the wire drains **under** the
-//! compute and a comm-bound round costs `max(compute, comm) + mix`
-//! instead of `compute + comm`. The payload bytes are identical either
-//! way — `x`, `lr`, `round`, and the RNG seed are all fixed before the
-//! gradient, and the one `StepCtx` field that is not (`g_inf`) feeds only
-//! the Theorem-2 θ policy this runtime refuses — so the bitwise contract
-//! below is untouched (`tests/cluster_equivalence.rs` pins the pipelined
-//! and strict schedules against the lockstep trainer). Gradient-consuming
-//! engines ([`SendPhase::PostGradient`]) keep the strict order under the
-//! same scheduler. `rust/DESIGN.md` §Pipelining has the full state machine
-//! and the WAL/checkpoint interaction.
+//! ([`SendPhase::PreGradient`](crate::algorithms::SendPhase)): the frame
+//! is encoded from `x` alone and broadcast before `loss_grad` runs, so the
+//! wire drains **under** the compute and a comm-bound round costs
+//! `max(compute, comm) + mix` instead of `compute + comm`. The payload
+//! bytes are identical either way — `x`, `lr`, `round`, and the RNG seed
+//! are all fixed before the gradient, and the one `StepCtx` field that is
+//! not (`g_inf`) feeds only the Theorem-2 θ policy this runtime refuses —
+//! so the bitwise contract below is untouched
+//! (`tests/cluster_equivalence.rs` pins the pipelined and strict schedules
+//! against the lockstep trainer). Gradient-consuming engines keep the
+//! strict order under the same scheduler. `rust/DESIGN.md` §Pipelining has
+//! the full state machine and the WAL/checkpoint interaction.
 //!
 //! ## Failure propagation
 //!
 //! A worker that cannot complete a round — its barrier deadline expires,
 //! or the transport fails under it — does not panic: it records a typed
 //! [`WorkerFailure`] on the cluster's shared abort latch and returns it.
-//! Sibling workers poll the latch once per recv tick
-//! ([`ABORT_POLL_TICK`]), so they abort within one tick instead of each
-//! burning its own full `recv_timeout` and dying with a misleading
-//! "missing frames" message. [`ClusterTrainer::run`] surfaces the
-//! *originating* worker (the first to trip the latch) in its error.
-//! Protocol violations (corrupt frames, cross-algorithm traffic, replay
-//! holes) still panic — those are bugs, not cluster wedges.
+//! Sibling workers poll the latch once per recv tick (threaded driver) or
+//! are woken directly through the latch's wake tokens (reactor), so they
+//! abort within one tick/poll-iteration instead of each burning its own
+//! full `recv_timeout` and dying with a misleading "missing frames"
+//! message. [`ClusterTrainer::run`] surfaces the *originating* worker (the
+//! first to trip the latch) in its error, and keeps every per-worker
+//! failure in [`ClusterTrainer::failures`]. Protocol violations (corrupt
+//! frames, cross-algorithm traffic, replay holes) still panic — those are
+//! bugs, not cluster wedges.
 //!
 //! ## Bitwise equivalence
 //!
@@ -64,21 +80,22 @@
 //!
 //! With an [`ElasticConfig`] the run becomes a sequence of **epochs of
 //! stable membership** separated by reconfiguration barriers
-//! ([`MembershipPlan`], `rust/DESIGN.md` §Elasticity):
+//! ([`MembershipPlan`](crate::elastic::MembershipPlan),
+//! `rust/DESIGN.md` §Elasticity):
 //!
 //! * **crash@r:w** — worker `w` loses all in-memory state at the start of
-//!   round `r`, restores its last [`Snapshot`] from `ckpt_dir`, replays the
-//!   rounds in between against its [`FrameLog`] (no retransmissions, no
+//!   round `r`, restores its last snapshot from `ckpt_dir`, replays the
+//!   rounds in between against its frame log (no retransmissions, no
 //!   peer involvement), and produces a **bitwise-identical** run — pinned
 //!   by `tests/elastic_equivalence.rs` against the uninterrupted lockstep
 //!   trainer for every algorithm over both transports.
 //! * **join@r:w / leave@r:w** — the gossip matrix is re-wired through
 //!   [`SyncAlgorithm::swap_matrix`] over the active cohort. A joiner first
-//!   receives one full-precision [`FrameKind::Bootstrap`] frame from its
-//!   designated neighbor and adopts that model: the modulo decode of
-//!   Lemma 1 is only exact within the θ proximity ball, which an arbitrary
-//!   model does not satisfy (the negative test shows the decode corrupting
-//!   when the bootstrap is skipped).
+//!   receives one full-precision bootstrap frame from its designated
+//!   neighbor and adopts that model: the modulo decode of Lemma 1 is only
+//!   exact within the θ proximity ball, which an arbitrary model does not
+//!   satisfy (the negative test shows the decode corrupting when the
+//!   bootstrap is skipped).
 //!
 //! Two configurations are refused because they need *global* statistics no
 //! message-passing worker can know locally: the Theorem-2 θ policy (its
@@ -86,28 +103,26 @@
 //! (the lockstep model charges worker 0's compressed length for every
 //! message). Both fail fast in [`ClusterTrainer::new`].
 
-use std::collections::BTreeMap;
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::metrics::{Report, TraceRow};
+use super::round::{
+    peers_of, recv_until, AbortLatch, BarrierRecv, MachineStatus, NodeResult, NodeSpec,
+    RoundStateMachine, WaitKey,
+};
 use super::TrainConfig;
-use crate::algorithms::{
-    Algorithm, CommScope, Inbox, SendPhase, StepCtx, SyncAlgorithm, ThetaPolicy,
-};
-use crate::elastic::membership::{epoch_at, epoch_index, ElasticConfig, Epoch};
-use crate::elastic::snapshot::{
-    load_checkpoint, write_checkpoint, FrameLog, NodeTrace, Snapshot,
-};
+use crate::algorithms::{Algorithm, SyncAlgorithm, ThetaPolicy};
+use crate::elastic::membership::{epoch_at, ElasticConfig, Epoch};
 use crate::objectives::Objective;
 use crate::topology::Topology;
 use crate::transport::{
-    algo_wire_id, Frame, FrameKind, MemTransport, TcpTransport, Transport, TransportError,
+    algo_wire_id, saturating_deadline, MemTransport, NbTcpTransport, TcpTransport,
+    Transport,
 };
+
+pub use super::round::WorkerFailure;
 
 /// Which transport implementation carries the cluster's frames.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -116,7 +131,22 @@ pub enum TransportKind {
     Mem,
     /// Localhost TCP; `port_base = 0` uses OS-assigned ephemeral ports
     /// (collision-safe), otherwise worker `i` listens on `port_base + i`.
+    /// The threaded driver uses the reader-thread [`TcpTransport`]; the
+    /// reactor uses the thread-free nonblocking [`NbTcpTransport`].
     Tcp { port_base: u16 },
+}
+
+/// Which driver advances the per-worker round machines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriverKind {
+    /// One OS thread per worker, blocking in `recv` between state-machine
+    /// steps — the runtime this module always had.
+    Threaded,
+    /// A readiness loop ([`super::reactor`]) multiplexing every worker's
+    /// round machine onto `threads` driver threads over nonblocking
+    /// transports — hundreds-to-thousands of workers per core. `threads =
+    /// 0` means one per available core (capped at the worker count).
+    Reactor { threads: usize },
 }
 
 /// Cluster-runtime knobs on top of [`TrainConfig`].
@@ -129,7 +159,8 @@ pub struct ClusterConfig {
     /// can never stretch one "30s" barrier to `peers × 30s`. A worker
     /// whose deadline expires fails the run with a typed error naming the
     /// configured timeout and the exact `(round, sender)` pairs it is
-    /// still missing.
+    /// still missing. Arbitrarily large values (`Duration::MAX` = "never")
+    /// are safe: deadlines saturate instead of overflowing.
     pub recv_timeout: Duration,
     /// Elastic membership + checkpoint/recovery plan (None = the fixed
     /// cohort the runtime always had).
@@ -140,6 +171,8 @@ pub struct ClusterConfig {
     /// value-equivalent to the strict schedule; `false` forces the strict
     /// gradient → send → barrier → mix sequence for every engine.
     pub pipeline: bool,
+    /// Which driver advances the round machines (module docs §Structure).
+    pub driver: DriverKind,
 }
 
 impl Default for ClusterConfig {
@@ -149,127 +182,9 @@ impl Default for ClusterConfig {
             recv_timeout: Duration::from_secs(30),
             elastic: None,
             pipeline: true,
+            driver: DriverKind::Threaded,
         }
     }
-}
-
-/// How often a worker blocked in a barrier/bootstrap wait wakes to poll
-/// the cluster's [`AbortLatch`]: the bound on how long a sibling outlives
-/// the originating failure.
-const ABORT_POLL_TICK: Duration = Duration::from_millis(50);
-
-/// Typed round failure a worker hands back instead of panicking: a barrier
-/// deadline expiry, a transport error, or an abort triggered by a sibling.
-/// [`ClusterTrainer::run`] joins these and names the originating worker.
-#[derive(Clone, Debug)]
-pub struct WorkerFailure {
-    pub worker: usize,
-    pub round: u64,
-    pub reason: String,
-}
-
-impl WorkerFailure {
-    fn new(worker: usize, round: u64, reason: String) -> Self {
-        WorkerFailure { worker, round, reason }
-    }
-}
-
-impl std::fmt::Display for WorkerFailure {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "worker {} round {}: {}", self.worker, self.round, self.reason)
-    }
-}
-
-/// Shared round-failure latch: the first worker to fail records itself
-/// here; every sibling's recv loop polls [`Self::tripped`] once per
-/// [`ABORT_POLL_TICK`] and aborts instead of burning its own full
-/// `recv_timeout` on frames that will never arrive.
-#[derive(Default)]
-struct AbortLatch {
-    tripped: AtomicBool,
-    origin: Mutex<Option<WorkerFailure>>,
-}
-
-impl AbortLatch {
-    fn tripped(&self) -> bool {
-        self.tripped.load(Ordering::Acquire)
-    }
-
-    /// Record `failure` as the origin if the latch is still clear; either
-    /// way the latch is tripped and `failure` is handed back so callers
-    /// can `return Err(latch.trip(f))`.
-    fn trip(&self, failure: WorkerFailure) -> WorkerFailure {
-        {
-            let mut origin = self.origin.lock().unwrap();
-            if origin.is_none() {
-                *origin = Some(failure.clone());
-            }
-        }
-        self.tripped.store(true, Ordering::Release);
-        failure
-    }
-
-    fn origin(&self) -> Option<WorkerFailure> {
-        self.origin.lock().unwrap().clone()
-    }
-
-    /// A sibling's failure for aborting out of a wait after someone else
-    /// tripped the latch.
-    fn sibling_abort(&self, worker: usize, round: u64) -> WorkerFailure {
-        let reason = match self.origin() {
-            Some(o) => format!(
-                "aborted within one recv tick: sibling worker {} failed round {}",
-                o.worker, o.round
-            ),
-            None => "aborted within one recv tick by the cluster latch".to_string(),
-        };
-        WorkerFailure::new(worker, round, reason)
-    }
-}
-
-/// One deadline-bounded, abort-aware transport wait.
-enum BarrierRecv {
-    Frame(Frame),
-    /// The caller's deadline passed without a frame.
-    TimedOut,
-    /// A sibling tripped the [`AbortLatch`]; stop waiting.
-    Aborted,
-    Failed(TransportError),
-}
-
-/// Wait for one frame until `deadline`, polling `abort` once per
-/// [`ABORT_POLL_TICK`]. The deadline is the *caller's* (computed once per
-/// barrier), so consecutive calls consume one shared budget — an arriving
-/// frame never resets the clock.
-fn recv_until(
-    transport: &mut dyn Transport,
-    deadline: Instant,
-    abort: &AbortLatch,
-) -> BarrierRecv {
-    // lint: allow(wall_clock) — deadline arithmetic gates *when* a frame is
-    // handed to the caller, never which frame or its bytes.
-    loop {
-        if abort.tripped() {
-            return BarrierRecv::Aborted;
-        }
-        let now = Instant::now();
-        if now >= deadline {
-            return BarrierRecv::TimedOut;
-        }
-        let wait = ABORT_POLL_TICK.min(deadline - now);
-        match transport.recv(wait) {
-            Ok(f) => return BarrierRecv::Frame(f),
-            Err(TransportError::Timeout) => continue,
-            Err(e) => return BarrierRecv::Failed(e),
-        }
-    }
-}
-
-/// Everything one worker thread brings home.
-struct NodeResult {
-    worker: usize,
-    final_x: Vec<f32>,
-    trace: NodeTrace,
 }
 
 /// Message-passing decentralized trainer (see module docs).
@@ -287,6 +202,11 @@ pub struct ClusterTrainer {
     /// Measured wire bytes (header + payload) of the last `run` — compare
     /// against `Report::total_bytes`, the model's payload-only prediction.
     pub wire_bytes_sent: u64,
+    /// Every typed per-worker failure of the last `run` (empty on
+    /// success): the origin plus its sibling aborts, in join order. The
+    /// `run` error names only the origin; tests and callers that need the
+    /// full picture read this.
+    pub failures: Vec<WorkerFailure>,
 }
 
 impl ClusterTrainer {
@@ -374,6 +294,7 @@ impl ClusterTrainer {
             rho,
             frames_sent: 0,
             wire_bytes_sent: 0,
+            failures: Vec::new(),
         })
     }
 
@@ -387,13 +308,14 @@ impl ClusterTrainer {
     pub fn run(&mut self) -> Result<Report> {
         let n = self.cfg.workers;
         let d = self.objective.dim();
+        self.failures.clear();
 
         let mut engines: Vec<_> = (0..n)
             .map(|_| self.cfg.algorithm.make_sync(&self.epochs[0].matrix, d))
             .collect();
         for e in engines.iter_mut() {
-            // One engine per OS thread: keep each round pool sequential so
-            // an n-node cluster doesn't oversubscribe n× the cores. The
+            // One engine per driver thread: keep each round pool sequential
+            // so the cluster doesn't oversubscribe n× the cores. The
             // engine determinism contract makes this a pure perf knob.
             e.set_threads(1);
         }
@@ -401,15 +323,43 @@ impl ClusterTrainer {
         let algo_id = algo_wire_id(self.cfg.algorithm.name());
         let wire_bits = quant_config(&self.cfg.algorithm).map_or(32, |q| q.bits as u16);
 
+        // Topology-aware pool prewarm: the steady-state working set is two
+        // rounds of frames in flight per *directed edge of the densest
+        // epoch* (pipelining keeps round k and k+1 alive at once), plus one
+        // scratch buffer per worker — on sparse graphs this is O(n·deg),
+        // not the O(n²) a dense-cohort bound would seed. `4·d` bytes covers
+        // every payload encoding (quantized codes are strictly smaller)
+        // plus header slack, so warm-up rounds draw only recycled capacity.
+        let working_set = {
+            let densest: usize = self
+                .epochs
+                .iter()
+                .map(|ep| {
+                    (0..n)
+                        .filter(|&i| ep.active[i])
+                        .map(|i| peers_of(ep, i, scope).len())
+                        .sum()
+                })
+                .max()
+                .unwrap_or(0);
+            2 * densest + n
+        };
+
+        let use_reactor = matches!(self.cluster.driver, DriverKind::Reactor { .. });
         let transports: Vec<Box<dyn Transport>> = match self.cluster.transport {
-            // Prewarm for the pipelined working set (two rounds of frames
-            // in flight per directed pair): d·4 bytes covers every payload
-            // encoding — quantized codes are strictly smaller — plus header
-            // slack, so warm-up rounds draw only recycled capacity.
-            TransportKind::Mem => MemTransport::cluster_prewarmed(n, 4 * d + 64)
+            TransportKind::Mem => MemTransport::cluster_prewarmed(n, working_set, 4 * d + 64)
                 .into_iter()
                 .map(|t| Box::new(t) as Box<dyn Transport>)
                 .collect(),
+            TransportKind::Tcp { port_base } if use_reactor => {
+                // The reactor drives transports by polling; the nonblocking
+                // endpoint carries the run with zero reader threads.
+                NbTcpTransport::cluster(n, port_base)
+                    .context("bind cluster TCP listeners")?
+                    .into_iter()
+                    .map(|t| Box::new(t) as Box<dyn Transport>)
+                    .collect()
+            }
             TransportKind::Tcp { port_base } => TcpTransport::cluster(n, port_base)
                 .context("bind cluster TCP listeners")?
                 .into_iter()
@@ -432,42 +382,75 @@ impl ClusterTrainer {
             let epochs: &[Epoch] = &self.epochs;
             let elastic_plan = self.cluster.elastic.as_ref().map(|e| &e.plan);
             let abort = &abort;
-            std::thread::scope(|s| {
-                let mut handles = Vec::with_capacity(n);
-                for (i, (engine, transport)) in
-                    engines.into_iter().zip(transports).enumerate()
-                {
-                    let spec = NodeSpec {
-                        cfg: cfg.clone(),
-                        recv_timeout,
-                        algo_id,
-                        wire_bits,
-                        scope,
-                        epochs,
-                        crashes: elastic_plan
-                            .map(|p| p.crashes_for(i))
-                            .unwrap_or_default(),
-                        ckpt_every,
-                        ckpt_dir: ckpt_dir.clone(),
-                        skip_bootstrap,
-                        pipeline,
-                        abort,
-                    };
-                    let node_obj = objective.box_clone();
-                    handles.push(s.spawn(move || {
-                        run_node(i, engine, transport, node_obj, spec)
-                    }));
-                }
-                for h in handles {
-                    match h.join() {
-                        Ok(Ok(r)) => results.push(r),
-                        Ok(Err(f)) => failures.push(f),
-                        // Protocol-violation panics stay panics: re-raise
-                        // after the scope has joined every thread.
-                        Err(p) => std::panic::resume_unwind(p),
+            let make_spec = |i: usize| NodeSpec {
+                cfg: cfg.clone(),
+                recv_timeout,
+                algo_id,
+                wire_bits,
+                scope,
+                epochs,
+                crashes: elastic_plan
+                    .map(|p| p.crashes_for(i))
+                    .unwrap_or_default(),
+                ckpt_every,
+                ckpt_dir: ckpt_dir.clone(),
+                skip_bootstrap,
+                pipeline,
+            };
+            match self.cluster.driver {
+                DriverKind::Threaded => std::thread::scope(|s| {
+                    let mut handles = Vec::with_capacity(n);
+                    for (i, (engine, transport)) in
+                        engines.into_iter().zip(transports).enumerate()
+                    {
+                        let spec = make_spec(i);
+                        let node_obj = objective.box_clone();
+                        handles.push(s.spawn(move || {
+                            run_node(i, engine, transport, node_obj, spec, abort)
+                        }));
                     }
+                    for h in handles {
+                        match h.join() {
+                            Ok(Ok(r)) => results.push(r),
+                            Ok(Err(f)) => failures.push(f),
+                            // Protocol-violation panics stay panics:
+                            // re-raise after the scope has joined every
+                            // thread.
+                            Err(p) => std::panic::resume_unwind(p),
+                        }
+                    }
+                }),
+                DriverKind::Reactor { threads } => {
+                    let workers: Vec<_> = engines
+                        .into_iter()
+                        .zip(transports)
+                        .enumerate()
+                        .map(|(i, (engine, transport))| {
+                            super::reactor::ReactorWorker::new(
+                                RoundStateMachine::new(
+                                    i,
+                                    engine,
+                                    objective.box_clone(),
+                                    make_spec(i),
+                                ),
+                                transport,
+                            )
+                        })
+                        .collect();
+                    let threads = if threads == 0 {
+                        std::thread::available_parallelism()
+                            .map(|p| p.get())
+                            .unwrap_or(1)
+                    } else {
+                        threads
+                    };
+                    let threads = threads.clamp(1, n.max(1));
+                    let (rs, fs) =
+                        super::reactor::drive(workers, threads, recv_timeout, abort);
+                    results = rs;
+                    failures = fs;
                 }
-            })
+            }
         };
         if !failures.is_empty() {
             // The originating worker is the first to have tripped the
@@ -478,6 +461,7 @@ impl ClusterTrainer {
                 .filter(|f| f.worker != origin.worker)
                 .map(|f| f.to_string())
                 .collect();
+            self.failures = failures;
             if siblings.is_empty() {
                 bail!("cluster run failed at {origin}");
             }
@@ -616,665 +600,53 @@ fn quant_config(a: &Algorithm) -> Option<crate::quant::QuantConfig> {
     }
 }
 
-/// Everything a node thread needs beyond its engine/transport/objective.
-struct NodeSpec<'a> {
-    cfg: TrainConfig,
-    recv_timeout: Duration,
-    algo_id: u16,
-    wire_bits: u16,
-    scope: CommScope,
-    epochs: &'a [Epoch],
-    /// Sorted rounds at which this worker crashes.
-    crashes: Vec<u64>,
-    /// Checkpoint cadence (0 = never; crashes recover from genesis).
-    ckpt_every: u64,
-    ckpt_dir: Option<PathBuf>,
-    skip_bootstrap: bool,
-    /// Send-early pipelining: PreGradient engines ship their round frame
-    /// before the gradient step (see `ClusterConfig::pipeline`).
-    pipeline: bool,
-    /// Cluster-wide failure latch: one worker's round failure aborts every
-    /// sibling barrier within one recv tick.
-    abort: &'a AbortLatch,
-}
-
-/// This worker's peer set during an epoch.
-fn peers_of(ep: &Epoch, i: usize, scope: CommScope) -> Vec<usize> {
-    match scope {
-        CommScope::Neighbors => ep.adj[i].clone(),
-        CommScope::All => (0..ep.active.len())
-            .filter(|&j| j != i && ep.active[j])
-            .collect(),
-    }
-}
-
-/// First round ≥ `from` in which worker `i` is active, if any.
-fn next_active_round(epochs: &[Epoch], i: usize, from: u64, steps: u64) -> Option<u64> {
-    let mut round = from;
-    while round < steps {
-        let ep = epoch_at(epochs, round);
-        if ep.active[i] {
-            return Some(round);
-        }
-        // jump to the next epoch boundary
-        round = epochs
-            .iter()
-            .map(|e| e.start)
-            .find(|&s| s > round)?;
-    }
-    None
-}
-
-/// One worker's whole life: send (pipelined) → gradient → frame barrier →
-/// recv, for every round it is a member of, with crash/restore and
-/// join/leave handling when an elastic plan is active. Expected runtime
+/// The threaded driver: one OS thread runs one worker's
+/// [`RoundStateMachine`] to completion, blocking in abort-aware `recv`
+/// whenever the machine reports it is waiting on frames. Expected runtime
 /// failures (barrier deadline, transport errors, sibling aborts) come back
 /// as typed [`WorkerFailure`]s so the coordinator can name the originating
 /// worker; protocol violations (corrupt frames, foreign checkpoints) stay
 /// panics — a corrupt cluster must die loudly.
 fn run_node(
     i: usize,
-    mut engine: Box<dyn SyncAlgorithm>,
+    engine: Box<dyn SyncAlgorithm>,
     mut transport: Box<dyn Transport>,
-    mut objective: Box<dyn Objective>,
+    objective: Box<dyn Objective>,
     spec: NodeSpec<'_>,
+    abort: &AbortLatch,
 ) -> Result<NodeResult, WorkerFailure> {
-    // lint: allow(wall_clock) — phase timers here feed per-node perf
-    // accounting and recv-deadline diagnostics; model bytes are unaffected.
-    let d = objective.dim();
-    let steps = spec.cfg.steps;
-    let seed = spec.cfg.seed;
-
-    let Some(start_round) = next_active_round(spec.epochs, i, 0, steps) else {
-        // Provisioned slot that never activates: idle for the whole run.
-        return Ok(NodeResult {
-            worker: i,
-            final_x: objective.init(),
-            trace: NodeTrace::starting_at(steps),
-        });
-    };
-
-    let mut x = objective.init();
-    let mut grad = vec![0.0f32; d];
-    // Round-local buffers come out of a per-node arena (§Perf): after the
-    // warm-up rounds every checkout is recycled capacity, so a steady-state
-    // round allocates nothing (tests/alloc_discipline.rs).
-    let mut arena = crate::mem::ScratchArena::new();
-    let mut payload: Vec<u8> = arena.take_bytes();
-    // Data frames from workers running ahead of us. A peer can run at most
-    // one round ahead (it needs our round-k frame to pass its own round-k
-    // barrier), so this stays tiny in steady state; crash replay preloads
-    // the whole frame log into it. A linear-scan Vec with swap_remove
-    // keeps the steady-state path allocation-free — the BTreeMap it
-    // replaces allocated/freed a node every time it emptied and refilled.
-    let mut parked: Vec<Frame> = Vec::new();
-    // Bootstrap frames waiting for their join round, keyed by round: a
-    // bootstrapper past an upcoming barrier can deliver one while we are
-    // still in an earlier round's recv loop, and crash replay reloads them
-    // from the log.
-    let mut boot_pending: BTreeMap<u64, Frame> = BTreeMap::new();
-    // This round's barrier frames, reused across rounds (payload buffers
-    // are recycled into the transport's pool after the recv half).
-    let mut got: Vec<Frame> = Vec::new();
-    // Peer list of the current epoch (recomputed only at epoch boundaries,
-    // not per round).
-    let mut peers: Vec<usize> = Vec::new();
-    let mut trace = NodeTrace::starting_at(start_round);
-    trace.reserve((steps - start_round) as usize);
-    let mut lr = lr_at(&spec.cfg, start_round);
-    let mut g_inf = 0.0f64;
-    let mut crashes = spec.crashes.iter().copied().peekable();
-    // The receive-side WAL only exists to serve this worker's own crash
-    // replays; workers with no scheduled crash skip the per-frame disk
-    // write entirely.
-    let mut framelog = if spec.crashes.is_empty() {
-        None
-    } else {
-        spec.ckpt_dir
-            .as_ref()
-            .map(|dir| FrameLog::create(dir, i).expect("create frame log"))
-    };
-    // Rounds < live_from are replays after a crash: sends are suppressed
-    // (their frames already crossed the wire) and the barrier is satisfied
-    // purely from the logged frames.
-    let mut live_from = start_round;
-    let mut cur_epoch = usize::MAX;
-    let mut round = start_round;
-
-    while round < steps {
-        let ep_idx = epoch_index(spec.epochs, round);
-        let ep = &spec.epochs[ep_idx];
-        if !ep.active[i] {
-            // We left the cohort; either rejoin at a later epoch or retire.
-            match next_active_round(spec.epochs, i, round, steps) {
-                Some(r) => {
-                    for k in round..r {
-                        if spec.cfg.decay_at.contains(&k) {
-                            lr *= spec.cfg.decay_factor;
-                        }
-                    }
-                    round = r;
-                    continue;
-                }
-                None => break,
-            }
-        }
-
-        // --- scheduled crash: lose everything, restore, replay ------------
-        if round >= live_from && crashes.peek() == Some(&round) {
-            crashes.next();
-            let dir = spec
-                .ckpt_dir
-                .as_ref()
-                .expect("crash plans are validated to carry a ckpt_dir");
-            let snap = load_checkpoint(dir, i)
-                .unwrap_or_else(|e| panic!("worker {i}: corrupt checkpoint: {e}"));
-            parked.clear();
-            boot_pending.clear();
-            for f in FrameLog::read_all(dir, i)
-                .unwrap_or_else(|e| panic!("worker {i}: corrupt frame log: {e}"))
-            {
-                match f.kind {
-                    FrameKind::Data => {
-                        validate_data_frame(i, &f, &spec);
-                        parked.push(f);
-                    }
-                    FrameKind::Bootstrap => {
-                        boot_pending.insert(f.round, f);
-                    }
-                }
-            }
-            engine = spec.cfg.algorithm.make_sync(&spec.epochs[0].matrix, d);
-            engine.set_threads(1);
-            match snap {
-                Some(s) => {
-                    assert_eq!(
-                        s.algo, spec.algo_id,
-                        "worker {i}: checkpoint belongs to another algorithm"
-                    );
-                    assert_eq!(s.worker as usize, i, "worker {i}: foreign checkpoint");
-                    assert_eq!(s.model.len(), d, "worker {i}: checkpoint dimension");
-                    engine
-                        .restore(&s.engine)
-                        .unwrap_or_else(|e| panic!("worker {i}: engine restore: {e}"));
-                    x = s.model;
-                    lr = s.lr;
-                    g_inf = s.g_inf;
-                    live_from = round;
-                    round = s.round + 1;
-                    trace = s.trace;
-                }
-                None => {
-                    // Genesis recovery: no checkpoint yet — replay the whole
-                    // history from the (never-truncated) frame log.
-                    x = objective.init();
-                    lr = lr_at(&spec.cfg, start_round);
-                    g_inf = 0.0;
-                    live_from = round;
-                    round = start_round;
-                    trace = NodeTrace::starting_at(start_round);
-                }
-            }
-            cur_epoch = usize::MAX; // force re-wiring below
-            continue;
-        }
-
-        // --- reconfiguration barrier: wire the engine for this epoch ------
-        if ep_idx != cur_epoch {
-            if spec.epochs.len() > 1 {
-                assert!(
-                    engine.swap_matrix(&ep.matrix),
-                    "engine '{}' refused a matrix swap (validated at construction)",
-                    engine.name()
-                );
-            }
-            // Peer set is a pure function of the epoch: compute it once
-            // here instead of cloning the adjacency row every round.
-            peers = peers_of(ep, i, spec.scope);
-            cur_epoch = ep_idx;
-        }
-
-        // --- bootstrap handshake at an epoch's opening round --------------
-        if round == ep.start {
-            for &(joiner, boot) in &ep.joins {
-                if boot == i {
-                    // Our duty: ship the joiner one full-precision model so
-                    // its decode reference is inside the cohort's θ ball.
-                    // (During replay the pre-crash incarnation already sent
-                    // it; count it once, transmit nothing.)
-                    let mut model_bytes = Vec::with_capacity(4 * d);
-                    crate::algorithms::common::put_f32s(&mut model_bytes, &x);
-                    let bf = Frame {
-                        round,
-                        sender: i as u16,
-                        algo: spec.algo_id,
-                        bits: 32,
-                        kind: FrameKind::Bootstrap,
-                        theta: 0.0,
-                        payload: model_bytes,
-                    };
-                    if round >= live_from {
-                        transport.send(joiner, &bf).map_err(|e| {
-                            spec.abort.trip(WorkerFailure::new(
-                                i,
-                                round,
-                                format!("bootstrap send failed: {e}"),
-                            ))
-                        })?;
-                    }
-                    trace.frames_sent += 1;
-                    trace.bytes_sent += bf.encoded_len() as u64;
-                }
-                if joiner == i {
-                    // The frame may already be parked (it overtook us while
-                    // we were in an earlier barrier, or came from the crash
-                    // replay log); otherwise block for it.
-                    let bf = if let Some(f) = boot_pending.remove(&round) {
-                        f
-                    } else if round < live_from {
-                        panic!(
-                            "worker {i}: replay log is missing the round-{round} \
-                             bootstrap frame from worker {boot}"
-                        )
-                    } else {
-                        wait_for_bootstrap(
-                            i,
-                            round,
-                            &mut transport,
-                            &mut parked,
-                            &mut boot_pending,
-                            framelog.as_mut(),
-                            &spec,
-                        )?
-                    };
-                    assert_eq!(
-                        bf.sender as usize, boot,
-                        "worker {i}: bootstrap from unexpected sender"
-                    );
-                    assert_eq!(bf.bits, 32, "worker {i}: bootstrap must be full precision");
-                    assert_eq!(bf.payload.len(), 4 * d, "bootstrap payload size");
-                    if spec.skip_bootstrap {
-                        // TESTING ONLY: consume the frame but keep the stale
-                        // model — the θ-proximity violation the negative
-                        // test demonstrates.
-                    } else {
-                        crate::algorithms::common::read_f32s_into(&bf.payload, &mut x);
-                    }
-                }
-            }
-        }
-
-        if spec.cfg.decay_at.contains(&round) {
-            lr *= spec.cfg.decay_factor;
-        }
-
-        // --- pipelined send half (PreGradient engines) ----------------------
-        // Engines whose payload does not read this round's gradient ship
-        // their frame *before* the gradient step: the frame crosses the
-        // wire while `loss_grad` runs, so the round's wall clock is
-        // max(compute, comm) + mix instead of compute + comm. The empty
-        // gradient slice is a tripwire — a PreGradient engine that reads it
-        // dies loudly instead of silently consuming stale data. `ctx.g_inf`
-        // is the pre-round running max here, which is safe because the only
-        // g_inf consumer is the Theorem-2 θ policy this runtime refuses at
-        // construction.
-        let pre_send =
-            spec.pipeline && engine.send_phase() == SendPhase::PreGradient;
-        let mut sent: Option<(Frame, f64)> = None;
-        if pre_send {
-            let ctx = StepCtx { seed, rho: ep.rho, g_inf };
-            sent = Some(send_round_frame(
-                i,
-                engine.as_mut(),
-                transport.as_mut(),
-                &x,
-                &[],
-                lr,
-                round,
-                &ctx,
-                &mut payload,
-                &peers,
-                round >= live_from,
-                &spec,
-                &mut trace,
-            )?);
-        }
-
-        // --- local gradient ------------------------------------------------
-        let t0 = Instant::now();
-        let loss = objective.loss_grad(i, round, &x, &mut grad);
-        // Node-local running max — Trainer's global version only feeds the
-        // Theorem-2 θ policy, which this runtime refuses.
-        g_inf = g_inf.max(crate::linalg::norm_inf(&grad) as f64);
-        let grad_wall = t0.elapsed().as_secs_f64();
-        let ctx = StepCtx { seed, rho: ep.rho, g_inf };
-
-        // --- send half (PostGradient engines, or pipelining off) ------------
-        let (frame, send_compute) = match sent.take() {
-            Some(s) => s,
-            None => send_round_frame(
-                i,
-                engine.as_mut(),
-                transport.as_mut(),
-                &x,
-                &grad,
-                lr,
-                round,
-                &ctx,
-                &mut payload,
-                &peers,
-                round >= live_from,
-                &spec,
-                &mut trace,
-            )?,
-        };
-
-        // --- round barrier from the frames themselves ----------------------
-        got.clear();
-        for &p in &peers {
-            if let Some(f) = take_parked(&mut parked, round, p) {
-                got.push(f);
-            }
-        }
-        if round < live_from && got.len() < peers.len() {
-            let missing = missing_pairs(round, &peers, &got);
-            panic!(
-                "worker {i}: replay log is missing frames {missing:?} for round {round} \
-                 (log truncated outside a checkpoint?)"
-            );
-        }
-        // One deadline for the whole barrier, computed once: each recv gets
-        // only the *remaining* time, so a trickling straggler set can no
-        // longer reset the clock per frame and stretch one "recv_timeout"
-        // barrier to peers × recv_timeout.
-        let deadline = Instant::now() + spec.recv_timeout;
-        while got.len() < peers.len() {
-            let f = match recv_until(transport.as_mut(), deadline, spec.abort) {
-                BarrierRecv::Frame(f) => f,
-                BarrierRecv::TimedOut => {
-                    let missing = missing_pairs(round, &peers, &got);
-                    return Err(spec.abort.trip(WorkerFailure::new(
-                        i,
-                        round,
-                        format!(
-                            "barrier timed out: exceeded the configured \
-                             recv_timeout of {:?} with {} of {} peer frames \
-                             held; still waiting on (round, sender) pairs \
-                             {missing:?}",
-                            spec.recv_timeout,
-                            got.len(),
-                            peers.len(),
-                        ),
-                    )));
-                }
-                BarrierRecv::Aborted => {
-                    return Err(spec.abort.sibling_abort(i, round));
-                }
-                BarrierRecv::Failed(e) => {
-                    return Err(spec.abort.trip(WorkerFailure::new(
-                        i,
-                        round,
-                        format!("barrier recv failed: {e}"),
-                    )));
-                }
-            };
-            if let Some(log) = framelog.as_mut() {
-                log.append(&f).expect("frame log append");
-            }
-            if f.kind == FrameKind::Bootstrap {
-                // A bootstrapper past an upcoming reconfiguration barrier
-                // delivered our (re)join bootstrap early: park it for the
-                // join round.
-                boot_pending.insert(f.round, f);
-                continue;
-            }
-            validate_data_frame(i, &f, &spec);
-            let from = f.sender as usize;
-            assert!(
-                f.round >= round,
-                "worker {i}: stale round-{} frame from {from} at round {round}",
-                f.round
-            );
-            if f.round == round {
-                got.push(f);
-            } else {
-                parked.push(f);
-            }
-        }
-
-        // --- recv half -----------------------------------------------------
-        let t2 = Instant::now();
-        // Ascending-sender order is the engines' determinism contract;
-        // sort_unstable is in-place, and the borrowed inbox makes this the
-        // allocation-free path (Inbox::from_frames).
-        got.sort_unstable_by_key(|f| f.sender);
-        let stats = {
-            let inbox = Inbox::from_frames(&got);
-            engine.node_recv(i, &mut x, &grad, lr, round, &ctx, &inbox)
-        };
-        // Consumed payload buffers go back to the transport's wire pool.
-        for f in got.drain(..) {
-            transport.recycle(f.payload);
-        }
-        trace.push_round(
-            round,
-            loss,
-            engine.last_theta(),
-            stats,
-            grad_wall,
-            send_compute + t2.elapsed().as_secs_f64(),
-        );
-        if round % spec.cfg.eval_every == 0 || round + 1 == steps {
-            trace.evals.push((round, x.clone()));
-        }
-        payload = frame.payload; // reuse the allocation next round
-
-        // --- checkpoint at the round boundary ------------------------------
-        if round >= live_from
-            && spec.ckpt_every > 0
-            && (round + 1) % spec.ckpt_every == 0
-        {
-            if let Some(dir) = spec.ckpt_dir.as_ref() {
-                let mut engine_blob = arena.take_bytes();
-                engine.snapshot(&mut engine_blob);
-                let snap = Snapshot {
-                    worker: i as u16,
-                    algo: spec.algo_id,
-                    round,
-                    lr,
-                    g_inf,
-                    model: x.clone(),
-                    engine: engine_blob,
-                    trace: trace.clone(),
-                };
-                write_checkpoint(dir, &snap).expect("write checkpoint");
-                arena.give_bytes(snap.engine);
-                if let Some(log) = framelog.as_mut() {
-                    // The log's new epoch is "everything since this
-                    // snapshot": truncate, then re-log frames that were
-                    // received but not yet consumed (data frames parked for
-                    // future rounds and any early-delivered bootstrap).
-                    // Replay consumes them by (round, sender) lookup, so
-                    // their order in the log does not matter.
-                    log.truncate().expect("truncate frame log");
-                    for f in &parked {
-                        log.append(f).expect("re-log pending frame");
-                    }
-                    for f in boot_pending.values() {
-                        log.append(f).expect("re-log pending bootstrap");
-                    }
-                }
-            }
-        }
-        round += 1;
-    }
-    Ok(NodeResult { worker: i, final_x: x, trace })
-}
-
-/// The "send half" of a round: encode this worker's frame and broadcast it
-/// to every peer. Shared between the pipelined pre-gradient path (where
-/// `grad` is the empty tripwire slice) and the post-gradient path. Returns
-/// the frame (its payload buffer is recycled by the caller) and the encode
-/// wall time.
-#[allow(clippy::too_many_arguments)]
-fn send_round_frame(
-    i: usize,
-    engine: &mut dyn SyncAlgorithm,
-    transport: &mut dyn Transport,
-    x: &[f32],
-    grad: &[f32],
-    lr: f32,
-    round: u64,
-    ctx: &StepCtx,
-    payload: &mut Vec<u8>,
-    peers: &[usize],
-    live: bool,
-    spec: &NodeSpec<'_>,
-    trace: &mut NodeTrace,
-) -> Result<(Frame, f64), WorkerFailure> {
-    // lint: allow(wall_clock) — the encode timer feeds per-node perf
-    // accounting only; frame contents are unaffected.
-    let t1 = Instant::now();
-    payload.clear();
-    engine.node_send(i, x, grad, lr, round, ctx, payload);
-    let frame = Frame {
-        round,
-        sender: i as u16,
-        algo: spec.algo_id,
-        bits: spec.wire_bits,
-        kind: FrameKind::Data,
-        theta: engine.last_theta().unwrap_or(0.0) as f32,
-        payload: std::mem::take(payload),
-    };
-    let send_compute = t1.elapsed().as_secs_f64();
-    if live {
-        // One broadcast call: the frame is serialized + checksummed once
-        // and the wire bytes are reused for every peer.
-        transport.broadcast(peers, &frame).map_err(|e| {
-            spec.abort
-                .trip(WorkerFailure::new(i, round, format!("broadcast failed: {e}")))
-        })?;
-    }
-    // Replayed rounds count their original (pre-crash) send exactly
-    // once: the counters that recorded it died with the old incarnation.
-    trace.frames_sent += peers.len() as u64;
-    trace.bytes_sent += peers.len() as u64 * frame.encoded_len() as u64;
-    Ok((frame, send_compute))
-}
-
-/// Learning rate in effect entering `round` (all scheduled decays at
-/// earlier rounds applied).
-fn lr_at(cfg: &TrainConfig, round: u64) -> f32 {
-    let mut lr = cfg.lr;
-    for k in 0..round {
-        if cfg.decay_at.contains(&k) {
-            lr *= cfg.decay_factor;
-        }
-    }
-    lr
-}
-
-/// Remove and return the parked frame for `(round, sender)`, if present.
-/// Linear scan + `swap_remove`: the parked set holds at most one frame per
-/// peer in steady state (see `run_node`), and replay consumption order is
-/// keyed, not positional.
-fn take_parked(parked: &mut Vec<Frame>, round: u64, sender: usize) -> Option<Frame> {
-    parked
-        .iter()
-        .position(|f| f.round == round && f.sender as usize == sender)
-        .map(|at| parked.swap_remove(at))
-}
-
-/// The `(round, sender)` pairs a barrier is still waiting on.
-fn missing_pairs(round: u64, peers: &[usize], got: &[Frame]) -> Vec<(u64, usize)> {
-    peers
-        .iter()
-        .filter(|&&p| !got.iter().any(|f| f.sender as usize == p))
-        .map(|&p| (round, p))
-        .collect()
-}
-
-/// Shared sanity gate for every Data frame before it can reach an engine:
-/// same algorithm, same bit budget, and a sender that is actually a peer
-/// in the *frame's own* epoch (a fast peer may already be past an upcoming
-/// reconfiguration barrier). Applied on the live recv path, on frames
-/// parked during a bootstrap wait, and on crash-replay frames from the
-/// log — a corrupt or misrouted frame must die loudly, never be averaged.
-fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>) {
-    let from = f.sender as usize;
-    assert_eq!(f.algo, spec.algo_id, "worker {i}: cross-algorithm frame from {from}");
-    assert_eq!(f.bits, spec.wire_bits, "worker {i}: bit-budget mismatch from {from}");
-    let f_ep = epoch_at(spec.epochs, f.round);
-    let is_peer = match spec.scope {
-        CommScope::Neighbors => f_ep.adj[i].contains(&from),
-        CommScope::All => f_ep.active[from] && from != i,
-    };
-    assert!(
-        is_peer,
-        "worker {i}: round-{} frame from non-peer {from}",
-        f.round
-    );
-}
-
-/// Block until this worker's bootstrap frame for `round` arrives, parking
-/// any frames that overtake it (data frames keyed by `(round, sender)`,
-/// bootstrap frames for other rounds by round). The caller validates the
-/// returned frame's sender/precision. Like the round barrier, the wait
-/// runs against a single deadline of the configured `recv_timeout` —
-/// overtaking frames do not reset the clock — and honors sibling aborts.
-fn wait_for_bootstrap(
-    i: usize,
-    round: u64,
-    transport: &mut Box<dyn Transport>,
-    parked: &mut Vec<Frame>,
-    boot_pending: &mut BTreeMap<u64, Frame>,
-    mut framelog: Option<&mut FrameLog>,
-    spec: &NodeSpec<'_>,
-) -> Result<Frame, WorkerFailure> {
-    // lint: allow(wall_clock) — the deadline only bounds the wait; frame
-    // selection is purely round/sender keyed.
-    let deadline = Instant::now() + spec.recv_timeout;
+    // lint: allow(wall_clock) — the wait deadline gates *when* a worker
+    // gives up on a barrier, never the bytes of any frame.
+    let recv_timeout = spec.recv_timeout;
+    let mut sm = RoundStateMachine::new(i, engine, objective, spec);
+    // One deadline per barrier/bootstrap wait, keyed by what the machine
+    // is blocked on: an arriving frame never resets the clock, so a
+    // trickle of stragglers cannot stretch one "recv_timeout" barrier to
+    // peers × recv_timeout.
+    let mut wait: Option<(WaitKey, Instant)> = None;
     loop {
-        let f = match recv_until(transport.as_mut(), deadline, spec.abort) {
-            BarrierRecv::Frame(f) => f,
-            BarrierRecv::TimedOut => {
-                return Err(spec.abort.trip(WorkerFailure::new(
-                    i,
-                    round,
-                    format!(
-                        "timed out waiting for the round-{round} bootstrap \
-                         frame: exceeded the configured recv_timeout of {:?}",
-                        spec.recv_timeout,
-                    ),
-                )));
+        match sm.drive(transport.as_mut()) {
+            Ok(MachineStatus::Done) => return Ok(sm.into_result()),
+            Ok(MachineStatus::Waiting(key)) => {
+                let deadline = match wait {
+                    Some((k, dl)) if k == key => dl,
+                    _ => saturating_deadline(Instant::now(), recv_timeout),
+                };
+                wait = Some((key, deadline));
+                match recv_until(transport.as_mut(), deadline, abort) {
+                    BarrierRecv::Frame(f) => sm.accept_frame(f),
+                    BarrierRecv::TimedOut => {
+                        return Err(abort.trip(sm.timeout_failure()));
+                    }
+                    BarrierRecv::Aborted => {
+                        return Err(abort.sibling_abort(sm.worker(), sm.round()));
+                    }
+                    BarrierRecv::Failed(e) => {
+                        return Err(abort.trip(sm.recv_failure(&e)));
+                    }
+                }
             }
-            BarrierRecv::Aborted => return Err(spec.abort.sibling_abort(i, round)),
-            BarrierRecv::Failed(e) => {
-                return Err(spec.abort.trip(WorkerFailure::new(
-                    i,
-                    round,
-                    format!("bootstrap recv failed: {e}"),
-                )));
-            }
-        };
-        if let Some(log) = &mut framelog {
-            log.append(&f).expect("frame log append");
-        }
-        match f.kind {
-            FrameKind::Bootstrap if f.round == round => return Ok(f),
-            FrameKind::Bootstrap => {
-                boot_pending.insert(f.round, f);
-            }
-            FrameKind::Data => {
-                validate_data_frame(i, &f, spec);
-                let from = f.sender as usize;
-                assert!(
-                    f.round >= round,
-                    "worker {i}: pre-join round-{} frame from {from}",
-                    f.round
-                );
-                parked.push(f);
-            }
+            Err(f) => return Err(abort.trip(f)),
         }
     }
 }
@@ -1285,6 +657,7 @@ mod tests {
     use crate::algorithms::ThetaPolicy;
     use crate::elastic::MembershipPlan;
     use crate::quant::{Compression, QuantConfig};
+    use std::path::PathBuf;
 
     fn base_cfg(algorithm: Algorithm) -> TrainConfig {
         TrainConfig { workers: 4, steps: 6, eval_every: 2, algorithm, ..TrainConfig::default() }
@@ -1425,6 +798,26 @@ mod tests {
         assert_eq!(report.trace.len(), 4); // steps 0,2,4,5
         assert!(t.frames_sent > 0);
         assert!(t.wire_bytes_sent as usize > report.total_bytes as usize);
+        assert_eq!(report.final_params.len(), 8);
+    }
+
+    #[test]
+    fn reactor_driver_trains_and_reports() {
+        let cfg = base_cfg(Algorithm::DPsgd);
+        let mut t = ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig {
+                driver: DriverKind::Reactor { threads: 2 },
+                ..ClusterConfig::default()
+            },
+        )
+        .unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(report.trace.len(), 4);
+        assert!(t.frames_sent > 0);
+        assert!(t.failures.is_empty());
         assert_eq!(report.final_params.len(), 8);
     }
 

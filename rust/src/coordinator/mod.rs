@@ -13,12 +13,16 @@
 //!   loop. [`des::DesTrainer`] reproduces [`Trainer`]'s model trajectory
 //!   bitwise; [`AsyncTrainer`] is a thin wrapper over
 //!   [`des::DesAsyncTrainer`].
-//! * [`cluster`] — the message-passing runtime: one OS thread per worker,
-//!   each owning only its own model, every inter-worker byte traveling as
-//!   a framed message over a pluggable
-//!   [`Transport`](crate::transport::Transport) (in-process channels or
-//!   localhost TCP). Bitwise-identical to [`Trainer`] for every
-//!   [`SyncAlgorithm`] — pinned by `tests/cluster_equivalence.rs`.
+//! * [`cluster`] — the message-passing runtime: each worker owns only its
+//!   own model, every inter-worker byte traveling as a framed message over
+//!   a pluggable [`Transport`](crate::transport::Transport) (in-process
+//!   channels or localhost TCP). Two drivers advance the shared per-worker
+//!   round machine (`round`): one OS thread per worker
+//!   ([`DriverKind::Threaded`]), or a readiness loop multiplexing
+//!   1000+ workers onto a few driver threads ([`DriverKind::Reactor`],
+//!   `reactor`). Bitwise-identical to [`Trainer`] for every
+//!   [`SyncAlgorithm`] — pinned by `tests/cluster_equivalence.rs` and
+//!   `tests/reactor_equivalence.rs`.
 //! * [`AsyncTrainer`] — event-driven AD-PSGD wall-clock simulation with
 //!   per-worker clocks and straggler variance (Figure 2b), plus
 //!   [`threaded`] — a real `std::thread` gossip runtime proving the
@@ -28,9 +32,13 @@
 pub mod cluster;
 pub mod des;
 pub mod metrics;
+mod reactor;
+mod round;
 pub mod threaded;
 
-pub use cluster::{ClusterConfig, ClusterTrainer, TransportKind};
+pub use cluster::{
+    ClusterConfig, ClusterTrainer, DriverKind, TransportKind, WorkerFailure,
+};
 pub use des::{DesAsyncTrainer, DesConfig, DesOutputs, DesTrainer, EventQueue, FaultConfig};
 pub use metrics::{Report, TraceRow};
 

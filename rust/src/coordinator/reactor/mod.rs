@@ -1,0 +1,264 @@
+//! The reactor driver: a readiness loop that multiplexes many workers'
+//! [`RoundStateMachine`]s onto a small pool of driver threads — the
+//! runtime that lets one process host 1000+ workers without 1000+ OS
+//! threads (the threaded driver costs one thread per worker, and over TCP
+//! another ~3 reader/writer threads each).
+//!
+//! ## Protocol
+//!
+//! Workers are sharded round-robin across `threads` driver threads
+//! (worker `k` → shard `k % threads`); a machine never migrates, so all
+//! of its engine calls happen on one thread in program order — the
+//! bitwise-equivalence argument of the round machine carries over
+//! unchanged. Each shard loops:
+//!
+//! 1. **drain** — `recv(0)` until `Timeout` pulls every frame the
+//!    worker's nonblocking transport has fully reassembled;
+//! 2. **feed** — each frame goes through
+//!    [`RoundStateMachine::accept_frame`] (parking, WAL, validation);
+//! 3. **advance** — [`RoundStateMachine::drive`] runs the worker until it
+//!    finishes, fails, or blocks on a [`WaitKey`] again;
+//! 4. **deadline** — one deadline per wait key (never per frame), exactly
+//!    the threaded driver's barrier-budget rule;
+//! 5. **park** — if no slot made progress, the shard parks on its
+//!    [`WakeHandle`] for [`PARK_TICK`] — woken early by an in-process
+//!    transport delivery or by the abort latch.
+//!
+//! ## Failure propagation
+//!
+//! The abort latch is an event source here, not a poll target: every
+//! shard registers its wake token with the latch
+//! ([`AbortLatch::register_waker`]), so the first failure anywhere in the
+//! cluster wakes every parked shard immediately and each surviving
+//! machine aborts *within one poll iteration* (asserted by
+//! `tests/reactor_equivalence.rs`). The threaded driver keeps its 50 ms
+//! [`ABORT_POLL_TICK`](super::round::ABORT_POLL_TICK) poll as the
+//! documented fallback; the reactor's bound is one `PARK_TICK` + one loop
+//! pass.
+
+use std::time::{Duration, Instant};
+
+use super::round::{
+    AbortLatch, MachineStatus, NodeResult, RoundStateMachine, WaitKey, WorkerFailure,
+};
+use crate::transport::{
+    saturating_deadline, Frame, Transport, TransportError, WakeHandle,
+};
+
+/// Upper bound on how long an idle shard sleeps between polls. Wake
+/// tokens (in-process transports, the abort latch) cut this short; pure
+/// socket readiness (NbTcp has no kernel wake integration) is discovered
+/// on the next tick — 1 ms of latency, never lost data.
+const PARK_TICK: Duration = Duration::from_millis(1);
+
+/// One worker as the reactor sees it: its round machine plus the
+/// transport endpoint the machine sends/receives through.
+pub(crate) struct ReactorWorker<'a> {
+    machine: RoundStateMachine<'a>,
+    transport: Box<dyn Transport>,
+}
+
+impl<'a> ReactorWorker<'a> {
+    pub(crate) fn new(
+        machine: RoundStateMachine<'a>,
+        transport: Box<dyn Transport>,
+    ) -> Self {
+        ReactorWorker { machine, transport }
+    }
+}
+
+/// Drive every worker to completion (or failure) on `threads` driver
+/// threads. Returns the finished results and every typed failure;
+/// protocol-violation panics propagate after all shards have joined.
+pub(crate) fn drive<'a>(
+    workers: Vec<ReactorWorker<'a>>,
+    threads: usize,
+    recv_timeout: Duration,
+    abort: &AbortLatch,
+) -> (Vec<NodeResult>, Vec<WorkerFailure>) {
+    let threads = threads.clamp(1, workers.len().max(1));
+    let mut shards: Vec<Vec<ReactorWorker<'a>>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (k, w) in workers.into_iter().enumerate() {
+        shards[k % threads].push(w);
+    }
+    let mut results: Vec<NodeResult> = Vec::new();
+    let mut failures: Vec<WorkerFailure> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for shard in shards {
+            handles.push(s.spawn(move || drive_shard(shard, recv_timeout, abort)));
+        }
+        for h in handles {
+            match h.join() {
+                Ok((rs, fs)) => {
+                    results.extend(rs);
+                    failures.extend(fs);
+                }
+                // Protocol-violation panics stay panics: re-raise after
+                // the scope has joined every shard.
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+    });
+    (results, failures)
+}
+
+/// Per-shard slot: `machine` is `None` once the worker finished or
+/// failed; `wait` keeps the one-deadline-per-barrier bookkeeping.
+struct Slot<'a> {
+    machine: Option<RoundStateMachine<'a>>,
+    transport: Box<dyn Transport>,
+    wait: Option<(WaitKey, Instant)>,
+}
+
+/// One driver thread's readiness loop over its share of the workers.
+fn drive_shard<'a>(
+    shard: Vec<ReactorWorker<'a>>,
+    recv_timeout: Duration,
+    abort: &AbortLatch,
+) -> (Vec<NodeResult>, Vec<WorkerFailure>) {
+    // lint: allow(wall_clock) — the per-wait deadlines gate *when* a
+    // worker gives up on a barrier, never the bytes of any frame.
+    let wake = WakeHandle::new();
+    abort.register_waker(&wake);
+    let mut slots: Vec<Slot<'a>> = shard
+        .into_iter()
+        .map(|w| {
+            let mut transport = w.transport;
+            transport.set_waker(&wake);
+            Slot { machine: Some(w.machine), transport, wait: None }
+        })
+        .collect();
+    let mut results: Vec<NodeResult> = Vec::new();
+    let mut failures: Vec<WorkerFailure> = Vec::new();
+    // Reused across slots and iterations: the poll loop body allocates
+    // nothing in steady state (frames and their payloads are pooled).
+    let mut frames: Vec<Frame> = Vec::new();
+    let mut live = slots.len();
+    while live > 0 {
+        let mut progressed = false;
+        // Sampled once per iteration: a failure mid-pass is observed by
+        // the remaining slots on the next pass — "within one poll
+        // iteration" is the latch's propagation bound here.
+        let aborted = abort.tripped();
+        for slot in slots.iter_mut() {
+            let Some(mut machine) = slot.machine.take() else {
+                continue;
+            };
+            if aborted {
+                failures.push(abort.sibling_abort_via(
+                    machine.worker(),
+                    machine.round(),
+                    "poll iteration",
+                ));
+                live -= 1;
+                progressed = true;
+                continue;
+            }
+            frames.clear();
+            if let Err(e) = drain_ready(slot.transport.as_mut(), &mut frames) {
+                failures.push(abort.trip(machine.recv_failure(&e)));
+                live -= 1;
+                progressed = true;
+                continue;
+            }
+            if !frames.is_empty() {
+                progressed = true;
+            }
+            for f in frames.drain(..) {
+                machine.accept_frame(f);
+            }
+            match machine.drive(slot.transport.as_mut()) {
+                Ok(MachineStatus::Done) => {
+                    results.push(machine.into_result());
+                    live -= 1;
+                    progressed = true;
+                }
+                Ok(MachineStatus::Waiting(key)) => {
+                    // One deadline per barrier/bootstrap wait: an arriving
+                    // frame never resets the clock (the threaded driver's
+                    // exact rule).
+                    let deadline = match slot.wait {
+                        Some((k, dl)) if k == key => dl,
+                        _ => {
+                            progressed = true; // entered a new wait
+                            saturating_deadline(Instant::now(), recv_timeout)
+                        }
+                    };
+                    slot.wait = Some((key, deadline));
+                    if Instant::now() >= deadline {
+                        failures.push(abort.trip(machine.timeout_failure()));
+                        live -= 1;
+                        progressed = true;
+                    } else {
+                        slot.machine = Some(machine);
+                    }
+                }
+                Err(f) => {
+                    failures.push(abort.trip(f));
+                    live -= 1;
+                    progressed = true;
+                }
+            }
+        }
+        if !progressed && live > 0 {
+            wake.park_timeout(PARK_TICK);
+        }
+    }
+    (results, failures)
+}
+
+/// Pull every frame the transport has fully reassembled, without
+/// blocking: `recv(0)` polls the transport's readiness path (for NbTcp
+/// that is one `poll_io` pass — accepts, reads, pending flushes) and
+/// returns `Timeout` once nothing more is buffered.
+// lint: hot-path
+fn drain_ready(
+    transport: &mut dyn Transport,
+    out: &mut Vec<Frame>,
+) -> Result<(), TransportError> {
+    loop {
+        match transport.recv(Duration::ZERO) {
+            Ok(f) => out.push(f),
+            Err(TransportError::Timeout) => return Ok(()),
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::MemTransport;
+    use crate::transport::{Frame, FrameKind};
+
+    fn frame(round: u64, sender: u16) -> Frame {
+        Frame {
+            round,
+            sender,
+            algo: 2,
+            bits: 32,
+            kind: FrameKind::Data,
+            theta: 0.0,
+            payload: vec![1, 2, 3],
+        }
+    }
+
+    #[test]
+    fn drain_ready_pulls_everything_without_blocking() {
+        let mut eps = MemTransport::cluster(2);
+        eps[0].send(1, &frame(0, 0)).unwrap();
+        eps[0].send(1, &frame(1, 0)).unwrap();
+        let mut out = Vec::new();
+        let t0 = Instant::now();
+        drain_ready(&mut eps[1], &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].round, out[1].round), (0, 1));
+        // And a dry endpoint returns immediately instead of waiting.
+        out.clear();
+        drain_ready(&mut eps[1], &mut out).unwrap();
+        assert!(out.is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+}

@@ -1,0 +1,1116 @@
+//! The per-worker round protocol, factored out of the drivers: one
+//! [`RoundStateMachine`] is *exactly* the body of the old thread-per-worker
+//! `run_node` loop, re-expressed as an explicit state machine so the same
+//! code drives both runtimes:
+//!
+//! * the **threaded** driver ([`cluster`](super::cluster)) wraps one
+//!   machine per OS thread and parks in blocking `recv` whenever the
+//!   machine reports it is waiting;
+//! * the **reactor** driver ([`reactor`](super::reactor)) multiplexes many
+//!   machines onto a few driver threads, feeding each machine the frames
+//!   its nonblocking transport has ready and advancing it until it reports
+//!   [`MachineStatus::Waiting`] again.
+//!
+//! The machine owns every piece of per-worker state the old loop kept on
+//! its stack — model, gradient buffer, parked frames, bootstrap queue,
+//! frame log, crash cursor — and exposes three entry points:
+//! [`drive`](RoundStateMachine::drive) (run until blocked or done),
+//! [`accept_frame`](RoundStateMachine::accept_frame) (hand it one inbound
+//! frame), and the failure constructors
+//! ([`timeout_failure`](RoundStateMachine::timeout_failure),
+//! [`recv_failure`](RoundStateMachine::recv_failure)) that produce the
+//! *same* typed [`WorkerFailure`] strings the threaded runtime always
+//! produced (pinned by `tests/barrier_deadline.rs`).
+//!
+//! Bitwise safety: the machine performs the identical sequence of engine
+//! calls (`node_send` → `loss_grad` → `node_recv`), in the identical
+//! order, with identical [`StepCtx`] values, as the old inline loop — the
+//! refactor moves control flow, not arithmetic. `tests/reactor_equivalence.rs`
+//! pins reactor ≡ threaded ≡ lockstep for the algorithm matrix.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::TrainConfig;
+use crate::algorithms::{CommScope, Inbox, SendPhase, StepCtx, SyncAlgorithm};
+use crate::elastic::membership::{epoch_at, epoch_index, Epoch};
+use crate::elastic::snapshot::{
+    load_checkpoint, write_checkpoint, FrameLog, NodeTrace, Snapshot,
+};
+use crate::objectives::Objective;
+use crate::transport::{Frame, FrameKind, Transport, TransportError, WakeHandle};
+
+/// How often a worker blocked in a barrier/bootstrap wait wakes to poll
+/// the cluster's [`AbortLatch`]: the bound on how long a sibling outlives
+/// the originating failure. (The reactor does better — the latch wakes its
+/// shards directly — but the threaded driver's blocking `recv` keeps this
+/// tick as its documented fallback.)
+pub(crate) const ABORT_POLL_TICK: Duration = Duration::from_millis(50);
+
+/// Typed round failure a worker hands back instead of panicking: a barrier
+/// deadline expiry, a transport error, or an abort triggered by a sibling.
+/// [`ClusterTrainer::run`](super::cluster::ClusterTrainer::run) joins
+/// these and names the originating worker.
+#[derive(Clone, Debug)]
+pub struct WorkerFailure {
+    pub worker: usize,
+    pub round: u64,
+    pub reason: String,
+}
+
+impl WorkerFailure {
+    pub(crate) fn new(worker: usize, round: u64, reason: String) -> Self {
+        WorkerFailure { worker, round, reason }
+    }
+}
+
+impl std::fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} round {}: {}", self.worker, self.round, self.reason)
+    }
+}
+
+/// Shared round-failure latch: the first worker to fail records itself
+/// here; every sibling's recv loop polls [`Self::tripped`] once per
+/// [`ABORT_POLL_TICK`] (and every reactor shard is woken directly through
+/// its registered [`WakeHandle`]) and aborts instead of burning its own
+/// full `recv_timeout` on frames that will never arrive.
+#[derive(Default)]
+pub(crate) struct AbortLatch {
+    tripped: AtomicBool,
+    origin: Mutex<Option<WorkerFailure>>,
+    /// Reactor-shard wake tokens: tripping the latch wakes every parked
+    /// shard immediately, so the abort propagates within one poll
+    /// iteration instead of one park tick.
+    wakers: Mutex<Vec<Arc<WakeHandle>>>,
+}
+
+impl AbortLatch {
+    pub(crate) fn tripped(&self) -> bool {
+        self.tripped.load(Ordering::Acquire)
+    }
+
+    /// Register a shard's wake token so [`Self::trip`] can interrupt its
+    /// park instead of waiting for the next poll tick.
+    pub(crate) fn register_waker(&self, w: &Arc<WakeHandle>) {
+        self.wakers.lock().unwrap().push(Arc::clone(w));
+    }
+
+    /// Record `failure` as the origin if the latch is still clear; either
+    /// way the latch is tripped and `failure` is handed back so callers
+    /// can `return Err(latch.trip(f))`.
+    pub(crate) fn trip(&self, failure: WorkerFailure) -> WorkerFailure {
+        {
+            let mut origin = self.origin.lock().unwrap();
+            if origin.is_none() {
+                *origin = Some(failure.clone());
+            }
+        }
+        self.tripped.store(true, Ordering::Release);
+        for w in self.wakers.lock().unwrap().iter() {
+            w.wake();
+        }
+        failure
+    }
+
+    pub(crate) fn origin(&self) -> Option<WorkerFailure> {
+        self.origin.lock().unwrap().clone()
+    }
+
+    /// The reason string a sibling reports when it aborts out of a wait
+    /// because someone else tripped the latch; `how` names the wait
+    /// granularity ("recv tick" for the threaded driver, "poll iteration"
+    /// for the reactor).
+    fn sibling_reason(&self, how: &str) -> String {
+        match self.origin() {
+            Some(o) => format!(
+                "aborted within one {how}: sibling worker {} failed round {}",
+                o.worker, o.round
+            ),
+            None => format!("aborted within one {how} by the cluster latch"),
+        }
+    }
+
+    /// A sibling's failure for aborting out of a blocking wait after
+    /// someone else tripped the latch.
+    pub(crate) fn sibling_abort(&self, worker: usize, round: u64) -> WorkerFailure {
+        WorkerFailure::new(worker, round, self.sibling_reason("recv tick"))
+    }
+
+    /// Reactor-flavored sibling abort: same origin attribution, but the
+    /// wait unit is the shard's poll iteration.
+    pub(crate) fn sibling_abort_via(
+        &self,
+        worker: usize,
+        round: u64,
+        how: &str,
+    ) -> WorkerFailure {
+        WorkerFailure::new(worker, round, self.sibling_reason(how))
+    }
+}
+
+/// One deadline-bounded, abort-aware transport wait.
+pub(crate) enum BarrierRecv {
+    Frame(Frame),
+    /// The caller's deadline passed without a frame.
+    TimedOut,
+    /// A sibling tripped the [`AbortLatch`]; stop waiting.
+    Aborted,
+    Failed(TransportError),
+}
+
+/// Wait for one frame until `deadline`, polling `abort` once per
+/// [`ABORT_POLL_TICK`]. The deadline is the *caller's* (computed once per
+/// barrier), so consecutive calls consume one shared budget — an arriving
+/// frame never resets the clock.
+pub(crate) fn recv_until(
+    transport: &mut dyn Transport,
+    deadline: Instant,
+    abort: &AbortLatch,
+) -> BarrierRecv {
+    // lint: allow(wall_clock) — deadline arithmetic gates *when* a frame is
+    // handed to the caller, never which frame or its bytes.
+    loop {
+        if abort.tripped() {
+            return BarrierRecv::Aborted;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return BarrierRecv::TimedOut;
+        }
+        let wait = ABORT_POLL_TICK.min(deadline - now);
+        match transport.recv(wait) {
+            Ok(f) => return BarrierRecv::Frame(f),
+            Err(TransportError::Timeout) => continue,
+            Err(e) => return BarrierRecv::Failed(e),
+        }
+    }
+}
+
+/// Everything one worker brings home.
+pub(crate) struct NodeResult {
+    pub(crate) worker: usize,
+    pub(crate) final_x: Vec<f32>,
+    pub(crate) trace: NodeTrace,
+}
+
+/// Everything a node needs beyond its engine/transport/objective.
+pub(crate) struct NodeSpec<'a> {
+    pub(crate) cfg: TrainConfig,
+    pub(crate) recv_timeout: Duration,
+    pub(crate) algo_id: u16,
+    pub(crate) wire_bits: u16,
+    pub(crate) scope: CommScope,
+    pub(crate) epochs: &'a [Epoch],
+    /// Sorted rounds at which this worker crashes.
+    pub(crate) crashes: Vec<u64>,
+    /// Checkpoint cadence (0 = never; crashes recover from genesis).
+    pub(crate) ckpt_every: u64,
+    pub(crate) ckpt_dir: Option<PathBuf>,
+    pub(crate) skip_bootstrap: bool,
+    /// Send-early pipelining: PreGradient engines ship their round frame
+    /// before the gradient step (see `ClusterConfig::pipeline`).
+    pub(crate) pipeline: bool,
+}
+
+/// This worker's peer set during an epoch.
+pub(crate) fn peers_of(ep: &Epoch, i: usize, scope: CommScope) -> Vec<usize> {
+    match scope {
+        CommScope::Neighbors => ep.adj[i].clone(),
+        CommScope::All => (0..ep.active.len())
+            .filter(|&j| j != i && ep.active[j])
+            .collect(),
+    }
+}
+
+/// First round ≥ `from` in which worker `i` is active, if any.
+pub(crate) fn next_active_round(
+    epochs: &[Epoch],
+    i: usize,
+    from: u64,
+    steps: u64,
+) -> Option<u64> {
+    let mut round = from;
+    while round < steps {
+        let ep = epoch_at(epochs, round);
+        if ep.active[i] {
+            return Some(round);
+        }
+        // jump to the next epoch boundary
+        round = epochs
+            .iter()
+            .map(|e| e.start)
+            .find(|&s| s > round)?;
+    }
+    None
+}
+
+/// Learning rate in effect entering `round` (all scheduled decays at
+/// earlier rounds applied).
+pub(crate) fn lr_at(cfg: &TrainConfig, round: u64) -> f32 {
+    let mut lr = cfg.lr;
+    for k in 0..round {
+        if cfg.decay_at.contains(&k) {
+            lr *= cfg.decay_factor;
+        }
+    }
+    lr
+}
+
+/// Remove and return the parked frame for `(round, sender)`, if present.
+/// Linear scan + `swap_remove`: the parked set holds at most one frame per
+/// peer in steady state, and replay consumption order is keyed, not
+/// positional.
+fn take_parked(parked: &mut Vec<Frame>, round: u64, sender: usize) -> Option<Frame> {
+    parked
+        .iter()
+        .position(|f| f.round == round && f.sender as usize == sender)
+        .map(|at| parked.swap_remove(at))
+}
+
+/// The `(round, sender)` pairs a barrier is still waiting on.
+fn missing_pairs(round: u64, peers: &[usize], got: &[Frame]) -> Vec<(u64, usize)> {
+    peers
+        .iter()
+        .filter(|&&p| !got.iter().any(|f| f.sender as usize == p))
+        .map(|&p| (round, p))
+        .collect()
+}
+
+/// Shared sanity gate for every Data frame before it can reach an engine:
+/// same algorithm, same bit budget, and a sender that is actually a peer
+/// in the *frame's own* epoch (a fast peer may already be past an upcoming
+/// reconfiguration barrier). Applied on the live recv path, on frames
+/// parked during a bootstrap wait, and on crash-replay frames from the
+/// log — a corrupt or misrouted frame must die loudly, never be averaged.
+fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>) {
+    let from = f.sender as usize;
+    assert_eq!(f.algo, spec.algo_id, "worker {i}: cross-algorithm frame from {from}");
+    assert_eq!(f.bits, spec.wire_bits, "worker {i}: bit-budget mismatch from {from}");
+    let f_ep = epoch_at(spec.epochs, f.round);
+    let is_peer = match spec.scope {
+        CommScope::Neighbors => f_ep.adj[i].contains(&from),
+        CommScope::All => f_ep.active[from] && from != i,
+    };
+    assert!(
+        is_peer,
+        "worker {i}: round-{} frame from non-peer {from}",
+        f.round
+    );
+}
+
+/// What the machine is blocked on when [`RoundStateMachine::drive`]
+/// returns `Waiting`: the driver should feed it frames (via
+/// [`accept_frame`](RoundStateMachine::accept_frame)) until the key
+/// changes or the deadline the driver keeps for this key expires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum WaitKey {
+    /// Waiting for round-`round` data frames from peers.
+    Barrier { round: u64 },
+    /// Waiting for this worker's (re)join bootstrap frame.
+    Bootstrap { round: u64 },
+}
+
+/// Result of one [`RoundStateMachine::drive`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum MachineStatus {
+    /// Blocked until more frames arrive; the key identifies the wait so
+    /// drivers can keep one deadline per barrier (never per frame).
+    Waiting(WaitKey),
+    /// Every round is complete; call
+    /// [`into_result`](RoundStateMachine::into_result).
+    Done,
+}
+
+/// Where the machine resumes on the next `drive` call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Top of the round loop: membership, crash, rewire checks.
+    RoundEntry,
+    /// Epoch-opening bootstrap handshake in progress.
+    AwaitBootstrap,
+    /// Frame sent, gradient done; collecting the round barrier.
+    AwaitBarrier,
+    /// All rounds complete (or this worker never activates).
+    Finished,
+}
+
+/// Round state carried across the barrier wait: everything `finish_round`
+/// needs that was computed before the barrier. (`StepCtx` is reconstructed
+/// at mix time from `seed`/`rho`/`g_inf`, all of which are unchanged
+/// between the gradient and the mix.)
+struct PendingRound {
+    loss: f64,
+    grad_wall: f64,
+    frame: Frame,
+    send_compute: f64,
+}
+
+/// One worker's whole life as a resumable state machine: send (pipelined)
+/// → gradient → frame barrier → recv, for every round it is a member of,
+/// with crash/restore and join/leave handling when an elastic plan is
+/// active. Expected runtime failures (broadcast errors) come back as typed
+/// [`WorkerFailure`]s — the *driver* owns deadlines and the abort latch —
+/// while protocol violations (corrupt frames, foreign checkpoints) stay
+/// panics: a corrupt cluster must die loudly.
+pub(crate) struct RoundStateMachine<'a> {
+    i: usize,
+    d: usize,
+    seed: u64,
+    engine: Box<dyn SyncAlgorithm>,
+    objective: Box<dyn Objective>,
+    spec: NodeSpec<'a>,
+    phase: Phase,
+    /// Next unprocessed entry of the current epoch's join list.
+    join_ix: usize,
+    x: Vec<f32>,
+    grad: Vec<f32>,
+    /// Round-local buffers come out of a per-node arena (§Perf): after the
+    /// warm-up rounds every checkout is recycled capacity, so a
+    /// steady-state round allocates nothing (tests/alloc_discipline.rs).
+    arena: crate::mem::ScratchArena,
+    payload: Vec<u8>,
+    /// Data frames from workers running ahead of us. A peer can run at
+    /// most one round ahead (it needs our round-k frame to pass its own
+    /// round-k barrier), so this stays tiny in steady state; crash replay
+    /// preloads the whole frame log into it.
+    parked: Vec<Frame>,
+    /// Bootstrap frames waiting for their join round, keyed by round.
+    boot_pending: BTreeMap<u64, Frame>,
+    /// This round's barrier frames, reused across rounds (payload buffers
+    /// are recycled into the transport's pool after the recv half).
+    got: Vec<Frame>,
+    /// Peer list of the current epoch (recomputed only at epoch
+    /// boundaries, not per round).
+    peers: Vec<usize>,
+    trace: NodeTrace,
+    lr: f32,
+    g_inf: f64,
+    /// Next unconsumed entry of `spec.crashes`.
+    crash_ix: usize,
+    framelog: Option<FrameLog>,
+    /// Rounds < live_from are replays after a crash: sends are suppressed
+    /// (their frames already crossed the wire) and the barrier is
+    /// satisfied purely from the logged frames.
+    live_from: u64,
+    cur_epoch: usize,
+    round: u64,
+    start_round: u64,
+    pending: Option<PendingRound>,
+}
+
+impl<'a> RoundStateMachine<'a> {
+    pub(crate) fn new(
+        i: usize,
+        engine: Box<dyn SyncAlgorithm>,
+        objective: Box<dyn Objective>,
+        spec: NodeSpec<'a>,
+    ) -> Self {
+        let d = objective.dim();
+        let steps = spec.cfg.steps;
+        let seed = spec.cfg.seed;
+        let x = objective.init();
+        let (phase, start_round, trace) =
+            match next_active_round(spec.epochs, i, 0, steps) {
+                // Provisioned slot that never activates: idle for the run.
+                None => (Phase::Finished, steps, NodeTrace::starting_at(steps)),
+                Some(s) => {
+                    let mut t = NodeTrace::starting_at(s);
+                    t.reserve((steps - s) as usize);
+                    (Phase::RoundEntry, s, t)
+                }
+            };
+        // The receive-side WAL only exists to serve this worker's own
+        // crash replays; workers with no scheduled crash skip the
+        // per-frame disk write entirely.
+        let framelog = if spec.crashes.is_empty() || phase == Phase::Finished {
+            None
+        } else {
+            spec.ckpt_dir
+                .as_ref()
+                .map(|dir| FrameLog::create(dir, i).expect("create frame log"))
+        };
+        let lr = lr_at(&spec.cfg, start_round);
+        let mut arena = crate::mem::ScratchArena::new();
+        let payload = arena.take_bytes();
+        RoundStateMachine {
+            i,
+            d,
+            seed,
+            engine,
+            objective,
+            spec,
+            phase,
+            join_ix: 0,
+            x,
+            grad: vec![0.0f32; d],
+            arena,
+            payload,
+            parked: Vec::new(),
+            boot_pending: BTreeMap::new(),
+            got: Vec::new(),
+            peers: Vec::new(),
+            trace,
+            lr,
+            g_inf: 0.0,
+            crash_ix: 0,
+            framelog,
+            live_from: start_round,
+            cur_epoch: usize::MAX,
+            round: start_round,
+            start_round,
+            pending: None,
+        }
+    }
+
+    pub(crate) fn worker(&self) -> usize {
+        self.i
+    }
+
+    pub(crate) fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// The epoch covering the machine's current round. `spec.epochs` is a
+    /// borrowed slice, so the returned reference is independent of `self`.
+    fn cur_ep(&self) -> &'a Epoch {
+        let epochs = self.spec.epochs;
+        &epochs[epoch_index(epochs, self.round)]
+    }
+
+    fn failure(&self, reason: String) -> WorkerFailure {
+        WorkerFailure::new(self.i, self.round, reason)
+    }
+
+    /// Advance until the machine either completes every round or blocks
+    /// on inbound frames. Drivers loop: `drive` → on `Waiting`, deliver
+    /// frames through [`accept_frame`] (enforcing their own deadline per
+    /// [`WaitKey`]) → `drive` again.
+    pub(crate) fn drive(
+        &mut self,
+        transport: &mut dyn Transport,
+    ) -> Result<MachineStatus, WorkerFailure> {
+        loop {
+            match self.phase {
+                Phase::RoundEntry => {
+                    let steps = self.spec.cfg.steps;
+                    if self.round >= steps {
+                        self.phase = Phase::Finished;
+                        continue;
+                    }
+                    let epochs = self.spec.epochs;
+                    let ep_idx = epoch_index(epochs, self.round);
+                    let ep = &epochs[ep_idx];
+                    if !ep.active[self.i] {
+                        // We left the cohort; either rejoin at a later
+                        // epoch or retire.
+                        match next_active_round(epochs, self.i, self.round, steps) {
+                            Some(r) => {
+                                for k in self.round..r {
+                                    if self.spec.cfg.decay_at.contains(&k) {
+                                        self.lr *= self.spec.cfg.decay_factor;
+                                    }
+                                }
+                                self.round = r;
+                                continue;
+                            }
+                            None => {
+                                self.phase = Phase::Finished;
+                                continue;
+                            }
+                        }
+                    }
+
+                    // Scheduled crash: lose everything, restore, replay.
+                    if self.round >= self.live_from
+                        && self.spec.crashes.get(self.crash_ix) == Some(&self.round)
+                    {
+                        self.crash_ix += 1;
+                        self.crash_restore();
+                        continue;
+                    }
+
+                    // Reconfiguration barrier: wire the engine for this
+                    // epoch.
+                    if ep_idx != self.cur_epoch {
+                        if epochs.len() > 1 {
+                            assert!(
+                                self.engine.swap_matrix(&ep.matrix),
+                                "engine '{}' refused a matrix swap (validated at construction)",
+                                self.engine.name()
+                            );
+                        }
+                        // Peer set is a pure function of the epoch:
+                        // compute it once here instead of cloning the
+                        // adjacency row every round.
+                        self.peers = peers_of(ep, self.i, self.spec.scope);
+                        self.cur_epoch = ep_idx;
+                    }
+                    self.join_ix = 0;
+                    self.phase = Phase::AwaitBootstrap;
+                }
+                Phase::AwaitBootstrap => {
+                    if self.advance_joins(transport)? {
+                        return Ok(MachineStatus::Waiting(WaitKey::Bootstrap {
+                            round: self.round,
+                        }));
+                    }
+                    self.begin_round_work(transport)?;
+                    self.phase = Phase::AwaitBarrier;
+                }
+                Phase::AwaitBarrier => {
+                    if self.got.len() < self.peers.len() {
+                        return Ok(MachineStatus::Waiting(WaitKey::Barrier {
+                            round: self.round,
+                        }));
+                    }
+                    self.finish_round(transport);
+                    self.round += 1;
+                    self.phase = Phase::RoundEntry;
+                }
+                Phase::Finished => return Ok(MachineStatus::Done),
+            }
+        }
+    }
+
+    /// The epoch-opening bootstrap handshake (duty sends and join
+    /// adoption). Returns `true` when the machine must wait for its own
+    /// bootstrap frame before the round can start; the handshake resumes
+    /// at the same join entry once the frame lands in `boot_pending`
+    /// (joiner ≠ bootstrapper per plan validation, so no duty send can
+    /// re-run).
+    fn advance_joins(
+        &mut self,
+        transport: &mut dyn Transport,
+    ) -> Result<bool, WorkerFailure> {
+        let ep = self.cur_ep();
+        if self.round != ep.start {
+            return Ok(false);
+        }
+        while self.join_ix < ep.joins.len() {
+            let (joiner, boot) = ep.joins[self.join_ix];
+            if boot == self.i {
+                // Our duty: ship the joiner one full-precision model so
+                // its decode reference is inside the cohort's θ ball.
+                // (During replay the pre-crash incarnation already sent
+                // it; count it once, transmit nothing.)
+                let mut model_bytes = Vec::with_capacity(4 * self.d);
+                crate::algorithms::common::put_f32s(&mut model_bytes, &self.x);
+                let bf = Frame {
+                    round: self.round,
+                    sender: self.i as u16,
+                    algo: self.spec.algo_id,
+                    bits: 32,
+                    kind: FrameKind::Bootstrap,
+                    theta: 0.0,
+                    payload: model_bytes,
+                };
+                if self.round >= self.live_from {
+                    transport.send(joiner, &bf).map_err(|e| {
+                        self.failure(format!("bootstrap send failed: {e}"))
+                    })?;
+                }
+                self.trace.frames_sent += 1;
+                self.trace.bytes_sent += bf.encoded_len() as u64;
+            }
+            if joiner == self.i {
+                // The frame may already be parked (it overtook us while
+                // we were in an earlier barrier, or came from the crash
+                // replay log); otherwise block for it through the driver.
+                let bf = if let Some(f) = self.boot_pending.remove(&self.round) {
+                    f
+                } else if self.round < self.live_from {
+                    panic!(
+                        "worker {}: replay log is missing the round-{} \
+                         bootstrap frame from worker {}",
+                        self.i, self.round, boot
+                    )
+                } else {
+                    return Ok(true);
+                };
+                assert_eq!(
+                    bf.sender as usize, boot,
+                    "worker {}: bootstrap from unexpected sender",
+                    self.i
+                );
+                assert_eq!(
+                    bf.bits, 32,
+                    "worker {}: bootstrap must be full precision",
+                    self.i
+                );
+                assert_eq!(bf.payload.len(), 4 * self.d, "bootstrap payload size");
+                if self.spec.skip_bootstrap {
+                    // TESTING ONLY: consume the frame but keep the stale
+                    // model — the θ-proximity violation the negative test
+                    // demonstrates.
+                } else {
+                    crate::algorithms::common::read_f32s_into(&bf.payload, &mut self.x);
+                }
+            }
+            self.join_ix += 1;
+        }
+        Ok(false)
+    }
+
+    /// Everything between the handshake and the barrier: decay, the
+    /// (possibly pipelined) send half, the local gradient, and barrier
+    /// setup from already-parked frames.
+    fn begin_round_work(
+        &mut self,
+        transport: &mut dyn Transport,
+    ) -> Result<(), WorkerFailure> {
+        // lint: allow(wall_clock) — the gradient timer feeds per-node perf
+        // accounting only; model bytes are unaffected.
+        if self.spec.cfg.decay_at.contains(&self.round) {
+            self.lr *= self.spec.cfg.decay_factor;
+        }
+
+        // Pipelined send half (PreGradient engines): engines whose payload
+        // does not read this round's gradient ship their frame *before*
+        // the gradient step, so the frame crosses the wire while
+        // `loss_grad` runs. The empty gradient slice is a tripwire — a
+        // PreGradient engine that reads it dies loudly instead of silently
+        // consuming stale data. `ctx.g_inf` is the pre-round running max
+        // there, which is safe because the only g_inf consumer is the
+        // Theorem-2 θ policy this runtime refuses at construction.
+        let pre_send =
+            self.spec.pipeline && self.engine.send_phase() == SendPhase::PreGradient;
+        let mut sent: Option<(Frame, f64)> = None;
+        if pre_send {
+            sent = Some(self.send_half(transport, true)?);
+        }
+
+        // Local gradient. Node-local running max — Trainer's global
+        // version only feeds the Theorem-2 θ policy, which this runtime
+        // refuses.
+        let t0 = Instant::now();
+        let loss = self
+            .objective
+            .loss_grad(self.i, self.round, &self.x, &mut self.grad);
+        self.g_inf = self.g_inf.max(crate::linalg::norm_inf(&self.grad) as f64);
+        let grad_wall = t0.elapsed().as_secs_f64();
+
+        // Send half (PostGradient engines, or pipelining off).
+        let (frame, send_compute) = match sent.take() {
+            Some(s) => s,
+            None => self.send_half(transport, false)?,
+        };
+        self.pending = Some(PendingRound { loss, grad_wall, frame, send_compute });
+
+        // Round barrier from the frames themselves: seed it with frames
+        // that already overtook us.
+        self.got.clear();
+        for k in 0..self.peers.len() {
+            let p = self.peers[k];
+            if let Some(f) = take_parked(&mut self.parked, self.round, p) {
+                self.got.push(f);
+            }
+        }
+        if self.round < self.live_from && self.got.len() < self.peers.len() {
+            let missing = missing_pairs(self.round, &self.peers, &self.got);
+            panic!(
+                "worker {}: replay log is missing frames {missing:?} for round {} \
+                 (log truncated outside a checkpoint?)",
+                self.i, self.round
+            );
+        }
+        Ok(())
+    }
+
+    /// The "send half" of a round: encode this worker's frame and
+    /// broadcast it to every peer. Shared between the pipelined
+    /// pre-gradient path (where the engine sees the empty tripwire slice)
+    /// and the post-gradient path. Returns the frame (its payload buffer
+    /// is reclaimed after the mix) and the encode wall time.
+    fn send_half(
+        &mut self,
+        transport: &mut dyn Transport,
+        pre: bool,
+    ) -> Result<(Frame, f64), WorkerFailure> {
+        // lint: allow(wall_clock) — the encode timer feeds per-node perf
+        // accounting only; frame contents are unaffected.
+        let t1 = Instant::now();
+        let mut payload = std::mem::take(&mut self.payload);
+        payload.clear();
+        let ctx = StepCtx { seed: self.seed, rho: self.cur_ep().rho, g_inf: self.g_inf };
+        let grad: &[f32] = if pre { &[] } else { &self.grad };
+        self.engine
+            .node_send(self.i, &self.x, grad, self.lr, self.round, &ctx, &mut payload);
+        let frame = Frame {
+            round: self.round,
+            sender: self.i as u16,
+            algo: self.spec.algo_id,
+            bits: self.spec.wire_bits,
+            kind: FrameKind::Data,
+            theta: self.engine.last_theta().unwrap_or(0.0) as f32,
+            payload,
+        };
+        let send_compute = t1.elapsed().as_secs_f64();
+        if self.round >= self.live_from {
+            // One broadcast call: the frame is serialized + checksummed
+            // once and the wire bytes are reused for every peer.
+            transport.broadcast(&self.peers, &frame).map_err(|e| {
+                self.failure(format!("broadcast failed: {e}"))
+            })?;
+        }
+        // Replayed rounds count their original (pre-crash) send exactly
+        // once: the counters that recorded it died with the old
+        // incarnation.
+        self.trace.frames_sent += self.peers.len() as u64;
+        self.trace.bytes_sent += self.peers.len() as u64 * frame.encoded_len() as u64;
+        Ok((frame, send_compute))
+    }
+
+    /// The recv half + checkpoint: runs once the barrier holds a round
+    /// frame from every peer.
+    fn finish_round(&mut self, transport: &mut dyn Transport) {
+        // lint: allow(wall_clock) — the mix timer feeds per-node perf
+        // accounting only; model bytes are unaffected.
+        let PendingRound { loss, grad_wall, frame, send_compute } = self
+            .pending
+            .take()
+            .expect("finish_round without a pending round");
+        let t2 = Instant::now();
+        // Ascending-sender order is the engines' determinism contract;
+        // sort_unstable is in-place, and the borrowed inbox makes this the
+        // allocation-free path (Inbox::from_frames).
+        self.got.sort_unstable_by_key(|f| f.sender);
+        let ctx = StepCtx { seed: self.seed, rho: self.cur_ep().rho, g_inf: self.g_inf };
+        let stats = {
+            let inbox = Inbox::from_frames(&self.got);
+            self.engine.node_recv(
+                self.i, &mut self.x, &self.grad, self.lr, self.round, &ctx, &inbox,
+            )
+        };
+        // Consumed payload buffers go back to the transport's wire pool.
+        for f in self.got.drain(..) {
+            transport.recycle(f.payload);
+        }
+        self.trace.push_round(
+            self.round,
+            loss,
+            self.engine.last_theta(),
+            stats,
+            grad_wall,
+            send_compute + t2.elapsed().as_secs_f64(),
+        );
+        if self.round % self.spec.cfg.eval_every == 0
+            || self.round + 1 == self.spec.cfg.steps
+        {
+            self.trace.evals.push((self.round, self.x.clone()));
+        }
+        self.payload = frame.payload; // reuse the allocation next round
+
+        // Checkpoint at the round boundary.
+        if self.round >= self.live_from
+            && self.spec.ckpt_every > 0
+            && (self.round + 1) % self.spec.ckpt_every == 0
+        {
+            if let Some(dir) = self.spec.ckpt_dir.as_ref() {
+                let mut engine_blob = self.arena.take_bytes();
+                self.engine.snapshot(&mut engine_blob);
+                let snap = Snapshot {
+                    worker: self.i as u16,
+                    algo: self.spec.algo_id,
+                    round: self.round,
+                    lr: self.lr,
+                    g_inf: self.g_inf,
+                    model: self.x.clone(),
+                    engine: engine_blob,
+                    trace: self.trace.clone(),
+                };
+                write_checkpoint(dir, &snap).expect("write checkpoint");
+                self.arena.give_bytes(snap.engine);
+                if let Some(log) = self.framelog.as_mut() {
+                    // The log's new epoch is "everything since this
+                    // snapshot": truncate, then re-log frames that were
+                    // received but not yet consumed (data frames parked
+                    // for future rounds and any early-delivered
+                    // bootstrap). Replay consumes them by (round, sender)
+                    // lookup, so their order in the log does not matter.
+                    log.truncate().expect("truncate frame log");
+                    for f in &self.parked {
+                        log.append(f).expect("re-log pending frame");
+                    }
+                    for f in self.boot_pending.values() {
+                        log.append(f).expect("re-log pending bootstrap");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scheduled crash: lose everything, restore the last [`Snapshot`],
+    /// replay the rounds in between against the [`FrameLog`].
+    fn crash_restore(&mut self) {
+        let dir = self
+            .spec
+            .ckpt_dir
+            .as_ref()
+            .expect("crash plans are validated to carry a ckpt_dir");
+        let snap = load_checkpoint(dir, self.i)
+            .unwrap_or_else(|e| panic!("worker {}: corrupt checkpoint: {e}", self.i));
+        self.parked.clear();
+        self.boot_pending.clear();
+        for f in FrameLog::read_all(dir, self.i)
+            .unwrap_or_else(|e| panic!("worker {}: corrupt frame log: {e}", self.i))
+        {
+            match f.kind {
+                FrameKind::Data => {
+                    validate_data_frame(self.i, &f, &self.spec);
+                    self.parked.push(f);
+                }
+                FrameKind::Bootstrap => {
+                    self.boot_pending.insert(f.round, f);
+                }
+            }
+        }
+        self.engine = self
+            .spec
+            .cfg
+            .algorithm
+            .make_sync(&self.spec.epochs[0].matrix, self.d);
+        self.engine.set_threads(1);
+        match snap {
+            Some(s) => {
+                assert_eq!(
+                    s.algo, self.spec.algo_id,
+                    "worker {}: checkpoint belongs to another algorithm",
+                    self.i
+                );
+                assert_eq!(
+                    s.worker as usize, self.i,
+                    "worker {}: foreign checkpoint",
+                    self.i
+                );
+                assert_eq!(
+                    s.model.len(),
+                    self.d,
+                    "worker {}: checkpoint dimension",
+                    self.i
+                );
+                self.engine
+                    .restore(&s.engine)
+                    .unwrap_or_else(|e| panic!("worker {}: engine restore: {e}", self.i));
+                self.x = s.model;
+                self.lr = s.lr;
+                self.g_inf = s.g_inf;
+                self.live_from = self.round;
+                self.round = s.round + 1;
+                self.trace = s.trace;
+            }
+            None => {
+                // Genesis recovery: no checkpoint yet — replay the whole
+                // history from the (never-truncated) frame log.
+                self.x = self.objective.init();
+                self.lr = lr_at(&self.spec.cfg, self.start_round);
+                self.g_inf = 0.0;
+                self.live_from = self.round;
+                self.round = self.start_round;
+                self.trace = NodeTrace::starting_at(self.start_round);
+            }
+        }
+        self.cur_epoch = usize::MAX; // force re-wiring on re-entry
+    }
+
+    /// Hand the machine one inbound frame. Where it lands depends on what
+    /// the machine is waiting for — the same routing the old inline recv
+    /// loops performed — and every frame is WAL-logged first when this
+    /// worker keeps a frame log.
+    pub(crate) fn accept_frame(&mut self, f: Frame) {
+        if let Some(log) = self.framelog.as_mut() {
+            log.append(&f).expect("frame log append");
+        }
+        match self.phase {
+            Phase::AwaitBarrier => {
+                if f.kind == FrameKind::Bootstrap {
+                    // A bootstrapper past an upcoming reconfiguration
+                    // barrier delivered our (re)join bootstrap early: park
+                    // it for the join round.
+                    self.boot_pending.insert(f.round, f);
+                    return;
+                }
+                validate_data_frame(self.i, &f, &self.spec);
+                let from = f.sender as usize;
+                assert!(
+                    f.round >= self.round,
+                    "worker {}: stale round-{} frame from {from} at round {}",
+                    self.i,
+                    f.round,
+                    self.round
+                );
+                if f.round == self.round {
+                    self.got.push(f);
+                } else {
+                    self.parked.push(f);
+                }
+            }
+            Phase::AwaitBootstrap | Phase::RoundEntry => match f.kind {
+                FrameKind::Bootstrap => {
+                    self.boot_pending.insert(f.round, f);
+                }
+                FrameKind::Data => {
+                    validate_data_frame(self.i, &f, &self.spec);
+                    let from = f.sender as usize;
+                    assert!(
+                        f.round >= self.round,
+                        "worker {}: pre-join round-{} frame from {from}",
+                        self.i,
+                        f.round
+                    );
+                    self.parked.push(f);
+                }
+            },
+            Phase::Finished => {
+                // Late traffic after this worker retired: the run is over
+                // for it, so the frame is simply dropped.
+                drop(f);
+            }
+        }
+    }
+
+    /// The typed failure for a driver whose deadline for the current
+    /// [`WaitKey`] expired — same strings the threaded runtime always
+    /// produced (pinned by `tests/barrier_deadline.rs`).
+    pub(crate) fn timeout_failure(&self) -> WorkerFailure {
+        match self.phase {
+            Phase::AwaitBootstrap => self.failure(format!(
+                "timed out waiting for the round-{} bootstrap \
+                 frame: exceeded the configured recv_timeout of {:?}",
+                self.round, self.spec.recv_timeout,
+            )),
+            _ => {
+                let missing = missing_pairs(self.round, &self.peers, &self.got);
+                self.failure(format!(
+                    "barrier timed out: exceeded the configured \
+                     recv_timeout of {:?} with {} of {} peer frames \
+                     held; still waiting on (round, sender) pairs \
+                     {missing:?}",
+                    self.spec.recv_timeout,
+                    self.got.len(),
+                    self.peers.len(),
+                ))
+            }
+        }
+    }
+
+    /// The typed failure for a transport error surfaced while waiting.
+    pub(crate) fn recv_failure(&self, e: &TransportError) -> WorkerFailure {
+        match self.phase {
+            Phase::AwaitBootstrap => self.failure(format!("bootstrap recv failed: {e}")),
+            _ => self.failure(format!("barrier recv failed: {e}")),
+        }
+    }
+
+    pub(crate) fn into_result(self) -> NodeResult {
+        NodeResult { worker: self.i, final_x: self.x, trace: self.trace }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Algorithm;
+    use crate::elastic::MembershipPlan;
+    use crate::topology::Topology;
+    use crate::transport::{algo_wire_id, MemTransport};
+
+    #[test]
+    fn sibling_abort_names_the_origin_and_wait_unit() {
+        let latch = AbortLatch::default();
+        latch.trip(WorkerFailure::new(3, 7, "boom".into()));
+        let s = latch.sibling_abort(1, 7);
+        assert_eq!(
+            s.reason,
+            "aborted within one recv tick: sibling worker 3 failed round 7"
+        );
+        let r = latch.sibling_abort_via(1, 7, "poll iteration");
+        assert_eq!(
+            r.reason,
+            "aborted within one poll iteration: sibling worker 3 failed round 7"
+        );
+    }
+
+    #[test]
+    fn trip_wakes_registered_wakers() {
+        let latch = AbortLatch::default();
+        let w = WakeHandle::new();
+        latch.register_waker(&w);
+        latch.trip(WorkerFailure::new(0, 0, "x".into()));
+        // A tripped latch must have fired the token: park returns at once.
+        let t0 = Instant::now();
+        w.park_timeout(Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    /// Two machines, one thread, a real Mem transport: the state machine
+    /// alone (no driver) completes a run, and both workers agree on the
+    /// round count. This is the smallest proof that `drive`/`accept_frame`
+    /// carry the whole protocol.
+    #[test]
+    fn two_machines_interleave_to_completion_on_one_thread() {
+        let cfg = TrainConfig {
+            workers: 2,
+            steps: 4,
+            eval_every: 2,
+            algorithm: Algorithm::DPsgd,
+            ..TrainConfig::default()
+        };
+        let topo = Topology::Ring(2);
+        let epochs = MembershipPlan::default().epochs(&topo, cfg.steps).unwrap();
+        let objective =
+            || Box::new(crate::objectives::Quadratic::new(6, 1.0, 0.1, 2, 3));
+        let d = objective().dim();
+        let mut transports = MemTransport::cluster(2);
+        let mut machines: Vec<RoundStateMachine<'_>> = (0..2)
+            .map(|i| {
+                let mut engine = cfg.algorithm.make_sync(&epochs[0].matrix, d);
+                engine.set_threads(1);
+                let spec = NodeSpec {
+                    cfg: cfg.clone(),
+                    recv_timeout: Duration::from_secs(5),
+                    algo_id: algo_wire_id(cfg.algorithm.name()),
+                    wire_bits: 32,
+                    scope: engine.comm_scope(),
+                    epochs: &epochs,
+                    crashes: Vec::new(),
+                    ckpt_every: 0,
+                    ckpt_dir: None,
+                    skip_bootstrap: false,
+                    pipeline: true,
+                };
+                RoundStateMachine::new(i, engine, objective(), spec)
+            })
+            .collect();
+
+        let mut done = [false, false];
+        let mut spins = 0usize;
+        while !done.iter().all(|&b| b) {
+            spins += 1;
+            assert!(spins < 10_000, "machines wedged");
+            for i in 0..2 {
+                if done[i] {
+                    continue;
+                }
+                let t: &mut dyn Transport = &mut transports[i];
+                match machines[i].drive(t).unwrap() {
+                    MachineStatus::Done => done[i] = true,
+                    MachineStatus::Waiting(_) => {
+                        if let Ok(f) = t.recv(Duration::from_millis(1)) {
+                            machines[i].accept_frame(f);
+                        }
+                    }
+                }
+            }
+        }
+        for (i, m) in machines.into_iter().enumerate() {
+            let r = m.into_result();
+            assert_eq!(r.worker, i);
+            assert_eq!(r.final_x.len(), d);
+            assert!(r.trace.loss_at(3).is_some());
+        }
+    }
+}

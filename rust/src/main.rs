@@ -15,10 +15,14 @@
 //! `config` (path to a key=value file), `csv` (output path).
 //!
 //! Cluster runtime keys (`train runtime=cluster` — one OS thread per
-//! worker exchanging framed messages, bitwise-identical to `runtime=sync`):
-//! `transport` (mem = in-process channels | tcp = localhost sockets),
-//! `port_base` (tcp only; 0 = OS ephemeral ports, N = worker i listens on
-//! N+i), `recv_timeout_ms` (round-barrier watchdog, default 30000).
+//! worker exchanging framed messages, bitwise-identical to `runtime=sync`;
+//! or `train runtime=reactor` — the same workers multiplexed as round
+//! state machines over a readiness loop on a small driver-thread pool,
+//! still bitwise-identical): `transport` (mem = in-process channels |
+//! tcp = localhost sockets), `port_base` (tcp only; 0 = OS ephemeral
+//! ports, N = worker i listens on N+i), `recv_timeout_ms` (round-barrier
+//! watchdog, default 30000), `reactor_threads` (reactor only; driver
+//! threads, 0 = one per core).
 //!
 //! Elastic membership keys (cluster only — see rust/DESIGN.md §Elasticity):
 //! `churn=kind@round:worker,...` with kind ∈ {join, leave, crash} (e.g.
@@ -62,6 +66,7 @@ fn usage() -> ! {
          moniqua train runtime=des drop_prob=0.1 straggler=0.5 link_matrix=lognormal:0.4\n\
          moniqua train runtime=cluster transport=tcp workers=4 algorithm=moniqua\n\
          moniqua train runtime=cluster churn=crash@12:2 ckpt_every=5 ckpt_dir=ckpts\n\
+         moniqua train runtime=reactor reactor_threads=4 workers=256 transport=mem\n\
          moniqua async algorithm=moniqua drop_prob=0.05 topo_schedule=ring,complete@2.0\n\
          moniqua compare algorithms=dpsgd,moniqua,choco network=fig1c"
     );
@@ -199,7 +204,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
             );
             report
         }
-        "cluster" => {
+        runtime @ ("cluster" | "reactor") => {
             let cluster_cfg = cfg.cluster()?;
             if let Some(elastic) = &cluster_cfg.elastic {
                 println!(
@@ -214,8 +219,9 @@ fn cmd_train(cfg: &Config) -> Result<()> {
             }
             let mut trainer = ClusterTrainer::new(tc, topo, objective, cluster_cfg)?;
             println!(
-                "rho = {:.4} (runtime=cluster, transport={})",
+                "rho = {:.4} (runtime={}, transport={})",
                 trainer.rho(),
+                runtime,
                 cfg.str_or("transport", "mem")
             );
             let report = trainer.run()?;
@@ -231,7 +237,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
             println!("rho = {:.4}", trainer.rho());
             trainer.run()
         }
-        other => anyhow::bail!("unknown runtime '{other}' (sync|des|cluster)"),
+        other => anyhow::bail!("unknown runtime '{other}' (sync|des|cluster|reactor)"),
     };
     for row in &report.trace {
         println!(

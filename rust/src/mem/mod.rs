@@ -48,18 +48,36 @@
 //! which is why the cluster/golden equivalence suites run unchanged on top
 //! of the pools.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Upper bound on pooled buffers kept per pool — a backstop so a transient
-/// burst (e.g. a crash replay loading a long frame log) cannot pin its
-/// high-water mark in memory forever.
+/// Default upper bound on pooled buffers kept per pool — a backstop so a
+/// transient burst (e.g. a crash replay loading a long frame log) cannot
+/// pin its high-water mark in memory forever. [`FramePool::prewarm`]
+/// raises the bound to the caller's declared working set: a reactor run
+/// multiplexing hundreds of workers over one shared pool legitimately
+/// keeps more than 256 buffers in steady circulation, and silently capping
+/// the prewarm would push the overflow back onto the allocator every
+/// round.
 const MAX_POOLED: usize = 256;
 
 /// Thread-shared pool of byte buffers (see module docs). Clones share the
 /// same pool.
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct FramePool {
     bufs: Arc<Mutex<Vec<Vec<u8>>>>,
+    /// Retention bound: `give` drops buffers beyond it. Starts at
+    /// [`MAX_POOLED`]; `prewarm` raises it (never lowers).
+    limit: Arc<AtomicUsize>,
+}
+
+impl Default for FramePool {
+    fn default() -> Self {
+        FramePool {
+            bufs: Arc::new(Mutex::new(Vec::new())),
+            limit: Arc::new(AtomicUsize::new(MAX_POOLED)),
+        }
+    }
 }
 
 impl FramePool {
@@ -89,8 +107,9 @@ impl FramePool {
     // lint: hot-path
     pub fn give(&self, mut buf: Vec<u8>) {
         buf.clear();
+        let limit = self.limit.load(Ordering::Relaxed);
         let mut g = self.locked();
-        if g.len() < MAX_POOLED {
+        if g.len() < limit {
             g.push(buf);
         }
     }
@@ -100,13 +119,18 @@ impl FramePool {
         self.locked().len()
     }
 
-    /// Seed the pool with `count` buffers of `capacity` bytes each, capped
-    /// at [`MAX_POOLED`]. Callers that know their working set (e.g. two
-    /// rounds of frames in flight per peer under the pipelined scheduler)
-    /// can move even the warm-up allocations out of the round loop.
+    /// Seed the pool with `count` buffers of `capacity` bytes each, and
+    /// raise the retention bound to `count` when it exceeds the
+    /// [`MAX_POOLED`] default — prewarming *declares* the working set, so
+    /// the pool must also be allowed to hold it (a reactor cluster's
+    /// steady circulation can legitimately exceed the backstop). Callers
+    /// that know their working set (e.g. two rounds of frames in flight
+    /// per directed edge under the pipelined scheduler) can move even the
+    /// warm-up allocations out of the round loop.
     pub fn prewarm(&self, count: usize, capacity: usize) {
+        self.limit.fetch_max(count, Ordering::Relaxed);
         let mut g = self.locked();
-        while g.len() < count.min(MAX_POOLED) {
+        while g.len() < count {
             g.push(Vec::with_capacity(capacity));
         }
     }
@@ -184,12 +208,17 @@ mod tests {
             assert!(pool.take().capacity() >= 1024, "prewarmed capacity");
         }
         assert_eq!(pool.pooled(), 0);
-        // Idempotent up to `count`, and never past the backstop.
+        // Idempotent up to `count`.
         pool.prewarm(4, 64);
         pool.prewarm(4, 64);
         assert_eq!(pool.pooled(), 4);
+        // A prewarm past the default backstop raises the retention bound
+        // to the declared working set instead of silently capping it.
         pool.prewarm(MAX_POOLED + 100, 1);
-        assert_eq!(pool.pooled(), MAX_POOLED);
+        assert_eq!(pool.pooled(), MAX_POOLED + 100);
+        let b = pool.take();
+        pool.give(b);
+        assert_eq!(pool.pooled(), MAX_POOLED + 100, "raised bound retains");
     }
 
     #[test]

@@ -230,13 +230,32 @@ impl Frame {
 
     /// As [`Self::decode`] but consuming the wire buffer: the payload is
     /// the buffer itself with the header drained off — no copy. This is
-    /// the transports' receive path (they already own the bytes).
+    /// the transports' receive path (they already own the bytes). On
+    /// error the buffer is dropped; callers holding *pooled* buffers
+    /// should use [`Self::decode_reclaim`] instead.
     // lint: hot-path
-    pub fn decode_owned(mut bytes: Vec<u8>) -> Result<Frame, FrameError> {
-        let mut f = Self::validate(&bytes)?;
-        bytes.drain(..HEADER_LEN);
-        f.payload = bytes;
-        Ok(f)
+    pub fn decode_owned(bytes: Vec<u8>) -> Result<Frame, FrameError> {
+        Self::decode_reclaim(bytes).map_err(|(e, _)| e)
+    }
+
+    /// As [`Self::decode_owned`], but on failure the wire buffer rides
+    /// back alongside the error so the caller can return it to its
+    /// [`FramePool`](crate::mem::FramePool). Without this, every corrupt
+    /// frame silently shrank the pool by one buffer (the decode error
+    /// dropped the checked-out `Vec`), so sustained frame-fuzz/Byzantine
+    /// traffic degraded the zero-allocation steady state into
+    /// allocate-per-frame — `tests/alloc_discipline.rs` pins the fixed
+    /// behavior with a corrupt-frame round.
+    // lint: hot-path
+    pub fn decode_reclaim(mut bytes: Vec<u8>) -> Result<Frame, (FrameError, Vec<u8>)> {
+        match Self::validate(&bytes) {
+            Ok(mut f) => {
+                bytes.drain(..HEADER_LEN);
+                f.payload = bytes;
+                Ok(f)
+            }
+            Err(e) => Err((e, bytes)),
+        }
     }
 
     /// Full header + checksum validation; returns the frame with an empty

@@ -19,7 +19,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::{Frame, ReorderBuffer, Transport, TransportError};
+use super::{saturating_deadline, Frame, ReorderBuffer, Transport, TransportError, WakeHandle};
 use crate::mem::FramePool;
 
 /// One endpoint's inbound queue: preallocated ring of wire-byte buffers
@@ -32,6 +32,11 @@ struct ByteQueue {
     q: Mutex<VecDeque<Vec<u8>>>,
     cv: Condvar,
     closed: AtomicBool,
+    /// Reactor wake token: when the owning endpoint is driven by a parked
+    /// readiness loop instead of a blocking `recv`, every push fires this
+    /// so the driver re-polls immediately (see
+    /// [`Transport::set_waker`]).
+    watcher: Mutex<Option<Arc<WakeHandle>>>,
 }
 
 impl ByteQueue {
@@ -40,6 +45,7 @@ impl ByteQueue {
             q: Mutex::new(VecDeque::with_capacity(cap)),
             cv: Condvar::new(),
             closed: AtomicBool::new(false),
+            watcher: Mutex::new(None),
         }
     }
 
@@ -61,6 +67,18 @@ impl ByteQueue {
     fn push(&self, bytes: Vec<u8>) {
         self.locked().push_back(bytes);
         self.cv.notify_one();
+        self.wake_watcher();
+    }
+
+    /// Fire the registered reactor wake token, if any.
+    fn wake_watcher(&self) {
+        let g = match self.watcher.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(w) = g.as_ref() {
+            w.wake();
+        }
     }
 
     fn try_pop(&self) -> Option<Vec<u8>> {
@@ -71,7 +89,7 @@ impl ByteQueue {
     fn pop_timeout(&self, timeout: Duration) -> Option<Vec<u8>> {
         // lint: allow(wall_clock) — condvar deadline arithmetic; purely
         // about *when* to give up waiting, never about frame contents.
-        let deadline = Instant::now() + timeout;
+        let deadline = saturating_deadline(Instant::now(), timeout);
         let mut g = self.locked();
         loop {
             if let Some(b) = g.pop_front() {
@@ -118,16 +136,21 @@ impl MemTransport {
             .collect()
     }
 
-    /// As [`Self::cluster`], with the shared pool prewarmed for
-    /// `frame_capacity`-byte wire buffers. The working set is two rounds of
-    /// frames in flight per directed peer pair — the pipelined scheduler's
-    /// bound (a peer runs at most one round ahead; see `mem` module docs) —
-    /// so even the warm-up rounds allocate nothing.
-    pub fn cluster_prewarmed(n: usize, frame_capacity: usize) -> Vec<MemTransport> {
+    /// As [`Self::cluster`], with the shared pool prewarmed with `buffers`
+    /// wire buffers of `frame_capacity` bytes each. The caller declares
+    /// its own working set — the coordinator sizes it topology-aware (two
+    /// rounds of frames in flight per directed *edge* of the densest
+    /// epoch, the pipelined scheduler's bound: a peer runs at most one
+    /// round ahead; see `mem` module docs) — so even the warm-up rounds
+    /// allocate nothing, and a prewarm past the pool's default backstop
+    /// raises its retention bound to match.
+    pub fn cluster_prewarmed(
+        n: usize,
+        buffers: usize,
+        frame_capacity: usize,
+    ) -> Vec<MemTransport> {
         let eps = Self::cluster(n);
-        eps[0]
-            .pool
-            .prewarm(2 * n * n.saturating_sub(1), frame_capacity);
+        eps[0].pool.prewarm(buffers, frame_capacity);
         eps
     }
 
@@ -140,9 +163,35 @@ impl MemTransport {
     /// buffer (non-blocking).
     fn drain(&mut self) -> Result<(), TransportError> {
         while let Some(bytes) = self.queues[self.id].try_pop() {
-            self.buf.push(Frame::decode_owned(bytes)?);
+            self.push_decoded(bytes)?;
         }
         Ok(())
+    }
+
+    /// Decode one wire buffer into the reorder buffer; on decode failure
+    /// the buffer is returned to the pool *before* the error propagates,
+    /// so corrupt traffic cannot shrink the pool (satellite bugfix —
+    /// `decode_owned(bytes)?` dropped the checked-out buffer).
+    fn push_decoded(&mut self, bytes: Vec<u8>) -> Result<(), TransportError> {
+        match Frame::decode_reclaim(bytes) {
+            Ok(f) => {
+                self.buf.push(f);
+                Ok(())
+            }
+            Err((e, junk)) => {
+                self.pool.give(junk);
+                Err(e.into())
+            }
+        }
+    }
+
+    /// Push raw wire bytes straight into `peer`'s inbound queue, bypassing
+    /// the frame encoder — the fault-injection hook the corrupt-frame
+    /// regression tests use (`tests/alloc_discipline.rs` and the unit
+    /// tests below).
+    pub fn inject_raw(&mut self, peer: usize, bytes: Vec<u8>) {
+        assert!(peer < self.queues.len(), "peer {peer} out of range");
+        self.queues[peer].push(bytes);
     }
 }
 
@@ -200,7 +249,7 @@ impl Transport for MemTransport {
     fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError> {
         // lint: allow(wall_clock) — the recv deadline is transport-local
         // timing; it gates *when* a frame is returned, never its bytes.
-        let deadline = Instant::now() + timeout;
+        let deadline = saturating_deadline(Instant::now(), timeout);
         loop {
             self.drain()?;
             if let Some(f) = self.buf.pop() {
@@ -211,7 +260,7 @@ impl Transport for MemTransport {
                 return Err(TransportError::Timeout);
             }
             match self.queues[self.id].pop_timeout(deadline - now) {
-                Some(bytes) => self.buf.push(Frame::decode_owned(bytes)?),
+                Some(bytes) => self.push_decoded(bytes)?,
                 None => return Err(TransportError::Timeout),
             }
         }
@@ -221,14 +270,24 @@ impl Transport for MemTransport {
     fn recycle(&mut self, payload: Vec<u8>) {
         self.pool.give(payload);
     }
+
+    fn set_waker(&mut self, waker: &Arc<WakeHandle>) {
+        let mut g = match self.queues[self.id].watcher.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *g = Some(Arc::clone(waker));
+    }
 }
 
 impl Drop for MemTransport {
     fn drop(&mut self) {
         // Senders to this endpoint fail fast from now on; anyone blocked
-        // in a wait sees the flag after the notify.
+        // in a wait sees the flag after the notify, and a parked reactor
+        // driver re-polls and observes the closure.
         self.queues[self.id].closed.store(true, Ordering::Release);
         self.queues[self.id].cv.notify_all();
+        self.queues[self.id].wake_watcher();
     }
 }
 
@@ -320,6 +379,60 @@ mod tests {
         // The surviving pair still works.
         eps[0].send(1, &frame(1, 0, vec![9])).unwrap();
         assert_eq!(eps[1].recv(Duration::from_secs(1)).unwrap().payload, vec![9]);
+    }
+
+    #[test]
+    fn recv_with_duration_max_does_not_overflow() {
+        // Regression: `Instant::now() + Duration::MAX` panicked, so any
+        // config with a huge recv_timeout_ms crashed the first barrier.
+        let mut eps = MemTransport::cluster(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &frame(0, 0, vec![5])).unwrap();
+        let got = b.recv(Duration::MAX).unwrap();
+        assert_eq!(got.payload, vec![5]);
+    }
+
+    #[test]
+    fn corrupt_frame_recycles_the_wire_buffer() {
+        // Regression: a decode failure dropped the checked-out pool
+        // buffer; the pool must grow by exactly the reclaimed buffer.
+        let mut eps = MemTransport::cluster(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let before = b.pool().pooled();
+        let mut junk = b.pool().take();
+        junk.extend_from_slice(&[0xAB; 16]);
+        a.inject_raw(1, junk);
+        let err = b.recv(Duration::from_millis(50)).unwrap_err();
+        assert!(matches!(err, TransportError::Frame(_)), "got {err:?}");
+        assert_eq!(
+            b.pool().pooled(),
+            before + 1,
+            "corrupt wire buffer must return to the pool, not leak"
+        );
+        // The endpoint survives the poison frame: good traffic still flows.
+        a.send(1, &frame(1, 0, vec![7])).unwrap();
+        assert_eq!(b.recv(Duration::from_secs(1)).unwrap().payload, vec![7]);
+    }
+
+    #[test]
+    fn waker_fires_on_push() {
+        let mut eps = MemTransport::cluster(2);
+        let mut rx = eps.remove(0);
+        let mut tx = eps.remove(0);
+        let w = crate::transport::WakeHandle::new();
+        rx.set_waker(&w);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            tx.send(0, &frame(0, 1, vec![1])).unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        w.park_timeout(Duration::from_secs(10));
+        assert!(t0.elapsed() < Duration::from_secs(5), "push did not wake the parked driver");
+        let f = rx.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(f.sender, 1);
+        h.join().unwrap();
     }
 
     #[test]

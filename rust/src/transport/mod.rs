@@ -42,17 +42,39 @@ pub mod frame;
 #[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod mem;
 #[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+pub mod nb_tcp;
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 pub mod tcp;
+#[cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+pub mod wake;
 
 pub use frame::{
     algo_wire_id, Frame, FrameError, FrameKind, HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION,
 };
 pub use mem::MemTransport;
+pub use nb_tcp::NbTcpTransport;
 pub use tcp::TcpTransport;
+pub use wake::WakeHandle;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deadline arithmetic that cannot overflow: `Instant::now() + timeout`
+/// panics when `timeout` is enormous (`Duration::MAX`, or a config file's
+/// `recv_timeout_ms` set to "never"), because `Instant` saturates nowhere.
+/// This helper clamps to a far-future instant (~100 years) instead — far
+/// enough to mean "wait forever" for any real run, near enough to stay
+/// representable on every platform's monotonic clock.
+// lint: allow(wall_clock) — deadline arithmetic helper; gates *when* a
+// recv gives up waiting, never the bytes of any frame.
+pub fn saturating_deadline(now: Instant, timeout: Duration) -> Instant {
+    const FAR_FUTURE: Duration = Duration::from_secs(100 * 365 * 24 * 60 * 60);
+    now.checked_add(timeout)
+        .or_else(|| now.checked_add(FAR_FUTURE))
+        .unwrap_or(now)
+}
 
 /// Transport-level failures.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -129,6 +151,14 @@ pub trait Transport: Send {
     fn recycle(&mut self, payload: Vec<u8>) {
         drop(payload);
     }
+
+    /// Register a wake token the transport fires whenever a new frame
+    /// becomes receivable, so a reactor driver parked between poll
+    /// iterations wakes immediately instead of sleeping out its poll tick.
+    /// The default ignores the token: the blocking transports wake their
+    /// own `recv` through internal condvars/channels, and polling them a
+    /// tick late is merely latency, never lost data.
+    fn set_waker(&mut self, _waker: &Arc<WakeHandle>) {}
 }
 
 /// Receive-side reorder buffer shared by both transports: frames are pushed
@@ -218,6 +248,18 @@ mod tests {
             .collect();
         assert_eq!(order, vec![(0, 1), (0, 2), (1, 0)]);
         assert!(rb.is_empty());
+    }
+
+    #[test]
+    fn saturating_deadline_survives_duration_max() {
+        // Regression: `Instant::now() + Duration::MAX` panics; the helper
+        // must clamp instead and still land in the future.
+        let now = Instant::now();
+        let d = saturating_deadline(now, Duration::MAX);
+        assert!(d > now);
+        // Ordinary timeouts are exact.
+        let t = Duration::from_millis(250);
+        assert_eq!(saturating_deadline(now, t), now + t);
     }
 
     #[test]

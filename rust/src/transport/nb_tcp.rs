@@ -1,0 +1,532 @@
+//! Nonblocking TCP transport for the reactor runtime: zero internal
+//! threads, all socket I/O driven by the caller's poll loop.
+//!
+//! [`TcpTransport`](super::TcpTransport) spends three OS threads per worker
+//! (acceptor + one reader per inbound connection), which is exactly the
+//! thread-per-worker cost the reactor exists to remove — at 256 workers
+//! that transport would spawn ~768 threads before the first frame moves.
+//! [`NbTcpTransport`] keeps the same wire protocol (`u32 le frame_len ++
+//! frame bytes`, same listener-per-worker/lazy-dial topology) but services
+//! every socket inline from [`Transport::recv`]:
+//!
+//! * **accept** — the listener is nonblocking; each `poll_io` drains the
+//!   accept queue and registers the new connection's reassembly state.
+//! * **read** — each inbound connection owns a tiny reassembly machine:
+//!   4 length-prefix bytes, then a pooled wire buffer filled across as many
+//!   `read` calls as the kernel needs. Partial frames persist across polls;
+//!   a complete frame decodes into the `(round, sender)` reorder buffer.
+//! * **write** — `broadcast` encodes once and enqueues per-peer copies
+//!   (pooled buffers); unfinished writes stay queued and every poll retries
+//!   them, so a send never blocks the driver thread.
+//!
+//! Reassembly invariants (DESIGN.md §Reactor): a pooled buffer is owned by
+//! exactly one reassembly machine or write queue at a time; every exit path
+//! — complete frame, decode failure, mid-frame EOF, connection teardown —
+//! either hands the buffer to the consumer or returns it to the pool.
+//! Errors discovered inside `poll_io` park in `pending_err` and surface
+//! from the next `recv`, after already-decoded frames drain.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::{
+    saturating_deadline, Frame, ReorderBuffer, Transport, TransportError, HEADER_LEN, MAX_PAYLOAD,
+};
+use crate::mem::FramePool;
+
+/// Sleep between polls when `recv` is called with a real (non-zero)
+/// timeout: long enough to stay off the CPU on an idle socket, short
+/// enough that frame latency stays well under a scheduler tick. The
+/// reactor driver never sleeps here — it polls with `Duration::ZERO` and
+/// parks on its own wake token instead.
+const POLL_SLEEP: Duration = Duration::from_micros(200);
+
+/// One inbound connection's frame-reassembly state.
+struct InConn {
+    stream: TcpStream,
+    /// Set when the connection is done (EOF or error); reaped by the next
+    /// poll, returning any partial buffer to the pool.
+    closed: bool,
+    /// Length-prefix accumulator: `len_buf[..len_got]` is valid.
+    len_buf: [u8; 4],
+    len_got: usize,
+    /// True once the prefix is complete and `frame[..filled]` is the
+    /// partially-read frame of `need` total bytes.
+    have_len: bool,
+    need: usize,
+    filled: usize,
+    /// Pooled wire buffer the frame assembles into.
+    frame: Vec<u8>,
+}
+
+/// One outbound connection: pending wire buffers flushed opportunistically
+/// on every poll (FIFO — a later frame never passes an earlier one).
+struct OutConn {
+    stream: TcpStream,
+    queue: VecDeque<Vec<u8>>,
+    /// Bytes of `queue.front()` already written.
+    written: usize,
+}
+
+/// One worker's nonblocking TCP endpoint (see module docs).
+pub struct NbTcpTransport {
+    id: usize,
+    addrs: Vec<SocketAddr>,
+    listener: TcpListener,
+    ins: Vec<InConn>,
+    outs: Vec<Option<OutConn>>,
+    buf: ReorderBuffer,
+    /// Pooled frame-encode scratch, reused across sends.
+    scratch: Vec<u8>,
+    pool: FramePool,
+    /// First error discovered inside `poll_io`; surfaced by the next
+    /// `recv` after buffered frames drain.
+    pending_err: Option<TransportError>,
+}
+
+impl NbTcpTransport {
+    /// Build an `n`-endpoint cluster on loopback, mirroring
+    /// [`TcpTransport::cluster`](super::TcpTransport::cluster): listeners
+    /// all bound before any endpoint is handed out, `port_base = 0` for OS
+    /// ephemeral ports, one shared wire-buffer pool.
+    pub fn cluster(n: usize, port_base: u16) -> std::io::Result<Vec<NbTcpTransport>> {
+        assert!(n > 0);
+        if port_base != 0 && port_base as usize + n - 1 > u16::MAX as usize {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("port_base {port_base} + {n} workers exceeds the u16 port range"),
+            ));
+        }
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|i| {
+                let port = if port_base == 0 { 0 } else { port_base + i as u16 };
+                let l = TcpListener::bind(("127.0.0.1", port))?;
+                l.set_nonblocking(true)?;
+                Ok(l)
+            })
+            .collect::<std::io::Result<_>>()?;
+        let addrs: Vec<SocketAddr> = listeners
+            .iter()
+            .map(|l| l.local_addr())
+            .collect::<std::io::Result<_>>()?;
+        let pool = FramePool::new();
+        Ok(listeners
+            .into_iter()
+            .enumerate()
+            .map(|(id, listener)| NbTcpTransport {
+                id,
+                addrs: addrs.clone(),
+                listener,
+                ins: Vec::new(),
+                outs: (0..n).map(|_| None).collect(),
+                buf: ReorderBuffer::default(),
+                scratch: Vec::new(),
+                pool: pool.clone(),
+                pending_err: None,
+            })
+            .collect())
+    }
+
+    /// The address each worker listens on (index = worker id).
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    /// The cluster-shared wire buffer pool (tests assert recycling works).
+    pub fn pool(&self) -> &FramePool {
+        &self.pool
+    }
+
+    /// Dial `peer` if no cached connection exists. The dial itself is the
+    /// one blocking call in this transport (connect-then-set-nonblocking);
+    /// it happens once per peer per run, in round 0 or after a redial.
+    fn ensure_connected(&mut self, peer: usize) -> Result<(), TransportError> {
+        if self.outs[peer].is_some() {
+            return Ok(());
+        }
+        let stream = TcpStream::connect(self.addrs[peer])
+            .map_err(|e| TransportError::Io(e.to_string()))?;
+        stream
+            .set_nodelay(true)
+            .map_err(|e| TransportError::Io(e.to_string()))?;
+        stream
+            .set_nonblocking(true)
+            .map_err(|e| TransportError::Io(e.to_string()))?;
+        // Depth 4 covers the strict schedule's one-frame-in-flight and the
+        // pipelined schedule's one-round-ahead bound without regrowth.
+        self.outs[peer] = Some(OutConn { stream, queue: VecDeque::with_capacity(4), written: 0 });
+        Ok(())
+    }
+
+    /// Queue `wire` (a complete prefix+frame unit) toward `peer` in a
+    /// pooled copy, then flush as much of the queue as the socket accepts.
+    // lint: hot-path
+    fn enqueue_to(&mut self, peer: usize, wire: &[u8]) -> Result<(), TransportError> {
+        self.ensure_connected(peer)?;
+        let mut copy = self.pool.take();
+        copy.extend_from_slice(wire);
+        if let Some(conn) = self.outs[peer].as_mut() {
+            conn.queue.push_back(copy);
+        }
+        if let Err(e) = self.flush_out(peer) {
+            self.drop_out(peer);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Write queued buffers to `peer` until the socket would block or the
+    /// queue empties; fully-written buffers return to the pool.
+    // lint: hot-path
+    fn flush_out(&mut self, peer: usize) -> Result<(), TransportError> {
+        loop {
+            let Some(conn) = self.outs[peer].as_mut() else { return Ok(()) };
+            let Some(front) = conn.queue.front() else { return Ok(()) };
+            match conn.stream.write(&front[conn.written..]) {
+                Ok(0) => return Err(TransportError::Closed),
+                Ok(k) => {
+                    conn.written += k;
+                    if conn.written == front.len() {
+                        conn.written = 0;
+                        if let Some(done) = conn.queue.pop_front() {
+                            self.pool.give(done);
+                        }
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(TransportError::Io(e.to_string())),
+            }
+        }
+    }
+
+    /// Tear down the cached connection to `peer`, reclaiming queued wire
+    /// buffers. The next send redials (same recovery as `TcpTransport`).
+    fn drop_out(&mut self, peer: usize) {
+        if let Some(mut conn) = self.outs[peer].take() {
+            while let Some(b) = conn.queue.pop_front() {
+                self.pool.give(b);
+            }
+        }
+    }
+
+    /// One readiness sweep: accept new connections, advance every inbound
+    /// reassembly machine, retry pending writes. Never blocks.
+    // lint: hot-path
+    fn poll_io(&mut self) {
+        self.accept_ready();
+        self.read_ready();
+        for p in 0..self.outs.len() {
+            let needs_flush = self.outs[p].as_ref().is_some_and(|c| !c.queue.is_empty());
+            if needs_flush && self.flush_out(p).is_err() {
+                // The frames on this queue are lost; the peer's barrier
+                // will time out and failure propagation takes over —
+                // identical to a reader-thread death in `TcpTransport`.
+                self.drop_out(p);
+            }
+        }
+    }
+
+    /// Drain the listener's accept queue (nonblocking).
+    // lint: hot-path
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.ins.push(InConn {
+                        stream,
+                        closed: false,
+                        len_buf: [0u8; 4],
+                        len_got: 0,
+                        have_len: false,
+                        need: 0,
+                        filled: 0,
+                        frame: self.pool.take(),
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Advance every inbound connection's reassembly machine as far as the
+    /// kernel's buffers allow, then reap closed connections.
+    // lint: hot-path
+    fn read_ready(&mut self) {
+        let max_frame = HEADER_LEN + MAX_PAYLOAD;
+        for ix in 0..self.ins.len() {
+            loop {
+                let conn = &mut self.ins[ix];
+                if conn.closed {
+                    break;
+                }
+                if !conn.have_len {
+                    // Accumulate the 4-byte length prefix.
+                    match conn.stream.read(&mut conn.len_buf[conn.len_got..]) {
+                        Ok(0) => {
+                            // EOF on a prefix boundary is a clean close;
+                            // mid-prefix it means a truncated stream.
+                            if conn.len_got != 0 && self.pending_err.is_none() {
+                                self.pending_err = Some(TransportError::Io(
+                                    "stream ended mid length prefix".into(),
+                                ));
+                            }
+                            self.ins[ix].closed = true;
+                            break;
+                        }
+                        Ok(k) => {
+                            conn.len_got += k;
+                            if conn.len_got == 4 {
+                                let len = u32::from_le_bytes(conn.len_buf) as usize;
+                                if len > max_frame {
+                                    if self.pending_err.is_none() {
+                                        self.pending_err = Some(TransportError::Io(format!(
+                                            "frame length prefix {len} exceeds maximum"
+                                        )));
+                                    }
+                                    self.ins[ix].closed = true;
+                                    break;
+                                }
+                                conn.have_len = true;
+                                conn.need = len;
+                                conn.filled = 0;
+                                conn.frame.resize(len, 0);
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) => {
+                            if self.pending_err.is_none() {
+                                self.pending_err = Some(TransportError::Io(e.to_string()));
+                            }
+                            self.ins[ix].closed = true;
+                            break;
+                        }
+                    }
+                } else if conn.filled == conn.need {
+                    // Frame complete (handles zero-length prefixes too):
+                    // swap in a fresh pooled buffer and decode.
+                    let full = std::mem::replace(&mut conn.frame, self.pool.take());
+                    conn.have_len = false;
+                    conn.len_got = 0;
+                    match Frame::decode_reclaim(full) {
+                        Ok(f) => self.buf.push(f),
+                        Err((e, junk)) => {
+                            // Reclaim before reporting — a dropped buffer
+                            // would shrink the cluster-shared pool.
+                            self.pool.give(junk);
+                            if self.pending_err.is_none() {
+                                self.pending_err = Some(e.into());
+                            }
+                        }
+                    }
+                } else {
+                    match conn.stream.read(&mut conn.frame[conn.filled..]) {
+                        Ok(0) => {
+                            if self.pending_err.is_none() {
+                                self.pending_err = Some(TransportError::Io(format!(
+                                    "stream ended mid frame ({} of {} bytes)",
+                                    conn.filled, conn.need
+                                )));
+                            }
+                            self.ins[ix].closed = true;
+                            break;
+                        }
+                        Ok(k) => conn.filled += k,
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) => {
+                            if self.pending_err.is_none() {
+                                self.pending_err = Some(TransportError::Io(e.to_string()));
+                            }
+                            self.ins[ix].closed = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        // Reap closed connections, returning partial buffers to the pool.
+        let mut ix = 0;
+        while ix < self.ins.len() {
+            if self.ins[ix].closed {
+                let conn = self.ins.swap_remove(ix);
+                self.pool.give(conn.frame);
+            } else {
+                ix += 1;
+            }
+        }
+    }
+}
+
+impl Transport for NbTcpTransport {
+    fn local_id(&self) -> usize {
+        self.id
+    }
+
+    fn cluster_size(&self) -> usize {
+        self.addrs.len()
+    }
+
+    // lint: hot-path
+    fn send(&mut self, peer: usize, frame: &Frame) -> Result<(), TransportError> {
+        self.broadcast(&[peer], frame)
+    }
+
+    // lint: hot-path
+    fn broadcast(&mut self, peers: &[usize], frame: &Frame) -> Result<(), TransportError> {
+        // Serialize (length prefix + header + checksum) once into the
+        // pooled scratch; each peer gets a pooled copy on its write queue
+        // — k peers cost k memcpys and zero blocking writes.
+        let prefix = match u32::try_from(frame.encoded_len()) {
+            Ok(v) => v,
+            // Unreachable: encode_into rejects payloads over MAX_PAYLOAD
+            // (1 GiB), so the prefix always fits a u32.
+            Err(_) => unreachable!("frame exceeds u32 length prefix"),
+        };
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        scratch.extend_from_slice(&prefix.to_le_bytes());
+        frame.encode_into(&mut scratch);
+        let mut result = Ok(());
+        for &p in peers {
+            assert!(p < self.addrs.len(), "peer {p} out of range");
+            result = self.enqueue_to(p, &scratch);
+            if result.is_err() {
+                break;
+            }
+        }
+        self.scratch = scratch;
+        result
+    }
+
+    // lint: hot-path
+    fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError> {
+        // lint: allow(wall_clock) — the recv deadline is transport-local
+        // timing; it gates *when* a frame is returned, never its bytes.
+        let deadline = saturating_deadline(Instant::now(), timeout);
+        loop {
+            self.poll_io();
+            if let Some(f) = self.buf.pop() {
+                return Ok(f);
+            }
+            if let Some(e) = self.pending_err.take() {
+                return Err(e);
+            }
+            if Instant::now() >= deadline {
+                return Err(TransportError::Timeout);
+            }
+            // Reactor drivers pass Duration::ZERO and never reach this
+            // sleep; it only paces direct blocking callers.
+            std::thread::sleep(POLL_SLEEP);
+        }
+    }
+
+    // lint: hot-path
+    fn recycle(&mut self, payload: Vec<u8>) {
+        self.pool.give(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::FrameKind;
+
+    fn frame(round: u64, sender: u16, payload: Vec<u8>) -> Frame {
+        Frame {
+            round,
+            sender,
+            algo: 4,
+            bits: 8,
+            kind: FrameKind::Data,
+            theta: 2.0,
+            payload,
+        }
+    }
+
+    #[test]
+    fn loopback_roundtrip_without_threads() {
+        let mut eps = NbTcpTransport::cluster(2, 0).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &frame(3, 0, vec![7; 100])).unwrap();
+        let got = b.recv(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.round, 3);
+        assert_eq!(got.payload, vec![7; 100]);
+    }
+
+    #[test]
+    fn partial_frames_reassemble_across_polls() {
+        // Drip one frame through a raw socket in tiny chunks with pauses:
+        // every poll sees a partial prefix or partial frame and must carry
+        // the reassembly state forward.
+        let mut eps = NbTcpTransport::cluster(1, 0).unwrap();
+        let addr = eps[0].addrs()[0];
+        let f = frame(1, 0, vec![9; 64]);
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&u32::try_from(f.encoded_len()).unwrap().to_le_bytes());
+        f.encode_into(&mut wire);
+        let h = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            for chunk in wire.chunks(7) {
+                s.write_all(chunk).unwrap();
+                s.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            // Hold the socket open until the frame is surely consumed.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let got = eps[0].recv(Duration::from_secs(10)).unwrap();
+        assert_eq!(got.payload, vec![9; 64]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_with_duration_max_does_not_overflow() {
+        let mut eps = NbTcpTransport::cluster(2, 0).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &frame(0, 0, vec![5])).unwrap();
+        let got = b.recv(Duration::MAX).unwrap();
+        assert_eq!(got.payload, vec![5]);
+    }
+
+    #[test]
+    fn corrupt_stream_bytes_recycle_the_wire_buffer() {
+        let mut eps = NbTcpTransport::cluster(1, 0).unwrap();
+        let mut raw = TcpStream::connect(eps[0].addrs()[0]).unwrap();
+        raw.write_all(&16u32.to_le_bytes()).unwrap();
+        raw.write_all(&[0xAB; 16]).unwrap();
+        raw.flush().unwrap();
+        let err = eps[0].recv(Duration::from_secs(5)).unwrap_err();
+        assert!(matches!(err, TransportError::Frame(_)), "got {err:?}");
+        // The reassembly buffer that held the garbage — and the fresh one
+        // swapped in behind it — stay pool-owned; nothing leaked. The
+        // endpoint itself survives and still times out cleanly.
+        let err = eps[0].recv(Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, TransportError::Timeout);
+    }
+
+    #[test]
+    fn zero_timeout_recv_never_blocks() {
+        let mut eps = NbTcpTransport::cluster(1, 0).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..100 {
+            let err = eps[0].recv(Duration::ZERO).unwrap_err();
+            assert_eq!(err, TransportError::Timeout);
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "zero-timeout polls must not sleep"
+        );
+    }
+}

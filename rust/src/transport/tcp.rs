@@ -22,7 +22,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::{Frame, ReorderBuffer, Transport, TransportError, HEADER_LEN, MAX_PAYLOAD};
+use super::{
+    saturating_deadline, Frame, ReorderBuffer, Transport, TransportError, HEADER_LEN, MAX_PAYLOAD,
+};
 use crate::mem::FramePool;
 
 /// Write-buffer capacity per outbound connection: large enough that a
@@ -107,6 +109,11 @@ impl TcpTransport {
         &self.addrs
     }
 
+    /// The cluster-shared wire buffer pool (tests assert recycling works).
+    pub fn pool(&self) -> &FramePool {
+        &self.pool
+    }
+
     fn connect(&mut self, peer: usize) -> Result<&mut BufWriter<TcpStream>, TransportError> {
         if self.outs[peer].is_none() {
             let stream = TcpStream::connect(self.addrs[peer])
@@ -127,9 +134,26 @@ impl TcpTransport {
     fn drain(&mut self) -> Result<(), TransportError> {
         loop {
             match self.rx.try_recv() {
-                Ok(Ok(bytes)) => self.buf.push(Frame::decode_owned(bytes)?),
+                Ok(Ok(bytes)) => self.push_decoded(bytes)?,
                 Ok(Err(io)) => return Err(TransportError::Io(io)),
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+    }
+
+    /// Decode one wire buffer into the reorder buffer, returning the
+    /// buffer to the pool on decode failure (satellite bugfix: the
+    /// `decode_owned(bytes)?` form dropped the pooled buffer, so corrupt
+    /// traffic shrank the pool one buffer per bad frame).
+    fn push_decoded(&mut self, bytes: Vec<u8>) -> Result<(), TransportError> {
+        match Frame::decode_reclaim(bytes) {
+            Ok(f) => {
+                self.buf.push(f);
+                Ok(())
+            }
+            Err((e, junk)) => {
+                self.pool.give(junk);
+                Err(e.into())
             }
         }
     }
@@ -187,7 +211,7 @@ impl Transport for TcpTransport {
     fn recv(&mut self, timeout: Duration) -> Result<Frame, TransportError> {
         // lint: allow(wall_clock) — the recv deadline is transport-local
         // timing; it gates *when* a frame is returned, never its bytes.
-        let deadline = Instant::now() + timeout;
+        let deadline = saturating_deadline(Instant::now(), timeout);
         loop {
             self.drain()?;
             if let Some(f) = self.buf.pop() {
@@ -198,7 +222,7 @@ impl Transport for TcpTransport {
                 return Err(TransportError::Timeout);
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(Ok(bytes)) => self.buf.push(Frame::decode_owned(bytes)?),
+                Ok(Ok(bytes)) => self.push_decoded(bytes)?,
                 Ok(Err(io)) => return Err(TransportError::Io(io)),
                 Err(RecvTimeoutError::Timeout) => return Err(TransportError::Timeout),
                 Err(RecvTimeoutError::Disconnected) => return Err(TransportError::Closed),
@@ -284,6 +308,10 @@ fn read_frames(mut stream: TcpStream, tx: Sender<Result<Vec<u8>, String>>, pool:
         let mut bytes = pool.take();
         bytes.resize(len, 0);
         if let Err(e) = stream.read_exact(&mut bytes) {
+            // Hand the half-filled buffer back before reporting: the
+            // reader dies here, and a dropped buffer would shrink the
+            // cluster-shared pool for everyone else.
+            pool.give(bytes);
             let _ = tx.send(Err(format!("mid-frame read failed: {e}")));
             return;
         }
@@ -334,5 +362,36 @@ mod tests {
         let mut eps = TcpTransport::cluster(1, 0).unwrap();
         let err = eps[0].recv(Duration::from_millis(20)).unwrap_err();
         assert_eq!(err, TransportError::Timeout);
+    }
+
+    #[test]
+    fn recv_with_duration_max_does_not_overflow() {
+        // Regression: `Instant::now() + Duration::MAX` panicked.
+        let mut eps = TcpTransport::cluster(2, 0).unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &frame(0, 0, vec![5])).unwrap();
+        let got = b.recv(Duration::MAX).unwrap();
+        assert_eq!(got.payload, vec![5]);
+    }
+
+    #[test]
+    fn corrupt_stream_bytes_recycle_the_wire_buffer() {
+        // Regression: a decode failure on the recv path dropped the pooled
+        // buffer the reader thread had checked out.
+        let mut eps = TcpTransport::cluster(1, 0).unwrap();
+        let before = eps[0].pool().pooled();
+        let mut raw = std::net::TcpStream::connect(eps[0].addrs()[0]).unwrap();
+        // Well-formed length prefix, garbage frame bytes: the reader
+        // delivers a 16-byte unit that fails magic validation.
+        raw.write_all(&16u32.to_le_bytes()).unwrap();
+        raw.write_all(&[0xAB; 16]).unwrap();
+        raw.flush().unwrap();
+        let err = eps[0].recv(Duration::from_secs(5)).unwrap_err();
+        assert!(matches!(err, TransportError::Frame(_)), "got {err:?}");
+        assert!(
+            eps[0].pool().pooled() > before,
+            "corrupt wire buffer must return to the pool, not leak"
+        );
     }
 }

@@ -1,0 +1,92 @@
+//! Wake token for the reactor's readiness loop.
+//!
+//! A [`WakeHandle`] is the event-source side of the abort-latch fix: the
+//! reactor driver parks on one handle between poll iterations, and anything
+//! that can make a worker runnable again — a frame landing in a mem queue,
+//! the cluster abort latch tripping — calls [`WakeHandle::wake`] instead of
+//! relying on the 50ms `ABORT_POLL_TICK` to be noticed. The handle is a
+//! level-triggered flag under a mutex + condvar: a wake that races the park
+//! is never lost (the flag is observed before the wait), and a park after a
+//! wake returns immediately, consuming the flag.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Level-triggered wake flag shared between a parked driver thread and any
+/// number of wakers (transports, the abort latch).
+#[derive(Default)]
+pub struct WakeHandle {
+    flagged: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl WakeHandle {
+    pub fn new() -> Arc<WakeHandle> {
+        Arc::new(WakeHandle::default())
+    }
+
+    /// Lock the flag, recovering from poisoning: the flag is a plain bool
+    /// with no invariant a panicking holder could have half applied, and
+    /// the wake path must stay panic-free.
+    fn locked(&self) -> std::sync::MutexGuard<'_, bool> {
+        match self.flagged.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Mark the handle runnable and wake any parked thread. Idempotent;
+    /// never blocks beyond the flag mutex.
+    pub fn wake(&self) {
+        *self.locked() = true;
+        self.cv.notify_all();
+    }
+
+    /// Park the calling thread until [`Self::wake`] is called or `timeout`
+    /// elapses, whichever is first. Consumes the wake flag, so a wake that
+    /// happened *before* the park returns immediately instead of being
+    /// lost.
+    pub fn park_timeout(&self, timeout: Duration) {
+        let mut g = self.locked();
+        if !*g {
+            g = match self.cv.wait_timeout(g, timeout) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+        *g = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn wake_before_park_returns_immediately() {
+        let w = WakeHandle::new();
+        w.wake();
+        let t0 = Instant::now();
+        w.park_timeout(Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(1), "pre-wake was lost");
+        // The flag is consumed: the next park must actually wait.
+        let t0 = Instant::now();
+        w.park_timeout(Duration::from_millis(20));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn park_wakes_on_concurrent_wake() {
+        let w = WakeHandle::new();
+        let w2 = Arc::clone(&w);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            w2.wake();
+        });
+        let t0 = Instant::now();
+        w.park_timeout(Duration::from_secs(10));
+        assert!(t0.elapsed() < Duration::from_secs(5), "wake not delivered");
+        h.join().unwrap();
+    }
+}

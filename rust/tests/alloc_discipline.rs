@@ -19,7 +19,7 @@ use std::time::Duration;
 use moniqua::algorithms::{Algorithm, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
 use moniqua::quant::QuantConfig;
 use moniqua::topology::Topology;
-use moniqua::transport::{algo_wire_id, Frame, FrameKind, MemTransport, Transport};
+use moniqua::transport::{algo_wire_id, Frame, FrameKind, MemTransport, Transport, TransportError};
 
 struct CountingAlloc;
 
@@ -300,6 +300,94 @@ fn check_algo(algo: Algorithm) {
     assert!(xs[0].iter().all(|v| v.is_finite()));
 }
 
+/// Regression for the pooled-buffer leak: a round that receives one
+/// corrupt frame must still allocate (and free) **nothing**. Before the
+/// fix, `Frame::decode_owned(bytes)?` dropped the checked-out pool buffer
+/// on the error path — the drop showed up as a dealloc here, and the
+/// replacement buffer as an alloc on a later round. `FrameError` carries
+/// only scalars, so the typed error itself is heap-free too.
+fn check_corrupt_frame_round() {
+    const N: usize = 4;
+    const D: usize = 256;
+    const WARMUP: u64 = 2;
+
+    let algo = Algorithm::DPsgd;
+    let topo = Topology::Ring(N);
+    let w = topo.comm_matrix();
+    let rho = w.rho();
+    let peers: Vec<Vec<usize>> = topo.adjacency();
+    let mut engines: Vec<Box<dyn SyncAlgorithm>> =
+        (0..N).map(|_| algo.make_sync(&w, D)).collect();
+    for e in engines.iter_mut() {
+        e.set_threads(1);
+    }
+    let mut transports = MemTransport::cluster(N);
+    let mut xs: Vec<Vec<f32>> = (0..N)
+        .map(|i| (0..D).map(|k| 0.3 + 0.001 * ((i + k) % 13) as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = (0..N).map(|_| vec![0.01f32; D]).collect();
+    let mut payloads: Vec<Vec<u8>> = (0..N).map(|_| Vec::new()).collect();
+    let mut gots: Vec<Vec<Frame>> = (0..N).map(|_| Vec::new()).collect();
+    let ctx = StepCtx { seed: 7, rho, g_inf: 1.0 };
+    let algo_id = algo_wire_id(algo.name());
+
+    run_rounds(
+        &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
+        &peers, &ctx, 0, WARMUP,
+    );
+    let allocs_before = ALLOCS.load(Ordering::SeqCst);
+    let deallocs_before = DEALLOCS.load(Ordering::SeqCst);
+
+    // Poison worker 1's inbound queue with a warm pool buffer full of
+    // garbage, ahead of the round's real frames.
+    let mut junk = transports[1].pool().take();
+    junk.extend_from_slice(&[0xAB; 16]);
+    transports[1].inject_raw(1, junk);
+
+    let round = WARMUP;
+    for i in 0..N {
+        node_broadcast(
+            algo_id, engines[i].as_mut(), &mut transports[i], i, &xs[i], &grads[i],
+            &mut payloads[i], &peers[i], &ctx, round,
+        );
+    }
+    for i in 0..N {
+        if i == 1 {
+            // The corrupt frame surfaces as a typed error; the buffer that
+            // carried it goes back to the pool instead of being dropped.
+            let err = transports[1].recv(RECV).unwrap_err();
+            assert!(matches!(err, TransportError::Frame(_)), "got {err:?}");
+        }
+        let got = &mut gots[i];
+        got.clear();
+        while got.len() < peers[i].len() {
+            got.push(transports[i].recv(RECV).expect("barrier recv"));
+        }
+        got.sort_unstable_by_key(|f| f.sender);
+        {
+            let inbox = Inbox::from_frames(got);
+            engines[i].node_recv(i, &mut xs[i], &grads[i], 0.05, round, &ctx, &inbox);
+        }
+        for f in got.drain(..) {
+            transports[i].recycle(f.payload);
+        }
+    }
+
+    let allocs = ALLOCS.load(Ordering::SeqCst) - allocs_before;
+    let deallocs = DEALLOCS.load(Ordering::SeqCst) - deallocs_before;
+    assert_eq!(
+        allocs, 0,
+        "corrupt-frame round: {allocs} heap allocations (budget: 0 — a dropped \
+         pool buffer forces a later replacement allocation)"
+    );
+    assert_eq!(
+        deallocs, 0,
+        "corrupt-frame round: {deallocs} heap frees — the poisoned wire buffer \
+         is being dropped instead of returned to the pool"
+    );
+    assert!(xs[1].iter().all(|v| v.is_finite()));
+}
+
 #[test]
 fn steady_state_rounds_allocate_nothing() {
     // ONE test fn on purpose — see module docs. Order: the contract's
@@ -333,4 +421,6 @@ fn steady_state_rounds_allocate_nothing() {
         range: 4.0,
         gamma: 0.5,
     });
+    // Fault path: one corrupt frame mid-round keeps the zero budget.
+    check_corrupt_frame_round();
 }

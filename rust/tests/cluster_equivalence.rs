@@ -12,7 +12,7 @@
 
 use moniqua::algorithms::{Algorithm, ThetaPolicy};
 use moniqua::coordinator::{
-    ClusterConfig, ClusterTrainer, Report, TrainConfig, Trainer, TransportKind,
+    ClusterConfig, ClusterTrainer, DriverKind, Report, TrainConfig, Trainer, TransportKind,
 };
 use moniqua::network::NetworkConfig;
 use moniqua::objectives::{Objective, Quadratic};
@@ -135,6 +135,29 @@ fn mem_cluster_bitwise_matches_lockstep_for_all_algorithms() {
         let want = fingerprint(&run_lockstep(algorithm.clone()));
         let got = fingerprint(&run_cluster(algorithm, TransportKind::Mem));
         assert_eq!(got, want, "{name}: mem cluster diverged from lockstep trainer");
+    }
+}
+
+#[test]
+fn reactor_driver_bitwise_matches_lockstep_for_all_algorithms() {
+    // The readiness-loop driver (coordinator::reactor) shares the threaded
+    // driver's round state machine, so every algorithm must survive the
+    // switch untouched. Deeper reactor coverage (TCP, pipelining, 256-worker
+    // soak, failure propagation) lives in tests/reactor_equivalence.rs.
+    for (name, algorithm) in algorithms() {
+        let want = fingerprint(&run_lockstep(algorithm.clone()));
+        let mut t = ClusterTrainer::new(
+            config(algorithm),
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig {
+                driver: DriverKind::Reactor { threads: 2 },
+                ..ClusterConfig::default()
+            },
+        )
+        .expect("cluster config accepted");
+        let got = fingerprint(&t.run().expect("cluster run"));
+        assert_eq!(got, want, "{name}: reactor driver diverged from lockstep trainer");
     }
 }
 

@@ -1,0 +1,303 @@
+//! The reactor runtime's acceptance gate (rust/DESIGN.md §Reactor): the
+//! readiness-loop driver — hundreds of round state machines multiplexed
+//! onto a handful of driver threads — must produce **bitwise** the lockstep
+//! [`Trainer`]'s results, and must stay bitwise-identical to the threaded
+//! one-OS-thread-per-worker driver on the same transports and schedules.
+//!
+//! Three layers:
+//!
+//! 1. A schedule matrix (moniqua/dpsgd/choco × mem/tcp × pipeline on/off)
+//!    pinning reactor ≡ threaded ≡ lockstep fingerprints. TCP runs ride on
+//!    the nonblocking transport (`NbTcpTransport`), so partial-frame
+//!    reassembly is exercised under real socket backpressure.
+//! 2. A 256-worker single-process soak on 8 driver threads, with mild
+//!    stragglers injected into the gradient compute so shards genuinely
+//!    observe out-of-order readiness — still bitwise ≡ lockstep.
+//! 3. Failure propagation: one worker stalls past the barrier deadline;
+//!    its peers fail with the typed barrier-timeout [`WorkerFailure`], the
+//!    latch wakes every shard, and siblings report aborting within one
+//!    poll iteration. The whole 256-worker collapse is wall-clock bounded.
+//!
+//! `sim_time_s` is excluded from the fingerprints — it mixes measured host
+//! time by design in every runtime.
+
+use std::time::{Duration, Instant};
+
+use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::coordinator::{
+    ClusterConfig, ClusterTrainer, DriverKind, Report, TrainConfig, Trainer, TransportKind,
+};
+use moniqua::network::NetworkConfig;
+use moniqua::objectives::{Eval, Objective, Quadratic};
+use moniqua::quant::QuantConfig;
+use moniqua::topology::Topology;
+
+const STEPS: u64 = 12;
+
+fn config(algorithm: Algorithm) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        steps: STEPS,
+        lr: 0.1,
+        decay_factor: 0.5,
+        decay_at: vec![6],
+        algorithm,
+        network: Some(NetworkConfig::fig1b()),
+        grad_time_s: Some(1e-3),
+        eval_every: 4,
+        seed: 7,
+        threads: None,
+    }
+}
+
+fn objective() -> Box<dyn Objective> {
+    Box::new(Quadratic::new(24, 1.0, 0.1, 4, 3))
+}
+
+/// Every determinism-relevant field of a report, as raw bit patterns
+/// (same digest as `tests/cluster_equivalence.rs`).
+fn fingerprint(r: &Report) -> String {
+    let mut s = format!(
+        "algo={} workers={} dim={} total_bytes={} total_messages={} extra_mem={}\n",
+        r.algorithm, r.workers, r.dim, r.total_bytes, r.total_messages, r.extra_memory_floats
+    );
+    for row in &r.trace {
+        s.push_str(&format!(
+            "step={} train={:016x} eval={:016x} cons={:016x} bytes={} theta={}\n",
+            row.step,
+            row.train_loss.to_bits(),
+            row.eval_loss.to_bits(),
+            row.consensus_linf.to_bits(),
+            row.bytes_total,
+            row.theta.map_or("-".to_string(), |t| format!("{:016x}", t.to_bits())),
+        ));
+    }
+    s.push_str("final=");
+    for v in &r.final_params {
+        s.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    s
+}
+
+fn run_driver(
+    algorithm: Algorithm,
+    transport: TransportKind,
+    pipeline: bool,
+    driver: DriverKind,
+) -> Report {
+    let mut t = ClusterTrainer::new(
+        config(algorithm),
+        Topology::Ring(4),
+        objective(),
+        ClusterConfig { transport, pipeline, driver, ..ClusterConfig::default() },
+    )
+    .expect("cluster config accepted");
+    let report = t.run().expect("cluster run");
+    assert!(t.failures.is_empty(), "clean run recorded failures: {:?}", t.failures);
+    report
+}
+
+fn cases() -> Vec<(&'static str, Algorithm)> {
+    let q8 = QuantConfig::stochastic(8);
+    vec![
+        ("moniqua", Algorithm::Moniqua { theta: ThetaPolicy::Constant(2.0), quant: q8 }),
+        ("dpsgd", Algorithm::DPsgd),
+        ("choco", Algorithm::Choco { quant: q8, range: 4.0, gamma: 0.5 }),
+    ]
+}
+
+#[test]
+fn reactor_matches_threaded_and_lockstep_across_transports_and_schedules() {
+    for (name, algorithm) in cases() {
+        let want =
+            fingerprint(&Trainer::new(config(algorithm.clone()), Topology::Ring(4), objective()).run());
+        for transport in [TransportKind::Mem, TransportKind::Tcp { port_base: 0 }] {
+            for pipeline in [true, false] {
+                let reactor = fingerprint(&run_driver(
+                    algorithm.clone(),
+                    transport,
+                    pipeline,
+                    DriverKind::Reactor { threads: 3 },
+                ));
+                assert_eq!(
+                    reactor, want,
+                    "{name} on {transport:?} (pipeline={pipeline}): reactor diverged from lockstep"
+                );
+                let threaded = fingerprint(&run_driver(
+                    algorithm.clone(),
+                    transport,
+                    pipeline,
+                    DriverKind::Threaded,
+                ));
+                assert_eq!(
+                    reactor, threaded,
+                    "{name} on {transport:?} (pipeline={pipeline}): reactor diverged from threaded"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reactor_is_reproducible_across_shard_interleavings() {
+    // Shard scheduling (which machine a driver thread advances next, and
+    // when frames drain) differs run to run; the digests must not.
+    let algorithm = Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(4),
+    };
+    let reactor = DriverKind::Reactor { threads: 2 };
+    let a = fingerprint(&run_driver(algorithm.clone(), TransportKind::Mem, true, reactor));
+    for _ in 0..3 {
+        let b = fingerprint(&run_driver(algorithm.clone(), TransportKind::Mem, true, reactor));
+        assert_eq!(a, b, "reactor digest depends on shard interleaving");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 256-worker soak
+// ---------------------------------------------------------------------------
+
+/// Wraps an inner objective and sleeps inside `loss_grad` for matching
+/// (worker, step) pairs. Pure scheduling noise: the returned loss and
+/// gradient are untouched, so the fingerprint must be unchanged — which is
+/// exactly what makes it a soak for out-of-order frame arrival.
+#[derive(Clone)]
+struct Straggler {
+    inner: Quadratic,
+    sleeps: Vec<(usize, u64, Duration)>,
+}
+
+impl Objective for Straggler {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn init(&self) -> Vec<f32> {
+        self.inner.init()
+    }
+    fn loss_grad(&mut self, worker: usize, step: u64, params: &[f32], grad: &mut [f32]) -> f64 {
+        for &(w, s, d) in &self.sleeps {
+            if w == worker && s == step {
+                std::thread::sleep(d);
+            }
+        }
+        self.inner.loss_grad(worker, step, params, grad)
+    }
+    fn eval(&mut self, params: &[f32]) -> Eval {
+        self.inner.eval(params)
+    }
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+    fn box_clone(&self) -> Box<dyn Objective> {
+        Box::new(self.clone())
+    }
+}
+
+const SOAK_WORKERS: usize = 256;
+
+fn soak_config() -> TrainConfig {
+    TrainConfig {
+        workers: SOAK_WORKERS,
+        steps: 8,
+        lr: 0.1,
+        decay_factor: 1.0,
+        decay_at: vec![],
+        algorithm: Algorithm::DPsgd,
+        network: None,
+        grad_time_s: None,
+        eval_every: 4,
+        seed: 11,
+        threads: None,
+    }
+}
+
+fn soak_inner() -> Quadratic {
+    Quadratic::new(16, 1.0, 0.1, SOAK_WORKERS, 3)
+}
+
+#[test]
+fn reactor_soaks_256_workers_on_8_threads_bitwise_equal_to_lockstep() {
+    let want = fingerprint(
+        &Trainer::new(soak_config(), Topology::Ring(SOAK_WORKERS), Box::new(soak_inner())).run(),
+    );
+    // Scatter mild compute stragglers across rounds so shards drain frames
+    // in genuinely different orders than they were produced.
+    let sleeps = vec![
+        (3, 1, Duration::from_millis(15)),
+        (97, 2, Duration::from_millis(10)),
+        (200, 4, Duration::from_millis(20)),
+        (31, 6, Duration::from_millis(10)),
+    ];
+    let mut t = ClusterTrainer::new(
+        soak_config(),
+        Topology::Ring(SOAK_WORKERS),
+        Box::new(Straggler { inner: soak_inner(), sleeps }),
+        ClusterConfig {
+            driver: DriverKind::Reactor { threads: 8 },
+            ..ClusterConfig::default()
+        },
+    )
+    .expect("cluster config accepted");
+    let got = fingerprint(&t.run().expect("soak run"));
+    assert!(t.failures.is_empty(), "soak recorded failures: {:?}", t.failures);
+    assert_eq!(got, want, "256-worker reactor soak diverged from lockstep");
+}
+
+#[test]
+fn stalled_worker_fails_typed_and_aborts_siblings_within_one_poll_iteration() {
+    // Worker 31 stalls its round-2 gradient for 1.2s against a 250ms
+    // barrier deadline. Its ring neighbors must fail with the typed
+    // barrier-timeout WorkerFailure naming (round, sender) pairs; the
+    // abort latch must wake every shard, and at least the stalled worker
+    // itself must report aborting within one poll iteration.
+    let started = Instant::now();
+    let sleeps = vec![(31, 2, Duration::from_millis(1200))];
+    let mut t = ClusterTrainer::new(
+        soak_config(),
+        Topology::Ring(SOAK_WORKERS),
+        Box::new(Straggler { inner: soak_inner(), sleeps }),
+        ClusterConfig {
+            driver: DriverKind::Reactor { threads: 8 },
+            recv_timeout: Duration::from_millis(250),
+            pipeline: false, // strict schedule: peers truly wait on 31's frame
+            ..ClusterConfig::default()
+        },
+    )
+    .expect("cluster config accepted");
+    let err = t.run().expect_err("a stalled worker must fail the run");
+    assert!(
+        format!("{err:#}").contains("cluster run failed"),
+        "unexpected error shape: {err:#}"
+    );
+    let timeouts: Vec<_> = t
+        .failures
+        .iter()
+        .filter(|f| f.reason.contains("barrier timed out"))
+        .collect();
+    assert!(
+        !timeouts.is_empty(),
+        "no typed barrier-timeout failure recorded: {:?}",
+        t.failures
+    );
+    for f in &timeouts {
+        assert!(
+            f.reason.contains("still waiting on (round, sender) pairs"),
+            "timeout failure lost its missing-pairs diagnostic: {}",
+            f.reason
+        );
+        assert!(f.worker < SOAK_WORKERS);
+    }
+    assert!(
+        t.failures.iter().any(|f| f.reason.contains("aborted within one poll iteration")),
+        "no sibling reported the one-poll-iteration abort bound: {:?}",
+        t.failures
+    );
+    // The collapse of all 256 workers is bounded: one 1.2s stall, one
+    // 250ms deadline, and latch wake-ups — not 256 serial timeouts.
+    assert!(
+        started.elapsed() < Duration::from_secs(20),
+        "abort cascade took {:?}",
+        started.elapsed()
+    );
+}

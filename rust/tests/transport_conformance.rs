@@ -1,6 +1,7 @@
 //! Transport conformance suite: one generic contract, run verbatim against
-//! both [`MemTransport`] and [`TcpTransport`]. Whatever carries the frames
-//! must provide:
+//! [`MemTransport`], [`TcpTransport`], and the reactor's thread-free
+//! nonblocking [`NbTcpTransport`]. Whatever carries the frames must
+//! provide:
 //!
 //! * per-sender FIFO (a sender's frames arrive in send order);
 //! * deterministic `(round, sender)` delivery order for buffered frames;
@@ -14,7 +15,7 @@
 use std::time::Duration;
 
 use moniqua::transport::{
-    Frame, FrameKind, MemTransport, TcpTransport, Transport, TransportError,
+    Frame, FrameKind, MemTransport, NbTcpTransport, TcpTransport, Transport, TransportError,
 };
 
 fn frame(round: u64, sender: u16, payload: Vec<u8>) -> Frame {
@@ -39,6 +40,14 @@ fn mem_cluster(n: usize) -> Vec<Box<dyn Transport>> {
 
 fn tcp_cluster(n: usize) -> Vec<Box<dyn Transport>> {
     TcpTransport::cluster(n, 0)
+        .expect("bind loopback listeners")
+        .into_iter()
+        .map(|t| Box::new(t) as Box<dyn Transport>)
+        .collect()
+}
+
+fn nb_tcp_cluster(n: usize) -> Vec<Box<dyn Transport>> {
+    NbTcpTransport::cluster(n, 0)
         .expect("bind loopback listeners")
         .into_iter()
         .map(|t| Box::new(t) as Box<dyn Transport>)
@@ -256,6 +265,74 @@ fn tcp_large_frames() {
 #[test]
 fn tcp_recv_timeout() {
     recv_timeout(tcp_cluster);
+}
+
+// ---------------------------------------------------------- nb_tcp harness
+// The nonblocking transport the reactor rides on: same sockets as tcp, but
+// accept/read/write all happen inside `recv`/`broadcast` on the caller's
+// thread (no reader threads), with partial frames reassembled across calls.
+
+#[test]
+fn nb_tcp_per_sender_fifo() {
+    per_sender_fifo(nb_tcp_cluster);
+}
+
+#[test]
+fn nb_tcp_round_sender_order() {
+    round_sender_order_of_buffered(nb_tcp_cluster);
+}
+
+#[test]
+fn nb_tcp_broadcast_reaches_every_peer() {
+    broadcast_reaches_every_peer(nb_tcp_cluster);
+}
+
+#[test]
+fn nb_tcp_concurrent_senders() {
+    concurrent_senders(nb_tcp_cluster);
+}
+
+#[test]
+fn nb_tcp_large_frames() {
+    large_frames(nb_tcp_cluster);
+}
+
+#[test]
+fn nb_tcp_recv_timeout() {
+    recv_timeout(nb_tcp_cluster);
+}
+
+#[test]
+fn nb_tcp_zero_timeout_recv_never_blocks() {
+    // The reactor's readiness loop drains with `recv(Duration::ZERO)`: one
+    // I/O pass, buffered frames out, then a typed Timeout — never a sleep.
+    let mut eps = nb_tcp_cluster(2);
+    let mut rx = eps.remove(0);
+    let mut tx = eps.remove(0);
+    let t0 = std::time::Instant::now();
+    assert_eq!(rx.recv(Duration::ZERO).unwrap_err(), TransportError::Timeout);
+    assert!(t0.elapsed() < Duration::from_secs(1), "zero-timeout recv blocked");
+    for round in 0..8u64 {
+        tx.send(0, &frame(round, 1, vec![round as u8; 9])).unwrap();
+    }
+    // Sent frames become visible to zero-timeout polling without any
+    // blocking recv in between (the send side flushes eagerly; the recv
+    // side reassembles whatever the kernel has delivered so far).
+    let mut got = 0u64;
+    let deadline = std::time::Instant::now() + RECV;
+    while got < 8 {
+        match rx.recv(Duration::ZERO) {
+            Ok(f) => {
+                assert_eq!(f.round, got, "poll-drained frames out of order");
+                got += 1;
+            }
+            Err(TransportError::Timeout) => {
+                assert!(std::time::Instant::now() < deadline, "frames never arrived");
+                std::thread::yield_now();
+            }
+            Err(e) => panic!("unexpected transport error: {e:?}"),
+        }
+    }
 }
 
 #[test]
