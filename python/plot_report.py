@@ -1,0 +1,228 @@
+"""Plotting helpers for the Rust trainer's report CSVs.
+
+The CLI (``moniqua train ... csv=out.csv``) and every bench write the trace
+schema from ``rust/src/coordinator/metrics.rs``::
+
+    algorithm,step,sim_time_s,train_loss,eval_loss,eval_acc,consensus_linf,bytes_total,theta
+
+``eval_acc`` and ``theta`` are *optional*: algorithms without an accuracy
+metric or a theta schedule leave the field **empty** (not ``nan``, not
+``"None"``). These helpers parse empties to ``None``, skip them when
+building plot series, and write them back out as empties — so a CSV that
+passes through Python (filtering, merging, re-plotting) is byte-identical
+to what the Rust side wrote.
+
+matplotlib is optional: ``plot_loss_vs_time`` degrades to a no-op returning
+``False`` when it is not installed, so the parsing half is usable (and
+testable) on a bare stdlib interpreter.
+
+Usage::
+
+    python3 plot_report.py report.csv -o fig.png
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+
+HEADER = [
+    "algorithm",
+    "step",
+    "sim_time_s",
+    "train_loss",
+    "eval_loss",
+    "eval_acc",
+    "consensus_linf",
+    "bytes_total",
+    "theta",
+]
+
+# Fields that the Rust writer leaves empty when the value is absent.
+OPTIONAL_FIELDS = ("eval_acc", "theta")
+
+try:  # pragma: no cover - exercised only where matplotlib exists
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    HAVE_MPL = True
+except ImportError:  # pragma: no cover
+    plt = None
+    HAVE_MPL = False
+
+
+def _parse_field(name, text):
+    """One CSV cell -> typed value. Empty optionals become None."""
+    if name in OPTIONAL_FIELDS and text == "":
+        return None
+    if name == "algorithm":
+        return text
+    if name in ("step", "bytes_total"):
+        return int(text)
+    return float(text)
+
+
+def load_report(source):
+    """Parse a report CSV (path or file object) into a list of row dicts.
+
+    Each row maps the header names to typed values (``None`` for empty
+    optionals) and keeps the original cell strings under ``"_raw"`` so
+    :func:`dump_report` can round-trip the file byte-for-byte.
+    """
+    if hasattr(source, "read"):
+        return _load(source)
+    with open(source, newline="") as f:
+        return _load(f)
+
+
+def _load(f):
+    reader = csv.reader(f)
+    try:
+        header = next(reader)
+    except StopIteration:
+        raise ValueError("empty report CSV: no header row")
+    if header != HEADER:
+        raise ValueError(f"unexpected report header {header!r}; want {HEADER!r}")
+    rows = []
+    for lineno, cells in enumerate(reader, start=2):
+        if not cells:
+            continue
+        if len(cells) != len(HEADER):
+            raise ValueError(
+                f"line {lineno}: {len(cells)} fields, want {len(HEADER)}"
+            )
+        row = {name: _parse_field(name, cell) for name, cell in zip(HEADER, cells)}
+        row["_raw"] = list(cells)
+        rows.append(row)
+    return rows
+
+
+def _format_field(name, value):
+    """Typed value -> CSV cell, mirroring the Rust writer's conventions."""
+    if value is None:
+        return ""
+    if name == "algorithm":
+        return str(value)
+    if name in ("step", "bytes_total"):
+        return str(int(value))
+    if name == "eval_acc":
+        return f"{value:.4f}"
+    if name == "theta":
+        return f"{value:.4e}"
+    return f"{value:.6e}"
+
+
+def dump_report(rows, dest=None):
+    """Write rows back to report-CSV text.
+
+    Rows that still carry their ``"_raw"`` cells (i.e. came from
+    :func:`load_report` and were not edited) are emitted verbatim, which
+    makes load -> dump the identity on any Rust-written file — empty
+    optionals stay empty. Synthesized rows are formatted field by field.
+    Returns the CSV text; if ``dest`` is given, also writes it there.
+    """
+    out = io.StringIO()
+    out.write(",".join(HEADER) + "\n")
+    for row in rows:
+        raw = row.get("_raw")
+        if raw is not None and len(raw) == len(HEADER):
+            cells = raw
+        else:
+            cells = [_format_field(name, row.get(name)) for name in HEADER]
+        out.write(",".join(cells) + "\n")
+    text = out.getvalue()
+    if dest is not None:
+        if hasattr(dest, "write"):
+            dest.write(text)
+        else:
+            with open(dest, "w", newline="") as f:
+                f.write(text)
+    return text
+
+
+def algorithms(rows):
+    """Distinct algorithm names, in first-appearance order."""
+    seen = []
+    for row in rows:
+        if row["algorithm"] not in seen:
+            seen.append(row["algorithm"])
+    return seen
+
+
+def series(rows, x, y, algorithm=None):
+    """(xs, ys) for plotting, skipping rows where either field is None.
+
+    Optional fields produce ragged traces (eval_acc only on eval steps,
+    theta only for Moniqua); dropping the Nones here is what lets a single
+    plotting loop handle every algorithm.
+    """
+    xs, ys = [], []
+    for row in rows:
+        if algorithm is not None and row["algorithm"] != algorithm:
+            continue
+        xv, yv = row[x], row[y]
+        if xv is None or yv is None:
+            continue
+        xs.append(xv)
+        ys.append(yv)
+    return xs, ys
+
+
+def plot_loss_vs_time(rows, out_path, y="eval_loss", logy=True):
+    """Loss-vs-simulated-time curves, one line per algorithm (Figure 1's
+    shape). Returns True if a figure was written, False when matplotlib is
+    unavailable."""
+    if not HAVE_MPL:
+        return False
+    fig, ax = plt.subplots(figsize=(6, 4))
+    for algo in algorithms(rows):
+        xs, ys = series(rows, "sim_time_s", y, algorithm=algo)
+        if xs:
+            ax.plot(xs, ys, marker="o", markersize=3, label=algo)
+    ax.set_xlabel("simulated time (s)")
+    ax.set_ylabel(y.replace("_", " "))
+    if logy:
+        ax.set_yscale("log")
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(out_path, dpi=150)
+    plt.close(fig)
+    return True
+
+
+def summarize(rows, out=sys.stdout):
+    """Plain-text fallback: final loss / bytes / theta per algorithm."""
+    for algo in algorithms(rows):
+        mine = [r for r in rows if r["algorithm"] == algo]
+        last = mine[-1]
+        theta = "-" if last["theta"] is None else f"{last['theta']:.4e}"
+        acc = "-" if last["eval_acc"] is None else f"{last['eval_acc']:.4f}"
+        out.write(
+            f"{algo:<16} steps={last['step']:<6} "
+            f"eval_loss={last['eval_loss']:.6e} acc={acc} "
+            f"bytes={last['bytes_total']} theta={theta}\n"
+        )
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("csv", help="report CSV written by the Rust trainer")
+    p.add_argument("-o", "--out", help="output figure path (.png)")
+    p.add_argument("--y", default="eval_loss", choices=["eval_loss", "train_loss"])
+    args = p.parse_args(argv)
+    rows = load_report(args.csv)
+    if args.out and plot_loss_vs_time(rows, args.out, y=args.y):
+        print(f"wrote {args.out}")
+    else:
+        if args.out:
+            print("matplotlib unavailable; text summary instead:", file=sys.stderr)
+        summarize(rows)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

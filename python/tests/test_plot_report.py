@@ -1,0 +1,119 @@
+"""Round-trip tests for the report-CSV plotting helpers (stdlib only).
+
+The load -> dump identity on Rust-written CSVs is the contract satellite of
+the telemetry PR: empty optional fields (``eval_acc``, ``theta``) must come
+back as ``None`` in Python and as **empty cells** on the way out — never
+``"None"``, ``"nan"``, or a dropped column.
+"""
+
+import io
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import plot_report  # noqa: E402
+
+# Byte-for-byte what rust/src/coordinator/metrics.rs::to_csv emits: dpsgd
+# rows leave eval_acc AND theta empty; moniqua rows carry theta, and only
+# eval steps carry eval_acc.
+RUST_CSV = (
+    "algorithm,step,sim_time_s,train_loss,eval_loss,eval_acc,consensus_linf,bytes_total,theta\n"
+    "dpsgd,0,1.250000e-1,9.876543e-1,9.900000e-1,,1.234567e-2,4096,\n"
+    "dpsgd,4,5.000000e-1,5.432100e-1,5.500000e-1,0.8125,6.543210e-3,16384,\n"
+    "moniqua,0,1.250000e-1,9.876543e-1,9.900000e-1,,1.234567e-2,1024,2.0000e0\n"
+    "moniqua,4,5.000000e-1,5.000000e-1,5.100000e-1,0.8750,5.000000e-3,4096,2.0000e0\n"
+)
+
+
+class LoadTest(unittest.TestCase):
+    def test_empty_optionals_parse_to_none(self):
+        rows = plot_report.load_report(io.StringIO(RUST_CSV))
+        self.assertEqual(len(rows), 4)
+        self.assertIsNone(rows[0]["eval_acc"])
+        self.assertIsNone(rows[0]["theta"])
+        self.assertEqual(rows[1]["eval_acc"], 0.8125)
+        self.assertIsNone(rows[1]["theta"])
+        self.assertEqual(rows[2]["theta"], 2.0)
+        self.assertEqual(rows[3]["eval_acc"], 0.875)
+
+    def test_typed_fields(self):
+        rows = plot_report.load_report(io.StringIO(RUST_CSV))
+        self.assertEqual(rows[0]["algorithm"], "dpsgd")
+        self.assertIsInstance(rows[0]["step"], int)
+        self.assertIsInstance(rows[0]["bytes_total"], int)
+        self.assertIsInstance(rows[0]["sim_time_s"], float)
+        self.assertEqual(rows[1]["bytes_total"], 16384)
+
+    def test_rejects_wrong_header_and_ragged_rows(self):
+        with self.assertRaises(ValueError):
+            plot_report.load_report(io.StringIO("a,b,c\n1,2,3\n"))
+        bad = RUST_CSV + "dpsgd,8,1.0\n"
+        with self.assertRaises(ValueError):
+            plot_report.load_report(io.StringIO(bad))
+
+
+class RoundTripTest(unittest.TestCase):
+    def test_load_dump_is_byte_identity(self):
+        rows = plot_report.load_report(io.StringIO(RUST_CSV))
+        self.assertEqual(plot_report.dump_report(rows), RUST_CSV)
+
+    def test_synthesized_rows_write_empty_optionals(self):
+        row = {
+            "algorithm": "dpsgd",
+            "step": 8,
+            "sim_time_s": 1.0,
+            "train_loss": 0.25,
+            "eval_loss": 0.26,
+            "eval_acc": None,
+            "consensus_linf": 1e-3,
+            "bytes_total": 32768,
+            "theta": None,
+        }
+        text = plot_report.dump_report([row])
+        line = text.splitlines()[1]
+        cells = line.split(",")
+        self.assertEqual(len(cells), len(plot_report.HEADER))
+        self.assertEqual(cells[5], "")  # eval_acc stays EMPTY, not "None"
+        self.assertEqual(cells[8], "")  # theta stays EMPTY
+        # ... and the emptiness survives a second pass through the loader.
+        again = plot_report.load_report(io.StringIO(text))
+        self.assertIsNone(again[0]["eval_acc"])
+        self.assertIsNone(again[0]["theta"])
+
+    def test_dump_to_file_object(self):
+        rows = plot_report.load_report(io.StringIO(RUST_CSV))
+        buf = io.StringIO()
+        plot_report.dump_report(rows, buf)
+        self.assertEqual(buf.getvalue(), RUST_CSV)
+
+
+class SeriesTest(unittest.TestCase):
+    def test_series_skips_none_rows(self):
+        rows = plot_report.load_report(io.StringIO(RUST_CSV))
+        xs, ys = plot_report.series(rows, "sim_time_s", "eval_acc", algorithm="dpsgd")
+        self.assertEqual((xs, ys), ([0.5], [0.8125]))
+        xs, ys = plot_report.series(rows, "step", "theta", algorithm="moniqua")
+        self.assertEqual((xs, ys), ([0, 4], [2.0, 2.0]))
+        xs, ys = plot_report.series(rows, "step", "theta", algorithm="dpsgd")
+        self.assertEqual((xs, ys), ([], []))
+
+    def test_algorithms_in_first_appearance_order(self):
+        rows = plot_report.load_report(io.StringIO(RUST_CSV))
+        self.assertEqual(plot_report.algorithms(rows), ["dpsgd", "moniqua"])
+
+
+class SummarizeTest(unittest.TestCase):
+    def test_summary_renders_missing_optionals_as_dash(self):
+        rows = plot_report.load_report(io.StringIO(RUST_CSV))
+        out = io.StringIO()
+        plot_report.summarize(rows, out)
+        text = out.getvalue()
+        self.assertIn("dpsgd", text)
+        self.assertIn("theta=-", text)
+        self.assertIn("theta=2.0000e+00", text)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -116,6 +116,7 @@ fn main() {
                 trainer.wire_bytes_sent,
                 report.final_loss(),
             );
+            json.telemetry(&format!("{name}.{tname}"), &trainer.metrics().snapshot());
         }
         assert!(
             totals.windows(2).all(|w| w[0] == w[1]),

@@ -178,6 +178,49 @@ impl BenchJson {
             .metric(&format!("{tag}.final_loss"), final_loss)
     }
 
+    /// Flatten a telemetry [`Snapshot`](crate::telemetry::Snapshot) into
+    /// the bench's metric map under `<tag>.metrics.*`: barrier-wait
+    /// p50/p99/mean, reactor poll-iteration and machines-driven counts,
+    /// and bytes-by-kind. Zero-count histograms contribute nothing (their
+    /// quantiles would be meaningless), so lockstep/DES snapshots only
+    /// emit the families they actually populate.
+    pub fn telemetry(
+        &mut self,
+        tag: &str,
+        snap: &crate::telemetry::Snapshot,
+    ) -> &mut Self {
+        use crate::telemetry::{Counter, Hist};
+        let barrier = snap.hist(Hist::BarrierWaitNs);
+        if barrier.count > 0 {
+            self.metric(
+                &format!("{tag}.metrics.barrier_wait_p50_ns"),
+                barrier.quantile_ns(0.50) as f64,
+            )
+            .metric(
+                &format!("{tag}.metrics.barrier_wait_p99_ns"),
+                barrier.quantile_ns(0.99) as f64,
+            )
+            .metric(&format!("{tag}.metrics.barrier_wait_mean_ns"), barrier.mean_ns());
+        }
+        let polls = snap.counter(Counter::ReactorPolls);
+        if polls > 0 {
+            self.metric(&format!("{tag}.metrics.reactor_polls"), polls as f64)
+                .metric(
+                    &format!("{tag}.metrics.reactor_machines_driven"),
+                    snap.counter(Counter::ReactorMachinesDriven) as f64,
+                );
+        }
+        self.metric(
+            &format!("{tag}.metrics.bytes_sent_data"),
+            snap.counter(Counter::BytesSentData) as f64,
+        )
+        .metric(
+            &format!("{tag}.metrics.bytes_sent_bootstrap"),
+            snap.counter(Counter::BytesSentBootstrap) as f64,
+        )
+        .metric(&format!("{tag}.metrics.frames_sent"), snap.frames_sent() as f64)
+    }
+
     fn render(&self) -> String {
         fn esc(s: &str) -> String {
             s.chars()
@@ -279,6 +322,35 @@ mod tests {
         assert!(text.contains("algo\\\"rithm"));
         assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_unit_test.json");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bench_json_telemetry_section() {
+        use crate::telemetry::{Counter, Hist, Registry, Telemetry};
+        let reg = Registry::new();
+        let t = Telemetry::new(&reg, 0);
+        t.record(Counter::BytesSentData, 4096);
+        t.record(Counter::FramesSentData, 2);
+        t.record(Counter::ReactorPolls, 10);
+        t.record(Counter::ReactorMachinesDriven, 40);
+        t.observe(Hist::BarrierWaitNs, 1000);
+        t.observe(Hist::BarrierWaitNs, 3000);
+        let snap = reg.snapshot();
+        let mut j = BenchJson::new("telemetry_section");
+        j.telemetry("run", &snap);
+        let text = j.render();
+        assert!(text.contains("\"run.metrics.barrier_wait_p50_ns\""));
+        assert!(text.contains("\"run.metrics.reactor_polls\": 1e1"));
+        assert!(text.contains("\"run.metrics.bytes_sent_data\": 4.096e3"));
+        assert!(text.contains("\"run.metrics.frames_sent\": 2e0"));
+        // An empty registry emits only the always-present byte counters.
+        let empty = Registry::new().snapshot();
+        let mut j2 = BenchJson::new("telemetry_empty");
+        j2.telemetry("run", &empty);
+        let text2 = j2.render();
+        assert!(!text2.contains("barrier_wait"));
+        assert!(!text2.contains("reactor_polls"));
+        assert!(text2.contains("\"run.metrics.bytes_sent_data\": 0e0"));
     }
 
     #[test]

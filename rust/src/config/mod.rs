@@ -16,6 +16,7 @@ use crate::elastic::{ElasticConfig, MembershipPlan};
 use crate::data::partition::Partition;
 use crate::network::{LinkMatrix, NetworkConfig};
 use crate::quant::{Compression, QuantConfig, Rounding};
+use crate::telemetry::MetricsMode;
 use crate::topology::{Topology, TopologySchedule};
 
 /// Ordered string map with typed access.
@@ -324,6 +325,22 @@ impl Config {
         Ok(Some(ElasticConfig { plan, ckpt_every, ckpt_dir, skip_bootstrap }))
     }
 
+    /// Metrics export from `metrics=off|json|prom` (default off) and
+    /// `metrics_path=PATH` (default `moniqua_metrics.json` /
+    /// `moniqua_metrics.prom` by mode). Returns `(mode, path)`; the path is
+    /// meaningless (but still defaulted) when the mode is `off`. The
+    /// telemetry plane *records* unconditionally — this key gates only
+    /// whether a snapshot is exported at the end of the run, which is why
+    /// `metrics=json` runs are bitwise-identical to `metrics=off` runs.
+    pub fn metrics(&self) -> Result<(MetricsMode, String)> {
+        let mode = MetricsMode::parse_mode(self.str_or("metrics", "off"))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let path = self
+            .str_or("metrics_path", mode.default_path())
+            .to_string();
+        Ok((mode, path))
+    }
+
     pub fn partition(&self) -> Result<Partition> {
         match self.str_or("partition", "iid") {
             "iid" => Ok(Partition::Iid),
@@ -493,6 +510,29 @@ mod tests {
         assert!(Config::from_str_cfg("churn=dance@3:0").unwrap().elastic().is_err());
         // no keys → None
         assert!(Config::from_str_cfg("workers=4").unwrap().elastic().unwrap().is_none());
+    }
+
+    #[test]
+    fn metrics_keys_parse_and_validate() {
+        // Default: export off, path defaulted but unused.
+        let (mode, _) = Config::from_str_cfg("").unwrap().metrics().unwrap();
+        assert_eq!(mode, MetricsMode::Off);
+        // Mode picks the default filename…
+        let (mode, path) =
+            Config::from_str_cfg("metrics=prom").unwrap().metrics().unwrap();
+        assert_eq!(mode, MetricsMode::Prom);
+        assert_eq!(path, "moniqua_metrics.prom");
+        let (_, path) =
+            Config::from_str_cfg("metrics=json").unwrap().metrics().unwrap();
+        assert_eq!(path, "moniqua_metrics.json");
+        // …and metrics_path overrides it.
+        let (_, path) =
+            Config::from_str_cfg("metrics=json\nmetrics_path=/tmp/m.json")
+                .unwrap()
+                .metrics()
+                .unwrap();
+        assert_eq!(path, "/tmp/m.json");
+        assert!(Config::from_str_cfg("metrics=csv").unwrap().metrics().is_err());
     }
 
     #[test]

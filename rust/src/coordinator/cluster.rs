@@ -109,9 +109,10 @@ use anyhow::{bail, Context, Result};
 
 use super::metrics::{Report, TraceRow};
 use super::round::{
-    peers_of, recv_until, AbortLatch, BarrierRecv, MachineStatus, NodeResult, NodeSpec,
-    RoundStateMachine, WaitKey,
+    observe_wait_end, peers_of, recv_until, AbortLatch, BarrierRecv, MachineStatus,
+    NodeResult, NodeSpec, RoundStateMachine, WaitKey,
 };
+use crate::telemetry::{Clock, Counter, Registry, Telemetry};
 use super::TrainConfig;
 use crate::algorithms::{Algorithm, SyncAlgorithm, ThetaPolicy};
 use crate::elastic::membership::{epoch_at, ElasticConfig, Epoch};
@@ -207,6 +208,13 @@ pub struct ClusterTrainer {
     /// `run` error names only the origin; tests and callers that need the
     /// full picture read this.
     pub failures: Vec<WorkerFailure>,
+    /// Per-run telemetry registry (sharded counters + log2 histograms).
+    /// Every transport endpoint and round machine records into it on its
+    /// own worker shard; recording is always on (a few relaxed-atomic adds
+    /// per event) and only the *export* is gated by the `metrics=` config —
+    /// so a metrics-enabled run is bitwise the metrics-off run by
+    /// construction.
+    metrics: Registry,
 }
 
 impl ClusterTrainer {
@@ -295,6 +303,7 @@ impl ClusterTrainer {
             frames_sent: 0,
             wire_bytes_sent: 0,
             failures: Vec::new(),
+            metrics: Registry::new(),
         })
     }
 
@@ -303,12 +312,21 @@ impl ClusterTrainer {
         self.rho
     }
 
+    /// The run's telemetry registry — snapshot it *after* `run` returns
+    /// (snapshotting allocates; the hot path never does).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
     /// Run the experiment: spawn the cluster, train, reassemble the
     /// [`Report`] from the per-node traces.
     pub fn run(&mut self) -> Result<Report> {
         let n = self.cfg.workers;
         let d = self.objective.dim();
         self.failures.clear();
+        // Fresh registry per run: like `frames_sent`, the counters describe
+        // the *last* run, not the trainer's lifetime.
+        self.metrics = Registry::new();
 
         let mut engines: Vec<_> = (0..n)
             .map(|_| self.cfg.algorithm.make_sync(&self.epochs[0].matrix, d))
@@ -346,7 +364,7 @@ impl ClusterTrainer {
         };
 
         let use_reactor = matches!(self.cluster.driver, DriverKind::Reactor { .. });
-        let transports: Vec<Box<dyn Transport>> = match self.cluster.transport {
+        let mut transports: Vec<Box<dyn Transport>> = match self.cluster.transport {
             TransportKind::Mem => MemTransport::cluster_prewarmed(n, working_set, 4 * d + 64)
                 .into_iter()
                 .map(|t| Box::new(t) as Box<dyn Transport>)
@@ -366,6 +384,12 @@ impl ClusterTrainer {
                 .map(|t| Box::new(t) as Box<dyn Transport>)
                 .collect(),
         };
+        // Each endpoint attributes its frames/bytes/pool traffic to its own
+        // worker's shard; drivers record wait/latency histograms on the
+        // same shard through the spec below.
+        for (i, t) in transports.iter_mut().enumerate() {
+            t.set_metrics(Telemetry::new(&self.metrics, i));
+        }
 
         let (ckpt_every, ckpt_dir, skip_bootstrap) = match &self.cluster.elastic {
             Some(e) => (e.ckpt_every, e.ckpt_dir.clone(), e.skip_bootstrap),
@@ -382,6 +406,7 @@ impl ClusterTrainer {
             let epochs: &[Epoch] = &self.epochs;
             let elastic_plan = self.cluster.elastic.as_ref().map(|e| &e.plan);
             let abort = &abort;
+            let registry = self.metrics.clone();
             let make_spec = |i: usize| NodeSpec {
                 cfg: cfg.clone(),
                 recv_timeout,
@@ -396,6 +421,8 @@ impl ClusterTrainer {
                 ckpt_dir: ckpt_dir.clone(),
                 skip_bootstrap,
                 pipeline,
+                telemetry: Telemetry::new(&registry, i),
+                clock: Clock::monotonic(),
             };
             match self.cluster.driver {
                 DriverKind::Threaded => std::thread::scope(|s| {
@@ -445,8 +472,13 @@ impl ClusterTrainer {
                         threads
                     };
                     let threads = threads.clamp(1, n.max(1));
-                    let (rs, fs) =
-                        super::reactor::drive(workers, threads, recv_timeout, abort);
+                    let (rs, fs) = super::reactor::drive(
+                        workers,
+                        threads,
+                        recv_timeout,
+                        abort,
+                        registry.clone(),
+                    );
                     results = rs;
                     failures = fs;
                 }
@@ -561,6 +593,14 @@ impl ClusterTrainer {
             }
         }
         ledger.finish(&mut report);
+        // Measured wire bytes split by frame kind, from the telemetry
+        // plane (the table prints data vs bootstrap next to the model's
+        // payload-only prediction). Lockstep runs leave this None.
+        let snap = self.metrics.snapshot();
+        report.wire_bytes_by_kind = Some((
+            snap.counter(Counter::BytesSentData),
+            snap.counter(Counter::BytesSentBootstrap),
+        ));
         report.final_params = {
             let last_ep = epoch_at(&self.epochs, self.cfg.steps.saturating_sub(1));
             let xs: Vec<&[f32]> = results
@@ -618,21 +658,37 @@ fn run_node(
     // lint: allow(wall_clock) — the wait deadline gates *when* a worker
     // gives up on a barrier, never the bytes of any frame.
     let recv_timeout = spec.recv_timeout;
+    let telemetry = spec.telemetry.clone();
+    let clock = spec.clock.clone();
     let mut sm = RoundStateMachine::new(i, engine, objective, spec);
     // One deadline per barrier/bootstrap wait, keyed by what the machine
     // is blocked on: an arriving frame never resets the clock, so a
     // trickle of stragglers cannot stretch one "recv_timeout" barrier to
     // peers × recv_timeout.
     let mut wait: Option<(WaitKey, Instant)> = None;
+    // Telemetry stamp of the current wait (same key discipline as the
+    // deadline): observed into the barrier/bootstrap histogram when the
+    // machine moves past it.
+    let mut wait_start: Option<(WaitKey, u64)> = None;
     loop {
         match sm.drive(transport.as_mut()) {
-            Ok(MachineStatus::Done) => return Ok(sm.into_result()),
+            Ok(MachineStatus::Done) => {
+                observe_wait_end(&telemetry, &clock, &mut wait_start);
+                return Ok(sm.into_result());
+            }
             Ok(MachineStatus::Waiting(key)) => {
                 let deadline = match wait {
                     Some((k, dl)) if k == key => dl,
                     _ => saturating_deadline(Instant::now(), recv_timeout),
                 };
                 wait = Some((key, deadline));
+                match wait_start {
+                    Some((k, _)) if k == key => {}
+                    _ => {
+                        observe_wait_end(&telemetry, &clock, &mut wait_start);
+                        wait_start = Some((key, clock.now_ns()));
+                    }
+                }
                 match recv_until(transport.as_mut(), deadline, abort) {
                     BarrierRecv::Frame(f) => sm.accept_frame(f),
                     BarrierRecv::TimedOut => {
@@ -799,6 +855,21 @@ mod tests {
         assert!(t.frames_sent > 0);
         assert!(t.wire_bytes_sent as usize > report.total_bytes as usize);
         assert_eq!(report.final_params.len(), 8);
+        // The telemetry plane and the per-node traces count the same wire:
+        // frames and bytes must agree exactly, and nothing may be lost in
+        // flight (conservation).
+        let snap = t.metrics().snapshot();
+        assert_eq!(snap.frames_sent(), t.frames_sent);
+        assert_eq!(
+            snap.counter(Counter::BytesSentData)
+                + snap.counter(Counter::BytesSentBootstrap),
+            t.wire_bytes_sent
+        );
+        assert_eq!(
+            snap.frames_sent(),
+            snap.frames_received() + snap.counter(Counter::FramesRejected)
+        );
+        assert_eq!(report.wire_bytes_by_kind, Some((t.wire_bytes_sent, 0)));
     }
 
     #[test]

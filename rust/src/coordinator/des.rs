@@ -53,6 +53,7 @@ use crate::coordinator::{metrics::TraceRow, Report, TrainConfig};
 use crate::network::LinkMatrix;
 use crate::objectives::Objective;
 use crate::rng::Pcg64;
+use crate::telemetry::{Counter, Hist, Registry, Telemetry, VirtualTime};
 use crate::topology::{Topology, TopologySchedule};
 
 // ---------------------------------------------------------------------------
@@ -330,6 +331,11 @@ pub struct DesTrainer {
     pub messages_sent: u64,
     /// Messages lost to drops (each one retransmitted).
     pub messages_dropped: u64,
+    /// Per-run telemetry. The DES records **virtual** durations — every
+    /// histogram sample is derived from the simulated clock through
+    /// [`VirtualTime`], never the host clock, so a metrics-enabled sim is
+    /// still a pure function of its config.
+    metrics: Registry,
 }
 
 impl DesTrainer {
@@ -381,11 +387,18 @@ impl DesTrainer {
             event_digest: 0,
             messages_sent: 0,
             messages_dropped: 0,
+            metrics: Registry::new(),
         }
     }
 
     pub fn rho(&self) -> f64 {
         self.rho
+    }
+
+    /// The run's telemetry registry (virtual-time samples — see the field
+    /// docs). Snapshot after `run` returns.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// Run the experiment. Model trajectory (losses, consensus, θ, bytes,
@@ -414,6 +427,12 @@ impl DesTrainer {
         let mut total_bytes = 0u64;
         self.messages_sent = 0;
         self.messages_dropped = 0;
+        // Fresh registry per run; all samples flow through the virtual
+        // clock so the sim never reads host time.
+        self.metrics = Registry::new();
+        let telemetry = Telemetry::new(&self.metrics, 0);
+        let vtime = VirtualTime::new();
+        let vclock = vtime.clock();
 
         for step in 0..self.cfg.steps {
             // --- topology swap at the round boundary ----------------------
@@ -448,11 +467,30 @@ impl DesTrainer {
             // --- communication + update (value path — identical) ----------
             let ctx = StepCtx { seed: self.cfg.seed, rho: self.rho, g_inf };
             let stats = self.engine.step(&mut xs, &grads, lr, step, &ctx);
-            total_bytes += stats.bytes_per_msg as u64 * stats.messages
+            let round_bytes = stats.bytes_per_msg as u64 * stats.messages
                 + stats.allreduce_bytes.map_or(0, |b| (2 * (n - 1) * b) as u64);
+            total_bytes += round_bytes;
 
             // --- event-driven round timing --------------------------------
-            now = self.round_barrier(&mut queue, now, step, &adj, &stats);
+            let sent0 = self.messages_sent;
+            let dropped0 = self.messages_dropped;
+            vtime.set_secs(now);
+            let barrier_start_ns = vclock.now_ns();
+            now = self.round_barrier(&mut queue, now, step, &adj, &stats, &telemetry);
+            // Virtual barrier span of this round, plus the round's wire
+            // traffic mirrored into the transport-layer families (a dropped
+            // message is a reject; its retransmission is a fresh send, so
+            // sent = received + rejected holds here too).
+            vtime.set_secs(now);
+            telemetry
+                .observe(Hist::BarrierWaitNs, vclock.now_ns().saturating_sub(barrier_start_ns));
+            let sent = self.messages_sent - sent0;
+            let dropped = self.messages_dropped - dropped0;
+            telemetry.record(Counter::FramesSentData, sent);
+            telemetry.record(Counter::FramesRecvData, sent - dropped);
+            telemetry.record(Counter::FramesRejected, dropped);
+            telemetry.record(Counter::BytesSentData, round_bytes);
+            telemetry.record(Counter::RoundsTotal, n as u64);
 
             // --- trace ----------------------------------------------------
             if step % self.cfg.eval_every == 0 || step + 1 == self.cfg.steps {
@@ -495,13 +533,17 @@ impl DesTrainer {
         round: u64,
         adj: &[Vec<usize>],
         stats: &crate::algorithms::CommStats,
+        telemetry: &Telemetry,
     ) -> f64 {
         let n = self.cfg.workers;
         let seed = self.cfg.seed;
         let faults = self.des.faults;
         for i in 0..n {
             let jitter = faults.compute_jitter(&mut compute_rng(seed, round, i));
-            queue.push(start + self.des.grad_time_s * jitter, Event::ComputeDone { worker: i });
+            let compute_s = self.des.grad_time_s * jitter;
+            // Modeled (virtual) per-worker compute span.
+            telemetry.observe(Hist::GradComputeNs, (compute_s * 1e9) as u64);
+            queue.push(start + compute_s, Event::ComputeDone { worker: i });
         }
 
         if let Some(total) = stats.allreduce_bytes {
@@ -870,6 +912,32 @@ mod tests {
         let want = steps as f64 * per_round;
         let got = r.final_sim_time();
         assert!((got - want).abs() < 1e-9 * want, "got {got} want {want}");
+    }
+
+    #[test]
+    fn telemetry_samples_are_virtual_and_conserve_frames() {
+        // Histogram sums must be derived from the simulated clock: with
+        // grad_time 1 ms and no jitter, every GradComputeNs sample is
+        // exactly 1e6 ns regardless of how long the host took.
+        let net = NetworkConfig::new(1e8, 2e-3);
+        let steps = 5u64;
+        let n = 4usize;
+        let cfg = train_cfg(Algorithm::DPsgd, steps);
+        let des = DesConfig::uniform(n, net, 1e-3);
+        let mut t = DesTrainer::new(cfg, Topology::Ring(n), small_objective(n), des);
+        t.run();
+        let snap = t.metrics().snapshot();
+        let grad = snap.hist(Hist::GradComputeNs);
+        assert_eq!(grad.count, steps * n as u64);
+        assert_eq!(grad.sum, steps * n as u64 * 1_000_000);
+        let barrier = snap.hist(Hist::BarrierWaitNs);
+        assert_eq!(barrier.count, steps);
+        // Mirrored wire traffic: zero faults means nothing is rejected and
+        // conservation is exact.
+        assert_eq!(snap.counter(Counter::FramesSentData), t.messages_sent);
+        assert_eq!(snap.counter(Counter::FramesRejected), 0);
+        assert_eq!(snap.frames_sent(), snap.frames_received());
+        assert_eq!(snap.counter(Counter::RoundsTotal), steps * n as u64);
     }
 
     #[test]

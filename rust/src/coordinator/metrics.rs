@@ -27,6 +27,10 @@ pub struct Report {
     pub trace: Vec<TraceRow>,
     pub total_bytes: u64,
     pub total_messages: u64,
+    /// Measured wire bytes split `(data, bootstrap)`, from the telemetry
+    /// plane. Only runtimes with a real transport fill this; lockstep/DES
+    /// leave it `None` and the table prints "-".
+    pub wire_bytes_by_kind: Option<(u64, u64)>,
     pub extra_memory_floats: usize,
     pub final_params: Vec<f32>,
 }
@@ -40,6 +44,7 @@ impl Report {
             trace: Vec::new(),
             total_bytes: 0,
             total_messages: 0,
+            wire_bytes_by_kind: None,
             extra_memory_floats: 0,
             final_params: Vec::new(),
         }
@@ -99,22 +104,36 @@ impl Report {
 }
 
 /// Pretty-print a set of reports as an aligned comparison table (the form
-/// the benches print for each paper table/figure).
+/// the benches print for each paper table/figure). `messages` is the
+/// modeled message count (previously computed but silently dropped from
+/// the table); `wire_MB(data/boot)` is the *measured* byte split from the
+/// telemetry plane, "-" for runtimes without a transport.
 pub fn comparison_table(reports: &[&Report]) -> String {
     let mut s = String::new();
     s.push_str(&format!(
-        "{:<16} {:>12} {:>10} {:>12} {:>14} {:>12}\n",
-        "algorithm", "final_loss", "acc", "sim_time_s", "MB_on_wire", "extra_mem_MB"
+        "{:<16} {:>12} {:>10} {:>12} {:>14} {:>10} {:>20} {:>12}\n",
+        "algorithm",
+        "final_loss",
+        "acc",
+        "sim_time_s",
+        "MB_on_wire",
+        "messages",
+        "wire_MB(data/boot)",
+        "extra_mem_MB"
     ));
     for r in reports {
         s.push_str(&format!(
-            "{:<16} {:>12.4} {:>10} {:>12.3} {:>14.2} {:>12.3}\n",
+            "{:<16} {:>12.4} {:>10} {:>12.3} {:>14.2} {:>10} {:>20} {:>12.3}\n",
             r.algorithm,
             r.final_loss(),
             r.final_accuracy()
                 .map_or("-".to_string(), |a| format!("{:.1}%", 100.0 * a)),
             r.final_sim_time(),
             r.total_bytes as f64 / 1e6,
+            r.total_messages,
+            r.wire_bytes_by_kind.map_or("-".to_string(), |(data, boot)| {
+                format!("{:.2}/{:.2}", data as f64 / 1e6, boot as f64 / 1e6)
+            }),
             r.extra_memory_floats as f64 * 4.0 / 1e6,
         ));
     }
@@ -164,10 +183,43 @@ mod tests {
     #[test]
     fn table_formats_all_reports() {
         let a = report_with(&[1.0]);
-        let b = report_with(&[0.7]);
+        let mut b = report_with(&[0.7]);
+        b.total_messages = 1234;
+        b.wire_bytes_by_kind = Some((2_000_000, 500_000));
         let t = comparison_table(&[&a, &b]);
         assert_eq!(t.lines().count(), 3);
         assert!(t.contains("final_loss"));
+        // The message column is no longer dropped, and the measured byte
+        // split renders data/bootstrap (or "-" without a transport).
+        assert!(t.contains("messages"));
+        assert!(t.contains("1234"));
+        assert!(t.contains("2.00/0.50"));
+        let row_a = t.lines().nth(1).unwrap();
+        assert!(row_a.contains(" - "));
+    }
+
+    #[test]
+    fn csv_empty_optionals_round_trip() {
+        // Missing eval_acc/theta serialize as *empty* fields (not "NaN",
+        // not "-"), so downstream parsers can distinguish absent from
+        // zero; the python plotting helpers rely on this exact shape.
+        let mut r = Report::new("bare", 2, 4);
+        r.trace.push(TraceRow {
+            step: 0,
+            sim_time_s: 0.5,
+            train_loss: 1.0,
+            eval_loss: 1.0,
+            eval_acc: None,
+            consensus_linf: 0.01,
+            bytes_total: 64,
+            theta: None,
+        });
+        let csv = r.to_csv();
+        let row = csv.lines().nth(1).unwrap();
+        let fields: Vec<&str> = row.split(',').collect();
+        assert_eq!(fields.len(), 9);
+        assert_eq!(fields[5], ""); // eval_acc
+        assert_eq!(fields[8], ""); // theta
     }
 
     #[test]

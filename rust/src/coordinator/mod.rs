@@ -47,6 +47,7 @@ use std::time::Instant;
 use crate::algorithms::{Algorithm, CommStats, StepCtx, SyncAlgorithm};
 use crate::network::{NetworkConfig, NetworkModel};
 use crate::objectives::Objective;
+use crate::telemetry::{Counter, Hist, Registry, Telemetry};
 use crate::topology::Topology;
 
 /// Round accounting shared by the lockstep [`Trainer`] and the cluster
@@ -185,6 +186,10 @@ pub struct Trainer {
     rho: f64,
     deg_max: usize,
     deg_sum: usize,
+    /// Per-run telemetry (rounds + compute-time histogram). The lockstep
+    /// runtime has no transport, so only the round-layer families appear;
+    /// export is gated by the `metrics=` config, recording is always on.
+    metrics: Registry,
 }
 
 impl Trainer {
@@ -203,12 +208,26 @@ impl Trainer {
         let adj = topo.adjacency();
         let deg_max = adj.iter().map(|a| a.len()).max().unwrap_or(0);
         let deg_sum = adj.iter().map(|a| a.len()).sum();
-        Trainer { cfg, topo, objective, engine, rho, deg_max, deg_sum }
+        Trainer {
+            cfg,
+            topo,
+            objective,
+            engine,
+            rho,
+            deg_max,
+            deg_sum,
+            metrics: Registry::new(),
+        }
     }
 
     /// ρ of the communication matrix in use.
     pub fn rho(&self) -> f64 {
         self.rho
+    }
+
+    /// The run's telemetry registry — snapshot after `run` returns.
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
     }
 
     /// Run the experiment, returning the full trace.
@@ -229,6 +248,10 @@ impl Trainer {
             .extra_memory_floats(n, self.topo.edge_count(), d);
         let mut ledger =
             RoundLedger::new(self.cfg.network, n, self.deg_sum, self.deg_max);
+        // Fresh registry per run, recorded on shard 0 (the lockstep loop is
+        // one thread standing in for all n workers).
+        self.metrics = Registry::new();
+        let telemetry = Telemetry::new(&self.metrics, 0);
 
         let mut lr = self.cfg.lr;
         let mut g_inf = 0.0f64;
@@ -247,6 +270,11 @@ impl Trainer {
             train_loss /= n as f64;
             let grad_wall = t0.elapsed().as_secs_f64() / n as f64;
             let grad_time = self.cfg.grad_time_s.unwrap_or(grad_wall);
+            // Reuses the perf timer above — no extra clock reads. One
+            // worker-round per worker per step, matching the cluster's
+            // per-machine accounting.
+            telemetry.observe(Hist::GradComputeNs, (grad_wall * 1e9) as u64);
+            telemetry.record(Counter::RoundsTotal, n as u64);
 
             // --- communication + update ----------------------------------
             let ctx = StepCtx { seed: self.cfg.seed, rho: self.rho, g_inf };

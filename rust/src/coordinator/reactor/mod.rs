@@ -39,8 +39,10 @@
 use std::time::{Duration, Instant};
 
 use super::round::{
-    AbortLatch, MachineStatus, NodeResult, RoundStateMachine, WaitKey, WorkerFailure,
+    observe_wait_end, AbortLatch, MachineStatus, NodeResult, RoundStateMachine, WaitKey,
+    WorkerFailure,
 };
+use crate::telemetry::{Clock, Counter, Hist, Registry, Telemetry};
 use crate::transport::{
     saturating_deadline, Frame, Transport, TransportError, WakeHandle,
 };
@@ -75,6 +77,7 @@ pub(crate) fn drive<'a>(
     threads: usize,
     recv_timeout: Duration,
     abort: &AbortLatch,
+    registry: Registry,
 ) -> (Vec<NodeResult>, Vec<WorkerFailure>) {
     let threads = threads.clamp(1, workers.len().max(1));
     let mut shards: Vec<Vec<ReactorWorker<'a>>> =
@@ -86,8 +89,14 @@ pub(crate) fn drive<'a>(
     let mut failures: Vec<WorkerFailure> = Vec::new();
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(threads);
-        for shard in shards {
-            handles.push(s.spawn(move || drive_shard(shard, recv_timeout, abort)));
+        for (t_idx, shard) in shards.into_iter().enumerate() {
+            // Shard-level loop metrics (poll passes, machines driven, wake
+            // latency) land on the driver-thread's shard; the per-worker
+            // barrier waits go through each machine's own handle.
+            let telemetry = Telemetry::new(&registry, t_idx);
+            handles.push(
+                s.spawn(move || drive_shard(shard, recv_timeout, abort, telemetry)),
+            );
         }
         for h in handles {
             match h.join() {
@@ -110,6 +119,10 @@ struct Slot<'a> {
     machine: Option<RoundStateMachine<'a>>,
     transport: Box<dyn Transport>,
     wait: Option<(WaitKey, Instant)>,
+    /// Telemetry stamp of the current wait (same key discipline as the
+    /// deadline): observed into the barrier/bootstrap histogram when the
+    /// machine moves past it.
+    wait_start: Option<(WaitKey, u64)>,
 }
 
 /// One driver thread's readiness loop over its share of the workers.
@@ -117,17 +130,19 @@ fn drive_shard<'a>(
     shard: Vec<ReactorWorker<'a>>,
     recv_timeout: Duration,
     abort: &AbortLatch,
+    telemetry: Telemetry,
 ) -> (Vec<NodeResult>, Vec<WorkerFailure>) {
     // lint: allow(wall_clock) — the per-wait deadlines gate *when* a
     // worker gives up on a barrier, never the bytes of any frame.
     let wake = WakeHandle::new();
     abort.register_waker(&wake);
+    let clock = Clock::monotonic();
     let mut slots: Vec<Slot<'a>> = shard
         .into_iter()
         .map(|w| {
             let mut transport = w.transport;
             transport.set_waker(&wake);
-            Slot { machine: Some(w.machine), transport, wait: None }
+            Slot { machine: Some(w.machine), transport, wait: None, wait_start: None }
         })
         .collect();
     let mut results: Vec<NodeResult> = Vec::new();
@@ -136,7 +151,14 @@ fn drive_shard<'a>(
     // nothing in steady state (frames and their payloads are pooled).
     let mut frames: Vec<Frame> = Vec::new();
     let mut live = slots.len();
+    // Stamped right after a park ends; the gap to the next pass's first
+    // drive is the reactor's wake-to-drive latency.
+    let mut woke_at: Option<u64> = None;
     while live > 0 {
+        telemetry.record(Counter::ReactorPolls, 1);
+        if let Some(w) = woke_at.take() {
+            telemetry.observe(Hist::WakeToDriveNs, clock.now_ns().saturating_sub(w));
+        }
         let mut progressed = false;
         // Sampled once per iteration: a failure mid-pass is observed by
         // the remaining slots on the next pass — "within one poll
@@ -169,8 +191,14 @@ fn drive_shard<'a>(
             for f in frames.drain(..) {
                 machine.accept_frame(f);
             }
+            telemetry.record(Counter::ReactorMachinesDriven, 1);
             match machine.drive(slot.transport.as_mut()) {
                 Ok(MachineStatus::Done) => {
+                    observe_wait_end(
+                        machine.telemetry(),
+                        machine.clock(),
+                        &mut slot.wait_start,
+                    );
                     results.push(machine.into_result());
                     live -= 1;
                     progressed = true;
@@ -187,6 +215,18 @@ fn drive_shard<'a>(
                         }
                     };
                     slot.wait = Some((key, deadline));
+                    match slot.wait_start {
+                        Some((k, _)) if k == key => {}
+                        _ => {
+                            observe_wait_end(
+                                machine.telemetry(),
+                                machine.clock(),
+                                &mut slot.wait_start,
+                            );
+                            slot.wait_start =
+                                Some((key, machine.clock().now_ns()));
+                        }
+                    }
                     if Instant::now() >= deadline {
                         failures.push(abort.trip(machine.timeout_failure()));
                         live -= 1;
@@ -204,6 +244,7 @@ fn drive_shard<'a>(
         }
         if !progressed && live > 0 {
             wake.park_timeout(PARK_TICK);
+            woke_at = Some(clock.now_ns());
         }
     }
     (results, failures)

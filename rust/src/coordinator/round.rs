@@ -41,6 +41,7 @@ use crate::elastic::snapshot::{
     load_checkpoint, write_checkpoint, FrameLog, NodeTrace, Snapshot,
 };
 use crate::objectives::Objective;
+use crate::telemetry::{Clock, Counter, Hist, Telemetry};
 use crate::transport::{Frame, FrameKind, Transport, TransportError, WakeHandle};
 
 /// How often a worker blocked in a barrier/bootstrap wait wakes to poll
@@ -190,6 +191,25 @@ pub(crate) fn recv_until(
     }
 }
 
+/// Close out one barrier/bootstrap wait: observe its duration into the
+/// matching histogram and clear the stamp. Shared by both drivers (the
+/// threaded `run_node` loop and the reactor's `drive_shard`), so the wait
+/// taxonomy cannot drift between them. No-ops when `wait_start` is empty
+/// or telemetry is disabled.
+pub(crate) fn observe_wait_end(
+    telemetry: &Telemetry,
+    clock: &Clock,
+    wait_start: &mut Option<(WaitKey, u64)>,
+) {
+    if let Some((key, t0)) = wait_start.take() {
+        let dt = clock.now_ns().saturating_sub(t0);
+        match key {
+            WaitKey::Barrier { .. } => telemetry.observe(Hist::BarrierWaitNs, dt),
+            WaitKey::Bootstrap { .. } => telemetry.observe(Hist::BootstrapWaitNs, dt),
+        }
+    }
+}
+
 /// Everything one worker brings home.
 pub(crate) struct NodeResult {
     pub(crate) worker: usize,
@@ -214,6 +234,13 @@ pub(crate) struct NodeSpec<'a> {
     /// Send-early pipelining: PreGradient engines ship their round frame
     /// before the gradient step (see `ClusterConfig::pipeline`).
     pub(crate) pipeline: bool,
+    /// Recording handle on this worker's shard (disabled when the run has
+    /// no registry). Telemetry is observation-only: nothing recorded here
+    /// ever feeds back into model bytes (DESIGN.md §Telemetry).
+    pub(crate) telemetry: Telemetry,
+    /// Time source for duration histograms: monotonic under the cluster
+    /// drivers, [`Clock::Disabled`] when telemetry is off.
+    pub(crate) clock: Clock,
 }
 
 /// This worker's peer set during an epoch.
@@ -474,6 +501,18 @@ impl<'a> RoundStateMachine<'a> {
         self.round
     }
 
+    /// This worker's telemetry handle (shard = worker index) — drivers
+    /// borrow it to observe barrier/bootstrap waits on the machine's shard.
+    pub(crate) fn telemetry(&self) -> &Telemetry {
+        &self.spec.telemetry
+    }
+
+    /// The clock the machine's spec carries (monotonic under the cluster
+    /// drivers, virtual under DES, disabled in unit tests).
+    pub(crate) fn clock(&self) -> &Clock {
+        &self.spec.clock
+    }
+
     /// The epoch covering the machine's current round. `spec.epochs` is a
     /// borrowed slice, so the returned reference is independent of `self`.
     fn cur_ep(&self) -> &'a Epoch {
@@ -692,6 +731,11 @@ impl<'a> RoundStateMachine<'a> {
             .loss_grad(self.i, self.round, &self.x, &mut self.grad);
         self.g_inf = self.g_inf.max(crate::linalg::norm_inf(&self.grad) as f64);
         let grad_wall = t0.elapsed().as_secs_f64();
+        // Reuses the perf-accounting timer above — telemetry adds no new
+        // clock reads on this path.
+        self.spec
+            .telemetry
+            .observe(Hist::GradComputeNs, (grad_wall * 1e9) as u64);
 
         // Send half (PostGradient engines, or pipelining off).
         let (frame, send_compute) = match sent.take() {
@@ -749,6 +793,10 @@ impl<'a> RoundStateMachine<'a> {
             payload,
         };
         let send_compute = t1.elapsed().as_secs_f64();
+        self.spec
+            .telemetry
+            .observe(Hist::EncodeNs, (send_compute * 1e9) as u64);
+        self.spec.telemetry.record(Counter::CodesPacked, self.d as u64);
         if self.round >= self.live_from {
             // One broadcast call: the frame is serialized + checksummed
             // once and the wire bytes are reused for every peer.
@@ -779,12 +827,17 @@ impl<'a> RoundStateMachine<'a> {
         // allocation-free path (Inbox::from_frames).
         self.got.sort_unstable_by_key(|f| f.sender);
         let ctx = StepCtx { seed: self.seed, rho: self.cur_ep().rho, g_inf: self.g_inf };
+        let c0 = self.spec.clock.now_ns();
         let stats = {
             let inbox = Inbox::from_frames(&self.got);
             self.engine.node_recv(
                 self.i, &mut self.x, &self.grad, self.lr, self.round, &ctx, &inbox,
             )
         };
+        self.spec
+            .telemetry
+            .observe(Hist::DecodeNs, self.spec.clock.now_ns().saturating_sub(c0));
+        self.spec.telemetry.record(Counter::RoundsTotal, 1);
         // Consumed payload buffers go back to the transport's wire pool.
         for f in self.got.drain(..) {
             transport.recycle(f.payload);
@@ -810,6 +863,7 @@ impl<'a> RoundStateMachine<'a> {
             && (self.round + 1) % self.spec.ckpt_every == 0
         {
             if let Some(dir) = self.spec.ckpt_dir.as_ref() {
+                let ck0 = self.spec.clock.now_ns();
                 let mut engine_blob = self.arena.take_bytes();
                 self.engine.snapshot(&mut engine_blob);
                 let snap = Snapshot {
@@ -839,6 +893,10 @@ impl<'a> RoundStateMachine<'a> {
                         log.append(f).expect("re-log pending bootstrap");
                     }
                 }
+                self.spec.telemetry.observe(
+                    Hist::CkptWriteNs,
+                    self.spec.clock.now_ns().saturating_sub(ck0),
+                );
             }
         }
     }
@@ -858,6 +916,7 @@ impl<'a> RoundStateMachine<'a> {
         for f in FrameLog::read_all(dir, self.i)
             .unwrap_or_else(|e| panic!("worker {}: corrupt frame log: {e}", self.i))
         {
+            self.spec.telemetry.record(Counter::WalReplays, 1);
             match f.kind {
                 FrameKind::Data => {
                     validate_data_frame(self.i, &f, &self.spec);
@@ -923,6 +982,7 @@ impl<'a> RoundStateMachine<'a> {
     pub(crate) fn accept_frame(&mut self, f: Frame) {
         if let Some(log) = self.framelog.as_mut() {
             log.append(&f).expect("frame log append");
+            self.spec.telemetry.record(Counter::WalAppends, 1);
         }
         match self.phase {
             Phase::AwaitBarrier => {
@@ -1081,6 +1141,8 @@ mod tests {
                     ckpt_dir: None,
                     skip_bootstrap: false,
                     pipeline: true,
+                    telemetry: Telemetry::disabled(),
+                    clock: Clock::disabled(),
                 };
                 RoundStateMachine::new(i, engine, objective(), spec)
             })

@@ -86,6 +86,7 @@ pub mod objectives;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod telemetry;
 pub mod testing;
 pub mod topology;
 pub mod transport;
@@ -104,5 +105,6 @@ pub mod prelude {
     pub use crate::objectives::{Objective, ObjectiveKind};
     pub use crate::quant::{QuantConfig, Rounding};
     pub use crate::rng::Pcg64;
+    pub use crate::telemetry::{Clock, MetricsMode, Registry, Snapshot, Telemetry, VirtualTime};
     pub use crate::topology::{Topology, TopologySchedule};
 }

@@ -12,7 +12,12 @@
 //! (ring/torus:RxC/...), `network` (fig1a..fig1d/fig2b/none),
 //! `objective` (quadratic|logistic|mlp|transformer), `partition`
 //! (iid|by_label), `threads` (round-engine pool width; default all cores),
-//! `config` (path to a key=value file), `csv` (output path).
+//! `config` (path to a key=value file), `csv` (output path),
+//! `metrics` (off|json|prom — export the run's telemetry snapshot:
+//! sharded counters + log2 latency histograms across transport, round,
+//! reactor, and quant layers; recording is always on, only the export is
+//! gated, so reports are bitwise-identical either way), `metrics_path`
+//! (export file; defaults to moniqua_metrics.json / .prom by mode).
 //!
 //! Cluster runtime keys (`train runtime=cluster` — one OS thread per
 //! worker exchanging framed messages, bitwise-identical to `runtime=sync`;
@@ -185,6 +190,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
     let tc = train_config(cfg)?;
     let topo = cfg.topology()?;
     let objective = build_objective(cfg, tc.workers)?;
+    let (metrics_mode, metrics_path) = cfg.metrics()?;
     println!(
         "training: algorithm={} workers={} steps={} lr={} topology={topo:?}",
         tc.algorithm.name(),
@@ -192,6 +198,9 @@ fn cmd_train(cfg: &Config) -> Result<()> {
         tc.steps,
         tc.lr
     );
+    // Snapshot of the run's telemetry registry, taken after `run` returns
+    // (never in the hot path); exported below when `metrics=` asks for it.
+    let mut metrics_snapshot: Option<moniqua::telemetry::Snapshot> = None;
     let report = match cfg.str_or("runtime", "sync") {
         "des" => {
             let workers = tc.workers;
@@ -202,6 +211,7 @@ fn cmd_train(cfg: &Config) -> Result<()> {
                 "des: {} messages on the wire, {} dropped, event digest {:#018x}",
                 trainer.messages_sent, trainer.messages_dropped, trainer.event_digest
             );
+            metrics_snapshot = Some(trainer.metrics().snapshot());
             report
         }
         runtime @ ("cluster" | "reactor") => {
@@ -230,12 +240,15 @@ fn cmd_train(cfg: &Config) -> Result<()> {
                  vs {} payload bytes predicted",
                 trainer.frames_sent, trainer.wire_bytes_sent, report.total_bytes
             );
+            metrics_snapshot = Some(trainer.metrics().snapshot());
             report
         }
         "sync" => {
             let mut trainer = Trainer::new(tc, topo, objective);
             println!("rho = {:.4}", trainer.rho());
-            trainer.run()
+            let report = trainer.run();
+            metrics_snapshot = Some(trainer.metrics().snapshot());
+            report
         }
         other => anyhow::bail!("unknown runtime '{other}' (sync|des|cluster|reactor)"),
     };
@@ -253,6 +266,11 @@ fn cmd_train(cfg: &Config) -> Result<()> {
     if let Some(path) = cfg.get("csv") {
         report.write_csv(path)?;
         println!("trace written to {path}");
+    }
+    if let Some(text) = metrics_snapshot.and_then(|s| s.render(metrics_mode)) {
+        std::fs::write(&metrics_path, &text)
+            .with_context(|| format!("write metrics to {metrics_path}"))?;
+        println!("metrics written to {metrics_path}");
     }
     Ok(())
 }

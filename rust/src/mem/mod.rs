@@ -51,6 +51,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::telemetry::{Counter, Telemetry};
+
 /// Default upper bound on pooled buffers kept per pool — a backstop so a
 /// transient burst (e.g. a crash replay loading a long frame log) cannot
 /// pin its high-water mark in memory forever. [`FramePool::prewarm`]
@@ -69,6 +71,10 @@ pub struct FramePool {
     /// Retention bound: `give` drops buffers beyond it. Starts at
     /// [`MAX_POOLED`]; `prewarm` raises it (never lowers).
     limit: Arc<AtomicUsize>,
+    /// Per-clone recording handle (hit/miss counters). Deliberately
+    /// per-clone, not shared: each transport attributes checkouts to its
+    /// own worker shard.
+    telemetry: Telemetry,
 }
 
 impl Default for FramePool {
@@ -76,6 +82,7 @@ impl Default for FramePool {
         FramePool {
             bufs: Arc::new(Mutex::new(Vec::new())),
             limit: Arc::new(AtomicUsize::new(MAX_POOLED)),
+            telemetry: Telemetry::disabled(),
         }
     }
 }
@@ -95,11 +102,21 @@ impl FramePool {
         }
     }
 
+    /// Attach a telemetry handle to *this clone* of the pool: subsequent
+    /// [`Self::take`]s record hit/miss on the handle's worker shard.
+    pub fn set_metrics(&mut self, t: Telemetry) {
+        self.telemetry = t;
+    }
+
     /// Check a buffer out: recycled (empty, capacity retained) when one is
     /// pooled, freshly allocated otherwise.
     // lint: hot-path
     pub fn take(&self) -> Vec<u8> {
-        self.locked().pop().unwrap_or_default()
+        let got = self.locked().pop();
+        let hit = got.is_some();
+        self.telemetry
+            .record(if hit { Counter::PoolHit } else { Counter::PoolMiss }, 1);
+        got.unwrap_or_default()
     }
 
     /// Return a buffer to the pool. Contents are cleared; capacity is what
@@ -219,6 +236,24 @@ mod tests {
         let b = pool.take();
         pool.give(b);
         assert_eq!(pool.pooled(), MAX_POOLED + 100, "raised bound retains");
+    }
+
+    #[test]
+    fn frame_pool_counts_hits_and_misses() {
+        use crate::telemetry::Registry;
+        let reg = Registry::new();
+        let mut pool = FramePool::new();
+        pool.set_metrics(Telemetry::new(&reg, 0));
+        let b = pool.take(); // empty pool: miss
+        pool.give(b);
+        let _ = pool.take(); // recycled: hit
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter(Counter::PoolMiss), 1);
+        assert_eq!(snap.counter(Counter::PoolHit), 1);
+        // A clone without the handle records nothing further.
+        let untracked = FramePool::new();
+        let _ = untracked.take();
+        assert_eq!(reg.snapshot().counter(Counter::PoolMiss), 1);
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Time sources for telemetry (§Telemetry in rust/DESIGN.md).
+//!
+//! Every duration the metrics plane records flows through [`Clock`], and
+//! this file is the **only** telemetry code allowed to touch
+//! `std::time::Instant` (it is the sole `wall_clock` lint exemption under
+//! `telemetry/` — `moniqua-lint` flags a raw `Instant` anywhere else in the
+//! tree). The split exists because the repo runs the same round logic under
+//! four runtimes with two different notions of time:
+//!
+//! * The threaded and reactor cluster drivers experience real host time, so
+//!   they record **monotonic** durations ([`Clock::Monotonic`], an
+//!   `Instant` anchor captured at construction).
+//! * The discrete-event simulator *is* the clock: host time would be pure
+//!   noise (and a determinism hazard if it ever leaked into a value path),
+//!   so the DES publishes its virtual `now` into a shared atomic
+//!   ([`VirtualTime`]) and telemetry reads **virtual** nanoseconds.
+//! * Code that has no telemetry attached reads [`Clock::Disabled`], which
+//!   returns 0 — durations computed from it are never observed because the
+//!   matching [`super::Telemetry`] handle is disabled too.
+//!
+//! Reading the clock never feeds back into training values: `now_ns` is
+//! called only to compute histogram observations, which live entirely on
+//! the metrics side (see DESIGN.md §Telemetry for the non-perturbation
+//! argument).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared virtual-time cell: the DES stores its event clock here (in
+/// nanoseconds) and every [`Clock::Virtual`] clone reads it. Relaxed
+/// ordering is sufficient — the cell carries no synchronization duty, only
+/// a monotone timestamp whose consumers tolerate staleness.
+#[derive(Clone, Debug, Default)]
+pub struct VirtualTime(Arc<AtomicU64>);
+
+impl VirtualTime {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish the simulator's current virtual time in nanoseconds.
+    pub fn set_ns(&self, ns: u64) {
+        self.0.store(ns, Ordering::Relaxed);
+    }
+
+    /// Publish the simulator's current virtual time in seconds (the DES
+    /// event loop's native unit). Negative/non-finite inputs clamp to 0.
+    pub fn set_secs(&self, secs: f64) {
+        let ns = if secs.is_finite() && secs > 0.0 { (secs * 1e9) as u64 } else { 0 };
+        self.set_ns(ns);
+    }
+
+    /// A [`Clock`] reading this cell.
+    pub fn clock(&self) -> Clock {
+        Clock::Virtual(self.clone())
+    }
+}
+
+/// A telemetry time source (see module docs for the three variants).
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Host monotonic time, anchored at construction.
+    Monotonic(Instant),
+    /// DES virtual time, read from a shared [`VirtualTime`] cell.
+    Virtual(VirtualTime),
+    /// No time source: `now_ns` is always 0 (paired with a disabled
+    /// [`super::Telemetry`] handle, so nothing derived from it is stored).
+    Disabled,
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::Disabled
+    }
+}
+
+impl Clock {
+    /// A monotonic clock anchored now.
+    pub fn monotonic() -> Self {
+        Clock::Monotonic(Instant::now())
+    }
+
+    pub fn disabled() -> Self {
+        Clock::Disabled
+    }
+
+    /// Nanoseconds since this clock's epoch (the anchor instant, the DES
+    /// run start, or a constant 0 when disabled).
+    // lint: hot-path
+    pub fn now_ns(&self) -> u64 {
+        match self {
+            Clock::Monotonic(anchor) => anchor.elapsed().as_nanos() as u64,
+            Clock::Virtual(vt) => vt.0.load(Ordering::Relaxed),
+            Clock::Disabled => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_clock_advances() {
+        let c = Clock::monotonic();
+        let a = c.now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = c.now_ns();
+        assert!(b > a, "{b} !> {a}");
+    }
+
+    #[test]
+    fn virtual_clock_reads_published_time() {
+        let vt = VirtualTime::new();
+        let c = vt.clock();
+        assert_eq!(c.now_ns(), 0);
+        vt.set_secs(1.5);
+        assert_eq!(c.now_ns(), 1_500_000_000);
+        vt.set_ns(42);
+        assert_eq!(c.now_ns(), 42);
+        vt.set_secs(f64::NAN);
+        assert_eq!(c.now_ns(), 0, "non-finite clamps to 0");
+        vt.set_secs(-3.0);
+        assert_eq!(c.now_ns(), 0, "negative clamps to 0");
+    }
+
+    #[test]
+    fn disabled_clock_is_zero() {
+        assert_eq!(Clock::disabled().now_ns(), 0);
+        assert_eq!(Clock::default().now_ns(), 0);
+    }
+
+    #[test]
+    fn virtual_clones_share_the_cell() {
+        let vt = VirtualTime::new();
+        let a = vt.clock();
+        let b = a.clone();
+        vt.set_ns(7);
+        assert_eq!(a.now_ns(), 7);
+        assert_eq!(b.now_ns(), 7);
+    }
+}

@@ -1,0 +1,885 @@
+//! Zero-overhead telemetry plane (rust/DESIGN.md §Telemetry).
+//!
+//! A preallocated, per-worker-sharded metrics registry instrumenting every
+//! layer of the system — transport (frames/bytes by kind, checksum
+//! rejects, pool hit/miss, nonblocking-TCP backpressure), the round state
+//! machine (barrier/bootstrap waits, WAL activity, checkpoint cuts), the
+//! reactor driver (poll iterations, wake-to-drive latency), and the quant
+//! hot path (encode/decode ns, codes packed) — exported as Prometheus text
+//! exposition or structured JSON behind the `metrics=off|json|prom` /
+//! `metrics_path=` config keys.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Never perturb the value path.** Metrics are always *recorded*
+//!    (`metrics=` gates only export), so a run with export enabled executes
+//!    byte-for-byte the instructions of a run without — bitwise report
+//!    equality between `metrics=off` and `metrics=json` is structural, not
+//!    a property to re-verify per scenario. Nothing in this module is ever
+//!    read back by training code.
+//! 2. **Zero allocation after registration.** [`Registry::new`] allocates
+//!    every counter and histogram cell up front; [`Registry::counter_add`]
+//!    and [`Registry::hist_observe`] are a shard-select, an index, and a
+//!    relaxed `fetch_add` — no locks, no branches that allocate. The
+//!    alloc-discipline suite runs its steady-state window with a live
+//!    registry attached to every transport.
+//! 3. **A few ns per record.** Counters are sharded [`SHARDS`] ways (worker
+//!    id masked to a power of two) so concurrent workers touch disjoint
+//!    cache lines in the common case; relaxed ordering is sound because a
+//!    counter cell carries no synchronization duty — snapshots only need
+//!    eventual per-cell totals, and [`Registry::snapshot`] sums whatever
+//!    values are visible at read time (taken outside the hot path, at eval
+//!    cadence or run end).
+//!
+//! Histograms are fixed log2-bucket: observation `v` (nanoseconds) lands in
+//! bucket `⌈log2(v+1)⌉` clamped to [`BUCKETS`], covering 1 ns to ~4.5 min
+//! with zero configuration and zero allocation. Each histogram also keeps a
+//! relaxed sum and count for mean/quantile summaries.
+//!
+//! Time comes from [`Clock`] (`telemetry/clock.rs`): monotonic for the
+//! threaded/reactor cluster drivers, *virtual* for the DES — the simulator
+//! publishes its event clock and telemetry reads it, so a DES run's
+//! latency histograms are in simulated time and bitwise reproducible.
+
+pub mod clock;
+
+pub use clock::{Clock, VirtualTime};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Counter shards: worker id is masked to this power of two, so up to 16
+/// workers record contention-free and larger clusters alias benignly.
+pub const SHARDS: usize = 16;
+const SHARD_MASK: usize = SHARDS - 1;
+
+/// Log2 histogram buckets: bucket 0 holds zeros, bucket `i` holds
+/// `[2^(i-1), 2^i)` ns, and the last bucket absorbs everything ≥ 2^38 ns
+/// (~4.5 minutes).
+pub const BUCKETS: usize = 40;
+
+/// Every counter the plane tracks. The name prefixes (`transport_`,
+/// `round_`, `reactor_`, `quant_`) are the layer taxonomy the exports and
+/// the CI smoke test key off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Data frames shipped (one per directed peer; a broadcast to k peers
+    /// counts k).
+    FramesSentData,
+    /// Bootstrap (full-precision handshake) frames shipped.
+    FramesSentBootstrap,
+    /// Data frames received and decoded successfully.
+    FramesRecvData,
+    /// Bootstrap frames received and decoded successfully.
+    FramesRecvBootstrap,
+    /// Inbound frames rejected by the decoder (checksum/version/length).
+    FramesRejected,
+    /// Wire bytes (header + payload) shipped in data frames.
+    BytesSentData,
+    /// Wire bytes shipped in bootstrap frames.
+    BytesSentBootstrap,
+    /// Wire bytes received in successfully decoded data frames.
+    BytesRecvData,
+    /// Wire bytes received in successfully decoded bootstrap frames.
+    BytesRecvBootstrap,
+    /// Frame-pool checkouts served from the pool (no allocation).
+    PoolHit,
+    /// Frame-pool checkouts that fell through to the allocator.
+    PoolMiss,
+    /// Nonblocking-TCP writes deferred by `WouldBlock` backpressure.
+    NbWouldBlock,
+    /// Inbound frames assembled from more than one nonblocking read.
+    NbReassemblySplit,
+    /// Frames appended to a node's write-ahead log.
+    WalAppends,
+    /// Frames replayed from a write-ahead log during crash recovery.
+    WalReplays,
+    /// Worker-rounds completed (workers × rounds across the run).
+    RoundsTotal,
+    /// Reactor readiness-loop passes across all shards.
+    ReactorPolls,
+    /// Round machines driven by the reactor (one per `drive` call).
+    ReactorMachinesDriven,
+    /// Quantized codes packed onto the wire (model entries per encode).
+    CodesPacked,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 19] = [
+        Counter::FramesSentData,
+        Counter::FramesSentBootstrap,
+        Counter::FramesRecvData,
+        Counter::FramesRecvBootstrap,
+        Counter::FramesRejected,
+        Counter::BytesSentData,
+        Counter::BytesSentBootstrap,
+        Counter::BytesRecvData,
+        Counter::BytesRecvBootstrap,
+        Counter::PoolHit,
+        Counter::PoolMiss,
+        Counter::NbWouldBlock,
+        Counter::NbReassemblySplit,
+        Counter::WalAppends,
+        Counter::WalReplays,
+        Counter::RoundsTotal,
+        Counter::ReactorPolls,
+        Counter::ReactorMachinesDriven,
+        Counter::CodesPacked,
+    ];
+
+    /// Metric name (Prometheus family name without the `moniqua_` prefix
+    /// and `_total` suffix).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::FramesSentData => "transport_frames_sent_data",
+            Counter::FramesSentBootstrap => "transport_frames_sent_bootstrap",
+            Counter::FramesRecvData => "transport_frames_received_data",
+            Counter::FramesRecvBootstrap => "transport_frames_received_bootstrap",
+            Counter::FramesRejected => "transport_frames_rejected",
+            Counter::BytesSentData => "transport_bytes_sent_data",
+            Counter::BytesSentBootstrap => "transport_bytes_sent_bootstrap",
+            Counter::BytesRecvData => "transport_bytes_received_data",
+            Counter::BytesRecvBootstrap => "transport_bytes_received_bootstrap",
+            Counter::PoolHit => "transport_pool_hit",
+            Counter::PoolMiss => "transport_pool_miss",
+            Counter::NbWouldBlock => "transport_nbtcp_would_block",
+            Counter::NbReassemblySplit => "transport_nbtcp_reassembly_splits",
+            Counter::WalAppends => "round_wal_appends",
+            Counter::WalReplays => "round_wal_replays",
+            Counter::RoundsTotal => "round_rounds",
+            Counter::ReactorPolls => "reactor_poll_iterations",
+            Counter::ReactorMachinesDriven => "reactor_machines_driven",
+            Counter::CodesPacked => "quant_codes_packed",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Counter::FramesSentData => "Data frames shipped through a transport",
+            Counter::FramesSentBootstrap => "Bootstrap frames shipped through a transport",
+            Counter::FramesRecvData => "Data frames received and decoded",
+            Counter::FramesRecvBootstrap => "Bootstrap frames received and decoded",
+            Counter::FramesRejected => "Inbound frames rejected by the decoder",
+            Counter::BytesSentData => "Wire bytes shipped in data frames",
+            Counter::BytesSentBootstrap => "Wire bytes shipped in bootstrap frames",
+            Counter::BytesRecvData => "Wire bytes received in data frames",
+            Counter::BytesRecvBootstrap => "Wire bytes received in bootstrap frames",
+            Counter::PoolHit => "Frame-pool checkouts served without allocating",
+            Counter::PoolMiss => "Frame-pool checkouts that hit the allocator",
+            Counter::NbWouldBlock => "Nonblocking-TCP writes deferred by WouldBlock",
+            Counter::NbReassemblySplit => "Frames reassembled from multiple reads",
+            Counter::WalAppends => "Frames appended to write-ahead logs",
+            Counter::WalReplays => "Frames replayed from write-ahead logs",
+            Counter::RoundsTotal => "Worker-rounds completed",
+            Counter::ReactorPolls => "Reactor readiness-loop iterations",
+            Counter::ReactorMachinesDriven => "Round machines driven by the reactor",
+            Counter::CodesPacked => "Quantized codes packed onto the wire",
+        }
+    }
+}
+
+/// Every latency/duration histogram (values in nanoseconds — virtual ns
+/// under the DES).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// Time a worker spent blocked on a round barrier.
+    BarrierWaitNs,
+    /// Time a joiner spent waiting for its bootstrap frame.
+    BootstrapWaitNs,
+    /// Checkpoint write duration (snapshot encode + durable write + WAL
+    /// truncate).
+    CkptWriteNs,
+    /// Quant encode (engine `node_send`: quantize + pack) duration.
+    EncodeNs,
+    /// Quant decode (engine `node_recv`: unpack + integrate) duration.
+    DecodeNs,
+    /// Reactor latency from a wake-up to the first machine driven.
+    WakeToDriveNs,
+    /// Per-worker gradient computation duration.
+    GradComputeNs,
+}
+
+impl Hist {
+    pub const ALL: [Hist; 7] = [
+        Hist::BarrierWaitNs,
+        Hist::BootstrapWaitNs,
+        Hist::CkptWriteNs,
+        Hist::EncodeNs,
+        Hist::DecodeNs,
+        Hist::WakeToDriveNs,
+        Hist::GradComputeNs,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::BarrierWaitNs => "round_barrier_wait_ns",
+            Hist::BootstrapWaitNs => "round_bootstrap_wait_ns",
+            Hist::CkptWriteNs => "round_ckpt_write_ns",
+            Hist::EncodeNs => "quant_encode_ns",
+            Hist::DecodeNs => "quant_decode_ns",
+            Hist::WakeToDriveNs => "reactor_wake_to_drive_ns",
+            Hist::GradComputeNs => "round_grad_compute_ns",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Hist::BarrierWaitNs => "Nanoseconds blocked on a round barrier",
+            Hist::BootstrapWaitNs => "Nanoseconds waiting for a bootstrap frame",
+            Hist::CkptWriteNs => "Checkpoint cut duration in nanoseconds",
+            Hist::EncodeNs => "Quantize+pack encode duration in nanoseconds",
+            Hist::DecodeNs => "Unpack+integrate decode duration in nanoseconds",
+            Hist::WakeToDriveNs => "Reactor wake-to-drive latency in nanoseconds",
+            Hist::GradComputeNs => "Gradient computation duration in nanoseconds",
+        }
+    }
+}
+
+const N_COUNTERS: usize = Counter::ALL.len();
+const N_HISTS: usize = Hist::ALL.len();
+
+/// Log2 bucket for a nanosecond observation (see [`BUCKETS`]).
+// lint: hot-path
+fn bucket_index(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound (`le`) of cumulative bucket `i`: `2^i - 1` ns.
+fn bucket_le(i: usize) -> u64 {
+    (1u64 << i) - 1
+}
+
+struct Inner {
+    /// `SHARDS × N_COUNTERS`, shard-major.
+    counters: Box<[AtomicU64]>,
+    /// `SHARDS × N_HISTS × BUCKETS`, shard-major then hist-major.
+    buckets: Box<[AtomicU64]>,
+    /// `SHARDS × N_HISTS` running sums (ns).
+    sums: Box<[AtomicU64]>,
+    /// `SHARDS × N_HISTS` observation counts.
+    counts: Box<[AtomicU64]>,
+}
+
+/// The sharded metrics registry. Cheaply clonable (an `Arc`); every clone
+/// records into the same cells. One registry per *run* — a global would
+/// bleed counts between concurrently-running tests and runs.
+#[derive(Clone)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn atomic_slab(len: usize) -> Box<[AtomicU64]> {
+    let mut v = Vec::with_capacity(len);
+    for _ in 0..len {
+        v.push(AtomicU64::new(0));
+    }
+    v.into_boxed_slice()
+}
+
+impl Registry {
+    /// Allocate every cell up front (registration); nothing after this
+    /// call allocates.
+    pub fn new() -> Self {
+        Registry {
+            inner: Arc::new(Inner {
+                counters: atomic_slab(SHARDS * N_COUNTERS),
+                buckets: atomic_slab(SHARDS * N_HISTS * BUCKETS),
+                sums: atomic_slab(SHARDS * N_HISTS),
+                counts: atomic_slab(SHARDS * N_HISTS),
+            }),
+        }
+    }
+
+    /// Add `n` to counter `c` on `shard` (worker id; masked internally).
+    /// Relaxed atomics, no allocation — safe on the wire hot path.
+    // lint: hot-path
+    pub fn counter_add(&self, c: Counter, shard: usize, n: u64) {
+        let ix = (shard & SHARD_MASK) * N_COUNTERS + c as usize;
+        self.inner.counters[ix].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one observation of `ns` into histogram `h` on `shard`.
+    /// Relaxed atomics, no allocation — safe on the wire hot path.
+    // lint: hot-path
+    pub fn hist_observe(&self, h: Hist, shard: usize, ns: u64) {
+        let s = shard & SHARD_MASK;
+        let hix = s * N_HISTS + h as usize;
+        let bix = hix * BUCKETS + bucket_index(ns);
+        self.inner.buckets[bix].fetch_add(1, Ordering::Relaxed);
+        self.inner.sums[hix].fetch_add(ns, Ordering::Relaxed);
+        self.inner.counts[hix].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Sum every shard into an owned [`Snapshot`]. Allocates — call it
+    /// outside the hot path (eval cadence, run end, bench teardown).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut counters = vec![0u64; N_COUNTERS];
+        for shard in 0..SHARDS {
+            for c in 0..N_COUNTERS {
+                counters[c] +=
+                    self.inner.counters[shard * N_COUNTERS + c].load(Ordering::Relaxed);
+            }
+        }
+        let mut hists = Vec::with_capacity(N_HISTS);
+        for h in 0..N_HISTS {
+            let mut buckets = vec![0u64; BUCKETS];
+            let mut sum = 0u64;
+            let mut count = 0u64;
+            for shard in 0..SHARDS {
+                let hix = shard * N_HISTS + h;
+                for b in 0..BUCKETS {
+                    buckets[b] += self.inner.buckets[hix * BUCKETS + b].load(Ordering::Relaxed);
+                }
+                sum += self.inner.sums[hix].load(Ordering::Relaxed);
+                count += self.inner.counts[hix].load(Ordering::Relaxed);
+            }
+            hists.push(HistSnapshot { buckets, sum, count });
+        }
+        Snapshot { counters, hists }
+    }
+}
+
+/// A per-worker recording handle: a registry plus this worker's shard.
+/// `Default` is the disabled handle — `record`/`observe` are no-ops, so
+/// instrumented code never branches on a config flag.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<(Registry, usize)>,
+}
+
+impl Telemetry {
+    pub fn new(registry: &Registry, shard: usize) -> Self {
+        Telemetry { inner: Some((registry.clone(), shard)) }
+    }
+
+    pub fn disabled() -> Self {
+        Telemetry::default()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Add `n` to counter `c` on this worker's shard (no-op if disabled).
+    // lint: hot-path
+    pub fn record(&self, c: Counter, n: u64) {
+        if let Some((reg, shard)) = &self.inner {
+            reg.counter_add(c, *shard, n);
+        }
+    }
+
+    /// Observe `ns` into histogram `h` on this worker's shard (no-op if
+    /// disabled).
+    // lint: hot-path
+    pub fn observe(&self, h: Hist, ns: u64) {
+        if let Some((reg, shard)) = &self.inner {
+            reg.hist_observe(h, *shard, ns);
+        }
+    }
+}
+
+/// One histogram, summed across shards.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    /// Per-bucket observation counts (not cumulative).
+    pub buckets: Vec<u64>,
+    /// Sum of all observed values (ns).
+    pub sum: u64,
+    /// Total observations.
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Approximate quantile: the upper bound (ns) of the first bucket at
+    /// which the cumulative count reaches `q * count`. 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target.max(1) {
+                return bucket_le(i);
+            }
+        }
+        bucket_le(BUCKETS - 1)
+    }
+
+    /// Mean observation in ns (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// A point-in-time, shard-summed view of a [`Registry`], and the only type
+/// the exporters consume.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    counters: Vec<u64>,
+    hists: Vec<HistSnapshot>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn hist(&self, h: Hist) -> &HistSnapshot {
+        &self.hists[h as usize]
+    }
+
+    /// Total frames shipped across both kinds.
+    pub fn frames_sent(&self) -> u64 {
+        self.counter(Counter::FramesSentData) + self.counter(Counter::FramesSentBootstrap)
+    }
+
+    /// Total frames received (decoded) across both kinds.
+    pub fn frames_received(&self) -> u64 {
+        self.counter(Counter::FramesRecvData) + self.counter(Counter::FramesRecvBootstrap)
+    }
+
+    /// Prometheus text exposition (format 0.0.4): counters as
+    /// `moniqua_<name>_total`, histograms as cumulative
+    /// `moniqua_<name>_bucket{le=...}` + `_sum` + `_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        for c in Counter::ALL {
+            let name = format!("moniqua_{}", c.name());
+            s.push_str(&format!("# HELP {name}_total {}\n", c.help()));
+            s.push_str(&format!("# TYPE {name}_total counter\n"));
+            s.push_str(&format!("{name}_total {}\n", self.counter(c)));
+        }
+        for h in Hist::ALL {
+            let snap = self.hist(h);
+            let name = format!("moniqua_{}", h.name());
+            s.push_str(&format!("# HELP {name} {}\n", h.help()));
+            s.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for i in 0..BUCKETS - 1 {
+                cum += snap.buckets[i];
+                s.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", bucket_le(i)));
+            }
+            s.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", snap.count));
+            s.push_str(&format!("{name}_sum {}\n", snap.sum));
+            s.push_str(&format!("{name}_count {}\n", snap.count));
+        }
+        s
+    }
+
+    /// Structured JSON: `{"counters": {...}, "histograms": {name:
+    /// {"count": n, "sum_ns": s, "mean_ns": m, "buckets": [...]}}}`.
+    /// Hand-rolled like `bench_support::BenchJson` (no serde offline);
+    /// every value is an integer or a finite float, so no escaping is
+    /// needed beyond the fixed metric names.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"counters\": {");
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": {}", c.name(), self.counter(*c)));
+        }
+        s.push_str("\n  },\n  \"histograms\": {");
+        for (i, h) in Hist::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let snap = self.hist(*h);
+            s.push_str(&format!(
+                "\n    \"{}\": {{\n      \"count\": {},\n      \"sum_ns\": {},\n      \
+                 \"mean_ns\": {:e},\n      \"buckets\": [",
+                h.name(),
+                snap.count,
+                snap.sum,
+                snap.mean_ns()
+            ));
+            for (b, v) in snap.buckets.iter().enumerate() {
+                if b > 0 {
+                    s.push(',');
+                }
+                s.push_str(&v.to_string());
+            }
+            s.push_str("]\n    }");
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    /// Render per `mode` (`Off` renders nothing).
+    pub fn render(&self, mode: MetricsMode) -> Option<String> {
+        match mode {
+            MetricsMode::Off => None,
+            MetricsMode::Json => Some(self.to_json()),
+            MetricsMode::Prom => Some(self.to_prometheus()),
+        }
+    }
+}
+
+/// Export mode behind the `metrics=` config key. Recording is always on;
+/// this gates only whether (and how) a snapshot is written at run end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricsMode {
+    Off,
+    Json,
+    Prom,
+}
+
+impl MetricsMode {
+    pub fn parse_mode(s: &str) -> Result<MetricsMode, String> {
+        match s {
+            "off" => Ok(MetricsMode::Off),
+            "json" => Ok(MetricsMode::Json),
+            "prom" => Ok(MetricsMode::Prom),
+            other => Err(format!("unknown metrics mode '{other}' (off|json|prom)")),
+        }
+    }
+
+    /// Default export filename for this mode.
+    pub fn default_path(self) -> &'static str {
+        match self {
+            MetricsMode::Off => "",
+            MetricsMode::Json => "moniqua_metrics.json",
+            MetricsMode::Prom => "moniqua_metrics.prom",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus exposition validator
+// ---------------------------------------------------------------------------
+
+/// Validate a Prometheus text exposition: metric-name charset, HELP/TYPE
+/// pairing, sample/type consistency, and monotone cumulative histogram
+/// buckets with `+Inf == _count`. Returns the number of metric families on
+/// success. Used by the CI `metrics-smoke` job and `tests/metrics_export`.
+pub fn validate_prometheus(text: &str) -> Result<usize, String> {
+    fn valid_name(n: &str) -> bool {
+        !n.is_empty()
+            && n.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            && n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+
+    // Family name -> declared type; insertion-ordered via Vec (tiny).
+    let mut families: Vec<(String, String, bool)> = Vec::new(); // (name, type, has_help)
+    let mut pending_help: Option<String> = None;
+    // Histogram bucket state while scanning one family's samples.
+    let mut hist_cum: Vec<(String, u64)> = Vec::new(); // (family, last cumulative)
+    let mut hist_inf: Vec<(String, u64)> = Vec::new();
+    let mut hist_count: Vec<(String, u64)> = Vec::new();
+
+    let family_of = |families: &Vec<(String, String, bool)>, sample: &str| {
+        families
+            .iter()
+            .find(|(n, t, _)| match t.as_str() {
+                "counter" => sample == n.as_str(),
+                "histogram" => {
+                    sample == format!("{n}_bucket")
+                        || sample == format!("{n}_sum")
+                        || sample == format!("{n}_count")
+                }
+                _ => sample == n.as_str(),
+            })
+            .map(|(n, t, _)| (n.clone(), t.clone()))
+    };
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let ln = lineno + 1;
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !valid_name(name) {
+                return Err(format!("line {ln}: invalid metric name '{name}' in HELP"));
+            }
+            if pending_help.is_some() {
+                return Err(format!("line {ln}: HELP for '{name}' but previous HELP has no TYPE"));
+            }
+            pending_help = Some(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("");
+            let ty = it.next().unwrap_or("");
+            if !valid_name(name) {
+                return Err(format!("line {ln}: invalid metric name '{name}' in TYPE"));
+            }
+            if !matches!(ty, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: unknown metric type '{ty}'"));
+            }
+            let has_help = pending_help.as_deref() == Some(name);
+            if !has_help {
+                return Err(format!("line {ln}: TYPE for '{name}' without a preceding HELP"));
+            }
+            pending_help = None;
+            if families.iter().any(|(n, _, _)| n == name) {
+                return Err(format!("line {ln}: duplicate family '{name}'"));
+            }
+            families.push((name.to_string(), ty.to_string(), has_help));
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+
+        // Sample line: name[{labels}] value
+        let (name_part, value_part) = match line.find(' ') {
+            Some(sp) => (&line[..sp], line[sp + 1..].trim()),
+            None => return Err(format!("line {ln}: sample line without a value")),
+        };
+        let (sample_name, labels) = match name_part.find('{') {
+            Some(b) => {
+                if !name_part.ends_with('}') {
+                    return Err(format!("line {ln}: unterminated label set"));
+                }
+                (&name_part[..b], Some(&name_part[b + 1..name_part.len() - 1]))
+            }
+            None => (name_part, None),
+        };
+        if !valid_name(sample_name) {
+            return Err(format!("line {ln}: invalid sample name '{sample_name}'"));
+        }
+        let value: f64 = value_part
+            .parse()
+            .map_err(|_| format!("line {ln}: unparseable sample value '{value_part}'"))?;
+        let Some((family, ty)) = family_of(&families, sample_name) else {
+            return Err(format!("line {ln}: sample '{sample_name}' has no TYPE declaration"));
+        };
+        if ty == "counter" && value < 0.0 {
+            return Err(format!("line {ln}: counter '{sample_name}' is negative"));
+        }
+        if ty == "histogram" && sample_name.ends_with("_bucket") {
+            let le = labels
+                .and_then(|l| l.strip_prefix("le=\""))
+                .and_then(|l| l.strip_suffix('"'))
+                .ok_or_else(|| format!("line {ln}: histogram bucket without an le label"))?;
+            let cum = value as u64;
+            if le == "+Inf" {
+                hist_inf.push((family.clone(), cum));
+            } else {
+                le.parse::<f64>()
+                    .map_err(|_| format!("line {ln}: unparseable le bound '{le}'"))?;
+                match hist_cum.iter_mut().find(|(f, _)| *f == family) {
+                    Some((_, last)) => {
+                        if cum < *last {
+                            return Err(format!(
+                                "line {ln}: histogram '{family}' buckets not monotone \
+                                 ({cum} < {last})"
+                            ));
+                        }
+                        *last = cum;
+                    }
+                    None => hist_cum.push((family.clone(), cum)),
+                }
+            }
+        }
+        if ty == "histogram" && sample_name.ends_with("_count") {
+            hist_count.push((family.clone(), value as u64));
+        }
+    }
+    if let Some(orphan) = pending_help {
+        return Err(format!("HELP for '{orphan}' has no TYPE"));
+    }
+    // Cross-checks per histogram family: +Inf bucket present and == count,
+    // and the last finite cumulative bucket never exceeds it.
+    for (name, ty, _) in &families {
+        if ty != "histogram" {
+            continue;
+        }
+        let inf = hist_inf.iter().find(|(f, _)| f == name).map(|(_, v)| *v);
+        let count = hist_count.iter().find(|(f, _)| f == name).map(|(_, v)| *v);
+        match (inf, count) {
+            (Some(i), Some(c)) if i == c => {}
+            (Some(i), Some(c)) => {
+                return Err(format!("histogram '{name}': +Inf bucket {i} != count {c}"))
+            }
+            _ => return Err(format!("histogram '{name}': missing +Inf bucket or _count")),
+        }
+        if let Some((_, last)) = hist_cum.iter().find(|(f, _)| f == name) {
+            if *last > inf.unwrap_or(0) {
+                return Err(format!("histogram '{name}': finite bucket exceeds +Inf"));
+            }
+        }
+    }
+    Ok(families.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_sum_across_shards() {
+        let reg = Registry::new();
+        for shard in 0..64 {
+            reg.counter_add(Counter::FramesSentData, shard, 2);
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter(Counter::FramesSentData), 128);
+        assert_eq!(snap.counter(Counter::FramesRecvData), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+
+        let reg = Registry::new();
+        reg.hist_observe(Hist::EncodeNs, 0, 0);
+        reg.hist_observe(Hist::EncodeNs, 1, 3);
+        reg.hist_observe(Hist::EncodeNs, 2, 1024);
+        let h = reg.snapshot();
+        let h = h.hist(Hist::EncodeNs);
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum, 1027);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[2], 1);
+        assert_eq!(h.buckets[11], 1);
+        assert!((h.mean_ns() - 1027.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_upper_bounds() {
+        let reg = Registry::new();
+        for _ in 0..90 {
+            reg.hist_observe(Hist::BarrierWaitNs, 0, 100); // bucket 7, le 127
+        }
+        for _ in 0..10 {
+            reg.hist_observe(Hist::BarrierWaitNs, 0, 1 << 20); // bucket 21
+        }
+        let snap = reg.snapshot();
+        let h = snap.hist(Hist::BarrierWaitNs);
+        assert_eq!(h.quantile_ns(0.5), 127);
+        assert_eq!(h.quantile_ns(0.99), (1u64 << 21) - 1);
+        let empty = snap.hist(Hist::CkptWriteNs);
+        assert_eq!(empty.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn telemetry_handle_disabled_is_noop() {
+        let t = Telemetry::disabled();
+        assert!(!t.is_enabled());
+        t.record(Counter::PoolHit, 1);
+        t.observe(Hist::EncodeNs, 5);
+
+        let reg = Registry::new();
+        let t = Telemetry::new(&reg, 3);
+        assert!(t.is_enabled());
+        t.record(Counter::PoolHit, 2);
+        t.observe(Hist::EncodeNs, 5);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter(Counter::PoolHit), 2);
+        assert_eq!(snap.hist(Hist::EncodeNs).count, 1);
+    }
+
+    #[test]
+    fn prometheus_output_validates_and_names_every_metric() {
+        let reg = Registry::new();
+        reg.counter_add(Counter::FramesSentData, 0, 10);
+        reg.hist_observe(Hist::BarrierWaitNs, 0, 12345);
+        let text = reg.snapshot().to_prometheus();
+        let families = validate_prometheus(&text).expect("exposition must validate");
+        assert_eq!(families, Counter::ALL.len() + Hist::ALL.len());
+        for c in Counter::ALL {
+            assert!(text.contains(&format!("moniqua_{}_total", c.name())), "{}", c.name());
+        }
+        for h in Hist::ALL {
+            assert!(text.contains(&format!("moniqua_{}_count", h.name())), "{}", h.name());
+        }
+    }
+
+    #[test]
+    fn validator_rejects_malformed_expositions() {
+        // Missing TYPE.
+        assert!(validate_prometheus("# HELP x_total a\nx_total 1\n").is_err());
+        // Bad name charset.
+        assert!(validate_prometheus("# HELP bad-name a\n# TYPE bad-name counter\n").is_err());
+        // Non-monotone histogram buckets.
+        let bad = "# HELP h x\n# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 5\nh_bucket{le=\"3\"} 2\n\
+                   h_bucket{le=\"+Inf\"} 5\nh_sum 1\nh_count 5\n";
+        assert!(validate_prometheus(bad).unwrap_err().contains("not monotone"));
+        // +Inf != count.
+        let bad = "# HELP h x\n# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 1\nh_bucket{le=\"+Inf\"} 1\nh_sum 1\nh_count 2\n";
+        assert!(validate_prometheus(bad).unwrap_err().contains("+Inf"));
+        // Sample without declaration.
+        assert!(validate_prometheus("stray_metric 1\n").is_err());
+        // Negative counter.
+        let bad = "# HELP c x\n# TYPE c counter\nc -1\n";
+        assert!(validate_prometheus(bad).unwrap_err().contains("negative"));
+    }
+
+    #[test]
+    fn json_export_is_structured() {
+        let reg = Registry::new();
+        reg.counter_add(Counter::PoolMiss, 1, 4);
+        reg.hist_observe(Hist::DecodeNs, 1, 100);
+        let json = reg.snapshot().to_json();
+        assert!(json.contains("\"transport_pool_miss\": 4"));
+        assert!(json.contains("\"quant_decode_ns\""));
+        assert!(json.contains("\"count\": 1"));
+        // Structural sanity: balanced braces, one counters + one
+        // histograms object.
+        assert_eq!(json.matches("\"counters\"").count(), 1);
+        assert_eq!(json.matches("\"histograms\"").count(), 1);
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "unbalanced JSON braces"
+        );
+    }
+
+    #[test]
+    fn metrics_mode_parses() {
+        assert_eq!(MetricsMode::parse_mode("off").unwrap(), MetricsMode::Off);
+        assert_eq!(MetricsMode::parse_mode("json").unwrap(), MetricsMode::Json);
+        assert_eq!(MetricsMode::parse_mode("prom").unwrap(), MetricsMode::Prom);
+        assert!(MetricsMode::parse_mode("csv").is_err());
+        let snap = Registry::new().snapshot();
+        assert!(snap.render(MetricsMode::Off).is_none());
+        assert!(snap.render(MetricsMode::Json).unwrap().starts_with('{'));
+        assert!(snap.render(MetricsMode::Prom).unwrap().starts_with("# HELP"));
+    }
+
+    #[test]
+    fn conservation_identity_helpers() {
+        let reg = Registry::new();
+        reg.counter_add(Counter::FramesSentData, 0, 7);
+        reg.counter_add(Counter::FramesSentBootstrap, 0, 2);
+        reg.counter_add(Counter::FramesRecvData, 1, 6);
+        reg.counter_add(Counter::FramesRecvBootstrap, 1, 2);
+        reg.counter_add(Counter::FramesRejected, 1, 1);
+        let snap = reg.snapshot();
+        assert_eq!(snap.frames_sent(), 9);
+        assert_eq!(snap.frames_received(), 8);
+        assert_eq!(
+            snap.frames_sent(),
+            snap.frames_received() + snap.counter(Counter::FramesRejected)
+        );
+    }
+}

@@ -19,8 +19,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::{saturating_deadline, Frame, ReorderBuffer, Transport, TransportError, WakeHandle};
+use super::{
+    note_received, note_sent, saturating_deadline, Frame, ReorderBuffer, Transport,
+    TransportError, WakeHandle,
+};
 use crate::mem::FramePool;
+use crate::telemetry::{Counter, Telemetry};
 
 /// One endpoint's inbound queue: preallocated ring of wire-byte buffers
 /// plus a condvar for blocking receives. `closed` flips when the owning
@@ -113,6 +117,7 @@ pub struct MemTransport {
     queues: Vec<Arc<ByteQueue>>,
     buf: ReorderBuffer,
     pool: FramePool,
+    telemetry: Telemetry,
 }
 
 impl MemTransport {
@@ -132,6 +137,7 @@ impl MemTransport {
                 queues: queues.clone(),
                 buf: ReorderBuffer::default(),
                 pool: pool.clone(),
+                telemetry: Telemetry::disabled(),
             })
             .collect()
     }
@@ -173,12 +179,15 @@ impl MemTransport {
     /// so corrupt traffic cannot shrink the pool (satellite bugfix —
     /// `decode_owned(bytes)?` dropped the checked-out buffer).
     fn push_decoded(&mut self, bytes: Vec<u8>) -> Result<(), TransportError> {
+        let wire_len = bytes.len();
         match Frame::decode_reclaim(bytes) {
             Ok(f) => {
+                note_received(&self.telemetry, f.kind, wire_len);
                 self.buf.push(f);
                 Ok(())
             }
             Err((e, junk)) => {
+                self.telemetry.record(Counter::FramesRejected, 1);
                 self.pool.give(junk);
                 Err(e.into())
             }
@@ -212,6 +221,7 @@ impl Transport for MemTransport {
         }
         let mut bytes = self.pool.take();
         frame.encode_into(&mut bytes);
+        note_sent(&self.telemetry, frame.kind, bytes.len());
         self.queues[peer].push(bytes);
         Ok(())
     }
@@ -234,6 +244,7 @@ impl Transport for MemTransport {
             }
             let mut bytes = self.pool.take();
             bytes.extend_from_slice(&wire);
+            note_sent(&self.telemetry, frame.kind, bytes.len());
             self.queues[p].push(bytes);
         }
         assert!(last < self.queues.len(), "peer {last} out of range");
@@ -241,6 +252,7 @@ impl Transport for MemTransport {
             self.pool.give(wire);
             return Err(TransportError::Closed);
         }
+        note_sent(&self.telemetry, frame.kind, wire.len());
         self.queues[last].push(wire);
         Ok(())
     }
@@ -277,6 +289,13 @@ impl Transport for MemTransport {
             Err(poisoned) => poisoned.into_inner(),
         };
         *g = Some(Arc::clone(waker));
+    }
+
+    fn set_metrics(&mut self, t: Telemetry) {
+        // This endpoint's *clone* of the shared pool gets the handle too,
+        // so checkouts are attributed to this worker's shard.
+        self.pool.set_metrics(t.clone());
+        self.telemetry = t;
     }
 }
 
@@ -414,6 +433,42 @@ mod tests {
         // The endpoint survives the poison frame: good traffic still flows.
         a.send(1, &frame(1, 0, vec![7])).unwrap();
         assert_eq!(b.recv(Duration::from_secs(1)).unwrap().payload, vec![7]);
+    }
+
+    #[test]
+    fn telemetry_counts_frames_bytes_and_rejects() {
+        use crate::telemetry::Registry;
+        let reg = Registry::new();
+        let mut eps = MemTransport::cluster(3);
+        for (i, ep) in eps.iter_mut().enumerate() {
+            ep.set_metrics(Telemetry::new(&reg, i));
+        }
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // One unicast + one 2-peer broadcast, then a corrupt frame.
+        a.send(1, &frame(0, 0, vec![1; 32])).unwrap();
+        a.broadcast(&[1, 2], &frame(0, 0, vec![2; 32])).unwrap();
+        let f = b.recv(Duration::from_secs(1)).unwrap();
+        let wire_len = f.encoded_len() as u64;
+        let _ = b.recv(Duration::from_secs(1)).unwrap();
+        let _ = c.recv(Duration::from_secs(1)).unwrap();
+        let mut junk = a.pool().take();
+        junk.extend_from_slice(&[0xCD; 8]);
+        a.inject_raw(1, junk);
+        let _ = b.recv(Duration::from_millis(20)).unwrap_err();
+
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter(Counter::FramesSentData), 3);
+        assert_eq!(snap.counter(Counter::FramesRecvData), 3);
+        assert_eq!(snap.counter(Counter::FramesRejected), 1);
+        assert_eq!(snap.counter(Counter::FramesSentBootstrap), 0);
+        assert!(snap.counter(Counter::BytesSentData) >= 3 * wire_len - 8);
+        assert_eq!(
+            snap.counter(Counter::BytesSentData),
+            snap.counter(Counter::BytesRecvData)
+        );
+        assert_eq!(snap.frames_sent(), snap.frames_received() + 1);
     }
 
     #[test]

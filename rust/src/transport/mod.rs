@@ -61,6 +61,40 @@ use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::telemetry::{Counter, Telemetry};
+
+/// Record one shipped frame (by kind) and its wire bytes. Shared by every
+/// transport so the per-kind taxonomy cannot drift between them.
+// lint: hot-path
+pub(crate) fn note_sent(t: &Telemetry, kind: FrameKind, wire_len: usize) {
+    match kind {
+        FrameKind::Data => {
+            t.record(Counter::FramesSentData, 1);
+            t.record(Counter::BytesSentData, wire_len as u64);
+        }
+        FrameKind::Bootstrap => {
+            t.record(Counter::FramesSentBootstrap, 1);
+            t.record(Counter::BytesSentBootstrap, wire_len as u64);
+        }
+    }
+}
+
+/// Record one successfully decoded inbound frame (by kind) and its wire
+/// bytes.
+// lint: hot-path
+pub(crate) fn note_received(t: &Telemetry, kind: FrameKind, wire_len: usize) {
+    match kind {
+        FrameKind::Data => {
+            t.record(Counter::FramesRecvData, 1);
+            t.record(Counter::BytesRecvData, wire_len as u64);
+        }
+        FrameKind::Bootstrap => {
+            t.record(Counter::FramesRecvBootstrap, 1);
+            t.record(Counter::BytesRecvBootstrap, wire_len as u64);
+        }
+    }
+}
+
 /// Deadline arithmetic that cannot overflow: `Instant::now() + timeout`
 /// panics when `timeout` is enormous (`Duration::MAX`, or a config file's
 /// `recv_timeout_ms` set to "never"), because `Instant` saturates nowhere.
@@ -159,6 +193,13 @@ pub trait Transport: Send {
     /// own `recv` through internal condvars/channels, and polling them a
     /// tick late is merely latency, never lost data.
     fn set_waker(&mut self, _waker: &Arc<WakeHandle>) {}
+
+    /// Attach a telemetry recording handle (registry + this worker's
+    /// shard). Mirrors [`Self::set_waker`]: the default ignores it, so
+    /// telemetry — like recycling — is a pure observation layer, never a
+    /// correctness requirement. All three real transports override it to
+    /// count frames/bytes by kind, decode rejects, and pool hit/miss.
+    fn set_metrics(&mut self, _t: Telemetry) {}
 }
 
 /// Receive-side reorder buffer shared by both transports: frames are pushed

@@ -32,9 +32,11 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 use super::{
-    saturating_deadline, Frame, ReorderBuffer, Transport, TransportError, HEADER_LEN, MAX_PAYLOAD,
+    note_received, note_sent, saturating_deadline, Frame, ReorderBuffer, Transport,
+    TransportError, HEADER_LEN, MAX_PAYLOAD,
 };
 use crate::mem::FramePool;
+use crate::telemetry::{Counter, Telemetry};
 
 /// Sleep between polls when `recv` is called with a real (non-zero)
 /// timeout: long enough to stay off the CPU on an idle socket, short
@@ -59,6 +61,9 @@ struct InConn {
     filled: usize,
     /// Pooled wire buffer the frame assembles into.
     frame: Vec<u8>,
+    /// Successful body reads feeding the current frame; a frame that needed
+    /// more than one is a reassembly split (telemetry).
+    body_reads: u32,
 }
 
 /// One outbound connection: pending wire buffers flushed opportunistically
@@ -84,6 +89,7 @@ pub struct NbTcpTransport {
     /// First error discovered inside `poll_io`; surfaced by the next
     /// `recv` after buffered frames drain.
     pending_err: Option<TransportError>,
+    telemetry: Telemetry,
 }
 
 impl NbTcpTransport {
@@ -125,6 +131,7 @@ impl NbTcpTransport {
                 scratch: Vec::new(),
                 pool: pool.clone(),
                 pending_err: None,
+                telemetry: Telemetry::disabled(),
             })
             .collect())
     }
@@ -195,7 +202,12 @@ impl NbTcpTransport {
                         }
                     }
                 }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    // Backpressure: the rest of the queue retries on the
+                    // next poll sweep.
+                    self.telemetry.record(Counter::NbWouldBlock, 1);
+                    return Ok(());
+                }
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
                 Err(e) => return Err(TransportError::Io(e.to_string())),
             }
@@ -248,6 +260,7 @@ impl NbTcpTransport {
                         need: 0,
                         filled: 0,
                         frame: self.pool.take(),
+                        body_reads: 0,
                     });
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return,
@@ -298,6 +311,7 @@ impl NbTcpTransport {
                                 conn.have_len = true;
                                 conn.need = len;
                                 conn.filled = 0;
+                                conn.body_reads = 0;
                                 conn.frame.resize(len, 0);
                             }
                         }
@@ -315,13 +329,22 @@ impl NbTcpTransport {
                     // Frame complete (handles zero-length prefixes too):
                     // swap in a fresh pooled buffer and decode.
                     let full = std::mem::replace(&mut conn.frame, self.pool.take());
+                    let split = conn.body_reads > 1;
                     conn.have_len = false;
                     conn.len_got = 0;
+                    let wire_len = full.len();
                     match Frame::decode_reclaim(full) {
-                        Ok(f) => self.buf.push(f),
+                        Ok(f) => {
+                            note_received(&self.telemetry, f.kind, wire_len);
+                            if split {
+                                self.telemetry.record(Counter::NbReassemblySplit, 1);
+                            }
+                            self.buf.push(f);
+                        }
                         Err((e, junk)) => {
                             // Reclaim before reporting — a dropped buffer
                             // would shrink the cluster-shared pool.
+                            self.telemetry.record(Counter::FramesRejected, 1);
                             self.pool.give(junk);
                             if self.pending_err.is_none() {
                                 self.pending_err = Some(e.into());
@@ -340,7 +363,10 @@ impl NbTcpTransport {
                             self.ins[ix].closed = true;
                             break;
                         }
-                        Ok(k) => conn.filled += k,
+                        Ok(k) => {
+                            conn.filled += k;
+                            conn.body_reads += 1;
+                        }
                         Err(e) if e.kind() == ErrorKind::WouldBlock => break,
                         Err(e) if e.kind() == ErrorKind::Interrupted => continue,
                         Err(e) => {
@@ -403,6 +429,9 @@ impl Transport for NbTcpTransport {
             if result.is_err() {
                 break;
             }
+            // Wire bytes exclude the 4-byte stream prefix so the sent/
+            // received byte counters agree across transports.
+            note_sent(&self.telemetry, frame.kind, scratch.len() - 4);
         }
         self.scratch = scratch;
         result
@@ -433,6 +462,11 @@ impl Transport for NbTcpTransport {
     // lint: hot-path
     fn recycle(&mut self, payload: Vec<u8>) {
         self.pool.give(payload);
+    }
+
+    fn set_metrics(&mut self, t: Telemetry) {
+        self.pool.set_metrics(t.clone());
+        self.telemetry = t;
     }
 }
 
@@ -469,7 +503,9 @@ mod tests {
         // Drip one frame through a raw socket in tiny chunks with pauses:
         // every poll sees a partial prefix or partial frame and must carry
         // the reassembly state forward.
+        let reg = crate::telemetry::Registry::new();
         let mut eps = NbTcpTransport::cluster(1, 0).unwrap();
+        eps[0].set_metrics(Telemetry::new(&reg, 0));
         let addr = eps[0].addrs()[0];
         let f = frame(1, 0, vec![9; 64]);
         let mut wire = Vec::new();
@@ -488,6 +524,12 @@ mod tests {
         let got = eps[0].recv(Duration::from_secs(10)).unwrap();
         assert_eq!(got.payload, vec![9; 64]);
         h.join().unwrap();
+        // 7-byte chunks force the body across many reads: telemetry must
+        // see one received data frame that counted as a reassembly split.
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter(Counter::FramesRecvData), 1);
+        assert_eq!(snap.counter(Counter::NbReassemblySplit), 1);
+        assert_eq!(snap.counter(Counter::BytesRecvData), got.encoded_len() as u64);
     }
 
     #[test]

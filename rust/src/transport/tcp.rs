@@ -23,9 +23,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::{
-    saturating_deadline, Frame, ReorderBuffer, Transport, TransportError, HEADER_LEN, MAX_PAYLOAD,
+    note_received, note_sent, saturating_deadline, Frame, ReorderBuffer, Transport,
+    TransportError, HEADER_LEN, MAX_PAYLOAD,
 };
 use crate::mem::FramePool;
+use crate::telemetry::{Counter, Telemetry};
 
 /// Write-buffer capacity per outbound connection: large enough that a
 /// typical quantized frame (length prefix + header + packed payload) is
@@ -51,6 +53,7 @@ pub struct TcpTransport {
     pool: FramePool,
     shutdown: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<()>>,
+    telemetry: Telemetry,
 }
 
 impl TcpTransport {
@@ -99,6 +102,7 @@ impl TcpTransport {
                     pool: pool.clone(),
                     shutdown,
                     accept_handle,
+                    telemetry: Telemetry::disabled(),
                 }
             })
             .collect())
@@ -146,12 +150,15 @@ impl TcpTransport {
     /// `decode_owned(bytes)?` form dropped the pooled buffer, so corrupt
     /// traffic shrank the pool one buffer per bad frame).
     fn push_decoded(&mut self, bytes: Vec<u8>) -> Result<(), TransportError> {
+        let wire_len = bytes.len();
         match Frame::decode_reclaim(bytes) {
             Ok(f) => {
+                note_received(&self.telemetry, f.kind, wire_len);
                 self.buf.push(f);
                 Ok(())
             }
             Err((e, junk)) => {
+                self.telemetry.record(Counter::FramesRejected, 1);
                 self.pool.give(junk);
                 Err(e.into())
             }
@@ -202,6 +209,9 @@ impl Transport for TcpTransport {
                 self.outs[p] = None;
                 break;
             }
+            // Wire bytes exclude the 4-byte stream prefix so the sent/
+            // received byte counters agree across transports.
+            note_sent(&self.telemetry, frame.kind, scratch.len() - 4);
         }
         self.scratch = scratch;
         result
@@ -233,6 +243,11 @@ impl Transport for TcpTransport {
     // lint: hot-path
     fn recycle(&mut self, payload: Vec<u8>) {
         self.pool.give(payload);
+    }
+
+    fn set_metrics(&mut self, t: Telemetry) {
+        self.pool.set_metrics(t.clone());
+        self.telemetry = t;
     }
 }
 

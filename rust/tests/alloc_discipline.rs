@@ -18,6 +18,7 @@ use std::time::Duration;
 
 use moniqua::algorithms::{Algorithm, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
 use moniqua::quant::QuantConfig;
+use moniqua::telemetry::{Counter, Hist, Registry, Telemetry};
 use moniqua::topology::Topology;
 use moniqua::transport::{algo_wire_id, Frame, FrameKind, MemTransport, Transport, TransportError};
 
@@ -300,6 +301,85 @@ fn check_algo(algo: Algorithm) {
     assert!(xs[0].iter().all(|v| v.is_finite()));
 }
 
+/// The telemetry plane's half of the zero-allocation contract: the same
+/// steady-state window, with a live [`Registry`] attached to every
+/// transport (so every send/recv/recycle bumps frame, byte, and pool
+/// counters) and an explicit per-round `record`/`observe` pair standing in
+/// for the round machine's histogram stamps — and the budget is still
+/// **zero allocations and zero frees**. Registration happens before the
+/// warm-up; after it, counters are relaxed atomics into preallocated slabs
+/// and histograms are a leading-zeros bucket index, nothing more.
+fn check_algo_with_metrics(algo: Algorithm) {
+    const N: usize = 4;
+    const D: usize = 256;
+    const WARMUP: u64 = 2;
+    const WINDOW: u64 = 8;
+
+    let topo = Topology::Ring(N);
+    let w = topo.comm_matrix();
+    let rho = w.rho();
+    let peers: Vec<Vec<usize>> = topo.adjacency();
+    let mut engines: Vec<Box<dyn SyncAlgorithm>> =
+        (0..N).map(|_| algo.make_sync(&w, D)).collect();
+    for e in engines.iter_mut() {
+        e.set_threads(1);
+    }
+    let registry = Registry::new();
+    let mut transports = MemTransport::cluster(N);
+    for (i, t) in transports.iter_mut().enumerate() {
+        t.set_metrics(Telemetry::new(&registry, i));
+    }
+    let telemetry = Telemetry::new(&registry, 0);
+    let mut xs: Vec<Vec<f32>> = (0..N)
+        .map(|i| (0..D).map(|k| 0.3 + 0.001 * ((i + k) % 13) as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = (0..N).map(|_| vec![0.01f32; D]).collect();
+    let mut payloads: Vec<Vec<u8>> = (0..N).map(|_| Vec::new()).collect();
+    let mut gots: Vec<Vec<Frame>> = (0..N).map(|_| Vec::new()).collect();
+    let ctx = StepCtx { seed: 7, rho, g_inf: 1.0 };
+
+    run_rounds(
+        &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
+        &peers, &ctx, 0, WARMUP,
+    );
+    let allocs_before = ALLOCS.load(Ordering::SeqCst);
+    let deallocs_before = DEALLOCS.load(Ordering::SeqCst);
+    for round in WARMUP..WARMUP + WINDOW {
+        run_rounds(
+            &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
+            &peers, &ctx, round, 1,
+        );
+        // The round machine's per-round telemetry calls, verbatim shapes.
+        telemetry.record(Counter::RoundsTotal, N as u64);
+        telemetry.observe(Hist::BarrierWaitNs, 1 + round * 977);
+        telemetry.observe(Hist::GradComputeNs, 1_000_000 + round);
+    }
+    let allocs = ALLOCS.load(Ordering::SeqCst) - allocs_before;
+    let deallocs = DEALLOCS.load(Ordering::SeqCst) - deallocs_before;
+    assert_eq!(
+        allocs, 0,
+        "{} (metrics on): {allocs} heap allocations across {WINDOW} steady-state \
+         rounds — telemetry record/observe must not allocate",
+        algo.name()
+    );
+    assert_eq!(
+        deallocs, 0,
+        "{} (metrics on): {deallocs} heap frees across {WINDOW} steady-state rounds \
+         — telemetry must not drop or replace a buffer",
+        algo.name()
+    );
+    // The counters really were live during the window: every broadcast hit
+    // a warm pool buffer and every frame both sides of the wire.
+    let snap = registry.snapshot();
+    assert!(snap.counter(Counter::FramesSentData) >= N as u64 * WINDOW);
+    assert!(snap.counter(Counter::PoolHit) > 0);
+    assert_eq!(
+        snap.frames_sent(),
+        snap.frames_received() + snap.counter(Counter::FramesRejected)
+    );
+    assert!(xs[0].iter().all(|v| v.is_finite()));
+}
+
 /// Regression for the pooled-buffer leak: a round that receives one
 /// corrupt frame must still allocate (and free) **nothing**. Before the
 /// fix, `Frame::decode_owned(bytes)?` dropped the checked-out pool buffer
@@ -423,4 +503,12 @@ fn steady_state_rounds_allocate_nothing() {
     });
     // Fault path: one corrupt frame mid-round keeps the zero budget.
     check_corrupt_frame_round();
+    // Telemetry plane live on every transport: same zero budget (the
+    // metrics=off|json|prom modes gate export only — recording is always
+    // on, so this window IS the production hot path with metrics).
+    check_algo_with_metrics(Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: QuantConfig::stochastic(8),
+    });
+    check_algo_with_metrics(Algorithm::DPsgd);
 }

@@ -30,6 +30,7 @@ use moniqua::coordinator::{
 use moniqua::network::NetworkConfig;
 use moniqua::objectives::{Eval, Objective, Quadratic};
 use moniqua::quant::QuantConfig;
+use moniqua::telemetry::Counter;
 use moniqua::topology::Topology;
 
 const STEPS: u64 = 12;
@@ -242,6 +243,19 @@ fn reactor_soaks_256_workers_on_8_threads_bitwise_equal_to_lockstep() {
     let got = fingerprint(&t.run().expect("soak run"));
     assert!(t.failures.is_empty(), "soak recorded failures: {:?}", t.failures);
     assert_eq!(got, want, "256-worker reactor soak diverged from lockstep");
+    // Cluster-wide frame conservation: across all 256 endpoints, every
+    // frame put on the wire was either delivered or rejected — the
+    // telemetry plane's structural identity, and the soak's proof that no
+    // frame is silently dropped under out-of-order readiness.
+    let snap = t.metrics().snapshot();
+    assert!(snap.frames_sent() > 0, "soak recorded no sends");
+    assert_eq!(
+        snap.frames_sent(),
+        snap.frames_received() + snap.counter(Counter::FramesRejected),
+        "frame conservation violated after the 256-worker soak"
+    );
+    assert_eq!(snap.counter(Counter::FramesRejected), 0, "clean soak rejected frames");
+    assert_eq!(snap.frames_sent(), t.frames_sent, "telemetry and trace disagree on sends");
 }
 
 #[test]

@@ -22,7 +22,7 @@
 //! | tag                    | rule                                          |
 //! |------------------------|-----------------------------------------------|
 //! | `unordered`            | no `HashMap`/`HashSet` in non-test code       |
-//! | `wall_clock`           | no `Instant`/`SystemTime`/`thread_rng`/`RandomState` outside `rng/`, `bench_support/` |
+//! | `wall_clock`           | no `Instant`/`SystemTime`/`thread_rng`/`RandomState` outside `rng/`, `bench_support/`, `telemetry/clock.rs` |
 //! | `checked_arith`        | no unchecked `+`/`*`/narrowing `as` on length-like values in the pack/frame kernels |
 //! | `panic_surface`        | no `unwrap()`/`expect()` in `transport/` non-test code |
 //! | `wire_format`          | `FIELD_LAYOUT` offsets tile `HEADER_LEN`; every `FrameKind` variant appears in `from_wire` **and** `to_wire` |
@@ -699,6 +699,9 @@ pub fn analyze_sources(files: &[(String, String)]) -> Vec<Diagnostic> {
         let rel = fa.rel.as_str();
         let in_bench = rel.starts_with("bench_support");
         let in_rng = rel.starts_with("rng");
+        // The telemetry plane confines monotonic time to exactly one file;
+        // everything else under telemetry/ must go through its `Clock`.
+        let in_clock = rel == "telemetry/clock.rs";
         let in_transport = rel.starts_with("transport");
         let in_arith = ARITH_SCOPE.contains(&rel);
 
@@ -718,7 +721,7 @@ pub fn analyze_sources(files: &[(String, String)]) -> Vec<Diagnostic> {
                         });
                     }
                 }
-                EventKind::WallClock(name) if !in_bench && !in_rng => {
+                EventKind::WallClock(name) if !in_bench && !in_rng && !in_clock => {
                     if !suppressed(fa, Rule::WallClock.tag(), ev.line) {
                         diags.push(Diagnostic {
                             file: rel.to_string(),
@@ -726,7 +729,8 @@ pub fn analyze_sources(files: &[(String, String)]) -> Vec<Diagnostic> {
                             rule: Rule::WallClock,
                             message: format!(
                                 "`{name}` reads ambient entropy/time; value paths must be \
-                                 deterministic (allowed only in `rng/` and `bench_support/`)"
+                                 deterministic (allowed only in `rng/`, `bench_support/`, and \
+                                 `telemetry/clock.rs`)"
                             ),
                         });
                     }

@@ -36,6 +36,10 @@ fn every_fixture_is_flagged_at_its_exact_line() {
         vec![(3, Rule::Unordered), (5, Rule::Unordered), (6, Rule::Unordered)],
     );
     assert_eq!(hits(&diags, "coordinator/timer.rs"), vec![(4, Rule::WallClock)]);
+    // The telemetry clock confinement: `Instant` outside `telemetry/clock.rs`
+    // is flagged at its exact line; the clock file itself is the exemption.
+    assert_eq!(hits(&diags, "telemetry/sampler.rs"), vec![(6, Rule::WallClock)]);
+    assert!(hits(&diags, "telemetry/clock.rs").is_empty());
     assert_eq!(
         hits(&diags, "quant/packing.rs"),
         vec![(4, Rule::CheckedArith), (8, Rule::CheckedArith), (12, Rule::CheckedArith)],
@@ -60,7 +64,7 @@ fn every_fixture_is_flagged_at_its_exact_line() {
     assert_eq!(parse[0].rule, Rule::Parse);
 
     // ... and nothing beyond the expectations above was flagged.
-    assert_eq!(diags.len(), 14, "unexpected extra diagnostics:\n{}", render(&diags));
+    assert_eq!(diags.len(), 15, "unexpected extra diagnostics:\n{}", render(&diags));
 }
 
 #[test]

@@ -1,0 +1,18 @@
+//! Fixture: `telemetry/clock.rs` is the **sole** telemetry wall-clock
+//! exemption — the one file allowed to hold an `Instant`. Nothing in here
+//! may be flagged; the sibling `telemetry/sampler.rs` proves the exemption
+//! is path-exact, not a blanket `telemetry/` pass.
+
+pub struct Clock {
+    origin: std::time::Instant,
+}
+
+impl Clock {
+    pub fn monotonic() -> Self {
+        Self { origin: std::time::Instant::now() }
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture: `wall_clock` inside `telemetry/` — the clock confinement rule.
+//! Only `telemetry/clock.rs` may touch `Instant`; a sibling module reaching
+//! for it directly must be flagged like any other value-path clock read.
+
+pub fn sample_ns() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}
