@@ -1,0 +1,255 @@
+//! Byzantine fault sweep — attack mode × adversary count on the cluster
+//! runtime, with the defense plane live (rust/DESIGN.md
+//! §Adversarial-robustness).
+//!
+//! Three questions, answered with numbers in `BENCH_byzantine.json`:
+//!
+//! * **What does the defense cost?** Zero-adversary runs with the gate off
+//!   vs on (the +8 B machine seal on raw-f32 engines, the §6 digest on
+//!   Moniqua) price the overhead in wall time and wire bytes.
+//! * **Does the cohort survive the attack?** Every `byz_mode` at 1 and 2
+//!   adversaries on a 6-ring, recording final loss, quarantine counts, and
+//!   typed reject counters. The acceptance bar: attacked final loss within
+//!   2× the fault-free run of the same engine.
+//! * **What does the robust mix buy?** Wrap against a raw-f32 engine is
+//!   seal-valid (no digest exists to convict it), so the clipped mix is
+//!   the only defense — its loss is reported next to the plain mean's.
+//!
+//! Run: `cargo bench --offline --bench bench_byzantine`
+//! (`MONIQUA_BENCH_QUICK=1` / `MONIQUA_FAST=1` shrinks the grid.)
+
+use moniqua::adversary::{ByzMode, ByzantineConfig};
+use moniqua::algorithms::{Algorithm, MixPolicy, ThetaPolicy};
+use moniqua::bench_support::{quick_mode, section, BenchJson};
+use moniqua::coordinator::{ClusterConfig, ClusterTrainer, Report, TrainConfig};
+use moniqua::objectives::{Objective, Quadratic};
+use moniqua::quant::QuantConfig;
+use moniqua::telemetry::Counter;
+use moniqua::topology::Topology;
+
+const WORKERS: usize = 6;
+
+fn config(steps: u64, algorithm: Algorithm, verify_wire: bool, mix: MixPolicy) -> TrainConfig {
+    TrainConfig {
+        workers: WORKERS,
+        steps,
+        lr: 0.1,
+        algorithm,
+        network: None,
+        grad_time_s: Some(0.0),
+        eval_every: steps.max(4) / 4,
+        seed: 7,
+        verify_wire,
+        mix,
+        ..TrainConfig::default()
+    }
+}
+
+fn objective() -> Box<dyn Objective> {
+    Box::new(Quadratic::new(24, 1.0, 0.1, WORKERS, 3))
+}
+
+struct RunOut {
+    report: Report,
+    wall_s: f64,
+    digest_rejects: u64,
+    replay_rejects: u64,
+    equivocations: u64,
+    quarantined: u64,
+}
+
+fn run_cluster(cfg: TrainConfig, byz: Option<ByzantineConfig>) -> RunOut {
+    let mut t = ClusterTrainer::new(
+        cfg,
+        Topology::Ring(WORKERS),
+        objective(),
+        ClusterConfig { byz, ..ClusterConfig::default() },
+    )
+    .expect("cluster config accepted");
+    let t0 = std::time::Instant::now();
+    let report = t.run().expect("cluster run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert!(t.failures.is_empty(), "run recorded failures: {:?}", t.failures);
+    let snap = t.metrics().snapshot();
+    RunOut {
+        report,
+        wall_s,
+        digest_rejects: snap.counter(Counter::DigestRejects),
+        replay_rejects: snap.counter(Counter::ReplayRejects),
+        equivocations: snap.counter(Counter::EquivocationRejects),
+        quarantined: snap.counter(Counter::QuarantinedPeers),
+    }
+}
+
+fn final_loss(r: &Report) -> f64 {
+    r.trace.last().expect("trace").eval_loss
+}
+
+fn main() {
+    let bench_t0 = std::time::Instant::now();
+    let mut json = BenchJson::new("byzantine");
+    let fast = quick_mode();
+    let steps: u64 = if fast { 12 } else { 40 };
+    json.metric("steps", steps as f64);
+    json.label("topology", &format!("ring/{WORKERS}"));
+
+    let q8 = QuantConfig::stochastic(8);
+    let moniqua_digest = Algorithm::Moniqua {
+        theta: ThetaPolicy::Constant(2.0),
+        quant: q8.with_verify_hash(true),
+    };
+
+    // ------------------------------------------------------------------
+    section("defense overhead (zero adversaries, gate off vs on)");
+    println!(
+        "{:<20} {:>10} {:>14} {:>12}",
+        "engine", "gate", "total_bytes", "wall_s"
+    );
+    for (name, algorithm, verify_wire) in [
+        ("dpsgd", Algorithm::DPsgd, true),
+        ("moniqua-q8", moniqua_digest.clone(), false),
+    ] {
+        let off = run_cluster(
+            config(
+                steps,
+                match &algorithm {
+                    Algorithm::Moniqua { theta, .. } => {
+                        Algorithm::Moniqua { theta: *theta, quant: q8 }
+                    }
+                    a => a.clone(),
+                },
+                false,
+                MixPolicy::Mean,
+            ),
+            None,
+        );
+        let on = run_cluster(config(steps, algorithm, verify_wire, MixPolicy::Mean), None);
+        for (gate, r) in [("off", &off), ("on", &on)] {
+            println!(
+                "{:<20} {:>10} {:>14} {:>12.3}",
+                name, gate, r.report.total_bytes, r.wall_s
+            );
+            json.scenario(
+                &format!("{name}.gate_{gate}"),
+                r.wall_s,
+                r.report.total_bytes,
+                final_loss(&r.report),
+            );
+        }
+        assert_eq!(
+            (on.digest_rejects, on.quarantined),
+            (0, 0),
+            "{name}: honest traffic struck the live gate"
+        );
+        json.metric(
+            &format!("{name}.seal_byte_overhead"),
+            on.report.total_bytes as f64 - off.report.total_bytes as f64,
+        );
+    }
+
+    // ------------------------------------------------------------------
+    section("attack sweep (mode × adversary count, defense live)");
+    println!(
+        "{:<12} {:>6} {:>12} {:>12} {:>8} {:>8} {:>8} {:>8}",
+        "mode", "byz", "final_loss", "baseline", "digest", "replay", "equiv", "quar"
+    );
+    // Adversary masks on ring/6: worker 2, then workers 2 and 5
+    // (non-adjacent, so each keeps two honest neighbors to convict it).
+    let masks: &[(usize, u64)] = if fast { &[(1, 0b100)] } else { &[(1, 0b100), (2, 0b100100)] };
+    // Wrap needs the §6 digest to convict (only a modulo decode sees the θ
+    // escape); the other modes are caught by the machine seal on dpsgd.
+    let cases: Vec<(&'static str, ByzMode, Algorithm, bool)> = vec![
+        ("flip", ByzMode::Flip, Algorithm::DPsgd, true),
+        ("replay", ByzMode::Replay, Algorithm::DPsgd, true),
+        ("equivocate", ByzMode::Equivocate, Algorithm::DPsgd, true),
+        ("wrap", ByzMode::Wrap, moniqua_digest.clone(), false),
+    ];
+    for (name, mode, algorithm, verify_wire) in &cases {
+        let baseline = run_cluster(
+            config(steps, algorithm.clone(), *verify_wire, MixPolicy::Mean),
+            None,
+        );
+        let base_loss = final_loss(&baseline.report);
+        json.scenario(
+            &format!("{name}.byz0"),
+            baseline.wall_s,
+            baseline.report.total_bytes,
+            base_loss,
+        );
+        for &(count, mask) in masks {
+            let r = run_cluster(
+                config(steps, algorithm.clone(), *verify_wire, MixPolicy::Mean),
+                Some(ByzantineConfig { workers: mask, mode: *mode, strike_limit: 2 }),
+            );
+            let loss = final_loss(&r.report);
+            println!(
+                "{:<12} {:>6} {:>12.6} {:>12.6} {:>8} {:>8} {:>8} {:>8}",
+                name,
+                count,
+                loss,
+                base_loss,
+                r.digest_rejects,
+                r.replay_rejects,
+                r.equivocations,
+                r.quarantined,
+            );
+            let tag = format!("{name}.byz{count}");
+            json.scenario(&tag, r.wall_s, r.report.total_bytes, loss);
+            json.metric(&format!("{tag}.digest_rejects"), r.digest_rejects as f64);
+            json.metric(&format!("{tag}.replay_rejects"), r.replay_rejects as f64);
+            json.metric(&format!("{tag}.equivocations"), r.equivocations as f64);
+            json.metric(&format!("{tag}.quarantined_peers"), r.quarantined as f64);
+            // Each adversary is convicted once by each of its two honest
+            // ring neighbors.
+            assert_eq!(
+                r.quarantined,
+                2 * count as u64,
+                "{tag}: adversaries not fully quarantined"
+            );
+            // The acceptance bar: attacked loss within 2x fault-free (the
+            // tiny absolute slack only matters if both sit at the SGD
+            // noise floor).
+            assert!(
+                loss.is_finite() && loss <= 2.0 * base_loss + 1e-9,
+                "{tag}: attacked loss {loss} exceeds 2x fault-free {base_loss}"
+            );
+        }
+    }
+
+    // ------------------------------------------------------------------
+    section("robust mix vs the seal-valid outlier attack (wrap on dpsgd)");
+    // Honestly sealed wrap bytes pass the machine seal on a raw-f32 engine:
+    // the gate stays silent and the robust mix is the only line of defense.
+    println!("{:<12} {:>12} {:>8}", "mix", "final_loss", "quar");
+    let mut wrap_losses: Vec<(&'static str, f64)> = Vec::new();
+    for (name, mix) in [
+        ("mean", MixPolicy::Mean),
+        ("clipped", MixPolicy::Clipped(1.0)),
+        ("median", MixPolicy::Median),
+    ] {
+        let r = run_cluster(
+            config(steps, Algorithm::DPsgd, true, mix),
+            Some(ByzantineConfig { workers: 0b100, mode: ByzMode::Wrap, strike_limit: 2 }),
+        );
+        let loss = final_loss(&r.report);
+        println!("{:<12} {:>12.6} {:>8}", name, loss, r.quarantined);
+        assert_eq!(r.quarantined, 0, "seal-valid wrap must not convict ({name})");
+        json.scenario(
+            &format!("wrap_undetected.mix_{name}"),
+            r.wall_s,
+            r.report.total_bytes,
+            loss,
+        );
+        wrap_losses.push((name, loss));
+    }
+    let mean_loss = wrap_losses[0].1;
+    for &(name, loss) in &wrap_losses[1..] {
+        assert!(
+            loss < mean_loss,
+            "robust mix {name} did not improve on mean under wrap: {loss} vs {mean_loss}"
+        );
+    }
+
+    json.metric("wall_s", bench_t0.elapsed().as_secs_f64());
+    json.write().expect("write bench json");
+}

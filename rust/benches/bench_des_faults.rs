@@ -82,6 +82,7 @@ fn main() {
                         delay_prob: 0.0,
                         delay_s: 0.0,
                         straggler,
+                        byz: None,
                     },
                     topo_schedule: None,
                     grad_time_s: grad_time,

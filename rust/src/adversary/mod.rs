@@ -1,0 +1,373 @@
+//! **Adversarial fault plane**: Byzantine sender models, the round-bound
+//! payload seal the defense gate verifies, and the quarantine matrix
+//! re-derivation that excises convicted peers from the gossip graph.
+//!
+//! The §6 sender digests detect *accidental* corruption (a bit flip fails
+//! the FNV checksum, a θ-ball escape fails the semantic digest). This
+//! module models *deliberate* misbehavior — a peer that re-stamps its
+//! checksum after corrupting the payload, replays a stale round, or tells
+//! each neighbor a different story — and supplies the two deterministic
+//! primitives the defense layer in
+//! [`RoundStateMachine`](crate::coordinator) builds on:
+//!
+//! * a **round-bound seal** ([`seal_payload`] / [`seal_ok`]): an 8-byte
+//!   FNV-1a tail over `round ‖ body`, appended after the engine writes its
+//!   payload and stripped before the engine reads one. Binding the round
+//!   into the hash defeats replayed-content-with-a-fresh-round-stamp
+//!   without remembering any per-peer history, and two honest senders that
+//!   converge to identical payloads never collide with a stale frame of a
+//!   different round. The Moniqua family carries its own §6 semantic
+//!   digest instead (it additionally proves the θ bound); the seal covers
+//!   the raw-f32 engines whose wire bytes previously shipped unverified.
+//! * a **quarantine matrix** ([`excised_matrix`]): the gossip row
+//!   re-derivation over the surviving cohort, the same
+//!   [`Topology::resized`] + metropolis embedding the elastic subsystem
+//!   uses for leaves — convicted slots become isolated identity rows, so
+//!   the matrix stays symmetric and doubly stochastic and every engine's
+//!   math is unchanged. On ring/complete families the excision is locally
+//!   computable yet globally consistent: every honest node that convicts
+//!   the same peer derives the same matrix with no extra protocol round.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::topology::{CommMatrix, Topology};
+
+/// Length of the seal tail appended to sealed payloads.
+pub const SEAL_LEN: usize = 8;
+
+/// The wrap attack's model offset: far outside any θ ball the paper's
+/// policies produce (θ is O(αG/(1−ρ)), single digits in every recipe), so
+/// a receiver's modulo decode recovers *different* absolute codes than the
+/// sender hashed — exactly the Lemma-1 violation the §6 digest exists to
+/// catch.
+pub const WRAP_KICK: f32 = 257.0;
+
+/// What a designated Byzantine worker does to its outgoing frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ByzMode {
+    /// Corrupt the payload body and re-stamp the frame checksum valid:
+    /// only the seal / semantic digest can catch it.
+    Flip,
+    /// Send the honest current-round frame *plus* a re-broadcast of the
+    /// previous round's frame with its stale round stamp — the classic
+    /// replay. (The honest copy keeps the barrier from deadlocking; the
+    /// stale copy is what the gate must strike.)
+    Replay,
+    /// Broadcast honestly, then send each peer a *different* second
+    /// payload for the same `(round, sender)` — equivocation. Receivers
+    /// catch the divergent duplicate without comparing notes.
+    Equivocate,
+    /// Perturb the local model by a large constant before encoding, so the
+    /// frame is honestly encoded but escapes the θ ball: the receiver's
+    /// modulo decode recovers different absolute codes and the §6 digest
+    /// convicts it. On raw-f32 engines this degrades to an outlier attack
+    /// countered by the robust mix, not the digest gate.
+    Wrap,
+}
+
+impl ByzMode {
+    /// Parse the `byz_mode=` config key.
+    pub fn parse(s: &str) -> Result<ByzMode> {
+        Ok(match s {
+            "flip" => ByzMode::Flip,
+            "replay" => ByzMode::Replay,
+            "equivocate" => ByzMode::Equivocate,
+            "wrap" => ByzMode::Wrap,
+            other => bail!("unknown byz_mode '{other}' (flip|replay|equivocate|wrap)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ByzMode::Flip => "flip",
+            ByzMode::Replay => "replay",
+            ByzMode::Equivocate => "equivocate",
+            ByzMode::Wrap => "wrap",
+        }
+    }
+}
+
+/// Which workers misbehave, how, and how many strikes convict them.
+///
+/// `Copy` so it can ride inside [`FaultConfig`](crate::coordinator::des) —
+/// the worker set is a bitmask, which caps adversarial ids at 63. (A
+/// majority-honest cohort that large is far beyond the quorum the defense
+/// can tolerate anyway.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ByzantineConfig {
+    /// Bitmask of misbehaving worker ids (bit `i` ⇒ worker `i`).
+    pub workers: u64,
+    pub mode: ByzMode,
+    /// Strikes before a peer is quarantined (≥ 1).
+    pub strike_limit: u32,
+}
+
+impl ByzantineConfig {
+    /// Whether worker `i` is designated Byzantine.
+    #[inline]
+    pub fn is_byz(&self, i: usize) -> bool {
+        i < 64 && self.workers & (1u64 << i) != 0
+    }
+
+    /// Number of designated adversaries.
+    pub fn count(&self) -> usize {
+        self.workers.count_ones() as usize
+    }
+
+    /// Parse the `byz_workers=` comma list (`byz_workers=0,2`) into the
+    /// bitmask. Range against the worker count is checked by
+    /// [`validate`](Self::validate), which knows `n`.
+    pub fn parse_workers(spec: &str) -> Result<u64> {
+        let mut mask = 0u64;
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let id: usize = part
+                .parse()
+                .with_context(|| format!("byz_workers entry '{part}' is not a worker id"))?;
+            ensure!(id < 64, "byz_workers id {id} exceeds the bitmask capacity (ids < 64)");
+            mask |= 1u64 << id;
+        }
+        Ok(mask)
+    }
+
+    /// Loud typed errors on out-of-range values, mirroring the
+    /// `drop_prob` checks in `FaultConfig::validate`.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        ensure!(self.workers != 0, "byz_workers must name at least one worker");
+        ensure!(self.strike_limit >= 1, "quarantine strike limit must be >= 1, got 0");
+        let top = 63 - self.workers.leading_zeros() as usize;
+        ensure!(
+            top < n,
+            "byz_workers names worker {top} but the run has only {n} workers"
+        );
+        ensure!(
+            self.count() < n,
+            "byz_workers designates every worker; at least one honest worker is required"
+        );
+        Ok(())
+    }
+}
+
+/// FNV-1a over `round ‖ body` — the seal value.
+#[inline]
+fn seal_value(round: u64, body: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in round.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    for &b in body {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Append the 8-byte round-bound seal to `payload`. Called by the round
+/// machine after the engine's `node_send`, so engines never see the tail.
+// lint: hot-path
+#[inline]
+pub fn seal_payload(round: u64, payload: &mut Vec<u8>) {
+    let h = seal_value(round, payload);
+    payload.extend_from_slice(&h.to_le_bytes());
+}
+
+/// Verify a sealed payload against the round it claims. The frame-level
+/// FNV checksum covers `seal ‖ body` alike, so a tampered body with a
+/// re-stamped checksum still decodes — this is the gate that catches it.
+// lint: hot-path
+#[inline]
+pub fn seal_ok(round: u64, payload: &[u8]) -> bool {
+    if payload.len() < SEAL_LEN {
+        return false;
+    }
+    let (body, tail) = payload.split_at(payload.len() - SEAL_LEN);
+    let want = u64::from_le_bytes(tail.try_into().expect("8-byte seal tail"));
+    seal_value(round, body) == want
+}
+
+/// The body of a sealed payload (everything before the tail). Callers must
+/// have checked [`seal_ok`] first; a short payload panics.
+#[inline]
+pub fn sealed_body(payload: &[u8]) -> &[u8] {
+    &payload[..payload.len() - SEAL_LEN]
+}
+
+/// The substitution-equivalent matrix of the pre-conviction window: every
+/// edge touching a Byzantine worker is folded into the two diagonals, so
+/// an honest row applies the weight it would have given the rejected frame
+/// to its *own* model — exactly what the gate's self-substitution does —
+/// while the matrix stays symmetric and doubly stochastic (every engine's
+/// invariants hold). Used by the DES to model the defended value path; the
+/// cluster runtime realizes the same effect per-frame through
+/// [`Inbox::from_frames_with_self`](crate::algorithms::Inbox).
+// lint: cold
+pub fn folded_matrix(w: &CommMatrix, byz: &[bool]) -> CommMatrix {
+    let n = w.n();
+    assert_eq!(byz.len(), n, "byzantine mask/matrix size mismatch");
+    let mut m = crate::linalg::MatF64::zeros(n, n);
+    for i in 0..n {
+        m[(i, i)] = w.weight(i, i);
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = w.weight(i, j);
+            if v == 0.0 {
+                continue;
+            }
+            if byz[i] || byz[j] {
+                m[(i, i)] += v;
+                m[(j, j)] += v;
+            } else {
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+    }
+    CommMatrix::from_matrix(m)
+}
+
+/// Re-derive the gossip matrix over the non-quarantined cohort: the
+/// elastic-leave embedding (resize the topology family to the survivor
+/// count, embed in ascending id order, metropolis weights) with convicted
+/// slots as isolated identity rows. Returns the n×n matrix plus the
+/// n-sized embedded adjacency (quarantined slots have no edges).
+///
+/// Errors when the surviving cohort would disconnect or the topology
+/// family has no canonical shape at the smaller size (torus) — the caller
+/// surfaces that as a quorum-loss [`WorkerFailure`](crate::coordinator).
+// lint: cold
+pub fn excised_matrix(
+    topo: &Topology,
+    quarantined: &[bool],
+) -> Result<(CommMatrix, Vec<Vec<usize>>)> {
+    let n = topo.n();
+    ensure!(quarantined.len() == n, "quarantine table/topology size mismatch");
+    let slots: Vec<usize> = (0..n).filter(|&w| !quarantined[w]).collect();
+    ensure!(
+        slots.len() >= 2,
+        "quarantine leaves fewer than 2 workers; quorum lost"
+    );
+    let shape = topo
+        .resized(slots.len())
+        .context("quarantine needs a resizable topology")?;
+    ensure!(
+        shape.is_connected(),
+        "quarantining disconnects the surviving cohort ({shape:?})"
+    );
+    let small = shape.adjacency();
+    let mut adj = vec![Vec::new(); n];
+    for (si, nbrs) in small.iter().enumerate() {
+        adj[slots[si]] = nbrs.iter().map(|&sj| slots[sj]).collect();
+    }
+    let matrix = CommMatrix::metropolis(&adj);
+    Ok((matrix, adj))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seal_roundtrips_and_binds_the_round() {
+        let mut p = vec![1u8, 2, 3, 4, 5];
+        seal_payload(7, &mut p);
+        assert_eq!(p.len(), 5 + SEAL_LEN);
+        assert!(seal_ok(7, &p));
+        assert_eq!(sealed_body(&p), &[1, 2, 3, 4, 5]);
+        // Same body, different round: the seal must not transfer.
+        assert!(!seal_ok(8, &p));
+        // Tampered body under a valid-looking tail.
+        let mut q = p.clone();
+        q[0] ^= 0xFF;
+        assert!(!seal_ok(7, &q));
+        // Too short to even hold a tail.
+        assert!(!seal_ok(7, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn identical_bodies_in_different_rounds_get_different_seals() {
+        let mut a = vec![9u8; 16];
+        let mut b = vec![9u8; 16];
+        seal_payload(3, &mut a);
+        seal_payload(4, &mut b);
+        assert_ne!(a, b, "converged honest payloads must not alias across rounds");
+    }
+
+    #[test]
+    fn mode_and_worker_parsing() {
+        assert_eq!(ByzMode::parse("flip").unwrap(), ByzMode::Flip);
+        assert_eq!(ByzMode::parse("replay").unwrap(), ByzMode::Replay);
+        assert_eq!(ByzMode::parse("equivocate").unwrap(), ByzMode::Equivocate);
+        assert_eq!(ByzMode::parse("wrap").unwrap(), ByzMode::Wrap);
+        assert!(ByzMode::parse("gaslight").is_err());
+
+        assert_eq!(ByzantineConfig::parse_workers("0,2").unwrap(), 0b101);
+        assert_eq!(ByzantineConfig::parse_workers(" 3 ").unwrap(), 0b1000);
+        assert!(ByzantineConfig::parse_workers("x").is_err());
+        assert!(ByzantineConfig::parse_workers("64").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_configs() {
+        let cfg = |workers, strike_limit| ByzantineConfig {
+            workers,
+            mode: ByzMode::Flip,
+            strike_limit,
+        };
+        assert!(cfg(0b1, 3).validate(4).is_ok());
+        // Empty worker set.
+        assert!(cfg(0, 3).validate(4).is_err());
+        // Zero strike budget.
+        assert!(cfg(0b1, 0).validate(4).is_err());
+        // Worker id ≥ n.
+        let err = cfg(0b1_0000, 3).validate(4).unwrap_err().to_string();
+        assert!(err.contains("worker 4"), "{err}");
+        // All workers Byzantine.
+        assert!(cfg(0b1111, 3).validate(4).is_err());
+        assert!(cfg(0b1, 3).is_byz(0));
+        assert!(!cfg(0b1, 3).is_byz(1));
+    }
+
+    #[test]
+    fn folded_matrix_redirects_byzantine_weight_to_the_diagonal() {
+        let w = Topology::Ring(4).comm_matrix();
+        let folded = folded_matrix(&w, &[false, false, true, false]);
+        // Honest neighbors of worker 2 keep its old edge weight on their
+        // own diagonal (the self-substitution), everyone else is untouched.
+        assert_eq!(folded.weight(1, 2), 0.0);
+        assert_eq!(folded.weight(3, 2), 0.0);
+        assert_eq!(folded.weight(1, 1), w.weight(1, 1) + w.weight(1, 2));
+        assert_eq!(folded.weight(0, 1), w.weight(0, 1));
+        for i in 0..4 {
+            let row: f64 = (0..4).map(|j| folded.weight(i, j)).sum();
+            assert!((row - 1.0).abs() < 1e-12, "row {i} must stay stochastic");
+        }
+    }
+
+    #[test]
+    fn excised_ring_is_still_a_metropolis_ring_over_survivors() {
+        // Removing one node from a 5-ring yields a 4-ring over the
+        // survivors: every surviving row keeps degree 2 and weight 1/3 per
+        // edge; the convicted slot is an identity row.
+        let mut q = vec![false; 5];
+        q[2] = true;
+        let (m, adj) = excised_matrix(&Topology::Ring(5), &q).unwrap();
+        assert!(adj[2].is_empty());
+        assert_eq!(m.weight(2, 2), 1.0);
+        for i in [0usize, 1, 3, 4] {
+            assert_eq!(adj[i].len(), 2, "survivor {i} must keep ring degree 2");
+            assert_eq!(m.weight(i, 2), 0.0, "no survivor may keep an edge to the convict");
+            let row: f64 = (0..5).map(|j| m.weight(i, j)).sum();
+            assert!((row - 1.0).abs() < 1e-12, "row {i} must stay stochastic");
+        }
+        // The bridge: 1 and 3 become neighbors around the excised slot.
+        assert!(adj[1].contains(&3) && adj[3].contains(&1));
+    }
+
+    #[test]
+    fn excision_refuses_quorum_loss_and_unsizable_shapes() {
+        let q = vec![false, true, true, true];
+        assert!(excised_matrix(&Topology::Ring(4), &q).is_err());
+        let mut q6 = vec![false; 6];
+        q6[0] = true;
+        assert!(excised_matrix(&Topology::Torus(2, 3), &q6).is_err());
+    }
+}

@@ -68,6 +68,14 @@ impl SyncAlgorithm for AllReduce {
         }
     }
 
+    /// The seal is appended/stripped by the round machine; the collective's
+    /// byte model stays `allreduce_bytes` (the network prices a ring
+    /// all-reduce, not the all-broadcast frames the cluster realizes it
+    /// with), so there is nothing to re-price here — just accept the gate.
+    fn set_verify_wire(&mut self, _on: bool) -> bool {
+        true
+    }
+
     fn comm_scope(&self) -> CommScope {
         // The collective needs every worker's gradient; the cluster runtime
         // realizes the allreduce as an all-broadcast (the network *model*

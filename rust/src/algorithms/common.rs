@@ -104,6 +104,41 @@ pub fn wire_bytes_packed(cfg: &QuantConfig, d: usize, packed: &[u8]) -> usize {
     payload + if cfg.verify_hash { 8 } else { 0 }
 }
 
+/// How an engine folds neighbor contributions into its local model (the
+/// `mix=` config key). [`MixPolicy::Mean`] is the paper's weighted gossip
+/// average and the bitwise-pinned default; the robust options bound a
+/// Byzantine outlier's influence on each coordinate:
+///
+/// * [`MixPolicy::Clipped`]`(τ)` clamps every neighbor *deviation* term
+///   (the neighbor's value relative to the local model) to `[-τ, τ]`
+///   before applying the gossip weight;
+/// * [`MixPolicy::Median`] replaces the weighted sum of deviations with
+///   the coordinate-wise median of neighbor deviations, scaled by the
+///   total off-diagonal weight.
+///
+/// Both are deterministic: the per-coordinate operations are pure
+/// functions of the (ascending-sender-ordered) neighbor values, so the
+/// lockstep and cluster runtimes stay bitwise identical under any policy.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum MixPolicy {
+    #[default]
+    Mean,
+    /// Clamp each coordinate's deviation to `±τ` (τ > 0).
+    Clipped(f32),
+    /// Coordinate-wise median of neighbor deviations.
+    Median,
+}
+
+impl MixPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixPolicy::Mean => "mean",
+            MixPolicy::Clipped(_) => "clipped",
+            MixPolicy::Median => "median",
+        }
+    }
+}
+
 /// Which peers a node-level round exchanges payloads with (the
 /// [`super::SyncAlgorithm::node_send`] /
 /// [`super::SyncAlgorithm::node_recv`] split).
@@ -135,6 +170,16 @@ pub struct Inbox<'a> {
 enum InboxRepr<'a> {
     Pairs(Vec<(usize, &'a [u8])>),
     Frames(&'a [crate::transport::Frame]),
+    /// Frames plus a sorted list of senders whose payload is *substituted*
+    /// by the receiver's own current-round payload — the defense layer's
+    /// detection-window fallback: a rejected sender contributes the local
+    /// model, which cancels its deviation term exactly (gossip weights
+    /// stay row-stochastic, no engine change needed).
+    FramesSub {
+        frames: &'a [crate::transport::Frame],
+        own: &'a [u8],
+        subst: &'a [usize],
+    },
 }
 
 impl<'a> Inbox<'a> {
@@ -158,6 +203,32 @@ impl<'a> Inbox<'a> {
         Inbox { msgs: InboxRepr::Frames(frames) }
     }
 
+    /// As [`Inbox::from_frames`], but senders listed in `subst` (sorted
+    /// ascending) answer [`Inbox::payload`] with `own` — the receiver's
+    /// own current-round payload — instead of a held frame. Used by the
+    /// defense layer while a striking peer awaits conviction: the
+    /// self-substituted contribution is the neutral element of every
+    /// engine's accumulate loop, so no engine needs a rejection branch.
+    pub fn from_frames_with_self(
+        frames: &'a [crate::transport::Frame],
+        own: &'a [u8],
+        subst: &'a [usize],
+    ) -> Self {
+        debug_assert!(
+            frames.windows(2).all(|w| w[0].sender < w[1].sender),
+            "frames must be sorted by sender, without duplicates"
+        );
+        debug_assert!(
+            subst.windows(2).all(|w| w[0] < w[1]),
+            "substituted senders must be sorted, without duplicates"
+        );
+        debug_assert!(
+            frames.iter().all(|f| subst.binary_search(&(f.sender as usize)).is_err()),
+            "a sender cannot be both held and substituted"
+        );
+        Inbox { msgs: InboxRepr::FramesSub { frames, own, subst } }
+    }
+
     /// Payload from sender `from`; panics if that peer's frame is missing
     /// (the cluster round barrier guarantees completeness before recv).
     pub fn payload(&self, from: usize) -> &'a [u8] {
@@ -173,6 +244,17 @@ impl<'a> Inbox<'a> {
                     .find(|f| f.sender as usize == from)
                     .map(|f| f.payload.as_slice())
             }
+            InboxRepr::FramesSub { frames, own, subst } => {
+                if subst.binary_search(&from).is_ok() {
+                    Some(*own)
+                } else {
+                    let frames: &'a [crate::transport::Frame] = *frames;
+                    frames
+                        .iter()
+                        .find(|f| f.sender as usize == from)
+                        .map(|f| f.payload.as_slice())
+                }
+            }
         };
         found.unwrap_or_else(|| panic!("inbox missing payload from worker {from}"))
     }
@@ -181,6 +263,7 @@ impl<'a> Inbox<'a> {
         match &self.msgs {
             InboxRepr::Pairs(msgs) => msgs.len(),
             InboxRepr::Frames(frames) => frames.len(),
+            InboxRepr::FramesSub { frames, subst, .. } => frames.len() + subst.len(),
         }
     }
 
@@ -189,15 +272,61 @@ impl<'a> Inbox<'a> {
     }
 
     /// `(sender, payload)` pairs in ascending sender order.
-    pub fn iter(&self) -> impl Iterator<Item = (usize, &'a [u8])> + '_ {
-        let (pairs, frames) = match &self.msgs {
-            InboxRepr::Pairs(msgs) => (Some(msgs.iter().copied()), None),
-            InboxRepr::Frames(fs) => {
-                let fs: &'a [crate::transport::Frame] = *fs;
-                (None, Some(fs.iter().map(|f| (f.sender as usize, f.payload.as_slice()))))
+    pub fn iter(&self) -> InboxIter<'a, '_> {
+        InboxIter { inbox: self, fi: 0, si: 0 }
+    }
+}
+
+/// Ascending-sender iterator over an [`Inbox`] (merges held frames with
+/// substituted senders in the [`InboxRepr::FramesSub`] case). A named
+/// type (not `impl Iterator`) so the three representations share one
+/// zero-allocation walker.
+pub struct InboxIter<'a, 'b> {
+    inbox: &'b Inbox<'a>,
+    fi: usize,
+    si: usize,
+}
+
+impl<'a> Iterator for InboxIter<'a, '_> {
+    type Item = (usize, &'a [u8]);
+
+    fn next(&mut self) -> Option<(usize, &'a [u8])> {
+        match &self.inbox.msgs {
+            InboxRepr::Pairs(msgs) => {
+                let &(j, p) = msgs.get(self.fi)?;
+                self.fi += 1;
+                Some((j, p))
             }
-        };
-        pairs.into_iter().flatten().chain(frames.into_iter().flatten())
+            InboxRepr::Frames(frames) => {
+                let f = frames.get(self.fi)?;
+                self.fi += 1;
+                Some((f.sender as usize, f.payload.as_slice()))
+            }
+            InboxRepr::FramesSub { frames, own, subst } => {
+                let frame = frames.get(self.fi);
+                let sub = subst.get(self.si).copied();
+                match (frame, sub) {
+                    (None, None) => None,
+                    (Some(f), None) => {
+                        self.fi += 1;
+                        Some((f.sender as usize, f.payload.as_slice()))
+                    }
+                    (None, Some(s)) => {
+                        self.si += 1;
+                        Some((s, *own))
+                    }
+                    (Some(f), Some(s)) => {
+                        if (f.sender as usize) < s {
+                            self.fi += 1;
+                            Some((f.sender as usize, f.payload.as_slice()))
+                        } else {
+                            self.si += 1;
+                            Some((s, *own))
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -511,6 +640,49 @@ mod tests {
         let b: Vec<(usize, &[u8])> = owned.iter().collect();
         assert_eq!(a, b);
         assert!(!borrowed.is_empty());
+    }
+
+    #[test]
+    fn inbox_with_self_substitution_merges_in_sender_order() {
+        use crate::transport::{Frame, FrameKind};
+        let mk = |sender: u16, payload: Vec<u8>| Frame {
+            round: 1,
+            sender,
+            algo: 4,
+            bits: 8,
+            kind: FrameKind::Data,
+            theta: 0.0,
+            payload,
+        };
+        let frames = vec![mk(0, vec![10]), mk(3, vec![30])];
+        let own = [42u8];
+        let subst = [1usize, 2];
+        let inbox = Inbox::from_frames_with_self(&frames, &own, &subst);
+        assert_eq!(inbox.len(), 4);
+        // Substituted senders answer with the receiver's own payload…
+        assert_eq!(inbox.payload(1), &own[..]);
+        assert_eq!(inbox.payload(2), &own[..]);
+        // …held senders with their frame.
+        assert_eq!(inbox.payload(0), &[10][..]);
+        assert_eq!(inbox.payload(3), &[30][..]);
+        let order: Vec<(usize, &[u8])> = inbox.iter().collect();
+        assert_eq!(
+            order,
+            vec![
+                (0usize, &[10u8][..]),
+                (1, &own[..]),
+                (2, &own[..]),
+                (3, &[30u8][..]),
+            ]
+        );
+    }
+
+    #[test]
+    fn mix_policy_default_and_names() {
+        assert_eq!(MixPolicy::default(), MixPolicy::Mean);
+        assert_eq!(MixPolicy::Mean.name(), "mean");
+        assert_eq!(MixPolicy::Clipped(0.5).name(), "clipped");
+        assert_eq!(MixPolicy::Median.name(), "median");
     }
 
     #[test]

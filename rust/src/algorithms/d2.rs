@@ -43,6 +43,11 @@ pub struct D2 {
     /// Node-mode decode buffer for full-precision neighbor payloads.
     decode: Vec<f32>,
     last_theta: f64,
+    /// Full-precision mode only: price the round machine's 8-byte seal.
+    verify_wire: bool,
+    /// Moniqua mode only: senders whose §6 digest failed this round,
+    /// drained by the round machine into its strike accounting.
+    strike_buf: Vec<u16>,
 }
 
 impl D2 {
@@ -71,7 +76,13 @@ impl D2 {
             shared_noise: Vec::new(),
             decode: vec![0.0; d],
             last_theta: 0.0,
+            verify_wire: false,
+            strike_buf: Vec::with_capacity(n),
         }
+    }
+
+    fn wire_overhead(&self) -> usize {
+        if self.verify_wire { crate::adversary::SEAL_LEN } else { 0 }
     }
 
     /// Node-mode half step (variance reduction + history update) for one
@@ -112,6 +123,20 @@ impl SyncAlgorithm for D2 {
 
     fn set_threads(&mut self, threads: usize) {
         self.pool = RoundPool::new(threads);
+    }
+
+    /// Algorithm 2 ships its own §6 digest; only the full-precision mode
+    /// rides the machine seal (and must price it).
+    fn set_verify_wire(&mut self, on: bool) -> bool {
+        if self.moniqua.is_some() {
+            return !on;
+        }
+        self.verify_wire = on;
+        true
+    }
+
+    fn drain_strikes(&mut self, out: &mut Vec<u16>) {
+        out.append(&mut self.strike_buf);
     }
 
     fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
@@ -202,7 +227,7 @@ impl SyncAlgorithm for D2 {
                 });
                 let deg_sum = self.w.deg_sum();
                 CommStats {
-                    bytes_per_msg: self.d * 4,
+                    bytes_per_msg: self.d * 4 + self.wire_overhead(),
                     messages: deg_sum as u64,
                     allreduce_bytes: None,
                     extra_local_passes: 0,
@@ -317,6 +342,7 @@ impl SyncAlgorithm for D2 {
         let deg_sum = self.w.deg_sum();
         match self.moniqua.clone() {
             None => {
+                let overhead = self.wire_overhead();
                 let D2 { w, ws, decode, .. } = self;
                 x.fill(0.0);
                 crate::linalg::axpy(x, w.weight(i, i) as f32, &ws[i].half);
@@ -325,7 +351,7 @@ impl SyncAlgorithm for D2 {
                     crate::linalg::axpy(x, wji as f32, decode);
                 }
                 CommStats {
-                    bytes_per_msg: d * 4,
+                    bytes_per_msg: d * 4 + overhead,
                     messages: deg_sum as u64,
                     allreduce_bytes: None,
                     extra_local_passes: 0,
@@ -335,15 +361,26 @@ impl SyncAlgorithm for D2 {
                 let theta = theta_policy.theta(lr as f64, ctx.g_inf, self.w.n(), ctx.rho);
                 let codec = MoniquaCodec::from_theta(theta as f32, &cfg);
                 let wire_len = packing::packed_len(d, cfg.bits);
-                let D2 { w, ws, recover, .. } = self;
+                let D2 { w, ws, recover, strike_buf, .. } = self;
                 let rec = &mut recover[i];
                 x.copy_from_slice(&ws[i].half);
                 for (j, wji) in w.in_edges(i) {
                     let payload = inbox.payload(j);
-                    let wire =
-                        if cfg.verify_hash { &payload[..wire_len] } else { payload };
+                    let (wire, digest) = if cfg.verify_hash {
+                        let (wb, db) = payload.split_at(wire_len);
+                        (wb, u64::from_le_bytes(db.try_into().expect("8-byte digest tail")))
+                    } else {
+                        (payload, 0u64)
+                    };
                     let wji = wji as f32;
                     codec.recover_packed_into(wire, &ws[i].half, rec);
+                    if cfg.verify_hash && !hash::verify_reconstruction(&codec, rec, digest) {
+                        // Verify-then-skip: a digest-failing Σ term is
+                        // dropped (the self-substituted term would be
+                        // exactly zero anyway) and the sender is struck.
+                        strike_buf.push(j as u16);
+                        continue;
+                    }
                     for k in 0..d {
                         x[k] += wji * (rec[k] - ws[i].xhat_self[k]);
                     }

@@ -6,7 +6,7 @@
 //! ```
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, SendPhase, StepCtx, SyncAlgorithm};
+use super::{common, CommStats, Inbox, MixPolicy, SendPhase, StepCtx, SyncAlgorithm};
 use crate::topology::CommMatrix;
 
 pub struct DPsgd {
@@ -16,6 +16,14 @@ pub struct DPsgd {
     scratch: Vec<Vec<f32>>,
     /// Node-mode decode buffer for one neighbor's f32 payload.
     decode: Vec<f32>,
+    /// When set, the round machine appends an 8-byte seal to every frame;
+    /// the engine's only obligation is to price it into `bytes_per_msg`.
+    verify_wire: bool,
+    mix: MixPolicy,
+    /// Median-mix only: staged neighbor deviations (max in-degree rows).
+    dev: Vec<Vec<f32>>,
+    /// Median-mix only: per-coordinate sort buffer.
+    sortbuf: Vec<f32>,
 }
 
 impl DPsgd {
@@ -27,7 +35,57 @@ impl DPsgd {
             pool: RoundPool::for_dim(d),
             scratch: vec![vec![0.0; d]; n],
             decode: vec![0.0; d],
+            verify_wire: false,
+            mix: MixPolicy::Mean,
+            dev: Vec::new(),
+            sortbuf: Vec::new(),
         }
+    }
+
+    // lint: cold
+    fn size_median_scratch(&mut self) {
+        let n = self.w.n();
+        let deg = (0..n).map(|i| self.w.in_edges(i).count()).max().unwrap_or(0);
+        self.dev = (0..deg).map(|_| vec![0.0; self.d]).collect();
+        self.sortbuf = Vec::with_capacity(deg.max(1));
+    }
+
+    fn wire_overhead(&self) -> usize {
+        if self.verify_wire { crate::adversary::SEAL_LEN } else { 0 }
+    }
+}
+
+/// Coordinate-wise median of the first `t` staged deviation rows, scaled
+/// by the total off-diagonal weight `wsum`, written into `out` as
+/// `out[k] = base[k] + wsum·median_k − lr·grad[k]`. Deterministic: the
+/// rows are sorted with `total_cmp` (a pure function of the f32 bits) and
+/// the even-count midpoint uses an exact ×0.5.
+// lint: hot-path
+fn median_apply(
+    dev: &[Vec<f32>],
+    sortbuf: &mut Vec<f32>,
+    t: usize,
+    wsum: f32,
+    base: &[f32],
+    grad: &[f32],
+    lr: f32,
+    out: &mut [f32],
+) {
+    for k in 0..base.len() {
+        sortbuf.clear();
+        for row in &dev[..t] {
+            sortbuf.push(row[k]);
+        }
+        sortbuf.sort_unstable_by(|a, b| a.total_cmp(b));
+        let m = sortbuf.len();
+        let med = if m == 0 {
+            0.0
+        } else if m % 2 == 1 {
+            sortbuf[m / 2]
+        } else {
+            0.5 * (sortbuf[m / 2 - 1] + sortbuf[m / 2])
+        };
+        out[k] = base[k] + wsum * med - lr * grad[k];
     }
 }
 
@@ -43,6 +101,9 @@ impl SyncAlgorithm for DPsgd {
     fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
         assert_eq!(w.n(), self.w.n(), "matrix swap changed worker count");
         self.w = w.clone();
+        if matches!(self.mix, MixPolicy::Median) {
+            self.size_median_scratch();
+        }
         true
     }
 
@@ -55,17 +116,65 @@ impl SyncAlgorithm for DPsgd {
         _ctx: &StepCtx,
     ) -> CommStats {
         // x_{k+1,i} = Σ_j W_ji x_j − α g_i  (exact neighbor models on the wire)
-        {
-            let w = &self.w;
-            let xs_r: &[Vec<f32>] = xs;
-            self.pool.for_each_mut(&mut self.scratch, |i, out| {
-                out.fill(0.0);
-                crate::linalg::axpy(out, w.weight(i, i) as f32, &xs_r[i]);
-                for (j, wji) in w.in_edges(i) {
-                    crate::linalg::axpy(out, wji as f32, &xs_r[j]);
+        let d = self.d;
+        match self.mix {
+            MixPolicy::Mean => {
+                let w = &self.w;
+                let xs_r: &[Vec<f32>] = xs;
+                self.pool.for_each_mut(&mut self.scratch, |i, out| {
+                    out.fill(0.0);
+                    crate::linalg::axpy(out, w.weight(i, i) as f32, &xs_r[i]);
+                    for (j, wji) in w.in_edges(i) {
+                        crate::linalg::axpy(out, wji as f32, &xs_r[j]);
+                    }
+                    crate::linalg::axpy(out, -lr, &grads[i]);
+                });
+            }
+            MixPolicy::Clipped(tau) => {
+                // Deviation form x_i + Σ_j W_ji clamp(x_j − x_i, ±τ) − α g_i:
+                // algebraically the mean update when no coordinate clips, but
+                // a bounded-influence step whenever a neighbor strays.
+                let w = &self.w;
+                let xs_r: &[Vec<f32>] = xs;
+                self.pool.for_each_mut(&mut self.scratch, |i, out| {
+                    let xi = &xs_r[i];
+                    out.copy_from_slice(xi);
+                    for (j, wji) in w.in_edges(i) {
+                        let wji = wji as f32;
+                        let xj = &xs_r[j];
+                        for k in 0..d {
+                            out[k] += wji * (xj[k] - xi[k]).clamp(-tau, tau);
+                        }
+                    }
+                    crate::linalg::axpy(out, -lr, &grads[i]);
+                });
+            }
+            MixPolicy::Median => {
+                // Sequential: the robust path trades the pool fan-out for a
+                // shared sort buffer; determinism is the same either way.
+                let n = self.w.n();
+                for i in 0..n {
+                    let mut wsum = 0.0f32;
+                    let mut t = 0usize;
+                    for (j, wji) in self.w.in_edges(i) {
+                        for k in 0..d {
+                            self.dev[t][k] = xs[j][k] - xs[i][k];
+                        }
+                        wsum += wji as f32;
+                        t += 1;
+                    }
+                    median_apply(
+                        &self.dev,
+                        &mut self.sortbuf,
+                        t,
+                        wsum,
+                        &xs[i],
+                        &grads[i],
+                        lr,
+                        &mut self.scratch[i],
+                    );
                 }
-                crate::linalg::axpy(out, -lr, &grads[i]);
-            });
+            }
         }
         {
             let scratch = &self.scratch;
@@ -73,11 +182,29 @@ impl SyncAlgorithm for DPsgd {
         }
         let deg_sum = self.w.deg_sum();
         CommStats {
-            bytes_per_msg: self.d * 4, // full f32 model
+            bytes_per_msg: self.d * 4 + self.wire_overhead(),
             messages: deg_sum as u64,
             allreduce_bytes: None,
             extra_local_passes: 0,
         }
+    }
+
+    fn set_verify_wire(&mut self, _on: bool) -> bool {
+        self.verify_wire = _on;
+        true
+    }
+
+    fn set_mix(&mut self, mix: MixPolicy) -> bool {
+        if let MixPolicy::Clipped(tau) = mix {
+            if !(tau > 0.0) {
+                return false;
+            }
+        }
+        self.mix = mix;
+        if matches!(mix, MixPolicy::Median) {
+            self.size_median_scratch();
+        }
+        true
     }
 
     fn node_send(
@@ -111,19 +238,49 @@ impl SyncAlgorithm for DPsgd {
         _ctx: &StepCtx,
         inbox: &Inbox,
     ) -> CommStats {
-        let DPsgd { w, scratch, decode, .. } = self;
+        let mix = self.mix;
+        let d = self.d;
+        let DPsgd { w, scratch, decode, dev, sortbuf, .. } = self;
         let out = &mut scratch[i];
-        out.fill(0.0);
-        crate::linalg::axpy(out, w.weight(i, i) as f32, x);
-        for (j, wji) in w.in_edges(i) {
-            common::read_f32s_into(inbox.payload(j), decode);
-            crate::linalg::axpy(out, wji as f32, decode);
+        match mix {
+            MixPolicy::Mean => {
+                out.fill(0.0);
+                crate::linalg::axpy(out, w.weight(i, i) as f32, x);
+                for (j, wji) in w.in_edges(i) {
+                    common::read_f32s_into(inbox.payload(j), decode);
+                    crate::linalg::axpy(out, wji as f32, decode);
+                }
+                crate::linalg::axpy(out, -lr, grad);
+            }
+            MixPolicy::Clipped(tau) => {
+                out.copy_from_slice(x);
+                for (j, wji) in w.in_edges(i) {
+                    common::read_f32s_into(inbox.payload(j), decode);
+                    let wji = wji as f32;
+                    for k in 0..d {
+                        out[k] += wji * (decode[k] - x[k]).clamp(-tau, tau);
+                    }
+                }
+                crate::linalg::axpy(out, -lr, grad);
+            }
+            MixPolicy::Median => {
+                let mut wsum = 0.0f32;
+                let mut t = 0usize;
+                for (j, wji) in w.in_edges(i) {
+                    common::read_f32s_into(inbox.payload(j), decode);
+                    for k in 0..d {
+                        dev[t][k] = decode[k] - x[k];
+                    }
+                    wsum += wji as f32;
+                    t += 1;
+                }
+                median_apply(dev, sortbuf, t, wsum, x, grad, lr, out);
+            }
         }
-        crate::linalg::axpy(out, -lr, grad);
         x.copy_from_slice(out);
         let deg_sum = w.deg_sum();
         CommStats {
-            bytes_per_msg: self.d * 4,
+            bytes_per_msg: self.d * 4 + self.wire_overhead(),
             messages: deg_sum as u64,
             allreduce_bytes: None,
             extra_local_passes: 0,
@@ -173,5 +330,54 @@ mod tests {
         assert!(spread.1 - spread.0 < 1e-4, "spread {spread:?}");
         // consensus value = initial mean = 2.5
         assert!((xs[0][0] - 2.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn robust_mixes_track_mean_on_benign_runs() {
+        let w = Topology::Ring(5).comm_matrix();
+        let d = 4;
+        let ctx = StepCtx { seed: 0, rho: 0.8, g_inf: 1.0 };
+        let init: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32; d]).collect();
+        let grads: Vec<Vec<f32>> = (0..5).map(|_| vec![0.25; d]).collect();
+        let mut mean = DPsgd::new(w.clone(), d);
+        let mut xs_mean = init.clone();
+        mean.step(&mut xs_mean, &grads, 0.1, 0, &ctx);
+
+        // A clip bound nothing reaches reproduces the mean update
+        // (deviation form is algebraically identical, not bitwise).
+        let mut clip = DPsgd::new(w.clone(), d);
+        assert!(clip.set_mix(MixPolicy::Clipped(100.0)));
+        assert!(!clip.set_mix(MixPolicy::Clipped(0.0)), "τ=0 must be refused");
+        let mut xs_clip = init.clone();
+        clip.step(&mut xs_clip, &grads, 0.1, 0, &ctx);
+        for (a, b) in xs_mean.iter().zip(&xs_clip) {
+            for k in 0..d {
+                assert!((a[k] - b[k]).abs() < 1e-5);
+            }
+        }
+
+        // On a degree-2 ring the coordinate-wise median of two deviations is
+        // their midpoint, so the median mix IS the metropolis mean there.
+        let mut med = DPsgd::new(w, d);
+        assert!(med.set_mix(MixPolicy::Median));
+        let mut xs_med = init;
+        med.step(&mut xs_med, &grads, 0.1, 0, &ctx);
+        for (a, b) in xs_mean.iter().zip(&xs_med) {
+            for k in 0..d {
+                assert!((a[k] - b[k]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn verify_wire_prices_the_seal_into_bytes() {
+        let w = Topology::Ring(5).comm_matrix();
+        let mut alg = DPsgd::new(w, 8);
+        assert!(alg.set_verify_wire(true));
+        let mut xs: Vec<Vec<f32>> = (0..5).map(|_| vec![0.0; 8]).collect();
+        let grads = xs.clone();
+        let ctx = StepCtx { seed: 0, rho: 0.8, g_inf: 0.0 };
+        let stats = alg.step(&mut xs, &grads, 0.1, 0, &ctx);
+        assert_eq!(stats.bytes_per_msg, 8 * 4 + crate::adversary::SEAL_LEN);
     }
 }

@@ -36,7 +36,7 @@ pub mod moniqua;
 pub mod naive;
 
 pub use adpsgd::{AdPsgd, AsyncVariant};
-pub use common::{CommScope, CommStats, Inbox, RangeQuantizer, StepCtx};
+pub use common::{CommScope, CommStats, Inbox, MixPolicy, RangeQuantizer, StepCtx};
 pub use engine::RoundPool;
 
 use crate::quant::QuantConfig;
@@ -299,6 +299,37 @@ pub trait SyncAlgorithm: Send {
     fn swap_matrix(&mut self, w: &CommMatrix) -> bool {
         let _ = w;
         false
+    }
+
+    /// Enable (or disable) the round-bound wire seal for this engine's
+    /// node-mode payloads. The seal itself is appended/stripped by the
+    /// round machine — an engine only needs to *account* for the 8-byte
+    /// tail in its reported [`CommStats::bytes_per_msg`], in both the
+    /// lockstep `step` and the node halves, so measured wire bytes keep
+    /// matching the ledger's prediction. Returns `false` when the engine
+    /// cannot account for a seal (the quantized engines, whose wire format
+    /// either carries the §6 digest already or refuses verification);
+    /// turning it *off* always succeeds.
+    fn set_verify_wire(&mut self, on: bool) -> bool {
+        !on
+    }
+
+    /// Select the neighbor-mix policy (the `mix=` config key). Returns
+    /// `false` when this engine does not implement the requested policy —
+    /// the runtimes surface that as a configuration error. Every engine
+    /// accepts [`MixPolicy::Mean`] (it is the existing accumulate path).
+    fn set_mix(&mut self, mix: MixPolicy) -> bool {
+        mix == MixPolicy::Mean
+    }
+
+    /// Drain the senders whose payloads failed this engine's *semantic*
+    /// verification during the last `node_recv` (the Moniqua family's §6
+    /// digest check) into `out`, one entry per failed sender, clearing the
+    /// engine's internal record. The round machine turns these into
+    /// strikes. Default: engines with no engine-side verification never
+    /// report any.
+    fn drain_strikes(&mut self, out: &mut Vec<u16>) {
+        let _ = out;
     }
 
     /// Serialize every bit of *persistent* state this engine carries across

@@ -26,7 +26,9 @@
 //! reused at every receiving edge.
 
 use super::engine::RoundPool;
-use super::{common, CommStats, Inbox, SendPhase, StepCtx, SyncAlgorithm, ThetaPolicy};
+use super::{
+    common, CommStats, Inbox, MixPolicy, SendPhase, StepCtx, SyncAlgorithm, ThetaPolicy,
+};
 use crate::quant::{hash, packing, MoniquaCodec, QuantConfig};
 use crate::topology::CommMatrix;
 
@@ -47,6 +49,11 @@ struct RecvScratch {
     acc: Vec<f32>,
     recover: Vec<f32>,
     failures: u64,
+    /// Median-mix only: one deviation row per in-neighbor (empty under
+    /// mean/clipped — sized by [`MoniquaSync::set_mix`]).
+    dev: Vec<Vec<f32>>,
+    /// Median-mix only: per-coordinate sort buffer (capacity = degree).
+    sortbuf: Vec<f32>,
 }
 
 pub struct MoniquaSync {
@@ -68,6 +75,11 @@ pub struct MoniquaSync {
     shared_noise: Vec<f32>,
     /// Count of θ-verification failures observed (when cfg.verify_hash).
     pub verify_failures: u64,
+    /// Neighbor-mix policy (mean is the paper's gossip average).
+    mix: MixPolicy,
+    /// Senders that failed the §6 digest in the last `node_recv`, drained
+    /// by the round machine into strike accounting.
+    strike_buf: Vec<u16>,
 }
 
 impl MoniquaSync {
@@ -111,10 +123,14 @@ impl MoniquaSync {
                     acc: vec![0.0; d],
                     recover: vec![0.0; d],
                     failures: 0,
+                    dev: Vec::new(),
+                    sortbuf: Vec::new(),
                 })
                 .collect(),
             shared_noise: Vec::new(),
             verify_failures: 0,
+            mix: MixPolicy::Mean,
+            strike_buf: Vec::with_capacity(n),
         }
     }
 
@@ -122,6 +138,91 @@ impl MoniquaSync {
     fn codec(&self, lr: f32, ctx: &StepCtx) -> MoniquaCodec {
         let theta = self.theta.theta(lr as f64, ctx.g_inf, self.w.n(), ctx.rho);
         MoniquaCodec::from_theta(theta as f32, &self.cfg)
+    }
+
+    /// (Re)size the median-mix scratch: one deviation row per in-neighbor
+    /// of each receiver. Cold — called from `set_mix`/`swap_matrix` only.
+    // lint: cold
+    fn size_median_scratch(&mut self) {
+        for i in 0..self.w.n() {
+            let deg = self.w.in_edges(i).count();
+            let rs = &mut self.recv[i];
+            rs.dev = (0..deg).map(|_| vec![0.0; self.d]).collect();
+            rs.sortbuf = Vec::with_capacity(deg.max(1));
+        }
+    }
+}
+
+/// Fold one neighbor's recovered model into the accumulator under the
+/// active mix policy. `ok == false` (a §6 digest failure) contributes the
+/// neutral element — the same thing the cluster defense layer's
+/// self-substitution produces for machine-level rejects — so the lockstep
+/// and node paths agree bitwise. The mean arm with `ok == true` is the
+/// paper's weighted gossip sum, byte-for-byte the pre-defense loop.
+// lint: hot-path
+#[inline]
+fn mix_neighbor(
+    mix: MixPolicy,
+    rs: &mut RecvScratch,
+    xh: &[f32],
+    wji: f32,
+    ok: bool,
+    d: usize,
+    wsum: &mut f32,
+    t: &mut usize,
+) {
+    match mix {
+        MixPolicy::Mean => {
+            if ok {
+                for k in 0..d {
+                    rs.acc[k] += wji * (rs.recover[k] - xh[k]);
+                }
+            }
+        }
+        MixPolicy::Clipped(tau) => {
+            if ok {
+                for k in 0..d {
+                    rs.acc[k] += wji * (rs.recover[k] - xh[k]).clamp(-tau, tau);
+                }
+            }
+        }
+        MixPolicy::Median => {
+            let row = &mut rs.dev[*t];
+            if ok {
+                for k in 0..d {
+                    row[k] = rs.recover[k] - xh[k];
+                }
+            } else {
+                row.fill(0.0);
+            }
+            *wsum += wji;
+            *t += 1;
+        }
+    }
+}
+
+/// Median-mix epilogue: the coordinate-wise median of the neighbor
+/// deviation rows, scaled by the total off-diagonal weight. `total_cmp`
+/// ordering makes the sort (and therefore the result) a pure function of
+/// the input bits, so every runtime computes the same median bitwise; an
+/// even neighbor count takes the exact mean of the two middles.
+// lint: hot-path
+fn median_finalize(rs: &mut RecvScratch, wsum: f32, t: usize, d: usize) {
+    for k in 0..d {
+        rs.sortbuf.clear();
+        for row in &rs.dev[..t] {
+            rs.sortbuf.push(row[k]);
+        }
+        rs.sortbuf.sort_unstable_by(|a, b| a.total_cmp(b));
+        let m = rs.sortbuf.len();
+        let med = if m == 0 {
+            0.0
+        } else if m % 2 == 1 {
+            rs.sortbuf[m / 2]
+        } else {
+            0.5 * (rs.sortbuf[m / 2 - 1] + rs.sortbuf[m / 2])
+        };
+        rs.acc[k] = wsum * med;
     }
 }
 
@@ -146,7 +247,27 @@ impl SyncAlgorithm for MoniquaSync {
         }
         assert_eq!(w.n(), self.w.n(), "matrix swap changed worker count");
         self.w = w.clone();
+        if matches!(self.mix, MixPolicy::Median) {
+            self.size_median_scratch(); // degrees may have changed
+        }
         true
+    }
+
+    fn set_mix(&mut self, mix: MixPolicy) -> bool {
+        if let MixPolicy::Clipped(tau) = mix {
+            if !(tau > 0.0) {
+                return false;
+            }
+        }
+        self.mix = mix;
+        if matches!(mix, MixPolicy::Median) {
+            self.size_median_scratch();
+        }
+        true
+    }
+
+    fn drain_strikes(&mut self, out: &mut Vec<u16>) {
+        out.append(&mut self.strike_buf);
     }
 
     // Moniqua's headline property — zero extra memory — means the only
@@ -206,26 +327,32 @@ impl SyncAlgorithm for MoniquaSync {
 
         // --- phase 2 (lines 5-6): each receiver recovers its neighbors
         // straight from their wire bytes and accumulates the weighted
-        // differences, in neighbor order (deterministic summation).
+        // differences, in neighbor order (deterministic summation). A §6
+        // digest failure *excludes* that neighbor's term (the defense
+        // layer's verify-then-skip): a θ-escaped decode is garbage, so
+        // integrating it would hand one Byzantine frame a whole round.
         {
             let send = &self.send;
             let w = &self.w;
+            let mix = self.mix;
             let xs_r: &[Vec<f32>] = xs;
             self.pool.for_each_mut(&mut self.recv, |i, rs| {
                 rs.failures = 0;
                 rs.acc.fill(0.0);
+                let mut wsum = 0.0f32;
+                let mut t = 0usize;
                 for (j, wji) in w.in_edges(i) {
                     let wji = wji as f32;
                     codec.recover_packed_into(&send[j].wire, &xs_r[i], &mut rs.recover);
-                    if cfg.verify_hash
-                        && !hash::verify_reconstruction(&codec, &rs.recover, send[j].digest)
-                    {
+                    let ok = !cfg.verify_hash
+                        || hash::verify_reconstruction(&codec, &rs.recover, send[j].digest);
+                    if !ok {
                         rs.failures += 1;
                     }
-                    let xh = &send[i].xhat_self;
-                    for k in 0..d {
-                        rs.acc[k] += wji * (rs.recover[k] - xh[k]);
-                    }
+                    mix_neighbor(mix, rs, &send[i].xhat_self, wji, ok, d, &mut wsum, &mut t);
+                }
+                if let MixPolicy::Median = mix {
+                    median_finalize(rs, wsum, t, d);
                 }
             });
         }
@@ -314,11 +441,14 @@ impl SyncAlgorithm for MoniquaSync {
         let codec = self.codec(lr, ctx);
         let cfg = self.cfg;
         let d = self.d;
+        let mix = self.mix;
         let wire_len = packing::packed_len(d, cfg.bits);
-        let MoniquaSync { w, send, recv, verify_failures, pool, .. } = self;
+        let MoniquaSync { w, send, recv, verify_failures, pool, strike_buf, .. } = self;
         let rs = &mut recv[i];
         rs.failures = 0;
         rs.acc.fill(0.0);
+        let mut wsum = 0.0f32;
+        let mut t = 0usize;
         for (j, wji) in w.in_edges(i) {
             let payload = inbox.payload(j);
             let (wire, digest) = if cfg.verify_hash {
@@ -329,13 +459,18 @@ impl SyncAlgorithm for MoniquaSync {
             };
             let wji = wji as f32;
             pool.recover_packed(&codec, wire, x, &mut rs.recover);
-            if cfg.verify_hash && !hash::verify_reconstruction(&codec, &rs.recover, digest) {
+            let ok =
+                !cfg.verify_hash || hash::verify_reconstruction(&codec, &rs.recover, digest);
+            if !ok {
+                // Verify-then-skip (the term is excluded by mix_neighbor),
+                // and feed the sender to the machine's strike accounting.
                 rs.failures += 1;
+                strike_buf.push(j as u16);
             }
-            let xh = &send[i].xhat_self;
-            for k in 0..d {
-                rs.acc[k] += wji * (rs.recover[k] - xh[k]);
-            }
+            mix_neighbor(mix, rs, &send[i].xhat_self, wji, ok, d, &mut wsum, &mut t);
+        }
+        if let MixPolicy::Median = mix {
+            median_finalize(rs, wsum, t, d);
         }
         *verify_failures += rs.failures;
         for k in 0..d {

@@ -9,7 +9,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use crate::algorithms::{Algorithm, ThetaPolicy};
+use crate::adversary::{ByzMode, ByzantineConfig};
+use crate::algorithms::{Algorithm, MixPolicy, ThetaPolicy};
 use crate::coordinator::cluster::{ClusterConfig, DriverKind, TransportKind};
 use crate::coordinator::des::FaultConfig;
 use crate::elastic::{ElasticConfig, MembershipPlan};
@@ -217,16 +218,60 @@ impl Config {
         }
     }
 
+    /// Byzantine fault plane from `byz_workers=i,j,…` (comma list of
+    /// adversarial worker ids), `byz_mode=flip|replay|equivocate|wrap`
+    /// (default flip), and `quarantine_strikes=K` (gate rejections an
+    /// honest node tolerates before excising the offender; ≥ 1, default
+    /// 3). `None` when `byz_workers` is absent; `byz_mode` or
+    /// `quarantine_strikes` without it is a loud error, mirroring the
+    /// `drop_prob` range checks.
+    pub fn byz(&self) -> Result<Option<ByzantineConfig>> {
+        let Some(spec) = self.get("byz_workers") else {
+            anyhow::ensure!(
+                self.get("byz_mode").is_none() && self.get("quarantine_strikes").is_none(),
+                "byz_mode/quarantine_strikes need byz_workers to name the adversaries"
+            );
+            return Ok(None);
+        };
+        let b = ByzantineConfig {
+            workers: ByzantineConfig::parse_workers(spec)?,
+            mode: ByzMode::parse(self.str_or("byz_mode", "flip"))?,
+            strike_limit: self.u64_or("quarantine_strikes", 3)? as u32,
+        };
+        b.validate(self.usize_or("workers", 8)?)?;
+        Ok(Some(b))
+    }
+
+    /// Gossip mix policy from `mix=mean|clipped|median` plus `mix_clip=τ`
+    /// (clip radius, clipped mode only, must be positive).
+    pub fn mix(&self) -> Result<MixPolicy> {
+        Ok(match self.str_or("mix", "mean") {
+            "mean" => MixPolicy::Mean,
+            "clipped" => {
+                let tau = self.f64_or("mix_clip", 1.0)? as f32;
+                anyhow::ensure!(
+                    tau > 0.0 && tau.is_finite(),
+                    "mix_clip must be a positive clip radius, got {tau}"
+                );
+                MixPolicy::Clipped(tau)
+            }
+            "median" => MixPolicy::Median,
+            other => anyhow::bail!("unknown mix '{other}' (mean|clipped|median)"),
+        })
+    }
+
     /// DES fault model from `drop_prob`, `delay_prob`, `delay_ms`,
-    /// `straggler` (all default 0 — the fault-free regime).
+    /// `straggler` (all default 0 — the fault-free regime), plus the
+    /// Byzantine keys of [`Self::byz`].
     pub fn faults(&self) -> Result<FaultConfig> {
         let f = FaultConfig {
             drop_prob: self.f64_or("drop_prob", 0.0)?,
             delay_prob: self.f64_or("delay_prob", 0.0)?,
             delay_s: self.f64_or("delay_ms", 0.0)? * 1e-3,
             straggler: self.f64_or("straggler", 0.0)?,
+            byz: self.byz()?,
         };
-        f.validate()?;
+        f.validate_for(self.usize_or("workers", 8)?)?;
         Ok(f)
     }
 
@@ -269,7 +314,7 @@ impl Config {
     /// bitwise value-equivalent to the strict schedule), and
     /// `reactor_threads=N` (readiness-loop driver threads; only consulted
     /// when `runtime=reactor`, 0 = one per core), plus the elastic keys
-    /// (see [`Self::elastic`]).
+    /// (see [`Self::elastic`]) and the Byzantine keys (see [`Self::byz`]).
     pub fn cluster(&self) -> Result<ClusterConfig> {
         let transport = match self.str_or("transport", "mem") {
             "mem" => TransportKind::Mem,
@@ -296,6 +341,7 @@ impl Config {
             elastic: self.elastic()?,
             pipeline: self.bool_or("pipeline", true)?,
             driver,
+            byz: self.byz()?,
         })
     }
 
@@ -533,6 +579,55 @@ mod tests {
                 .unwrap();
         assert_eq!(path, "/tmp/m.json");
         assert!(Config::from_str_cfg("metrics=csv").unwrap().metrics().is_err());
+    }
+
+    #[test]
+    fn byzantine_keys_parse_and_validate() {
+        let cfg = Config::from_str_cfg(
+            "workers=4\nbyz_workers=0,2\nbyz_mode=equivocate\nquarantine_strikes=5\n",
+        )
+        .unwrap();
+        let b = cfg.byz().unwrap().unwrap();
+        assert_eq!(b.workers, 0b101);
+        assert_eq!(b.mode, ByzMode::Equivocate);
+        assert_eq!(b.strike_limit, 5);
+        // Defaults: flip mode, 3 strikes; flows into faults() and cluster().
+        let cfg = Config::from_str_cfg("workers=4\nbyz_workers=1\n").unwrap();
+        let b = cfg.byz().unwrap().unwrap();
+        assert_eq!(b.mode, ByzMode::Flip);
+        assert_eq!(b.strike_limit, 3);
+        assert_eq!(cfg.faults().unwrap().byz, Some(b));
+        assert_eq!(cfg.cluster().unwrap().byz, Some(b));
+        // No byz_workers → None, and the satellite keys alone are loud errors.
+        assert!(Config::from_str_cfg("workers=4").unwrap().byz().unwrap().is_none());
+        assert!(Config::from_str_cfg("byz_mode=flip").unwrap().byz().is_err());
+        assert!(Config::from_str_cfg("quarantine_strikes=2").unwrap().byz().is_err());
+        // Out-of-range values: worker id >= n, zero strike budget, all byz.
+        assert!(Config::from_str_cfg("workers=4\nbyz_workers=7").unwrap().byz().is_err());
+        assert!(Config::from_str_cfg("workers=4\nbyz_workers=1\nquarantine_strikes=0")
+            .unwrap()
+            .byz()
+            .is_err());
+        assert!(Config::from_str_cfg("workers=2\nbyz_workers=0,1").unwrap().byz().is_err());
+        assert!(Config::from_str_cfg("workers=4\nbyz_workers=1\nbyz_mode=gaslight")
+            .unwrap()
+            .byz()
+            .is_err());
+    }
+
+    #[test]
+    fn mix_keys_parse_and_validate() {
+        let cfg = Config::from_str_cfg("").unwrap();
+        assert_eq!(cfg.mix().unwrap(), MixPolicy::Mean);
+        let cfg = Config::from_str_cfg("mix=median").unwrap();
+        assert_eq!(cfg.mix().unwrap(), MixPolicy::Median);
+        let cfg = Config::from_str_cfg("mix=clipped\nmix_clip=0.25").unwrap();
+        assert_eq!(cfg.mix().unwrap(), MixPolicy::Clipped(0.25));
+        assert!(Config::from_str_cfg("mix=clipped\nmix_clip=0")
+            .unwrap()
+            .mix()
+            .is_err());
+        assert!(Config::from_str_cfg("mix=trimmed").unwrap().mix().is_err());
     }
 
     #[test]

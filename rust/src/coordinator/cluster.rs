@@ -114,7 +114,8 @@ use super::round::{
 };
 use crate::telemetry::{Clock, Counter, Registry, Telemetry};
 use super::TrainConfig;
-use crate::algorithms::{Algorithm, SyncAlgorithm, ThetaPolicy};
+use crate::adversary::ByzantineConfig;
+use crate::algorithms::{Algorithm, CommScope, MixPolicy, SyncAlgorithm, ThetaPolicy};
 use crate::elastic::membership::{epoch_at, ElasticConfig, Epoch};
 use crate::objectives::Objective;
 use crate::topology::Topology;
@@ -174,6 +175,13 @@ pub struct ClusterConfig {
     pub pipeline: bool,
     /// Which driver advances the round machines (module docs §Structure).
     pub driver: DriverKind,
+    /// Byzantine fault injection: which workers turn adversarial, how they
+    /// misbehave, and how many strikes an honest node tolerates before
+    /// excising the offender from its gossip row (`rust/DESIGN.md`
+    /// §Adversarial-robustness). `None` means no adversaries — the defense
+    /// gate still runs on every frame, it just never fires on honest
+    /// traffic.
+    pub byz: Option<ByzantineConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -184,6 +192,7 @@ impl Default for ClusterConfig {
             elastic: None,
             pipeline: true,
             driver: DriverKind::Threaded,
+            byz: None,
         }
     }
 }
@@ -193,9 +202,16 @@ pub struct ClusterTrainer {
     cfg: TrainConfig,
     cluster: ClusterConfig,
     objective: Box<dyn Objective>,
+    /// The physical topology — kept so quarantine can re-derive the gossip
+    /// row over survivors ([`crate::adversary::excised_matrix`]).
+    topo: Topology,
     /// Membership epochs (exactly one for a non-elastic run).
     epochs: Vec<Epoch>,
     rho: f64,
+    /// Whether data frames carry the machine-level round-bound seal
+    /// (decided once in `new`: `verify_wire`, or `verify_hash` on an engine
+    /// that does not ship its own §6 digest).
+    seal: bool,
     /// Frames actually shipped through the transport in the last `run`
     /// (bootstrap frames included; replayed rounds count their original
     /// send exactly once).
@@ -245,23 +261,6 @@ impl ClusterTrainer {
                      accounting is lockstep-only (set compression=none)"
                 );
             }
-            // Only the Moniqua family actually ships the §6 digest its
-            // byte accounting charges (+8/message); on the baselines the
-            // lockstep model counts bytes that would never cross the wire,
-            // which would break measured = predicted + header·frames.
-            let ships_digest = matches!(
-                cfg.algorithm,
-                Algorithm::Moniqua { .. }
-                    | Algorithm::MoniquaSlack { .. }
-                    | Algorithm::MoniquaD2 { .. }
-            );
-            if q.verify_hash && !ships_digest {
-                bail!(
-                    "runtime=cluster supports verify_hash only for the Moniqua family \
-                     (algorithm '{}' has no digest on its wire format)",
-                    cfg.algorithm.name()
-                );
-            }
         }
         // Membership epochs: one full-cohort epoch without a plan; a
         // validated sequence of reconfigurations with one. The epoch-0
@@ -293,13 +292,66 @@ impl ClusterTrainer {
                 }
             }
         }
+        // Wire-integrity gate. Only the Moniqua family ships the §6
+        // semantic digest its byte accounting charges (+8/message); every
+        // other engine can opt into a machine-level round-bound seal over
+        // the raw wire bytes instead — same +8 B tail, appended after
+        // `node_send` and verified+stripped by the gate before the engine
+        // sees the payload. An engine must price that tail into its byte
+        // model (`set_verify_wire`) or measured = predicted + header·frames
+        // breaks, so engines that cannot are refused up front.
+        let ships_digest = matches!(
+            cfg.algorithm,
+            Algorithm::Moniqua { .. }
+                | Algorithm::MoniquaSlack { .. }
+                | Algorithm::MoniquaD2 { .. }
+        );
+        let verify_hash = quant_config(&cfg.algorithm).is_some_and(|q| q.verify_hash);
+        let seal = cfg.verify_wire || (verify_hash && !ships_digest);
+        if let Some(b) = cluster.byz {
+            b.validate(cfg.workers)
+                .context("invalid byzantine fault configuration")?;
+        }
+        if seal || cfg.mix != MixPolicy::Mean || cluster.byz.is_some() {
+            // Probe one engine so unsupported combinations fail with one
+            // typed error here instead of a mid-run panic in every worker.
+            let mut probe = cfg.algorithm.make_sync(&epochs[0].matrix, objective.dim());
+            if seal && !probe.set_verify_wire(true) {
+                bail!(
+                    "algorithm '{}' cannot price the +8 B machine seal into its byte \
+                     model, so the wire-integrity gate is refused (the Moniqua family \
+                     ships its own §6 digest — request it with verify_hash instead)",
+                    cfg.algorithm.name()
+                );
+            }
+            if !probe.set_mix(cfg.mix) {
+                bail!(
+                    "algorithm '{}' does not support mix={}: robust mixing needs a \
+                     deviation-form gossip accumulate (and clip radii must be positive)",
+                    cfg.algorithm.name(),
+                    cfg.mix.name()
+                );
+            }
+            if cluster.byz.is_some()
+                && matches!(probe.comm_scope(), CommScope::Neighbors)
+                && !probe.swap_matrix(&epochs[0].matrix)
+            {
+                bail!(
+                    "algorithm '{}' cannot re-target its gossip matrix, so quarantine \
+                     cannot excise convicted peers from the averaging row",
+                    cfg.algorithm.name()
+                );
+            }
+        }
         let rho = epochs[0].rho;
         Ok(ClusterTrainer {
             cfg,
             cluster,
             objective,
+            topo,
             epochs,
             rho,
+            seal,
             frames_sent: 0,
             wire_bytes_sent: 0,
             failures: Vec::new(),
@@ -407,6 +459,10 @@ impl ClusterTrainer {
             let elastic_plan = self.cluster.elastic.as_ref().map(|e| &e.plan);
             let abort = &abort;
             let registry = self.metrics.clone();
+            let topo = &self.topo;
+            let byz = self.cluster.byz;
+            let strike_limit = byz.map_or(3, |b| b.strike_limit);
+            let seal = self.seal;
             let make_spec = |i: usize| NodeSpec {
                 cfg: cfg.clone(),
                 recv_timeout,
@@ -423,6 +479,10 @@ impl ClusterTrainer {
                 pipeline,
                 telemetry: Telemetry::new(&registry, i),
                 clock: Clock::monotonic(),
+                topo: topo.clone(),
+                byz: byz.and_then(|b| b.is_byz(i).then_some(b.mode)),
+                strike_limit,
+                seal,
             };
             match self.cluster.driver {
                 DriverKind::Threaded => std::thread::scope(|s| {
@@ -710,6 +770,7 @@ fn run_node(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adversary::ByzMode;
     use crate::algorithms::ThetaPolicy;
     use crate::elastic::MembershipPlan;
     use crate::quant::{Compression, QuantConfig};
@@ -751,8 +812,10 @@ mod tests {
     }
 
     #[test]
-    fn refuses_verify_hash_outside_moniqua_family() {
-        // Baselines charge +8 B/message for a digest they never ship.
+    fn integrity_gate_covers_every_engine_or_refuses_loudly() {
+        // Quantized baselines cannot price the +8 B seal tail: refused,
+        // exactly like the pre-seal refusal of verify_hash outside the
+        // Moniqua family.
         let cfg = base_cfg(Algorithm::Dcd {
             quant: QuantConfig::stochastic(8).with_verify_hash(true),
             range: 4.0,
@@ -764,7 +827,8 @@ mod tests {
             ClusterConfig::default(),
         )
         .is_err());
-        // …while Moniqua (which does ship it) is accepted.
+        // Moniqua ships its own §6 digest inside the payload: accepted,
+        // no machine seal.
         let cfg = base_cfg(Algorithm::Moniqua {
             theta: ThetaPolicy::Constant(2.0),
             quant: QuantConfig::stochastic(8).with_verify_hash(true),
@@ -776,6 +840,68 @@ mod tests {
             ClusterConfig::default(),
         )
         .is_ok());
+        // …but refuses the machine seal on top (it would double-charge the
+        // wire and double-gate every frame).
+        let cfg = TrainConfig {
+            verify_wire: true,
+            ..base_cfg(Algorithm::Moniqua {
+                theta: ThetaPolicy::Constant(2.0),
+                quant: QuantConfig::stochastic(8),
+            })
+        };
+        assert!(ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        )
+        .is_err());
+        // Raw-f32 engines price the seal through verify_wire and the
+        // measured-vs-predicted byte equation still closes with the +8 B
+        // tail on every data frame.
+        let cfg = TrainConfig { verify_wire: true, ..base_cfg(Algorithm::DPsgd) };
+        let mut t = ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig::default(),
+        )
+        .unwrap();
+        let report = t.run().unwrap();
+        assert_eq!(
+            t.wire_bytes_sent,
+            report.total_bytes + t.frames_sent * crate::transport::HEADER_LEN as u64
+        );
+    }
+
+    #[test]
+    fn flip_adversary_is_excised_and_the_run_completes() {
+        // Worker 2 flips a payload byte after sealing: both ring neighbors
+        // reject its frames at the gate, convict it after two strikes, and
+        // re-derive their gossip rows over the survivors. The run finishes
+        // with finite models and the counters narrate the story.
+        let cfg = TrainConfig { verify_wire: true, ..base_cfg(Algorithm::DPsgd) };
+        let mut t = ClusterTrainer::new(
+            cfg,
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig {
+                byz: Some(ByzantineConfig {
+                    workers: 0b100,
+                    mode: ByzMode::Flip,
+                    strike_limit: 2,
+                }),
+                ..ClusterConfig::default()
+            },
+        )
+        .unwrap();
+        let report = t.run().unwrap();
+        assert!(t.failures.is_empty());
+        assert!(report.final_params.iter().all(|v| v.is_finite()));
+        let snap = t.metrics().snapshot();
+        // Two honest neighbors each struck worker 2 twice before convicting.
+        assert!(snap.counter(Counter::DigestRejects) >= 4);
+        assert_eq!(snap.counter(Counter::QuarantinedPeers), 2);
     }
 
     #[test]

@@ -192,6 +192,15 @@ pub struct FaultConfig {
     /// Log-normal straggler severity: each compute time is multiplied by
     /// `exp(straggler · g)`, `g ~ N(0,1)`.
     pub straggler: f64,
+    /// Byzantine senders (synchronous schedule only). The DES models the
+    /// *defended* value path: pre-conviction rounds mix through the
+    /// substitution-equivalent folded matrix (flip/wrap) or run honestly
+    /// (replay/equivocate — the gate strikes the duplicate, the honest
+    /// copy still lands), and from round `strike_limit` the excised
+    /// quarantine matrix takes over. Deliberately **not** bitwise the
+    /// cluster's byzantine run — the fold changes accumulate order — but
+    /// round-for-round aligned with when the cluster gate convicts.
+    pub byz: Option<crate::adversary::ByzantineConfig>,
 }
 
 impl FaultConfig {
@@ -216,6 +225,17 @@ impl FaultConfig {
         );
         anyhow::ensure!(self.delay_s >= 0.0, "delay_s must be >= 0");
         anyhow::ensure!(self.straggler >= 0.0, "straggler must be >= 0");
+        Ok(())
+    }
+
+    /// [`validate`](Self::validate) plus the cohort-size-dependent checks
+    /// of the Byzantine plane (worker ids in range, at least one honest
+    /// worker, a positive strike budget).
+    pub fn validate_for(&self, n: usize) -> anyhow::Result<()> {
+        self.validate()?;
+        if let Some(b) = self.byz {
+            b.validate(n)?;
+        }
         Ok(())
     }
 
@@ -314,6 +334,19 @@ impl DesConfig {
 // Synchronous schedule
 // ---------------------------------------------------------------------------
 
+/// Precomputed matrices of the defended Byzantine value-path model (see
+/// [`FaultConfig::byz`]): the pre-conviction fold, the post-conviction
+/// excision, and the counter-mirroring edge count.
+struct ByzPlan {
+    cfg: crate::adversary::ByzantineConfig,
+    /// Directed honest→byzantine reject edges per round (one strike per
+    /// honest neighbor of each adversary per round) — mirrored into the
+    /// same telemetry counters the cluster gate records.
+    reject_edges: u64,
+    folded: crate::topology::CommMatrix,
+    excised: crate::topology::CommMatrix,
+}
+
 /// Synchronous decentralized trainer on the DES kernel. The value path is
 /// the identical [`SyncAlgorithm::step`] sequence [`super::Trainer`] runs —
 /// only *when* things happen is simulated differently (per-edge links,
@@ -336,6 +369,8 @@ pub struct DesTrainer {
     /// [`VirtualTime`], never the host clock, so a metrics-enabled sim is
     /// still a pure function of its config.
     metrics: Registry,
+    /// Defended Byzantine model, precomputed at construction.
+    byz_plan: Option<ByzPlan>,
 }
 
 impl DesTrainer {
@@ -367,6 +402,22 @@ impl DesTrainer {
         if let Some(t) = cfg.threads {
             engine.set_threads(t);
         }
+        // Mirror the lockstep trainer's wire-seal pricing and mix policy:
+        // the DES bitwise-equivalence contract must hold under every
+        // TrainConfig, the new knobs included.
+        if cfg.verify_wire {
+            assert!(
+                engine.set_verify_wire(true),
+                "algorithm '{}' cannot price the wire seal",
+                engine.name()
+            );
+        }
+        assert!(
+            engine.set_mix(cfg.mix),
+            "algorithm '{}' does not support mix={}",
+            engine.name(),
+            cfg.mix.name()
+        );
         // Fail a swap-incapable engine at construction, not after burning
         // the whole pre-swap simulation. Probing with the stage-0 matrix is
         // a no-op for engines that support swaps.
@@ -377,6 +428,36 @@ impl DesTrainer {
                 engine.name()
             );
         }
+        let byz_plan = des.faults.byz.map(|b| {
+            b.validate(cfg.workers).expect("invalid byzantine fault configuration");
+            assert!(
+                des.topo_schedule.is_none(),
+                "byzantine injection and topology schedules cannot be combined"
+            );
+            assert!(
+                matches!(engine.comm_scope(), crate::algorithms::CommScope::Neighbors),
+                "the DES byzantine model covers gossip engines only, not '{}'",
+                engine.name()
+            );
+            assert!(
+                engine.swap_matrix(&w),
+                "algorithm '{}' cannot re-target its gossip matrix, so quarantine \
+                 cannot excise convicted peers",
+                engine.name()
+            );
+            let mask: Vec<bool> = (0..cfg.workers).map(|i| b.is_byz(i)).collect();
+            let reject_edges = topo
+                .adjacency()
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| mask[*i])
+                .map(|(_, nbrs)| nbrs.iter().filter(|&&j| !mask[j]).count() as u64)
+                .sum();
+            let folded = crate::adversary::folded_matrix(&w, &mask);
+            let (excised, _) = crate::adversary::excised_matrix(&topo, &mask)
+                .expect("quarantine cannot re-derive the gossip matrix");
+            ByzPlan { cfg: b, reject_edges, folded, excised }
+        });
         DesTrainer {
             cfg,
             des,
@@ -388,6 +469,7 @@ impl DesTrainer {
             messages_sent: 0,
             messages_dropped: 0,
             metrics: Registry::new(),
+            byz_plan,
         }
     }
 
@@ -450,6 +532,38 @@ impl DesTrainer {
                     adj = topo.adjacency();
                     self.topo = topo;
                     stage = want;
+                }
+            }
+            // --- defended Byzantine model (FaultConfig::byz docs) ---------
+            if let Some(plan) = &self.byz_plan {
+                let convict_at = plan.cfg.strike_limit as u64;
+                if step == 0
+                    && matches!(
+                        plan.cfg.mode,
+                        crate::adversary::ByzMode::Flip | crate::adversary::ByzMode::Wrap
+                    )
+                {
+                    // Every flip/wrap frame fails the gate from round 0:
+                    // honest rows self-substitute (the fold). Replay and
+                    // equivocation leave the honest copy standing, so their
+                    // pre-conviction rounds mix on the original matrix.
+                    assert!(self.engine.swap_matrix(&plan.folded));
+                }
+                if step == convict_at {
+                    assert!(self.engine.swap_matrix(&plan.excised));
+                    telemetry.record(Counter::QuarantinedPeers, plan.reject_edges);
+                }
+                if step < convict_at {
+                    let c = match plan.cfg.mode {
+                        crate::adversary::ByzMode::Flip | crate::adversary::ByzMode::Wrap => {
+                            Counter::DigestRejects
+                        }
+                        crate::adversary::ByzMode::Replay => Counter::ReplayRejects,
+                        crate::adversary::ByzMode::Equivocate => {
+                            Counter::EquivocationRejects
+                        }
+                    };
+                    telemetry.record(c, plan.reject_edges);
                 }
             }
             if self.cfg.decay_at.contains(&step) {
@@ -711,6 +825,11 @@ impl DesAsyncTrainer {
         let n = topo0.n();
         self.out = DesOutputs::default();
         self.faults.validate().expect("invalid fault config");
+        assert!(
+            self.faults.byz.is_none(),
+            "byzantine injection is synchronous-schedule only (the gossip pair \
+             exchange has no frame gate to model)"
+        );
         assert_eq!(self.links.n(), n, "link matrix/worker mismatch");
         if let Some(s) = &self.topo_schedule {
             assert_eq!(s.n(), n, "topology schedule/worker mismatch");
@@ -888,7 +1007,13 @@ mod tests {
 
     #[test]
     fn fault_sampling_is_deterministic_and_validated() {
-        let f = FaultConfig { drop_prob: 0.5, delay_prob: 0.5, delay_s: 1.0, straggler: 0.3 };
+        let f = FaultConfig {
+            drop_prob: 0.5,
+            delay_prob: 0.5,
+            delay_s: 1.0,
+            straggler: 0.3,
+            byz: None,
+        };
         f.validate().unwrap();
         let a = f.sample_attempts(&mut Pcg64::seeded(1));
         assert_eq!(a, f.sample_attempts(&mut Pcg64::seeded(1)));
@@ -1024,6 +1149,102 @@ mod tests {
     }
 
     #[test]
+    fn byzantine_model_convicts_on_schedule_and_still_converges() {
+        use crate::adversary::{ByzMode, ByzantineConfig};
+        let run = |mode: ByzMode| {
+            let faults = FaultConfig {
+                byz: Some(ByzantineConfig { workers: 0b100, mode, strike_limit: 3 }),
+                ..Default::default()
+            };
+            let mut t = DesTrainer::new(
+                train_cfg(Algorithm::DPsgd, 40),
+                Topology::Ring(4),
+                small_objective(4),
+                DesConfig { faults, ..DesConfig::uniform(4, NetworkConfig::fig1b(), 1e-3) },
+            );
+            let r = t.run();
+            let snap = t.metrics().snapshot();
+            (r, snap)
+        };
+        let clean = {
+            let mut t = DesTrainer::new(
+                train_cfg(Algorithm::DPsgd, 40),
+                Topology::Ring(4),
+                small_objective(4),
+                DesConfig::uniform(4, NetworkConfig::fig1b(), 1e-3),
+            );
+            t.run()
+        };
+        for mode in [ByzMode::Flip, ByzMode::Replay, ByzMode::Equivocate, ByzMode::Wrap] {
+            let (r, snap) = run(mode);
+            // Defended: honest rows never average adversarial bytes, so
+            // the run converges to the same ballpark as the clean one.
+            assert!(
+                r.final_loss() < 2.0 * clean.final_loss() + 0.1,
+                "{:?}: {} vs clean {}",
+                mode,
+                r.final_loss(),
+                clean.final_loss()
+            );
+            // Worker 2 has two honest ring neighbors; each strikes once a
+            // round for 3 rounds, then convicts.
+            assert_eq!(snap.counter(Counter::QuarantinedPeers), 2, "{mode:?}");
+            let rejects = snap.counter(Counter::DigestRejects)
+                + snap.counter(Counter::ReplayRejects)
+                + snap.counter(Counter::EquivocationRejects);
+            assert_eq!(rejects, 2 * 3, "{mode:?}");
+        }
+        // Replay leaves the honest copy standing pre-conviction, so its
+        // pre-quarantine trajectory is bitwise the clean run's.
+        let (r_replay, _) = run(ByzMode::Replay);
+        let a = clean.trace.iter().find(|row| row.step == 0).unwrap();
+        let b = r_replay.trace.iter().find(|row| row.step == 0).unwrap();
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+    }
+
+    #[test]
+    fn byzantine_model_rejects_unsupported_configs() {
+        use crate::adversary::{ByzMode, ByzantineConfig};
+        let faults = |workers, strike_limit| FaultConfig {
+            byz: Some(ByzantineConfig { workers, mode: ByzMode::Flip, strike_limit }),
+            ..Default::default()
+        };
+        // validate_for catches ids out of range and zero strike budgets.
+        assert!(faults(0b1, 3).validate_for(4).is_ok());
+        assert!(faults(0b1_0000, 3).validate_for(4).is_err());
+        assert!(faults(0b1, 0).validate_for(4).is_err());
+        assert!(faults(0b1111, 3).validate_for(4).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "synchronous-schedule only")]
+    fn async_schedule_refuses_byzantine_injection() {
+        use crate::adversary::{ByzMode, ByzantineConfig};
+        let mut at = DesAsyncTrainer {
+            topo: Topology::Ring(4),
+            objective: small_objective(4),
+            variant: AsyncVariant::FullPrecision,
+            links: LinkMatrix::uniform(4, NetworkConfig::fig2b()),
+            faults: FaultConfig {
+                byz: Some(ByzantineConfig {
+                    workers: 0b1,
+                    mode: ByzMode::Flip,
+                    strike_limit: 3,
+                }),
+                ..Default::default()
+            },
+            topo_schedule: None,
+            grad_time_s: 1e-3,
+            lr: 0.2,
+            events: 10,
+            eval_every: 5,
+            seed: 5,
+            out: Default::default(),
+        };
+        at.run();
+    }
+
+    #[test]
     fn faults_only_slow_the_synchronous_schedule_down() {
         let run = |faults: FaultConfig| {
             let mut t = DesTrainer::new(
@@ -1044,6 +1265,7 @@ mod tests {
             delay_prob: 0.2,
             delay_s: 5e-3,
             straggler: 0.5,
+            byz: None,
         });
         assert!(t_faulty > t_clean, "{t_faulty} !> {t_clean}");
         assert_eq!(l_clean.to_bits(), l_faulty.to_bits(), "sync faults must not touch values");

@@ -157,6 +157,17 @@ pub struct TrainConfig {
     /// engine determinism contract makes this a pure performance knob:
     /// results are bitwise identical at every width.
     pub threads: Option<usize>,
+    /// Machine-level wire-integrity seal for engines without a §6 digest:
+    /// the round machine appends an 8-byte round-bound FNV tail to every
+    /// data frame and the receiver's gate verifies+strips it. Engines only
+    /// price the +8 B/message (`set_verify_wire`); payload bytes are
+    /// untouched, so the trajectory is bitwise the unsealed run.
+    pub verify_wire: bool,
+    /// Gossip mix policy (`mean` = the paper's weighted average; `clipped`
+    /// / `median` are the outlier-robust variants of
+    /// `rust/DESIGN.md` §Adversarial-robustness). `Mean` is bitwise the
+    /// pre-robustness accumulate on every engine.
+    pub mix: crate::algorithms::MixPolicy,
 }
 
 impl Default for TrainConfig {
@@ -173,6 +184,8 @@ impl Default for TrainConfig {
             eval_every: 20,
             seed: 42,
             threads: None,
+            verify_wire: false,
+            mix: crate::algorithms::MixPolicy::Mean,
         }
     }
 }
@@ -205,6 +218,23 @@ impl Trainer {
         if let Some(t) = cfg.threads {
             engine.set_threads(t);
         }
+        // The lockstep run has no wire, but it must price the cluster's +8 B
+        // seal tail and mix with the same policy or the bitwise-equivalence
+        // contract (tests/cluster_equivalence.rs) breaks.
+        if cfg.verify_wire {
+            assert!(
+                engine.set_verify_wire(true),
+                "algorithm '{}' cannot price the wire seal (the Moniqua family \
+                 ships its own §6 digest — request it with verify_hash instead)",
+                cfg.algorithm.name()
+            );
+        }
+        assert!(
+            engine.set_mix(cfg.mix),
+            "algorithm '{}' does not support mix={}",
+            cfg.algorithm.name(),
+            cfg.mix.name()
+        );
         let adj = topo.adjacency();
         let deg_max = adj.iter().map(|a| a.len()).max().unwrap_or(0);
         let deg_sum = adj.iter().map(|a| a.len()).sum();

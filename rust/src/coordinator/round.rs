@@ -35,7 +35,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::TrainConfig;
-use crate::algorithms::{CommScope, Inbox, SendPhase, StepCtx, SyncAlgorithm};
+use crate::adversary::{self, ByzMode};
+use crate::algorithms::{CommScope, Inbox, MixPolicy, SendPhase, StepCtx, SyncAlgorithm};
 use crate::elastic::membership::{epoch_at, epoch_index, Epoch};
 use crate::elastic::snapshot::{
     load_checkpoint, write_checkpoint, FrameLog, NodeTrace, Snapshot,
@@ -241,6 +242,20 @@ pub(crate) struct NodeSpec<'a> {
     /// Time source for duration histograms: monotonic under the cluster
     /// drivers, [`Clock::Disabled`] when telemetry is off.
     pub(crate) clock: Clock,
+    /// The base topology — what [`adversary::excised_matrix`] re-derives
+    /// the gossip row over when a peer is quarantined.
+    pub(crate) topo: crate::topology::Topology,
+    /// `Some(mode)` makes THIS worker Byzantine: its send half emits the
+    /// mode's corrupted/extra traffic instead of (or on top of) the honest
+    /// broadcast. Fault injection only — the defense below never reads it.
+    pub(crate) byz: Option<ByzMode>,
+    /// Strikes a sender may accumulate before this observer excises it.
+    /// 0 disables quarantine (strikes are still counted).
+    pub(crate) strike_limit: u32,
+    /// Append/verify the machine-level round-bound seal on Data payloads.
+    /// On for raw-f32 engines under `verify_hash`/`verify_wire`; off for
+    /// the Moniqua family, whose §6 digest already covers the wire.
+    pub(crate) seal: bool,
 }
 
 /// This worker's peer set during an epoch.
@@ -298,10 +313,19 @@ fn take_parked(parked: &mut Vec<Frame>, round: u64, sender: usize) -> Option<Fra
         .map(|at| parked.swap_remove(at))
 }
 
-/// The `(round, sender)` pairs a barrier is still waiting on.
-fn missing_pairs(round: u64, peers: &[usize], got: &[Frame]) -> Vec<(u64, usize)> {
+/// The `(round, sender)` pairs a barrier is still waiting on. A peer whose
+/// round frame was *rejected* by the defense gate (its entry in
+/// `rejected_round` stamps this round) is not missing: the gate satisfied
+/// the barrier for it and the mix substitutes the local model.
+fn missing_pairs(
+    round: u64,
+    peers: &[usize],
+    got: &[Frame],
+    rejected_round: &[u64],
+) -> Vec<(u64, usize)> {
     peers
         .iter()
+        .filter(|&&p| rejected_round.get(p).copied() != Some(round))
         .filter(|&&p| !got.iter().any(|f| f.sender as usize == p))
         .map(|&p| (round, p))
         .collect()
@@ -313,13 +337,15 @@ fn missing_pairs(round: u64, peers: &[usize], got: &[Frame]) -> Vec<(u64, usize)
 /// reconfiguration barrier). Applied on the live recv path, on frames
 /// parked during a bootstrap wait, and on crash-replay frames from the
 /// log — a corrupt or misrouted frame must die loudly, never be averaged.
-fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>) {
+fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>, extra_peers: &[usize]) {
     let from = f.sender as usize;
     assert_eq!(f.algo, spec.algo_id, "worker {i}: cross-algorithm frame from {from}");
     assert_eq!(f.bits, spec.wire_bits, "worker {i}: bit-budget mismatch from {from}");
     let f_ep = epoch_at(spec.epochs, f.round);
+    // `extra_peers` is the machine's *current* recv set: after a quarantine
+    // rewire it contains bridge peers the epoch adjacency never listed.
     let is_peer = match spec.scope {
-        CommScope::Neighbors => f_ep.adj[i].contains(&from),
+        CommScope::Neighbors => f_ep.adj[i].contains(&from) || extra_peers.contains(&from),
         CommScope::All => f_ep.active[from] && from != i,
     };
     assert!(
@@ -411,8 +437,32 @@ pub(crate) struct RoundStateMachine<'a> {
     /// are recycled into the transport's pool after the recv half).
     got: Vec<Frame>,
     /// Peer list of the current epoch (recomputed only at epoch
-    /// boundaries, not per round).
+    /// boundaries, not per round), shrunk further by quarantine rewires.
     peers: Vec<usize>,
+    /// Who this worker broadcasts to. Starts equal to `peers`; a
+    /// quarantine rewire *adds* bridge peers but never removes the
+    /// convicted one — excision is one-way (we stop averaging a convicted
+    /// peer but keep serving it frames), so a conviction can never wedge
+    /// the convicted node's barrier.
+    send_peers: Vec<usize>,
+    /// Per-sender strike count across every reject class (seal, replay,
+    /// equivocation, engine §6 digest). Reaching `spec.strike_limit`
+    /// convicts. Not checkpointed: a crash resets the local ledger, and
+    /// the offender simply re-earns its strikes.
+    strikes: Vec<u32>,
+    /// Round stamp of each sender's most recent seal-rejected frame: a
+    /// reject *satisfies* that round's barrier slot (the mix substitutes
+    /// the local model), so one bad frame costs one strike, not a timeout.
+    rejected_round: Vec<u64>,
+    quarantined: Vec<bool>,
+    /// Senders substituted in this round's inbox (rejected, frame absent).
+    subst: Vec<usize>,
+    /// Drain buffer for the engine's §6 digest strikes.
+    strike_scratch: Vec<u16>,
+    /// Replay mode: the previous round's own frame, kept for re-broadcast.
+    byz_prev: Option<Frame>,
+    /// Wrap mode: exact model bytes to restore after the perturbed encode.
+    byz_save: Vec<f32>,
     trace: NodeTrace,
     lr: f32,
     g_inf: f64,
@@ -463,7 +513,8 @@ impl<'a> RoundStateMachine<'a> {
         let lr = lr_at(&spec.cfg, start_round);
         let mut arena = crate::mem::ScratchArena::new();
         let payload = arena.take_bytes();
-        RoundStateMachine {
+        let n = spec.cfg.workers;
+        let mut machine = RoundStateMachine {
             i,
             d,
             seed,
@@ -480,6 +531,14 @@ impl<'a> RoundStateMachine<'a> {
             boot_pending: BTreeMap::new(),
             got: Vec::new(),
             peers: Vec::new(),
+            send_peers: Vec::new(),
+            strikes: vec![0; n],
+            rejected_round: vec![u64::MAX; n],
+            quarantined: vec![false; n],
+            subst: Vec::with_capacity(n),
+            strike_scratch: Vec::with_capacity(n),
+            byz_prev: None,
+            byz_save: Vec::new(),
             trace,
             lr,
             g_inf: 0.0,
@@ -490,6 +549,30 @@ impl<'a> RoundStateMachine<'a> {
             round: start_round,
             start_round,
             pending: None,
+        };
+        machine.apply_engine_config();
+        machine
+    }
+
+    /// Engine knobs that are configuration, not state: applied at
+    /// construction and re-applied after the crash-replay engine rebuild
+    /// (they are not part of the snapshot). Support is validated by the
+    /// driver before any machine exists, so a refusal here is a bug.
+    fn apply_engine_config(&mut self) {
+        if self.spec.seal {
+            assert!(
+                self.engine.set_verify_wire(true),
+                "engine '{}' refused verify_wire (validated at construction)",
+                self.engine.name()
+            );
+        }
+        if self.spec.cfg.mix != MixPolicy::Mean {
+            assert!(
+                self.engine.set_mix(self.spec.cfg.mix),
+                "engine '{}' refused mix={} (validated at construction)",
+                self.engine.name(),
+                self.spec.cfg.mix.name()
+            );
         }
     }
 
@@ -522,6 +605,79 @@ impl<'a> RoundStateMachine<'a> {
 
     fn failure(&self, reason: String) -> WorkerFailure {
         WorkerFailure::new(self.i, self.round, reason)
+    }
+
+    /// The round barrier holds when every peer slot is satisfied — by a
+    /// held frame or by this round's gate rejection of that sender. The
+    /// honest fast path is the same length check as ever.
+    // lint: hot-path
+    fn barrier_complete(&self) -> bool {
+        if self.got.len() == self.peers.len() {
+            return true;
+        }
+        self.peers.iter().all(|&p| {
+            self.rejected_round[p] == self.round
+                || self.got.iter().any(|f| f.sender as usize == p)
+        })
+    }
+
+    // lint: hot-path
+    fn note_strike(&mut self, from: usize) {
+        if from < self.strikes.len() {
+            self.strikes[from] += 1;
+        }
+    }
+
+    /// Excise every convicted peer from this observer's gossip row:
+    /// re-derive the communication matrix over the survivors (reusing the
+    /// elastic-membership machinery), swap it into the engine, and adopt
+    /// the new adjacency row as the recv set. The send set only *grows*
+    /// (bridge peers) — convicted peers are still served frames so a
+    /// conviction never wedges anyone's barrier, at the cost of wasted
+    /// egress.
+    // lint: cold
+    fn apply_quarantine(&mut self) -> Result<(), WorkerFailure> {
+        if self.spec.epochs.len() > 1 {
+            return Err(self.failure(
+                "quarantine cannot re-derive the gossip row under an \
+                 elastic membership plan"
+                    .into(),
+            ));
+        }
+        match self.spec.scope {
+            CommScope::All => {
+                self.peers.retain(|&p| !self.quarantined[p]);
+                if self.peers.is_empty() {
+                    return Err(self.failure(
+                        "quarantine leaves fewer than 2 workers; quorum lost".into(),
+                    ));
+                }
+            }
+            CommScope::Neighbors => {
+                let (matrix, adj) =
+                    adversary::excised_matrix(&self.spec.topo, &self.quarantined)
+                        .map_err(|e| {
+                            self.failure(format!("quarantine rewire failed: {e:#}"))
+                        })?;
+                if !self.engine.swap_matrix(&matrix) {
+                    return Err(self.failure(format!(
+                        "engine '{}' cannot swap matrices; quarantine requires a \
+                         swap-capable engine",
+                        self.engine.name()
+                    )));
+                }
+                let new_peers = &adj[self.i];
+                for &p in new_peers {
+                    if !self.send_peers.contains(&p) {
+                        self.send_peers.push(p);
+                    }
+                }
+                self.send_peers.sort_unstable();
+                self.peers.clear();
+                self.peers.extend_from_slice(new_peers);
+            }
+        }
+        Ok(())
     }
 
     /// Advance until the machine either completes every round or blocks
@@ -586,7 +742,15 @@ impl<'a> RoundStateMachine<'a> {
                         // compute it once here instead of cloning the
                         // adjacency row every round.
                         self.peers = peers_of(ep, self.i, self.spec.scope);
+                        self.send_peers.clear();
+                        self.send_peers.extend_from_slice(&self.peers);
                         self.cur_epoch = ep_idx;
+                        // A rewire resets the gossip row to the epoch's;
+                        // standing convictions must be re-excised (the
+                        // post-crash re-entry lands here too).
+                        if self.quarantined.iter().any(|&q| q) {
+                            self.apply_quarantine()?;
+                        }
                     }
                     self.join_ix = 0;
                     self.phase = Phase::AwaitBootstrap;
@@ -601,12 +765,12 @@ impl<'a> RoundStateMachine<'a> {
                     self.phase = Phase::AwaitBarrier;
                 }
                 Phase::AwaitBarrier => {
-                    if self.got.len() < self.peers.len() {
+                    if !self.barrier_complete() {
                         return Ok(MachineStatus::Waiting(WaitKey::Barrier {
                             round: self.round,
                         }));
                     }
-                    self.finish_round(transport);
+                    self.finish_round(transport)?;
                     self.round += 1;
                     self.phase = Phase::RoundEntry;
                 }
@@ -754,7 +918,8 @@ impl<'a> RoundStateMachine<'a> {
             }
         }
         if self.round < self.live_from && self.got.len() < self.peers.len() {
-            let missing = missing_pairs(self.round, &self.peers, &self.got);
+            let missing =
+                missing_pairs(self.round, &self.peers, &self.got, &self.rejected_round);
             panic!(
                 "worker {}: replay log is missing frames {missing:?} for round {} \
                  (log truncated outside a checkpoint?)",
@@ -781,8 +946,34 @@ impl<'a> RoundStateMachine<'a> {
         payload.clear();
         let ctx = StepCtx { seed: self.seed, rho: self.cur_ep().rho, g_inf: self.g_inf };
         let grad: &[f32] = if pre { &[] } else { &self.grad };
+        let byz_live = self.round >= self.live_from && self.spec.byz.is_some();
+        // Wrap attack: encode from a model kicked far outside the θ ball,
+        // then restore the exact bytes. The frame is wire-valid; only the
+        // §6 semantic digest can tell the decode went wrong.
+        let wrap = byz_live && self.spec.byz == Some(ByzMode::Wrap);
+        if wrap {
+            self.byz_save.clear();
+            self.byz_save.extend_from_slice(&self.x);
+            for v in self.x.iter_mut() {
+                *v += adversary::WRAP_KICK;
+            }
+        }
         self.engine
             .node_send(self.i, &self.x, grad, self.lr, self.round, &ctx, &mut payload);
+        if wrap {
+            self.x.copy_from_slice(&self.byz_save);
+        }
+        if self.spec.seal {
+            adversary::seal_payload(self.round, &mut payload);
+        }
+        // Flip attack: corrupt one body byte *after* sealing — the frame
+        // checksum is recomputed over the corrupt bytes (so the transport
+        // accepts it) but the seal/digest no longer matches.
+        if byz_live && self.spec.byz == Some(ByzMode::Flip) {
+            if let Some(b) = payload.first_mut() {
+                *b ^= 0xFF;
+            }
+        }
         let frame = Frame {
             round: self.round,
             sender: self.i as u16,
@@ -800,21 +991,99 @@ impl<'a> RoundStateMachine<'a> {
         if self.round >= self.live_from {
             // One broadcast call: the frame is serialized + checksummed
             // once and the wire bytes are reused for every peer.
-            transport.broadcast(&self.peers, &frame).map_err(|e| {
+            transport.broadcast(&self.send_peers, &frame).map_err(|e| {
                 self.failure(format!("broadcast failed: {e}"))
             })?;
         }
         // Replayed rounds count their original (pre-crash) send exactly
         // once: the counters that recorded it died with the old
         // incarnation.
-        self.trace.frames_sent += self.peers.len() as u64;
-        self.trace.bytes_sent += self.peers.len() as u64 * frame.encoded_len() as u64;
+        self.trace.frames_sent += self.send_peers.len() as u64;
+        self.trace.bytes_sent +=
+            self.send_peers.len() as u64 * frame.encoded_len() as u64;
+        if byz_live {
+            self.byz_followup(transport, &frame)?;
+        }
         Ok((frame, send_compute))
     }
 
+    /// The replay/equivocate modes' *extra* traffic, sent after the honest
+    /// broadcast. Fault injection only: nothing here runs unless this
+    /// worker was designated Byzantine.
+    // lint: cold
+    fn byz_followup(
+        &mut self,
+        transport: &mut dyn Transport,
+        frame: &Frame,
+    ) -> Result<(), WorkerFailure> {
+        match self.spec.byz {
+            None | Some(ByzMode::Flip) | Some(ByzMode::Wrap) => {}
+            Some(ByzMode::Replay) => {
+                if let Some(stale) = self.byz_prev.take() {
+                    // The stale copy still carries its original round stamp
+                    // and a seal valid *for that round* — only the round
+                    // gate can strike it.
+                    transport.broadcast(&self.send_peers, &stale).map_err(|e| {
+                        self.failure(format!("broadcast failed: {e}"))
+                    })?;
+                    self.trace.frames_sent += self.send_peers.len() as u64;
+                    self.trace.bytes_sent +=
+                        self.send_peers.len() as u64 * stale.encoded_len() as u64;
+                }
+                self.byz_prev = Some(Frame {
+                    round: frame.round,
+                    sender: frame.sender,
+                    algo: frame.algo,
+                    bits: frame.bits,
+                    kind: FrameKind::Data,
+                    theta: frame.theta,
+                    payload: frame.payload.clone(),
+                });
+            }
+            Some(ByzMode::Equivocate) => {
+                let body_len = if self.spec.seal {
+                    frame.payload.len() - adversary::SEAL_LEN
+                } else {
+                    frame.payload.len()
+                };
+                if body_len == 0 {
+                    return Ok(());
+                }
+                let mut eq = Frame {
+                    round: frame.round,
+                    sender: frame.sender,
+                    algo: frame.algo,
+                    bits: frame.bits,
+                    kind: FrameKind::Data,
+                    theta: frame.theta,
+                    payload: Vec::new(),
+                };
+                for k in 0..self.send_peers.len() {
+                    let p = self.send_peers[k];
+                    // Per-peer divergent second copy, re-sealed valid: the
+                    // seal gate passes it; only the duplicate screen can
+                    // see the two copies disagree.
+                    eq.payload.clear();
+                    eq.payload.extend_from_slice(&frame.payload[..body_len]);
+                    eq.payload[p % body_len] ^= 0x55;
+                    if self.spec.seal {
+                        adversary::seal_payload(self.round, &mut eq.payload);
+                    }
+                    transport.send(p, &eq).map_err(|e| {
+                        self.failure(format!("send failed: {e}"))
+                    })?;
+                    self.trace.frames_sent += 1;
+                    self.trace.bytes_sent += eq.encoded_len() as u64;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// The recv half + checkpoint: runs once the barrier holds a round
-    /// frame from every peer.
-    fn finish_round(&mut self, transport: &mut dyn Transport) {
+    /// frame (or a gate rejection) from every peer. Fails typed on a
+    /// quarantine conviction that loses quorum or cannot rewire.
+    fn finish_round(&mut self, transport: &mut dyn Transport) -> Result<(), WorkerFailure> {
         // lint: allow(wall_clock) — the mix timer feeds per-node perf
         // accounting only; model bytes are unaffected.
         let PendingRound { loss, grad_wall, frame, send_compute } = self
@@ -826,10 +1095,30 @@ impl<'a> RoundStateMachine<'a> {
         // sort_unstable is in-place, and the borrowed inbox makes this the
         // allocation-free path (Inbox::from_frames).
         self.got.sort_unstable_by_key(|f| f.sender);
+        // Senders the gate rejected this round contribute the local model
+        // instead — the neutral element of every accumulate loop.
+        self.subst.clear();
+        for k in 0..self.peers.len() {
+            let p = self.peers[k];
+            if self.rejected_round[p] == self.round
+                && !self.got.iter().any(|g| g.sender as usize == p)
+            {
+                self.subst.push(p);
+            }
+        }
         let ctx = StepCtx { seed: self.seed, rho: self.cur_ep().rho, g_inf: self.g_inf };
         let c0 = self.spec.clock.now_ns();
         let stats = {
-            let inbox = Inbox::from_frames(&self.got);
+            let inbox = if self.subst.is_empty() {
+                Inbox::from_frames(&self.got)
+            } else {
+                let own = if self.spec.seal {
+                    adversary::sealed_body(&frame.payload)
+                } else {
+                    frame.payload.as_slice()
+                };
+                Inbox::from_frames_with_self(&self.got, own, &self.subst)
+            };
             self.engine.node_recv(
                 self.i, &mut self.x, &self.grad, self.lr, self.round, &ctx, &inbox,
             )
@@ -838,6 +1127,19 @@ impl<'a> RoundStateMachine<'a> {
             .telemetry
             .observe(Hist::DecodeNs, self.spec.clock.now_ns().saturating_sub(c0));
         self.spec.telemetry.record(Counter::RoundsTotal, 1);
+        // The Moniqua family's §6 digest failures surface as engine
+        // strikes: drain them into the same ledger the seal gate feeds.
+        self.strike_scratch.clear();
+        self.engine.drain_strikes(&mut self.strike_scratch);
+        if !self.strike_scratch.is_empty() {
+            self.spec
+                .telemetry
+                .record(Counter::DigestRejects, self.strike_scratch.len() as u64);
+            for k in 0..self.strike_scratch.len() {
+                let p = self.strike_scratch[k] as usize;
+                self.note_strike(p);
+            }
+        }
         // Consumed payload buffers go back to the transport's wire pool.
         for f in self.got.drain(..) {
             transport.recycle(f.payload);
@@ -856,6 +1158,22 @@ impl<'a> RoundStateMachine<'a> {
             self.trace.evals.push((self.round, self.x.clone()));
         }
         self.payload = frame.payload; // reuse the allocation next round
+
+        // Quarantine conviction: any sender over the strike budget is
+        // excised from the gossip row before the next round's send half.
+        if self.spec.strike_limit > 0 {
+            let mut convicted = false;
+            for p in 0..self.strikes.len() {
+                if !self.quarantined[p] && self.strikes[p] >= self.spec.strike_limit {
+                    self.quarantined[p] = true;
+                    self.spec.telemetry.record(Counter::QuarantinedPeers, 1);
+                    convicted = true;
+                }
+            }
+            if convicted {
+                self.apply_quarantine()?;
+            }
+        }
 
         // Checkpoint at the round boundary.
         if self.round >= self.live_from
@@ -899,6 +1217,7 @@ impl<'a> RoundStateMachine<'a> {
                 );
             }
         }
+        Ok(())
     }
 
     /// Scheduled crash: lose everything, restore the last [`Snapshot`],
@@ -919,7 +1238,10 @@ impl<'a> RoundStateMachine<'a> {
             self.spec.telemetry.record(Counter::WalReplays, 1);
             match f.kind {
                 FrameKind::Data => {
-                    validate_data_frame(self.i, &f, &self.spec);
+                    // Replayed frames were gated (and seal-stripped)
+                    // before they reached the WAL; only the sanity checks
+                    // re-run here.
+                    validate_data_frame(self.i, &f, &self.spec, &self.peers);
                     self.parked.push(f);
                 }
                 FrameKind::Bootstrap => {
@@ -933,6 +1255,7 @@ impl<'a> RoundStateMachine<'a> {
             .algorithm
             .make_sync(&self.spec.epochs[0].matrix, self.d);
         self.engine.set_threads(1);
+        self.apply_engine_config();
         match snap {
             Some(s) => {
                 assert_eq!(
@@ -975,11 +1298,25 @@ impl<'a> RoundStateMachine<'a> {
         self.cur_epoch = usize::MAX; // force re-wiring on re-entry
     }
 
-    /// Hand the machine one inbound frame. Where it lands depends on what
-    /// the machine is waiting for — the same routing the old inline recv
-    /// loops performed — and every frame is WAL-logged first when this
-    /// worker keeps a frame log.
+    /// Hand the machine one inbound frame. Data frames pass the defense
+    /// gate *before* the WAL (only admitted, seal-stripped frames are
+    /// logged — crash replay must not re-average rejected traffic); where
+    /// an admitted frame lands depends on what the machine is waiting for,
+    /// the same routing the old inline recv loops performed.
     pub(crate) fn accept_frame(&mut self, f: Frame) {
+        if self.phase == Phase::Finished {
+            // Late traffic after this worker retired: the run is over for
+            // it, so the frame is simply dropped.
+            drop(f);
+            return;
+        }
+        let f = match f.kind {
+            FrameKind::Bootstrap => f,
+            FrameKind::Data => match self.gate_data_frame(f) {
+                Some(f) => f,
+                None => return,
+            },
+        };
         if let Some(log) = self.framelog.as_mut() {
             log.append(&f).expect("frame log append");
             self.spec.telemetry.record(Counter::WalAppends, 1);
@@ -993,15 +1330,6 @@ impl<'a> RoundStateMachine<'a> {
                     self.boot_pending.insert(f.round, f);
                     return;
                 }
-                validate_data_frame(self.i, &f, &self.spec);
-                let from = f.sender as usize;
-                assert!(
-                    f.round >= self.round,
-                    "worker {}: stale round-{} frame from {from} at round {}",
-                    self.i,
-                    f.round,
-                    self.round
-                );
                 if f.round == self.round {
                     self.got.push(f);
                 } else {
@@ -1013,23 +1341,72 @@ impl<'a> RoundStateMachine<'a> {
                     self.boot_pending.insert(f.round, f);
                 }
                 FrameKind::Data => {
-                    validate_data_frame(self.i, &f, &self.spec);
-                    let from = f.sender as usize;
-                    assert!(
-                        f.round >= self.round,
-                        "worker {}: pre-join round-{} frame from {from}",
-                        self.i,
-                        f.round
-                    );
                     self.parked.push(f);
                 }
             },
-            Phase::Finished => {
-                // Late traffic after this worker retired: the run is over
-                // for it, so the frame is simply dropped.
-                drop(f);
-            }
+            Phase::Finished => unreachable!("handled above"),
         }
+    }
+
+    /// The defense gate every live inbound Data frame passes before it can
+    /// reach the WAL or an engine: quarantine screen, round-bound seal
+    /// verification (stripped on success), staleness, and duplicate
+    /// screening. `None` means rejected — the typed telemetry counter
+    /// records why and the sender is struck; the payload is dropped.
+    // lint: hot-path
+    fn gate_data_frame(&mut self, mut f: Frame) -> Option<Frame> {
+        let from = f.sender as usize;
+        // Convicted-sender traffic is dropped wholesale.
+        if from < self.quarantined.len() && self.quarantined[from] {
+            self.spec.telemetry.record(Counter::ReplayRejects, 1);
+            return None;
+        }
+        validate_data_frame(self.i, &f, &self.spec, &self.peers);
+        if self.spec.seal {
+            if !adversary::seal_ok(f.round, &f.payload) {
+                // Checksum-valid but seal-wrong: corruption past the
+                // transport layer. Satisfy this round's barrier slot for
+                // the sender (the mix substitutes the local model) so one
+                // bad frame costs a strike, not a barrier timeout.
+                self.spec.telemetry.record(Counter::DigestRejects, 1);
+                self.note_strike(from);
+                if from < self.rejected_round.len() {
+                    self.rejected_round[from] = f.round;
+                }
+                return None;
+            }
+            let keep = f.payload.len() - adversary::SEAL_LEN;
+            f.payload.truncate(keep);
+        }
+        if f.round < self.round {
+            // Stale (round, sender) re-broadcast: that barrier already
+            // closed — classic replay. (Its seal, if any, verified above:
+            // the seal binds the *frame's* round, so only this gate can
+            // catch the re-send.)
+            self.spec.telemetry.record(Counter::ReplayRejects, 1);
+            self.note_strike(from);
+            return None;
+        }
+        // Duplicate screen: at most one Data frame per (round, sender) may
+        // be held. A byte-identical second copy is a replay; a divergent
+        // one is equivocation.
+        let held = if f.round == self.round && self.phase == Phase::AwaitBarrier {
+            self.got.iter().find(|g| g.sender == f.sender)
+        } else {
+            self.parked
+                .iter()
+                .find(|g| g.round == f.round && g.sender == f.sender)
+        };
+        if let Some(held) = held {
+            if held.payload == f.payload {
+                self.spec.telemetry.record(Counter::ReplayRejects, 1);
+            } else {
+                self.spec.telemetry.record(Counter::EquivocationRejects, 1);
+            }
+            self.note_strike(from);
+            return None;
+        }
+        Some(f)
     }
 
     /// The typed failure for a driver whose deadline for the current
@@ -1043,7 +1420,12 @@ impl<'a> RoundStateMachine<'a> {
                 self.round, self.spec.recv_timeout,
             )),
             _ => {
-                let missing = missing_pairs(self.round, &self.peers, &self.got);
+                let missing = missing_pairs(
+                    self.round,
+                    &self.peers,
+                    &self.got,
+                    &self.rejected_round,
+                );
                 self.failure(format!(
                     "barrier timed out: exceeded the configured \
                      recv_timeout of {:?} with {} of {} peer frames \
@@ -1143,6 +1525,10 @@ mod tests {
                     pipeline: true,
                     telemetry: Telemetry::disabled(),
                     clock: Clock::disabled(),
+                    topo: topo.clone(),
+                    byz: None,
+                    strike_limit: 3,
+                    seal: false,
                 };
                 RoundStateMachine::new(i, engine, objective(), spec)
             })
@@ -1173,6 +1559,96 @@ mod tests {
             assert_eq!(r.worker, i);
             assert_eq!(r.final_x.len(), d);
             assert!(r.trace.loss_at(3).is_some());
+        }
+    }
+
+    /// Three machines, one of them flipping payload bytes under a live
+    /// seal: the two honest workers strike it each round, convict at the
+    /// strike limit, excise it from their gossip row, and still complete
+    /// every round — as does the (now-ignored) adversary, because honest
+    /// nodes keep serving it frames.
+    #[test]
+    fn flip_adversary_is_quarantined_and_the_cohort_completes() {
+        let cfg = TrainConfig {
+            workers: 3,
+            steps: 8,
+            eval_every: 4,
+            algorithm: Algorithm::DPsgd,
+            ..TrainConfig::default()
+        };
+        let topo = Topology::Ring(3);
+        let epochs = MembershipPlan::default().epochs(&topo, cfg.steps).unwrap();
+        let objective =
+            || Box::new(crate::objectives::Quadratic::new(6, 1.0, 0.1, 3, 3));
+        let d = objective().dim();
+        let mut transports = MemTransport::cluster(3);
+        let byz_worker = 2usize;
+        let mut machines: Vec<RoundStateMachine<'_>> = (0..3)
+            .map(|i| {
+                let mut engine = cfg.algorithm.make_sync(&epochs[0].matrix, d);
+                engine.set_threads(1);
+                let spec = NodeSpec {
+                    cfg: cfg.clone(),
+                    recv_timeout: Duration::from_secs(5),
+                    algo_id: algo_wire_id(cfg.algorithm.name()),
+                    wire_bits: 32,
+                    scope: engine.comm_scope(),
+                    epochs: &epochs,
+                    crashes: Vec::new(),
+                    ckpt_every: 0,
+                    ckpt_dir: None,
+                    skip_bootstrap: false,
+                    pipeline: true,
+                    telemetry: Telemetry::disabled(),
+                    clock: Clock::disabled(),
+                    topo: topo.clone(),
+                    byz: (i == byz_worker).then_some(ByzMode::Flip),
+                    strike_limit: 2,
+                    seal: true,
+                };
+                RoundStateMachine::new(i, engine, objective(), spec)
+            })
+            .collect();
+
+        let mut done = [false, false, false];
+        let mut spins = 0usize;
+        while !done.iter().all(|&b| b) {
+            spins += 1;
+            assert!(spins < 100_000, "machines wedged");
+            for i in 0..3 {
+                if done[i] {
+                    continue;
+                }
+                let t: &mut dyn Transport = &mut transports[i];
+                match machines[i].drive(t).unwrap() {
+                    MachineStatus::Done => done[i] = true,
+                    MachineStatus::Waiting(_) => {
+                        if let Ok(f) = t.recv(Duration::from_millis(1)) {
+                            machines[i].accept_frame(f);
+                        }
+                    }
+                }
+            }
+        }
+        for i in [0usize, 1] {
+            assert!(
+                machines[i].quarantined[byz_worker],
+                "worker {i} never convicted the adversary"
+            );
+            assert_eq!(machines[i].strikes[byz_worker], 2, "exactly strike_limit strikes");
+            // Post-excision gossip row: the ring(3) minus the adversary is
+            // a 2-ring; each honest worker's recv set is the other one.
+            assert_eq!(machines[i].peers, vec![1 - i]);
+            // ... but the adversary stays in the send set (one-way excision).
+            assert!(machines[i].send_peers.contains(&byz_worker));
+        }
+        assert!(
+            !machines[byz_worker].quarantined.iter().any(|&q| q),
+            "honest traffic must not strike"
+        );
+        for m in machines.into_iter() {
+            let r = m.into_result();
+            assert!(r.trace.loss_at(7).is_some(), "all workers complete all rounds");
         }
     }
 }

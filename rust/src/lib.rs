@@ -73,6 +73,7 @@
 #![allow(clippy::manual_div_ceil)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod adversary;
 pub mod algorithms;
 pub mod bench_support;
 pub mod config;
@@ -93,6 +94,7 @@ pub mod transport;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
+    pub use crate::adversary::{ByzMode, ByzantineConfig};
     pub use crate::algorithms::{Algorithm, RoundPool, ThetaPolicy};
     pub use crate::coordinator::{
         AsyncTrainer, ClusterConfig, ClusterTrainer, DesAsyncTrainer, DesConfig,

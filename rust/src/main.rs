@@ -29,6 +29,19 @@
 //! watchdog, default 30000), `reactor_threads` (reactor only; driver
 //! threads, 0 = one per core).
 //!
+//! Adversarial-robustness keys (see rust/DESIGN.md §Adversarial-robustness):
+//! `byz_workers` (comma list / `a-b` ranges of worker ids that emit
+//! corrupted traffic; absent = no adversaries), `byz_mode`
+//! (flip | replay | equivocate | wrap; default flip), `quarantine_strikes`
+//! (digest strikes before an honest node excises a peer and re-derives its
+//! gossip row over the survivors; default 3), `verify_wire` (raw-f32
+//! engines only: price an 8-byte round-bound seal per message so tampered
+//! bodies are caught even when the frame checksum was restamped — the
+//! Moniqua family refuses it and uses `verify_hash`, its §6 semantic
+//! digest, instead), `mix` (mean | clipped | median; outlier-robust gossip
+//! accumulate — `mean` is the bitwise-identical default), `mix_clip`
+//! (clip radius for `mix=clipped`; default 1.0).
+//!
 //! Elastic membership keys (cluster only — see rust/DESIGN.md §Elasticity):
 //! `churn=kind@round:worker,...` with kind ∈ {join, leave, crash} (e.g.
 //! `churn=crash@12:2,leave@20:1,join@24:1`), `ckpt_every=K` (checkpoint
@@ -72,6 +85,7 @@ fn usage() -> ! {
          moniqua train runtime=cluster transport=tcp workers=4 algorithm=moniqua\n\
          moniqua train runtime=cluster churn=crash@12:2 ckpt_every=5 ckpt_dir=ckpts\n\
          moniqua train runtime=reactor reactor_threads=4 workers=256 transport=mem\n\
+         moniqua train runtime=cluster byz_workers=2 byz_mode=flip verify_wire=true\n\
          moniqua async algorithm=moniqua drop_prob=0.05 topo_schedule=ring,complete@2.0\n\
          moniqua compare algorithms=dpsgd,moniqua,choco network=fig1c"
     );
@@ -171,6 +185,8 @@ fn train_config(cfg: &Config) -> Result<TrainConfig> {
             Some(v) => Some(v.parse::<usize>().context("threads")?),
             None => None,
         },
+        verify_wire: cfg.bool_or("verify_wire", false)?,
+        mix: cfg.mix()?,
     })
 }
 

@@ -102,10 +102,21 @@ pub enum Counter {
     ReactorMachinesDriven,
     /// Quantized codes packed onto the wire (model entries per encode).
     CodesPacked,
+    /// Frames whose payload failed the round-bound seal or the §6 semantic
+    /// digest (checksum-valid, content-wrong — the Byzantine gate).
+    DigestRejects,
+    /// Frames struck as replays: a stale round stamp, a quarantined
+    /// sender, or an identical duplicate of an already-held frame.
+    ReplayRejects,
+    /// Divergent duplicates for one `(round, sender)` — equivocation.
+    EquivocationRejects,
+    /// Peers excised from the gossip matrix after exhausting the strike
+    /// budget (one increment per conviction per observer).
+    QuarantinedPeers,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 19] = [
+    pub const ALL: [Counter; 23] = [
         Counter::FramesSentData,
         Counter::FramesSentBootstrap,
         Counter::FramesRecvData,
@@ -125,6 +136,10 @@ impl Counter {
         Counter::ReactorPolls,
         Counter::ReactorMachinesDriven,
         Counter::CodesPacked,
+        Counter::DigestRejects,
+        Counter::ReplayRejects,
+        Counter::EquivocationRejects,
+        Counter::QuarantinedPeers,
     ];
 
     /// Metric name (Prometheus family name without the `moniqua_` prefix
@@ -150,6 +165,10 @@ impl Counter {
             Counter::ReactorPolls => "reactor_poll_iterations",
             Counter::ReactorMachinesDriven => "reactor_machines_driven",
             Counter::CodesPacked => "quant_codes_packed",
+            Counter::DigestRejects => "round_digest_rejects",
+            Counter::ReplayRejects => "round_replay_rejects",
+            Counter::EquivocationRejects => "round_equivocations",
+            Counter::QuarantinedPeers => "round_quarantined_peers",
         }
     }
 
@@ -174,6 +193,10 @@ impl Counter {
             Counter::ReactorPolls => "Reactor readiness-loop iterations",
             Counter::ReactorMachinesDriven => "Round machines driven by the reactor",
             Counter::CodesPacked => "Quantized codes packed onto the wire",
+            Counter::DigestRejects => "Frames rejected by the digest/seal gate",
+            Counter::ReplayRejects => "Frames struck as replays or quarantined-sender traffic",
+            Counter::EquivocationRejects => "Divergent duplicate frames (equivocation)",
+            Counter::QuarantinedPeers => "Peers excised after exhausting the strike budget",
         }
     }
 }

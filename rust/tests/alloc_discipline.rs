@@ -16,7 +16,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-use moniqua::algorithms::{Algorithm, Inbox, StepCtx, SyncAlgorithm, ThetaPolicy};
+use moniqua::adversary::{seal_ok, seal_payload, SEAL_LEN};
+use moniqua::algorithms::{Algorithm, Inbox, MixPolicy, StepCtx, SyncAlgorithm, ThetaPolicy};
 use moniqua::quant::QuantConfig;
 use moniqua::telemetry::{Counter, Hist, Registry, Telemetry};
 use moniqua::topology::Topology;
@@ -58,7 +59,10 @@ const RECV: Duration = Duration::from_secs(10);
 /// Drive `rounds` synchronous rounds of `algo` through the real node-mode
 /// pipeline over the mem transport (single thread, round-robin over the
 /// workers — the same calls `ClusterTrainer`'s worker threads make, in a
-/// deterministic order the counter can window).
+/// deterministic order the counter can window). With `seal`, every payload
+/// carries (and every receiver verifies + strips) the 8-byte round-bound
+/// seal of the Byzantine defense gate — the same tail `RoundStateMachine`
+/// appends when `verify_wire` is on.
 #[allow(clippy::too_many_arguments)]
 fn run_rounds(
     algo: &Algorithm,
@@ -72,6 +76,7 @@ fn run_rounds(
     ctx: &StepCtx,
     from_round: u64,
     rounds: u64,
+    seal: bool,
 ) {
     let n = engines.len();
     let algo_id = algo_wire_id(algo.name());
@@ -79,6 +84,9 @@ fn run_rounds(
         for i in 0..n {
             payloads[i].clear();
             engines[i].node_send(i, &xs[i], &grads[i], 0.05, round, ctx, &mut payloads[i]);
+            if seal {
+                seal_payload(round, &mut payloads[i]);
+            }
             let frame = Frame {
                 round,
                 sender: i as u16,
@@ -98,6 +106,13 @@ fn run_rounds(
                 got.push(transports[i].recv(RECV).expect("barrier recv"));
             }
             got.sort_unstable_by_key(|f| f.sender);
+            if seal {
+                for f in got.iter_mut() {
+                    assert!(seal_ok(round, &f.payload), "honest frame failed the seal");
+                    let keep = f.payload.len() - SEAL_LEN;
+                    f.payload.truncate(keep);
+                }
+            }
             {
                 let inbox = Inbox::from_frames(got);
                 engines[i].node_recv(i, &mut xs[i], &grads[i], 0.05, round, ctx, &inbox);
@@ -275,13 +290,13 @@ fn check_algo(algo: Algorithm) {
 
     run_rounds(
         &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
-        &peers, &ctx, 0, WARMUP,
+        &peers, &ctx, 0, WARMUP, false,
     );
     let allocs_before = ALLOCS.load(Ordering::SeqCst);
     let deallocs_before = DEALLOCS.load(Ordering::SeqCst);
     run_rounds(
         &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
-        &peers, &ctx, WARMUP, WINDOW,
+        &peers, &ctx, WARMUP, WINDOW, false,
     );
     let allocs = ALLOCS.load(Ordering::SeqCst) - allocs_before;
     let deallocs = DEALLOCS.load(Ordering::SeqCst) - deallocs_before;
@@ -340,14 +355,14 @@ fn check_algo_with_metrics(algo: Algorithm) {
 
     run_rounds(
         &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
-        &peers, &ctx, 0, WARMUP,
+        &peers, &ctx, 0, WARMUP, false,
     );
     let allocs_before = ALLOCS.load(Ordering::SeqCst);
     let deallocs_before = DEALLOCS.load(Ordering::SeqCst);
     for round in WARMUP..WARMUP + WINDOW {
         run_rounds(
             &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
-            &peers, &ctx, round, 1,
+            &peers, &ctx, round, 1, false,
         );
         // The round machine's per-round telemetry calls, verbatim shapes.
         telemetry.record(Counter::RoundsTotal, N as u64);
@@ -413,7 +428,7 @@ fn check_corrupt_frame_round() {
 
     run_rounds(
         &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
-        &peers, &ctx, 0, WARMUP,
+        &peers, &ctx, 0, WARMUP, false,
     );
     let allocs_before = ALLOCS.load(Ordering::SeqCst);
     let deallocs_before = DEALLOCS.load(Ordering::SeqCst);
@@ -468,6 +483,65 @@ fn check_corrupt_frame_round() {
     assert!(xs[1].iter().all(|v| v.is_finite()));
 }
 
+/// Defense plane live in the measured window: the 8-byte round-bound seal
+/// appended to every outbound payload and verified + stripped on every
+/// inbound one, with a robust mix (`clipped`/`median`) accumulating the
+/// neighbors — and the budget is still zero. The seal is an FNV pass over
+/// bytes already in the buffer plus an 8-byte `extend` into warm capacity;
+/// the robust mixes run on scratch sized once by `set_mix`.
+fn check_sealed_robust(algo: Algorithm, mix: MixPolicy) {
+    const N: usize = 4;
+    const D: usize = 256;
+    const WARMUP: u64 = 2;
+    const WINDOW: u64 = 8;
+
+    let topo = Topology::Ring(N);
+    let w = topo.comm_matrix();
+    let rho = w.rho();
+    let peers: Vec<Vec<usize>> = topo.adjacency();
+    let mut engines: Vec<Box<dyn SyncAlgorithm>> =
+        (0..N).map(|_| algo.make_sync(&w, D)).collect();
+    for e in engines.iter_mut() {
+        e.set_threads(1);
+        assert!(e.set_mix(mix), "{} refused mix={}", algo.name(), mix.name());
+    }
+    let mut transports = MemTransport::cluster(N);
+    let mut xs: Vec<Vec<f32>> = (0..N)
+        .map(|i| (0..D).map(|k| 0.3 + 0.001 * ((i + k) % 13) as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = (0..N).map(|_| vec![0.01f32; D]).collect();
+    let mut payloads: Vec<Vec<u8>> = (0..N).map(|_| Vec::new()).collect();
+    let mut gots: Vec<Vec<Frame>> = (0..N).map(|_| Vec::new()).collect();
+    let ctx = StepCtx { seed: 7, rho, g_inf: 1.0 };
+
+    run_rounds(
+        &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
+        &peers, &ctx, 0, WARMUP, true,
+    );
+    let allocs_before = ALLOCS.load(Ordering::SeqCst);
+    let deallocs_before = DEALLOCS.load(Ordering::SeqCst);
+    run_rounds(
+        &algo, &mut engines, &mut transports, &mut xs, &grads, &mut payloads, &mut gots,
+        &peers, &ctx, WARMUP, WINDOW, true,
+    );
+    let allocs = ALLOCS.load(Ordering::SeqCst) - allocs_before;
+    let deallocs = DEALLOCS.load(Ordering::SeqCst) - deallocs_before;
+    assert_eq!(
+        allocs, 0,
+        "{} (seal + mix={}): {allocs} heap allocations across {WINDOW} steady-state \
+         rounds — the defense gate must stay zero-alloc",
+        algo.name(),
+        mix.name()
+    );
+    assert_eq!(
+        deallocs, 0,
+        "{} (seal + mix={}): {deallocs} heap frees across {WINDOW} steady-state rounds",
+        algo.name(),
+        mix.name()
+    );
+    assert!(xs[0].iter().all(|v| v.is_finite()));
+}
+
 #[test]
 fn steady_state_rounds_allocate_nothing() {
     // ONE test fn on purpose — see module docs. Order: the contract's
@@ -503,6 +577,14 @@ fn steady_state_rounds_allocate_nothing() {
     });
     // Fault path: one corrupt frame mid-round keeps the zero budget.
     check_corrupt_frame_round();
+    // Byzantine defense plane: seal append/verify/strip plus the robust
+    // accumulate paths, same zero budget.
+    check_sealed_robust(Algorithm::DPsgd, MixPolicy::Clipped(0.5));
+    check_sealed_robust(Algorithm::DPsgd, MixPolicy::Median);
+    check_sealed_robust(
+        Algorithm::Moniqua { theta: ThetaPolicy::Constant(2.0), quant: QuantConfig::stochastic(8) },
+        MixPolicy::Median,
+    );
     // Telemetry plane live on every transport: same zero budget (the
     // metrics=off|json|prom modes gate export only — recording is always
     // on, so this window IS the production hot path with metrics).

@@ -92,6 +92,8 @@ fn config() -> TrainConfig {
         eval_every: 1,
         seed: 7,
         threads: None,
+        verify_wire: false,
+        mix: moniqua::algorithms::MixPolicy::Mean,
     }
 }
 

@@ -1,0 +1,272 @@
+//! The Byzantine defense plane's acceptance gate (rust/DESIGN.md
+//! §Adversarial-robustness). Three properties:
+//!
+//! 1. **Zero-cost defense:** with the gate fully live — the +8 B machine
+//!    seal on raw-f32 engines (`verify_wire`), the §6 semantic digest on
+//!    Moniqua (`verify_hash`), strike accounting armed — and zero
+//!    adversaries, every runtime (threaded/reactor × mem/tcp) stays
+//!    **bitwise** identical to the lockstep [`Trainer`], and no defense
+//!    counter ever fires.
+//! 2. **Quarantine-then-converge:** under each `byz_mode`, the honest
+//!    cohort convicts the adversary within the strike budget, excises it
+//!    from the gossip matrix, completes without a single `WorkerFailure`,
+//!    and keeps optimizing.
+//! 3. **Robust mixes stay deterministic:** `mix=clipped` / `mix=median`
+//!    reach the same bits on lockstep, threaded, and reactor runtimes, and
+//!    the clipped mix bounds what an undetectable outlier attack (wrap
+//!    against a raw-f32 engine, where no digest exists) can do to the loss.
+
+use moniqua::adversary::{ByzMode, ByzantineConfig};
+use moniqua::algorithms::{Algorithm, MixPolicy, ThetaPolicy};
+use moniqua::coordinator::{
+    ClusterConfig, ClusterTrainer, DriverKind, Report, TrainConfig, Trainer, TransportKind,
+};
+use moniqua::network::NetworkConfig;
+use moniqua::objectives::{Objective, Quadratic};
+use moniqua::quant::QuantConfig;
+use moniqua::telemetry::Counter;
+use moniqua::topology::Topology;
+
+const STEPS: u64 = 12;
+
+fn config(algorithm: Algorithm, verify_wire: bool, mix: MixPolicy) -> TrainConfig {
+    TrainConfig {
+        workers: 4,
+        steps: STEPS,
+        lr: 0.1,
+        decay_factor: 0.5,
+        decay_at: vec![6],
+        algorithm,
+        network: Some(NetworkConfig::fig1b()),
+        grad_time_s: Some(1e-3),
+        eval_every: 4,
+        seed: 7,
+        threads: None,
+        verify_wire,
+        mix,
+    }
+}
+
+fn objective() -> Box<dyn Objective> {
+    Box::new(Quadratic::new(24, 1.0, 0.1, 4, 3))
+}
+
+/// Every determinism-relevant field of a report, as raw bit patterns
+/// (same digest as `tests/cluster_equivalence.rs`).
+fn fingerprint(r: &Report) -> String {
+    let mut s = format!(
+        "algo={} workers={} dim={} total_bytes={} total_messages={} extra_mem={}\n",
+        r.algorithm, r.workers, r.dim, r.total_bytes, r.total_messages, r.extra_memory_floats
+    );
+    for row in &r.trace {
+        s.push_str(&format!(
+            "step={} train={:016x} eval={:016x} cons={:016x} bytes={} theta={}\n",
+            row.step,
+            row.train_loss.to_bits(),
+            row.eval_loss.to_bits(),
+            row.consensus_linf.to_bits(),
+            row.bytes_total,
+            row.theta.map_or("-".to_string(), |t| format!("{:016x}", t.to_bits())),
+        ));
+    }
+    s.push_str("final=");
+    for v in &r.final_params {
+        s.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    s
+}
+
+/// Engines with their defense armed: raw-f32 engines price the +8 B seal
+/// (`verify_wire`); the Moniqua family ships its §6 digest (`verify_hash`).
+fn defended_cases() -> Vec<(&'static str, Algorithm, bool)> {
+    let q8 = QuantConfig::stochastic(8);
+    vec![
+        ("dpsgd+seal", Algorithm::DPsgd, true),
+        ("d2+seal", Algorithm::D2, true),
+        ("allreduce+seal", Algorithm::AllReduce, true),
+        (
+            "moniqua+digest",
+            Algorithm::Moniqua {
+                theta: ThetaPolicy::Constant(2.0),
+                quant: q8.with_verify_hash(true),
+            },
+            false,
+        ),
+    ]
+}
+
+fn defense_counters(t: &ClusterTrainer) -> (u64, u64, u64, u64) {
+    let snap = t.metrics().snapshot();
+    (
+        snap.counter(Counter::DigestRejects),
+        snap.counter(Counter::ReplayRejects),
+        snap.counter(Counter::EquivocationRejects),
+        snap.counter(Counter::QuarantinedPeers),
+    )
+}
+
+#[test]
+fn live_defense_with_zero_adversaries_is_bitwise_lockstep_everywhere() {
+    for (name, algorithm, verify_wire) in defended_cases() {
+        let cfg = || config(algorithm.clone(), verify_wire, MixPolicy::Mean);
+        let want = fingerprint(&Trainer::new(cfg(), Topology::Ring(4), objective()).run());
+        for transport in [TransportKind::Mem, TransportKind::Tcp { port_base: 0 }] {
+            for driver in [DriverKind::Threaded, DriverKind::Reactor { threads: 2 }] {
+                let mut t = ClusterTrainer::new(
+                    cfg(),
+                    Topology::Ring(4),
+                    objective(),
+                    ClusterConfig { transport, driver, ..ClusterConfig::default() },
+                )
+                .expect("defended cluster config accepted");
+                let got = fingerprint(&t.run().expect("defended run"));
+                assert!(t.failures.is_empty(), "{name}: failures {:?}", t.failures);
+                assert_eq!(
+                    got, want,
+                    "{name} on {transport:?}/{driver:?}: live defense changed the bits"
+                );
+                // The gate really ran — and convicted nothing honest.
+                let (digest, replay, equiv, quarantined) = defense_counters(&t);
+                assert_eq!(
+                    (digest, replay, equiv, quarantined),
+                    (0, 0, 0, 0),
+                    "{name} on {transport:?}/{driver:?}: honest traffic struck the gate"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_byz_mode_is_quarantined_and_the_cohort_converges() {
+    // Worker 2 misbehaves on ring/4; its two ring neighbors (1 and 3) each
+    // strike it once per round, convict at the 2-strike budget, and excise
+    // it by re-deriving their gossip row over the ring/3 survivors. Wrap
+    // needs the §6 digest (only a modulo decode can see the θ escape), the
+    // other modes are caught by the machine seal / round gate on dpsgd.
+    let q8 = QuantConfig::stochastic(8);
+    let cases: Vec<(&'static str, ByzMode, Algorithm, bool)> = vec![
+        ("flip", ByzMode::Flip, Algorithm::DPsgd, true),
+        ("replay", ByzMode::Replay, Algorithm::DPsgd, true),
+        ("equivocate", ByzMode::Equivocate, Algorithm::DPsgd, true),
+        (
+            "wrap",
+            ByzMode::Wrap,
+            Algorithm::Moniqua {
+                theta: ThetaPolicy::Constant(2.0),
+                quant: q8.with_verify_hash(true),
+            },
+            false,
+        ),
+    ];
+    for (name, mode, algorithm, verify_wire) in cases {
+        let mut t = ClusterTrainer::new(
+            config(algorithm, verify_wire, MixPolicy::Mean),
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig {
+                byz: Some(ByzantineConfig { workers: 0b100, mode, strike_limit: 2 }),
+                ..ClusterConfig::default()
+            },
+        )
+        .expect("byzantine cluster config accepted");
+        let report = t.run().unwrap_or_else(|e| panic!("{name}: run failed: {e:#}"));
+        assert!(t.failures.is_empty(), "{name}: failures {:?}", t.failures);
+        assert!(
+            report.final_params.iter().all(|v| v.is_finite()),
+            "{name}: adversary drove the model non-finite"
+        );
+        let first = report.trace.first().expect("trace").eval_loss;
+        let last = report.trace.last().expect("trace").eval_loss;
+        assert!(
+            last.is_finite() && last < first,
+            "{name}: no progress under attack (eval {first} -> {last})"
+        );
+        let (digest, replay, equiv, quarantined) = defense_counters(&t);
+        assert_eq!(
+            quarantined, 2,
+            "{name}: both ring neighbors must convict worker 2 exactly once \
+             (digest={digest} replay={replay} equiv={equiv})"
+        );
+        match mode {
+            // 2 neighbors × 2 pre-conviction rounds.
+            ByzMode::Flip => assert!(digest >= 4, "{name}: digest rejects {digest} < 4"),
+            ByzMode::Wrap => assert!(digest >= 2, "{name}: digest rejects {digest} < 2"),
+            ByzMode::Replay => assert!(replay >= 2, "{name}: replay rejects {replay} < 2"),
+            ByzMode::Equivocate => {
+                assert!(equiv >= 2, "{name}: equivocation rejects {equiv} < 2")
+            }
+        }
+    }
+}
+
+#[test]
+fn robust_mixes_reach_the_same_bits_on_every_runtime() {
+    let q8 = QuantConfig::stochastic(8);
+    let engines: Vec<(&'static str, Algorithm)> = vec![
+        ("dpsgd", Algorithm::DPsgd),
+        ("moniqua", Algorithm::Moniqua { theta: ThetaPolicy::Constant(2.0), quant: q8 }),
+    ];
+    for mix in [MixPolicy::Clipped(1.0), MixPolicy::Median] {
+        for (name, algorithm) in &engines {
+            let cfg = || config(algorithm.clone(), false, mix);
+            let want = fingerprint(&Trainer::new(cfg(), Topology::Ring(4), objective()).run());
+            for driver in [DriverKind::Threaded, DriverKind::Reactor { threads: 2 }] {
+                let mut t = ClusterTrainer::new(
+                    cfg(),
+                    Topology::Ring(4),
+                    objective(),
+                    ClusterConfig { driver, ..ClusterConfig::default() },
+                )
+                .expect("robust-mix cluster config accepted");
+                let got = fingerprint(&t.run().expect("robust-mix run"));
+                assert_eq!(
+                    got, want,
+                    "{name} mix={mix:?} on {driver:?}: cluster diverged from lockstep"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn clipped_mix_bounds_the_undetectable_outlier_attack() {
+    // Wrap against a raw-f32 engine is honestly encoded and honestly
+    // sealed — no digest exists to convict it, so the gate stays silent
+    // and the pollution reaches the averaging step. The clipped mix caps
+    // each neighbor's per-coordinate influence at τ, so the attacked run's
+    // loss must land far below the plain mean's.
+    let run = |mix: MixPolicy| -> (Report, u64) {
+        let mut t = ClusterTrainer::new(
+            config(Algorithm::DPsgd, true, mix),
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig {
+                byz: Some(ByzantineConfig {
+                    workers: 0b100,
+                    mode: ByzMode::Wrap,
+                    strike_limit: 2,
+                }),
+                ..ClusterConfig::default()
+            },
+        )
+        .expect("wrap cluster config accepted");
+        let report = t.run().expect("wrap run");
+        assert!(t.failures.is_empty(), "wrap run failed: {:?}", t.failures);
+        let quarantined = t.metrics().snapshot().counter(Counter::QuarantinedPeers);
+        (report, quarantined)
+    };
+    let (mean, mean_quarantined) = run(MixPolicy::Mean);
+    let (clipped, clipped_quarantined) = run(MixPolicy::Clipped(1.0));
+    // The seal passes (the adversary sealed its kicked bytes honestly), so
+    // no conviction ever happens — exactly why the robust mix exists.
+    assert_eq!(mean_quarantined, 0, "seal-valid wrap must not convict");
+    assert_eq!(clipped_quarantined, 0, "seal-valid wrap must not convict");
+    let mean_loss = mean.trace.last().expect("trace").eval_loss;
+    let clipped_loss = clipped.trace.last().expect("trace").eval_loss;
+    assert!(mean_loss.is_finite() && clipped_loss.is_finite());
+    assert!(
+        clipped_loss < mean_loss / 2.0,
+        "clipped mix did not bound the outlier attack: mean={mean_loss} clipped={clipped_loss}"
+    );
+}

@@ -10,7 +10,7 @@
 //! is excluded from the digest — it mixes measured host time by design in
 //! both runtimes.
 
-use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::algorithms::{Algorithm, MixPolicy, ThetaPolicy};
 use moniqua::coordinator::{
     ClusterConfig, ClusterTrainer, DriverKind, Report, TrainConfig, Trainer, TransportKind,
 };
@@ -34,6 +34,8 @@ fn config(algorithm: Algorithm) -> TrainConfig {
         eval_every: 4,
         seed: 7,
         threads: None,
+        verify_wire: false,
+        mix: MixPolicy::Mean,
     }
 }
 

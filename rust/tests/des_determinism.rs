@@ -134,6 +134,7 @@ fn des_event_order_and_model_identical_at_any_thread_width() {
             delay_prob: 0.1,
             delay_s: 2e-3,
             straggler: 0.5,
+            byz: None,
         },
         grad_time_s: 1e-3,
         topo_schedule: None,
@@ -196,6 +197,7 @@ fn des_faults_never_change_synchronous_values() {
                 delay_prob: 0.3,
                 delay_s: 10e-3,
                 straggler: 1.0,
+                byz: None,
             },
             grad_time_s: 2e-3,
             topo_schedule: None,

@@ -42,6 +42,8 @@ fn config(algorithm: Algorithm) -> TrainConfig {
         eval_every: 4,
         seed: 7,
         threads: None,
+        verify_wire: false,
+        mix: moniqua::algorithms::MixPolicy::Mean,
     }
 }
 

@@ -4,6 +4,7 @@
 //! truncation, bad magic, bad version, and flipped bytes must all come
 //! back as *typed* [`FrameError`]s, never panics.
 
+use moniqua::adversary::{seal_ok, seal_payload, sealed_body, SEAL_LEN};
 use moniqua::quant::{packing, MoniquaCodec, QuantConfig};
 use moniqua::testing::{forall, gaussian_vec};
 use moniqua::transport::{Frame, FrameError, FrameKind, HEADER_LEN, VERSION};
@@ -134,6 +135,60 @@ fn flipped_bytes_map_to_typed_errors_by_region() {
                 "pos={pos}: {result:?}"
             ),
         }
+    });
+}
+
+/// The Byzantine threat model in one property: a tampered body whose frame
+/// checksum was *re-stamped valid* sails through `Frame::decode`, and only
+/// the round-bound seal catches it. This is why digest verification is a
+/// first-class gate in `accept_frame`, not an optional extra.
+#[test]
+fn restamped_checksum_decodes_but_the_seal_convicts() {
+    forall(200, |rng| {
+        let round = rng.next_u64();
+        let len = 1 + rng.below(2000) as usize;
+        let mut payload: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        seal_payload(round, &mut payload);
+        assert!(seal_ok(round, &payload));
+        assert_eq!(sealed_body(&payload).len(), len);
+
+        // An honest frame around the sealed payload round-trips and passes.
+        let honest = Frame {
+            round,
+            sender: rng.below(1 << 16) as u16,
+            algo: 0,
+            bits: 32,
+            kind: FrameKind::Data,
+            theta: 0.0,
+            payload: payload.clone(),
+        };
+        let decoded = Frame::decode(&honest.encode()).expect("sealed frame decodes");
+        assert!(seal_ok(decoded.round, &decoded.payload));
+
+        // Flip attack: corrupt one body byte, then re-encode — `encode`
+        // restamps the checksum, so the wire frame is checksum-valid.
+        let mut evil = honest.clone();
+        let pos = rng.below(len as u64) as usize;
+        evil.payload[pos] ^= 1u8 << rng.below(8) as u32;
+        let tampered = Frame::decode(&evil.encode()).expect("checksum restamped: decodes fine");
+        assert!(
+            !seal_ok(tampered.round, &tampered.payload),
+            "round={round} pos={pos}: flipped body must fail the seal"
+        );
+
+        // Replay attack: same bytes replayed under a different round stamp
+        // fail the seal too — it is round-bound, not just content-bound.
+        let wrong_round = round.wrapping_add(1 + rng.below(1000));
+        assert!(!seal_ok(wrong_round, &payload));
+
+        // Truncation below the tail is a conviction, never a panic.
+        assert!(!seal_ok(round, &payload[..rng.below(SEAL_LEN as u64) as usize]));
+
+        // And tampering the tail itself is caught symmetrically.
+        let mut cut_tail = payload.clone();
+        let tpos = len + rng.below(SEAL_LEN as u64) as usize;
+        cut_tail[tpos] ^= 0x40;
+        assert!(!seal_ok(round, &cut_tail));
     });
 }
 

@@ -102,6 +102,11 @@ fn prometheus_export_from_real_run_validates_with_all_four_layers() {
         // reactor
         "moniqua_reactor_poll_iterations_total",
         "moniqua_reactor_machines_driven_total",
+        // byzantine defense gate (always exported, zero on honest runs)
+        "moniqua_round_digest_rejects_total",
+        "moniqua_round_replay_rejects_total",
+        "moniqua_round_equivocations_total",
+        "moniqua_round_quarantined_peers_total",
         // quant
         "moniqua_quant_codes_packed_total",
         "moniqua_quant_encode_ns",
@@ -123,9 +128,18 @@ fn json_export_is_structured_and_conserves_frames() {
     let (_, snap) = run_reactor();
     let json = snap.to_json();
     assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
-    for key in ["\"counters\"", "\"histograms\"", "\"transport_frames_sent_data\""] {
+    for key in [
+        "\"counters\"",
+        "\"histograms\"",
+        "\"transport_frames_sent_data\"",
+        "\"round_digest_rejects\"",
+        "\"round_quarantined_peers\"",
+    ] {
         assert!(json.contains(key), "json export missing {key}");
     }
+    // An honest run never strikes the defense gate, in the export either.
+    assert_eq!(snap.counter(Counter::DigestRejects), 0);
+    assert_eq!(snap.counter(Counter::QuarantinedPeers), 0);
     // Conservation holds in the exported numbers, not just in memory.
     assert_eq!(
         snap.frames_sent(),

@@ -23,7 +23,7 @@
 
 use std::time::{Duration, Instant};
 
-use moniqua::algorithms::{Algorithm, ThetaPolicy};
+use moniqua::algorithms::{Algorithm, MixPolicy, ThetaPolicy};
 use moniqua::coordinator::{
     ClusterConfig, ClusterTrainer, DriverKind, Report, TrainConfig, Trainer, TransportKind,
 };
@@ -48,6 +48,8 @@ fn config(algorithm: Algorithm) -> TrainConfig {
         eval_every: 4,
         seed: 7,
         threads: None,
+        verify_wire: false,
+        mix: MixPolicy::Mean,
     }
 }
 
@@ -210,6 +212,8 @@ fn soak_config() -> TrainConfig {
         eval_every: 4,
         seed: 11,
         threads: None,
+        verify_wire: false,
+        mix: MixPolicy::Mean,
     }
 }
 
@@ -244,17 +248,25 @@ fn reactor_soaks_256_workers_on_8_threads_bitwise_equal_to_lockstep() {
     assert!(t.failures.is_empty(), "soak recorded failures: {:?}", t.failures);
     assert_eq!(got, want, "256-worker reactor soak diverged from lockstep");
     // Cluster-wide frame conservation: across all 256 endpoints, every
-    // frame put on the wire was either delivered or rejected — the
+    // frame put on the wire lands in exactly one terminal category —
+    // accepted by the round gate, rejected by the transport decoder
+    // (checksum), or convicted past decode by the digest/seal gate:
+    // sent == accepted + checksum_rejected + digest_rejected. The
     // telemetry plane's structural identity, and the soak's proof that no
     // frame is silently dropped under out-of-order readiness.
     let snap = t.metrics().snapshot();
     assert!(snap.frames_sent() > 0, "soak recorded no sends");
+    let digest_rejected = snap.counter(Counter::DigestRejects)
+        + snap.counter(Counter::ReplayRejects)
+        + snap.counter(Counter::EquivocationRejects);
+    let accepted = snap.frames_received() - digest_rejected;
     assert_eq!(
         snap.frames_sent(),
-        snap.frames_received() + snap.counter(Counter::FramesRejected),
+        accepted + snap.counter(Counter::FramesRejected) + digest_rejected,
         "frame conservation violated after the 256-worker soak"
     );
     assert_eq!(snap.counter(Counter::FramesRejected), 0, "clean soak rejected frames");
+    assert_eq!(digest_rejected, 0, "clean soak struck frames at the defense gate");
     assert_eq!(snap.frames_sent(), t.frames_sent, "telemetry and trace disagree on sends");
 }
 

@@ -56,6 +56,11 @@ fn every_fixture_is_flagged_at_its_exact_line() {
         hits(&diags, "engine/hot.rs"),
         vec![(9, Rule::HotAlloc), (15, Rule::HotAlloc)],
     );
+    // The byzantine-era hot paths: a robust-mix accumulate loop that
+    // rebuilds its sort buffer per frame, and a frame-drain quarantine
+    // check that copies the strike table per frame.
+    assert_eq!(hits(&diags, "engine/robust_mix.rs"), vec![(6, Rule::HotAlloc)]);
+    assert_eq!(hits(&diags, "coordinator/drain.rs"), vec![(8, Rule::HotAlloc)]);
 
     // The unparsable fixture reports the bookkeeping `parse` rule (its
     // exact line is syn's error span, which we do not pin).
@@ -64,7 +69,7 @@ fn every_fixture_is_flagged_at_its_exact_line() {
     assert_eq!(parse[0].rule, Rule::Parse);
 
     // ... and nothing beyond the expectations above was flagged.
-    assert_eq!(diags.len(), 15, "unexpected extra diagnostics:\n{}", render(&diags));
+    assert_eq!(diags.len(), 17, "unexpected extra diagnostics:\n{}", render(&diags));
 }
 
 #[test]

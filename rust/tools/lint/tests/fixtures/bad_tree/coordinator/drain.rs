@@ -1,0 +1,14 @@
+//! Fixture: `hot_alloc` — the quarantine check in the frame-drain path
+//! must read the strike table in place, not rebuild it per frame.
+
+// lint: hot-path
+pub fn drain_frames(frames: &[u64], quarantined: &[u64]) -> usize {
+    let mut kept = 0;
+    for f in frames {
+        let q = quarantined.to_vec();
+        if !q.contains(f) {
+            kept += 1;
+        }
+    }
+    kept
+}

@@ -1,0 +1,9 @@
+//! Fixture: `hot_alloc` — the robust-mix accumulate loop must reuse its
+//! preallocated deviation rows and sort buffer, never allocate per frame.
+
+// lint: hot-path
+pub fn median_accumulate(rows: &[Vec<f32>], out: &mut Vec<f32>) {
+    let mut sortbuf: Vec<f32> = rows.iter().map(|r| r[0]).collect();
+    sortbuf.sort_by(f32::total_cmp);
+    out.push(sortbuf[sortbuf.len() / 2]);
+}
