@@ -114,17 +114,35 @@ impl ByzantineConfig {
         self.workers.count_ones() as usize
     }
 
-    /// Parse the `byz_workers=` comma list (`byz_workers=0,2`) into the
-    /// bitmask. Range against the worker count is checked by
+    /// Parse the `byz_workers=` comma list of ids and inclusive `a-b`
+    /// ranges (`byz_workers=0,2` or `byz_workers=1-3,5`) into the bitmask.
+    /// Range against the worker count is checked by
     /// [`validate`](Self::validate), which knows `n`.
     pub fn parse_workers(spec: &str) -> Result<u64> {
         let mut mask = 0u64;
         for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-            let id: usize = part
-                .parse()
-                .with_context(|| format!("byz_workers entry '{part}' is not a worker id"))?;
-            ensure!(id < 64, "byz_workers id {id} exceeds the bitmask capacity (ids < 64)");
-            mask |= 1u64 << id;
+            let (lo, hi) = match part.split_once('-') {
+                Some((a, b)) => {
+                    let lo: usize = a.trim().parse().with_context(|| {
+                        format!("byz_workers range '{part}' start is not a worker id")
+                    })?;
+                    let hi: usize = b.trim().parse().with_context(|| {
+                        format!("byz_workers range '{part}' end is not a worker id")
+                    })?;
+                    ensure!(lo <= hi, "byz_workers range '{part}' runs backwards");
+                    (lo, hi)
+                }
+                None => {
+                    let id: usize = part.parse().with_context(|| {
+                        format!("byz_workers entry '{part}' is not a worker id")
+                    })?;
+                    (id, id)
+                }
+            };
+            ensure!(hi < 64, "byz_workers id {hi} exceeds the bitmask capacity (ids < 64)");
+            for id in lo..=hi {
+                mask |= 1u64 << id;
+            }
         }
         Ok(mask)
     }
@@ -303,6 +321,13 @@ mod tests {
         assert_eq!(ByzantineConfig::parse_workers(" 3 ").unwrap(), 0b1000);
         assert!(ByzantineConfig::parse_workers("x").is_err());
         assert!(ByzantineConfig::parse_workers("64").is_err());
+        // Inclusive a-b ranges, mixable with single ids.
+        assert_eq!(ByzantineConfig::parse_workers("0-2").unwrap(), 0b111);
+        assert_eq!(ByzantineConfig::parse_workers("1-1").unwrap(), 0b10);
+        assert_eq!(ByzantineConfig::parse_workers("0, 2-4 ,6").unwrap(), 0b101_1101);
+        assert!(ByzantineConfig::parse_workers("3-1").is_err(), "backwards range");
+        assert!(ByzantineConfig::parse_workers("0-64").is_err(), "range off the mask");
+        assert!(ByzantineConfig::parse_workers("1-x").is_err());
     }
 
     #[test]

@@ -313,46 +313,31 @@ fn take_parked(parked: &mut Vec<Frame>, round: u64, sender: usize) -> Option<Fra
         .map(|at| parked.swap_remove(at))
 }
 
-/// The `(round, sender)` pairs a barrier is still waiting on. A peer whose
-/// round frame was *rejected* by the defense gate (its entry in
-/// `rejected_round` stamps this round) is not missing: the gate satisfied
-/// the barrier for it and the mix substitutes the local model.
-fn missing_pairs(
-    round: u64,
-    peers: &[usize],
-    got: &[Frame],
-    rejected_round: &[u64],
-) -> Vec<(u64, usize)> {
-    peers
-        .iter()
-        .filter(|&&p| rejected_round.get(p).copied() != Some(round))
-        .filter(|&&p| !got.iter().any(|f| f.sender as usize == p))
-        .map(|&p| (round, p))
-        .collect()
-}
-
 /// Shared sanity gate for every Data frame before it can reach an engine:
-/// same algorithm, same bit budget, and a sender that is actually a peer
-/// in the *frame's own* epoch (a fast peer may already be past an upcoming
-/// reconfiguration barrier). Applied on the live recv path, on frames
-/// parked during a bootstrap wait, and on crash-replay frames from the
-/// log — a corrupt or misrouted frame must die loudly, never be averaged.
-fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>, extra_peers: &[usize]) {
+/// same algorithm and same bit budget, both enforced loudly — a
+/// cross-wired frame must die, never be averaged. Applied on the live recv
+/// path and on crash-replay frames from the log.
+///
+/// Deliberately NOT enforced here: peer-set membership under `Neighbors`
+/// scope. A neighbor that convicts a shared peer rewires its gossip row
+/// first and starts bridging immediately, so its frames can arrive while
+/// this observer's own peer set still predates the rewire. Those frames
+/// are *parked* (never delivered to the barrier) until the observer's own
+/// conviction admits the sender — see [`RoundStateMachine::accept_frame`].
+/// Under `All` scope the peer set never grows, so a non-peer sender there
+/// is corruption and still dies loudly.
+fn validate_data_frame(i: usize, f: &Frame, spec: &NodeSpec<'_>) {
     let from = f.sender as usize;
     assert_eq!(f.algo, spec.algo_id, "worker {i}: cross-algorithm frame from {from}");
     assert_eq!(f.bits, spec.wire_bits, "worker {i}: bit-budget mismatch from {from}");
-    let f_ep = epoch_at(spec.epochs, f.round);
-    // `extra_peers` is the machine's *current* recv set: after a quarantine
-    // rewire it contains bridge peers the epoch adjacency never listed.
-    let is_peer = match spec.scope {
-        CommScope::Neighbors => f_ep.adj[i].contains(&from) || extra_peers.contains(&from),
-        CommScope::All => f_ep.active[from] && from != i,
-    };
-    assert!(
-        is_peer,
-        "worker {i}: round-{} frame from non-peer {from}",
-        f.round
-    );
+    if spec.scope == CommScope::All {
+        let f_ep = epoch_at(spec.epochs, f.round);
+        assert!(
+            f_ep.active[from] && from != i,
+            "worker {i}: round-{} frame from non-peer {from}",
+            f.round
+        );
+    }
 }
 
 /// What the machine is blocked on when [`RoundStateMachine::drive`]
@@ -429,7 +414,11 @@ pub(crate) struct RoundStateMachine<'a> {
     /// Data frames from workers running ahead of us. A peer can run at
     /// most one round ahead (it needs our round-k frame to pass its own
     /// round-k barrier), so this stays tiny in steady state; crash replay
-    /// preloads the whole frame log into it.
+    /// preloads the whole frame log into it. Also holds early *bridge*
+    /// frames from senders not (yet) in our peer set — a neighbor that
+    /// convicted a shared peer rewires and bridges before we do; frames
+    /// for rounds our own rewire never admitted are recycled at each
+    /// round boundary.
     parked: Vec<Frame>,
     /// Bootstrap frames waiting for their join round, keyed by round.
     boot_pending: BTreeMap<u64, Frame>,
@@ -450,10 +439,16 @@ pub(crate) struct RoundStateMachine<'a> {
     /// convicts. Not checkpointed: a crash resets the local ledger, and
     /// the offender simply re-earns its strikes.
     strikes: Vec<u32>,
-    /// Round stamp of each sender's most recent seal-rejected frame: a
+    /// `(round, sender)` pairs whose frame the seal gate rejected: a
     /// reject *satisfies* that round's barrier slot (the mix substitutes
     /// the local model), so one bad frame costs one strike, not a timeout.
-    rejected_round: Vec<u64>,
+    /// A ledger, not a per-sender scalar, because several rounds' rejects
+    /// can be outstanding at once (a fast adversary's round-(r+1) frame
+    /// arrives before our round-r barrier closes) and because crash replay
+    /// must re-satisfy the slots of rejected frames that were deliberately
+    /// never WAL-logged. Pruned once no live barrier or replay can revisit
+    /// an entry; deliberately survives [`crash_restore`](Self::crash_restore).
+    reject_log: Vec<(u64, u16)>,
     quarantined: Vec<bool>,
     /// Senders substituted in this round's inbox (rejected, frame absent).
     subst: Vec<usize>,
@@ -533,7 +528,7 @@ impl<'a> RoundStateMachine<'a> {
             peers: Vec::new(),
             send_peers: Vec::new(),
             strikes: vec![0; n],
-            rejected_round: vec![u64::MAX; n],
+            reject_log: Vec::new(),
             quarantined: vec![false; n],
             subst: Vec::with_capacity(n),
             strike_scratch: Vec::with_capacity(n),
@@ -608,17 +603,47 @@ impl<'a> RoundStateMachine<'a> {
     }
 
     /// The round barrier holds when every peer slot is satisfied — by a
-    /// held frame or by this round's gate rejection of that sender. The
-    /// honest fast path is the same length check as ever.
+    /// held frame or by the gate's rejection of that sender's frame for
+    /// this round. The honest fast path is the same length check as ever.
     // lint: hot-path
     fn barrier_complete(&self) -> bool {
         if self.got.len() == self.peers.len() {
             return true;
         }
         self.peers.iter().all(|&p| {
-            self.rejected_round[p] == self.round
+            self.was_rejected(self.round, p)
                 || self.got.iter().any(|f| f.sender as usize == p)
         })
+    }
+
+    /// Whether the seal gate rejected `p`'s frame for `round` (the reject
+    /// satisfied that round's barrier slot). Empty ledger — every honest
+    /// run — makes this free.
+    // lint: hot-path
+    fn was_rejected(&self, round: u64, p: usize) -> bool {
+        self.reject_log.iter().any(|&(r, s)| r == round && s as usize == p)
+    }
+
+    /// Whether `from` is in this machine's *current* recv set: the epoch
+    /// peers, minus quarantine excisions, plus bridge peers a rewire
+    /// added. Frames from anyone else are parked, never delivered to the
+    /// barrier — see [`accept_frame`](Self::accept_frame).
+    // lint: hot-path
+    fn is_recv_peer(&self, from: usize) -> bool {
+        self.peers.contains(&from)
+    }
+
+    /// The `(round, sender)` pairs the current barrier is still waiting
+    /// on. A peer whose round frame was *rejected* by the defense gate is
+    /// not missing: the gate satisfied the barrier for it and the mix
+    /// substitutes the local model.
+    fn missing_pairs(&self) -> Vec<(u64, usize)> {
+        self.peers
+            .iter()
+            .filter(|&&p| !self.was_rejected(self.round, p))
+            .filter(|&&p| !self.got.iter().any(|f| f.sender as usize == p))
+            .map(|&p| (self.round, p))
+            .collect()
     }
 
     // lint: hot-path
@@ -918,13 +943,17 @@ impl<'a> RoundStateMachine<'a> {
             }
         }
         if self.round < self.live_from && self.got.len() < self.peers.len() {
-            let missing =
-                missing_pairs(self.round, &self.peers, &self.got, &self.rejected_round);
-            panic!(
-                "worker {}: replay log is missing frames {missing:?} for round {} \
-                 (log truncated outside a checkpoint?)",
-                self.i, self.round
-            );
+            // Rejected frames are deliberately absent from the log; the
+            // reject ledger re-satisfies their slots, so only genuinely
+            // missing pairs are fatal.
+            let missing = self.missing_pairs();
+            if !missing.is_empty() {
+                panic!(
+                    "worker {}: replay log is missing frames {missing:?} for round {} \
+                     (log truncated outside a checkpoint?)",
+                    self.i, self.round
+                );
+            }
         }
         Ok(())
     }
@@ -1100,7 +1129,7 @@ impl<'a> RoundStateMachine<'a> {
         self.subst.clear();
         for k in 0..self.peers.len() {
             let p = self.peers[k];
-            if self.rejected_round[p] == self.round
+            if self.was_rejected(self.round, p)
                 && !self.got.iter().any(|g| g.sender as usize == p)
             {
                 self.subst.push(p);
@@ -1175,6 +1204,28 @@ impl<'a> RoundStateMachine<'a> {
             }
         }
 
+        // A parked frame for a round whose barrier just closed can never
+        // be consumed (take_parked only queries the current round going
+        // forward): recycle it instead of holding it for the run. The
+        // normal case is a *bridge* frame from a neighbor that convicted a
+        // shared peer earlier than we did — its first bridged rounds may
+        // predate our own rewire.
+        let mut k = 0;
+        while k < self.parked.len() {
+            if self.parked[k].round <= self.round {
+                let f = self.parked.swap_remove(k);
+                transport.recycle(f.payload);
+            } else {
+                k += 1;
+            }
+        }
+        // Reject-ledger entries for closed barriers are only needed again
+        // by crash replay; without a frame log no replay exists and they
+        // can go now (with one, they go at the checkpoint cut below).
+        if self.framelog.is_none() {
+            self.reject_log.retain(|&(r, _)| r > self.round);
+        }
+
         // Checkpoint at the round boundary.
         if self.round >= self.live_from
             && self.spec.ckpt_every > 0
@@ -1210,6 +1261,10 @@ impl<'a> RoundStateMachine<'a> {
                     for f in self.boot_pending.values() {
                         log.append(f).expect("re-log pending bootstrap");
                     }
+                    // Replay can never reach behind this snapshot, so
+                    // reject-ledger entries for rounds it covers are done.
+                    let cut = self.round;
+                    self.reject_log.retain(|&(r, _)| r > cut);
                 }
                 self.spec.telemetry.observe(
                     Hist::CkptWriteNs,
@@ -1241,7 +1296,7 @@ impl<'a> RoundStateMachine<'a> {
                     // Replayed frames were gated (and seal-stripped)
                     // before they reached the WAL; only the sanity checks
                     // re-run here.
-                    validate_data_frame(self.i, &f, &self.spec, &self.peers);
+                    validate_data_frame(self.i, &f, &self.spec);
                     self.parked.push(f);
                 }
                 FrameKind::Bootstrap => {
@@ -1330,7 +1385,13 @@ impl<'a> RoundStateMachine<'a> {
                     self.boot_pending.insert(f.round, f);
                     return;
                 }
-                if f.round == self.round {
+                // Only current peers may reach the barrier inbox — an
+                // early *bridge* frame (a neighbor convicted a shared peer
+                // and rewired before we did) parks until our own rewire
+                // admits its sender; everything parked is picked up by
+                // `take_parked`, which is keyed on the peer set of the
+                // round that consumes it.
+                if f.round == self.round && self.is_recv_peer(f.sender as usize) {
                     self.got.push(f);
                 } else {
                     self.parked.push(f);
@@ -1361,17 +1422,19 @@ impl<'a> RoundStateMachine<'a> {
             self.spec.telemetry.record(Counter::ReplayRejects, 1);
             return None;
         }
-        validate_data_frame(self.i, &f, &self.spec, &self.peers);
+        validate_data_frame(self.i, &f, &self.spec);
         if self.spec.seal {
             if !adversary::seal_ok(f.round, &f.payload) {
                 // Checksum-valid but seal-wrong: corruption past the
-                // transport layer. Satisfy this round's barrier slot for
-                // the sender (the mix substitutes the local model) so one
-                // bad frame costs a strike, not a barrier timeout.
+                // transport layer. Ledger the (round, sender) pair so the
+                // frame's barrier slot is satisfied (the mix substitutes
+                // the local model) — one bad frame costs a strike, not a
+                // barrier timeout — and so crash replay can re-satisfy the
+                // slot (rejected frames are never WAL-logged).
                 self.spec.telemetry.record(Counter::DigestRejects, 1);
                 self.note_strike(from);
-                if from < self.rejected_round.len() {
-                    self.rejected_round[from] = f.round;
+                if !self.was_rejected(f.round, from) {
+                    self.reject_log.push((f.round, f.sender));
                 }
                 return None;
             }
@@ -1389,8 +1452,12 @@ impl<'a> RoundStateMachine<'a> {
         }
         // Duplicate screen: at most one Data frame per (round, sender) may
         // be held. A byte-identical second copy is a replay; a divergent
-        // one is equivocation.
-        let held = if f.round == self.round && self.phase == Phase::AwaitBarrier {
+        // one is equivocation. The collection searched mirrors where
+        // `accept_frame` would route this frame.
+        let held = if f.round == self.round
+            && self.phase == Phase::AwaitBarrier
+            && self.is_recv_peer(from)
+        {
             self.got.iter().find(|g| g.sender == f.sender)
         } else {
             self.parked
@@ -1420,12 +1487,7 @@ impl<'a> RoundStateMachine<'a> {
                 self.round, self.spec.recv_timeout,
             )),
             _ => {
-                let missing = missing_pairs(
-                    self.round,
-                    &self.peers,
-                    &self.got,
-                    &self.rejected_round,
-                );
+                let missing = self.missing_pairs();
                 self.failure(format!(
                     "barrier timed out: exceeded the configured \
                      recv_timeout of {:?} with {} of {} peer frames \
@@ -1649,6 +1711,247 @@ mod tests {
         for m in machines.into_iter() {
             let r = m.into_result();
             assert!(r.trace.loss_at(7).is_some(), "all workers complete all rounds");
+        }
+    }
+
+    /// Construct a seal-armed dpsgd cohort on `Ring(n)` with worker
+    /// `byz_worker` flipping payload bytes, for the race-orchestration
+    /// tests below.
+    fn flip_cohort<'a>(
+        cfg: &TrainConfig,
+        topo: &Topology,
+        epochs: &'a [Epoch],
+        byz_worker: usize,
+        strike_limit: u32,
+    ) -> Vec<RoundStateMachine<'a>> {
+        let n = cfg.workers;
+        let objective =
+            || Box::new(crate::objectives::Quadratic::new(6, 1.0, 0.1, n, 3));
+        let d = objective().dim();
+        (0..n)
+            .map(|i| {
+                let mut engine = cfg.algorithm.make_sync(&epochs[0].matrix, d);
+                engine.set_threads(1);
+                let spec = NodeSpec {
+                    cfg: cfg.clone(),
+                    recv_timeout: Duration::from_secs(5),
+                    algo_id: algo_wire_id(cfg.algorithm.name()),
+                    wire_bits: 32,
+                    scope: engine.comm_scope(),
+                    epochs,
+                    crashes: Vec::new(),
+                    ckpt_every: 0,
+                    ckpt_dir: None,
+                    skip_bootstrap: false,
+                    pipeline: true,
+                    telemetry: Telemetry::disabled(),
+                    clock: Clock::disabled(),
+                    topo: topo.clone(),
+                    byz: (i == byz_worker).then_some(ByzMode::Flip),
+                    strike_limit,
+                    seal: true,
+                };
+                RoundStateMachine::new(i, engine, objective(), spec)
+            })
+            .collect()
+    }
+
+    /// Drive one machine until it completes or blocks with an empty inbox.
+    fn pump(m: &mut RoundStateMachine<'_>, t: &mut MemTransport) -> bool {
+        loop {
+            match m.drive(t).unwrap() {
+                MachineStatus::Done => return true,
+                MachineStatus::Waiting(_) => match t.recv(Duration::from_millis(1)) {
+                    Ok(f) => m.accept_frame(f),
+                    Err(_) => return false,
+                },
+            }
+        }
+    }
+
+    /// The quarantine rewire race: on Ring(4), both neighbors of the
+    /// adversary convict it, but worker 1 finishes its conviction round
+    /// first, rewires, and its pipelined round-2 entry broadcasts to the
+    /// new bridge peer 3 — whose own peer set still predates the rewire,
+    /// so the sender is in neither worker 3's epoch adjacency nor its
+    /// current peers. The frame must park (never panic, never enter the
+    /// barrier inbox) and be consumed once worker 3's own conviction
+    /// admits the bridge.
+    #[test]
+    fn early_bridge_frame_parks_until_the_receivers_own_rewire() {
+        let cfg = TrainConfig {
+            workers: 4,
+            steps: 6,
+            eval_every: 3,
+            algorithm: Algorithm::DPsgd,
+            ..TrainConfig::default()
+        };
+        let topo = Topology::Ring(4);
+        let epochs = MembershipPlan::default().epochs(&topo, cfg.steps).unwrap();
+        let mut transports = MemTransport::cluster(4);
+        let byz_worker = 2usize;
+        let mut machines = flip_cohort(&cfg, &topo, &epochs, byz_worker, 2);
+
+        // Worker 3 ships its round-0 frame (its neighbors 0 and 2 need it
+        // to advance) and then goes silent: we withhold its inbox so its
+        // peer set stays pre-rewire while the rest of the ring runs ahead.
+        {
+            let t: &mut dyn Transport = &mut transports[3];
+            assert_eq!(
+                machines[3].drive(t).unwrap(),
+                MachineStatus::Waiting(WaitKey::Barrier { round: 0 })
+            );
+        }
+        // Workers 0/1/2 run until quiescent. Worker 1 sees the flipped
+        // frames at rounds 0 and 1, convicts at the 2-strike budget at the
+        // end of round 1, rewires, and its round-2 entry broadcasts to the
+        // bridge peer 3.
+        for _ in 0..16 {
+            for i in [0usize, 1, 2] {
+                assert!(!pump(&mut machines[i], &mut transports[i]));
+            }
+        }
+        assert!(
+            machines[1].quarantined[byz_worker],
+            "worker 1 must have convicted the adversary while worker 3 idles"
+        );
+        let mut rewired = machines[1].peers.clone();
+        rewired.sort_unstable();
+        assert_eq!(rewired, vec![0, 3], "worker 1's row must bridge to 3");
+        assert!(!machines[3].quarantined[byz_worker]);
+
+        // Deliver worker 1's bridge frame FIRST — ahead of the round-0/1
+        // traffic that would let worker 3 convict and rewire. This is the
+        // ordering TCP can produce across per-sender connections, and the
+        // exact state the old assert died on.
+        let mut inbox = Vec::new();
+        while let Ok(f) = transports[3].recv(Duration::from_millis(1)) {
+            inbox.push(f);
+        }
+        let at = inbox
+            .iter()
+            .position(|f| f.sender == 1 && f.round == 2)
+            .expect("worker 1's bridge frame must be queued for worker 3");
+        let bridge = inbox.remove(at);
+        machines[3].accept_frame(bridge);
+        assert!(
+            machines[3].got.is_empty(),
+            "a non-peer frame must never enter the barrier inbox"
+        );
+        assert_eq!(machines[3].parked.len(), 1, "bridge frame must park");
+
+        // Now worker 3 catches up round by round: one strike at round 0,
+        // the second at round 1, conviction and rewire at the end of
+        // round 1 — at which point the parked bridge frame satisfies its
+        // round-2 barrier slot for the new peer.
+        let (r0_frames, later): (Vec<Frame>, Vec<Frame>) =
+            inbox.into_iter().partition(|f| f.round == 0);
+        for f in r0_frames {
+            machines[3].accept_frame(f);
+        }
+        assert!(!pump(&mut machines[3], &mut transports[3]));
+        assert_eq!(machines[3].round(), 1, "one strike must not convict");
+        for f in later {
+            machines[3].accept_frame(f);
+        }
+        let mut done = [false; 4];
+        let mut spins = 0usize;
+        while !done.iter().all(|&b| b) {
+            spins += 1;
+            assert!(spins < 100_000, "machines wedged");
+            for i in 0..4 {
+                if !done[i] {
+                    done[i] = pump(&mut machines[i], &mut transports[i]);
+                }
+            }
+        }
+        for i in [1usize, 3] {
+            assert!(
+                machines[i].quarantined[byz_worker],
+                "worker {i} never convicted the adversary"
+            );
+        }
+        for m in machines.into_iter() {
+            let r = m.into_result();
+            assert!(r.trace.loss_at(5).is_some(), "all workers complete all rounds");
+        }
+    }
+
+    /// Two outstanding rejects from one sender must both hold their
+    /// barrier slots: the adversary's round-0 AND round-1 flipped frames
+    /// reach worker 0 before worker 0 has processed anything, and the
+    /// later reject must not evict the earlier round's record (the old
+    /// per-sender scalar did exactly that, wedging the round-0 barrier
+    /// into a timeout).
+    #[test]
+    fn stacked_rejects_from_one_sender_keep_every_barrier_slot() {
+        let cfg = TrainConfig {
+            workers: 3,
+            steps: 4,
+            eval_every: 2,
+            algorithm: Algorithm::DPsgd,
+            ..TrainConfig::default()
+        };
+        let topo = Topology::Ring(3);
+        let epochs = MembershipPlan::default().epochs(&topo, cfg.steps).unwrap();
+        let mut transports = MemTransport::cluster(3);
+        let byz_worker = 2usize;
+        let mut machines = flip_cohort(&cfg, &topo, &epochs, byz_worker, 3);
+
+        // Everyone ships round 0; then the adversary alone is fed its
+        // inbox so it advances to round 1 and ships a second flipped
+        // frame while workers 0 and 1 have processed nothing.
+        for i in 0..3 {
+            let t: &mut dyn Transport = &mut transports[i];
+            assert_eq!(
+                machines[i].drive(t).unwrap(),
+                MachineStatus::Waiting(WaitKey::Barrier { round: 0 })
+            );
+        }
+        assert!(!pump(&mut machines[byz_worker], &mut transports[byz_worker]));
+        assert_eq!(machines[byz_worker].round(), 1);
+
+        // Worker 0's inbox now holds 1's round-0 frame plus the
+        // adversary's round-0 and round-1 frames. Deliver both bad frames
+        // before the honest one.
+        let mut inbox = Vec::new();
+        while let Ok(f) = transports[0].recv(Duration::from_millis(1)) {
+            inbox.push(f);
+        }
+        inbox.sort_by_key(|f| (f.sender as usize != byz_worker, f.round));
+        for f in inbox {
+            machines[0].accept_frame(f);
+        }
+        assert!(
+            machines[0].was_rejected(0, byz_worker)
+                && machines[0].was_rejected(1, byz_worker),
+            "both rejected rounds must stay ledgered"
+        );
+        // The regression: with the old scalar, round 0's slot was lost and
+        // worker 0 stayed wedged in round 0 forever.
+        assert!(!pump(&mut machines[0], &mut transports[0]));
+        assert_eq!(machines[0].round(), 1, "round-0 barrier must close off the ledger");
+
+        let mut done = [false; 3];
+        let mut spins = 0usize;
+        while !done.iter().all(|&b| b) {
+            spins += 1;
+            assert!(spins < 100_000, "machines wedged");
+            for i in 0..3 {
+                if !done[i] {
+                    done[i] = pump(&mut machines[i], &mut transports[i]);
+                }
+            }
+        }
+        for i in [0usize, 1] {
+            assert!(
+                machines[i].quarantined[byz_worker],
+                "worker {i} never convicted the adversary"
+            );
+        }
+        for m in machines.into_iter() {
+            let r = m.into_result();
+            assert!(r.trace.loss_at(3).is_some(), "all workers complete all rounds");
         }
     }
 }

@@ -21,6 +21,7 @@ use moniqua::algorithms::{Algorithm, MixPolicy, ThetaPolicy};
 use moniqua::coordinator::{
     ClusterConfig, ClusterTrainer, DriverKind, Report, TrainConfig, Trainer, TransportKind,
 };
+use moniqua::elastic::{ElasticConfig, MembershipPlan};
 use moniqua::network::NetworkConfig;
 use moniqua::objectives::{Objective, Quadratic};
 use moniqua::quant::QuantConfig;
@@ -227,6 +228,61 @@ fn robust_mixes_reach_the_same_bits_on_every_runtime() {
             }
         }
     }
+}
+
+#[test]
+fn crash_replay_through_a_rejection_window_is_bitwise_identical() {
+    // Worker 1 neighbors the adversary, so the barrier slot for worker 2 in
+    // every replayed round was satisfied by a gate rejection — and rejected
+    // frames are deliberately never WAL-logged. Replay must re-satisfy
+    // those slots from the in-process reject ledger instead of panicking
+    // about a truncated frame log. The strike budget is far above the round
+    // count so no conviction rewires the topology inside the window.
+    let byz = ByzantineConfig { workers: 0b100, mode: ByzMode::Flip, strike_limit: 64 };
+    let cfg = || config(Algorithm::DPsgd, true, MixPolicy::Mean);
+    let want = {
+        let mut t = ClusterTrainer::new(
+            cfg(),
+            Topology::Ring(4),
+            objective(),
+            ClusterConfig { byz: Some(byz), ..ClusterConfig::default() },
+        )
+        .expect("byzantine cluster config accepted");
+        let report = t.run().expect("uninterrupted byzantine run");
+        assert!(t.failures.is_empty(), "uninterrupted: failures {:?}", t.failures);
+        fingerprint(&report)
+    };
+    let dir = std::env::temp_dir()
+        .join(format!("moniqua-byz-crash-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut t = ClusterTrainer::new(
+        cfg(),
+        Topology::Ring(4),
+        objective(),
+        ClusterConfig {
+            byz: Some(byz),
+            elastic: Some(ElasticConfig {
+                plan: MembershipPlan::parse("crash@6:1").unwrap(),
+                ckpt_every: 4,
+                ckpt_dir: Some(dir.clone()),
+                skip_bootstrap: false,
+            }),
+            ..ClusterConfig::default()
+        },
+    )
+    .expect("byzantine crash config accepted");
+    let report = t.run().expect("crash-replay byzantine run");
+    assert!(t.failures.is_empty(), "crash replay: failures {:?}", t.failures);
+    let _ = std::fs::remove_dir_all(&dir);
+    assert_eq!(
+        fingerprint(&report),
+        want,
+        "crash replay through rejected-frame barrier slots diverged from \
+         the uninterrupted run"
+    );
+    // No conviction: the defense stayed in its detection window throughout.
+    let (_, _, _, quarantined) = defense_counters(&t);
+    assert_eq!(quarantined, 0, "strike budget 64 must not convict in 12 rounds");
 }
 
 #[test]
